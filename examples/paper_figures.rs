@@ -1,0 +1,96 @@
+//! Regenerate the paper's full evaluation: Figures 2–21 and Tables 4–5.
+//!
+//! ```bash
+//! # Smoke pass (few instances):
+//! CKPTWIN_INSTANCES=10 cargo run --release --example paper_figures
+//! # Paper-accurate (100 instances; slower):
+//! cargo run --release --example paper_figures
+//! # Subset:
+//! cargo run --release --example paper_figures -- --figures 2,14,18 --tables 4
+//! ```
+//!
+//! CSVs land in `results/`; a summary is printed per experiment.
+
+use ckptwin::cli::Args;
+use ckptwin::harness::{default_instances, figures, tables};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let instances = default_instances();
+    let bp_seeds: usize = args.get_or("best-period-seeds", 10);
+    let parse_list = |key: &str| -> Option<Vec<u8>> {
+        args.get_str(key).map(|s| {
+            s.split(',').filter_map(|t| t.trim().parse().ok()).collect()
+        })
+    };
+    let figure_ids = parse_list("figures").unwrap_or((2..=21).collect());
+    let table_ids = parse_list("tables").unwrap_or(vec![4, 5]);
+
+    println!(
+        "regenerating {} figures + {} tables at {instances} instances/point\n",
+        figure_ids.len(),
+        table_ids.len()
+    );
+
+    for spec in figures::waste_vs_n_specs() {
+        if !figure_ids.contains(&spec.id) {
+            continue;
+        }
+        let t = std::time::Instant::now();
+        let rows = figures::run_waste_vs_n(&spec, instances, bp_seeds)
+            .expect("figure run");
+        println!(
+            "figure {:>2} (waste vs N, predictor {}, Cp={}C, {} FPs): {} rows in {:.1}s",
+            spec.id,
+            if spec.predictor_a { "A" } else { "B" },
+            spec.cp_ratio,
+            if spec.uniform_false_preds { "uniform" } else { "failure-law" },
+            rows.len(),
+            t.elapsed().as_secs_f64()
+        );
+    }
+
+    for spec in figures::waste_vs_tr_specs() {
+        if !figure_ids.contains(&spec.id) {
+            continue;
+        }
+        let t = std::time::Instant::now();
+        let rows = figures::run_waste_vs_tr(&spec, instances, 24)
+            .expect("figure run");
+        println!(
+            "figure {:>2} (waste vs T_R, predictor {}, N=2^{}): {} rows in {:.1}s",
+            spec.id,
+            if spec.predictor_a { "A" } else { "B" },
+            spec.procs.trailing_zeros(),
+            rows.len(),
+            t.elapsed().as_secs_f64()
+        );
+    }
+
+    for spec in figures::waste_vs_i_specs() {
+        if !figure_ids.contains(&spec.id) {
+            continue;
+        }
+        let t = std::time::Instant::now();
+        let rows = figures::run_waste_vs_i(&spec, instances, bp_seeds)
+            .expect("figure run");
+        println!(
+            "figure {:>2} (waste vs I, predictor {}, N=2^{}): {} rows in {:.1}s",
+            spec.id,
+            if spec.predictor_a { "A" } else { "B" },
+            spec.procs.trailing_zeros(),
+            rows.len(),
+            t.elapsed().as_secs_f64()
+        );
+    }
+
+    for &id in &table_ids {
+        let shape = if id == 4 { 0.7 } else { 0.5 };
+        let t = std::time::Instant::now();
+        let table = tables::run_table(id, shape, instances).expect("table run");
+        println!("\n{}", tables::render(&table));
+        println!("table {id} in {:.1}s", t.elapsed().as_secs_f64());
+    }
+
+    println!("\nall outputs under results/");
+}

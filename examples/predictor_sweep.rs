@@ -1,0 +1,102 @@
+//! Predictor trade-off study: when is a fault predictor worth trusting?
+//!
+//! Sweeps (i) the literature predictors surveyed in the paper's Table 6 and
+//! (ii) a synthetic recall × precision × window grid, reporting for each the
+//! best prediction-aware heuristic vs RFO — reproducing the paper's §4.2
+//! conclusion that below a platform-MTBF threshold (or past a window size)
+//! predictions become useless or harmful.
+//!
+//! ```bash
+//! cargo run --release --example predictor_sweep -- --procs 262144
+//! ```
+
+use ckptwin::cli::Args;
+use ckptwin::config::{PredictorSpec, Scenario};
+use ckptwin::harness::evaluate_heuristics;
+use ckptwin::predictor::table6_presets;
+use ckptwin::sim::distribution::Law;
+
+fn best_aware(results: &[ckptwin::harness::HeuristicResult]) -> (String, f64) {
+    results
+        .iter()
+        .filter(|r| {
+            matches!(r.name.as_str(), "Instant" | "NoCkptI" | "WithCkptI")
+        })
+        .map(|r| (r.name.clone(), r.waste))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .unwrap()
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let procs: u64 = args.get_or("procs", 1 << 18);
+    let instances: usize = args.get_or("instances", 30);
+    let law = Law::Weibull { shape: 0.7 };
+
+    println!("platform: N = 2^{} procs, Weibull(0.7) failures\n", procs.trailing_zeros());
+
+    // --- Part 1: Table-6 literature predictors --------------------------
+    println!("literature predictors (paper Table 6):");
+    println!(
+        "{:<18} {:>5} {:>5} {:>7} | {:>8} {:>8} {:>18} {:>8}",
+        "predictor", "p", "r", "I(s)", "RFO", "best", "heuristic", "verdict"
+    );
+    for (name, spec) in table6_presets() {
+        let sc = Scenario::paper(procs, 1.0, spec, law, law);
+        let res = evaluate_heuristics(&sc, instances, 0);
+        let rfo = res.iter().find(|r| r.name == "RFO").unwrap().waste;
+        let (bname, bwaste) = best_aware(&res);
+        println!(
+            "{:<18} {:>5.2} {:>5.2} {:>7.0} | {:>8.4} {:>8.4} {:>18} {:>8}",
+            name,
+            spec.precision,
+            spec.recall,
+            spec.window,
+            rfo,
+            bwaste,
+            bname,
+            if bwaste < rfo { "trust" } else { "ignore" }
+        );
+    }
+
+    // --- Part 2: synthetic (recall, precision) grid ----------------------
+    println!("\nsynthetic predictor grid (I = 600 s): waste gain vs RFO (%)");
+    let recalls = [0.3, 0.5, 0.7, 0.9];
+    let precisions = [0.2, 0.4, 0.6, 0.8, 0.95];
+    print!("{:>8}", "r \\ p");
+    for p in precisions {
+        print!(" {p:>7.2}");
+    }
+    println!();
+    for r in recalls {
+        print!("{r:>8.2}");
+        for p in precisions {
+            let spec = PredictorSpec { recall: r, precision: p, window: 600.0 };
+            let sc = Scenario::paper(procs, 1.0, spec, law, law);
+            let res = evaluate_heuristics(&sc, instances, 0);
+            let rfo = res.iter().find(|x| x.name == "RFO").unwrap().waste;
+            let (_, bwaste) = best_aware(&res);
+            print!(" {:>7.1}", (1.0 - bwaste / rfo) * 100.0);
+        }
+        println!();
+    }
+
+    // --- Part 3: window-size threshold ----------------------------------
+    println!("\nwindow-size threshold (predictor A): waste vs I");
+    println!("{:>8} {:>10} {:>10} {:>10}", "I(s)", "RFO", "best-aware", "verdict");
+    for window in [150.0, 300.0, 600.0, 1200.0, 2400.0, 3000.0, 4800.0] {
+        let sc = Scenario::paper(
+            procs, 1.0, PredictorSpec::paper_a(window), law, law,
+        );
+        let res = evaluate_heuristics(&sc, instances, 0);
+        let rfo = res.iter().find(|x| x.name == "RFO").unwrap().waste;
+        let (_, bwaste) = best_aware(&res);
+        println!(
+            "{:>8.0} {:>10.4} {:>10.4} {:>10}",
+            window,
+            rfo,
+            bwaste,
+            if bwaste < rfo { "trust" } else { "ignore" }
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Quickstart: evaluate the paper's checkpointing strategies on one
+//! scenario, comparing simulated waste against the analytic model.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ckptwin::config::{PredictorSpec, Scenario};
+use ckptwin::harness::evaluate_heuristics;
+use ckptwin::model::optimal;
+use ckptwin::sim::distribution::Law;
+use ckptwin::util::SECONDS_PER_DAY;
+
+fn main() {
+    // The paper's 2^16-processor platform with predictor A (p=0.82,
+    // r=0.85) announcing 10-minute prediction windows.
+    let scenario = Scenario::paper(
+        1 << 16,                          // N processors => mu = mu_ind / N
+        1.0,                              // C_p = C
+        PredictorSpec::paper_a(600.0),    // I = 600 s
+        Law::Weibull { shape: 0.7 },      // real-platform-like failures
+        Law::Weibull { shape: 0.7 },      // false predictions, same law
+    );
+
+    println!(
+        "platform: mu = {:.0} s, C = R = 600 s, D = 60 s; job = {:.1} days",
+        scenario.platform.mu,
+        scenario.job_size / SECONDS_PER_DAY
+    );
+    println!(
+        "predictor: precision {:.2}, recall {:.2}, window {} s",
+        scenario.predictor.precision,
+        scenario.predictor.recall,
+        scenario.predictor.window
+    );
+    println!(
+        "closed-form optima: RFO T = {:.0} s, window-aware T_R = {:.0} s, T_P = {:.0} s\n",
+        optimal::rfo_period(&scenario.platform),
+        optimal::tr_extr_window(&scenario),
+        optimal::tp_extr(&scenario)
+    );
+
+    // 40 instances keeps the example snappy; the paper uses 100.
+    let results = evaluate_heuristics(&scenario, 40, 8);
+    println!(
+        "{:<22} {:>9} {:>9} {:>10} {:>13}",
+        "heuristic", "waste", "±95%", "analytic", "makespan (d)"
+    );
+    for r in &results {
+        println!(
+            "{:<22} {:>9.4} {:>9.4} {:>10.4} {:>13.2}",
+            r.name,
+            r.waste,
+            r.waste_ci,
+            r.analytic_waste,
+            r.makespan / SECONDS_PER_DAY
+        );
+    }
+
+    let daly = results.iter().find(|r| r.name == "Daly").unwrap().makespan;
+    let best = results
+        .iter()
+        .min_by(|a, b| a.makespan.total_cmp(&b.makespan))
+        .unwrap();
+    println!(
+        "\nbest heuristic: {} — {:.1}% faster than Daly",
+        best.name,
+        (1.0 - best.makespan / daly) * 100.0
+    );
+}

@@ -1,0 +1,142 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the Rust
+runtime (`rust/src/runtime/`) loads the text with
+``HloModuleProto::from_text_file`` and executes via the PJRT CPU client.
+
+HLO **text** — not ``lowered.compile().serialize()`` and not a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` 0.1.6 crate) rejects (``proto.id() <= INT_MAX``).  The text
+parser reassigns ids, so text round-trips cleanly.
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+    waste_grid.hlo.txt   (params f32[B,10], tr f32[G]) -> (waste f32[B,4,G],)
+    init_params.hlo.txt  (seed u32[])                  -> (theta f32[P],)
+    train_step.hlo.txt   (theta, tokens i32[B,S], lr)  -> (theta', loss)
+    eval_loss.hlo.txt    (theta, tokens)               -> (loss,)
+    manifest.json        shapes + model config, consumed by the Rust runtime
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed artifact shapes for the waste-grid offload.  The Rust side pads its
+# scenario batch and period grid up to these (padded rows use valid dummy
+# parameters; padded periods land at > C and are simply ignored).
+WASTE_B = 64
+WASTE_G = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_waste_grid():
+    spec_p = jax.ShapeDtypeStruct((WASTE_B, 10), jnp.float32)
+    spec_t = jax.ShapeDtypeStruct((WASTE_G,), jnp.float32)
+
+    def fn(params, tr):
+        return (model.waste_surfaces(params, tr),)
+
+    return jax.jit(fn).lower(spec_p, spec_t)
+
+
+def lower_init_params(cfg):
+    init = model.make_init_params(cfg)
+
+    def fn(seed):
+        return (init(seed),)
+
+    return jax.jit(fn).lower(jax.ShapeDtypeStruct((), jnp.uint32))
+
+
+def lower_train_step(cfg):
+    step = model.make_train_step(cfg)
+    p = model.param_count(cfg)
+    spec_theta = jax.ShapeDtypeStruct((p,), jnp.float32)
+    spec_tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    spec_lr = jax.ShapeDtypeStruct((), jnp.float32)
+    # Donate theta: the update happens in place on the device buffer.
+    return jax.jit(step, donate_argnums=(0,)).lower(
+        spec_theta, spec_tok, spec_lr
+    )
+
+
+def lower_eval_loss(cfg):
+    ev = model.make_eval_loss(cfg)
+    p = model.param_count(cfg)
+    spec_theta = jax.ShapeDtypeStruct((p,), jnp.float32)
+    spec_tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+
+    def fn(theta, tokens):
+        return (ev(theta, tokens),)
+
+    return jax.jit(fn).lower(spec_theta, spec_tok)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="sentinel artifact path")
+    parser.add_argument("--d-model", type=int, default=128)
+    parser.add_argument("--n-layers", type=int, default=2)
+    parser.add_argument("--d-ff", type=int, default=512)
+    args = parser.parse_args()
+
+    out_dir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cfg = model.ModelConfig(
+        d_model=args.d_model, n_layers=args.n_layers, d_ff=args.d_ff
+    )
+
+    artifacts = {
+        "waste_grid": lower_waste_grid(),
+        "init_params": lower_init_params(cfg),
+        "train_step": lower_train_step(cfg),
+        "eval_loss": lower_eval_loss(cfg),
+    }
+    for name, lowered in artifacts.items():
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "format": "hlo-text",
+        "waste_grid": {"batch": WASTE_B, "grid": WASTE_G, "n_params": 10,
+                       "n_strategies": 4},
+        "model": dataclasses.asdict(cfg),
+        "param_count": model.param_count(cfg),
+        "entries": {
+            "waste_grid": "waste_grid.hlo.txt",
+            "init_params": "init_params.hlo.txt",
+            "train_step": "train_step.hlo.txt",
+            "eval_loss": "eval_loss.hlo.txt",
+        },
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+    # `make` freshness sentinel: the Makefile tracks model.hlo.txt.
+    (out_dir / "model.hlo.txt").write_text(
+        "# sentinel; see manifest.json for the real artifact list\n"
+    )
+
+
+if __name__ == "__main__":
+    main()

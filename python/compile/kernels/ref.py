@@ -1,0 +1,128 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These implement the paper's closed-form waste expressions (Aupy, Robert,
+Vivien, Zaidouni — "Checkpointing strategies with prediction windows", 2013)
+directly with jax.numpy, with no Pallas involved.  pytest compares the Pallas
+kernels against these, and the Rust closed-form model is validated against the
+HLO artifact produced from the kernels, so the three implementations
+(jnp ref, Pallas kernel, Rust `model::waste`) must all agree.
+
+Parameter-vector layout (one scenario row, f32[10]):
+
+    idx  name  meaning
+    0    mu    platform MTBF (seconds)
+    1    C     regular checkpoint duration
+    2    Cp    proactive checkpoint duration
+    3    D     downtime
+    4    R     recovery duration
+    5    p     predictor precision
+    6    r     predictor recall
+    7    I     prediction-window length
+    8    E     E_I^f, expected fault position inside the window (usually I/2)
+    9    pad   reserved (ignored)
+
+Strategy ordering of the output rows (waste[b, s, g]):
+
+    s=0  RFO / q=0          (Eq. 3)
+    s=1  Instant, q=1       (Eq. 14)
+    s=2  NoCkptI, q=1       (Eq. 10)
+    s=3  WithCkptI, q=1     (Eq. 4, with T_P = clamp(T_P^extr, Cp, max(Cp, I)))
+
+Waste values are clipped to [0, 1]; grid points with T_R <= C are reported as
+waste = 1 (an invalid period wastes everything).
+"""
+
+import jax.numpy as jnp
+
+# Number of strategies evaluated per scenario (output axis 1).
+N_STRATEGIES = 4
+# Parameter-vector width (input axis 1).
+N_PARAMS = 10
+
+
+def tp_extr(cp, p, i, e):
+    """Optimal proactive period T_P^extr = sqrt(((1-p)I + pE) * Cp / p).
+
+    Clamped to [Cp, max(Cp, I)] as required by the paper (at least one
+    proactive checkpoint must fit into the window).
+    """
+    raw = jnp.sqrt(((1.0 - p) * i + p * e) * cp / p)
+    return jnp.clip(raw, cp, jnp.maximum(cp, i))
+
+
+def waste_q0(tr, mu, c, d, r_rec):
+    """Eq. (3): waste of periodic checkpointing ignoring predictions."""
+    return 1.0 - (1.0 - c / tr) * (1.0 - (tr / 2.0 + d + r_rec) / mu)
+
+
+def waste_instant(tr, mu, c, cp, d, rr, p, r, e):
+    """Eq. (14): waste of Instant with q=1."""
+    inner = (p * (d + rr) + r * cp + (1.0 - r) * p * tr / 2.0 + p * r * e) / (
+        p * mu
+    )
+    return 1.0 - (1.0 - c / tr) * (1.0 - inner)
+
+
+def waste_nockpt(tr, mu, c, cp, d, rr, p, r, i, e):
+    """Eq. (10): waste of NoCkptI with q=1."""
+    head = (r / (p * mu)) * (1.0 - p) * i
+    inner = (
+        p * (d + rr)
+        + r * cp
+        + (1.0 - r) * p * tr / 2.0
+        + r * ((1.0 - p) * i + p * e)
+    ) / (p * mu)
+    return 1.0 - head - (1.0 - c / tr) * (1.0 - inner)
+
+
+def waste_withckpt(tr, tp, mu, c, cp, d, rr, p, r, i, e):
+    """Eq. (4): waste of WithCkptI with q=1, for a given proactive period tp."""
+    head = (r / (p * mu)) * (1.0 - cp / tp) * ((1.0 - p) * i + p * (e - tp))
+    inner = (
+        p * (d + rr)
+        + r * cp
+        + (1.0 - r) * p * tr / 2.0
+        + r * ((1.0 - p) * i + p * e)
+    ) / (p * mu)
+    return 1.0 - head - (1.0 - c / tr) * (1.0 - inner)
+
+
+def waste_grid_ref(params, tr):
+    """Reference for the `waste_grid` kernel.
+
+    params: f32[B, 10] scenario rows (layout above).
+    tr:     f32[G] candidate regular periods, shared across scenarios.
+    returns f32[B, 4, G] clipped wastes.
+    """
+    params = jnp.asarray(params, jnp.float32)
+    tr = jnp.asarray(tr, jnp.float32)
+    mu = params[:, 0:1]
+    c = params[:, 1:2]
+    cp = params[:, 2:3]
+    d = params[:, 3:4]
+    rr = params[:, 4:5]
+    p = params[:, 5:6]
+    r = params[:, 6:7]
+    i = params[:, 7:8]
+    e = params[:, 8:9]
+    tp = tp_extr(cp, p, i, e)
+
+    t = tr[None, :]
+    w0 = waste_q0(t, mu, c, d, rr)
+    w1 = waste_instant(t, mu, c, cp, d, rr, p, r, e)
+    w2 = waste_nockpt(t, mu, c, cp, d, rr, p, r, i, e)
+    w3 = waste_withckpt(t, tp, mu, c, cp, d, rr, p, r, i, e)
+
+    out = jnp.stack([w0, w1, w2, w3], axis=1)  # [B, 4, G]
+    out = jnp.clip(out, 0.0, 1.0)
+    invalid = (t <= c)[:, None, :]  # periods not longer than C are invalid
+    return jnp.where(invalid, 1.0, out)
+
+
+def matmul_ref(x, y):
+    """Reference for the blocked matmul kernel: plain f32 matmul."""
+    return jnp.matmul(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,99 @@
+"""Pallas kernel: batched waste-surface evaluation.
+
+Evaluates the paper's four closed-form wastes (RFO Eq. 3, Instant Eq. 14,
+NoCkptI Eq. 10, WithCkptI Eq. 4) for a batch of scenarios over a shared grid
+of candidate regular periods ``T_R``.  This is the compute hot-spot of the
+BestPeriod analytic search: one kernel launch scores B x G x 4 candidates.
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation): the Pallas grid iterates
+over (scenario, period-tile); each program holds one scenario's parameter row
+(10 f32) plus one period tile (``block_g`` f32) in VMEM and emits a
+(1, 4, block_g) output tile.  Everything is elementwise (VPU work); the kernel
+is memory-streaming over scenario rows.  Lowered with ``interpret=True`` so
+the resulting HLO runs on the CPU PJRT client (Mosaic custom-calls cannot).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _waste_grid_kernel(params_ref, tr_ref, out_ref):
+    """One (scenario, period-tile) program.
+
+    params_ref: f32[1, 10]       — scenario row (see ref.py for layout)
+    tr_ref:     f32[block_g]     — candidate T_R tile
+    out_ref:    f32[1, 4, block_g]
+    """
+    row = params_ref[0, :]
+    mu, c, cp, d = row[0], row[1], row[2], row[3]
+    rr, p, r, i, e = row[4], row[5], row[6], row[7], row[8]
+
+    # Optimal proactive period for WithCkptI, clamped to [Cp, max(Cp, I)].
+    tp = jnp.clip(
+        jnp.sqrt(((1.0 - p) * i + p * e) * cp / p), cp, jnp.maximum(cp, i)
+    )
+
+    t = tr_ref[...]
+
+    # Eq. (3): q = 0 (RFO / prediction-ignoring periodic checkpointing).
+    w0 = 1.0 - (1.0 - c / t) * (1.0 - (t / 2.0 + d + rr) / mu)
+
+    # The three q = 1 strategies share the trailing factor of Eqs. 14/10/4.
+    inner_instant = (
+        p * (d + rr) + r * cp + (1.0 - r) * p * t / 2.0 + p * r * e
+    ) / (p * mu)
+    w1 = 1.0 - (1.0 - c / t) * (1.0 - inner_instant)
+
+    inner_win = (
+        p * (d + rr)
+        + r * cp
+        + (1.0 - r) * p * t / 2.0
+        + r * ((1.0 - p) * i + p * e)
+    ) / (p * mu)
+    head_nockpt = (r / (p * mu)) * (1.0 - p) * i
+    w2 = 1.0 - head_nockpt - (1.0 - c / t) * (1.0 - inner_win)
+
+    head_with = (
+        (r / (p * mu)) * (1.0 - cp / tp) * ((1.0 - p) * i + p * (e - tp))
+    )
+    w3 = 1.0 - head_with - (1.0 - c / t) * (1.0 - inner_win)
+
+    out = jnp.stack([w0, w1, w2, w3], axis=0)  # [4, block_g]
+    out = jnp.clip(out, 0.0, 1.0)
+    out = jnp.where((t <= c)[None, :], 1.0, out)
+    out_ref[0, :, :] = out
+
+
+@functools.partial(jax.jit, static_argnames=("block_g",))
+def waste_grid(params, tr, *, block_g=512):
+    """Evaluate waste surfaces for all scenarios x periods x strategies.
+
+    params: f32[B, 10]; tr: f32[G] with G a multiple of ``block_g``
+    (pad with any value > C; padded wastes are still well-defined).
+    Returns f32[B, 4, G].
+    """
+    b, n_params = params.shape
+    (g,) = tr.shape
+    assert n_params == ref.N_PARAMS, params.shape
+    assert g % block_g == 0, (g, block_g)
+
+    return pl.pallas_call(
+        _waste_grid_kernel,
+        grid=(b, g // block_g),
+        in_specs=[
+            pl.BlockSpec((1, ref.N_PARAMS), lambda ib, ig: (ib, 0)),
+            pl.BlockSpec((block_g,), lambda ib, ig: (ig,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, ref.N_STRATEGIES, block_g), lambda ib, ig: (ib, 0, ig)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, ref.N_STRATEGIES, g), jnp.float32
+        ),
+        interpret=True,
+    )(params.astype(jnp.float32), tr.astype(jnp.float32))

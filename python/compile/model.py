@@ -1,0 +1,244 @@
+"""L2: JAX compute graphs lowered to the AOT artifacts.
+
+Two graph families live here:
+
+1. ``waste_surfaces`` — the analytic waste-surface evaluation used by the
+   Rust BestPeriod searcher; thin wrapper around the ``waste_grid`` Pallas
+   kernel (L1).
+
+2. A small causal-transformer language model used as the *real workload* of
+   the end-to-end checkpointing driver: ``init_params`` / ``train_step`` /
+   ``eval_loss``.  All parameters live in ONE flat f32 vector ``theta`` so
+   that the Rust coordinator can checkpoint/restore the model state as a
+   single blob — exactly what a checkpointing runtime does.  The dense
+   layers (attention projections, MLP, output head) run through the Pallas
+   blocked-matmul kernel, wired with a custom VJP so the same kernel serves
+   the backward pass.
+
+Python only runs at build time: ``aot.py`` lowers these functions to HLO
+text once; the Rust runtime loads and executes the artifacts via PJRT.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as matmul_kernel
+from .kernels import waste_grid as waste_grid_kernel
+
+
+# ---------------------------------------------------------------------------
+# Waste surfaces (analytic model offload)
+# ---------------------------------------------------------------------------
+
+def waste_surfaces(params, tr):
+    """f32[B,10] scenarios x f32[G] periods -> f32[B,4,G] wastes."""
+    return waste_grid_kernel.waste_grid(params, tr)
+
+
+# ---------------------------------------------------------------------------
+# Pallas matmul with custom VJP (so fwd AND bwd use the L1 kernel)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def pmatmul(x, y):
+    return matmul_kernel.matmul(x, y)
+
+
+def _pmatmul_fwd(x, y):
+    return matmul_kernel.matmul(x, y), (x, y)
+
+
+def _pmatmul_bwd(res, g):
+    x, y = res
+    # dx = g @ y^T ; dy = x^T @ g — both through the Pallas kernel.
+    dx = matmul_kernel.matmul(g, y.T)
+    dy = matmul_kernel.matmul(x.T, g)
+    return dx, dy
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Model configuration and flat parameter layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer-LM hyperparameters.
+
+    Dimensions are kept multiples of 128 where they feed the Pallas matmul
+    (d_model, d_ff, vocab) and batch*seq is a multiple of 128 as well.
+    """
+
+    vocab: int = 256        # byte-level
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 128
+    batch: int = 8
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+def param_layout(cfg: ModelConfig):
+    """Ordered (name, shape) list defining the flat theta layout."""
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    layout = [("embed", (v, d)), ("pos", (s, d))]
+    for layer in range(cfg.n_layers):
+        prefix = f"l{layer}."
+        layout += [
+            (prefix + "ln1_scale", (d,)),
+            (prefix + "ln1_bias", (d,)),
+            (prefix + "wq", (d, d)),
+            (prefix + "wk", (d, d)),
+            (prefix + "wv", (d, d)),
+            (prefix + "wo", (d, d)),
+            (prefix + "ln2_scale", (d,)),
+            (prefix + "ln2_bias", (d,)),
+            (prefix + "w1", (d, f)),
+            (prefix + "b1", (f,)),
+            (prefix + "w2", (f, d)),
+            (prefix + "b2", (d,)),
+        ]
+    layout += [
+        ("lnf_scale", (d,)),
+        ("lnf_bias", (d,)),
+        ("wout", (d, v)),
+    ]
+    return layout
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_layout(cfg):
+        n = 1
+        for dim in shape:
+            n *= dim
+        total += n
+    return total
+
+
+def unpack(cfg: ModelConfig, theta):
+    """Slice the flat vector into a {name: array} dict (static offsets)."""
+    params = {}
+    offset = 0
+    for name, shape in param_layout(cfg):
+        n = 1
+        for dim in shape:
+            n *= dim
+        params[name] = theta[offset : offset + n].reshape(shape)
+        offset += n
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _dense(x2d, w):
+    """(B*S, K) @ (K, N) through the Pallas kernel."""
+    return pmatmul(x2d, w)
+
+
+def _attention(cfg: ModelConfig, x, p, prefix):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x2 = x.reshape(b * s, d)
+    q = _dense(x2, p[prefix + "wq"]).reshape(b, s, h, hd)
+    k = _dense(x2, p[prefix + "wk"]).reshape(b, s, h, hd)
+    v = _dense(x2, p[prefix + "wv"]).reshape(b, s, h, hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * s, d)
+    return _dense(ctx, p[prefix + "wo"]).reshape(b, s, d)
+
+
+def forward(cfg: ModelConfig, theta, tokens):
+    """tokens: i32[B, S] -> logits f32[B, S, V]."""
+    p = unpack(cfg, theta)
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos"][None, :s]
+    for layer in range(cfg.n_layers):
+        prefix = f"l{layer}."
+        h = _layer_norm(x, p[prefix + "ln1_scale"], p[prefix + "ln1_bias"])
+        x = x + _attention(cfg, h, p, prefix)
+        h = _layer_norm(x, p[prefix + "ln2_scale"], p[prefix + "ln2_bias"])
+        h2 = h.reshape(b * s, cfg.d_model)
+        h2 = jax.nn.gelu(_dense(h2, p[prefix + "w1"]) + p[prefix + "b1"])
+        h2 = _dense(h2, p[prefix + "w2"]) + p[prefix + "b2"]
+        x = x + h2.reshape(b, s, cfg.d_model)
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = _dense(x.reshape(b * s, cfg.d_model), p["wout"])
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, theta, tokens):
+    """Next-token cross-entropy over positions 0..S-2."""
+    logits = forward(cfg, theta, tokens)[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig):
+    """(theta f32[P], tokens i32[B,S], lr f32[]) -> (theta' f32[P], loss f32[])."""
+
+    def train_step(theta, tokens, lr):
+        loss, grad = jax.value_and_grad(
+            functools.partial(loss_fn, cfg)
+        )(theta, tokens)
+        return theta - lr * grad, loss
+
+    return train_step
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """(theta f32[P], tokens i32[B,S]) -> loss f32[]."""
+
+    def eval_loss(theta, tokens):
+        return loss_fn(cfg, theta, tokens)
+
+    return eval_loss
+
+
+def make_init_params(cfg: ModelConfig):
+    """(seed u32[]) -> theta f32[P]; seeded, so runs reproduce bit-exactly."""
+
+    def init_params(seed):
+        key = jax.random.PRNGKey(seed)
+        pieces = []
+        for name, shape in param_layout(cfg):
+            key, sub = jax.random.split(key)
+            n = 1
+            for dim in shape:
+                n *= dim
+            if name.endswith("_scale"):
+                piece = jnp.ones((n,), jnp.float32)
+            elif name.endswith("_bias") or name.endswith("b1") or name.endswith("b2"):
+                piece = jnp.zeros((n,), jnp.float32)
+            else:
+                piece = 0.02 * jax.random.normal(sub, (n,), jnp.float32)
+            pieces.append(piece)
+        return jnp.concatenate(pieces)
+
+    return init_params

@@ -1,0 +1,114 @@
+"""Kernel-vs-ref correctness: the CORE signal of the compile path.
+
+Hypothesis sweeps the waste-grid Pallas kernel's shapes and parameter ranges
+against the pure-jnp oracle in ``kernels/ref.py``, plus fixed-value checks
+against hand-computed paper quantities.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.waste_grid import waste_grid
+
+# Paper constants (Section 4.1).
+C = 600.0
+R = 600.0
+D = 60.0
+MU_IND_YEARS = 125.0
+SECONDS_PER_YEAR = 365.0 * 24.0 * 3600.0
+
+
+def paper_mu(n_procs: int) -> float:
+    return MU_IND_YEARS * SECONDS_PER_YEAR / n_procs
+
+
+def make_params(mu, c, cp, d, rr, p, r, i, e=None):
+    e = i / 2.0 if e is None else e
+    return np.array([[mu, c, cp, d, rr, p, r, i, e, 0.0]], np.float32)
+
+
+scenario_st = st.tuples(
+    st.floats(2e3, 5e6),      # mu
+    st.floats(30.0, 1200.0),  # C
+    st.floats(3.0, 2400.0),   # Cp
+    st.floats(0.0, 600.0),    # D
+    st.floats(0.0, 1200.0),   # R
+    st.floats(0.05, 1.0),     # p
+    st.floats(0.05, 1.0),     # r
+    st.floats(10.0, 7200.0),  # I
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    scenarios=st.lists(scenario_st, min_size=1, max_size=5),
+    block_g=st.sampled_from([8, 32, 128]),
+    n_blocks=st.integers(1, 4),
+)
+def test_waste_grid_matches_ref(scenarios, block_g, n_blocks):
+    params = np.array(
+        [[mu, c, cp, d, rr, p, r, i, i / 2.0, 0.0]
+         for (mu, c, cp, d, rr, p, r, i) in scenarios],
+        np.float32,
+    )
+    g = block_g * n_blocks
+    tr = np.linspace(100.0, 50_000.0, g).astype(np.float32)
+    got = waste_grid(jnp.asarray(params), jnp.asarray(tr), block_g=block_g)
+    want = ref.waste_grid_ref(params, tr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_waste_values_paper_scenario():
+    """Hand-check Eq. 3 at the paper's 2^16-processor scenario."""
+    mu = paper_mu(2**16)  # ~60k s
+    params = make_params(mu, C, C, D, R, 0.82, 0.85, 300.0)
+    # RFO optimum Tr = sqrt(2 C (mu - (D + R)))
+    tr_opt = math.sqrt(2.0 * C * (mu - (D + R)))
+    tr = np.full(8, tr_opt, np.float32)
+    out = np.asarray(waste_grid(jnp.asarray(params), jnp.asarray(tr), block_g=8))
+    expected = 1.0 - (1.0 - C / tr_opt) * (1.0 - (tr_opt / 2 + D + R) / mu)
+    np.testing.assert_allclose(out[0, 0], expected, rtol=1e-5)
+    # Prediction-aware wastes must beat q=0 at this small window size.
+    assert out[0, 1, 0] < out[0, 0, 0]
+    assert out[0, 2, 0] < out[0, 0, 0]
+
+
+def test_waste_grid_invalid_period_is_one():
+    params = make_params(paper_mu(2**16), C, C, D, R, 0.82, 0.85, 600.0)
+    tr = np.array([100.0, 300.0, C, C + 1.0, 2000.0, 3000.0, 4000.0, 5000.0],
+                  np.float32)
+    out = np.asarray(waste_grid(jnp.asarray(params), jnp.asarray(tr), block_g=8))
+    assert (out[:, :, :3] == 1.0).all()   # T_R <= C
+    assert (out[:, :, 3:] < 1.0).all()
+
+
+def test_tp_extr_matches_simplified_formula():
+    """With E = I/2, T_P^extr = sqrt((2-p) I Cp / (2p)).
+
+    Note: the paper's §3.2 "simplified" display writes sqrt((2-p)I Cp / p),
+    but substituting E = I/2 into its own general formula
+    sqrt(((1-p)I + pE) Cp / p) gives (1-p)I + pI/2 = (2-p)I/2 — the display
+    drops the factor 2.  We follow the general formula (Eq. before §3.3).
+    """
+    p, i, cp = 0.82, 3000.0, 60.0
+    got = float(ref.tp_extr(jnp.float32(cp), jnp.float32(p),
+                            jnp.float32(i), jnp.float32(i / 2)))
+    want = math.sqrt((2.0 - p) * i * cp / (2.0 * p))
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_tp_extr_clamped_to_window():
+    # Huge Cp: the raw extremum exceeds I and must clamp at max(Cp, I).
+    got = float(ref.tp_extr(jnp.float32(1200.0), jnp.float32(0.4),
+                            jnp.float32(300.0), jnp.float32(150.0)))
+    assert got == pytest.approx(1200.0)
+    # Tiny Cp with tiny window: lower clamp at Cp.
+    got = float(ref.tp_extr(jnp.float32(10.0), jnp.float32(0.99),
+                            jnp.float32(1.0), jnp.float32(0.5)))
+    assert got == pytest.approx(10.0)

@@ -1,0 +1,75 @@
+//! Bench: BestPeriod search — brute-force simulation search vs the
+//! closed-form formulas vs the PJRT waste-grid artifact (the L1 offload).
+//!
+//! The PJRT path amortizes: one execute scores 64 scenarios × 512 periods
+//! × 4 strategies — the ablation the paper's Maple plots correspond to.
+
+use ckptwin::bench_support::{bench_val, report_throughput};
+use ckptwin::config::{PredictorSpec, Scenario};
+use ckptwin::model::optimal;
+use ckptwin::runtime::Runtime;
+use ckptwin::sim::distribution::Law;
+use ckptwin::strategy::{best_period, PolicyKind};
+
+fn main() {
+    let sc = Scenario::paper(
+        1 << 18,
+        1.0,
+        PredictorSpec::paper_a(1200.0),
+        Law::Exponential,
+        Law::Exponential,
+    );
+    let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+
+    bench_val("best_period/closed_form", 5.0, || {
+        optimal::tr_extr_window(&sc)
+    });
+
+    let seeds: Vec<u64> = (0..4).collect();
+    let r = bench_val("best_period/brute_force_sim_24x8_4seeds", 300.0, || {
+        best_period::search(&sc, PolicyKind::WithCkpt, tp, &seeds, 24, 8)
+            .tr
+    });
+    report_throughput(&r, ((24 + 1 + 8) * 4) as f64, "sim");
+
+    // CPU closed-form grid (same work the PJRT artifact does).
+    let grid: Vec<f64> = (0..512)
+        .map(|k| 660.0 * (200.0f64).powf(k as f64 / 511.0))
+        .collect();
+    let scenarios: Vec<Scenario> = (0..64)
+        .map(|i| {
+            Scenario::paper(
+                1 << (16 + (i % 4)),
+                [1.0, 0.1, 2.0][i % 3],
+                PredictorSpec::paper_a([300.0, 600.0, 900.0, 1200.0, 3000.0][i % 5]),
+                Law::Exponential,
+                Law::Exponential,
+            )
+        })
+        .collect();
+    let r = bench_val("best_period/cpu_grid_64x512x4", 100.0, || {
+        use ckptwin::model::waste::{waste_clipped, GridStrategy::*};
+        let mut acc = 0.0;
+        for s in &scenarios {
+            for &t in &grid {
+                for g in [Q0, Instant, NoCkpt, WithCkpt] {
+                    acc += waste_clipped(s, g, t);
+                }
+            }
+        }
+        acc
+    });
+    report_throughput(&r, (64 * 512 * 4) as f64, "eval");
+
+    match Runtime::discover() {
+        Ok(rt) => {
+            // Warm the compile cache outside the timed region.
+            rt.waste_surfaces(&scenarios, &grid).expect("warmup");
+            let r = bench_val("best_period/pjrt_grid_64x512x4", 200.0, || {
+                rt.waste_surfaces(&scenarios, &grid).unwrap().len()
+            });
+            report_throughput(&r, (64 * 512 * 4) as f64, "eval");
+        }
+        Err(e) => println!("best_period/pjrt_grid: skipped ({e})"),
+    }
+}

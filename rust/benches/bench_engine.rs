@@ -1,0 +1,39 @@
+//! Bench: the discrete-event engine — events/second and full-instance
+//! latency at the paper's scenario scale.  This is the L3 hot path: every
+//! figure point costs (heuristics × instances) of these.
+
+use ckptwin::bench_support::{bench_val, report_throughput};
+use ckptwin::config::{PredictorSpec, Scenario};
+use ckptwin::sim::distribution::Law;
+use ckptwin::sim::engine::simulate;
+use ckptwin::strategy::Strategy;
+
+fn main() {
+    for (tag, procs) in [("2^16", 1u64 << 16), ("2^19", 1u64 << 19)] {
+        let sc = Scenario::paper(
+            procs,
+            1.0,
+            PredictorSpec::paper_a(600.0),
+            Law::Weibull { shape: 0.7 },
+            Law::Weibull { shape: 0.7 },
+        );
+        for strat in [Strategy::Rfo, Strategy::WithCkptI] {
+            let pol = strat.policy(&sc);
+            let mut seed = 0u64;
+            // Events per instance, probed once, for the throughput line.
+            let probe = simulate(&sc, &pol, 0);
+            let events = probe.events.max(1) as f64
+                + probe.n_reg_ckpts as f64
+                + probe.n_pro_ckpts as f64;
+            let r = bench_val(
+                &format!("engine/instance_{tag}_{}", strat.name()),
+                80.0,
+                || {
+                    seed += 1;
+                    simulate(&sc, &pol, seed).makespan
+                },
+            );
+            report_throughput(&r, events, "event");
+        }
+    }
+}

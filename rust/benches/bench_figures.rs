@@ -1,0 +1,52 @@
+//! Bench: one representative point per figure family (waste-vs-N,
+//! waste-vs-T_R, waste-vs-I), at reduced instance counts — measures the
+//! cost structure of regenerating the paper's evaluation.
+
+use ckptwin::bench_support::bench_val;
+use ckptwin::config::{PredictorSpec, Scenario};
+use ckptwin::harness::{evaluate_heuristics, run_instances};
+use ckptwin::sim::distribution::Law;
+use ckptwin::strategy::Strategy;
+
+fn main() {
+    let instances: usize = std::env::var("CKPTWIN_INSTANCES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+
+    // Figures 2-13 family: one (N, I, law) point, all 5 named heuristics.
+    let sc = Scenario::paper(
+        1 << 18,
+        1.0,
+        PredictorSpec::paper_a(600.0),
+        Law::Weibull { shape: 0.7 },
+        Law::Weibull { shape: 0.7 },
+    );
+    bench_val(
+        &format!("figures/waste_vs_n_point_{instances}inst"),
+        500.0,
+        || evaluate_heuristics(&sc, instances, 0).len(),
+    );
+
+    // Figures 14-17 family: one T_R sweep column (4 heuristics x 1 period).
+    let pol = Strategy::WithCkptI.policy(&sc);
+    bench_val(
+        &format!("figures/waste_vs_tr_point_{instances}inst"),
+        300.0,
+        || run_instances(&sc, &pol, instances).0.mean(),
+    );
+
+    // Figures 18-21 family: one window size, all heuristics.
+    let sc_i = Scenario::paper(
+        1 << 16,
+        1.0,
+        PredictorSpec::paper_b(3000.0),
+        Law::Exponential,
+        Law::Exponential,
+    );
+    bench_val(
+        &format!("figures/waste_vs_i_point_{instances}inst"),
+        500.0,
+        || evaluate_heuristics(&sc_i, instances, 0).len(),
+    );
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Table 4 and Table 5 cells (reduced instance count) —
+//! the end-to-end cost of the paper's headline comparison.
+//!
+//! Set `CKPTWIN_INSTANCES` to control the per-cell instance count
+//! (default here: 5 — the paper's tables use 100).
+
+use ckptwin::bench_support::bench_val;
+use ckptwin::harness::tables;
+
+fn main() {
+    let instances: usize = std::env::var("CKPTWIN_INSTANCES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+
+    for (id, shape) in [(4u8, 0.7), (5u8, 0.5)] {
+        let r = bench_val(
+            &format!("tables/table{id}_weibull{shape}_{instances}inst"),
+            1000.0,
+            || tables::run_table(id, shape, instances).unwrap().cells.len(),
+        );
+        println!(
+            "  table {id}: {:.2} s/run at {instances} instances (paper: 100)",
+            r.median()
+        );
+    }
+}

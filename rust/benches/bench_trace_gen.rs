@@ -1,0 +1,56 @@
+//! Bench: RNG, distribution sampling, and merged trace generation — the
+//! substrate under every simulation instance.
+
+use ckptwin::bench_support::{bench_val, report_throughput};
+use ckptwin::config::{PredictorSpec, Scenario};
+use ckptwin::sim::distribution::{Distribution, Law};
+use ckptwin::sim::rng::Rng;
+use ckptwin::sim::trace::TraceStream;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let r = bench_val("trace/rng_u64_x1000", 20.0, || {
+        let mut acc = 0u64;
+        for _ in 0..1000 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        acc
+    });
+    report_throughput(&r, 1000.0, "draw");
+
+    for law in [Law::Exponential, Law::Weibull { shape: 0.7 }, Law::Uniform] {
+        let d = Distribution::new(law, 1000.0);
+        let mut rng = Rng::new(2);
+        let r = bench_val(
+            &format!("trace/sample_{}_x1000", law.label()),
+            20.0,
+            || {
+                let mut acc = 0.0;
+                for _ in 0..1000 {
+                    acc += d.sample(&mut rng);
+                }
+                acc
+            },
+        );
+        report_throughput(&r, 1000.0, "draw");
+    }
+
+    let sc = Scenario::paper(
+        1 << 18,
+        1.0,
+        PredictorSpec::paper_a(1200.0),
+        Law::Weibull { shape: 0.7 },
+        Law::Weibull { shape: 0.7 },
+    );
+    let mut seed = 0u64;
+    let r = bench_val("trace/stream_1000_events", 60.0, || {
+        seed += 1;
+        let mut ts = TraceStream::new(&sc, seed);
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            acc += ts.next_event().time();
+        }
+        acc
+    });
+    report_throughput(&r, 1000.0, "event");
+}

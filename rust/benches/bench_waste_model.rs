@@ -1,0 +1,51 @@
+//! Bench: closed-form waste evaluation (the analytic hot path inside every
+//! period search) and the optimal-period formulas.
+
+use ckptwin::bench_support::{bench_val, report_throughput};
+use ckptwin::config::{PredictorSpec, Scenario};
+use ckptwin::model::{optimal, waste};
+use ckptwin::sim::distribution::Law;
+
+fn main() {
+    let sc = Scenario::paper(
+        1 << 18,
+        1.0,
+        PredictorSpec::paper_a(1200.0),
+        Law::Exponential,
+        Law::Exponential,
+    );
+
+    let grid: Vec<f64> = (0..512).map(|k| 700.0 + k as f64 * 40.0).collect();
+
+    let r = bench_val("waste_model/q0_grid512", 30.0, || {
+        grid.iter().map(|&t| waste::q0(&sc, t)).sum::<f64>()
+    });
+    report_throughput(&r, 512.0, "eval");
+
+    let r = bench_val("waste_model/withckpt_grid512", 30.0, || {
+        let tp = optimal::tp_extr(&sc);
+        grid.iter().map(|&t| waste::withckpt(&sc, t, tp)).sum::<f64>()
+    });
+    report_throughput(&r, 512.0, "eval");
+
+    let r = bench_val("waste_model/all4_clipped_grid512", 30.0, || {
+        use ckptwin::model::waste::GridStrategy::*;
+        let mut acc = 0.0;
+        for &t in &grid {
+            for s in [Q0, Instant, NoCkpt, WithCkpt] {
+                acc += waste::waste_clipped(&sc, s, t);
+            }
+        }
+        acc
+    });
+    report_throughput(&r, 4.0 * 512.0, "eval");
+
+    bench_val("waste_model/optimal_periods", 10.0, || {
+        (
+            optimal::rfo_period(&sc.platform),
+            optimal::tr_extr_window(&sc),
+            optimal::tr_extr_instant(&sc),
+            optimal::tp_extr(&sc),
+        )
+    });
+}

@@ -1,0 +1,150 @@
+//! Micro-benchmark harness (offline environment: no criterion).
+//!
+//! Criterion-style reporting: warmup, N timed samples of adaptively-sized
+//! batches, median / mean / min with MAD-based spread.  Benches are plain
+//! `harness = false` binaries (`rust/benches/*.rs`) using this module via
+//! the library crate, so `cargo bench` runs them all.
+//!
+//! Env knobs: `CKPTWIN_BENCH_FAST=1` shrinks sample counts (CI smoke);
+//! `CKPTWIN_BENCH_SAMPLES=n` overrides the sample count.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(f64::total_cmp);
+        s[s.len() / 2]
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let mut devs: Vec<f64> =
+            self.samples.iter().map(|s| (s - med).abs()).collect();
+        devs.sort_by(f64::total_cmp);
+        devs[devs.len() / 2]
+    }
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+fn n_samples() -> usize {
+    if let Ok(s) = std::env::var("CKPTWIN_BENCH_SAMPLES") {
+        if let Ok(n) = s.parse() {
+            return n;
+        }
+    }
+    if std::env::var("CKPTWIN_BENCH_FAST").is_ok() {
+        5
+    } else {
+        15
+    }
+}
+
+/// Run a benchmark: calls `f()` repeatedly, targeting ~`target_ms` per
+/// sample, and prints a criterion-style line.  Returns the samples.
+pub fn bench<F: FnMut()>(name: &str, target_ms: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration: measure one call.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = ((target_ms / 1e3) / once.as_secs_f64())
+        .clamp(1.0, 1e7) as u64;
+
+    let n = n_samples();
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        samples,
+        iters_per_sample: iters,
+    };
+    println!(
+        "{:<44} time: [{} median, {} mean, {} min] ±{} (n={}, {} it/sample)",
+        res.name,
+        fmt_time(res.median()),
+        fmt_time(res.mean()),
+        fmt_time(res.min()),
+        fmt_time(res.mad()),
+        res.samples.len(),
+        res.iters_per_sample,
+    );
+    res
+}
+
+/// Benchmark with a value-producing closure (result black-boxed).
+pub fn bench_val<T, F: FnMut() -> T>(
+    name: &str,
+    target_ms: f64,
+    mut f: F,
+) -> BenchResult {
+    bench(name, target_ms, || {
+        black_box(f());
+    })
+}
+
+/// Report a throughput line computed from a result.
+pub fn report_throughput(res: &BenchResult, items: f64, unit: &str) {
+    let per_sec = items / res.median();
+    println!(
+        "{:<44}   -> {:.3e} {unit}/s",
+        format!("{} (throughput)", res.name),
+        per_sec
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("CKPTWIN_BENCH_FAST", "1");
+        let res = bench_val("noop", 0.5, || 1 + 1);
+        assert!(!res.samples.is_empty());
+        assert!(res.median() >= 0.0);
+        assert!(res.min() <= res.mean() * 1.5 + 1e-9);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,99 @@
+//! Tiny CLI argument parser (offline environment: no clap).
+//!
+//! Grammar: `ckptwin <subcommand> [--key value | --key=value | --flag] ...`
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::str::FromStr;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.kv.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .is_some_and(|next| !next.starts_with("--"))
+                {
+                    args.kv.insert(name.to_string(), iter.next().unwrap());
+                } else {
+                    args.flags.insert(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Typed option: `--key value`.
+    pub fn get<T: FromStr>(&self, key: &str) -> Option<T> {
+        self.kv.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Raw string option.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag (`--flag`).
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains(key) || self.kv.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("figure --id 4 --instances=20 --best-period");
+        assert_eq!(a.subcommand.as_deref(), Some("figure"));
+        assert_eq!(a.get::<u8>("id"), Some(4));
+        assert_eq!(a.get::<usize>("instances"), Some(20));
+        assert!(a.has("best-period"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn trailing_flag_and_positional() {
+        let a = parse("simulate config.toml --verbose");
+        assert_eq!(a.positional, vec!["config.toml"]);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("table");
+        assert_eq!(a.get_or("id", 4u8), 4);
+        assert_eq!(a.get_or("instances", 100usize), 100);
+    }
+}

@@ -1,0 +1,211 @@
+//! Durable checkpoint store: atomic, checksummed snapshots of the model
+//! state (the flat `theta` vector), with retention of the last K versions.
+//!
+//! File format (little-endian):
+//! ```text
+//! magic   "CKPTWIN1"            8 bytes
+//! step    u64                   8 bytes
+//! len     u64 (f32 count)       8 bytes
+//! payload len * 4 bytes
+//! crc32   u32 over payload      4 bytes
+//! ```
+//! Writes go to a temp file + `rename` so a fault (or a killed process)
+//! can never leave a torn checkpoint behind — exactly the property the
+//! paper's model assumes of checkpoint C.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+const MAGIC: &[u8; 8] = b"CKPTWIN1";
+
+/// CRC-32 (IEEE 802.3), bitwise implementation with a small lookup table.
+pub fn crc32(data: &[u8]) -> u32 {
+    // Build the table once.
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// A checkpoint directory with retention.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl AsRef<Path>, keep: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(CheckpointStore { dir, keep: keep.max(1) })
+    }
+
+    fn path_for(&self, step: u64) -> PathBuf {
+        self.dir.join(format!("ckpt-{step:012}.bin"))
+    }
+
+    /// Atomically persist a snapshot taken at `step`.
+    pub fn save(&self, step: u64, theta: &[f32]) -> Result<PathBuf> {
+        let final_path = self.path_for(step);
+        let tmp_path = self.dir.join(format!(".tmp-{step:012}"));
+        let payload: Vec<u8> =
+            theta.iter().flat_map(|f| f.to_le_bytes()).collect();
+        {
+            let mut f = fs::File::create(&tmp_path)
+                .with_context(|| format!("creating {}", tmp_path.display()))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&step.to_le_bytes())?;
+            f.write_all(&(theta.len() as u64).to_le_bytes())?;
+            f.write_all(&payload)?;
+            f.write_all(&crc32(&payload).to_le_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp_path, &final_path)?;
+        self.retain()?;
+        Ok(final_path)
+    }
+
+    /// List available checkpoint steps, ascending.
+    pub fn steps(&self) -> Result<Vec<u64>> {
+        let mut steps = Vec::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name
+                .strip_prefix("ckpt-")
+                .and_then(|s| s.strip_suffix(".bin"))
+            {
+                if let Ok(step) = num.parse::<u64>() {
+                    steps.push(step);
+                }
+            }
+        }
+        steps.sort_unstable();
+        Ok(steps)
+    }
+
+    /// Load the snapshot for `step`.
+    pub fn load(&self, step: u64) -> Result<Vec<f32>> {
+        let path = self.path_for(step);
+        let mut bytes = Vec::new();
+        fs::File::open(&path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        if bytes.len() < 28 || &bytes[..8] != MAGIC {
+            return Err(anyhow!("{}: bad magic/size", path.display()));
+        }
+        let stored_step = u64::from_le_bytes(bytes[8..16].try_into()?);
+        if stored_step != step {
+            return Err(anyhow!("{}: step mismatch", path.display()));
+        }
+        let len = u64::from_le_bytes(bytes[16..24].try_into()?) as usize;
+        let payload_end = 24 + len * 4;
+        if bytes.len() != payload_end + 4 {
+            return Err(anyhow!("{}: truncated", path.display()));
+        }
+        let payload = &bytes[24..payload_end];
+        let stored_crc =
+            u32::from_le_bytes(bytes[payload_end..payload_end + 4].try_into()?);
+        if crc32(payload) != stored_crc {
+            return Err(anyhow!("{}: checksum mismatch", path.display()));
+        }
+        Ok(payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Load the most recent checkpoint, if any: `(step, theta)`.
+    pub fn load_latest(&self) -> Result<Option<(u64, Vec<f32>)>> {
+        match self.steps()?.last() {
+            None => Ok(None),
+            Some(&step) => Ok(Some((step, self.load(step)?))),
+        }
+    }
+
+    fn retain(&self) -> Result<()> {
+        let steps = self.steps()?;
+        if steps.len() > self.keep {
+            for &old in &steps[..steps.len() - self.keep] {
+                let _ = fs::remove_file(self.path_for(old));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ckptwin-test-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let store = CheckpointStore::new(tmpdir("rt"), 3).unwrap();
+        let theta: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        store.save(42, &theta).unwrap();
+        let loaded = store.load(42).unwrap();
+        assert_eq!(theta, loaded);
+        let (step, latest) = store.load_latest().unwrap().unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(latest, theta);
+    }
+
+    #[test]
+    fn retention_keeps_last_k() {
+        let store = CheckpointStore::new(tmpdir("keep"), 2).unwrap();
+        for step in [1u64, 2, 3, 4] {
+            store.save(step, &[step as f32]).unwrap();
+        }
+        assert_eq!(store.steps().unwrap(), vec![3, 4]);
+        assert!(store.load(1).is_err());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = tmpdir("corrupt");
+        let store = CheckpointStore::new(&dir, 3).unwrap();
+        let path = store.save(7, &[1.0, 2.0, 3.0]).unwrap();
+        // Flip one payload byte.
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[25] ^= 0xFF;
+        fs::write(&path, bytes).unwrap();
+        assert!(store.load(7).is_err());
+    }
+
+    #[test]
+    fn empty_store() {
+        let store = CheckpointStore::new(tmpdir("empty"), 3).unwrap();
+        assert!(store.load_latest().unwrap().is_none());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // Standard test vector: CRC32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

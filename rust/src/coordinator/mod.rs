@@ -1,0 +1,456 @@
+//! The checkpointing coordinator: the paper's scheduling algorithm run as a
+//! *real system* rather than a simulation.
+//!
+//! The coordinator drives an actual workload (by default the AOT-compiled
+//! transformer training step, see [`workload::PjrtWorkload`]) in **scaled
+//! simulation time**: each unit of work represents `seconds_per_step`
+//! seconds of an exascale job, and the fault process, prediction feed,
+//! checkpoint costs (C, C_p) and downtime/recovery (D, R) all live on that
+//! clock.  Model state is snapshotted to a durable, checksummed
+//! [`checkpoint::CheckpointStore`]; an injected fault really destroys the
+//! in-memory state and recovery really reloads the last checkpoint — so a
+//! scheduling bug (checkpointing too rarely, trusting a bad predictor)
+//! shows up as lost training steps and a worse loss curve, exactly the
+//! waste the paper analyzes.
+//!
+//! Concurrency: the leader loop executes work and *defers checkpoint I/O*
+//! to a writer thread (snapshots are cheap copies; serialization + fsync
+//! happen off the hot path) — the standard "asynchronous checkpointing"
+//! optimization.  The write is still charged C (or C_p) on the simulation
+//! clock, faithful to the paper's cost model.
+
+pub mod checkpoint;
+pub mod workload;
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Scenario;
+use crate::model::waste::{waste_clipped, GridStrategy};
+use crate::sim::trace::{Event, TraceStream};
+use crate::strategy::{Policy, PolicyKind};
+use checkpoint::CheckpointStore;
+use workload::Workload;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Fault/predictor/cost parameters, on the simulation clock.
+    pub scenario: Scenario,
+    /// Checkpointing policy to run.
+    pub policy: Policy,
+    /// Simulated seconds of useful work represented by one workload step.
+    pub seconds_per_step: f64,
+    /// Job size in steps (overrides `scenario.job_size`).
+    pub total_steps: u64,
+    /// Checkpoint directory.
+    pub ckpt_dir: PathBuf,
+    /// Trace seed.
+    pub seed: u64,
+    /// Record the loss every this many validated steps (0 = every step).
+    pub log_every: u64,
+}
+
+/// Outcome of a coordinator run.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// (validated step index, loss) samples.
+    pub losses: Vec<(u64, f32)>,
+    /// Simulated makespan (s).
+    pub sim_makespan: f64,
+    /// Measured waste on the simulation clock.
+    pub sim_waste: f64,
+    /// The analytic model's prediction of the waste (Eqs. 3/14/10/4).
+    pub predicted_waste: f64,
+    pub n_faults: u64,
+    pub n_recoveries: u64,
+    pub n_reg_ckpts: u64,
+    pub n_pro_ckpts: u64,
+    pub n_preds_trusted: u64,
+    /// Steps actually executed, including destroyed + recomputed ones.
+    pub steps_executed: u64,
+    /// Steps whose work was destroyed by faults.
+    pub steps_lost: u64,
+    /// Wall-clock seconds of the run.
+    pub wall_seconds: f64,
+}
+
+enum WriterMsg {
+    Save { step: u64, theta: Vec<f32> },
+    /// Barrier: ack once all previously queued saves are durable.  Sent
+    /// before every recovery so "what is on disk" is deterministic.
+    Sync(mpsc::Sender<()>),
+    Stop,
+}
+
+/// Run the coordinator to completion.
+pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Report> {
+    let sc = &config.scenario;
+    let pol = &config.policy;
+    pol.validate(sc);
+    let sps = config.seconds_per_step;
+    assert!(sps > 0.0);
+    let job_steps = config.total_steps;
+
+    // Regular-mode period in steps (the work part of T_R).
+    let steps_per_period =
+        (((pol.tr - sc.platform.c) / sps).round() as u64).max(1);
+    // WithCkpt proactive period in steps.
+    let steps_per_pro_period =
+        (((pol.tp - sc.platform.cp) / sps).round() as u64).max(1);
+
+    let store = CheckpointStore::new(&config.ckpt_dir, 4)?;
+    let (tx, rx) = mpsc::channel::<WriterMsg>();
+    let writer_dir = config.ckpt_dir.clone();
+    let writer = std::thread::spawn(move || -> Result<u64> {
+        let store = CheckpointStore::new(&writer_dir, 4)?;
+        let mut written = 0;
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                WriterMsg::Save { step, theta } => {
+                    store.save(step, &theta)?;
+                    written += 1;
+                }
+                WriterMsg::Sync(ack) => {
+                    let _ = ack.send(());
+                }
+                WriterMsg::Stop => break,
+            }
+        }
+        Ok(written)
+    });
+
+    let mut stream = TraceStream::new(sc, config.seed);
+    let mut next_ev = stream.next_event();
+
+    let wall_start = Instant::now();
+    let mut rep = Report::default();
+    let mut sim_t = 0.0f64;
+    // Validated = secured by the last completed checkpoint; `since` = steps
+    // done since then (lost on fault).
+    let mut validated: u64 = 0;
+    let mut since: u64 = 0;
+    let mut period_done: u64 = 0; // steps completed in the current period
+
+    // Take checkpoint step-0 so recovery always has something to load.
+    store.save(0, &workload.snapshot())?;
+
+    // --- helpers -----------------------------------------------------------
+    macro_rules! pop_event {
+        () => {{
+            next_ev = stream.next_event();
+        }};
+    }
+
+    // Process a fault at `tf`: destroy unvalidated work, restore, serve D+R.
+    macro_rules! serve_fault {
+        ($tf:expr) => {{
+            rep.n_faults += 1;
+            period_done = 0;
+            sim_t = $tf + sc.platform.d + sc.platform.r;
+            // Drain the async writer before reading "latest": recovery
+            // must see a deterministic durable state.
+            let (ack_tx, ack_rx) = mpsc::channel();
+            tx.send(WriterMsg::Sync(ack_tx))
+                .map_err(|_| anyhow!("checkpoint writer died"))?;
+            ack_rx
+                .recv()
+                .map_err(|_| anyhow!("checkpoint writer died"))?;
+            let (step, theta) = store
+                .load_latest()?
+                .ok_or_else(|| anyhow!("no checkpoint to recover from"))?;
+            debug_assert!(step <= validated);
+            workload.restore(theta)?;
+            // Everything past the last *durable* checkpoint is destroyed:
+            // the unvalidated steps, plus any validated-on-the-sim-clock
+            // steps whose async write had not landed yet.  All of them are
+            // honestly re-executed by the main loop.
+            rep.steps_lost += since + (validated - step);
+            since = 0;
+            validated = step;
+            rep.n_recoveries += 1;
+        }};
+    }
+
+    // Commit a checkpoint at the current sim time (charged `cost` sim s).
+    macro_rules! commit_ckpt {
+        ($cost:expr, $proactive:expr) => {{
+            sim_t += $cost;
+            validated += since;
+            since = 0;
+            tx.send(WriterMsg::Save {
+                step: validated,
+                theta: workload.snapshot(),
+            })
+            .map_err(|_| anyhow!("checkpoint writer died"))?;
+            if $proactive {
+                rep.n_pro_ckpts += 1;
+            } else {
+                rep.n_reg_ckpts += 1;
+            }
+        }};
+    }
+
+    // Execute one real step spanning [sim_t, sim_t + sps); returns false if
+    // a fault destroyed it.
+    macro_rules! do_step {
+        () => {{
+            let loss = workload.step()?;
+            rep.steps_executed += 1;
+            let step_end = sim_t + sps;
+            // Did a fault strike during this step?
+            let mut destroyed = false;
+            while next_ev.time() < step_end {
+                match next_ev {
+                    Event::Fault { t, .. } => {
+                        pop_event!();
+                        serve_fault!(t);
+                        destroyed = true;
+                        break;
+                    }
+                    Event::Prediction(_) => {
+                        // Handled at step boundaries; requeue by deferring:
+                        // predictions inside a step take effect after it.
+                        break;
+                    }
+                }
+            }
+            if !destroyed {
+                sim_t = step_end;
+                since += 1;
+                let total = validated + since;
+                if config.log_every == 0 || total % config.log_every.max(1) == 0 {
+                    rep.losses.push((total, loss));
+                }
+            }
+            !destroyed
+        }};
+    }
+
+    // Serve downtime-phase events (faults during checkpoints etc.).
+    // Advance sim_t to `end` unless a fault intervenes; true if clean.
+    macro_rules! advance_no_work {
+        ($end:expr) => {{
+            let mut clean = true;
+            while next_ev.time() < $end {
+                match next_ev {
+                    Event::Fault { t, .. } => {
+                        pop_event!();
+                        serve_fault!(t);
+                        clean = false;
+                        break;
+                    }
+                    Event::Prediction(_) => {
+                        pop_event!(); // ignored in this phase
+                    }
+                }
+            }
+            if clean {
+                sim_t = $end;
+            }
+            clean
+        }};
+    }
+
+    // --- main loop ---------------------------------------------------------
+    'outer: while validated + since < job_steps {
+        // 1. Consume any event already due at sim_t.
+        while next_ev.time() <= sim_t {
+            match next_ev {
+                Event::Fault { t, .. } => {
+                    pop_event!();
+                    serve_fault!(t);
+                    continue 'outer;
+                }
+                Event::Prediction(p) => {
+                    pop_event!();
+                    if !matches!(pol.kind, PolicyKind::IgnorePredictions)
+                        && p.window_end > sim_t
+                    {
+                        rep.n_preds_trusted += 1;
+                        // Pre-window proactive checkpoint.
+                        let ck_end = sim_t + sc.platform.cp;
+                        if advance_no_work!(ck_end) {
+                            commit_ckpt!(0.0, true); // time already advanced
+                        } else {
+                            continue 'outer;
+                        }
+                        // In-window behaviour.
+                        match pol.kind {
+                            PolicyKind::Instant | PolicyKind::IgnorePredictions => {}
+                            PolicyKind::NoCkpt => {
+                                while sim_t < p.window_end
+                                    && validated + since < job_steps
+                                {
+                                    if !do_step!() {
+                                        continue 'outer;
+                                    }
+                                }
+                            }
+                            PolicyKind::WithCkpt => {
+                                while sim_t < p.window_end
+                                    && validated + since < job_steps
+                                {
+                                    for _ in 0..steps_per_pro_period {
+                                        if sim_t >= p.window_end
+                                            || validated + since >= job_steps
+                                        {
+                                            break;
+                                        }
+                                        if !do_step!() {
+                                            continue 'outer;
+                                        }
+                                    }
+                                    let ck_end = sim_t + sc.platform.cp;
+                                    if advance_no_work!(ck_end) {
+                                        commit_ckpt!(0.0, true);
+                                    } else {
+                                        continue 'outer;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // 2. Regular-mode work.
+        if period_done < steps_per_period {
+            if do_step!() {
+                period_done += 1;
+            }
+            continue 'outer;
+        }
+
+        // 3. Regular checkpoint.
+        let ck_end = sim_t + sc.platform.c;
+        if advance_no_work!(ck_end) {
+            commit_ckpt!(0.0, false);
+            period_done = 0;
+        }
+    }
+
+    tx.send(WriterMsg::Stop).ok();
+    writer
+        .join()
+        .map_err(|_| anyhow!("writer thread panicked"))??;
+
+    rep.sim_makespan = sim_t;
+    let job_sim_seconds = job_steps as f64 * sps;
+    rep.sim_waste = (sim_t - job_sim_seconds) / sim_t;
+    rep.predicted_waste = {
+        let strat = match pol.kind {
+            PolicyKind::IgnorePredictions => GridStrategy::Q0,
+            PolicyKind::Instant => GridStrategy::Instant,
+            PolicyKind::NoCkpt => GridStrategy::NoCkpt,
+            PolicyKind::WithCkpt => GridStrategy::WithCkpt,
+        };
+        waste_clipped(sc, strat, pol.tr)
+    };
+    rep.wall_seconds = wall_start.elapsed().as_secs_f64();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec};
+    use crate::sim::distribution::Law;
+    use workload::SyntheticWorkload;
+
+    fn config(tag: &str, mu: f64, kind: PolicyKind) -> CoordinatorConfig {
+        let scenario = Scenario {
+            platform: Platform { mu, c: 120.0, cp: 60.0, d: 30.0, r: 60.0 },
+            predictor: PredictorSpec {
+                recall: 0.85,
+                precision: 0.82,
+                window: 240.0,
+            },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 0.0, // steps drive the job size
+        };
+        let dir = std::env::temp_dir().join(format!(
+            "ckptwin-coord-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        CoordinatorConfig {
+            scenario,
+            policy: Policy { kind, tr: 1200.0, tp: 180.0 },
+            seconds_per_step: 30.0,
+            total_steps: 400,
+            ckpt_dir: dir,
+            seed: 42,
+            log_every: 10,
+        }
+    }
+
+    #[test]
+    fn fault_free_run_completes_all_steps() {
+        let cfg = config("clean", 1e12, PolicyKind::IgnorePredictions);
+        let mut w = SyntheticWorkload::new(64);
+        let rep = run(&cfg, &mut w).unwrap();
+        assert_eq!(rep.n_faults, 0);
+        assert_eq!(rep.steps_executed, 400);
+        assert_eq!(rep.steps_lost, 0);
+        // waste == checkpoint overhead only: period = 36 steps of 30 s
+        // + 120 s ckpt.
+        assert!(rep.sim_waste > 0.0 && rep.sim_waste < 0.15, "{}", rep.sim_waste);
+        assert!(rep.n_reg_ckpts > 0);
+    }
+
+    #[test]
+    fn faulty_run_recovers_and_finishes() {
+        let cfg = config("faulty", 4000.0, PolicyKind::WithCkpt);
+        let mut w = SyntheticWorkload::new(64);
+        let rep = run(&cfg, &mut w).unwrap();
+        assert!(rep.n_faults > 0);
+        assert_eq!(rep.n_recoveries, rep.n_faults);
+        // All validated work completed despite losses.
+        assert!(rep.steps_executed >= 400);
+        assert!(rep.sim_waste > 0.0 && rep.sim_waste < 1.0);
+        // Loss curve is recorded and last sample reflects full progress.
+        assert!(!rep.losses.is_empty());
+        assert_eq!(rep.losses.last().unwrap().0, 400);
+    }
+
+    #[test]
+    fn proactive_checkpoints_fire_for_prediction_aware_policies() {
+        let cfg = config("pro", 6000.0, PolicyKind::WithCkpt);
+        let mut w = SyntheticWorkload::new(16);
+        let rep = run(&cfg, &mut w).unwrap();
+        assert!(rep.n_preds_trusted > 0);
+        assert!(rep.n_pro_ckpts >= rep.n_preds_trusted);
+    }
+
+    #[test]
+    fn ignore_mode_takes_no_proactive_checkpoints() {
+        let cfg = config("ign", 6000.0, PolicyKind::IgnorePredictions);
+        let mut w = SyntheticWorkload::new(16);
+        let rep = run(&cfg, &mut w).unwrap();
+        assert_eq!(rep.n_pro_ckpts, 0);
+        assert_eq!(rep.n_preds_trusted, 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = config("det1", 5000.0, PolicyKind::NoCkpt);
+        let mut w1 = SyntheticWorkload::new(16);
+        let r1 = run(&cfg, &mut w1).unwrap();
+        let cfg2 = CoordinatorConfig {
+            ckpt_dir: cfg.ckpt_dir.with_extension("b"),
+            ..cfg.clone()
+        };
+        let mut w2 = SyntheticWorkload::new(16);
+        let r2 = run(&cfg2, &mut w2).unwrap();
+        assert_eq!(r1.sim_makespan, r2.sim_makespan);
+        assert_eq!(r1.n_faults, r2.n_faults);
+        assert_eq!(r1.losses, r2.losses);
+    }
+}

@@ -1,0 +1,286 @@
+//! Figure runners: one per figure family of the paper's evaluation.
+//!
+//! | Figures | Content                                                   |
+//! |---------|-----------------------------------------------------------|
+//! | 2–7     | waste vs N, false predictions ~ failure law               |
+//! | 8–13    | waste vs N, false predictions ~ Uniform                   |
+//! | 14–17   | waste vs period T_R (RFO + prediction-aware, + analytic)  |
+//! | 18–21   | waste vs window size I                                    |
+//!
+//! Figures 2–13 iterate {predictor A, B} × {C_p = C, 0.1C, 2C}; each figure
+//! is a 3 (distribution) × 5 (window size) panel over the 4 platform sizes.
+//! Every runner returns its CSV rows and writes `results/figN.csv`.
+
+use crate::config::{PredictorSpec, Scenario};
+use crate::sim::distribution::Law;
+
+use super::{
+    evaluate_heuristics, write_csv, HeuristicResult, PAPER_PROCS, PAPER_WINDOWS,
+};
+
+/// The three failure distributions of §4.1.
+pub const PAPER_LAWS: [Law; 3] = [
+    Law::Exponential,
+    Law::Weibull { shape: 0.7 },
+    Law::Weibull { shape: 0.5 },
+];
+
+/// Static description of one waste-vs-N figure (Figures 2–13).
+#[derive(Clone, Copy, Debug)]
+pub struct WasteVsNSpec {
+    pub id: u8,
+    /// Predictor A (p=.82, r=.85) or B (p=.4, r=.7).
+    pub predictor_a: bool,
+    /// C_p / C.
+    pub cp_ratio: f64,
+    /// False-prediction arrivals: failure law (Figs 2–7) or Uniform (8–13).
+    pub uniform_false_preds: bool,
+}
+
+/// All twelve waste-vs-N figures.
+pub fn waste_vs_n_specs() -> Vec<WasteVsNSpec> {
+    let mut specs = Vec::new();
+    let mut id = 2;
+    for uniform in [false, true] {
+        for predictor_a in [true, false] {
+            for cp_ratio in [1.0, 0.1, 2.0] {
+                specs.push(WasteVsNSpec {
+                    id,
+                    predictor_a,
+                    cp_ratio,
+                    uniform_false_preds: uniform,
+                });
+                id += 1;
+            }
+        }
+    }
+    specs
+}
+
+fn predictor(a: bool, window: f64) -> PredictorSpec {
+    if a {
+        PredictorSpec::paper_a(window)
+    } else {
+        PredictorSpec::paper_b(window)
+    }
+}
+
+/// CSV header shared by the waste-vs-N and waste-vs-I figures.
+pub const WASTE_HEADER: &str =
+    "figure,distribution,window,procs,heuristic,tr,waste,waste_ci,analytic_waste,makespan_days";
+
+fn push_rows(
+    rows: &mut Vec<String>,
+    fig: u8,
+    law: Law,
+    window: f64,
+    procs: u64,
+    results: &[HeuristicResult],
+) {
+    for r in results {
+        rows.push(format!(
+            "{fig},{},{window},{procs},{},{:.1},{:.6},{:.6},{:.6},{:.3}",
+            law.label(),
+            r.name,
+            r.tr,
+            r.waste,
+            r.waste_ci,
+            r.analytic_waste,
+            r.makespan / crate::util::SECONDS_PER_DAY,
+        ));
+    }
+}
+
+/// Run one waste-vs-N figure; returns the CSV rows written.
+pub fn run_waste_vs_n(
+    spec: &WasteVsNSpec,
+    instances: usize,
+    best_period_seeds: usize,
+) -> std::io::Result<Vec<String>> {
+    let mut rows = Vec::new();
+    for law in PAPER_LAWS {
+        for &window in &PAPER_WINDOWS {
+            for &procs in &PAPER_PROCS {
+                let sc = Scenario::paper(
+                    procs,
+                    spec.cp_ratio,
+                    predictor(spec.predictor_a, window),
+                    law,
+                    if spec.uniform_false_preds { Law::Uniform } else { law },
+                );
+                let res =
+                    evaluate_heuristics(&sc, instances, best_period_seeds);
+                push_rows(&mut rows, spec.id, law, window, procs, &res);
+            }
+        }
+    }
+    write_csv(&format!("fig{}", spec.id), WASTE_HEADER, &rows)?;
+    Ok(rows)
+}
+
+/// Figures 14–17: waste as a function of the period T_R.
+/// (14, 15) = predictor A at N = 2^16, 2^19; (16, 17) = predictor B.
+#[derive(Clone, Copy, Debug)]
+pub struct WasteVsTrSpec {
+    pub id: u8,
+    pub predictor_a: bool,
+    pub procs: u64,
+}
+
+pub fn waste_vs_tr_specs() -> [WasteVsTrSpec; 4] {
+    [
+        WasteVsTrSpec { id: 14, predictor_a: true, procs: 1 << 16 },
+        WasteVsTrSpec { id: 15, predictor_a: true, procs: 1 << 19 },
+        WasteVsTrSpec { id: 16, predictor_a: false, procs: 1 << 16 },
+        WasteVsTrSpec { id: 17, predictor_a: false, procs: 1 << 19 },
+    ]
+}
+
+pub const TR_HEADER: &str =
+    "figure,distribution,window,procs,heuristic,tr,waste,waste_ci,analytic_waste";
+
+/// Run one waste-vs-T_R figure over a geometric T_R grid.
+pub fn run_waste_vs_tr(
+    spec: &WasteVsTrSpec,
+    instances: usize,
+    grid_points: usize,
+) -> std::io::Result<Vec<String>> {
+    use crate::model::waste::{waste_clipped, GridStrategy};
+    use crate::strategy::{Policy, PolicyKind, Strategy};
+
+    // The paper's T_R plots use I = 600 s, C_p = C, failure-law FPs.
+    let window = 600.0;
+    let mut rows = Vec::new();
+    for law in PAPER_LAWS {
+        let sc = Scenario::paper(
+            spec.procs,
+            1.0,
+            predictor(spec.predictor_a, window),
+            law,
+            law,
+        );
+        let c = sc.platform.c;
+        let lo = 1.1 * c;
+        let hi = (sc.job_size).min(400.0 * c);
+        let ratio = (hi / lo).powf(1.0 / (grid_points - 1) as f64);
+        let heuristics: [(&str, PolicyKind, GridStrategy); 4] = [
+            ("RFO", PolicyKind::IgnorePredictions, GridStrategy::Q0),
+            ("Instant", PolicyKind::Instant, GridStrategy::Instant),
+            ("NoCkptI", PolicyKind::NoCkpt, GridStrategy::NoCkpt),
+            ("WithCkptI", PolicyKind::WithCkpt, GridStrategy::WithCkpt),
+        ];
+        let tp = crate::model::optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+        for k in 0..grid_points {
+            let tr = lo * ratio.powi(k as i32);
+            for (name, kind, gs) in heuristics {
+                let pol = Policy { kind, tr, tp };
+                // Terrible periods in the sweep are capped (waste saturates
+                // near 1 anyway); see engine::simulate_from_capped.
+                let cap = 50.0 * sc.job_size + 100.0 * sc.platform.mu;
+                let seeds: Vec<u64> = (0..instances as u64).collect();
+                let outs = super::run_seeds_capped(&sc, &pol, &seeds, cap);
+                let waste = crate::stats::Summary::from_iter(
+                    outs.iter().map(|o| o.waste()),
+                );
+                rows.push(format!(
+                    "{},{},{window},{},{name},{tr:.1},{:.6},{:.6},{:.6}",
+                    spec.id,
+                    law.label(),
+                    spec.procs,
+                    waste.mean(),
+                    waste.ci95(),
+                    waste_clipped(&sc, gs, tr),
+                ));
+            }
+        }
+        // Reference: where the named strategies put their periods.
+        for strat in Strategy::paper_set() {
+            let pol = strat.policy(&sc);
+            rows.push(format!(
+                "{},{},{window},{},{}-period,{:.1},,,",
+                spec.id,
+                law.label(),
+                spec.procs,
+                strat.name(),
+                pol.tr,
+            ));
+        }
+    }
+    write_csv(&format!("fig{}", spec.id), TR_HEADER, &rows)?;
+    Ok(rows)
+}
+
+/// Figures 18–21: waste as a function of the window size I.
+#[derive(Clone, Copy, Debug)]
+pub struct WasteVsISpec {
+    pub id: u8,
+    pub predictor_a: bool,
+    pub procs: u64,
+}
+
+pub fn waste_vs_i_specs() -> [WasteVsISpec; 4] {
+    [
+        WasteVsISpec { id: 18, predictor_a: true, procs: 1 << 16 },
+        WasteVsISpec { id: 19, predictor_a: true, procs: 1 << 19 },
+        WasteVsISpec { id: 20, predictor_a: false, procs: 1 << 16 },
+        WasteVsISpec { id: 21, predictor_a: false, procs: 1 << 19 },
+    ]
+}
+
+/// Window sweep used by Figures 18–21.
+pub const I_SWEEP: [f64; 7] = [150.0, 300.0, 600.0, 900.0, 1200.0, 2100.0, 3000.0];
+
+/// Run one waste-vs-I figure.
+pub fn run_waste_vs_i(
+    spec: &WasteVsISpec,
+    instances: usize,
+    best_period_seeds: usize,
+) -> std::io::Result<Vec<String>> {
+    let mut rows = Vec::new();
+    for law in PAPER_LAWS {
+        for &window in &I_SWEEP {
+            let sc = Scenario::paper(
+                spec.procs,
+                1.0,
+                predictor(spec.predictor_a, window),
+                law,
+                law,
+            );
+            let res = evaluate_heuristics(&sc, instances, best_period_seeds);
+            push_rows(&mut rows, spec.id, law, window, spec.procs, &res);
+        }
+    }
+    write_csv(&format!("fig{}", spec.id), WASTE_HEADER, &rows)?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_waste_vs_n_specs() {
+        let specs = waste_vs_n_specs();
+        assert_eq!(specs.len(), 12);
+        assert_eq!(specs[0].id, 2);
+        assert_eq!(specs[11].id, 13);
+        // Figures 2-7 use failure-law FPs, 8-13 uniform.
+        assert!(specs[..6].iter().all(|s| !s.uniform_false_preds));
+        assert!(specs[6..].iter().all(|s| s.uniform_false_preds));
+        // Cp ratios cycle C, 0.1C, 2C.
+        assert_eq!(specs[0].cp_ratio, 1.0);
+        assert_eq!(specs[1].cp_ratio, 0.1);
+        assert_eq!(specs[2].cp_ratio, 2.0);
+    }
+
+    #[test]
+    fn figure_ids_cover_paper() {
+        let ids: Vec<u8> = waste_vs_n_specs()
+            .iter()
+            .map(|s| s.id)
+            .chain(waste_vs_tr_specs().iter().map(|s| s.id))
+            .chain(waste_vs_i_specs().iter().map(|s| s.id))
+            .collect();
+        assert_eq!(ids, (2..=21).collect::<Vec<u8>>());
+    }
+}

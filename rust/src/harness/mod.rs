@@ -1,0 +1,234 @@
+//! Experiment harness: regenerates every figure and table of the paper's
+//! evaluation (§4).
+//!
+//! * [`figures`] — Figures 2–13 (waste vs platform size), 14–17 (waste vs
+//!   period T_R), 18–21 (waste vs window size I);
+//! * [`tables`] — Tables 4–5 (job execution times in days, gains vs Daly);
+//! * [`plot`] — ASCII plots for terminal inspection (CSV is the primary
+//!   output, under `results/`).
+//!
+//! Simulations are parallelized across instances with scoped std threads
+//! (the offline environment provides no rayon/tokio).  Instance counts
+//! default to the paper's 100 and can be overridden with the
+//! `CKPTWIN_INSTANCES` environment variable (benches use small counts).
+
+pub mod figures;
+pub mod plot;
+pub mod tables;
+
+use crate::config::Scenario;
+#[cfg(test)]
+use crate::sim::engine::simulate;
+use crate::sim::engine::SimOutcome;
+use crate::stats::Summary;
+use crate::strategy::{best_period, Policy, PolicyKind, Strategy};
+
+/// Paper platform sizes: N = 2^16 … 2^19.
+pub const PAPER_PROCS: [u64; 4] = [1 << 16, 1 << 17, 1 << 18, 1 << 19];
+/// Paper prediction-window sizes (s).
+pub const PAPER_WINDOWS: [f64; 5] = [300.0, 600.0, 900.0, 1200.0, 3000.0];
+/// Paper proactive-checkpoint cost ratios C_p / C.
+pub const PAPER_CP_RATIOS: [f64; 3] = [1.0, 0.1, 2.0];
+
+/// Number of random instances per point (paper: 100).
+pub fn default_instances() -> usize {
+    std::env::var("CKPTWIN_INSTANCES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100)
+}
+
+/// Run `policy` on `n` instances (seeds 0..n) in parallel; returns the
+/// waste summary and the mean makespan (seconds).
+pub fn run_instances(sc: &Scenario, policy: &Policy, n: usize) -> (Summary, f64) {
+    let seeds: Vec<u64> = (0..n as u64).collect();
+    let outcomes = run_seeds(sc, policy, &seeds);
+    let waste = Summary::from_iter(outcomes.iter().map(|o| o.waste()));
+    let makespan =
+        outcomes.iter().map(|o| o.makespan).sum::<f64>() / outcomes.len() as f64;
+    (waste, makespan)
+}
+
+/// Simulate the given seeds in parallel (scoped threads).
+pub fn run_seeds(sc: &Scenario, policy: &Policy, seeds: &[u64]) -> Vec<SimOutcome> {
+    run_seeds_capped(sc, policy, seeds, f64::INFINITY)
+}
+
+/// [`run_seeds`] with a makespan cap (see `engine::simulate_from_capped`);
+/// used by period sweeps that deliberately visit terrible periods.
+pub fn run_seeds_capped(
+    sc: &Scenario,
+    policy: &Policy,
+    seeds: &[u64],
+    cap: f64,
+) -> Vec<SimOutcome> {
+    use crate::sim::engine::simulate_from_capped;
+    use crate::sim::trace::TraceStream;
+    let run_one = |seed: u64| {
+        simulate_from_capped(
+            sc,
+            policy,
+            1.0,
+            seed,
+            TraceStream::new(sc, seed),
+            cap,
+        )
+    };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(seeds.len().max(1));
+    if threads <= 1 || seeds.len() < 4 {
+        return seeds.iter().map(|&s| run_one(s)).collect();
+    }
+    let chunk = seeds.len().div_ceil(threads);
+    let mut out: Vec<Option<SimOutcome>> = vec![None; seeds.len()];
+    std::thread::scope(|scope| {
+        for (slot_chunk, seed_chunk) in
+            out.chunks_mut(chunk).zip(seeds.chunks(chunk))
+        {
+            let run_one = &run_one;
+            scope.spawn(move || {
+                for (slot, &seed) in slot_chunk.iter_mut().zip(seed_chunk) {
+                    *slot = Some(run_one(seed));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// One heuristic's result at one scenario point.
+#[derive(Clone, Debug)]
+pub struct HeuristicResult {
+    pub name: String,
+    /// Mean simulated waste.
+    pub waste: f64,
+    /// 95% CI half-width of the waste.
+    pub waste_ci: f64,
+    /// Mean makespan (s).
+    pub makespan: f64,
+    /// Waste predicted by the analytic model (NaN for BestPeriod twins).
+    pub analytic_waste: f64,
+    /// The regular period the heuristic used.
+    pub tr: f64,
+}
+
+/// Evaluate the paper's heuristic set on one scenario.
+///
+/// `n` instances for the named heuristics.  If `best_period_seeds > 0`, the
+/// four BestPeriod twins are added (searched with that many seeds — the
+/// brute force is expensive, the paper does the same sweep offline).
+pub fn evaluate_heuristics(
+    sc: &Scenario,
+    n: usize,
+    best_period_seeds: usize,
+) -> Vec<HeuristicResult> {
+    use crate::model::waste::{waste_clipped, GridStrategy};
+    let mut out = Vec::new();
+    for strat in Strategy::paper_set() {
+        let pol = strat.policy(sc);
+        let (waste, makespan) = run_instances(sc, &pol, n);
+        let gs = match pol.kind {
+            PolicyKind::IgnorePredictions => GridStrategy::Q0,
+            PolicyKind::Instant => GridStrategy::Instant,
+            PolicyKind::NoCkpt => GridStrategy::NoCkpt,
+            PolicyKind::WithCkpt => GridStrategy::WithCkpt,
+        };
+        out.push(HeuristicResult {
+            name: strat.name().to_string(),
+            waste: waste.mean(),
+            waste_ci: waste.ci95(),
+            makespan,
+            analytic_waste: waste_clipped(sc, gs, pol.tr),
+            tr: pol.tr,
+        });
+    }
+    if best_period_seeds > 0 {
+        let bp_seeds: Vec<u64> = (1000..1000 + best_period_seeds as u64).collect();
+        let variants: [(&str, PolicyKind); 4] = [
+            ("BestPeriod-NoPred", PolicyKind::IgnorePredictions),
+            ("BestPeriod-Instant", PolicyKind::Instant),
+            ("BestPeriod-NoCkptI", PolicyKind::NoCkpt),
+            ("BestPeriod-WithCkptI", PolicyKind::WithCkpt),
+        ];
+        for (name, kind) in variants {
+            let tp = crate::model::optimal::tp_extr(sc)
+                .max(sc.platform.cp * 1.1);
+            let bp = best_period::search(sc, kind, tp, &bp_seeds, 24, 8);
+            let pol = Policy { kind, tr: bp.tr, tp };
+            let (waste, makespan) = run_instances(sc, &pol, n);
+            out.push(HeuristicResult {
+                name: name.to_string(),
+                waste: waste.mean(),
+                waste_ci: waste.ci95(),
+                makespan,
+                analytic_waste: f64::NAN,
+                tr: bp.tr,
+            });
+        }
+    }
+    out
+}
+
+/// Write CSV rows to `results/<name>.csv` (creating the directory); returns
+/// the path written.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut text = String::with_capacity(rows.len() * 64 + header.len() + 1);
+    text.push_str(header);
+    text.push('\n');
+    for row in rows {
+        text.push_str(row);
+        text.push('\n');
+    }
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec};
+    use crate::sim::distribution::Law;
+
+    fn small_scenario() -> Scenario {
+        Scenario {
+            platform: Platform { mu: 30_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 1e6,
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let sc = small_scenario();
+        let pol = Strategy::Rfo.policy(&sc);
+        let seeds: Vec<u64> = (0..16).collect();
+        let par = run_seeds(&sc, &pol, &seeds);
+        let ser: Vec<_> =
+            seeds.iter().map(|&s| simulate(&sc, &pol, s)).collect();
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.makespan, b.makespan);
+        }
+    }
+
+    #[test]
+    fn evaluate_heuristics_returns_full_set() {
+        let sc = small_scenario();
+        let res = evaluate_heuristics(&sc, 4, 2);
+        assert_eq!(res.len(), 9); // 5 named + 4 BestPeriod
+        for r in &res {
+            assert!(r.waste > 0.0 && r.waste < 1.0, "{}: {}", r.name, r.waste);
+            assert!(r.makespan > sc.job_size);
+        }
+        // BestPeriod twins never much worse than their named counterpart.
+        let get = |n: &str| res.iter().find(|r| r.name == n).unwrap().waste;
+        assert!(get("BestPeriod-NoCkptI") <= get("NoCkptI") + 0.02);
+    }
+}

@@ -1,0 +1,106 @@
+//! Minimal ASCII line plots for terminal inspection of figure data.
+//!
+//! The CSV files under `results/` are the primary artifact (gnuplot- and
+//! pandas-ready); these plots exist so `ckptwin figure --id N` gives an
+//! immediate visual check of the paper's trends without leaving the shell.
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series on a `width` × `height` character canvas with axes.
+pub fn render(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let width = width.max(20);
+    let height = height.max(5);
+    let pts: Vec<(f64, f64)> =
+        series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 == x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 == y0 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut canvas = vec![vec![b' '; width]; height];
+    let marks = [b'*', b'+', b'o', b'x', b'#', b'@', b'%', b'&', b'~'];
+    for (si, s) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in &s.points {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy;
+            canvas[row][cx] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in canvas.iter().enumerate() {
+        let yval = y1 - (y1 - y0) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:8.3} |"));
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:8} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:10}{x0:<12.4}{:>w$.4}\n", "", x1, w = width - 12));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "  {} = {}\n",
+            marks[si % marks.len()] as char,
+            s.name
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_axes_and_legend() {
+        let s = vec![
+            Series {
+                name: "up".into(),
+                points: (0..20).map(|i| (i as f64, i as f64 * 2.0)).collect(),
+            },
+            Series {
+                name: "down".into(),
+                points: (0..20).map(|i| (i as f64, 40.0 - i as f64)).collect(),
+            },
+        ];
+        let text = render("test", &s, 40, 10);
+        assert!(text.contains("test"));
+        assert!(text.contains("* = up"));
+        assert!(text.contains("+ = down"));
+        assert!(text.lines().count() > 10);
+    }
+
+    #[test]
+    fn empty_series_no_panic() {
+        let text = render("empty", &[], 40, 10);
+        assert!(text.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let s = vec![Series { name: "flat".into(), points: vec![(1.0, 2.0)] }];
+        let text = render("flat", &s, 30, 6);
+        assert!(text.contains("flat"));
+    }
+}

@@ -1,0 +1,38 @@
+//! # ckptwin — Checkpointing strategies with prediction windows
+//!
+//! Full reproduction of Aupy, Robert, Vivien & Zaidouni, *"Checkpointing
+//! strategies with prediction windows"* (2013): the analytic waste model
+//! (Eqs. 3/4/10/14 and the optimal periods), a discrete-event simulator of
+//! the two-mode (regular/proactive) scheduling algorithm (Algorithm 1 and
+//! the Instant / NoCkptI / WithCkptI variants), the brute-force BestPeriod
+//! baselines, the Daly / Young / RFO prediction-ignoring policies, and the
+//! complete experiment harness regenerating every figure (2–21) and table
+//! (4–5) of the paper's evaluation.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L3 (this crate)** — coordination: the simulator, the analytic model,
+//!   the experiment harness, and a *real* checkpointing coordinator that
+//!   trains a transformer LM (AOT-compiled to an HLO artifact) under fault
+//!   injection with proactive checkpointing.
+//! * **L2/L1 (build-time Python)** — JAX model + Pallas kernels, lowered
+//!   once to `artifacts/*.hlo.txt`; the [`runtime`] module loads and runs
+//!   them through the PJRT CPU client (`xla` crate). Python never runs on
+//!   the request path.
+
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod jsonio;
+pub mod model;
+pub mod predictor;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod strategy;
+pub mod util;
+
+pub use config::{Platform, PredictorSpec, Scenario};
+pub use sim::engine::{simulate, SimOutcome};
+pub use strategy::{Policy, PolicyKind};

@@ -1,0 +1,554 @@
+//! `ckptwin` — CLI launcher for the reproduction.
+//!
+//! Subcommands:
+//! * `simulate`    — run the 9-heuristic comparison on one scenario
+//! * `analytic`    — closed-form wastes and optimal periods for a scenario
+//! * `figure`      — regenerate a paper figure (`--id 2..21`) into results/
+//! * `table`       — regenerate Table 4 or 5 (`--id 4|5`)
+//! * `best-period` — closed-form vs brute-force vs PJRT-grid period search
+//! * `e2e`         — train the transformer under fault injection with
+//!                   proactive checkpointing (the real-system driver)
+//! * `sweep`       — evaluate the Table-6 literature predictors
+//! * `config`      — run a scenario described by a TOML file
+//!
+//! Run `ckptwin help` for per-command options.
+
+use anyhow::{anyhow, Result};
+
+use ckptwin::cli::Args;
+use ckptwin::config::{FaultModel, PredictorSpec, Scenario};
+use ckptwin::harness::{self, figures, tables};
+use ckptwin::model::{optimal, waste};
+use ckptwin::sim::distribution::Law;
+use ckptwin::strategy::best_period;
+use ckptwin::util::SECONDS_PER_DAY;
+
+const HELP: &str = "\
+ckptwin — Checkpointing strategies with prediction windows (2013), full repro
+
+USAGE: ckptwin <command> [options]
+
+COMMANDS
+  simulate     --procs 65536 --cp-ratio 1.0 --predictor a|b --window 600
+               --law exponential|weibull0.7|weibull0.5 [--fp-law uniform]
+               [--instances 100] [--best-period-seeds 0]
+  analytic     same scenario options; prints Eqs. 3/4/10/14 optima
+  figure       --id 2..21 [--instances N] [--best-period-seeds N] [--plot]
+  table        --id 4|5 [--instances N]
+  best-period  scenario options; compares closed-form, brute-force and the
+               PJRT waste-grid search [--grid 256]
+  e2e          [--steps 400] [--mtbf 4000] [--strategy withckpt|nockpt|
+               instant|rfo] [--ckpt-dir DIR] [--seed 42]
+  sweep        [--procs 65536] [--instances 50]  (Table-6 predictors)
+  ablation     [--procs 262144] [--instances 20]  fault-model + trust-q
+               ablations behind DESIGN.md's design choices
+  inspect      scenario options + [--strategy withckpt] [--seed 0]
+               [--width 100]: ASCII execution timeline of one run
+  replay       --log faults.txt [scenario options]  run all heuristics
+               against a recorded failure log; --export N writes a
+               synthetic log instead
+  config       <file.toml> [--instances N]
+  help         this text
+";
+
+fn scenario_from_args(args: &Args) -> Scenario {
+    let procs: u64 = args.get_or("procs", 1 << 16);
+    let cp_ratio: f64 = args.get_or("cp-ratio", 1.0);
+    let window: f64 = args.get_or("window", 600.0);
+    let predictor = match args.get_str("predictor").unwrap_or("a") {
+        "b" => PredictorSpec::paper_b(window),
+        _ => PredictorSpec::paper_a(window),
+    };
+    let law = args
+        .get_str("law")
+        .and_then(Law::parse)
+        .unwrap_or(Law::Exponential);
+    let fp_law = args.get_str("fp-law").and_then(Law::parse).unwrap_or(law);
+    Scenario::paper(procs, cp_ratio, predictor, law, fp_law)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let sc = scenario_from_args(args);
+    let n = args.get_or("instances", harness::default_instances());
+    let bp = args.get_or("best-period-seeds", 0usize);
+    println!(
+        "scenario: mu={:.0}s C={} Cp={} D={} R={} | p={} r={} I={} | {} faults, {} FPs | job {:.1} days | {n} instances",
+        sc.platform.mu, sc.platform.c, sc.platform.cp, sc.platform.d,
+        sc.platform.r, sc.predictor.precision, sc.predictor.recall,
+        sc.predictor.window, sc.fault_law.label(), sc.false_pred_law.label(),
+        sc.job_size / SECONDS_PER_DAY,
+    );
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "heuristic", "waste", "±ci95", "analytic", "makespan(d)", "T_R"
+    );
+    for r in harness::evaluate_heuristics(&sc, n, bp) {
+        println!(
+            "{:<22} {:>10.4} {:>10.4} {:>10.4} {:>12.2} {:>10.0}",
+            r.name,
+            r.waste,
+            r.waste_ci,
+            r.analytic_waste,
+            r.makespan / SECONDS_PER_DAY,
+            r.tr
+        );
+    }
+    Ok(())
+}
+
+fn cmd_analytic(args: &Args) -> Result<()> {
+    let sc = scenario_from_args(args);
+    let pf = &sc.platform;
+    println!("closed-form periods (s):");
+    println!("  Young      T = {:>10.1}", optimal::young_period(pf));
+    println!("  Daly       T = {:>10.1}", optimal::daly_period(pf));
+    println!("  RFO        T = {:>10.1}", optimal::rfo_period(pf));
+    println!("  Instant    T_R^extr = {:>10.1}", optimal::tr_extr_instant(&sc));
+    println!("  NoCkptI    T_R^extr = {:>10.1}", optimal::tr_extr_window(&sc));
+    println!("  WithCkptI  T_R^extr = {:>10.1}  T_P^extr = {:.1}",
+        optimal::tr_extr_window(&sc), optimal::tp_extr(&sc));
+    println!("\nwaste at the optimum:");
+    let tr0 = optimal::rfo_period(pf);
+    println!("  RFO (Eq.3)        {:.4}", waste::q0(&sc, tr0));
+    println!("  Instant (Eq.14)   {:.4}", waste::instant(&sc, optimal::tr_extr_instant(&sc)));
+    println!("  NoCkptI (Eq.10)   {:.4}", waste::nockpt(&sc, optimal::tr_extr_window(&sc)));
+    println!(
+        "  WithCkptI (Eq.4)  {:.4}",
+        waste::withckpt(&sc, optimal::tr_extr_window(&sc), optimal::tp_extr(&sc))
+    );
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id: u8 = args
+        .get("id")
+        .ok_or_else(|| anyhow!("--id 2..21 required"))?;
+    let n = args.get_or("instances", harness::default_instances());
+    let bp = args.get_or("best-period-seeds", 10usize);
+    let rows = match id {
+        2..=13 => {
+            let spec = figures::waste_vs_n_specs()
+                .into_iter()
+                .find(|s| s.id == id)
+                .unwrap();
+            figures::run_waste_vs_n(&spec, n, bp)?
+        }
+        14..=17 => {
+            let spec = figures::waste_vs_tr_specs()
+                .into_iter()
+                .find(|s| s.id == id)
+                .unwrap();
+            figures::run_waste_vs_tr(&spec, n, args.get_or("grid", 24usize))?
+        }
+        18..=21 => {
+            let spec = figures::waste_vs_i_specs()
+                .into_iter()
+                .find(|s| s.id == id)
+                .unwrap();
+            figures::run_waste_vs_i(&spec, n, bp)?
+        }
+        _ => return Err(anyhow!("figure id must be 2..21")),
+    };
+    println!("wrote results/fig{id}.csv ({} rows)", rows.len());
+    if args.has("plot") {
+        print_figure_plot(id, &rows);
+    }
+    Ok(())
+}
+
+/// Quick terminal plot of a figure's exponential-law panel.
+fn print_figure_plot(id: u8, rows: &[String]) {
+    use ckptwin::harness::plot::{render, Series};
+    use std::collections::BTreeMap;
+    let mut by_heuristic: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    for row in rows {
+        let cols: Vec<&str> = row.split(',').collect();
+        if cols.len() < 8 || cols[1] != "exponential" {
+            continue;
+        }
+        let (window, procs, name) = (cols[2], cols[3], cols[4]);
+        if name.contains("BestPeriod") || name.ends_with("-period") {
+            continue;
+        }
+        let x: f64 = if (14..=17).contains(&id) {
+            cols[5].parse().unwrap_or(f64::NAN) // T_R sweep
+        } else if (18..=21).contains(&id) {
+            window.parse().unwrap_or(f64::NAN)
+        } else {
+            procs.parse().unwrap_or(f64::NAN)
+        };
+        let y: f64 = cols[6].parse().unwrap_or(f64::NAN);
+        if x.is_finite() && y.is_finite() {
+            by_heuristic.entry(name.to_string()).or_default().push((x, y));
+        }
+    }
+    let series: Vec<Series> = by_heuristic
+        .into_iter()
+        .map(|(name, points)| Series { name, points })
+        .collect();
+    println!(
+        "{}",
+        render(
+            &format!("figure {id} (exponential panel, waste vs x)"),
+            &series,
+            72,
+            18
+        )
+    );
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id: u8 = args.get_or("id", 4);
+    let n = args.get_or("instances", harness::default_instances());
+    let shape = match id {
+        4 => 0.7,
+        5 => 0.5,
+        _ => return Err(anyhow!("table id must be 4 or 5")),
+    };
+    let table = tables::run_table(id, shape, n)?;
+    println!("{}", tables::render(&table));
+    println!("wrote results/table{id}.csv");
+    Ok(())
+}
+
+fn cmd_best_period(args: &Args) -> Result<()> {
+    use ckptwin::strategy::PolicyKind;
+    let sc = scenario_from_args(args);
+    let grid_n: usize = args.get_or("grid", 256);
+    let seeds: Vec<u64> = (0..args.get_or("instances", 20u64)).collect();
+
+    // Closed form.
+    println!("closed-form:   RFO={:.0}  Instant={:.0}  window={:.0}",
+        optimal::rfo_period(&sc.platform),
+        optimal::tr_extr_instant(&sc),
+        optimal::tr_extr_window(&sc));
+
+    // Brute force over simulations.
+    let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+    for (name, kind) in [
+        ("NoPred", PolicyKind::IgnorePredictions),
+        ("Instant", PolicyKind::Instant),
+        ("NoCkptI", PolicyKind::NoCkpt),
+        ("WithCkptI", PolicyKind::WithCkpt),
+    ] {
+        let bp = best_period::search(&sc, kind, tp, &seeds, 24, 8);
+        println!(
+            "brute-force:   {name:<10} T_R*={:.0}  waste={:.4} ({} sims)",
+            bp.tr, bp.waste, bp.evals
+        );
+    }
+
+    // PJRT waste-grid artifact (analytic surface argmin).
+    match ckptwin::runtime::Runtime::discover() {
+        Ok(rt) => {
+            let lo = 1.05 * sc.platform.c;
+            let hi = 60.0 * optimal::rfo_period(&sc.platform);
+            let grid: Vec<f64> = (0..grid_n)
+                .map(|k| lo * (hi / lo).powf(k as f64 / (grid_n - 1) as f64))
+                .collect();
+            let best = rt.best_periods(&sc, &grid)?;
+            let names = ["Q0", "Instant", "NoCkptI", "WithCkptI"];
+            for (i, (tr, w)) in best.iter().enumerate() {
+                println!(
+                    "pjrt-grid:     {:<10} T_R*={tr:.0}  analytic waste={w:.4}",
+                    names[i]
+                );
+            }
+        }
+        Err(e) => println!("pjrt-grid:     skipped ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    use ckptwin::config::Platform;
+    use ckptwin::coordinator::{self, workload::PjrtWorkload, CoordinatorConfig};
+    use ckptwin::strategy::{Policy, PolicyKind};
+
+    let rt = ckptwin::runtime::Runtime::discover()?;
+    println!(
+        "runtime: platform={} params={}",
+        rt.platform_name(),
+        rt.manifest.param_count
+    );
+    let steps: u64 = args.get_or("steps", 400);
+    let mtbf: f64 = args.get_or("mtbf", 4000.0);
+    let kind = match args.get_str("strategy").unwrap_or("withckpt") {
+        "rfo" => PolicyKind::IgnorePredictions,
+        "instant" => PolicyKind::Instant,
+        "nockpt" => PolicyKind::NoCkpt,
+        _ => PolicyKind::WithCkpt,
+    };
+    let scenario = Scenario {
+        platform: Platform { mu: mtbf, c: 120.0, cp: 60.0, d: 30.0, r: 60.0 },
+        predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 240.0 },
+        fault_law: Law::Exponential,
+        false_pred_law: Law::Exponential,
+        fault_model: FaultModel::PlatformRenewal,
+        job_size: 0.0,
+    };
+    let tr = match kind {
+        PolicyKind::IgnorePredictions => optimal::rfo_period(&scenario.platform),
+        PolicyKind::Instant => optimal::tr_extr_instant(&scenario),
+        _ => optimal::tr_extr_window(&scenario),
+    };
+    let tp = optimal::tp_extr(&scenario).max(scenario.platform.cp * 1.1);
+    let cfg = CoordinatorConfig {
+        scenario,
+        policy: Policy { kind, tr, tp },
+        seconds_per_step: 30.0,
+        total_steps: steps,
+        ckpt_dir: args
+            .get_str("ckpt-dir")
+            .unwrap_or("results/e2e-ckpts")
+            .into(),
+        seed: args.get_or("seed", 42),
+        log_every: 10,
+    };
+    println!(
+        "e2e: {} steps, policy {:?} T_R={tr:.0} T_P={tp:.0}, MTBF {mtbf}s",
+        steps, kind
+    );
+    let mut workload = PjrtWorkload::new(&rt, cfg.seed, 0.1)?;
+    let rep = coordinator::run(&cfg, &mut workload)?;
+    println!(
+        "done: makespan {:.0}s sim, waste {:.4} (model predicted {:.4})",
+        rep.sim_makespan, rep.sim_waste, rep.predicted_waste
+    );
+    println!(
+        "faults {} | reg ckpts {} | pro ckpts {} | preds trusted {} | steps exec {} (lost {})",
+        rep.n_faults, rep.n_reg_ckpts, rep.n_pro_ckpts, rep.n_preds_trusted,
+        rep.steps_executed, rep.steps_lost
+    );
+    println!("loss curve ({} samples):", rep.losses.len());
+    for (step, loss) in &rep.losses {
+        if step % 50 == 0 || *step == steps {
+            println!("  step {step:>6}  loss {loss:.4}");
+        }
+    }
+    println!("wall time {:.1}s ({:.1} steps/s)",
+        rep.wall_seconds, rep.steps_executed as f64 / rep.wall_seconds);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let procs: u64 = args.get_or("procs", 1 << 16);
+    let n = args.get_or("instances", 50usize);
+    println!(
+        "{:<18} {:>6} {:>6} {:>8} {:>10} {:>10} {:>10}",
+        "predictor", "p", "r", "I", "Daly", "RFO", "best-aware"
+    );
+    for (name, spec) in ckptwin::predictor::table6_presets() {
+        let sc = Scenario::paper(procs, 1.0, spec, Law::Exponential, Law::Exponential);
+        let res = harness::evaluate_heuristics(&sc, n, 0);
+        let get = |nm: &str| {
+            res.iter().find(|r| r.name == nm).map(|r| r.waste).unwrap_or(f64::NAN)
+        };
+        let aware = ["Instant", "NoCkptI", "WithCkptI"]
+            .iter()
+            .map(|nm| get(nm))
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "{:<18} {:>6.2} {:>6.2} {:>8.0} {:>10.4} {:>10.4} {:>10.4}",
+            name, spec.precision, spec.recall, spec.window,
+            get("Daly"), get("RFO"), aware
+        );
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    use ckptwin::sim::engine::simulate_q;
+    use ckptwin::strategy::{Policy, PolicyKind, Strategy};
+    let procs: u64 = args.get_or("procs", 1 << 18);
+    let n: usize = args.get_or("instances", 20);
+    let window: f64 = args.get_or("window", 600.0);
+    let law = Law::Weibull { shape: args.get_or("shape", 0.7) };
+
+    // --- Ablation 1: fault-trace model -----------------------------------
+    println!("ablation 1 — fault-trace model (Weibull {}, N=2^{}, I={window}):",
+        args.get_or("shape", 0.7), procs.trailing_zeros());
+    println!("{:<28} {:>10} {:>10} {:>10}", "model", "Daly", "RFO", "NoCkptI");
+    for (name, model) in [
+        ("platform-renewal", FaultModel::PlatformRenewal),
+        ("per-proc stationary", FaultModel::PerProcessorStationary { n: procs }),
+        ("per-proc fresh (paper)", FaultModel::PerProcessor { n: procs }),
+    ] {
+        let mut sc = Scenario::paper(
+            procs, 1.0, PredictorSpec::paper_a(window), law, law,
+        );
+        sc.fault_model = model;
+        let w = |strat: Strategy| {
+            let pol = strat.policy(&sc);
+            harness::run_instances(&sc, &pol, n).0.mean()
+        };
+        println!(
+            "{:<28} {:>10.4} {:>10.4} {:>10.4}",
+            name,
+            w(Strategy::Daly),
+            w(Strategy::Rfo),
+            w(Strategy::NoCkptI)
+        );
+    }
+
+    // --- Ablation 2: trust probability q (paper: optimum at 0 or 1) ------
+    println!("\nablation 2 — randomized trust q (§3.1; optimum must be extreme):");
+    let sc = Scenario::paper(
+        procs, 1.0, PredictorSpec::paper_a(window), law, law,
+    );
+    let tr = optimal::tr_extr_window(&sc);
+    let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+    let pol = Policy { kind: PolicyKind::NoCkpt, tr, tp };
+    print!("{:>8}", "q");
+    for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        print!(" {q:>9.2}");
+    }
+    print!("\n{:>8}", "waste");
+    for q in [0.0f64, 0.25, 0.5, 0.75, 1.0] {
+        let mean: f64 = (0..n as u64)
+            .map(|s| simulate_q(&sc, &pol, q, s).waste())
+            .sum::<f64>()
+            / n as f64;
+        print!(" {mean:>9.4}");
+    }
+    println!();
+
+    // --- Ablation 3: proactive checkpoint cost C_p ------------------------
+    println!("\nablation 3 — C_p sensitivity (WithCkptI vs NoCkptI, I=3000):");
+    println!("{:<10} {:>12} {:>12}", "Cp/C", "NoCkptI", "WithCkptI");
+    for ratio in [0.1, 0.5, 1.0, 2.0] {
+        let sc = Scenario::paper(
+            procs, ratio, PredictorSpec::paper_a(3000.0), law, law,
+        );
+        let wn = harness::run_instances(&sc, &Strategy::NoCkptI.policy(&sc), n).0.mean();
+        let ww = harness::run_instances(&sc, &Strategy::WithCkptI.policy(&sc), n).0.mean();
+        println!("{ratio:<10} {wn:>12.4} {ww:>12.4}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    use ckptwin::sim::engine::simulate_traced;
+    use ckptwin::strategy::Strategy;
+    let sc = scenario_from_args(args);
+    let strat = match args.get_str("strategy").unwrap_or("withckpt") {
+        "daly" => Strategy::Daly,
+        "young" => Strategy::Young,
+        "rfo" => Strategy::Rfo,
+        "instant" => Strategy::Instant,
+        "nockpt" => Strategy::NoCkptI,
+        _ => Strategy::WithCkptI,
+    };
+    let pol = strat.policy(&sc);
+    let seed = args.get_or("seed", 0u64);
+    let width = args.get_or("width", 100usize);
+    let (out, tl) = simulate_traced(&sc, &pol, seed);
+    tl.validate(out.makespan).map_err(|e| anyhow!("timeline: {e}"))?;
+    println!(
+        "{} @ T_R={:.0} T_P={:.0}, seed {seed}: makespan {:.0}s, waste {:.4}",
+        strat.name(), pol.tr, pol.tp, out.makespan, out.waste()
+    );
+    println!(
+        "faults {} ({} predicted) | reg ckpts {} | pro ckpts {} | preds seen {} trusted {}",
+        out.n_faults, out.n_predicted_faults, out.n_reg_ckpts,
+        out.n_pro_ckpts, out.n_preds_seen, out.n_preds_trusted
+    );
+    println!("{}", tl.render(width));
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    use ckptwin::sim::tracefile;
+    use ckptwin::strategy::Strategy;
+    let sc = scenario_from_args(args);
+    if let Some(n) = args.get::<usize>("export") {
+        // Generate a synthetic failure log from the scenario's fault law.
+        let mut ts = ckptwin::sim::trace::TraceStream::new(&sc, args.get_or("seed", 0));
+        let mut faults = Vec::with_capacity(n);
+        while faults.len() < n {
+            if let ckptwin::sim::trace::Event::Fault { t, .. } = ts.next_event() {
+                faults.push(t);
+            }
+        }
+        let path = std::path::PathBuf::from(
+            args.get_str("log").unwrap_or("results/faults.log"),
+        );
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        tracefile::write_failure_log(&path, &faults)?;
+        println!("wrote {} faults to {}", faults.len(), path.display());
+        return Ok(());
+    }
+    let log_path = args
+        .get_str("log")
+        .ok_or_else(|| anyhow!("--log <file> required (or --export N)"))?;
+    let faults = tracefile::read_failure_log(std::path::Path::new(log_path))?;
+    println!(
+        "replaying {} recorded faults through all heuristics:",
+        faults.len()
+    );
+    println!("{:<12} {:>10} {:>12} {:>8}", "heuristic", "waste", "makespan(d)", "faults");
+    for strat in Strategy::paper_set() {
+        let pol = strat.policy(&sc);
+        let out = tracefile::replay(&sc, &pol, &faults, args.get_or("seed", 0));
+        println!(
+            "{:<12} {:>10.4} {:>12.2} {:>8}",
+            strat.name(),
+            out.waste(),
+            out.makespan / SECONDS_PER_DAY,
+            out.n_faults
+        );
+    }
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: ckptwin config <file.toml>"))?;
+    let sc = ckptwin::config::scenario_from_file(std::path::Path::new(path))
+        .map_err(|e| anyhow!("{e}"))?;
+    let n = args.get_or("instances", harness::default_instances());
+    println!(
+        "{:<22} {:>10} {:>10} {:>12}",
+        "heuristic", "waste", "analytic", "makespan(d)"
+    );
+    for r in harness::evaluate_heuristics(&sc, n, 0) {
+        println!(
+            "{:<22} {:>10.4} {:>10.4} {:>12.2}",
+            r.name,
+            r.waste,
+            r.analytic_waste,
+            r.makespan / SECONDS_PER_DAY
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("analytic") => cmd_analytic(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("table") => cmd_table(&args),
+        Some("best-period") => cmd_best_period(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("config") => cmd_config(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown command '{other}'\n{HELP}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

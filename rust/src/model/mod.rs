@@ -1,0 +1,17 @@
+//! Analytic waste model (§3 of the paper).
+//!
+//! * [`waste`] — closed-form waste of each strategy as a function of the
+//!   regular period `T_R` (and proactive period `T_P`): Eqs. (3), (4),
+//!   (10), (14).
+//! * [`optimal`] — the closed-form optimal periods: Young / Daly / RFO for
+//!   the prediction-ignoring policies, `T_P^extr` and the strategy-specific
+//!   `T_R^extr` (Eq. 6 and the §3.3 / §3.4 variants) for the
+//!   prediction-aware ones, with the paper's validity guards
+//!   (`T_R > C`, `C_p ≤ T_P ≤ I`).
+//!
+//! The same formulas are implemented in the L1 Pallas kernel
+//! (`python/compile/kernels/waste_grid.py`); `tests/runtime_roundtrip.rs`
+//! checks that the PJRT artifact and this module agree to f32 precision.
+
+pub mod optimal;
+pub mod waste;

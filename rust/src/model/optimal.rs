@@ -1,0 +1,191 @@
+//! Closed-form optimal checkpointing periods.
+//!
+//! Prediction-ignoring (q = 0): Young's and Daly's classical formulas (as
+//! quoted in the paper's introduction) and RFO, the paper's refined
+//! first-order period minimizing Eq. (3).
+//!
+//! Prediction-aware (q = 1): `T_P^extr` (§3.2) and `T_R^extr` — Eq. (6) for
+//! WithCkptI/NoCkptI and the §3.4 variant for Instant — with the paper's
+//! validity guards.
+
+use crate::config::Scenario;
+use crate::Platform;
+
+/// Young's formula: `T = sqrt(2 μ C) + C`.
+pub fn young_period(p: &Platform) -> f64 {
+    (2.0 * p.mu * p.c).sqrt() + p.c
+}
+
+/// Daly's formula as quoted in the paper: `T = sqrt(2 (μ + R) C) + C`.
+pub fn daly_period(p: &Platform) -> f64 {
+    (2.0 * (p.mu + p.r) * p.c).sqrt() + p.c
+}
+
+/// RFO (Refined First-Order): `T = sqrt(2 C (μ - (D + R)))`, the minimizer
+/// of Eq. (3).  Guards: μ must exceed D+R (otherwise fall back to C+ε
+/// territory — clamped to `max(·, 1.1 C)` like every other period here).
+pub fn rfo_period(p: &Platform) -> f64 {
+    let slack = (p.mu - (p.d + p.r)).max(p.c); // keep the sqrt well-defined
+    guard_tr((2.0 * p.c * slack).sqrt(), p)
+}
+
+/// `T_P^extr = sqrt(((1-p) I + p E) C_p / p)`, clamped to
+/// `[C_p, max(C_p, I)]` (§3.2: at least one proactive checkpoint must fit).
+pub fn tp_extr(sc: &Scenario) -> f64 {
+    let (p, i, e) = (sc.predictor.precision, sc.predictor.window, sc.e_if());
+    let cp = sc.platform.cp;
+    let raw = (((1.0 - p) * i + p * e) * cp / p).sqrt();
+    raw.clamp(cp, i.max(cp))
+}
+
+/// Eq. (6): `T_R^extr` for WithCkptI and NoCkptI (both minimize the same
+/// T_R-dependent fraction of the waste — §3.3).
+pub fn tr_extr_window(sc: &Scenario) -> f64 {
+    let pf = &sc.platform;
+    let (p, r) = (sc.predictor.precision, sc.predictor.recall);
+    let (i, e) = (sc.predictor.window, sc.e_if());
+    let num = 2.0
+        * pf.c
+        * (p * pf.mu
+            - (p * (pf.d + pf.r) + r * (pf.cp + ((1.0 - p) * i + p * e))));
+    let den = p * (1.0 - r);
+    guard_tr(safe_sqrt(num / den), pf)
+}
+
+/// §3.4: `T_R^extr` for Instant (window-exposure terms drop out).
+pub fn tr_extr_instant(sc: &Scenario) -> f64 {
+    let pf = &sc.platform;
+    let (p, r) = (sc.predictor.precision, sc.predictor.recall);
+    let e = sc.e_if();
+    let num = 2.0
+        * pf.c
+        * (p * pf.mu - (p * (pf.d + pf.r) + r * pf.cp + p * r * e));
+    let den = p * (1.0 - r);
+    guard_tr(safe_sqrt(num / den), pf)
+}
+
+/// The paper's guard: `T_R` must always exceed `C`.  We clamp to `1.1 C`
+/// (a period equal to C does no work at all); callers that want the pure
+/// formula use the `*_raw` value before the guard.
+fn guard_tr(tr: f64, p: &Platform) -> f64 {
+    if !tr.is_finite() {
+        return 1.1 * p.c;
+    }
+    tr.max(1.1 * p.c)
+}
+
+fn safe_sqrt(x: f64) -> f64 {
+    if x > 0.0 {
+        x.sqrt()
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec, Scenario};
+    use crate::model::waste;
+    use crate::sim::distribution::Law;
+
+    fn sc(mu: f64, cp: f64, p: f64, r: f64, i: f64) -> Scenario {
+        Scenario {
+            platform: Platform { mu, c: 600.0, cp, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec { recall: r, precision: p, window: i },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 1e7,
+        }
+    }
+
+    #[test]
+    fn young_daly_hand_values() {
+        let p = Platform { mu: 60_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 };
+        assert!((young_period(&p) - ((2.0 * 60_000.0 * 600.0f64).sqrt() + 600.0)).abs() < 1e-9);
+        assert!(daly_period(&p) > young_period(&p)); // μ+R > μ
+    }
+
+    #[test]
+    fn rfo_minimizes_eq3_on_grid() {
+        let s = sc(60_000.0, 600.0, 0.82, 0.85, 600.0);
+        let opt = rfo_period(&s.platform);
+        let w_opt = waste::q0(&s, opt);
+        let mut best = f64::INFINITY;
+        let mut best_tr = 0.0;
+        for k in 1..2000 {
+            let tr = 610.0 + k as f64 * 25.0;
+            let w = waste::q0(&s, tr);
+            if w < best {
+                best = w;
+                best_tr = tr;
+            }
+        }
+        assert!(w_opt <= best + 1e-6, "formula {w_opt} vs grid {best}");
+        assert!((best_tr - opt).abs() / opt < 0.05, "{best_tr} vs {opt}");
+    }
+
+    #[test]
+    fn tr_extr_window_minimizes_eq10_on_grid() {
+        let s = sc(60_000.0, 600.0, 0.82, 0.85, 1200.0);
+        let opt = tr_extr_window(&s);
+        let w_opt = waste::nockpt(&s, opt);
+        for k in 1..3000 {
+            let tr = 610.0 + k as f64 * 20.0;
+            assert!(
+                waste::nockpt(&s, tr) >= w_opt - 1e-9,
+                "tr {tr} beats formula optimum {opt}"
+            );
+        }
+    }
+
+    #[test]
+    fn tr_extr_instant_minimizes_eq14_on_grid() {
+        let s = sc(60_000.0, 1200.0, 0.4, 0.7, 900.0);
+        let opt = tr_extr_instant(&s);
+        let w_opt = waste::instant(&s, opt);
+        for k in 1..3000 {
+            let tr = 610.0 + k as f64 * 20.0;
+            assert!(waste::instant(&s, tr) >= w_opt - 1e-9);
+        }
+    }
+
+    #[test]
+    fn tp_extr_minimizes_eq4_within_bounds() {
+        let s = sc(60_000.0, 60.0, 0.82, 0.85, 3000.0);
+        let tp_opt = tp_extr(&s);
+        assert!(tp_opt >= s.platform.cp && tp_opt <= s.predictor.window);
+        let tr = tr_extr_window(&s);
+        let w_opt = waste::withckpt(&s, tr, tp_opt);
+        let mut tp = s.platform.cp + 1.0;
+        while tp < s.predictor.window {
+            assert!(waste::withckpt(&s, tr, tp) >= w_opt - 1e-9, "tp {tp}");
+            tp += 10.0;
+        }
+    }
+
+    #[test]
+    fn recall_zero_gives_rfo_period() {
+        // Paper: "when r=0 ... we obtain the same period than without a
+        // predictor".
+        let s = sc(60_000.0, 600.0, 0.82, 0.0, 600.0);
+        let a = tr_extr_window(&s);
+        let b = rfo_period(&s.platform);
+        assert!((a - b).abs() / b < 1e-9, "{a} vs {b}");
+    }
+
+    #[test]
+    fn guards_hold_in_degenerate_regimes() {
+        // Tiny MTBF: formulas go imaginary; the guard must keep T_R > C.
+        let s = sc(700.0, 1200.0, 0.4, 0.7, 3000.0);
+        for tr in [
+            rfo_period(&s.platform),
+            tr_extr_window(&s),
+            tr_extr_instant(&s),
+        ] {
+            assert!(tr > s.platform.c, "{tr}");
+            assert!(tr.is_finite());
+        }
+    }
+}

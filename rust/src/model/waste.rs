@@ -1,0 +1,172 @@
+//! Closed-form waste expressions — Eqs. (3), (4), (10), (14).
+//!
+//! All functions take the scenario (platform + predictor) and the candidate
+//! period(s); they return the *raw* formula value.  [`waste_clipped`]
+//! applies the clipping used by the Pallas kernel (`[0,1]`, invalid period
+//! ⇒ 1) so the two implementations are bit-comparable.
+
+use crate::config::Scenario;
+
+/// Eq. (3): waste of periodic checkpointing with predictions ignored
+/// (q = 0) — also the sanity-check limit of all three strategies.
+pub fn q0(sc: &Scenario, tr: f64) -> f64 {
+    let p = &sc.platform;
+    1.0 - (1.0 - p.c / tr) * (1.0 - (tr / 2.0 + p.d + p.r) / p.mu)
+}
+
+/// Eq. (14): waste of Instant with q = 1.
+pub fn instant(sc: &Scenario, tr: f64) -> f64 {
+    let pf = &sc.platform;
+    let (p, r) = (sc.predictor.precision, sc.predictor.recall);
+    let e = sc.e_if();
+    let inner = (p * (pf.d + pf.r)
+        + r * pf.cp
+        + (1.0 - r) * p * tr / 2.0
+        + p * r * e)
+        / (p * pf.mu);
+    1.0 - (1.0 - pf.c / tr) * (1.0 - inner)
+}
+
+/// Eq. (10): waste of NoCkptI with q = 1.
+pub fn nockpt(sc: &Scenario, tr: f64) -> f64 {
+    let pf = &sc.platform;
+    let (p, r) = (sc.predictor.precision, sc.predictor.recall);
+    let (i, e) = (sc.predictor.window, sc.e_if());
+    let head = (r / (p * pf.mu)) * (1.0 - p) * i;
+    let inner = (p * (pf.d + pf.r)
+        + r * pf.cp
+        + (1.0 - r) * p * tr / 2.0
+        + r * ((1.0 - p) * i + p * e))
+        / (p * pf.mu);
+    1.0 - head - (1.0 - pf.c / tr) * (1.0 - inner)
+}
+
+/// Eq. (4): waste of WithCkptI with q = 1, for proactive period `tp`.
+pub fn withckpt(sc: &Scenario, tr: f64, tp: f64) -> f64 {
+    let pf = &sc.platform;
+    let (p, r) = (sc.predictor.precision, sc.predictor.recall);
+    let (i, e) = (sc.predictor.window, sc.e_if());
+    let head = (r / (p * pf.mu))
+        * (1.0 - pf.cp / tp)
+        * ((1.0 - p) * i + p * (e - tp));
+    let inner = (p * (pf.d + pf.r)
+        + r * pf.cp
+        + (1.0 - r) * p * tr / 2.0
+        + r * ((1.0 - p) * i + p * e))
+        / (p * pf.mu);
+    1.0 - head - (1.0 - pf.c / tr) * (1.0 - inner)
+}
+
+/// Strategy index used by the waste-grid artifact (must match
+/// `python/compile/kernels/ref.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridStrategy {
+    Q0 = 0,
+    Instant = 1,
+    NoCkpt = 2,
+    WithCkpt = 3,
+}
+
+/// The kernel-compatible clipped waste: `clip(w, 0, 1)`, and 1.0 whenever
+/// `tr <= C`.  WithCkpt uses `T_P = clamp(T_P^extr, Cp, max(Cp, I))`.
+pub fn waste_clipped(sc: &Scenario, strat: GridStrategy, tr: f64) -> f64 {
+    if tr <= sc.platform.c {
+        return 1.0;
+    }
+    let raw = match strat {
+        GridStrategy::Q0 => q0(sc, tr),
+        GridStrategy::Instant => instant(sc, tr),
+        GridStrategy::NoCkpt => nockpt(sc, tr),
+        GridStrategy::WithCkpt => {
+            withckpt(sc, tr, super::optimal::tp_extr(sc))
+        }
+    };
+    raw.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec, Scenario};
+    use crate::sim::distribution::Law;
+
+    fn sc(mu: f64, cp: f64, p: f64, r: f64, i: f64) -> Scenario {
+        Scenario {
+            platform: Platform { mu, c: 600.0, cp, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec { recall: r, precision: p, window: i },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 1e7,
+        }
+    }
+
+    #[test]
+    fn q0_hand_computed() {
+        // mu = 60000, C = 600, D+R = 660, T = 6000:
+        // waste = 1 - (1 - 0.1)(1 - 3660/60000) = 1 - 0.9*0.939 = 0.1549
+        let s = sc(60_000.0, 600.0, 0.82, 0.85, 600.0);
+        let w = q0(&s, 6000.0);
+        assert!((w - 0.1549).abs() < 1e-4, "{w}");
+    }
+
+    #[test]
+    fn recall_zero_reduces_to_q0() {
+        // With r = 0 predictions never fire: all q=1 wastes must equal
+        // Eq. (3) (the paper notes this for Eq. (6); it holds for the
+        // waste too because every prediction-dependent term carries r).
+        let s = sc(60_000.0, 600.0, 0.82, 0.0, 600.0);
+        for tr in [2000.0, 6000.0, 20_000.0] {
+            let w0 = q0(&s, tr);
+            assert!((instant(&s, tr) - w0).abs() < 1e-12);
+            assert!((nockpt(&s, tr) - w0).abs() < 1e-12);
+            assert!((withckpt(&s, tr, 500.0) - w0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn instant_is_nockpt_without_window_terms() {
+        // Eq. (14) = Eq. (10) with the two (1-p)I "window exposure" terms
+        // removed; for I -> 0 they must coincide.
+        let s = sc(60_000.0, 600.0, 0.82, 0.85, 0.0);
+        for tr in [2000.0, 6000.0] {
+            assert!((instant(&s, tr) - nockpt(&s, tr)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn larger_window_increases_nockpt_waste() {
+        let tr = 6000.0;
+        let w_small = nockpt(&sc(60_000.0, 600.0, 0.82, 0.85, 300.0), tr);
+        let w_large = nockpt(&sc(60_000.0, 600.0, 0.82, 0.85, 3000.0), tr);
+        assert!(w_large > w_small);
+    }
+
+    #[test]
+    fn withckpt_beats_nockpt_for_large_window_cheap_cp() {
+        // Large window + cheap proactive checkpoints: checkpointing inside
+        // the window pays off (paper §4.2).
+        let s = sc(60_000.0, 60.0, 0.82, 0.85, 3000.0);
+        let tr = 6000.0;
+        let tp = crate::model::optimal::tp_extr(&s);
+        assert!(withckpt(&s, tr, tp) < nockpt(&s, tr));
+    }
+
+    #[test]
+    fn nockpt_beats_withckpt_for_small_window() {
+        // I barely above Cp: WithCkpt spends the window checkpointing.
+        let s = sc(60_000.0, 600.0, 0.82, 0.85, 700.0);
+        let tr = 6000.0;
+        let tp = crate::model::optimal::tp_extr(&s);
+        assert!(withckpt(&s, tr, tp) >= nockpt(&s, tr) - 1e-9);
+    }
+
+    #[test]
+    fn clipped_matches_kernel_semantics() {
+        let s = sc(60_000.0, 600.0, 0.82, 0.85, 600.0);
+        assert_eq!(waste_clipped(&s, GridStrategy::Q0, 600.0), 1.0);
+        assert_eq!(waste_clipped(&s, GridStrategy::Q0, 100.0), 1.0);
+        let w = waste_clipped(&s, GridStrategy::Q0, 6000.0);
+        assert!(w > 0.0 && w < 1.0);
+    }
+}

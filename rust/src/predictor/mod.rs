@@ -1,0 +1,182 @@
+//! Fault-predictor simulation for the *online* coordinator.
+//!
+//! The trace module (`sim::trace`) generates merged event streams for the
+//! discrete-event simulator.  The coordinator, by contrast, runs a real
+//! workload in scaled wall-clock time and needs the predictor as an online
+//! component: given the (secret) schedule of injected faults, emit the
+//! prediction feed the application would observe — true predictions for a
+//! `recall` fraction of faults (window placed so the fault is uniform
+//! inside it), plus false predictions at rate `1/μ_false`, each announced
+//! `C_p` (lead time) before its window opens.
+//!
+//! Table 6 presets from the paper's related-work survey are provided for
+//! the predictor-sweep example.
+
+use crate::config::PredictorSpec;
+use crate::sim::distribution::{Distribution, Law};
+use crate::sim::rng::Rng;
+
+/// One announced prediction, in simulated seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Announcement {
+    /// When the application learns of the prediction.
+    pub notify_t: f64,
+    pub window_start: f64,
+    pub window_end: f64,
+    /// Metadata for scoring the predictor afterwards (not visible to the
+    /// checkpointing policy).
+    pub true_positive: bool,
+}
+
+/// Generate the prediction feed for a known fault schedule on `[0, horizon)`.
+///
+/// Returns announcements sorted by `notify_t`.  Predicted faults whose
+/// notification would fall before t = 0 are silently dropped (equivalently
+/// reclassified as unpredicted, §2.2).
+pub fn feed(
+    faults: &[f64],
+    spec: &PredictorSpec,
+    cp: f64,
+    mu: f64,
+    false_pred_law: Law,
+    horizon: f64,
+    seed: u64,
+) -> Vec<Announcement> {
+    let mut rng = Rng::stream(seed, 0xfeed);
+    let mut out = Vec::new();
+    for &tf in faults {
+        if rng.bernoulli(spec.recall) {
+            let offset = rng.range(0.0, spec.window);
+            let ws = tf - offset;
+            if ws - cp >= 0.0 {
+                out.push(Announcement {
+                    notify_t: ws - cp,
+                    window_start: ws,
+                    window_end: ws + spec.window,
+                    true_positive: true,
+                });
+            }
+        }
+    }
+    if spec.recall > 0.0 && spec.precision < 1.0 {
+        let dist = Distribution::new(false_pred_law, spec.mu_false(mu));
+        let mut t = 0.0;
+        loop {
+            t += dist.sample(&mut rng);
+            if t >= horizon {
+                break;
+            }
+            if t - cp >= 0.0 {
+                out.push(Announcement {
+                    notify_t: t - cp,
+                    window_start: t,
+                    window_end: t + spec.window,
+                    true_positive: false,
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| a.notify_t.total_cmp(&b.notify_t));
+    out
+}
+
+/// Score a feed against the fault schedule: measured (recall, precision).
+pub fn score(faults: &[f64], feed: &[Announcement]) -> (f64, f64) {
+    if feed.is_empty() {
+        return (0.0, f64::NAN);
+    }
+    let covered = faults
+        .iter()
+        .filter(|&&tf| {
+            feed.iter()
+                .any(|a| a.true_positive && tf >= a.window_start && tf <= a.window_end)
+        })
+        .count();
+    let true_pos = feed.iter().filter(|a| a.true_positive).count();
+    (
+        covered as f64 / faults.len().max(1) as f64,
+        true_pos as f64 / feed.len() as f64,
+    )
+}
+
+/// Predictor characteristics surveyed in the paper's Table 6.
+/// (lead time, precision, recall, window size if known — windows the
+/// sources left unspecified are represented with the paper's test sizes.)
+pub fn table6_presets() -> Vec<(&'static str, PredictorSpec)> {
+    vec![
+        ("Zheng'10-300s", PredictorSpec { recall: 0.70, precision: 0.40, window: 300.0 }),
+        ("Zheng'10-600s", PredictorSpec { recall: 0.60, precision: 0.35, window: 600.0 }),
+        ("Yu'11-accurate", PredictorSpec { recall: 0.852, precision: 0.823, window: 600.0 }),
+        ("Yu'11-period", PredictorSpec { recall: 0.652, precision: 0.648, window: 600.0 }),
+        ("Gainaru'12", PredictorSpec { recall: 0.43, precision: 0.93, window: 300.0 }),
+        ("Fulp'08", PredictorSpec { recall: 0.75, precision: 0.70, window: 600.0 }),
+        ("Liang'07-1h", PredictorSpec { recall: 0.30, precision: 0.20, window: 3600.0 }),
+        ("Liang'07-6h", PredictorSpec { recall: 0.90, precision: 0.40, window: 21_600.0 }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> PredictorSpec {
+        PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 }
+    }
+
+    fn fault_schedule(n: usize, mean: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let d = Distribution::new(Law::Exponential, mean);
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += d.sample(&mut rng);
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn feed_sorted_and_windows_well_formed() {
+        let faults = fault_schedule(500, 1000.0, 1);
+        let horizon = faults.last().unwrap() + 1000.0;
+        let f = feed(&faults, &spec(), 60.0, 1000.0, Law::Exponential, horizon, 2);
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[0].notify_t <= w[1].notify_t);
+        }
+        for a in &f {
+            assert!((a.window_end - a.window_start - 600.0).abs() < 1e-9);
+            assert!((a.window_start - a.notify_t - 60.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn measured_recall_precision_near_spec() {
+        let faults = fault_schedule(4000, 5000.0, 3);
+        let horizon = faults.last().unwrap() + 1000.0;
+        let f = feed(&faults, &spec(), 60.0, 5000.0, Law::Exponential, horizon, 4);
+        let (recall, precision) = score(&faults, &f);
+        assert!((recall - 0.85).abs() < 0.05, "recall {recall}");
+        assert!((precision - 0.82).abs() < 0.05, "precision {precision}");
+    }
+
+    #[test]
+    fn perfect_predictor_yields_no_false_positives() {
+        let faults = fault_schedule(100, 1000.0, 5);
+        let horizon = faults.last().unwrap() + 1000.0;
+        let mut s = spec();
+        s.precision = 1.0;
+        s.recall = 1.0;
+        let f = feed(&faults, &s, 60.0, 1000.0, Law::Exponential, horizon, 6);
+        assert!(f.iter().all(|a| a.true_positive));
+    }
+
+    #[test]
+    fn table6_presets_sane() {
+        for (name, p) in table6_presets() {
+            assert!(p.recall > 0.0 && p.recall <= 1.0, "{name}");
+            assert!(p.precision > 0.0 && p.precision <= 1.0, "{name}");
+            assert!(p.window > 0.0, "{name}");
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! `make artifacts` runs the Python compile path once
+//! (`python/compile/aot.py`), producing `artifacts/*.hlo.txt` and
+//! `artifacts/manifest.json`.  This module is the only bridge between the
+//! Rust coordinator and those artifacts: it loads the HLO **text** with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and memoizes the loaded executables.  Python never runs at request time.
+//!
+//! Submodules:
+//! * [`waste_grid`] — the analytic waste-surface offload (BestPeriod search
+//!   accelerator);
+//! * [`train`] — the transformer-LM training-step driver used as the real
+//!   workload of the end-to-end checkpointing example.
+
+pub mod train;
+pub mod waste_grid;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonio;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Scenario batch of the waste-grid artifact.
+    pub waste_batch: usize,
+    /// Period-grid width of the waste-grid artifact.
+    pub waste_grid: usize,
+    /// Flat parameter count of the transformer model.
+    pub param_count: usize,
+    /// Model batch size (sequences per training step).
+    pub batch: usize,
+    /// Model sequence length.
+    pub seq_len: usize,
+    /// Model vocabulary size (byte-level: 256).
+    pub vocab: usize,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = jsonio::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let field = |obj: &jsonio::Value, key: &str| -> Result<usize> {
+            obj.get(key)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing {key}"))
+        };
+        let wg = v
+            .get("waste_grid")
+            .ok_or_else(|| anyhow!("manifest missing waste_grid"))?;
+        let model = v
+            .get("model")
+            .ok_or_else(|| anyhow!("manifest missing model"))?;
+        Ok(Manifest {
+            waste_batch: field(wg, "batch")?,
+            waste_grid: field(wg, "grid")?,
+            param_count: field(&v, "param_count")?,
+            batch: field(model, "batch")?,
+            seq_len: field(model, "seq_len")?,
+            vocab: field(model, "vocab")?,
+        })
+    }
+}
+
+/// The PJRT client plus a compile cache over the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`) and start a CPU
+    /// PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Locate the artifact directory by walking up from `cwd` (so tests,
+    /// examples and benches work from any subdirectory).
+    pub fn discover() -> Result<Self> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Runtime::open(cand);
+            }
+            if !dir.pop() {
+                return Err(anyhow!(
+                    "no artifacts/manifest.json found; run `make artifacts`"
+                ));
+            }
+        }
+    }
+
+    /// True if the artifacts exist (used by tests to skip gracefully).
+    pub fn artifacts_present() -> bool {
+        let mut dir = match std::env::current_dir() {
+            Ok(d) => d,
+            Err(_) => return false,
+        };
+        loop {
+            if dir.join("artifacts/manifest.json").exists() {
+                return true;
+            }
+            if !dir.pop() {
+                return false;
+            }
+        }
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest entry name (memoized).
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact whose lowered function returns a tuple, and
+    /// decompose the tuple into literals.
+    pub fn execute_tuple(
+        &self,
+        name: &str,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let outs = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+}

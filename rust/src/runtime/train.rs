@@ -1,0 +1,100 @@
+//! Training-step driver: the *real workload* checkpointed by the
+//! end-to-end coordinator example.
+//!
+//! The transformer's entire state is one flat `f32[P]` vector `theta`
+//! (see `python/compile/model.py`), so a checkpoint is literally a copy of
+//! that vector — the coordinator serializes it through
+//! [`crate::coordinator::checkpoint`].  The driver keeps `theta` host-side
+//! between steps; each step uploads it, executes the AOT-compiled
+//! fwd+bwd+SGD graph, and downloads the updated vector plus the loss.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+
+/// Stateful trainer over the `train_step` / `eval_loss` artifacts.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    theta: Vec<f32>,
+    pub steps_run: u64,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialize parameters via the `init_params` artifact (seeded — the
+    /// run is bit-reproducible).
+    pub fn new(rt: &'rt Runtime, seed: u32) -> Result<Self> {
+        let outs = rt.execute_tuple("init_params", &[xla::Literal::from(seed)])?;
+        let theta: Vec<f32> =
+            outs[0].to_vec().map_err(|e| anyhow!("init theta: {e:?}"))?;
+        if theta.len() != rt.manifest.param_count {
+            return Err(anyhow!(
+                "init produced {} params, manifest says {}",
+                theta.len(),
+                rt.manifest.param_count
+            ));
+        }
+        Ok(Trainer { rt, theta, steps_run: 0 })
+    }
+
+    /// Number of tokens one step consumes (batch × seq_len).
+    pub fn tokens_per_step(&self) -> usize {
+        self.rt.manifest.batch * self.rt.manifest.seq_len
+    }
+
+    /// Execute one training step; `tokens` must be `batch*seq_len` i32s in
+    /// `[0, vocab)`.  Returns the loss.
+    pub fn step(&mut self, tokens: &[i32], lr: f32) -> Result<f32> {
+        let m = &self.rt.manifest;
+        if tokens.len() != m.batch * m.seq_len {
+            return Err(anyhow!(
+                "expected {} tokens, got {}",
+                m.batch * m.seq_len,
+                tokens.len()
+            ));
+        }
+        let theta_lit = xla::Literal::vec1(&self.theta);
+        let tok_lit = xla::Literal::vec1(tokens)
+            .reshape(&[m.batch as i64, m.seq_len as i64])
+            .map_err(|e| anyhow!("reshape tokens: {e:?}"))?;
+        let outs = self.rt.execute_tuple(
+            "train_step",
+            &[theta_lit, tok_lit, xla::Literal::from(lr)],
+        )?;
+        self.theta = outs[0].to_vec().map_err(|e| anyhow!("theta': {e:?}"))?;
+        let loss: Vec<f32> =
+            outs[1].to_vec().map_err(|e| anyhow!("loss: {e:?}"))?;
+        self.steps_run += 1;
+        Ok(loss[0])
+    }
+
+    /// Evaluate the loss without updating parameters.
+    pub fn eval(&self, tokens: &[i32]) -> Result<f32> {
+        let m = &self.rt.manifest;
+        let theta_lit = xla::Literal::vec1(&self.theta);
+        let tok_lit = xla::Literal::vec1(tokens)
+            .reshape(&[m.batch as i64, m.seq_len as i64])
+            .map_err(|e| anyhow!("reshape tokens: {e:?}"))?;
+        let outs = self.rt.execute_tuple("eval_loss", &[theta_lit, tok_lit])?;
+        let loss: Vec<f32> =
+            outs[0].to_vec().map_err(|e| anyhow!("loss: {e:?}"))?;
+        Ok(loss[0])
+    }
+
+    /// Snapshot the full model state (this IS the checkpoint payload).
+    pub fn snapshot(&self) -> Vec<f32> {
+        self.theta.clone()
+    }
+
+    /// Restore model state from a checkpoint payload.
+    pub fn restore(&mut self, theta: Vec<f32>) -> Result<()> {
+        if theta.len() != self.rt.manifest.param_count {
+            return Err(anyhow!(
+                "checkpoint has {} params, manifest says {}",
+                theta.len(),
+                self.rt.manifest.param_count
+            ));
+        }
+        self.theta = theta;
+        Ok(())
+    }
+}

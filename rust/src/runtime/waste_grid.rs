@@ -1,0 +1,120 @@
+//! Waste-surface offload: evaluate the four closed-form wastes for a batch
+//! of scenarios over a period grid with ONE artifact execution.
+//!
+//! The artifact has fixed shapes (`B = manifest.waste_batch` scenarios ×
+//! `G = manifest.waste_grid` periods); this wrapper pads/chunks arbitrary
+//! inputs to those shapes.  Padded scenario rows replicate the first row;
+//! padded grid points use a large valid period — both are simply discarded
+//! on the way out.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Scenario;
+use crate::model::waste::GridStrategy;
+use crate::runtime::Runtime;
+
+/// Strategy count of the artifact output (matches `ref.N_STRATEGIES`).
+pub const N_STRATEGIES: usize = 4;
+
+/// Pack a scenario into the kernel's parameter-row layout
+/// (see `python/compile/kernels/ref.py`).
+pub fn scenario_row(sc: &Scenario) -> [f32; 10] {
+    [
+        sc.platform.mu as f32,
+        sc.platform.c as f32,
+        sc.platform.cp as f32,
+        sc.platform.d as f32,
+        sc.platform.r as f32,
+        sc.predictor.precision as f32,
+        sc.predictor.recall as f32,
+        sc.predictor.window as f32,
+        sc.e_if() as f32,
+        0.0,
+    ]
+}
+
+/// Waste surfaces for one scenario: `out[strategy][grid_point]`.
+pub type Surface = [Vec<f32>; N_STRATEGIES];
+
+impl Runtime {
+    /// Evaluate waste surfaces for all `scenarios` over the shared period
+    /// grid `tr`.  Returns one [`Surface`] per scenario.
+    pub fn waste_surfaces(
+        &self,
+        scenarios: &[Scenario],
+        tr: &[f64],
+    ) -> Result<Vec<Surface>> {
+        if scenarios.is_empty() || tr.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = self.manifest.waste_batch;
+        let g = self.manifest.waste_grid;
+        if tr.len() > g {
+            return Err(anyhow!(
+                "grid of {} exceeds artifact capacity {g}; chunk the sweep",
+                tr.len()
+            ));
+        }
+
+        // Pad the period grid with a large valid period.
+        let pad_tr = tr.iter().copied().fold(f64::MIN, f64::max) * 2.0 + 1e4;
+        let mut tr_f32: Vec<f32> = tr.iter().map(|&t| t as f32).collect();
+        tr_f32.resize(g, pad_tr as f32);
+        let tr_lit = xla::Literal::vec1(&tr_f32);
+
+        let mut out = Vec::with_capacity(scenarios.len());
+        for chunk in scenarios.chunks(b) {
+            let mut rows = Vec::with_capacity(b * 10);
+            for sc in chunk {
+                rows.extend_from_slice(&scenario_row(sc));
+            }
+            // Pad the batch by replicating the first row.
+            for _ in chunk.len()..b {
+                rows.extend_from_slice(&scenario_row(&chunk[0]));
+            }
+            let params = xla::Literal::vec1(&rows)
+                .reshape(&[b as i64, 10])
+                .map_err(|e| anyhow!("reshape params: {e:?}"))?;
+            let outs = self.execute_tuple("waste_grid", &[params, tr_lit.clone()])?;
+            let flat: Vec<f32> = outs[0]
+                .to_vec()
+                .map_err(|e| anyhow!("waste output: {e:?}"))?;
+            debug_assert_eq!(flat.len(), b * N_STRATEGIES * g);
+            for (bi, _) in chunk.iter().enumerate() {
+                let mut surface: Surface = Default::default();
+                for (si, row) in surface.iter_mut().enumerate() {
+                    let base = bi * N_STRATEGIES * g + si * g;
+                    row.extend_from_slice(&flat[base..base + tr.len()]);
+                }
+                out.push(surface);
+            }
+        }
+        Ok(out)
+    }
+
+    /// PJRT-accelerated analytic BestPeriod: argmin over the grid, for each
+    /// strategy.  Returns `(best_tr, best_waste)` per strategy index
+    /// (ordering = [`GridStrategy`]).
+    pub fn best_periods(
+        &self,
+        sc: &Scenario,
+        tr: &[f64],
+    ) -> Result<[(f64, f64); N_STRATEGIES]> {
+        let surfaces = self.waste_surfaces(std::slice::from_ref(sc), tr)?;
+        let surface = &surfaces[0];
+        let mut best = [(0.0f64, f64::INFINITY); N_STRATEGIES];
+        for (si, row) in surface.iter().enumerate() {
+            for (gi, &w) in row.iter().enumerate() {
+                if (w as f64) < best[si].1 {
+                    best[si] = (tr[gi], w as f64);
+                }
+            }
+        }
+        Ok(best)
+    }
+}
+
+/// Map a [`GridStrategy`] to its row index in a [`Surface`].
+pub fn strategy_index(s: GridStrategy) -> usize {
+    s as usize
+}

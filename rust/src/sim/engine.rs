@@ -1,0 +1,704 @@
+//! The two-mode (regular / proactive) checkpoint scheduling simulator.
+//!
+//! This is a faithful discrete-event implementation of the paper's
+//! framework (§2) and of Algorithm 1 (WithCkptI), with the Instant and
+//! NoCkptI variants and the prediction-ignoring (q = 0) mode:
+//!
+//! * **Regular mode** — periodic checkpointing with period `T_R`: work
+//!   `T_R - C`, checkpoint `C`, repeat.
+//! * On a trusted prediction with window `[t0, t0+I]` (announced at
+//!   `t0 - C_p`): interrupt the period, take a proactive checkpoint during
+//!   `[t0 - C_p, t0]`, then
+//!   * **Instant** — return to regular mode at `t0`;
+//!   * **NoCkptI** — work without checkpointing until `t0 + I`;
+//!   * **WithCkptI** — loop "work `T_P - C_p`, checkpoint `C_p`" while in
+//!     proactive mode for less than `I` (Algorithm 1 lines 16–17);
+//!   and then resume the interrupted period.
+//! * A fault loses all work since the last *completed* checkpoint, costs
+//!   downtime `D` + recovery `R` (faults during D+R restart it), and drops
+//!   the engine back into regular mode with a fresh period.
+//! * If a *regular* checkpoint is in progress when a trusted prediction is
+//!   announced, there is no time for it to complete before the proactive
+//!   action: it is aborted and its elapsed time accounted as idle (the
+//!   paper's "no time for the extra checkpoint" case, accounted as idle
+//!   time in the waste).
+//! * Predictions announced while the engine is not in regular mode
+//!   (proactive sequence, downtime) are ignored — the paper's analysis
+//!   assumes at most one event per interval; the simulator, like the
+//!   paper's, resolves overlaps by ignoring the later prediction.
+//!
+//! The job completes the instant the cumulative useful work reaches
+//! `Time_base` (`job_size`); no terminal checkpoint is required.
+
+use crate::config::Scenario;
+use crate::sim::timeline::{Span, Timeline};
+use crate::sim::trace::{Event, EventSource, Prediction, TraceStream};
+use crate::strategy::{Policy, PolicyKind};
+
+/// Statistics of one simulated execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimOutcome {
+    /// Total wall-clock time to complete the job (s).
+    pub makespan: f64,
+    /// Useful work completed (== scenario.job_size on success).
+    pub job_size: f64,
+    /// Faults that struck (any kind).
+    pub n_faults: u64,
+    /// Faults that struck and were covered by a prediction (trace metadata).
+    pub n_predicted_faults: u64,
+    /// Prediction announcements seen (true + false).
+    pub n_preds_seen: u64,
+    /// Predictions acted upon (proactive sequence started).
+    pub n_preds_trusted: u64,
+    /// Predictions ignored because the engine was busy (overlap) — q=1 only.
+    pub n_preds_overlapped: u64,
+    /// Completed regular checkpoints.
+    pub n_reg_ckpts: u64,
+    /// Completed proactive checkpoints (pre-window + in-window).
+    pub n_pro_ckpts: u64,
+    /// Regular checkpoints aborted by a trusted prediction.
+    pub n_ckpts_aborted: u64,
+    /// Work destroyed by faults (s).
+    pub work_lost: f64,
+    /// Time spent in completed checkpoints (s).
+    pub time_ckpt: f64,
+    /// Time spent in downtime + recovery (s).
+    pub time_down: f64,
+    /// Time wasted in aborted checkpoints (accounted as idle, §3.1).
+    pub time_idle: f64,
+    /// Trace events consumed.
+    pub events: u64,
+}
+
+impl SimOutcome {
+    /// WASTE = (Time_final - Time_base) / Time_final (§2.1).
+    pub fn waste(&self) -> f64 {
+        (self.makespan - self.job_size) / self.makespan
+    }
+}
+
+/// Outcome of advancing through one activity segment.
+enum Seg {
+    /// Reached the segment end.
+    Completed,
+    /// The job's last unit of work completed (work segments only).
+    JobDone,
+    /// A fault struck (engine time advanced to the strike instant).
+    Fault,
+    /// A prediction was announced (only when `listen` was set).
+    Notify(Prediction),
+}
+
+struct Engine<'a, S: EventSource> {
+    sc: &'a Scenario,
+    pol: &'a Policy,
+    /// Probability of trusting each prediction (the paper's q, §3.1).
+    trust_prob: f64,
+    /// Dedicated stream for the q coin-flips (keeps traces unchanged).
+    rng_q: crate::sim::rng::Rng,
+    /// Abandon the run once simulated time exceeds this (waste ≈ 1 regime;
+    /// used by the BestPeriod search to skip hopeless candidates cheaply).
+    t_cap: f64,
+    /// Optional span recorder (see [`crate::sim::timeline`]).
+    timeline: Option<Timeline>,
+    stream: S,
+    next_ev: Event,
+    t: f64,
+    /// Work secured by the last completed checkpoint.
+    saved: f64,
+    /// Work done since the last completed checkpoint (lost on fault).
+    unsaved: f64,
+    /// Work remaining in the current regular period before its checkpoint.
+    period_rem: f64,
+    done: bool,
+    out: SimOutcome,
+}
+
+/// Simulate one execution of `policy` under `scenario` with the fault and
+/// prediction trace fixed by `seed`.  The same (scenario, seed) pair yields
+/// the same trace for every policy, enabling paired comparisons.
+pub fn simulate(scenario: &Scenario, policy: &Policy, seed: u64) -> SimOutcome {
+    simulate_q(scenario, policy, 1.0, seed)
+}
+
+/// [`simulate`] plus a full execution [`Timeline`] (span-by-span record of
+/// the scheduler's decisions; see `sim::timeline`).
+pub fn simulate_traced(
+    scenario: &Scenario,
+    policy: &Policy,
+    seed: u64,
+) -> (SimOutcome, Timeline) {
+    policy.validate(scenario);
+    let mut stream = TraceStream::new(scenario, seed);
+    let next_ev = EventSource::next_event(&mut stream);
+    let work_quantum = policy.tr - scenario.platform.c;
+    let mut eng = Engine {
+        sc: scenario,
+        pol: policy,
+        trust_prob: 1.0,
+        rng_q: crate::sim::rng::Rng::stream(seed, 0x7125_7),
+        t_cap: f64::INFINITY,
+        timeline: Some(Timeline::default()),
+        stream,
+        next_ev,
+        t: 0.0,
+        saved: 0.0,
+        unsaved: 0.0,
+        period_rem: work_quantum,
+        done: false,
+        out: SimOutcome::default(),
+    };
+    eng.run();
+    eng.out.makespan = eng.t;
+    eng.out.job_size = scenario.job_size;
+    (eng.out, eng.timeline.unwrap())
+}
+
+/// Like [`simulate`], but each prediction is trusted only with probability
+/// `q` (§3.1's randomized-trust scheme).  `q = 1` is the paper's q=1
+/// strategies; `q = 0` behaves like `PolicyKind::IgnorePredictions`.  The
+/// paper proves analytically that the optimum is always at q ∈ {0, 1};
+/// `tests/prop.rs` verifies this by simulation.
+pub fn simulate_q(
+    scenario: &Scenario,
+    policy: &Policy,
+    q: f64,
+    seed: u64,
+) -> SimOutcome {
+    assert!((0.0..=1.0).contains(&q));
+    let stream = TraceStream::new(scenario, seed);
+    simulate_from(scenario, policy, q, seed, stream)
+}
+
+/// Run the engine against any [`EventSource`] — e.g. a
+/// [`crate::sim::trace::Replay`] cursor over a memoized trace, which the
+/// BestPeriod search uses to amortize trace generation across candidate
+/// periods.  `seed` only seeds the q coin-flips here.
+pub fn simulate_from<S: EventSource>(
+    scenario: &Scenario,
+    policy: &Policy,
+    q: f64,
+    seed: u64,
+    stream: S,
+) -> SimOutcome {
+    simulate_from_capped(scenario, policy, q, seed, stream, f64::INFINITY)
+}
+
+/// [`simulate_from`] with a makespan cap: if simulated time exceeds `cap`
+/// before the job completes, the run is abandoned and the outcome reports
+/// the work actually completed (`job_size` = completed work, so `waste()`
+/// reflects the partial run).  Candidates whose waste is this bad lose any
+/// search; capping avoids simulating astronomically long makespans.
+pub fn simulate_from_capped<S: EventSource>(
+    scenario: &Scenario,
+    policy: &Policy,
+    q: f64,
+    seed: u64,
+    mut stream: S,
+    cap: f64,
+) -> SimOutcome {
+    policy.validate(scenario);
+    let next_ev = stream.next_event();
+    let work_quantum = policy.tr - scenario.platform.c;
+    let mut eng = Engine {
+        sc: scenario,
+        pol: policy,
+        trust_prob: q,
+        rng_q: crate::sim::rng::Rng::stream(seed, 0x7125_7),
+        t_cap: cap,
+        timeline: None,
+        stream,
+        next_ev,
+        t: 0.0,
+        saved: 0.0,
+        unsaved: 0.0,
+        period_rem: work_quantum,
+        done: false,
+        out: SimOutcome::default(),
+    };
+    eng.run();
+    eng.out.makespan = eng.t;
+    // Capped runs report the work actually completed so waste() is honest.
+    eng.out.job_size = if eng.done {
+        scenario.job_size
+    } else {
+        eng.saved + eng.unsaved
+    };
+    eng.out
+}
+
+impl<'a, S: EventSource> Engine<'a, S> {
+    fn listen(&self) -> bool {
+        !matches!(self.pol.kind, PolicyKind::IgnorePredictions)
+    }
+
+    /// Pop the next trace event.
+    fn bump_event(&mut self) {
+        self.out.events += 1;
+        self.next_ev = self.stream.next_event();
+    }
+
+    /// Advance from `self.t` to `end`, doing useful work iff `work`.
+    ///
+    /// Consumes every trace event with visible time < the stopping point:
+    /// faults always interrupt; predictions interrupt iff `listen`
+    /// (otherwise they are counted and dropped).
+    fn advance(&mut self, end: f64, work: bool, listen: bool) -> Seg {
+        loop {
+            // Time at which the job would complete within this segment.
+            let t_complete = if work {
+                self.t + (self.sc.job_size - self.saved - self.unsaved)
+            } else {
+                f64::INFINITY
+            };
+            let te = self.next_ev.time();
+            let stop = end.min(t_complete).min(te);
+            if work {
+                self.unsaved += stop - self.t;
+                if let Some(tl) = self.timeline.as_mut() {
+                    tl.push(Span::Work { start: self.t, end: stop });
+                }
+            }
+            self.t = stop;
+            if stop == t_complete && t_complete <= end && t_complete <= te {
+                self.done = true;
+                return Seg::JobDone;
+            }
+            if te <= end && stop == te {
+                // An event fires inside the segment.
+                let ev = self.next_ev;
+                match ev {
+                    Event::Fault { predicted, .. } => {
+                        self.bump_event();
+                        self.out.n_faults += 1;
+                        self.out.n_predicted_faults += predicted as u64;
+                        return Seg::Fault;
+                    }
+                    Event::Prediction(p) => {
+                        self.bump_event();
+                        self.out.n_preds_seen += 1;
+                        if listen {
+                            // §3.1: trust the predictor with probability q.
+                            if self.trust_prob >= 1.0
+                                || self.rng_q.bernoulli(self.trust_prob)
+                            {
+                                return Seg::Notify(p);
+                            }
+                            continue; // coin said ignore this one
+                        }
+                        if self.listen() {
+                            self.out.n_preds_overlapped += 1;
+                        }
+                        continue; // ignored; keep advancing
+                    }
+                }
+            }
+            return Seg::Completed;
+        }
+    }
+
+    /// Lose unsaved work, then serve downtime + recovery (restarted by any
+    /// fault that strikes during them).  Ends in regular mode with a fresh
+    /// period.
+    fn handle_fault(&mut self) {
+        if let Some(tl) = self.timeline.as_mut() {
+            tl.record_fault(self.t);
+        }
+        self.out.work_lost += self.unsaved;
+        self.unsaved = 0.0;
+        loop {
+            let start = self.t;
+            let end = self.t + self.sc.platform.d + self.sc.platform.r;
+            match self.advance(end, false, false) {
+                Seg::Completed => {
+                    self.out.time_down += self.t - start;
+                    if let Some(tl) = self.timeline.as_mut() {
+                        tl.push(Span::Down { start, end: self.t });
+                    }
+                    break;
+                }
+                Seg::Fault => {
+                    self.out.time_down += self.t - start;
+                    if let Some(tl) = self.timeline.as_mut() {
+                        tl.push(Span::Down { start, end: self.t });
+                        tl.record_fault(self.t);
+                    }
+                    continue; // restart D + R from the new strike
+                }
+                _ => unreachable!("no work, no listen during downtime"),
+            }
+        }
+        self.period_rem = self.pol.tr - self.sc.platform.c;
+    }
+
+    /// A completed checkpoint secures all work done so far.
+    fn commit_checkpoint(&mut self, duration: f64, proactive: bool) {
+        if let Some(tl) = self.timeline.as_mut() {
+            tl.push(Span::Ckpt {
+                start: self.t - duration,
+                end: self.t,
+                proactive,
+            });
+        }
+        self.saved += self.unsaved;
+        self.unsaved = 0.0;
+        self.out.time_ckpt += duration;
+        if proactive {
+            self.out.n_pro_ckpts += 1;
+        } else {
+            self.out.n_reg_ckpts += 1;
+        }
+    }
+
+    /// Serve a trusted prediction: proactive checkpoint before the window,
+    /// then the in-window behaviour of the policy.  Returns with the engine
+    /// back in regular mode (or `done`).
+    fn handle_prediction(&mut self, p: Prediction) {
+        self.out.n_preds_trusted += 1;
+        let cp = self.sc.platform.cp;
+
+        // 1. Proactive checkpoint during [t0 - Cp, t0].  (We are at t0 - Cp:
+        //    the notification time.)
+        let ck_start = self.t;
+        match self.advance(p.window_start, false, false) {
+            Seg::Completed => self.commit_checkpoint(cp, true),
+            Seg::Fault => {
+                // The checkpoint is destroyed; its partial time is idle and
+                // the prediction is stale.
+                self.out.time_idle += self.t - ck_start;
+                if let Some(tl) = self.timeline.as_mut() {
+                    tl.push(Span::Idle { start: ck_start, end: self.t });
+                }
+                self.handle_fault();
+                return;
+            }
+            _ => unreachable!(),
+        }
+
+        // 2. In-window behaviour.
+        match self.pol.kind {
+            PolicyKind::IgnorePredictions => unreachable!(),
+            PolicyKind::Instant => (), // straight back to regular mode
+            PolicyKind::NoCkpt => {
+                // Work without checkpointing until the window closes.
+                match self.advance(p.window_end, true, false) {
+                    Seg::Completed | Seg::JobDone => (),
+                    Seg::Fault => self.handle_fault(),
+                    Seg::Notify(_) => unreachable!(),
+                }
+            }
+            PolicyKind::WithCkpt => {
+                // Algorithm 1 lines 16–17: while in proactive mode (elapsed
+                // < I), work T_P - C_p then checkpoint C_p.  A started
+                // proactive period runs to completion even if it crosses
+                // t0 + I (the mode check happens at iteration boundaries).
+                while !self.done && self.t < p.window_end {
+                    let wend = self.t + (self.pol.tp - cp);
+                    match self.advance(wend, true, false) {
+                        Seg::Completed => (),
+                        Seg::JobDone => return,
+                        Seg::Fault => {
+                            self.handle_fault();
+                            return;
+                        }
+                        Seg::Notify(_) => unreachable!(),
+                    }
+                    let ck_start = self.t;
+                    let cend = self.t + cp;
+                    match self.advance(cend, false, false) {
+                        Seg::Completed => self.commit_checkpoint(cp, true),
+                        Seg::Fault => {
+                            self.out.time_idle += self.t - ck_start;
+                            if let Some(tl) = self.timeline.as_mut() {
+                                tl.push(Span::Idle {
+                                    start: ck_start,
+                                    end: self.t,
+                                });
+                            }
+                            self.handle_fault();
+                            return;
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Main loop: regular mode until the job completes.
+    fn run(&mut self) {
+        let c = self.sc.platform.c;
+        let listen = self.listen();
+        while !self.done {
+            if self.t >= self.t_cap {
+                return; // abandoned: hopeless-candidate cutoff
+            }
+            if self.period_rem > 1e-9 {
+                // Work phase of the regular period.
+                let t0 = self.t;
+                let end = self.t + self.period_rem;
+                let seg = self.advance(end, true, listen);
+                self.period_rem -= self.t - t0;
+                match seg {
+                    Seg::Completed => self.period_rem = 0.0,
+                    Seg::JobDone => return,
+                    Seg::Fault => self.handle_fault(),
+                    Seg::Notify(p) => self.handle_prediction(p),
+                }
+            } else {
+                // Checkpoint phase of the regular period.
+                let start = self.t;
+                let end = self.t + c;
+                match self.advance(end, false, listen) {
+                    Seg::Completed => {
+                        self.commit_checkpoint(c, false);
+                        self.period_rem = self.pol.tr - c;
+                    }
+                    Seg::Fault => {
+                        // Partial (destroyed) checkpoint time is idle.
+                        self.out.time_idle += self.t - start;
+                        if let Some(tl) = self.timeline.as_mut() {
+                            tl.push(Span::Idle { start, end: self.t });
+                        }
+                        self.handle_fault();
+                    }
+                    Seg::Notify(p) => {
+                        // No time to finish the regular checkpoint before
+                        // the proactive action: abort it (idle time).
+                        self.out.n_ckpts_aborted += 1;
+                        self.out.time_idle += self.t - start;
+                        if let Some(tl) = self.timeline.as_mut() {
+                            tl.push(Span::Idle { start, end: self.t });
+                        }
+                        self.handle_prediction(p);
+                        // period_rem stays 0: retake the checkpoint after.
+                    }
+                    Seg::JobDone => unreachable!("checkpoint does no work"),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec, Scenario};
+    use crate::sim::distribution::Law;
+
+    fn base_scenario() -> Scenario {
+        Scenario {
+            platform: Platform { mu: 50_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 1.0e6,
+        }
+    }
+
+    fn policy(kind: PolicyKind, tr: f64, tp: f64) -> Policy {
+        Policy { kind, tr, tp }
+    }
+
+    #[test]
+    fn fault_free_waste_equals_c_over_t() {
+        // With no faults and no predictions the waste is exactly C/T_R
+        // (§2.1), up to the truncated last period.
+        let mut sc = base_scenario();
+        sc.platform.mu = 1e15; // effectively fault-free
+        sc.predictor.recall = 0.0;
+        let pol = policy(PolicyKind::IgnorePredictions, 3600.0, 600.0);
+        let out = simulate(&sc, &pol, 1);
+        assert_eq!(out.n_faults, 0);
+        // n full periods of work 3000 + final partial work segment
+        let expected_ckpts = (sc.job_size / 3000.0).ceil() as u64 - 1;
+        assert_eq!(out.n_reg_ckpts, expected_ckpts);
+        let waste = out.waste();
+        let ideal = 600.0 / 3600.0;
+        assert!((waste - ideal).abs() < 1e-3, "waste {waste} vs {ideal}");
+    }
+
+    #[test]
+    fn work_conservation() {
+        let sc = base_scenario();
+        let pol = policy(PolicyKind::WithCkpt, 8000.0, 1000.0);
+        let out = simulate(&sc, &pol, 7);
+        // Makespan == job + checkpoints + downtime + idle + lost work.
+        let accounted = sc.job_size
+            + out.time_ckpt
+            + out.time_down
+            + out.time_idle
+            + out.work_lost;
+        assert!(
+            (out.makespan - accounted).abs() < 1e-6 * out.makespan,
+            "makespan {} vs accounted {accounted}",
+            out.makespan
+        );
+    }
+
+    #[test]
+    fn waste_in_unit_interval_and_makespan_exceeds_job() {
+        let sc = base_scenario();
+        for (kind, tp) in [
+            (PolicyKind::IgnorePredictions, 600.0),
+            (PolicyKind::Instant, 600.0),
+            (PolicyKind::NoCkpt, 600.0),
+            (PolicyKind::WithCkpt, 700.0),
+        ] {
+            let pol = policy(kind, 6000.0, tp);
+            let out = simulate(&sc, &pol, 3);
+            assert!(out.makespan >= sc.job_size);
+            assert!((0.0..1.0).contains(&out.waste()), "{:?}", out.waste());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let sc = base_scenario();
+        let pol = policy(PolicyKind::NoCkpt, 5000.0, 600.0);
+        let a = simulate(&sc, &pol, 11);
+        let b = simulate(&sc, &pol, 11);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.n_faults, b.n_faults);
+    }
+
+    #[test]
+    fn prediction_aware_beats_ignoring_with_good_predictor() {
+        // Accurate predictor, short window, many faults: trusting must win.
+        let mut sc = base_scenario();
+        sc.platform.mu = 20_000.0;
+        sc.predictor = PredictorSpec { recall: 0.95, precision: 0.95, window: 300.0 };
+        sc.job_size = 5e6;
+        let tr = crate::model::optimal::rfo_period(&sc.platform);
+        let ign = simulate(&sc, &policy(PolicyKind::IgnorePredictions, tr, 600.0), 5);
+        let tr1 = crate::model::optimal::tr_extr_instant(&sc);
+        let inst = simulate(&sc, &policy(PolicyKind::Instant, tr1, 600.0), 5);
+        assert!(
+            inst.waste() < ign.waste(),
+            "instant {} vs ignore {}",
+            inst.waste(),
+            ign.waste()
+        );
+    }
+
+    #[test]
+    fn more_faults_mean_more_waste() {
+        let mut sc = base_scenario();
+        sc.predictor.recall = 0.0;
+        let pol = policy(PolicyKind::IgnorePredictions, 6000.0, 600.0);
+        sc.platform.mu = 200_000.0;
+        let low = simulate(&sc, &pol, 2);
+        sc.platform.mu = 20_000.0;
+        let high = simulate(&sc, &pol, 2);
+        assert!(high.waste() > low.waste());
+        assert!(high.n_faults > low.n_faults);
+    }
+
+    #[test]
+    fn downtime_restarts_on_fault_during_recovery() {
+        // With a tiny MTBF and huge D+R, faults pile up during recovery;
+        // the engine must still terminate and account all time.
+        let mut sc = base_scenario();
+        sc.platform.mu = 3000.0;
+        sc.platform.d = 200.0;
+        sc.platform.r = 800.0;
+        sc.predictor.recall = 0.0;
+        sc.job_size = 50_000.0;
+        let pol = policy(PolicyKind::IgnorePredictions, 2500.0, 600.0);
+        let out = simulate(&sc, &pol, 13);
+        assert!(out.makespan.is_finite());
+        let accounted = sc.job_size + out.time_ckpt + out.time_down
+            + out.time_idle + out.work_lost;
+        assert!((out.makespan - accounted).abs() < 1e-6 * out.makespan);
+    }
+
+    #[test]
+    fn proactive_checkpoints_taken_withckpt() {
+        let mut sc = base_scenario();
+        sc.predictor.window = 3000.0;
+        sc.platform.cp = 60.0;
+        let pol = policy(PolicyKind::WithCkpt, 8000.0, 400.0);
+        let out = simulate(&sc, &pol, 4);
+        assert!(out.n_pro_ckpts > 0);
+        assert!(out.n_preds_trusted > 0);
+    }
+
+    #[test]
+    fn instant_takes_only_prewindow_checkpoints() {
+        let mut sc = base_scenario();
+        sc.predictor.window = 3000.0;
+        let pol = policy(PolicyKind::Instant, 8000.0, 700.0);
+        let out = simulate(&sc, &pol, 4);
+        // Every trusted prediction takes exactly one proactive checkpoint
+        // (the pre-window one), unless destroyed by a fault mid-checkpoint.
+        assert!(out.n_pro_ckpts <= out.n_preds_trusted);
+        assert!(out.n_pro_ckpts + 5 >= out.n_preds_trusted);
+    }
+
+    #[test]
+    fn ignore_mode_never_trusts() {
+        let sc = base_scenario();
+        let pol = policy(PolicyKind::IgnorePredictions, 6000.0, 600.0);
+        let out = simulate(&sc, &pol, 6);
+        assert_eq!(out.n_preds_trusted, 0);
+        assert_eq!(out.n_pro_ckpts, 0);
+        assert!(out.n_preds_seen > 0);
+    }
+
+    #[test]
+    fn timeline_tiles_makespan_for_all_policies() {
+        let sc = base_scenario();
+        for (kind, tp) in [
+            (PolicyKind::IgnorePredictions, 700.0),
+            (PolicyKind::Instant, 700.0),
+            (PolicyKind::NoCkpt, 700.0),
+            (PolicyKind::WithCkpt, 700.0),
+        ] {
+            let pol = policy(kind, 6000.0, tp);
+            let (out, tl) = crate::sim::engine::simulate_traced(&sc, &pol, 5);
+            let totals = tl.validate(out.makespan).expect("tiling");
+            // Per-kind span totals must equal the outcome's accounting.
+            assert!((totals[0] - (out.makespan - out.time_ckpt
+                - out.time_down - out.time_idle)).abs() < 1e-6 * out.makespan);
+            assert!((totals[1] - out.time_ckpt).abs() < 1e-6, "{kind:?}");
+            assert!((totals[2] - out.time_down).abs() < 1e-6);
+            assert!((totals[3] - out.time_idle).abs() < 1e-6);
+            assert_eq!(tl.faults.len() as u64, out.n_faults);
+        }
+    }
+
+    #[test]
+    fn timeline_fault_free_alternates_work_and_ckpt() {
+        let mut sc = base_scenario();
+        sc.platform.mu = 1e15;
+        sc.predictor.recall = 0.0;
+        sc.job_size = 15_000.0;
+        let pol = policy(PolicyKind::IgnorePredictions, 3600.0, 600.0);
+        let (_, tl) = crate::sim::engine::simulate_traced(&sc, &pol, 1);
+        use crate::sim::timeline::Span;
+        for (i, span) in tl.spans.iter().enumerate() {
+            if i % 2 == 0 {
+                assert!(matches!(span, Span::Work { .. }), "{i}: {span:?}");
+            } else {
+                assert!(
+                    matches!(span, Span::Ckpt { proactive: false, .. }),
+                    "{i}: {span:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_job_completes_before_first_checkpoint() {
+        let mut sc = base_scenario();
+        sc.platform.mu = 1e15;
+        sc.predictor.recall = 0.0;
+        sc.job_size = 100.0;
+        let pol = policy(PolicyKind::IgnorePredictions, 3600.0, 600.0);
+        let out = simulate(&sc, &pol, 8);
+        assert_eq!(out.makespan, 100.0);
+        assert_eq!(out.n_reg_ckpts, 0);
+        assert_eq!(out.waste(), 0.0);
+    }
+}

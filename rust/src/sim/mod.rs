@@ -1,0 +1,22 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper evaluates its strategies with a discrete-event simulator fed by
+//! random fault traces (Exponential or Weibull inter-arrival) merged with a
+//! trace of false predictions (§4.1).  This module rebuilds that substrate
+//! from scratch:
+//!
+//! * [`rng`] — a seeded, splittable PRNG (xoshiro256**), no external crates;
+//! * [`distribution`] — Exponential / Weibull / Uniform inter-arrival laws,
+//!   mean-scaled so each trace's expectation matches the platform MTBF;
+//! * [`trace`] — lazy, time-sorted event streams (faults, true predictions
+//!   with their windows, false predictions);
+//! * [`engine`] — the two-mode scheduling simulator (Algorithm 1 and the
+//!   simpler variants), which executes a policy against a trace and
+//!   produces a [`engine::SimOutcome`].
+
+pub mod distribution;
+pub mod engine;
+pub mod rng;
+pub mod timeline;
+pub mod tracefile;
+pub mod trace;

@@ -1,0 +1,187 @@
+//! Execution timelines: a span-by-span record of what the scheduler did.
+//!
+//! `simulate_traced` returns, besides the [`crate::sim::engine::SimOutcome`],
+//! the exact sequence of activity spans (work, regular/proactive
+//! checkpoints, downtime+recovery, idle).  This is how we *verify* the
+//! Algorithm 1 semantics beyond aggregate counters — the spans must tile
+//! the makespan exactly — and it powers `ckptwin inspect`'s ASCII strip.
+
+/// One contiguous activity span.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Span {
+    /// Useful work.
+    Work { start: f64, end: f64 },
+    /// A completed checkpoint (`proactive` distinguishes C vs C_p).
+    Ckpt { start: f64, end: f64, proactive: bool },
+    /// Downtime + recovery after a fault.
+    Down { start: f64, end: f64 },
+    /// Idle (aborted checkpoints, §3.1's "accounted as idle time").
+    Idle { start: f64, end: f64 },
+}
+
+impl Span {
+    pub fn start(&self) -> f64 {
+        match *self {
+            Span::Work { start, .. }
+            | Span::Ckpt { start, .. }
+            | Span::Down { start, .. }
+            | Span::Idle { start, .. } => start,
+        }
+    }
+
+    pub fn end(&self) -> f64 {
+        match *self {
+            Span::Work { end, .. }
+            | Span::Ckpt { end, .. }
+            | Span::Down { end, .. }
+            | Span::Idle { end, .. } => end,
+        }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.end() - self.start()
+    }
+
+    fn glyph(&self) -> char {
+        match self {
+            Span::Work { .. } => '=',
+            Span::Ckpt { proactive: false, .. } => 'C',
+            Span::Ckpt { proactive: true, .. } => 'P',
+            Span::Down { .. } => 'x',
+            Span::Idle { .. } => '.',
+        }
+    }
+}
+
+/// The ordered span record of one execution.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+    /// Fault strike instants (for annotation; downtime spans follow them).
+    pub faults: Vec<f64>,
+}
+
+impl Timeline {
+    /// Append a span, coalescing consecutive work spans.
+    pub fn push(&mut self, span: Span) {
+        if span.duration() <= 0.0 {
+            return;
+        }
+        if let (Some(Span::Work { end, .. }), Span::Work { start, end: new_end }) =
+            (self.spans.last_mut(), span)
+        {
+            if (*end - start).abs() < 1e-9 {
+                *end = new_end;
+                return;
+            }
+        }
+        self.spans.push(span);
+    }
+
+    pub fn record_fault(&mut self, t: f64) {
+        self.faults.push(t);
+    }
+
+    /// Verify the spans tile [0, makespan] with no gaps or overlaps;
+    /// returns the total per-kind durations (work, ckpt, down, idle).
+    pub fn validate(&self, makespan: f64) -> Result<[f64; 4], String> {
+        let mut cursor = 0.0;
+        let mut totals = [0.0f64; 4];
+        for (i, span) in self.spans.iter().enumerate() {
+            if (span.start() - cursor).abs() > 1e-6 * makespan.max(1.0) {
+                return Err(format!(
+                    "span {i} starts at {} but previous ended at {cursor}",
+                    span.start()
+                ));
+            }
+            if span.end() < span.start() {
+                return Err(format!("span {i} has negative duration"));
+            }
+            let idx = match span {
+                Span::Work { .. } => 0,
+                Span::Ckpt { .. } => 1,
+                Span::Down { .. } => 2,
+                Span::Idle { .. } => 3,
+            };
+            totals[idx] += span.duration();
+            cursor = span.end();
+        }
+        if (cursor - makespan).abs() > 1e-6 * makespan.max(1.0) {
+            return Err(format!(
+                "spans end at {cursor} but makespan is {makespan}"
+            ));
+        }
+        Ok(totals)
+    }
+
+    /// Render an ASCII strip of `width` characters covering the makespan.
+    pub fn render(&self, width: usize) -> String {
+        let width = width.max(10);
+        let makespan = self.spans.last().map(|s| s.end()).unwrap_or(0.0);
+        if makespan <= 0.0 {
+            return "(empty timeline)".to_string();
+        }
+        let mut strip = vec![' '; width];
+        for span in &self.spans {
+            let a = (span.start() / makespan * width as f64) as usize;
+            let b = ((span.end() / makespan * width as f64).ceil() as usize)
+                .min(width)
+                .max(a + 1);
+            for cell in strip.iter_mut().take(b).skip(a) {
+                *cell = span.glyph();
+            }
+        }
+        // Overlay fault markers.
+        for &tf in &self.faults {
+            let i = ((tf / makespan * width as f64) as usize).min(width - 1);
+            strip[i] = 'X';
+        }
+        let mut out: String = strip.into_iter().collect();
+        out.push_str(
+            "\n  = work   C reg-ckpt   P pro-ckpt   X fault   x down+rec   . idle",
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_coalesces_adjacent_work() {
+        let mut tl = Timeline::default();
+        tl.push(Span::Work { start: 0.0, end: 5.0 });
+        tl.push(Span::Work { start: 5.0, end: 9.0 });
+        tl.push(Span::Ckpt { start: 9.0, end: 10.0, proactive: false });
+        tl.push(Span::Work { start: 10.0, end: 12.0 });
+        assert_eq!(tl.spans.len(), 3);
+        assert_eq!(tl.spans[0], Span::Work { start: 0.0, end: 9.0 });
+    }
+
+    #[test]
+    fn validate_detects_gap_and_overlap() {
+        let mut tl = Timeline::default();
+        tl.push(Span::Work { start: 0.0, end: 5.0 });
+        tl.push(Span::Ckpt { start: 6.0, end: 7.0, proactive: false });
+        assert!(tl.validate(7.0).is_err());
+        let mut tl2 = Timeline::default();
+        tl2.push(Span::Work { start: 0.0, end: 5.0 });
+        tl2.push(Span::Ckpt { start: 5.0, end: 7.0, proactive: false });
+        let totals = tl2.validate(7.0).unwrap();
+        assert_eq!(totals[0], 5.0);
+        assert_eq!(totals[1], 2.0);
+    }
+
+    #[test]
+    fn render_strip() {
+        let mut tl = Timeline::default();
+        tl.push(Span::Work { start: 0.0, end: 80.0 });
+        tl.push(Span::Ckpt { start: 80.0, end: 100.0, proactive: true });
+        tl.record_fault(50.0);
+        let s = tl.render(50);
+        assert!(s.contains('='));
+        assert!(s.contains('P'));
+        assert!(s.contains('X'));
+    }
+}

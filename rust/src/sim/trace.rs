@@ -1,0 +1,773 @@
+//! Lazy, time-sorted event streams: faults, true predictions (with their
+//! windows), and false predictions.
+//!
+//! Following §4.1 of the paper: a random fault trace (Exponential or Weibull
+//! inter-arrival, mean μ) is generated; each fault is *predicted* with
+//! probability r (the recall).  A predicted fault is placed uniformly at
+//! random inside its prediction window `[ws, ws + I]` (hence E_I^f = I/2),
+//! and the prediction is made available exactly `C_p` seconds before the
+//! window starts (§2.2 — earlier predictions are indistinguishable, later
+//! ones useless).  A second, independent trace of *false* predictions is
+//! generated with inter-arrival mean `μ_P/(1-p) = pμ/(r(1-p))`, from either
+//! the same law or a Uniform law (Figures 8–13).  Both traces are merged
+//! into one stream sorted by *engine-visible* time (prediction notify time,
+//! fault strike time).
+//!
+//! The stream is unbounded and lazy: the simulated makespan is not known in
+//! advance, so events are produced on demand with just enough look-ahead
+//! (window + C_p) to guarantee global time order.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::{FaultModel, Scenario};
+use crate::sim::distribution::{Distribution, Law};
+use crate::sim::rng::Rng;
+use crate::util::gamma;
+
+/// A prediction event, visible to the engine at `notify_t`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Prediction {
+    /// When the predictor announces the window (= window_start - C_p).
+    pub notify_t: f64,
+    /// Window start t0.
+    pub window_start: f64,
+    /// Window end t0 + I.
+    pub window_end: f64,
+    /// True positive (an actual fault lies inside the window)?
+    /// The engine must NOT branch on this — it is trace metadata used by
+    /// statistics and tests only.
+    pub true_positive: bool,
+}
+
+/// An event as seen by the simulation engine, in visible-time order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// A fault strikes at `t`. `predicted` is trace metadata (stats only).
+    Fault { t: f64, predicted: bool },
+    /// A prediction window is announced.
+    Prediction(Prediction),
+}
+
+impl Event {
+    /// The time at which the engine learns about this event.
+    pub fn time(&self) -> f64 {
+        match self {
+            Event::Fault { t, .. } => *t,
+            Event::Prediction(p) => p.notify_t,
+        }
+    }
+
+    fn rank(&self) -> u8 {
+        // Deterministic tie-break: faults before predictions at equal time.
+        match self {
+            Event::Fault { .. } => 0,
+            Event::Prediction(_) => 1,
+        }
+    }
+}
+
+/// Min-heap wrapper with a total order on (time, rank).
+#[derive(Clone, Copy, Debug)]
+struct HeapEvent(Event);
+
+impl PartialEq for HeapEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for HeapEvent {}
+impl PartialOrd for HeapEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest event.
+        other
+            .0
+            .time()
+            .total_cmp(&self.0.time())
+            .then_with(|| other.0.rank().cmp(&self.0.rank()))
+    }
+}
+
+/// Total-ordered f64 wrapper for the per-processor failure heap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.total_cmp(&self.0) // reversed: min-heap
+    }
+}
+
+/// Superposition of `n` independent per-processor Weibull(k, λ_ind)
+/// renewal processes — the paper's fault-trace generator
+/// (see [`FaultModel::PerProcessor`]).
+///
+/// Two start conventions:
+/// * **fresh** (`stationary = false`, the paper's simulator and our
+///   default): every processor starts a new lifetime at t = 0.  With
+///   k < 1 the platform sees the superposed infant-mortality transient —
+///   an effective fault rate far above 1/μ over a days-long job.  This is
+///   what separates the Weibull results from the Exponential ones in the
+///   paper's figures and tables.
+/// * **stationary** (`stationary = true`, ablation): each processor's
+///   first failure follows the *equilibrium* residual-life distribution,
+///   whose survival is `S_eq(t) = Q(1/k, (t/λ)^k)` (regularized upper
+///   incomplete gamma); the platform rate is exactly 1/μ.
+///
+/// Processors are i.i.d., so un-failed processors need no individual state:
+/// the source keeps (i) a *pool count* of processors whose first failure
+/// lies beyond the materialization `horizon`, and (ii) a min-heap of
+/// materialized failure times.  Extending the horizon thins the pool with
+/// geometric skipping over the conditional failure probability — O(number
+/// of failures), never O(n).  Every popped failure pushes that processor's
+/// next renewal (a fresh Weibull lifetime from the failure instant).
+struct PerProcSource {
+    rng: Rng,
+    shape: f64,
+    /// Per-processor Weibull scale λ_ind = μ_ind / Γ(1 + 1/k).
+    lambda: f64,
+    stationary: bool,
+    pool: u64,
+    horizon: f64,
+    step: f64,
+    heap: BinaryHeap<OrdF64>,
+}
+
+impl PerProcSource {
+    fn new(
+        n: u64,
+        shape: f64,
+        mu_ind: f64,
+        step: f64,
+        rng: Rng,
+        stationary: bool,
+    ) -> Self {
+        PerProcSource {
+            rng,
+            shape,
+            lambda: mu_ind / gamma(1.0 + 1.0 / shape),
+            stationary,
+            pool: n,
+            horizon: 0.0,
+            step: step.max(1.0),
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// (t/λ)^k — the cumulative hazard at t.
+    #[inline]
+    fn hazard(&self, t: f64) -> f64 {
+        (t / self.lambda).powf(self.shape)
+    }
+
+    /// Survival function of a pool processor's first failure:
+    /// fresh lifetime `exp(-(t/λ)^k)` or equilibrium residual life
+    /// `Q(1/k, (t/λ)^k)`.
+    #[inline]
+    fn pool_survival(&self, t: f64) -> f64 {
+        if self.stationary {
+            crate::util::gammq(1.0 / self.shape, self.hazard(t))
+        } else {
+            (-self.hazard(t)).exp()
+        }
+    }
+
+    /// Invert the pool survival on [h1, h2]: find t with S(t) = target.
+    fn invert_survival(&self, h1: f64, h2: f64, target: f64) -> f64 {
+        if !self.stationary {
+            // Closed form: t = λ (-ln S)^{1/k}.
+            let st = target.max(f64::MIN_POSITIVE);
+            return self.lambda * (-st.ln()).powf(1.0 / self.shape);
+        }
+        let (mut lo, mut hi) = (h1, h2);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.pool_survival(mid) > target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Materialize all pool (first-)failures in (horizon, horizon + step].
+    fn extend(&mut self) {
+        let h1 = self.horizon;
+        let h2 = self.horizon + self.step;
+        let (s1, s2) = (self.pool_survival(h1), self.pool_survival(h2));
+        // Conditional first-failure probability in (h1, h2] given none yet.
+        let q = if s1 > 0.0 { (s1 - s2) / s1 } else { 1.0 };
+        self.horizon = h2;
+        if q <= 0.0 || self.pool == 0 {
+            return;
+        }
+        if q >= 1.0 - 1e-15 {
+            // Everything fails this window.
+            for _ in 0..self.pool {
+                let u = self.rng.f64();
+                let target = s1 - u * (s1 - s2);
+                self.heap.push(OrdF64(self.invert_survival(h1, h2, target)));
+            }
+            self.pool = 0;
+            return;
+        }
+        // Geometric skipping: next success index jump ~ floor(lnU/ln(1-q)).
+        let ln1q = (1.0 - q).ln();
+        let mut i: u64 = 0;
+        let mut failures: u64 = 0;
+        loop {
+            let u = self.rng.f64_open();
+            let skip = (u.ln() / ln1q).floor();
+            if !skip.is_finite() || i as f64 + skip >= self.pool as f64 {
+                break;
+            }
+            i += skip as u64;
+            // Processor i fails in (h1, h2]; inverse-CDF its failure time.
+            let u2 = self.rng.f64();
+            let target = s1 - u2 * (s1 - s2);
+            self.heap.push(OrdF64(self.invert_survival(h1, h2, target)));
+            failures += 1;
+            i += 1;
+            if i >= self.pool {
+                break;
+            }
+        }
+        self.pool -= failures;
+    }
+
+    /// Next platform failure time (monotone non-decreasing).
+    fn next(&mut self) -> f64 {
+        loop {
+            if let Some(&OrdF64(t)) = self.heap.peek() {
+                if t <= self.horizon || self.pool == 0 {
+                    self.heap.pop();
+                    // The failed processor renews fresh from t.
+                    let u = self.rng.f64_open();
+                    let renewal =
+                        t + self.lambda * (-u.ln()).powf(1.0 / self.shape);
+                    self.heap.push(OrdF64(renewal));
+                    return t;
+                }
+            }
+            self.extend();
+        }
+    }
+}
+
+/// The fault arrival process feeding a trace.
+enum FaultSource {
+    /// Single renewal process at the platform level.
+    Platform { dist: Distribution, rng: Rng, last: f64 },
+    /// Per-processor superposition (fresh Weibull processes).
+    PerProc(PerProcSource),
+}
+
+impl FaultSource {
+    fn next(&mut self) -> f64 {
+        match self {
+            FaultSource::Platform { dist, rng, last } => {
+                *last += dist.sample(rng);
+                *last
+            }
+            FaultSource::PerProc(src) => src.next(),
+        }
+    }
+}
+
+/// Unbounded, lazily generated, time-sorted event stream.
+pub struct TraceStream {
+    rng_fault: Rng,
+    rng_fp: Rng,
+    faults: FaultSource,
+    /// None when the predictor emits no false predictions (p = 1 or r = 0).
+    fp_dist: Option<Distribution>,
+    recall: f64,
+    window: f64,
+    cp: f64,
+    last_fault_raw: f64,
+    last_fp_raw: f64,
+    heap: BinaryHeap<HeapEvent>,
+}
+
+impl TraceStream {
+    /// Build the stream for a scenario.  `seed` fixes the whole trace: two
+    /// strategies given the same (scenario, seed) see the *same* faults and
+    /// predictions, as in the paper's per-instance comparisons.
+    pub fn new(scenario: &Scenario, seed: u64) -> Self {
+        let mu = scenario.platform.mu;
+        let pred = scenario.predictor;
+        let fp_dist = if pred.recall > 0.0 && pred.precision < 1.0 {
+            Some(Distribution::new(
+                scenario.false_pred_law,
+                pred.mu_false(mu),
+            ))
+        } else {
+            None
+        };
+        let faults = match (scenario.fault_model, scenario.fault_law) {
+            // A superposition of (fresh or stationary) exponential
+            // processes IS a Poisson process of rate n/μ_ind = 1/μ — use
+            // the cheap equivalent.
+            (FaultModel::PlatformRenewal, law)
+            | (FaultModel::PerProcessor { .. }, law @ Law::Exponential)
+            | (FaultModel::PerProcessor { .. }, law @ Law::Uniform)
+            | (FaultModel::PerProcessorStationary { .. }, law @ Law::Exponential)
+            | (FaultModel::PerProcessorStationary { .. }, law @ Law::Uniform) => {
+                FaultSource::Platform {
+                    dist: Distribution::new(law, mu),
+                    rng: Rng::stream(seed, 0xf4017),
+                    last: 0.0,
+                }
+            }
+            (FaultModel::PerProcessor { n }, Law::Weibull { shape }) => {
+                FaultSource::PerProc(PerProcSource::new(
+                    n,
+                    shape,
+                    mu * n as f64, // μ_ind
+                    (scenario.job_size * 0.5).max(50.0 * mu),
+                    Rng::stream(seed, 0xf4017),
+                    false,
+                ))
+            }
+            (FaultModel::PerProcessorStationary { n }, Law::Weibull { shape }) => {
+                FaultSource::PerProc(PerProcSource::new(
+                    n,
+                    shape,
+                    mu * n as f64,
+                    (scenario.job_size * 0.5).max(50.0 * mu),
+                    Rng::stream(seed, 0xf4017),
+                    true,
+                ))
+            }
+        };
+        TraceStream {
+            rng_fault: Rng::stream(seed, 0x0fa17),
+            rng_fp: Rng::stream(seed, 0xfa15e),
+            faults,
+            fp_dist,
+            recall: pred.recall,
+            window: pred.window,
+            cp: scenario.platform.cp,
+            last_fault_raw: 0.0,
+            last_fp_raw: 0.0,
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    fn gen_fault(&mut self) {
+        self.last_fault_raw = self.faults.next();
+        let tf = self.last_fault_raw;
+        if self.rng_fault.bernoulli(self.recall) {
+            // Fault position uniform inside the window ⇒ E_I^f = I/2.
+            let offset = self.rng_fault.range(0.0, self.window);
+            let ws = tf - offset;
+            let notify = ws - self.cp;
+            if notify >= 0.0 {
+                self.heap.push(HeapEvent(Event::Prediction(Prediction {
+                    notify_t: notify,
+                    window_start: ws,
+                    window_end: ws + self.window,
+                    true_positive: true,
+                })));
+                self.heap.push(HeapEvent(Event::Fault { t: tf, predicted: true }));
+                return;
+            }
+            // Prediction would be announced before t = 0: too late to act —
+            // reclassify as unpredicted (§2.2).
+        }
+        self.heap.push(HeapEvent(Event::Fault { t: tf, predicted: false }));
+    }
+
+    fn gen_fp(&mut self) {
+        let Some(dist) = self.fp_dist else {
+            self.last_fp_raw = f64::INFINITY;
+            return;
+        };
+        self.last_fp_raw += dist.sample(&mut self.rng_fp);
+        let ws = self.last_fp_raw;
+        let notify = ws - self.cp;
+        if notify >= 0.0 {
+            self.heap.push(HeapEvent(Event::Prediction(Prediction {
+                notify_t: notify,
+                window_start: ws,
+                window_end: ws + self.window,
+                true_positive: false,
+            })));
+        }
+    }
+
+    /// Produce the next event in visible-time order (never exhausts).
+    pub fn next_event(&mut self) -> Event {
+        loop {
+            if let Some(HeapEvent(ev)) = self.heap.peek() {
+                // A future raw arrival at time t can create an event no
+                // earlier than t - window - cp; once both cursors are past
+                // this horizon, the heap minimum is globally minimal.
+                let safe = ev.time() + self.window + self.cp;
+                if self.last_fault_raw > safe && self.last_fp_raw > safe {
+                    return self.heap.pop().unwrap().0;
+                }
+            }
+            if self.last_fault_raw <= self.last_fp_raw {
+                self.gen_fault();
+            } else {
+                self.gen_fp();
+            }
+        }
+    }
+
+    /// Collect all events with visible time < `horizon` (test helper).
+    pub fn take_until(&mut self, horizon: f64) -> Vec<Event> {
+        let mut out = Vec::new();
+        loop {
+            let ev = self.next_event();
+            if ev.time() >= horizon {
+                // Push back so callers could continue (rarely needed).
+                self.heap.push(HeapEvent(ev));
+                return out;
+            }
+            out.push(ev);
+        }
+    }
+}
+
+/// Anything that can feed the engine a time-sorted event stream.
+pub trait EventSource {
+    fn next_event(&mut self) -> Event;
+}
+
+impl EventSource for TraceStream {
+    fn next_event(&mut self) -> Event {
+        TraceStream::next_event(self)
+    }
+}
+
+/// Memoized trace: generates events once and replays them for any number
+/// of simulations of the SAME (scenario, seed).
+///
+/// The BestPeriod brute-force search simulates dozens of candidate periods
+/// against identical traces; without caching, trace generation (RNG +
+/// heaps + per-processor thinning) is regenerated per candidate and costs
+/// a significant fraction of each run.  `TraceCache` pays it once.
+pub struct TraceCache {
+    stream: TraceStream,
+    events: Vec<Event>,
+}
+
+impl TraceCache {
+    pub fn new(scenario: &Scenario, seed: u64) -> Self {
+        TraceCache { stream: TraceStream::new(scenario, seed), events: Vec::new() }
+    }
+
+    /// A fresh replay cursor over this cache.
+    pub fn replay(&mut self) -> Replay<'_> {
+        Replay { cache: self, pos: 0 }
+    }
+
+    /// Events materialized so far (diagnostics).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Cursor over a [`TraceCache`]; extends the cache on demand.
+pub struct Replay<'a> {
+    cache: &'a mut TraceCache,
+    pos: usize,
+}
+
+impl EventSource for Replay<'_> {
+    fn next_event(&mut self) -> Event {
+        if self.pos == self.cache.events.len() {
+            let ev = self.cache.stream.next_event();
+            self.cache.events.push(ev);
+        }
+        let ev = self.cache.events[self.pos];
+        self.pos += 1;
+        ev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PredictorSpec, Scenario};
+    use crate::sim::distribution::Law;
+
+    fn scenario(recall: f64, precision: f64, window: f64) -> Scenario {
+        Scenario {
+            platform: crate::config::Platform {
+                mu: 1000.0,
+                c: 100.0,
+                cp: 50.0,
+                d: 10.0,
+                r: 100.0,
+            },
+            predictor: PredictorSpec { recall, precision, window },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 1e6,
+        }
+    }
+
+    #[test]
+    fn events_sorted_by_visible_time() {
+        let sc = scenario(0.85, 0.82, 600.0);
+        let mut ts = TraceStream::new(&sc, 1);
+        let evs = ts.take_until(200_000.0);
+        assert!(evs.len() > 100);
+        for w in evs.windows(2) {
+            assert!(w[0].time() <= w[1].time(), "{w:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let sc = scenario(0.7, 0.4, 300.0);
+        let a = TraceStream::new(&sc, 9).take_until(50_000.0);
+        let b = TraceStream::new(&sc, 9).take_until(50_000.0);
+        assert_eq!(a, b);
+        let c = TraceStream::new(&sc, 10).take_until(50_000.0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn fault_rate_matches_mu() {
+        let sc = scenario(0.85, 0.82, 600.0);
+        let horizon = 2_000_000.0;
+        let mut ts = TraceStream::new(&sc, 2);
+        let faults = ts
+            .take_until(horizon)
+            .iter()
+            .filter(|e| matches!(e, Event::Fault { .. }))
+            .count();
+        let expected = horizon / sc.platform.mu;
+        let rel = (faults as f64 - expected).abs() / expected;
+        assert!(rel < 0.05, "{faults} vs {expected}");
+    }
+
+    #[test]
+    fn recall_fraction_of_faults_predicted() {
+        let sc = scenario(0.85, 0.82, 600.0);
+        let mut ts = TraceStream::new(&sc, 3);
+        let evs = ts.take_until(3_000_000.0);
+        let (mut pred, mut tot) = (0usize, 0usize);
+        for e in &evs {
+            if let Event::Fault { predicted, .. } = e {
+                tot += 1;
+                pred += *predicted as usize;
+            }
+        }
+        let frac = pred as f64 / tot as f64;
+        assert!((frac - 0.85).abs() < 0.03, "{frac} over {tot}");
+    }
+
+    #[test]
+    fn predicted_fault_lies_inside_its_window() {
+        let sc = scenario(1.0, 1.0, 600.0); // every fault predicted, no FPs
+        let mut ts = TraceStream::new(&sc, 4);
+        let evs = ts.take_until(1_000_000.0);
+        let mut openings: Vec<Prediction> = Vec::new();
+        let mut checked = 0;
+        for e in &evs {
+            match e {
+                Event::Prediction(p) => {
+                    assert!(p.true_positive);
+                    assert!((p.window_end - p.window_start - 600.0).abs() < 1e-9);
+                    assert!((p.window_start - p.notify_t - 50.0).abs() < 1e-9);
+                    openings.push(*p);
+                }
+                Event::Fault { t, predicted: true } => {
+                    // The matching window is the one containing t.
+                    let hit = openings
+                        .iter()
+                        .any(|p| *t >= p.window_start && *t <= p.window_end);
+                    assert!(hit, "fault at {t} outside every window");
+                    checked += 1;
+                }
+                Event::Fault { predicted: false, .. } => {}
+            }
+        }
+        assert!(checked > 100);
+    }
+
+    #[test]
+    fn false_prediction_rate() {
+        let sc = scenario(0.7, 0.4, 300.0);
+        // μ_false = pμ/(r(1-p)) = 0.4*1000/(0.7*0.6) ≈ 952.4
+        let mu_false = sc.predictor.mu_false(sc.platform.mu);
+        let horizon = 3_000_000.0;
+        let mut ts = TraceStream::new(&sc, 5);
+        let fps = ts
+            .take_until(horizon)
+            .iter()
+            .filter(
+                |e| matches!(e, Event::Prediction(p) if !p.true_positive),
+            )
+            .count();
+        let expected = horizon / mu_false;
+        let rel = (fps as f64 - expected).abs() / expected;
+        assert!(rel < 0.05, "{fps} vs {expected}");
+    }
+
+    #[test]
+    fn perfect_precision_has_no_false_predictions() {
+        let sc = scenario(0.9, 1.0, 300.0);
+        let mut ts = TraceStream::new(&sc, 6);
+        let fps = ts
+            .take_until(500_000.0)
+            .iter()
+            .filter(
+                |e| matches!(e, Event::Prediction(p) if !p.true_positive),
+            )
+            .count();
+        assert_eq!(fps, 0);
+    }
+
+    #[test]
+    fn zero_recall_means_no_predictions() {
+        let sc = scenario(0.0, 0.5, 300.0);
+        let mut ts = TraceStream::new(&sc, 7);
+        let evs = ts.take_until(500_000.0);
+        assert!(evs
+            .iter()
+            .all(|e| matches!(e, Event::Fault { predicted: false, .. })));
+    }
+
+    fn paper_scenario(model: FaultModel, shape: f64) -> Scenario {
+        let n = 1u64 << 18;
+        let mut sc = Scenario::paper(
+            n,
+            1.0,
+            PredictorSpec::paper_a(600.0),
+            Law::Weibull { shape },
+            Law::Weibull { shape },
+        );
+        sc.fault_model = model;
+        sc
+    }
+
+    fn fault_count(sc: &Scenario, horizon: f64, seed: u64) -> usize {
+        TraceStream::new(sc, seed)
+            .take_until(horizon)
+            .iter()
+            .filter(|e| matches!(e, Event::Fault { .. }))
+            .count()
+    }
+
+    #[test]
+    fn stationary_per_proc_rate_is_one_over_mu() {
+        let sc = paper_scenario(
+            FaultModel::PerProcessorStationary { n: 1 << 18 },
+            0.7,
+        );
+        let horizon = 60.0 * sc.platform.mu;
+        let mut total = 0usize;
+        for seed in 0..12 {
+            total += fault_count(&sc, horizon, seed);
+        }
+        let expected = 12.0 * horizon / sc.platform.mu;
+        let rel = (total as f64 - expected).abs() / expected;
+        assert!(rel < 0.05, "{total} vs {expected}");
+    }
+
+    #[test]
+    fn fresh_per_proc_rate_exceeds_one_over_mu() {
+        // Infant mortality: the fresh-start transient fault rate is far
+        // above the steady state for k < 1 over a job-sized horizon.
+        let sc = paper_scenario(FaultModel::PerProcessor { n: 1 << 18 }, 0.7);
+        let horizon = 60.0 * sc.platform.mu;
+        let count = fault_count(&sc, horizon, 3);
+        let steady = horizon / sc.platform.mu;
+        assert!(
+            count as f64 > 3.0 * steady,
+            "fresh rate {count} vs steady {steady}"
+        );
+        // And k = 0.5 is even more extreme than k = 0.7.
+        let sc5 = paper_scenario(FaultModel::PerProcessor { n: 1 << 18 }, 0.5);
+        let count5 = fault_count(&sc5, horizon, 3);
+        assert!(count5 > count, "{count5} vs {count}");
+    }
+
+    #[test]
+    fn per_proc_stream_sorted_and_deterministic() {
+        for model in [
+            FaultModel::PerProcessor { n: 1 << 16 },
+            FaultModel::PerProcessorStationary { n: 1 << 16 },
+        ] {
+            let mut sc = paper_scenario(model, 0.5);
+            sc.fault_model = model;
+            let horizon = 20.0 * sc.platform.mu;
+            let a = TraceStream::new(&sc, 9).take_until(horizon);
+            let b = TraceStream::new(&sc, 9).take_until(horizon);
+            assert_eq!(a, b);
+            for w in a.windows(2) {
+                assert!(w[0].time() <= w[1].time());
+            }
+        }
+    }
+
+    #[test]
+    fn per_proc_exponential_equals_platform_renewal() {
+        // Fresh exponential superposition IS Poisson(1/μ): the stream must
+        // be bit-identical to the platform-renewal shortcut.
+        let mut sc = paper_scenario(FaultModel::PerProcessor { n: 1 << 18 }, 0.7);
+        sc.fault_law = Law::Exponential;
+        sc.false_pred_law = Law::Exponential;
+        let a = TraceStream::new(&sc, 4).take_until(10.0 * sc.platform.mu);
+        sc.fault_model = FaultModel::PlatformRenewal;
+        let b = TraceStream::new(&sc, 4).take_until(10.0 * sc.platform.mu);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn replay_matches_stream_and_is_reusable() {
+        let sc = scenario(0.85, 0.82, 600.0);
+        let direct = TraceStream::new(&sc, 21).take_until(100_000.0);
+        let mut cache = TraceCache::new(&sc, 21);
+        for _ in 0..3 {
+            let mut cur = cache.replay();
+            for want in &direct {
+                assert_eq!(cur.next_event(), *want);
+            }
+        }
+        assert!(cache.len() >= direct.len());
+    }
+
+    #[test]
+    fn uniform_false_pred_law() {
+        let mut sc = scenario(0.7, 0.4, 300.0);
+        sc.false_pred_law = Law::Uniform;
+        let mu_false = sc.predictor.mu_false(sc.platform.mu);
+        let mut ts = TraceStream::new(&sc, 8);
+        let evs = ts.take_until(2_000_000.0);
+        let fps: Vec<f64> = evs
+            .iter()
+            .filter_map(|e| match e {
+                Event::Prediction(p) if !p.true_positive => {
+                    Some(p.window_start)
+                }
+                _ => None,
+            })
+            .collect();
+        let expected = 2_000_000.0 / mu_false;
+        let rel = (fps.len() as f64 - expected).abs() / expected;
+        assert!(rel < 0.05, "{} vs {expected}", fps.len());
+    }
+}

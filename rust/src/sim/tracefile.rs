@@ -1,0 +1,232 @@
+//! Failure-log ingestion: run the strategies against *recorded* fault
+//! traces instead of synthetic ones.
+//!
+//! The paper's conclusion names this as future work: "refine the assessment
+//! of the usefulness of prediction with trace-based failure and prediction
+//! logs from current large-scale supercomputers".  This module provides:
+//!
+//! * a plain failure-log format (one fault timestamp per line, `#`
+//!   comments — the shape of published LANL/BlueGene availability logs
+//!   after normalization);
+//! * a reader/writer pair;
+//! * [`LogTrace`]: an [`EventSource`] that replays a recorded fault log and
+//!   synthesizes the prediction feed a predictor with the given (r, p, I)
+//!   characteristics would have produced for it — so any real log can be
+//!   pushed through every heuristic via `ckptwin replay`.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{PredictorSpec, Scenario};
+use crate::predictor;
+use crate::sim::distribution::Law;
+use crate::sim::trace::{Event, EventSource, Prediction};
+
+/// Write a failure log: one fault time (seconds, ascending) per line.
+pub fn write_failure_log(path: &Path, faults: &[f64]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "# ckptwin failure log: one fault time (s) per line")?;
+    for &t in faults {
+        writeln!(f, "{t:.3}")?;
+    }
+    Ok(())
+}
+
+/// Read a failure log; validates ascending order and non-negativity.
+pub fn read_failure_log(path: &Path) -> Result<Vec<f64>> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut out = Vec::new();
+    let mut prev = f64::NEG_INFINITY;
+    for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let body = line.split('#').next().unwrap_or("").trim();
+        if body.is_empty() {
+            continue;
+        }
+        let t: f64 = body.parse().map_err(|_| {
+            anyhow!("{}:{}: not a number: {body}", path.display(), lineno + 1)
+        })?;
+        if t < 0.0 || t < prev {
+            return Err(anyhow!(
+                "{}:{}: fault times must be non-negative and ascending",
+                path.display(),
+                lineno + 1
+            ));
+        }
+        prev = t;
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// An [`EventSource`] replaying a recorded fault log with a synthesized
+/// prediction feed.  After the log is exhausted, a guard fault far past the
+/// horizon keeps the engine semantics intact (jobs should complete first).
+pub struct LogTrace {
+    events: Vec<Event>,
+    pos: usize,
+    guard_t: f64,
+}
+
+impl LogTrace {
+    /// Build from a fault log and predictor characteristics.  `seed` fixes
+    /// which faults get predicted and where the windows fall.
+    pub fn new(
+        faults: &[f64],
+        spec: &PredictorSpec,
+        cp: f64,
+        mu: f64,
+        false_pred_law: Law,
+        seed: u64,
+    ) -> Self {
+        let horizon = faults.last().copied().unwrap_or(0.0) + 10.0 * mu;
+        let feed =
+            predictor::feed(faults, spec, cp, mu, false_pred_law, horizon, seed);
+        // Which faults are covered by a window of the feed (=> predicted)?
+        let mut events: Vec<Event> = Vec::with_capacity(faults.len() + feed.len());
+        for &tf in faults {
+            let predicted = feed.iter().any(|a| {
+                a.true_positive && tf >= a.window_start && tf <= a.window_end
+            });
+            events.push(Event::Fault { t: tf, predicted });
+        }
+        for a in feed {
+            events.push(Event::Prediction(Prediction {
+                notify_t: a.notify_t,
+                window_start: a.window_start,
+                window_end: a.window_end,
+                true_positive: a.true_positive,
+            }));
+        }
+        events.sort_by(|a, b| a.time().total_cmp(&b.time()));
+        LogTrace { events, pos: 0, guard_t: horizon * 1e3 + 1e12 }
+    }
+
+    /// Number of events in the replayed window.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl EventSource for LogTrace {
+    fn next_event(&mut self) -> Event {
+        if self.pos < self.events.len() {
+            let ev = self.events[self.pos];
+            self.pos += 1;
+            ev
+        } else {
+            // Inexhaustible guard: pushes the "next event" far beyond any
+            // plausible makespan.
+            self.guard_t *= 2.0;
+            Event::Fault { t: self.guard_t, predicted: false }
+        }
+    }
+}
+
+/// Run one policy against a recorded log (fresh [`LogTrace`] per call).
+pub fn replay(
+    sc: &Scenario,
+    policy: &crate::strategy::Policy,
+    faults: &[f64],
+    seed: u64,
+) -> crate::sim::engine::SimOutcome {
+    let trace = LogTrace::new(
+        faults,
+        &sc.predictor,
+        sc.platform.cp,
+        sc.platform.mu,
+        sc.false_pred_law,
+        seed,
+    );
+    crate::sim::engine::simulate_from(sc, policy, 1.0, seed, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform};
+    use crate::sim::rng::Rng;
+    use crate::strategy::Strategy;
+
+    fn scenario(mu: f64) -> Scenario {
+        Scenario {
+            platform: Platform { mu, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 1e6,
+        }
+    }
+
+    fn synth_log(n: usize, mean: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let d = crate::sim::distribution::Distribution::new(
+            Law::Exponential,
+            mean,
+        );
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += d.sample(&mut rng);
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn log_roundtrip() {
+        let faults = synth_log(200, 30_000.0, 1);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ckptwin-log-{}.txt", std::process::id()));
+        write_failure_log(&path, &faults).unwrap();
+        let back = read_failure_log(&path).unwrap();
+        assert_eq!(faults.len(), back.len());
+        for (a, b) in faults.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn read_rejects_unsorted() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ckptwin-bad-{}.txt", std::process::id()));
+        std::fs::write(&path, "100.0\n50.0\n").unwrap();
+        assert!(read_failure_log(&path).is_err());
+    }
+
+    #[test]
+    fn replay_completes_and_prediction_aware_wins() {
+        let sc = scenario(30_000.0);
+        let faults = synth_log(400, sc.platform.mu, 7);
+        let ign = replay(&sc, &Strategy::Rfo.policy(&sc), &faults, 3);
+        let aware = replay(&sc, &Strategy::NoCkptI.policy(&sc), &faults, 3);
+        assert!(ign.makespan >= sc.job_size);
+        assert!(aware.makespan >= sc.job_size);
+        assert!(ign.n_faults > 0);
+        assert!(
+            aware.waste() < ign.waste() + 0.02,
+            "aware {} vs ignore {}",
+            aware.waste(),
+            ign.waste()
+        );
+    }
+
+    #[test]
+    fn empty_log_runs_fault_free() {
+        let sc = scenario(30_000.0);
+        let out = replay(&sc, &Strategy::Daly.policy(&sc), &[], 1);
+        assert_eq!(out.n_faults, 0);
+        let pol = Strategy::Daly.policy(&sc);
+        let ideal = sc.platform.c / pol.tr;
+        assert!((out.waste() - ideal).abs() < 0.01);
+    }
+}

@@ -1,0 +1,130 @@
+//! Summary statistics for repeated simulation instances (the paper reports
+//! averages over 100 randomly generated instances per point).
+
+/// Online (Welford) accumulator plus order statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+    mean: f64,
+    m2: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> Self {
+        let mut s = Self::new();
+        for v in iter {
+            s.push(v);
+        }
+        s
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+        let n = self.values.len() as f64;
+        let delta = v - self.mean;
+        self.mean += delta / n;
+        self.m2 += delta * (v - self.mean);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n - 1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.values.len() < 2 {
+            0.0
+        } else {
+            self.m2 / (self.values.len() - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Half-width of the normal-approximation 95% confidence interval.
+    pub fn ci95(&self) -> f64 {
+        if self.values.is_empty() {
+            0.0
+        } else {
+            1.96 * self.std() / (self.values.len() as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolation percentile, q in [0, 1].
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(f64::total_cmp);
+        let pos = q * (sorted.len() - 1) as f64;
+        let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let s = Summary::from_iter([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // Sample std of this classic dataset = sqrt(32/7).
+        assert!((s.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = Summary::from_iter((1..=100).map(|i| i as f64));
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(1.0), 100.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a = Summary::from_iter((0..10).map(|i| (i % 2) as f64));
+        let b = Summary::from_iter((0..1000).map(|i| (i % 2) as f64));
+        assert!(b.ci95() < a.ci95());
+    }
+
+    #[test]
+    fn single_value() {
+        let s = Summary::from_iter([3.0]);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.median(), 3.0);
+    }
+}

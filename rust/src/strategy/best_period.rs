@@ -1,0 +1,170 @@
+//! BestPeriod: brute-force numerical search for the best regular period.
+//!
+//! The paper compares every heuristic against a "BestPeriod" twin that runs
+//! the same execution mode but with `T_R` chosen by brute force over
+//! simulations (§4.1).  This is the yardstick that shows the closed-form
+//! periods of the prediction-aware strategies are near-optimal, while
+//! Daly's (and to a lesser extent RFO's) can be far off under Weibull laws.
+//!
+//! The search is a two-stage grid: a coarse geometric sweep over
+//! `[1.05 C, min(job, 40 T_ref)]`, then a linear refinement around the
+//! best coarse point.  Every candidate is scored by the mean waste over the
+//! given instance seeds (the same seeds for every candidate — paired
+//! comparison).  The expensive variant of this search is exactly what the
+//! `waste_grid` PJRT artifact accelerates on the *analytic* side
+//! (`runtime::waste_grid`); the simulation side is parallelized in the
+//! harness.
+
+use crate::config::Scenario;
+use crate::sim::engine::{simulate, simulate_from_capped};
+use crate::sim::trace::TraceCache;
+use crate::strategy::{Policy, PolicyKind};
+
+/// Result of a brute-force period search.
+#[derive(Clone, Copy, Debug)]
+pub struct BestPeriod {
+    /// The winning regular period.
+    pub tr: f64,
+    /// Mean waste achieved at `tr` over the search seeds.
+    pub waste: f64,
+    /// Number of simulations executed by the search.
+    pub evals: u64,
+}
+
+/// Mean simulated waste of `kind` at period `tr` over `seeds`.
+pub fn mean_waste(sc: &Scenario, kind: PolicyKind, tr: f64, tp: f64, seeds: &[u64]) -> f64 {
+    let pol = Policy { kind, tr, tp };
+    let sum: f64 = seeds
+        .iter()
+        .map(|&s| simulate(sc, &pol, s).waste())
+        .sum();
+    sum / seeds.len() as f64
+}
+
+/// [`mean_waste`] over memoized traces: identical results, but trace
+/// generation is paid once per seed instead of once per (seed, candidate).
+pub fn mean_waste_cached(
+    sc: &Scenario,
+    kind: PolicyKind,
+    tr: f64,
+    tp: f64,
+    seeds: &[u64],
+    caches: &mut [TraceCache],
+) -> f64 {
+    let pol = Policy { kind, tr, tp };
+    // Hopeless-candidate cutoff: a candidate whose makespan exceeds
+    // 50x the job (waste >= 0.98) cannot win any search; abandoning it
+    // early keeps the brute force tractable in the heavy-tailed regimes.
+    let cap = 50.0 * sc.job_size + 100.0 * sc.platform.mu;
+    let sum: f64 = seeds
+        .iter()
+        .zip(caches.iter_mut())
+        .map(|(&s, cache)| {
+            simulate_from_capped(sc, &pol, 1.0, s, cache.replay(), cap)
+                .waste()
+        })
+        .sum();
+    sum / seeds.len() as f64
+}
+
+/// Brute-force search for the best `T_R` (the proactive period `tp` is kept
+/// fixed at its analytic optimum, as in the paper).
+pub fn search(
+    sc: &Scenario,
+    kind: PolicyKind,
+    tp: f64,
+    seeds: &[u64],
+    coarse: usize,
+    refine: usize,
+) -> BestPeriod {
+    assert!(!seeds.is_empty());
+    let c = sc.platform.c;
+    let lo = 1.05 * c;
+    // Upper bound: well past any sensible period, but capped by the job
+    // itself (a period larger than the job == "never checkpoint").
+    let t_ref = crate::model::optimal::rfo_period(&sc.platform);
+    let hi = (40.0 * t_ref).min(sc.job_size).max(2.0 * lo);
+
+    // Memoize the per-seed traces: every candidate replays the same one.
+    let mut caches: Vec<TraceCache> =
+        seeds.iter().map(|&s| TraceCache::new(sc, s)).collect();
+
+    let mut evals = 0u64;
+    let mut best = (f64::INFINITY, lo);
+    let ratio = (hi / lo).powf(1.0 / (coarse.max(2) - 1) as f64);
+    let mut candidates: Vec<f64> =
+        (0..coarse).map(|k| lo * ratio.powi(k as i32)).collect();
+    // Always include the analytic reference period in the sweep.
+    candidates.push(t_ref.min(hi).max(lo));
+
+    for &tr in &candidates {
+        let w = mean_waste_cached(sc, kind, tr, tp, seeds, &mut caches);
+        evals += seeds.len() as u64;
+        if w < best.0 {
+            best = (w, tr);
+        }
+    }
+
+    // Linear refinement around the best coarse point.
+    let (mut bw, mut btr) = best;
+    let span = btr * (ratio - 1.0);
+    let lo2 = (btr - span).max(lo);
+    let hi2 = (btr + span).min(hi);
+    for k in 0..refine {
+        let tr = lo2 + (hi2 - lo2) * (k as f64 + 0.5) / refine as f64;
+        let w = mean_waste_cached(sc, kind, tr, tp, seeds, &mut caches);
+        evals += seeds.len() as u64;
+        if w < bw {
+            bw = w;
+            btr = tr;
+        }
+    }
+    BestPeriod { tr: btr, waste: bw, evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec};
+    use crate::sim::distribution::Law;
+    use crate::strategy::Strategy;
+
+    fn sc() -> Scenario {
+        Scenario {
+            platform: Platform { mu: 30_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 2e6,
+        }
+    }
+
+    #[test]
+    fn best_period_no_worse_than_formula() {
+        let s = sc();
+        let seeds: Vec<u64> = (0..8).collect();
+        for strat in [Strategy::Rfo, Strategy::Instant, Strategy::NoCkptI] {
+            let pol = strat.policy(&s);
+            let w_formula =
+                mean_waste(&s, pol.kind, pol.tr, pol.tp, &seeds);
+            let bp = search(&s, pol.kind, pol.tp, &seeds, 24, 8);
+            assert!(
+                bp.waste <= w_formula + 1e-9,
+                "{}: search {} vs formula {}",
+                strat.name(),
+                bp.waste,
+                w_formula
+            );
+        }
+    }
+
+    #[test]
+    fn search_counts_evals() {
+        let s = sc();
+        let seeds: Vec<u64> = (0..2).collect();
+        let bp = search(&s, PolicyKind::IgnorePredictions, 700.0, &seeds, 10, 4);
+        assert_eq!(bp.evals, ((10 + 1 + 4) * 2) as u64);
+        assert!(bp.tr > s.platform.c);
+    }
+}

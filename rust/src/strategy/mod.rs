@@ -1,0 +1,189 @@
+//! Checkpointing strategies: the paper's nine heuristics.
+//!
+//! * Prediction-ignoring (q = 0): **Daly**, **Young**, **RFO** — periodic
+//!   checkpointing with the respective closed-form periods.
+//! * Prediction-aware (q = 1): **Instant**, **NoCkptI**, **WithCkptI** —
+//!   two-mode scheduling with the closed-form `T_R^extr` / `T_P^extr`.
+//! * [`best_period`] — the BestPeriod counterparts: same execution modes,
+//!   but `T_R` found by brute-force numerical search over simulations
+//!   (§4.1), the paper's yardstick for "how good are the formulas?".
+
+pub mod best_period;
+
+use crate::config::Scenario;
+use crate::model::optimal;
+
+/// Execution mode of the engine (how predictions are handled).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// q = 0: predictions ignored entirely.
+    IgnorePredictions,
+    /// Proactive checkpoint before the window, immediate return (§3.4).
+    Instant,
+    /// Proactive checkpoint, then work without checkpointing in-window (§3.3).
+    NoCkpt,
+    /// Proactive checkpoint + periodic proactive checkpoints in-window (§3.2).
+    WithCkpt,
+}
+
+/// A fully instantiated policy: mode + concrete periods.
+#[derive(Clone, Copy, Debug)]
+pub struct Policy {
+    pub kind: PolicyKind,
+    /// Regular-mode period `T_R` (work `T_R - C`, then checkpoint `C`).
+    pub tr: f64,
+    /// Proactive-mode period `T_P` (WithCkpt only; work `T_P - C_p`, then
+    /// checkpoint `C_p`).
+    pub tp: f64,
+}
+
+impl Policy {
+    /// Engine preconditions; violations are programming errors.
+    pub fn validate(&self, sc: &Scenario) {
+        assert!(
+            self.tr > sc.platform.c,
+            "T_R = {} must exceed C = {}",
+            self.tr,
+            sc.platform.c
+        );
+        if matches!(self.kind, PolicyKind::WithCkpt) {
+            assert!(
+                self.tp > sc.platform.cp,
+                "T_P = {} must exceed C_p = {}",
+                self.tp,
+                sc.platform.cp
+            );
+        }
+        assert!(self.tr.is_finite() && self.tp.is_finite());
+    }
+}
+
+/// The paper's named heuristics (analytic periods).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Daly's periodic policy — the paper's reference baseline.
+    Daly,
+    /// Young's first-order periodic policy.
+    Young,
+    /// Refined First-Order periodic policy (q = 0 optimum, Eq. 3).
+    Rfo,
+    /// Instant (q = 1).
+    Instant,
+    /// NoCkptI (q = 1).
+    NoCkptI,
+    /// WithCkptI (q = 1), T_P = T_P^extr.
+    WithCkptI,
+}
+
+impl Strategy {
+    /// Display name matching the paper's figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Daly => "Daly",
+            Strategy::Young => "Young",
+            Strategy::Rfo => "RFO",
+            Strategy::Instant => "Instant",
+            Strategy::NoCkptI => "NoCkptI",
+            Strategy::WithCkptI => "WithCkptI",
+        }
+    }
+
+    /// The five heuristics compared in the paper's simulations (§4.1);
+    /// Young is implemented as an extra but not plotted by the paper.
+    pub fn paper_set() -> [Strategy; 5] {
+        [
+            Strategy::Daly,
+            Strategy::Rfo,
+            Strategy::Instant,
+            Strategy::NoCkptI,
+            Strategy::WithCkptI,
+        ]
+    }
+
+    /// The engine mode this strategy runs in.
+    pub fn kind(&self) -> PolicyKind {
+        match self {
+            Strategy::Daly | Strategy::Young | Strategy::Rfo => {
+                PolicyKind::IgnorePredictions
+            }
+            Strategy::Instant => PolicyKind::Instant,
+            Strategy::NoCkptI => PolicyKind::NoCkpt,
+            Strategy::WithCkptI => PolicyKind::WithCkpt,
+        }
+    }
+
+    /// Instantiate the analytic policy for a scenario.
+    pub fn policy(&self, sc: &Scenario) -> Policy {
+        let tp = optimal::tp_extr(sc).max(sc.platform.cp * 1.1);
+        let tr = match self {
+            Strategy::Daly => optimal::daly_period(&sc.platform),
+            Strategy::Young => optimal::young_period(&sc.platform),
+            Strategy::Rfo => optimal::rfo_period(&sc.platform),
+            Strategy::Instant => optimal::tr_extr_instant(sc),
+            Strategy::NoCkptI | Strategy::WithCkptI => {
+                optimal::tr_extr_window(sc)
+            }
+        };
+        // Periods never exceed the job itself.
+        let tr = tr.min(sc.job_size.max(1.2 * sc.platform.c));
+        Policy { kind: self.kind(), tr, tp }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec};
+    use crate::sim::distribution::Law;
+
+    fn sc() -> Scenario {
+        Scenario {
+            platform: Platform { mu: 60_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 1e7,
+        }
+    }
+
+    #[test]
+    fn policies_valid_for_paper_scenarios() {
+        for n in [1u64 << 16, 1 << 17, 1 << 18, 1 << 19] {
+            for cp_ratio in [1.0, 0.1, 2.0] {
+                for pred in [
+                    PredictorSpec::paper_a(300.0),
+                    PredictorSpec::paper_b(3000.0),
+                ] {
+                    let s = Scenario::paper(
+                        n, cp_ratio, pred, Law::Exponential, Law::Exponential,
+                    );
+                    for strat in Strategy::paper_set() {
+                        let pol = strat.policy(&s);
+                        pol.validate(&s); // must not panic
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q0_strategies_ignore_predictions() {
+        for s in [Strategy::Daly, Strategy::Young, Strategy::Rfo] {
+            assert_eq!(s.kind(), PolicyKind::IgnorePredictions);
+        }
+    }
+
+    #[test]
+    fn period_ordering_young_daly() {
+        let s = sc();
+        assert!(Strategy::Daly.policy(&s).tr > Strategy::Young.policy(&s).tr);
+    }
+
+    #[test]
+    #[should_panic(expected = "must exceed C")]
+    fn invalid_policy_panics() {
+        let s = sc();
+        Policy { kind: PolicyKind::Instant, tr: 100.0, tp: 700.0 }.validate(&s);
+    }
+}

@@ -1,0 +1,183 @@
+//! Shared constants and small numeric helpers.
+
+/// Seconds in a (365-day) year, matching the paper's platform arithmetic
+/// (`μ_ind = 125 y`, `Time_base = 10000 y / N`).
+pub const SECONDS_PER_YEAR: f64 = 365.0 * 24.0 * 3600.0;
+
+/// Seconds in a day (Table 4/5 report execution times in days).
+pub const SECONDS_PER_DAY: f64 = 24.0 * 3600.0;
+
+/// Paper §4.1 platform constants.
+pub mod paper {
+    /// Regular checkpoint duration (s).
+    pub const C: f64 = 600.0;
+    /// Recovery duration (s).
+    pub const R: f64 = 600.0;
+    /// Downtime (s).
+    pub const D: f64 = 60.0;
+    /// Individual processor MTBF (years).
+    pub const MU_IND_YEARS: f64 = 125.0;
+    /// Application size: `Time_base = 10000 years / N` (s for N procs).
+    pub const TOTAL_WORK_YEARS: f64 = 10_000.0;
+}
+
+/// Natural-log Γ via the Lanczos approximation (g = 7, n = 9 coefficients).
+///
+/// Used to mean-scale the Weibull distribution: `E[X] = λ Γ(1 + 1/k)`.
+/// Accurate to ~1e-13 over the range we use (arguments in [1, 3]).
+pub fn ln_gamma(x: f64) -> f64 {
+    // Coefficients from the standard Lanczos g=7 table.
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Γ(x) for moderate x.
+pub fn gamma(x: f64) -> f64 {
+    ln_gamma(x).exp()
+}
+
+/// Regularized upper incomplete gamma Q(a, x) = Γ(a, x) / Γ(a).
+///
+/// Used by the stationary per-processor fault model: the equilibrium
+/// (residual-life) survival function of a Weibull(k, λ) renewal process is
+/// `S_eq(t) = Q(1/k, (t/λ)^k)`.  Series expansion for x < a + 1, Lentz
+/// continued fraction otherwise (Numerical Recipes §6.2).
+pub fn gammq(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0, "gammq domain: a={a}, x={x}");
+    if x == 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        // P(a,x) by series, Q = 1 - P.
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut del = sum;
+        for _ in 0..500 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        1.0 - sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+    } else {
+        // Q(a,x) by modified Lentz continued fraction.
+        let tiny = 1e-300;
+        let mut b = x + 1.0 - a;
+        let mut c = 1.0 / tiny;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < tiny {
+                d = tiny;
+            }
+            c = b + an / c;
+            if c.abs() < tiny {
+                c = tiny;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-15 {
+                break;
+            }
+        }
+        (-x + a * x.ln() - ln_gamma(a)).exp() * h
+    }
+}
+
+/// Clamp helper mirroring the paper's period-validity guards.
+pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// Relative difference |a-b| / max(|a|,|b|,eps); used by tests.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs()).max(1e-300);
+    (a - b).abs() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_integer_values() {
+        // Γ(n) = (n-1)!
+        assert!((gamma(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(2.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(5.0) - 24.0).abs() < 1e-9);
+        assert!((gamma(6.0) - 120.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn gamma_half() {
+        // Γ(1/2) = sqrt(pi)
+        assert!((gamma(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gamma_weibull_arguments() {
+        // Γ(1 + 1/k) for the paper's shapes: k = 0.7 -> Γ(2.428571...),
+        // k = 0.5 -> Γ(3) = 2.
+        assert!((gamma(3.0) - 2.0).abs() < 1e-10);
+        let g = gamma(1.0 + 1.0 / 0.7);
+        assert!(g > 1.26 && g < 1.27, "{g}"); // Γ(2.42857) ≈ 1.26611
+    }
+
+    #[test]
+    fn gammq_known_values() {
+        // Q(1, x) = e^{-x}.
+        for x in [0.1, 0.5, 1.0, 3.0, 10.0] {
+            assert!((gammq(1.0, x) - (-x as f64).exp()).abs() < 1e-12, "{x}");
+        }
+        // Q(2, x) = (1 + x) e^{-x}.
+        for x in [0.2, 1.0, 4.0, 12.0] {
+            let want = (1.0 + x) * (-x as f64).exp();
+            assert!((gammq(2.0, x) - want).abs() < 1e-12, "{x}");
+        }
+        // Q(1/2, x) = erfc(sqrt(x)): spot values (erfc(1) ≈ 0.157299).
+        assert!((gammq(0.5, 1.0) - 0.157_299_207_050_285).abs() < 1e-9);
+        // Bounds and monotonicity in x.
+        let a = 1.0 / 0.7;
+        let mut prev = 1.0;
+        for i in 1..100 {
+            let q = gammq(a, i as f64 * 0.1);
+            assert!(q > 0.0 && q < prev, "i={i}");
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn clamp_behaviour() {
+        assert_eq!(clamp(5.0, 0.0, 10.0), 5.0);
+        assert_eq!(clamp(-5.0, 0.0, 10.0), 0.0);
+        assert_eq!(clamp(50.0, 0.0, 10.0), 10.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Coordinator end-to-end tests: the full checkpoint/restore/recovery loop
+//! against both the synthetic workload (always) and the PJRT transformer
+//! workload (when artifacts are built).
+
+use ckptwin::config::{FaultModel, Platform, PredictorSpec, Scenario};
+use ckptwin::coordinator::workload::{PjrtWorkload, SyntheticWorkload};
+use ckptwin::coordinator::{self, CoordinatorConfig};
+use ckptwin::runtime::Runtime;
+use ckptwin::sim::distribution::Law;
+use ckptwin::strategy::{Policy, PolicyKind};
+
+fn config(tag: &str, mu: f64, kind: PolicyKind, steps: u64) -> CoordinatorConfig {
+    let scenario = Scenario {
+        platform: Platform { mu, c: 120.0, cp: 60.0, d: 30.0, r: 60.0 },
+        predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 240.0 },
+        fault_law: Law::Exponential,
+        false_pred_law: Law::Exponential,
+        fault_model: FaultModel::PlatformRenewal,
+        job_size: 0.0,
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "ckptwin-e2e-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    CoordinatorConfig {
+        scenario,
+        policy: Policy { kind, tr: 1000.0, tp: 200.0 },
+        seconds_per_step: 25.0,
+        total_steps: steps,
+        ckpt_dir: dir,
+        seed: 7,
+        log_every: 5,
+    }
+}
+
+/// Waste measured by the coordinator approaches the analytic prediction
+/// for a long fault-free run (pure checkpoint overhead).
+#[test]
+fn coordinator_waste_matches_overhead_fault_free() {
+    let cfg = config("overhead", 1e13, PolicyKind::IgnorePredictions, 600);
+    let mut w = SyntheticWorkload::new(32);
+    let rep = coordinator::run(&cfg, &mut w).unwrap();
+    // Period: work (1000-120)/25 = 35.2 -> 35 steps = 875 s + 120 s ckpt.
+    // waste ≈ 120 / 995.
+    let expect = 120.0 / (35.0 * 25.0 + 120.0);
+    assert!(
+        (rep.sim_waste - expect).abs() < 0.02,
+        "waste {} vs {expect}",
+        rep.sim_waste
+    );
+}
+
+/// Under heavy fault injection the coordinator still completes, and every
+/// fault triggers exactly one recovery from a *durable* checkpoint.
+#[test]
+fn coordinator_survives_heavy_faults() {
+    let cfg = config("heavy", 1500.0, PolicyKind::WithCkpt, 300);
+    let mut w = SyntheticWorkload::new(32);
+    let rep = coordinator::run(&cfg, &mut w).unwrap();
+    assert!(rep.n_faults >= 3, "expected several faults, got {}", rep.n_faults);
+    assert_eq!(rep.n_recoveries, rep.n_faults);
+    assert!(rep.steps_executed >= 300);
+    assert_eq!(rep.losses.last().unwrap().0, 300);
+    // Re-executed (lost) steps are consistent with the executed total.
+    assert!(rep.steps_executed as i64 - 300 >= rep.steps_lost as i64 - 5);
+}
+
+/// The prediction-aware coordinator takes proactive checkpoints and loses
+/// no more work than the prediction-ignoring one on the same trace.
+#[test]
+fn prediction_aware_coordinator_loses_less() {
+    let aware = {
+        let cfg = config("aw", 2500.0, PolicyKind::WithCkpt, 300);
+        coordinator::run(&cfg, &mut SyntheticWorkload::new(16)).unwrap()
+    };
+    let ignore = {
+        let cfg = config("ig", 2500.0, PolicyKind::IgnorePredictions, 300);
+        coordinator::run(&cfg, &mut SyntheticWorkload::new(16)).unwrap()
+    };
+    assert!(aware.n_pro_ckpts > 0);
+    // Same fault trace (same seed & scenario): trusting an accurate
+    // predictor must not lose substantially more work.
+    assert!(
+        aware.steps_lost <= ignore.steps_lost + 20,
+        "aware lost {} vs ignore {}",
+        aware.steps_lost,
+        ignore.steps_lost
+    );
+}
+
+/// Full-stack e2e: the PJRT transformer under fault injection — loss
+/// decreases despite recoveries.  Skips when artifacts are missing.
+#[test]
+fn pjrt_training_under_faults_learns() {
+    if !Runtime::artifacts_present() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::discover().expect("runtime");
+    let cfg = config("pjrt", 2500.0, PolicyKind::WithCkpt, 120);
+    let mut w = PjrtWorkload::new(&rt, cfg.seed, 0.1).expect("workload");
+    let rep = coordinator::run(&cfg, &mut w).expect("run");
+    assert_eq!(rep.losses.last().unwrap().0, 120);
+    let first = rep.losses.first().unwrap().1;
+    let last = rep.losses.last().unwrap().1;
+    assert!(
+        last < first,
+        "no learning under faults: {first} -> {last} ({} faults)",
+        rep.n_faults
+    );
+}

@@ -1,0 +1,201 @@
+//! Cross-module integration tests: analytic model vs discrete-event
+//! simulation, harness plumbing, strategies at paper scale.
+
+use ckptwin::config::{FaultModel, Platform, PredictorSpec, Scenario};
+use ckptwin::harness::{evaluate_heuristics, run_instances};
+use ckptwin::model::optimal;
+use ckptwin::model::waste::{self, GridStrategy};
+use ckptwin::sim::distribution::Law;
+use ckptwin::strategy::{Policy, PolicyKind, Strategy};
+
+fn paper_scenario(procs: u64, window: f64, law: Law) -> Scenario {
+    Scenario::paper(procs, 1.0, PredictorSpec::paper_a(window), law, law)
+}
+
+/// The central validity claim of §4.2: for Exponential failures the
+/// analytic waste tracks the simulated waste closely (the model is exact up
+/// to the one-event-per-interval hypothesis).
+#[test]
+fn analytic_matches_simulation_exponential() {
+    let sc = paper_scenario(1 << 16, 600.0, Law::Exponential);
+    for (kind, gs) in [
+        (PolicyKind::IgnorePredictions, GridStrategy::Q0),
+        (PolicyKind::Instant, GridStrategy::Instant),
+        (PolicyKind::NoCkpt, GridStrategy::NoCkpt),
+        (PolicyKind::WithCkpt, GridStrategy::WithCkpt),
+    ] {
+        let tr = match kind {
+            PolicyKind::IgnorePredictions => optimal::rfo_period(&sc.platform),
+            PolicyKind::Instant => optimal::tr_extr_instant(&sc),
+            _ => optimal::tr_extr_window(&sc),
+        };
+        let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+        let pol = Policy { kind, tr, tp };
+        let (waste_sim, _) = run_instances(&sc, &pol, 40);
+        let predicted = waste::waste_clipped(&sc, gs, tr);
+        let diff = (waste_sim.mean() - predicted).abs();
+        assert!(
+            diff < 0.02,
+            "{kind:?}: sim {} vs analytic {predicted}",
+            waste_sim.mean()
+        );
+    }
+}
+
+/// Prediction-aware heuristics beat prediction-ignoring ones for a good
+/// predictor and short window (Table 4's leftmost column).
+#[test]
+fn prediction_aware_wins_short_window() {
+    let sc = paper_scenario(1 << 16, 300.0, Law::Weibull { shape: 0.7 });
+    let res = evaluate_heuristics(&sc, 30, 0);
+    let get = |n: &str| res.iter().find(|r| r.name == n).unwrap().makespan;
+    let daly = get("Daly");
+    for aware in ["Instant", "NoCkptI", "WithCkptI"] {
+        let gain = 1.0 - get(aware) / daly;
+        assert!(
+            gain > 0.08,
+            "{aware} gain vs Daly only {:.1}% (paper: ~18%)",
+            gain * 100.0
+        );
+    }
+}
+
+/// The paper's Table-4 column shape at 2^19 procs, I=300: gains vs Daly of
+/// roughly 45% for prediction-aware and ~18% for RFO (Weibull 0.7).
+#[test]
+fn table4_gain_ordering_large_platform() {
+    let sc = paper_scenario(1 << 19, 300.0, Law::Weibull { shape: 0.7 });
+    let res = evaluate_heuristics(&sc, 30, 0);
+    let get = |n: &str| res.iter().find(|r| r.name == n).unwrap().makespan;
+    let daly = get("Daly");
+    let rfo_gain = 1.0 - get("RFO") / daly;
+    let aware_gain = 1.0 - get("NoCkptI") / daly;
+    assert!(rfo_gain > 0.02, "RFO gain {rfo_gain}");
+    assert!(
+        aware_gain > rfo_gain,
+        "NoCkptI ({aware_gain}) must beat RFO ({rfo_gain})"
+    );
+}
+
+/// §4.2: "when the prediction window I is shorter than C_p there is no
+/// difference between NoCkptI and WithCkptI" (T_P clamps to one period).
+#[test]
+fn nockpt_equals_withckpt_for_tiny_window() {
+    let mut sc = paper_scenario(1 << 17, 300.0, Law::Exponential);
+    sc.platform.cp = 1200.0; // I < C_p
+    let tr = optimal::tr_extr_window(&sc);
+    let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+    let (w_no, _) = run_instances(
+        &sc,
+        &Policy { kind: PolicyKind::NoCkpt, tr, tp },
+        30,
+    );
+    let (w_with, _) = run_instances(
+        &sc,
+        &Policy { kind: PolicyKind::WithCkpt, tr, tp },
+        30,
+    );
+    // The in-window proactive period exceeds the window: WithCkpt does one
+    // slightly-longer cycle; wastes must be near-identical.
+    assert!(
+        (w_no.mean() - w_with.mean()).abs() < 0.02,
+        "NoCkpt {} vs WithCkpt {}",
+        w_no.mean(),
+        w_with.mean()
+    );
+}
+
+/// §4.2: WithCkptI becomes the heuristic of choice for large windows with
+/// cheap proactive checkpoints.
+#[test]
+fn withckpt_wins_large_window_cheap_cp() {
+    let sc = Scenario::paper(
+        1 << 17,
+        0.1, // C_p = 0.1 C
+        PredictorSpec::paper_a(3000.0),
+        Law::Exponential,
+        Law::Exponential,
+    );
+    let res = evaluate_heuristics(&sc, 40, 0);
+    let get = |n: &str| res.iter().find(|r| r.name == n).unwrap().waste;
+    assert!(
+        get("WithCkptI") < get("NoCkptI"),
+        "WithCkptI {} vs NoCkptI {}",
+        get("WithCkptI"),
+        get("NoCkptI")
+    );
+    assert!(get("WithCkptI") < get("Instant") + 1e-9);
+}
+
+/// Daly is measurably off-optimal under Weibull(0.5) while the
+/// prediction-aware heuristics stay close to their BestPeriod twins (§4.2,
+/// "prediction-aware heuristics are very close to BestPeriod").
+#[test]
+fn bestperiod_gap_daly_vs_aware_weibull() {
+    let sc = paper_scenario(1 << 18, 600.0, Law::Weibull { shape: 0.5 });
+    let res = evaluate_heuristics(&sc, 30, 10);
+    let get = |n: &str| res.iter().find(|r| r.name == n).unwrap().waste;
+    let daly_gap = get("Daly") - get("BestPeriod-NoPred");
+    let aware_gap = get("NoCkptI") - get("BestPeriod-NoCkptI");
+    assert!(
+        daly_gap > aware_gap - 0.01,
+        "daly gap {daly_gap} vs aware gap {aware_gap}"
+    );
+    assert!(aware_gap < 0.06, "aware gap too large: {aware_gap}");
+}
+
+/// Waste grows with the platform size (figures 2–13 x-axis trend).
+#[test]
+fn waste_increases_with_platform_size() {
+    let mut prev = 0.0;
+    for procs in [1u64 << 16, 1 << 17, 1 << 18, 1 << 19] {
+        let sc = paper_scenario(procs, 600.0, Law::Exponential);
+        let pol = Strategy::Rfo.policy(&sc);
+        let (w, _) = run_instances(&sc, &pol, 20);
+        assert!(
+            w.mean() > prev,
+            "waste not increasing at N=2^{}",
+            procs.trailing_zeros()
+        );
+        prev = w.mean();
+    }
+}
+
+/// Degenerate platform params must not panic or hang the engine.
+#[test]
+fn extreme_parameters_are_safe() {
+    let sc = Scenario {
+        platform: Platform { mu: 2000.0, c: 600.0, cp: 1200.0, d: 60.0, r: 600.0 },
+        predictor: PredictorSpec { recall: 0.7, precision: 0.4, window: 3000.0 },
+        fault_law: Law::Weibull { shape: 0.5 },
+        false_pred_law: Law::Uniform,
+        fault_model: FaultModel::PlatformRenewal,
+        job_size: 200_000.0,
+    };
+    for strat in Strategy::paper_set() {
+        let pol = strat.policy(&sc);
+        let out = ckptwin::simulate(&sc, &pol, 3);
+        assert!(out.makespan.is_finite());
+        assert!(out.waste() < 1.0);
+    }
+}
+
+/// The TOML config front-end drives the same pipeline.
+#[test]
+fn config_file_to_simulation() {
+    let text = r#"
+[platform]
+procs = 131072
+cp = 60.0
+[predictor]
+recall = 0.85
+precision = 0.82
+window = 900
+[laws]
+fault = "exponential"
+"#;
+    let sc = ckptwin::config::scenario_from_str(text).unwrap();
+    let res = evaluate_heuristics(&sc, 10, 0);
+    assert_eq!(res.len(), 5);
+    assert!(res.iter().all(|r| r.waste > 0.0 && r.waste < 1.0));
+}

@@ -1,0 +1,286 @@
+//! Property-based tests (offline environment: no proptest — a small
+//! seeded-case runner lives here).  Each property is checked over many
+//! randomly generated configurations; failures print the offending case.
+
+use ckptwin::config::{FaultModel, Platform, PredictorSpec, Scenario};
+use ckptwin::model::{optimal, waste};
+use ckptwin::sim::distribution::Law;
+use ckptwin::sim::rng::Rng;
+use ckptwin::sim::trace::{Event, TraceStream};
+use ckptwin::strategy::{Policy, PolicyKind};
+
+/// Run `prop` over `n` random cases derived from `seed`.
+fn for_cases<F: FnMut(u64, &mut Rng)>(seed: u64, n: usize, mut prop: F) {
+    for case in 0..n {
+        let mut rng = Rng::stream(seed, case as u64);
+        prop(case as u64, &mut rng);
+    }
+}
+
+/// Draw a random but *sane* scenario (the paper's parameter envelope,
+/// slightly widened).
+fn arb_scenario(rng: &mut Rng) -> Scenario {
+    let c = rng.range(60.0, 1200.0);
+    let mu = rng.range(30.0 * c, 800.0 * c);
+    let cp = c * [0.1, 0.5, 1.0, 2.0][rng.below(4)];
+    let window = rng.range(60.0, 3600.0);
+    let law = [
+        Law::Exponential,
+        Law::Weibull { shape: 0.7 },
+        Law::Weibull { shape: 0.5 },
+    ][rng.below(3)];
+    let fp_law = if rng.bernoulli(0.3) { Law::Uniform } else { law };
+    Scenario {
+        platform: Platform {
+            mu,
+            c,
+            cp,
+            d: rng.range(0.0, 120.0),
+            r: rng.range(60.0, 1200.0),
+        },
+        predictor: PredictorSpec {
+            recall: rng.range(0.05, 0.99),
+            precision: rng.range(0.05, 0.99),
+            window,
+        },
+        fault_law: law,
+        false_pred_law: fp_law,
+        fault_model: FaultModel::PlatformRenewal,
+        job_size: rng.range(20.0 * mu, 60.0 * mu).max(100.0 * c),
+    }
+}
+
+fn arb_policy(sc: &Scenario, rng: &mut Rng) -> Policy {
+    let kind = [
+        PolicyKind::IgnorePredictions,
+        PolicyKind::Instant,
+        PolicyKind::NoCkpt,
+        PolicyKind::WithCkpt,
+    ][rng.below(4)];
+    let tr = rng.range(1.05 * sc.platform.c, 50.0 * sc.platform.c);
+    let tp = rng.range(1.05 * sc.platform.cp, 4.0 * sc.platform.cp + 100.0);
+    Policy { kind, tr, tp }
+}
+
+/// Work conservation: makespan is fully decomposed by the outcome buckets,
+/// the waste lies in [0,1), and the makespan is at least the job size.
+#[test]
+fn prop_engine_conservation_and_bounds() {
+    for_cases(11, 60, |case, rng| {
+        let sc = arb_scenario(rng);
+        let pol = arb_policy(&sc, rng);
+        let out = ckptwin::simulate(&sc, &pol, case);
+        let accounted = sc.job_size
+            + out.time_ckpt
+            + out.time_down
+            + out.time_idle
+            + out.work_lost;
+        let rel = (out.makespan - accounted).abs() / out.makespan;
+        assert!(
+            rel < 1e-9,
+            "case {case}: makespan {} != accounted {accounted}\n{sc:?}\n{pol:?}",
+            out.makespan
+        );
+        assert!(out.makespan >= sc.job_size);
+        assert!((0.0..1.0).contains(&out.waste()), "case {case}");
+    });
+}
+
+/// Determinism: identical (scenario, policy, seed) => identical outcome.
+#[test]
+fn prop_engine_deterministic() {
+    for_cases(13, 30, |case, rng| {
+        let sc = arb_scenario(rng);
+        let pol = arb_policy(&sc, rng);
+        let a = ckptwin::simulate(&sc, &pol, case);
+        let b = ckptwin::simulate(&sc, &pol, case);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "case {case}");
+        assert_eq!(a.n_faults, b.n_faults);
+        assert_eq!(a.n_reg_ckpts, b.n_reg_ckpts);
+        assert_eq!(a.n_pro_ckpts, b.n_pro_ckpts);
+    });
+}
+
+/// Checkpoint accounting: completed checkpoint time equals the per-kind
+/// counts times the respective durations.
+#[test]
+fn prop_checkpoint_time_consistent() {
+    for_cases(17, 40, |case, rng| {
+        let sc = arb_scenario(rng);
+        let pol = arb_policy(&sc, rng);
+        let out = ckptwin::simulate(&sc, &pol, case);
+        let expect = out.n_reg_ckpts as f64 * sc.platform.c
+            + out.n_pro_ckpts as f64 * sc.platform.cp;
+        assert!(
+            (out.time_ckpt - expect).abs() < 1e-6 * expect.max(1.0),
+            "case {case}: {} vs {expect}",
+            out.time_ckpt
+        );
+    });
+}
+
+/// Trace invariants: visible-time order; every predicted fault covered by a
+/// window; prediction lead time is exactly C_p.
+#[test]
+fn prop_trace_invariants() {
+    for_cases(19, 30, |case, rng| {
+        let sc = arb_scenario(rng);
+        let mut ts = TraceStream::new(&sc, case);
+        let horizon = 50.0 * sc.platform.mu;
+        let evs = ts.take_until(horizon);
+        let mut prev = 0.0;
+        let mut windows: Vec<(f64, f64)> = Vec::new();
+        for e in &evs {
+            assert!(e.time() >= prev, "case {case}: out of order");
+            prev = e.time();
+            match e {
+                Event::Prediction(p) => {
+                    // Absolute times can be ~1e8; allow f64 cancellation.
+                    let tol = 1e-9 * p.window_start.abs().max(1.0);
+                    assert!(
+                        (p.window_start - p.notify_t - sc.platform.cp).abs()
+                            < tol
+                    );
+                    assert!(
+                        (p.window_end - p.window_start
+                            - sc.predictor.window)
+                            .abs()
+                            < tol
+                    );
+                    if p.true_positive {
+                        windows.push((p.window_start, p.window_end));
+                    }
+                }
+                Event::Fault { t, predicted: true } => {
+                    assert!(
+                        windows.iter().any(|&(s, e)| *t >= s && *t <= e),
+                        "case {case}: predicted fault at {t} uncovered"
+                    );
+                }
+                _ => {}
+            }
+        }
+    });
+}
+
+/// The closed-form optimum beats (or ties) every grid point of its own
+/// waste function — i.e. the calculus in §3.2–3.4 is right.
+#[test]
+fn prop_closed_form_minimizes_waste() {
+    for_cases(23, 40, |case, rng| {
+        let sc = arb_scenario(rng);
+        let cases: [(f64, fn(&Scenario, f64) -> f64); 2] = [
+            (optimal::tr_extr_instant(&sc), waste::instant),
+            (optimal::tr_extr_window(&sc), waste::nockpt),
+        ];
+        for (tr_opt, f) in cases {
+            let w_opt = f(&sc, tr_opt);
+            for k in 1..60 {
+                let tr = sc.platform.c * (1.05 + k as f64);
+                assert!(
+                    f(&sc, tr) >= w_opt - 1e-9,
+                    "case {case}: tr {tr} beats optimum {tr_opt}"
+                );
+            }
+        }
+    });
+}
+
+/// Waste is monotone in 1/μ at fixed period (more faults, more waste) for
+/// the analytic model.
+#[test]
+fn prop_waste_monotone_in_fault_rate() {
+    for_cases(29, 40, |case, rng| {
+        let mut sc = arb_scenario(rng);
+        let tr = rng.range(2.0 * sc.platform.c, 40.0 * sc.platform.c);
+        let tp = optimal::tp_extr(&sc);
+        let mut prev = f64::NEG_INFINITY;
+        for mult in [8.0, 4.0, 2.0, 1.0] {
+            sc.platform.mu = mult * 100.0 * sc.platform.c;
+            let w = waste::withckpt(&sc, tr, tp);
+            assert!(w >= prev - 1e-12, "case {case}");
+            prev = w;
+        }
+    });
+}
+
+/// BestPeriod search never returns something worse than the closed form
+/// (it includes the analytic candidate in its sweep).
+#[test]
+fn prop_best_period_upper_bounded_by_formula() {
+    use ckptwin::strategy::best_period;
+    for_cases(31, 8, |case, rng| {
+        let mut sc = arb_scenario(rng);
+        sc.job_size = sc.job_size.min(30.0 * sc.platform.mu); // keep it fast
+        let kind = [PolicyKind::IgnorePredictions, PolicyKind::NoCkpt]
+            [rng.below(2)];
+        let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.05);
+        let seeds = [case, case + 1000];
+        let tr_formula = match kind {
+            PolicyKind::IgnorePredictions => optimal::rfo_period(&sc.platform),
+            _ => optimal::tr_extr_window(&sc),
+        }
+        .min(sc.job_size);
+        let w_formula =
+            best_period::mean_waste(&sc, kind, tr_formula, tp, &seeds);
+        let bp = best_period::search(&sc, kind, tp, &seeds, 16, 6);
+        assert!(
+            bp.waste <= w_formula + 1e-9,
+            "case {case}: search {} vs formula {w_formula}",
+            bp.waste
+        );
+    });
+}
+
+/// Statistics sanity on real outcomes: CI halves when instances quadruple
+/// (approximately — random, so generous tolerance).
+#[test]
+fn prop_ci_shrinks_with_instances() {
+    use ckptwin::harness::run_instances;
+    let sc = Scenario::paper(
+        1 << 17,
+        1.0,
+        PredictorSpec::paper_a(600.0),
+        Law::Exponential,
+        Law::Exponential,
+    );
+    let pol = ckptwin::strategy::Strategy::Rfo.policy(&sc);
+    let (small, _) = run_instances(&sc, &pol, 8);
+    let (large, _) = run_instances(&sc, &pol, 64);
+    assert!(large.ci95() < small.ci95() * 1.2);
+}
+
+/// The paper's §3.2 claim, verified by simulation: the optimal trust
+/// probability is at an extreme — for every scenario, min over q of the
+/// mean waste is attained (within noise) at q = 0 or q = 1, never strictly
+/// inside (0, 1).
+#[test]
+fn prop_optimal_trust_probability_is_extreme() {
+    use ckptwin::sim::engine::simulate_q;
+    for_cases(37, 10, |case, rng| {
+        let mut sc = arb_scenario(rng);
+        sc.job_size = sc.job_size.min(40.0 * sc.platform.mu);
+        let kind = [PolicyKind::Instant, PolicyKind::NoCkpt, PolicyKind::WithCkpt]
+            [rng.below(3)];
+        let tr = optimal::tr_extr_window(&sc).min(sc.job_size);
+        let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.05);
+        let pol = Policy { kind, tr, tp };
+        let seeds: Vec<u64> = (0..12u64).map(|s| s * 31 + case).collect();
+        let mean = |q: f64| -> f64 {
+            seeds
+                .iter()
+                .map(|&s| simulate_q(&sc, &pol, q, s).waste())
+                .sum::<f64>()
+                / seeds.len() as f64
+        };
+        let extremes = mean(0.0).min(mean(1.0));
+        for q in [0.25, 0.5, 0.75] {
+            // Interior q can beat an extreme only within paired noise.
+            assert!(
+                mean(q) >= extremes - 0.02,
+                "case {case}: q={q} gives {} vs extremes {extremes}",
+                mean(q)
+            );
+        }
+    });
+}

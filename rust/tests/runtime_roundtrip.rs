@@ -1,0 +1,150 @@
+//! PJRT artifact round-trip tests: the L1 Pallas kernel (via its HLO
+//! artifact) must agree with the Rust closed-form model, and the training
+//! artifacts must initialize, step and eval coherently.
+//!
+//! These tests require `make artifacts`; they skip (with a note) otherwise.
+
+use ckptwin::config::{PredictorSpec, Scenario};
+use ckptwin::model::waste::{waste_clipped, GridStrategy};
+use ckptwin::runtime::train::Trainer;
+use ckptwin::runtime::Runtime;
+use ckptwin::sim::distribution::Law;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !Runtime::artifacts_present() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::discover().expect("runtime"))
+}
+
+fn scenarios() -> Vec<Scenario> {
+    let mut out = Vec::new();
+    for procs in [1u64 << 16, 1 << 18, 1 << 19] {
+        for cp_ratio in [1.0, 0.1, 2.0] {
+            for window in [300.0, 1200.0, 3000.0] {
+                for pred in [
+                    PredictorSpec::paper_a(window),
+                    PredictorSpec::paper_b(window),
+                ] {
+                    out.push(Scenario::paper(
+                        procs,
+                        cp_ratio,
+                        pred,
+                        Law::Exponential,
+                        Law::Exponential,
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The kernel (through jax lowering, HLO text, PJRT compilation, f32) and
+/// the Rust f64 closed form agree on the full scenario battery.
+#[test]
+fn waste_grid_artifact_matches_rust_model() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let scs = scenarios();
+    let grid: Vec<f64> = (0..64).map(|k| 650.0 + 900.0 * k as f64).collect();
+    let surfaces = rt.waste_surfaces(&scs, &grid).expect("waste_surfaces");
+    assert_eq!(surfaces.len(), scs.len());
+    let strategies = [
+        GridStrategy::Q0,
+        GridStrategy::Instant,
+        GridStrategy::NoCkpt,
+        GridStrategy::WithCkpt,
+    ];
+    let mut checked = 0usize;
+    for (sc, surface) in scs.iter().zip(&surfaces) {
+        for (si, gs) in strategies.iter().enumerate() {
+            for (gi, &tr) in grid.iter().enumerate() {
+                let got = surface[si][gi] as f64;
+                let want = waste_clipped(sc, *gs, tr);
+                assert!(
+                    (got - want).abs() < 2e-4,
+                    "strategy {si} tr {tr}: artifact {got} vs rust {want}\n{sc:?}"
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert_eq!(checked, scs.len() * 4 * 64);
+}
+
+/// Argmin over the artifact grid lands near the closed-form optimum.
+#[test]
+fn pjrt_best_period_near_closed_form() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let sc = Scenario::paper(
+        1 << 16,
+        1.0,
+        PredictorSpec::paper_a(600.0),
+        Law::Exponential,
+        Law::Exponential,
+    );
+    let lo: f64 = 700.0;
+    let hi: f64 = 80_000.0;
+    let grid: Vec<f64> = (0..512)
+        .map(|k| lo * (hi / lo).powf(k as f64 / 511.0))
+        .collect();
+    let best = rt.best_periods(&sc, &grid).expect("best_periods");
+    let expect = [
+        ckptwin::model::optimal::rfo_period(&sc.platform),
+        ckptwin::model::optimal::tr_extr_instant(&sc),
+        ckptwin::model::optimal::tr_extr_window(&sc),
+        ckptwin::model::optimal::tr_extr_window(&sc),
+    ];
+    for (i, ((tr, _), want)) in best.iter().zip(expect).enumerate() {
+        let rel = (tr - want).abs() / want;
+        assert!(rel < 0.05, "strategy {i}: grid argmin {tr} vs formula {want}");
+    }
+}
+
+/// init -> step -> eval: losses finite, parameters change, training reduces
+/// loss on a repetitive corpus; snapshot/restore rewinds exactly.
+#[test]
+fn train_artifact_learns_and_restores() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut trainer = Trainer::new(&rt, 7).expect("init");
+    let m = rt.manifest.clone();
+
+    // Repetitive corpus: "abcdefgh" cycled — quickly learnable.
+    let tokens: Vec<i32> = (0..m.batch * m.seq_len)
+        .map(|i| (i % 8) as i32 + 97)
+        .collect();
+
+    let theta0 = trainer.snapshot();
+    let l0 = trainer.eval(&tokens).expect("eval");
+    assert!(l0.is_finite() && l0 > 0.0);
+
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        losses.push(trainer.step(&tokens, 0.1).expect("step"));
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let l_end = trainer.eval(&tokens).expect("eval");
+    assert!(
+        l_end < l0 * 0.7,
+        "no learning: {l0} -> {l_end} (losses {losses:?})"
+    );
+    assert_ne!(theta0, trainer.snapshot());
+
+    // Restore rewinds the model exactly.
+    trainer.restore(theta0.clone()).expect("restore");
+    let l_restored = trainer.eval(&tokens).expect("eval");
+    assert!((l_restored - l0).abs() < 1e-5, "{l_restored} vs {l0}");
+}
+
+/// Initialization is seed-deterministic and seeds differ.
+#[test]
+fn init_params_seeded() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let a = Trainer::new(&rt, 1).expect("init").snapshot();
+    let b = Trainer::new(&rt, 1).expect("init").snapshot();
+    let c = Trainer::new(&rt, 2).expect("init").snapshot();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert_eq!(a.len(), rt.manifest.param_count);
+}
