@@ -1,0 +1,54 @@
+//! Bench: the campaign engine — work-stealing grid execution vs
+//! single-thread, and the fixed per-cell costs (expansion, hashing,
+//! store append).
+
+use ckptwin::bench_support::{bench_val, report_throughput};
+use ckptwin::campaign::{self, CampaignOptions, CellOutcome, Grid, Store};
+
+fn main() {
+    let instances: usize = std::env::var("CKPTWIN_INSTANCES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+
+    let grid = Grid::smoke();
+    let n_cells = grid.len();
+
+    let r = bench_val("campaign/expand_smoke_grid", 10.0, || grid.expand().len());
+    report_throughput(&r, n_cells as f64, "cell");
+
+    let paper = Grid::paper();
+    let r = bench_val("campaign/expand_paper_1200_cells", 20.0, || {
+        paper.expand().len()
+    });
+    report_throughput(&r, paper.len() as f64, "cell");
+
+    for (tag, threads) in [("1thread", 1usize), ("all_threads", 0)] {
+        let r = bench_val(
+            &format!("campaign/smoke_grid_{n_cells}cells_{instances}inst_{tag}"),
+            2000.0,
+            || {
+                let opt = CampaignOptions { instances, block: 0, threads };
+                campaign::evaluate_grid(&grid, &opt).len()
+            },
+        );
+        report_throughput(&r, n_cells as f64, "cell");
+    }
+
+    // Store append path (JSON encode + flush per cell).
+    let opt = CampaignOptions { instances, block: 0, threads: 0 };
+    let outcomes: Vec<CellOutcome> = campaign::evaluate_grid(&grid, &opt);
+    let path = std::env::temp_dir().join(format!(
+        "ckptwin-bench-store-{}.jsonl",
+        std::process::id()
+    ));
+    let r = bench_val("campaign/store_append_per_cell", 50.0, || {
+        let mut store = Store::create(&path).expect("store");
+        for o in &outcomes {
+            store.append(&o.record()).expect("append");
+        }
+        store.len()
+    });
+    report_throughput(&r, outcomes.len() as f64, "append");
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,408 @@
+//! Declarative scenario grids: axes → deterministic cell list.
+//!
+//! A [`Grid`] names the axes of a campaign (platform sizes, C_p/C ratios,
+//! fault laws, predictors, window sizes, strategy set); [`Grid::expand`]
+//! cartesian-expands them into a flat, deterministically ordered list of
+//! [`Cell`]s.  Each cell carries a stable 64-bit **scenario hash** (FNV-1a
+//! over a canonical key string — independent of process, platform and
+//! expansion order) that keys the resumable result store, and derives its
+//! own per-instance RNG streams from that hash, so results are identical
+//! whether a cell is computed in a fresh run, a resume, or a differently
+//! sized grid containing it.
+
+use crate::config::{PredictorSpec, Scenario};
+use crate::sim::distribution::Law;
+use crate::strategy::Strategy;
+
+/// FNV-1a 64-bit hash (stable across platforms and runs).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// SplitMix64 finalizer — decorrelates nearby seeds.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Predictor axis values (the paper's two reference predictors).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictorKind {
+    /// Predictor A [Yu et al. 2011]: p = 0.82, r = 0.85.
+    PaperA,
+    /// Predictor B [Zheng et al. 2010]: p = 0.4, r = 0.7.
+    PaperB,
+}
+
+impl PredictorKind {
+    pub fn spec(&self, window: f64) -> PredictorSpec {
+        match self {
+            PredictorKind::PaperA => PredictorSpec::paper_a(window),
+            PredictorKind::PaperB => PredictorSpec::paper_b(window),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PredictorKind::PaperA => "a",
+            PredictorKind::PaperB => "b",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PredictorKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "a" => Some(PredictorKind::PaperA),
+            "b" => Some(PredictorKind::PaperB),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a strategy axis value by its paper name.
+pub fn parse_strategy(s: &str) -> Option<Strategy> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "daly" => Some(Strategy::Daly),
+        "young" => Some(Strategy::Young),
+        "rfo" => Some(Strategy::Rfo),
+        "instant" => Some(Strategy::Instant),
+        "nockpt" | "nockpti" => Some(Strategy::NoCkptI),
+        "withckpt" | "withckpti" => Some(Strategy::WithCkptI),
+        _ => None,
+    }
+}
+
+/// One campaign cell: a fully specified paper scenario plus the strategy to
+/// run on it.  The finest unit of scheduling and aggregation.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub procs: u64,
+    pub cp_ratio: f64,
+    pub fault_law: Law,
+    pub false_pred_law: Law,
+    pub predictor: PredictorSpec,
+    pub strategy: Strategy,
+    /// Job-size multiplier (1.0 = the paper's `Time_base = 10000 y / N`;
+    /// small values make cheap smoke grids for tests and benches).
+    pub scale: f64,
+    /// Stable cell hash (scenario + strategy), derived from [`Cell::key`]
+    /// at construction; keys the result store.
+    pub hash: u64,
+    /// Stable hash of the fault *environment* alone ([`Cell::trace_key`]:
+    /// platform, laws, scale — no strategy, no predictor).  Seeds derive
+    /// from this, so every strategy, predictor and window at one
+    /// environment simulates the *same* fault traces (the paper's
+    /// paired-comparison methodology).
+    pub trace_hash: u64,
+}
+
+impl Cell {
+    pub fn new(
+        procs: u64,
+        cp_ratio: f64,
+        fault_law: Law,
+        false_pred_law: Law,
+        predictor: PredictorSpec,
+        strategy: Strategy,
+        scale: f64,
+    ) -> Cell {
+        let mut cell = Cell {
+            procs,
+            cp_ratio,
+            fault_law,
+            false_pred_law,
+            predictor,
+            strategy,
+            scale,
+            hash: 0,
+            trace_hash: 0,
+        };
+        cell.trace_hash = fnv1a64(cell.trace_key().as_bytes());
+        cell.hash = fnv1a64(cell.key().as_bytes());
+        cell
+    }
+
+    /// Canonical identity of the fault environment: everything that shapes
+    /// the fault arrival process (platform size, C_p ratio, laws, job
+    /// scale) and nothing that doesn't (strategy, predictor p/r/I — the
+    /// fault substream of the trace is predictor-independent).  Cells that
+    /// share this string share [`Cell::instance_seed`] streams, so e.g. a
+    /// Daly baseline and a predictor-B row of Tables 4/5 are scored on
+    /// identical fault traces.
+    pub fn trace_key(&self) -> String {
+        format!(
+            "procs={};cp={};law={};fp={};scale={}",
+            self.procs,
+            self.cp_ratio,
+            self.fault_law.label(),
+            self.false_pred_law.label(),
+            self.scale,
+        )
+    }
+
+    /// Canonical, human-greppable identity string of the full cell.  The
+    /// store hash is FNV-1a of exactly this, so any parameter change
+    /// changes the hash and any re-expansion reproduces it.
+    pub fn key(&self) -> String {
+        format!(
+            "{};p={};r={};I={};strat={}",
+            self.trace_key(),
+            self.predictor.precision,
+            self.predictor.recall,
+            self.predictor.window,
+            self.strategy.name(),
+        )
+    }
+
+    /// The concrete scenario this cell simulates.
+    pub fn scenario(&self) -> Scenario {
+        let mut sc = Scenario::paper(
+            self.procs,
+            self.cp_ratio,
+            self.predictor,
+            self.fault_law,
+            self.false_pred_law,
+        );
+        sc.job_size *= self.scale;
+        sc
+    }
+
+    /// Per-instance RNG seed: an independent, reproducible stream per
+    /// (fault environment, instance) pair.  Derived from
+    /// [`Cell::trace_hash`] — NOT the full cell hash — so all strategies,
+    /// predictors and windows over one environment see identical fault
+    /// traces (paired comparisons, as in the paper), and a cell's
+    /// instances never depend on where it sits in a grid.
+    pub fn instance_seed(&self, instance: u64) -> u64 {
+        mix64(self.trace_hash ^ instance.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+}
+
+/// Declarative axes of a campaign.  `expand()` iterates, outermost first:
+/// fault law → window → procs → C_p ratio → predictor → strategy (matching
+/// the row order of the paper's figure CSVs).
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub procs: Vec<u64>,
+    pub cp_ratios: Vec<f64>,
+    pub fault_laws: Vec<Law>,
+    /// False predictions ~ Uniform (Figures 8–13) instead of the fault law.
+    pub uniform_false_preds: bool,
+    pub predictors: Vec<PredictorKind>,
+    pub windows: Vec<f64>,
+    pub strategies: Vec<Strategy>,
+    pub scale: f64,
+}
+
+impl Grid {
+    /// The paper's full simulation campaign: 4 platform sizes × 2 C_p
+    /// ratios × 3 fault laws × 2 predictors × 5 window sizes, with the
+    /// 5-strategy set — 240 scenario points, 1200 cells.
+    pub fn paper() -> Grid {
+        Grid {
+            procs: crate::harness::PAPER_PROCS.to_vec(),
+            cp_ratios: vec![1.0, 0.1],
+            fault_laws: vec![
+                Law::Exponential,
+                Law::Weibull { shape: 0.7 },
+                Law::Weibull { shape: 0.5 },
+            ],
+            uniform_false_preds: false,
+            predictors: vec![PredictorKind::PaperA, PredictorKind::PaperB],
+            windows: crate::harness::PAPER_WINDOWS.to_vec(),
+            strategies: Strategy::paper_set().to_vec(),
+            scale: 1.0,
+        }
+    }
+
+    /// A cheap smoke grid (single scenario axis values, scaled-down job).
+    pub fn smoke() -> Grid {
+        Grid {
+            procs: vec![1 << 16, 1 << 18],
+            cp_ratios: vec![1.0],
+            fault_laws: vec![Law::Exponential, Law::Weibull { shape: 0.7 }],
+            uniform_false_preds: false,
+            predictors: vec![PredictorKind::PaperA],
+            windows: vec![600.0, 1200.0],
+            strategies: vec![Strategy::Rfo, Strategy::NoCkptI],
+            scale: 0.05,
+        }
+    }
+
+    /// Number of cells `expand()` will produce.
+    pub fn len(&self) -> usize {
+        self.procs.len()
+            * self.cp_ratios.len()
+            * self.fault_laws.len()
+            * self.predictors.len()
+            * self.windows.len()
+            * self.strategies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cartesian-expand the axes into the deterministic cell list.
+    pub fn expand(&self) -> Vec<Cell> {
+        let mut cells = Vec::with_capacity(self.len());
+        for &law in &self.fault_laws {
+            let fp_law = if self.uniform_false_preds { Law::Uniform } else { law };
+            for &window in &self.windows {
+                for &procs in &self.procs {
+                    for &cp_ratio in &self.cp_ratios {
+                        for &pred in &self.predictors {
+                            for &strategy in &self.strategies {
+                                cells.push(Cell::new(
+                                    procs,
+                                    cp_ratio,
+                                    law,
+                                    fp_law,
+                                    pred.spec(window),
+                                    strategy,
+                                    self.scale,
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn paper_grid_shape() {
+        let g = Grid::paper();
+        assert_eq!(g.len(), 4 * 2 * 3 * 2 * 5 * 5);
+        assert_eq!(g.expand().len(), g.len());
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let g = Grid::smoke();
+        let a = g.expand();
+        let b = g.expand();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.key(), y.key());
+            assert_eq!(x.hash, y.hash);
+        }
+    }
+
+    #[test]
+    fn hashes_unique_within_grid() {
+        let cells = Grid::paper().expand();
+        let mut hashes: Vec<u64> = cells.iter().map(|c| c.hash).collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), cells.len());
+    }
+
+    #[test]
+    fn hash_position_independent() {
+        // The same cell in two different grids hashes identically.
+        let mut small = Grid::smoke();
+        small.procs = vec![1 << 16];
+        small.fault_laws = vec![Law::Exponential];
+        small.windows = vec![600.0];
+        small.strategies = vec![Strategy::Rfo];
+        let lone = &small.expand()[0];
+        let full = Grid::smoke().expand();
+        let twin = full.iter().find(|c| c.key() == lone.key()).unwrap();
+        assert_eq!(twin.hash, lone.hash);
+    }
+
+    #[test]
+    fn instance_seeds_distinct() {
+        let cell = &Grid::smoke().expand()[0];
+        let s0 = cell.instance_seed(0);
+        let s1 = cell.instance_seed(1);
+        assert_ne!(s0, s1);
+        assert_eq!(s0, cell.instance_seed(0));
+    }
+
+    #[test]
+    fn strategies_at_one_point_share_traces_but_not_hashes() {
+        // smoke() has two strategies as the innermost axis: cells 0 and 1
+        // are the same scenario under Rfo and NoCkptI.
+        let cells = Grid::smoke().expand();
+        let (a, b) = (&cells[0], &cells[1]);
+        assert_ne!(a.strategy, b.strategy);
+        assert_eq!(a.trace_key(), b.trace_key());
+        assert_eq!(a.trace_hash, b.trace_hash);
+        // Paired comparison: identical instance seeds → identical traces.
+        assert_eq!(a.instance_seed(7), b.instance_seed(7));
+        // But distinct store identities.
+        assert_ne!(a.hash, b.hash);
+        assert_ne!(a.key(), b.key());
+    }
+
+    #[test]
+    fn predictors_and_windows_share_traces_too() {
+        // The fault substream is predictor-independent, so Tables 4/5 can
+        // pair a Daly baseline (predictor A) against predictor-B rows.
+        let a = Cell::new(
+            1 << 16,
+            1.0,
+            Law::Weibull { shape: 0.7 },
+            Law::Weibull { shape: 0.7 },
+            PredictorKind::PaperA.spec(300.0),
+            Strategy::Daly,
+            1.0,
+        );
+        let b = Cell::new(
+            1 << 16,
+            1.0,
+            Law::Weibull { shape: 0.7 },
+            Law::Weibull { shape: 0.7 },
+            PredictorKind::PaperB.spec(1200.0),
+            Strategy::NoCkptI,
+            1.0,
+        );
+        assert_eq!(a.trace_hash, b.trace_hash);
+        assert_eq!(a.instance_seed(3), b.instance_seed(3));
+        assert_ne!(a.hash, b.hash);
+    }
+
+    #[test]
+    fn scenario_scales_job() {
+        let cells = Grid::smoke().expand();
+        let sc = cells[0].scenario();
+        let full = Scenario::paper(
+            cells[0].procs,
+            cells[0].cp_ratio,
+            cells[0].predictor,
+            cells[0].fault_law,
+            cells[0].false_pred_law,
+        );
+        assert!((sc.job_size - full.job_size * 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn strategy_and_predictor_parsing() {
+        assert_eq!(parse_strategy("withckpt"), Some(Strategy::WithCkptI));
+        assert_eq!(parse_strategy("NoCkptI"), Some(Strategy::NoCkptI));
+        assert_eq!(parse_strategy("nope"), None);
+        assert_eq!(PredictorKind::parse("A"), Some(PredictorKind::PaperA));
+        assert_eq!(PredictorKind::parse("x"), None);
+    }
+}

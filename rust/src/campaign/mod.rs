@@ -1,0 +1,303 @@
+//! Campaign engine: declarative scenario grids, work-stealing execution,
+//! streaming aggregation, and resumable on-disk checkpoints.
+//!
+//! The paper validates its analytic model with a large cross-product of
+//! simulated scenarios (Figures 2–21: platform sizes × C_p ratios × fault
+//! laws × predictors × window sizes × strategies).  This module turns that
+//! cross-product into a first-class object:
+//!
+//! ```text
+//!   Grid ──expand──▶ [Cell; N] ──(cell × instance-block units)──▶
+//!     scheduler::run_units (shared atomic work queue, scoped threads)
+//!       each unit: simulate a block of instances → Welford partials
+//!     last unit of a cell: merge partials IN BLOCK ORDER (deterministic)
+//!       ──▶ CellOutcome ──append──▶ Store (JSONL keyed by scenario hash)
+//! ```
+//!
+//! * **Determinism** — cell hashes and per-instance seeds derive from the
+//!   cell parameters alone; partial aggregates merge in block order, so any
+//!   thread count (including 1) produces bit-identical per-cell results.
+//! * **Streaming** — memory is O(cells), never O(cells × instances):
+//!   instances fold into constant-size [`Welford`] accumulators as they
+//!   finish.
+//! * **Resumability** — completed cells land in the [`Store`] immediately;
+//!   [`run_cells`] skips cells whose hash the store already holds, so an
+//!   interrupted campaign recomputes only what is missing.
+//!
+//! The harness figure/table runners drive their grids through this engine
+//! (`harness::figures`, `harness::tables`), and the `campaign` CLI
+//! subcommand (run / resume / report) exposes it directly.
+
+pub mod grid;
+pub mod scheduler;
+pub mod store;
+
+pub use grid::{Cell, Grid, PredictorKind};
+pub use store::{CellRecord, Store};
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::sim::engine::simulate;
+use crate::stats::Welford;
+
+/// Execution knobs for a campaign.
+#[derive(Clone, Copy, Debug)]
+pub struct CampaignOptions {
+    /// Random instances per cell (the paper uses 100).
+    pub instances: usize,
+    /// Instances per work unit; 0 = auto (instances/4, clamped to [1, 32]).
+    /// Smaller blocks steal better; larger blocks amortize scenario setup.
+    pub block: usize,
+    /// Worker threads; 0 = all available cores.
+    pub threads: usize,
+}
+
+impl Default for CampaignOptions {
+    fn default() -> Self {
+        CampaignOptions { instances: 100, block: 0, threads: 0 }
+    }
+}
+
+impl CampaignOptions {
+    fn block_size(&self) -> usize {
+        if self.block > 0 {
+            self.block.min(self.instances.max(1))
+        } else {
+            (self.instances / 4).clamp(1, 32)
+        }
+    }
+}
+
+/// Aggregated outcome of one executed cell.
+#[derive(Clone, Debug)]
+pub struct CellOutcome {
+    pub cell: Cell,
+    pub waste: Welford,
+    pub makespan: Welford,
+    /// Regular period the strategy used (s).
+    pub tr: f64,
+}
+
+impl CellOutcome {
+    /// The persisted form of this outcome.
+    pub fn record(&self) -> CellRecord {
+        CellRecord {
+            hash: self.cell.hash,
+            key: self.cell.key(),
+            instances: self.waste.len() as u64,
+            waste_mean: self.waste.mean(),
+            waste_var: self.waste.var(),
+            waste_ci95: self.waste.ci95(),
+            waste_min: self.waste.min(),
+            waste_max: self.waste.max(),
+            makespan_mean: self.makespan.mean(),
+            tr: self.tr,
+        }
+    }
+}
+
+/// Per-cell in-flight state: one slot per instance block, merged in slot
+/// order by whichever worker completes the last block.
+struct CellState {
+    slots: Vec<Option<(Welford, Welford)>>,
+    remaining: usize,
+    done: Option<CellOutcome>,
+}
+
+/// Is `cell` already satisfactorily computed in `store`?  True when a
+/// record exists with at least the requested instance count — resuming
+/// with a larger `--instances` recomputes (and supersedes) cells stored at
+/// lower precision instead of silently keeping them.
+pub fn cell_complete(store: &Store, cell: &Cell, instances: usize) -> bool {
+    store
+        .get(cell.hash)
+        .is_some_and(|rec| rec.instances >= instances.max(1) as u64)
+}
+
+/// Execute `cells` through the work-stealing pool.
+///
+/// Cells already computed in `store` with enough instances are skipped
+/// (resume; see [`cell_complete`]), and duplicate-hash cells (e.g. a
+/// repeated CLI axis value expanding the same scenario twice) are executed
+/// once — later duplicates count as skipped.  Each newly completed cell is
+/// appended to `store` (and flushed) the moment its last instance block
+/// lands; an append failure (disk full, permissions) aborts with that
+/// error after the in-flight units drain.  Returns the newly computed
+/// outcomes in (deduplicated) cell order plus the number of skipped cells.
+pub fn run_cells(
+    cells: &[Cell],
+    opt: &CampaignOptions,
+    store: Option<&mut Store>,
+) -> Result<(Vec<CellOutcome>, usize)> {
+    let instances = opt.instances.max(1);
+    let block = opt.block_size();
+    let blocks_per_cell = instances.div_ceil(block);
+
+    let mut seen = std::collections::BTreeSet::new();
+    let pending: Vec<usize> = (0..cells.len())
+        .filter(|&i| {
+            seen.insert(cells[i].hash)
+                && store
+                    .as_ref()
+                    .map_or(true, |s| !cell_complete(s, &cells[i], instances))
+        })
+        .collect();
+    let skipped = cells.len() - pending.len();
+    if pending.is_empty() {
+        return Ok((Vec::new(), skipped));
+    }
+
+    let states: Vec<Mutex<CellState>> = pending
+        .iter()
+        .map(|_| {
+            Mutex::new(CellState {
+                slots: vec![None; blocks_per_cell],
+                remaining: blocks_per_cell,
+                done: None,
+            })
+        })
+        .collect();
+    let store_mx = store.map(Mutex::new);
+    let append_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+    let n_units = pending.len() * blocks_per_cell;
+    scheduler::run_units(n_units, opt.threads, |u| {
+        let (ci, bi) = (u / blocks_per_cell, u % blocks_per_cell);
+        let cell = &cells[pending[ci]];
+        let sc = cell.scenario();
+        let pol = cell.strategy.policy(&sc);
+        let mut waste = Welford::new();
+        let mut makespan = Welford::new();
+        for i in (bi * block)..((bi + 1) * block).min(instances) {
+            let out = simulate(&sc, &pol, cell.instance_seed(i as u64));
+            waste.push(out.waste());
+            makespan.push(out.makespan);
+        }
+        let mut st = states[ci].lock().expect("cell state poisoned");
+        st.slots[bi] = Some((waste, makespan));
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            // Merge partials in block order — deterministic for any thread
+            // count and any completion order.
+            let mut waste = Welford::new();
+            let mut makespan = Welford::new();
+            for slot in st.slots.drain(..) {
+                let (w, m) = slot.expect("all blocks complete");
+                waste.merge(&w);
+                makespan.merge(&m);
+            }
+            let outcome = CellOutcome { cell: cell.clone(), waste, makespan, tr: pol.tr };
+            if let Some(mx) = &store_mx {
+                let mut s = mx.lock().expect("store poisoned");
+                if let Err(e) = s.append(&outcome.record()) {
+                    let mut slot = append_err.lock().expect("append_err poisoned");
+                    if slot.is_none() {
+                        *slot = Some(e.context(format!(
+                            "persisting cell {:016x}",
+                            outcome.cell.hash
+                        )));
+                    }
+                }
+            }
+            st.done = Some(outcome);
+        }
+    });
+
+    if let Some(e) = append_err.into_inner().expect("append_err poisoned") {
+        return Err(e);
+    }
+    let outcomes = states
+        .into_iter()
+        .map(|st| {
+            st.into_inner()
+                .expect("cell state poisoned")
+                .done
+                .expect("cell completed")
+        })
+        .collect();
+    Ok((outcomes, skipped))
+}
+
+/// Expand and execute a grid without a store (in-memory sweep); outcomes in
+/// grid expansion order.
+pub fn evaluate_grid(g: &Grid, opt: &CampaignOptions) -> Vec<CellOutcome> {
+    run_cells(&g.expand(), opt, None)
+        .expect("in-memory campaign has no store to fail")
+        .0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy::Strategy;
+
+    fn tiny_grid() -> Grid {
+        let mut g = Grid::smoke();
+        g.procs = vec![1 << 16];
+        g.windows = vec![600.0];
+        g.scale = 0.02;
+        g.strategies = vec![Strategy::Rfo, Strategy::NoCkptI];
+        g
+    }
+
+    #[test]
+    fn outcomes_follow_expansion_order() {
+        let g = tiny_grid();
+        let opt = CampaignOptions { instances: 3, block: 2, threads: 2 };
+        let outcomes = evaluate_grid(&g, &opt);
+        let cells = g.expand();
+        assert_eq!(outcomes.len(), cells.len());
+        for (o, c) in outcomes.iter().zip(&cells) {
+            assert_eq!(o.cell.hash, c.hash);
+            assert_eq!(o.waste.len(), 3);
+            assert!(o.waste.mean() > 0.0 && o.waste.mean() < 1.0);
+            assert!(o.makespan.mean() > 0.0);
+            assert!(o.tr > 0.0);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_aggregates() {
+        let g = tiny_grid();
+        for block in [1, 2, 5] {
+            let serial = evaluate_grid(
+                &g,
+                &CampaignOptions { instances: 5, block, threads: 1 },
+            );
+            let parallel = evaluate_grid(
+                &g,
+                &CampaignOptions { instances: 5, block, threads: 8 },
+            );
+            for (a, b) in serial.iter().zip(&parallel) {
+                assert_eq!(a.waste, b.waste, "cell {}", a.cell.key());
+                assert_eq!(a.makespan, b.makespan);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_cells_run_once() {
+        let g = tiny_grid();
+        let cells = g.expand();
+        // Expand the same grid twice into one list: every cell duplicated.
+        let mut doubled = cells.clone();
+        doubled.extend(cells.iter().cloned());
+        let opt = CampaignOptions { instances: 2, block: 1, threads: 2 };
+        let (outcomes, skipped) = run_cells(&doubled, &opt, None).unwrap();
+        assert_eq!(outcomes.len(), cells.len());
+        assert_eq!(skipped, cells.len());
+    }
+
+    #[test]
+    fn block_partition_covers_all_instances() {
+        let g = tiny_grid();
+        // 7 instances in blocks of 3: 3 + 3 + 1.
+        let opt = CampaignOptions { instances: 7, block: 3, threads: 4 };
+        for o in evaluate_grid(&g, &opt) {
+            assert_eq!(o.waste.len(), 7);
+            assert_eq!(o.makespan.len(), 7);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Work-stealing execution over scoped std threads.
+//!
+//! Replaces the static per-thread chunking the harness used to do: workers
+//! claim units one at a time from a shared atomic queue (`fetch_add`
+//! self-scheduling), so a skewed unit (a large-window cell, a heavy-tailed
+//! Weibull instance) delays only the thread running it instead of
+//! serializing a whole pre-assigned chunk at the tail of the run.
+//!
+//! Results are returned **in unit order**, independent of which worker
+//! computed what — callers get determinism for free and can merge
+//! per-unit partial aggregates in a fixed order (see
+//! [`crate::stats::Welford::merge`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count for `n_units` of work: all available cores, but never more
+/// threads than units.
+pub fn default_threads(n_units: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(n_units.max(1))
+}
+
+/// Execute `n` independent units on `threads` workers pulling from a shared
+/// atomic work queue; `f(i)` computes unit `i`.  Returns the results in
+/// unit order.  `threads == 0` selects [`default_threads`].  With one
+/// thread (or one unit) the units run inline on the caller, bit-identically
+/// to the parallel path.
+pub fn run_units<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = match threads {
+        0 => default_threads(n),
+        t => t.min(n),
+    };
+    if threads <= 1 {
+        return (0..n).map(|i| f(i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("campaign worker panicked") {
+                out[i] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_in_unit_order() {
+        let out = run_units(100, 8, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn single_thread_matches_parallel() {
+        let serial = run_units(37, 1, |i| (i as f64).sqrt());
+        let parallel = run_units(37, 6, |i| (i as f64).sqrt());
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn every_unit_runs_exactly_once() {
+        let counter = AtomicU64::new(0);
+        let out = run_units(250, 4, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(out.len(), 250);
+        assert_eq!(counter.load(Ordering::Relaxed), 250);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(run_units(0, 8, |i| i), Vec::<usize>::new());
+        assert_eq!(run_units(1, 8, |i| i + 1), vec![1]);
+        assert_eq!(run_units(3, 0, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn skewed_units_complete() {
+        // One unit is 100x heavier; the queue must still drain fully.
+        let out = run_units(40, 4, |i| {
+            let spins = if i == 0 { 200_000 } else { 2_000 };
+            let mut acc = 0u64;
+            for k in 0..spins {
+                acc = acc.wrapping_mul(31).wrapping_add(k);
+            }
+            (i, acc)
+        });
+        assert_eq!(out.len(), 40);
+        for (i, (idx, _)) in out.iter().enumerate() {
+            assert_eq!(*idx, i);
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Resumable on-disk result store: one JSON line per completed cell,
+//! keyed by the stable scenario hash.
+//!
+//! Cells are appended (and flushed) as they complete, so an interrupted
+//! campaign loses at most the cells in flight; `campaign resume` reopens
+//! the store, reads the hashes already present, and recomputes only the
+//! missing cells — the sweep runner itself checkpoints, mirroring the
+//! paper's subject.  A torn final line (the process died mid-write) is
+//! detected and ignored on load.
+//!
+//! Hashes are serialized as 16-digit hex strings, not JSON numbers: JSON
+//! numbers round-trip through f64 and would corrupt 64-bit keys.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::jsonio::{self, Value};
+
+/// One persisted cell result (one JSONL line).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRecord {
+    /// Stable scenario hash ([`crate::campaign::grid::Cell::hash`]).
+    pub hash: u64,
+    /// Canonical cell key (provenance; greppable).
+    pub key: String,
+    pub instances: u64,
+    pub waste_mean: f64,
+    pub waste_var: f64,
+    pub waste_ci95: f64,
+    pub waste_min: f64,
+    pub waste_max: f64,
+    pub makespan_mean: f64,
+    /// Regular period the strategy used (s).
+    pub tr: f64,
+}
+
+impl CellRecord {
+    fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("hash".into(), Value::Str(format!("{:016x}", self.hash)));
+        obj.insert("key".into(), Value::Str(self.key.clone()));
+        obj.insert("instances".into(), Value::Num(self.instances as f64));
+        obj.insert("waste_mean".into(), Value::Num(self.waste_mean));
+        obj.insert("waste_var".into(), Value::Num(self.waste_var));
+        obj.insert("waste_ci95".into(), Value::Num(self.waste_ci95));
+        obj.insert("waste_min".into(), Value::Num(self.waste_min));
+        obj.insert("waste_max".into(), Value::Num(self.waste_max));
+        obj.insert("makespan_mean".into(), Value::Num(self.makespan_mean));
+        obj.insert("tr".into(), Value::Num(self.tr));
+        jsonio::to_string(&Value::Obj(obj))
+    }
+
+    fn from_json(line: &str) -> Option<CellRecord> {
+        let v = jsonio::parse(line).ok()?;
+        let num = |k: &str| v.get(k).and_then(Value::as_f64);
+        Some(CellRecord {
+            hash: u64::from_str_radix(v.get("hash")?.as_str()?, 16).ok()?,
+            key: v.get("key")?.as_str()?.to_string(),
+            instances: num("instances")? as u64,
+            waste_mean: num("waste_mean")?,
+            waste_var: num("waste_var")?,
+            waste_ci95: num("waste_ci95")?,
+            waste_min: num("waste_min")?,
+            waste_max: num("waste_max")?,
+            makespan_mean: num("makespan_mean")?,
+            tr: num("tr")?,
+        })
+    }
+}
+
+/// Append-only JSONL store with an in-memory index by scenario hash.
+pub struct Store {
+    path: PathBuf,
+    file: File,
+    records: BTreeMap<u64, CellRecord>,
+    /// Unparseable lines skipped on open (a torn tail from an interrupt).
+    pub skipped_lines: usize,
+}
+
+impl Store {
+    /// Open for resuming: parse existing records (creating the file if
+    /// missing) and append new ones after them.
+    pub fn open(path: impl AsRef<Path>) -> Result<Store> {
+        Store::open_inner(path.as_ref(), false)
+    }
+
+    /// Open for a fresh run: truncate any existing store.
+    pub fn create(path: impl AsRef<Path>) -> Result<Store> {
+        Store::open_inner(path.as_ref(), true)
+    }
+
+    fn open_inner(path: &Path, truncate: bool) -> Result<Store> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let mut records = BTreeMap::new();
+        let mut skipped_lines = 0;
+        if !truncate && path.exists() {
+            let reader = BufReader::new(
+                File::open(path).with_context(|| format!("opening {}", path.display()))?,
+            );
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match CellRecord::from_json(&line) {
+                    Some(rec) => {
+                        records.insert(rec.hash, rec);
+                    }
+                    None => skipped_lines += 1,
+                }
+            }
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(!truncate)
+            .write(true)
+            .truncate(truncate)
+            .open(path)
+            .with_context(|| format!("opening {} for append", path.display()))?;
+        // Repair a torn tail: if the last line was cut before its newline,
+        // terminate it so the next append starts on a fresh line.
+        if !truncate {
+            let len = file.metadata()?.len();
+            if len > 0 {
+                let mut last = [0u8; 1];
+                let mut probe = File::open(path)?;
+                std::io::Seek::seek(&mut probe, std::io::SeekFrom::End(-1))?;
+                std::io::Read::read_exact(&mut probe, &mut last)?;
+                if last[0] != b'\n' {
+                    file.write_all(b"\n")?;
+                    file.flush()?;
+                }
+            }
+        }
+        Ok(Store { path: path.to_path_buf(), file, records, skipped_lines })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn contains(&self, hash: u64) -> bool {
+        self.records.contains_key(&hash)
+    }
+
+    pub fn get(&self, hash: u64) -> Option<&CellRecord> {
+        self.records.get(&hash)
+    }
+
+    /// All records, ordered by hash.
+    pub fn records(&self) -> impl Iterator<Item = &CellRecord> {
+        self.records.values()
+    }
+
+    /// Append one completed cell and flush it to disk immediately.  A
+    /// record whose hash is already present supersedes the earlier line
+    /// (last-wins, both in memory and on reload) — resume uses this to
+    /// upgrade cells recomputed with a higher instance count.
+    pub fn append(&mut self, rec: &CellRecord) -> Result<()> {
+        let mut line = rec.to_json();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.flush()?;
+        self.records.insert(rec.hash, rec.clone());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "ckptwin-store-{tag}-{}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    fn rec(hash: u64) -> CellRecord {
+        CellRecord {
+            hash,
+            key: format!("cell-{hash}"),
+            instances: 10,
+            waste_mean: 0.125,
+            waste_var: 1e-4,
+            waste_ci95: 0.006,
+            waste_min: 0.1,
+            waste_max: 0.15,
+            makespan_mean: 5.5e6,
+            tr: 4321.0,
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_resume() {
+        let path = tmp("rt");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = Store::create(&path).unwrap();
+            s.append(&rec(1)).unwrap();
+            s.append(&rec(u64::MAX - 3)).unwrap();
+            assert_eq!(s.len(), 2);
+        }
+        let s = Store::open(&path).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(1));
+        assert!(s.contains(u64::MAX - 3)); // 64-bit keys survive JSON
+        assert_eq!(s.get(1).unwrap(), &rec(1));
+        assert_eq!(s.skipped_lines, 0);
+    }
+
+    #[test]
+    fn create_truncates_open_appends() {
+        let path = tmp("trunc");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = Store::create(&path).unwrap();
+            s.append(&rec(7)).unwrap();
+        }
+        {
+            let mut s = Store::open(&path).unwrap();
+            assert_eq!(s.len(), 1);
+            s.append(&rec(8)).unwrap();
+        }
+        {
+            let s = Store::open(&path).unwrap();
+            assert_eq!(s.len(), 2);
+        }
+        let s = Store::create(&path).unwrap();
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn torn_tail_is_skipped() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = Store::create(&path).unwrap();
+            s.append(&rec(11)).unwrap();
+            s.append(&rec(12)).unwrap();
+        }
+        // Simulate an interrupt mid-write: append half a JSON line.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"hash\":\"00000000000");
+        std::fs::write(&path, text).unwrap();
+        let mut s = Store::open(&path).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.skipped_lines, 1);
+        // And the store stays appendable after the torn line.
+        s.append(&rec(13)).unwrap();
+        drop(s);
+        let s = Store::open(&path).unwrap();
+        assert!(s.contains(13));
+    }
+
+    #[test]
+    fn reappend_supersedes_last_wins() {
+        let path = tmp("supersede");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = Store::create(&path).unwrap();
+            s.append(&rec(5)).unwrap();
+            let mut upgraded = rec(5);
+            upgraded.instances = 100;
+            s.append(&upgraded).unwrap();
+            assert_eq!(s.len(), 1);
+            assert_eq!(s.get(5).unwrap().instances, 100);
+        }
+        // Last-wins survives reload (two physical lines, one record).
+        let s = Store::open(&path).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(5).unwrap().instances, 100);
+    }
+}

@@ -29,7 +29,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::config::Scenario;
-use crate::model::waste::{waste_clipped, GridStrategy};
+use crate::model::waste::waste_clipped;
 use crate::sim::trace::{Event, TraceStream};
 use crate::strategy::{Policy, PolicyKind};
 use checkpoint::CheckpointStore;
@@ -342,15 +342,7 @@ pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Re
     rep.sim_makespan = sim_t;
     let job_sim_seconds = job_steps as f64 * sps;
     rep.sim_waste = (sim_t - job_sim_seconds) / sim_t;
-    rep.predicted_waste = {
-        let strat = match pol.kind {
-            PolicyKind::IgnorePredictions => GridStrategy::Q0,
-            PolicyKind::Instant => GridStrategy::Instant,
-            PolicyKind::NoCkpt => GridStrategy::NoCkpt,
-            PolicyKind::WithCkpt => GridStrategy::WithCkpt,
-        };
-        waste_clipped(sc, strat, pol.tr)
-    };
+    rep.predicted_waste = waste_clipped(sc, pol.kind.grid_strategy(), pol.tr);
     rep.wall_seconds = wall_start.elapsed().as_secs_f64();
     Ok(rep)
 }

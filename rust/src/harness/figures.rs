@@ -11,11 +11,14 @@
 //! is a 3 (distribution) × 5 (window size) panel over the 4 platform sizes.
 //! Every runner returns its CSV rows and writes `results/figN.csv`.
 
+use crate::campaign::{self, CampaignOptions, CellOutcome, Grid, PredictorKind};
 use crate::config::{PredictorSpec, Scenario};
 use crate::sim::distribution::Law;
+use crate::strategy::Strategy;
 
 use super::{
-    evaluate_heuristics, write_csv, HeuristicResult, PAPER_PROCS, PAPER_WINDOWS,
+    best_period_results_seeded, write_csv, HeuristicResult, PAPER_PROCS,
+    PAPER_WINDOWS,
 };
 
 /// The three failure distributions of §4.1.
@@ -91,29 +94,90 @@ fn push_rows(
     }
 }
 
+/// Convert a campaign cell outcome into the harness's result row shape.
+fn outcome_to_result(o: &CellOutcome) -> HeuristicResult {
+    use crate::model::waste::waste_clipped;
+    let sc = o.cell.scenario();
+    let gs = o.cell.strategy.kind().grid_strategy();
+    HeuristicResult {
+        name: o.cell.strategy.name().to_string(),
+        waste: o.waste.mean(),
+        waste_ci: o.waste.ci95(),
+        makespan: o.makespan.mean(),
+        analytic_waste: waste_clipped(&sc, gs, o.tr),
+        tr: o.tr,
+    }
+}
+
+/// Execute a figure grid through the campaign engine and format its CSV
+/// rows (one group of strategy rows — plus optional BestPeriod twins — per
+/// scenario point).  Cells are parallelized across the whole grid by the
+/// work-stealing pool, not point by point.
+fn waste_rows_via_campaign(
+    fig: u8,
+    grid: &Grid,
+    instances: usize,
+    best_period_seeds: usize,
+) -> Vec<String> {
+    let opt = CampaignOptions { instances, block: 0, threads: 0 };
+    let outcomes = campaign::evaluate_grid(grid, &opt);
+    let per_point = grid.strategies.len();
+    let mut rows = Vec::new();
+    for chunk in outcomes.chunks(per_point) {
+        let cell = &chunk[0].cell;
+        let results: Vec<HeuristicResult> =
+            chunk.iter().map(outcome_to_result).collect();
+        push_rows(
+            &mut rows,
+            fig,
+            cell.fault_law,
+            cell.predictor.window,
+            cell.procs,
+            &results,
+        );
+        if best_period_seeds > 0 {
+            // Evaluate the twins on the cell's own seed streams so they
+            // stay trace-paired with the strategy rows above.
+            let bp = best_period_results_seeded(
+                &cell.scenario(),
+                instances,
+                best_period_seeds,
+                |i| cell.instance_seed(i),
+            );
+            push_rows(
+                &mut rows,
+                fig,
+                cell.fault_law,
+                cell.predictor.window,
+                cell.procs,
+                &bp,
+            );
+        }
+    }
+    rows
+}
+
 /// Run one waste-vs-N figure; returns the CSV rows written.
 pub fn run_waste_vs_n(
     spec: &WasteVsNSpec,
     instances: usize,
     best_period_seeds: usize,
 ) -> std::io::Result<Vec<String>> {
-    let mut rows = Vec::new();
-    for law in PAPER_LAWS {
-        for &window in &PAPER_WINDOWS {
-            for &procs in &PAPER_PROCS {
-                let sc = Scenario::paper(
-                    procs,
-                    spec.cp_ratio,
-                    predictor(spec.predictor_a, window),
-                    law,
-                    if spec.uniform_false_preds { Law::Uniform } else { law },
-                );
-                let res =
-                    evaluate_heuristics(&sc, instances, best_period_seeds);
-                push_rows(&mut rows, spec.id, law, window, procs, &res);
-            }
-        }
-    }
+    let grid = Grid {
+        procs: PAPER_PROCS.to_vec(),
+        cp_ratios: vec![spec.cp_ratio],
+        fault_laws: PAPER_LAWS.to_vec(),
+        uniform_false_preds: spec.uniform_false_preds,
+        predictors: vec![if spec.predictor_a {
+            PredictorKind::PaperA
+        } else {
+            PredictorKind::PaperB
+        }],
+        windows: PAPER_WINDOWS.to_vec(),
+        strategies: Strategy::paper_set().to_vec(),
+        scale: 1.0,
+    };
+    let rows = waste_rows_via_campaign(spec.id, &grid, instances, best_period_seeds);
     write_csv(&format!("fig{}", spec.id), WASTE_HEADER, &rows)?;
     Ok(rows)
 }
@@ -145,8 +209,8 @@ pub fn run_waste_vs_tr(
     instances: usize,
     grid_points: usize,
 ) -> std::io::Result<Vec<String>> {
-    use crate::model::waste::{waste_clipped, GridStrategy};
-    use crate::strategy::{Policy, PolicyKind, Strategy};
+    use crate::model::waste::waste_clipped;
+    use crate::strategy::{Policy, PolicyKind};
 
     // The paper's T_R plots use I = 600 s, C_p = C, failure-law FPs.
     let window = 600.0;
@@ -163,16 +227,17 @@ pub fn run_waste_vs_tr(
         let lo = 1.1 * c;
         let hi = (sc.job_size).min(400.0 * c);
         let ratio = (hi / lo).powf(1.0 / (grid_points - 1) as f64);
-        let heuristics: [(&str, PolicyKind, GridStrategy); 4] = [
-            ("RFO", PolicyKind::IgnorePredictions, GridStrategy::Q0),
-            ("Instant", PolicyKind::Instant, GridStrategy::Instant),
-            ("NoCkptI", PolicyKind::NoCkpt, GridStrategy::NoCkpt),
-            ("WithCkptI", PolicyKind::WithCkpt, GridStrategy::WithCkpt),
+        let heuristics: [(&str, PolicyKind); 4] = [
+            ("RFO", PolicyKind::IgnorePredictions),
+            ("Instant", PolicyKind::Instant),
+            ("NoCkptI", PolicyKind::NoCkpt),
+            ("WithCkptI", PolicyKind::WithCkpt),
         ];
         let tp = crate::model::optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
         for k in 0..grid_points {
             let tr = lo * ratio.powi(k as i32);
-            for (name, kind, gs) in heuristics {
+            for (name, kind) in heuristics {
+                let gs = kind.grid_strategy();
                 let pol = Policy { kind, tr, tp };
                 // Terrible periods in the sweep are capped (waste saturates
                 // near 1 anyway); see engine::simulate_from_capped.
@@ -236,20 +301,21 @@ pub fn run_waste_vs_i(
     instances: usize,
     best_period_seeds: usize,
 ) -> std::io::Result<Vec<String>> {
-    let mut rows = Vec::new();
-    for law in PAPER_LAWS {
-        for &window in &I_SWEEP {
-            let sc = Scenario::paper(
-                spec.procs,
-                1.0,
-                predictor(spec.predictor_a, window),
-                law,
-                law,
-            );
-            let res = evaluate_heuristics(&sc, instances, best_period_seeds);
-            push_rows(&mut rows, spec.id, law, window, spec.procs, &res);
-        }
-    }
+    let grid = Grid {
+        procs: vec![spec.procs],
+        cp_ratios: vec![1.0],
+        fault_laws: PAPER_LAWS.to_vec(),
+        uniform_false_preds: false,
+        predictors: vec![if spec.predictor_a {
+            PredictorKind::PaperA
+        } else {
+            PredictorKind::PaperB
+        }],
+        windows: I_SWEEP.to_vec(),
+        strategies: Strategy::paper_set().to_vec(),
+        scale: 1.0,
+    };
+    let rows = waste_rows_via_campaign(spec.id, &grid, instances, best_period_seeds);
     write_csv(&format!("fig{}", spec.id), WASTE_HEADER, &rows)?;
     Ok(rows)
 }

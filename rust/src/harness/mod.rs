@@ -7,10 +7,13 @@
 //! * [`plot`] — ASCII plots for terminal inspection (CSV is the primary
 //!   output, under `results/`).
 //!
-//! Simulations are parallelized across instances with scoped std threads
-//! (the offline environment provides no rayon/tokio).  Instance counts
-//! default to the paper's 100 and can be overridden with the
-//! `CKPTWIN_INSTANCES` environment variable (benches use small counts).
+//! Simulations are parallelized across instances through the campaign
+//! engine's work-stealing pool (`campaign::scheduler` — a shared atomic
+//! work queue over scoped std threads; the offline environment provides no
+//! rayon/tokio), and the figure/table grid runners drive their scenario
+//! grids through `campaign::run_cells`.  Instance counts default to the
+//! paper's 100 and can be overridden with the `CKPTWIN_INSTANCES`
+//! environment variable (benches use small counts).
 
 pub mod figures;
 pub mod plot;
@@ -56,46 +59,23 @@ pub fn run_seeds(sc: &Scenario, policy: &Policy, seeds: &[u64]) -> Vec<SimOutcom
 
 /// [`run_seeds`] with a makespan cap (see `engine::simulate_from_capped`);
 /// used by period sweeps that deliberately visit terrible periods.
+///
+/// Seeds are claimed one at a time from the campaign scheduler's shared
+/// work queue (not statically chunked), so one heavy-tailed instance no
+/// longer serializes a whole chunk at the tail of the run.
 pub fn run_seeds_capped(
     sc: &Scenario,
     policy: &Policy,
     seeds: &[u64],
     cap: f64,
 ) -> Vec<SimOutcome> {
+    use crate::campaign::scheduler;
     use crate::sim::engine::simulate_from_capped;
     use crate::sim::trace::TraceStream;
-    let run_one = |seed: u64| {
-        simulate_from_capped(
-            sc,
-            policy,
-            1.0,
-            seed,
-            TraceStream::new(sc, seed),
-            cap,
-        )
-    };
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(seeds.len().max(1));
-    if threads <= 1 || seeds.len() < 4 {
-        return seeds.iter().map(|&s| run_one(s)).collect();
-    }
-    let chunk = seeds.len().div_ceil(threads);
-    let mut out: Vec<Option<SimOutcome>> = vec![None; seeds.len()];
-    std::thread::scope(|scope| {
-        for (slot_chunk, seed_chunk) in
-            out.chunks_mut(chunk).zip(seeds.chunks(chunk))
-        {
-            let run_one = &run_one;
-            scope.spawn(move || {
-                for (slot, &seed) in slot_chunk.iter_mut().zip(seed_chunk) {
-                    *slot = Some(run_one(seed));
-                }
-            });
-        }
-    });
-    out.into_iter().map(|o| o.unwrap()).collect()
+    scheduler::run_units(seeds.len(), 0, |i| {
+        let seed = seeds[i];
+        simulate_from_capped(sc, policy, 1.0, seed, TraceStream::new(sc, seed), cap)
+    })
 }
 
 /// One heuristic's result at one scenario point.
@@ -124,17 +104,12 @@ pub fn evaluate_heuristics(
     n: usize,
     best_period_seeds: usize,
 ) -> Vec<HeuristicResult> {
-    use crate::model::waste::{waste_clipped, GridStrategy};
+    use crate::model::waste::waste_clipped;
     let mut out = Vec::new();
     for strat in Strategy::paper_set() {
         let pol = strat.policy(sc);
         let (waste, makespan) = run_instances(sc, &pol, n);
-        let gs = match pol.kind {
-            PolicyKind::IgnorePredictions => GridStrategy::Q0,
-            PolicyKind::Instant => GridStrategy::Instant,
-            PolicyKind::NoCkpt => GridStrategy::NoCkpt,
-            PolicyKind::WithCkpt => GridStrategy::WithCkpt,
-        };
+        let gs = pol.kind.grid_strategy();
         out.push(HeuristicResult {
             name: strat.name().to_string(),
             waste: waste.mean(),
@@ -144,29 +119,59 @@ pub fn evaluate_heuristics(
             tr: pol.tr,
         });
     }
-    if best_period_seeds > 0 {
-        let bp_seeds: Vec<u64> = (1000..1000 + best_period_seeds as u64).collect();
-        let variants: [(&str, PolicyKind); 4] = [
-            ("BestPeriod-NoPred", PolicyKind::IgnorePredictions),
-            ("BestPeriod-Instant", PolicyKind::Instant),
-            ("BestPeriod-NoCkptI", PolicyKind::NoCkpt),
-            ("BestPeriod-WithCkptI", PolicyKind::WithCkpt),
-        ];
-        for (name, kind) in variants {
-            let tp = crate::model::optimal::tp_extr(sc)
-                .max(sc.platform.cp * 1.1);
-            let bp = best_period::search(sc, kind, tp, &bp_seeds, 24, 8);
-            let pol = Policy { kind, tr: bp.tr, tp };
-            let (waste, makespan) = run_instances(sc, &pol, n);
-            out.push(HeuristicResult {
-                name: name.to_string(),
-                waste: waste.mean(),
-                waste_ci: waste.ci95(),
-                makespan,
-                analytic_waste: f64::NAN,
-                tr: bp.tr,
-            });
-        }
+    out.extend(best_period_results(sc, n, best_period_seeds));
+    out
+}
+
+/// The four BestPeriod twins for one scenario: `T_R` found by brute-force
+/// search over `best_period_seeds` instances, then evaluated on `n`
+/// instances (seeds 0..n).  Empty when `best_period_seeds == 0`.
+pub fn best_period_results(
+    sc: &Scenario,
+    n: usize,
+    best_period_seeds: usize,
+) -> Vec<HeuristicResult> {
+    best_period_results_seeded(sc, n, best_period_seeds, |i| i)
+}
+
+/// [`best_period_results`] with caller-supplied evaluation seeds — the
+/// campaign-driven figure runners pass each cell's own seed streams so the
+/// twin rows are trace-paired with the named-heuristic rows of the same
+/// scenario point.
+pub fn best_period_results_seeded(
+    sc: &Scenario,
+    n: usize,
+    best_period_seeds: usize,
+    seed_of: impl Fn(u64) -> u64,
+) -> Vec<HeuristicResult> {
+    let mut out = Vec::new();
+    if best_period_seeds == 0 {
+        return out;
+    }
+    let bp_seeds: Vec<u64> = (1000..1000 + best_period_seeds as u64).collect();
+    let eval_seeds: Vec<u64> = (0..n as u64).map(seed_of).collect();
+    let variants: [(&str, PolicyKind); 4] = [
+        ("BestPeriod-NoPred", PolicyKind::IgnorePredictions),
+        ("BestPeriod-Instant", PolicyKind::Instant),
+        ("BestPeriod-NoCkptI", PolicyKind::NoCkpt),
+        ("BestPeriod-WithCkptI", PolicyKind::WithCkpt),
+    ];
+    for (name, kind) in variants {
+        let tp = crate::model::optimal::tp_extr(sc).max(sc.platform.cp * 1.1);
+        let bp = best_period::search(sc, kind, tp, &bp_seeds, 24, 8);
+        let pol = Policy { kind, tr: bp.tr, tp };
+        let outcomes = run_seeds(sc, &pol, &eval_seeds);
+        let waste = Summary::from_iter(outcomes.iter().map(|o| o.waste()));
+        let makespan =
+            outcomes.iter().map(|o| o.makespan).sum::<f64>() / outcomes.len() as f64;
+        out.push(HeuristicResult {
+            name: name.to_string(),
+            waste: waste.mean(),
+            waste_ci: waste.ci95(),
+            makespan,
+            analytic_waste: f64::NAN,
+            tr: bp.tr,
+        });
     }
     out
 }

@@ -6,16 +6,17 @@
 //! {NoCkptI, WithCkptI, Instant} for predictor A (p=.82, r=.85) and
 //! predictor B (p=.4, r=.7).
 
-use crate::config::{PredictorSpec, Scenario};
+use crate::campaign::{self, CampaignOptions, Cell, PredictorKind};
 use crate::sim::distribution::Law;
 use crate::strategy::Strategy;
 use crate::util::SECONDS_PER_DAY;
 
-use super::{run_instances, write_csv};
+use super::write_csv;
 
-/// One cell: mean execution time in days + gain vs the Daly cell.
+/// One table cell: mean execution time in days + gain vs the Daly cell.
+/// (Named `TableCell` to distinguish it from a campaign [`Cell`].)
 #[derive(Clone, Copy, Debug)]
-pub struct Cell {
+pub struct TableCell {
     pub days: f64,
     /// Gain relative to Daly (fraction, e.g. 0.18 = 18%); 0 for Daly.
     pub gain: f64,
@@ -29,7 +30,7 @@ pub struct Table {
     pub row_names: Vec<String>,
     /// Column labels, e.g. "I=300s/2^16".
     pub col_names: Vec<String>,
-    pub cells: Vec<Vec<Cell>>,
+    pub cells: Vec<Vec<TableCell>>,
 }
 
 /// Window × procs column grid of Tables 4/5.
@@ -51,6 +52,10 @@ fn table_rows() -> Vec<(String, Strategy, Option<bool>)> {
 }
 
 /// Compute Table 4 (`shape = 0.7`) or Table 5 (`shape = 0.5`).
+///
+/// All (row × column) cells are expanded up front into campaign cells and
+/// executed together on the work-stealing pool — the heavy Weibull columns
+/// no longer serialize behind each other.
 pub fn run_table(id: u8, shape: f64, instances: usize) -> std::io::Result<Table> {
     let law = Law::Weibull { shape };
     let rows = table_rows();
@@ -61,29 +66,41 @@ pub fn run_table(id: u8, shape: f64, instances: usize) -> std::io::Result<Table>
         }
     }
 
-    let mut cells = vec![Vec::with_capacity(col_names.len()); rows.len()];
+    // One campaign cell per (column, row), in column-major order.
+    let mut campaign_cells = Vec::new();
     for &window in &TABLE_WINDOWS {
         for &procs in &TABLE_PROCS {
-            // Daly baseline for this column (predictor-independent).
-            let mut daly_days = f64::NAN;
-            for (ri, (_, strat, pred)) in rows.iter().enumerate() {
-                let predictor = match pred {
-                    Some(true) => PredictorSpec::paper_a(window),
-                    Some(false) => PredictorSpec::paper_b(window),
+            for (_, strat, pred) in &rows {
+                let kind = match pred {
+                    Some(false) => PredictorKind::PaperB,
                     // Prediction-ignoring rows: predictor is irrelevant to
                     // the policy; keep A's event stream for the trace.
-                    None => PredictorSpec::paper_a(window),
+                    Some(true) | None => PredictorKind::PaperA,
                 };
-                let sc = Scenario::paper(procs, 1.0, predictor, law, law);
-                let pol = strat.policy(&sc);
-                let (_, makespan) = run_instances(&sc, &pol, instances);
-                let days = makespan / SECONDS_PER_DAY;
-                if ri == 0 {
-                    daly_days = days;
-                }
-                let gain = if ri == 0 { 0.0 } else { 1.0 - days / daly_days };
-                cells[ri].push(Cell { days, gain });
+                campaign_cells.push(Cell::new(
+                    procs,
+                    1.0,
+                    law,
+                    law,
+                    kind.spec(window),
+                    *strat,
+                    1.0,
+                ));
             }
+        }
+    }
+    let opt = CampaignOptions { instances, block: 0, threads: 0 };
+    let (outcomes, _) = campaign::run_cells(&campaign_cells, &opt, None)
+        .expect("in-memory campaign has no store to fail");
+
+    let mut cells = vec![Vec::with_capacity(col_names.len()); rows.len()];
+    for col in outcomes.chunks(rows.len()) {
+        // Daly baseline for this column (row 0, predictor-independent).
+        let daly_days = col[0].makespan.mean() / SECONDS_PER_DAY;
+        for (ri, outcome) in col.iter().enumerate() {
+            let days = outcome.makespan.mean() / SECONDS_PER_DAY;
+            let gain = if ri == 0 { 0.0 } else { 1.0 - days / daly_days };
+            cells[ri].push(TableCell { days, gain });
         }
     }
     let table = Table {

@@ -11,7 +11,9 @@
 //!
 //! Three-layer architecture (see `DESIGN.md`):
 //! * **L3 (this crate)** — coordination: the simulator, the analytic model,
-//!   the experiment harness, and a *real* checkpointing coordinator that
+//!   the experiment harness, the [`campaign`] engine (declarative scenario
+//!   grids with work-stealing execution, streaming aggregation and a
+//!   resumable result store), and a *real* checkpointing coordinator that
 //!   trains a transformer LM (AOT-compiled to an HLO artifact) under fault
 //!   injection with proactive checkpointing.
 //! * **L2/L1 (build-time Python)** — JAX model + Pallas kernels, lowered
@@ -20,6 +22,7 @@
 //!   the request path.
 
 pub mod bench_support;
+pub mod campaign;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

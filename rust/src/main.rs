@@ -10,6 +10,15 @@
 //!                   proactive checkpointing (the real-system driver)
 //! * `sweep`       — evaluate the Table-6 literature predictors
 //! * `config`      — run a scenario described by a TOML file
+//! * `campaign`    — declarative scenario-grid sweeps on the campaign
+//!                   engine: `campaign run` cartesian-expands the axes
+//!                   (`--procs`, `--cp-ratios`, `--laws`, `--predictors`,
+//!                   `--windows`, `--strategies`, `--scale`) into cells,
+//!                   executes them on a work-stealing pool, and streams
+//!                   per-cell results into a JSONL store keyed by stable
+//!                   scenario hashes; `campaign resume` recomputes only the
+//!                   cells missing from an interrupted store; `campaign
+//!                   report` pretty-prints a store.
 //!
 //! Run `ckptwin help` for per-command options.
 
@@ -48,6 +57,15 @@ COMMANDS
                against a recorded failure log; --export N writes a
                synthetic log instead
   config       <file.toml> [--instances N]
+  campaign     run|resume|report [--out results/campaign.jsonl]
+               [--grid paper|smoke] [--instances N] [--threads N]
+               [--block N] [--scale F] [--uniform-fp]
+               [--procs 65536,131072,...] [--cp-ratios 1.0,0.1]
+               [--laws exponential,weibull0.7,lognormal1.2]
+               [--predictors a,b] [--windows 300,600,...]
+               [--strategies daly,young,rfo,instant,nockpt,withckpt]
+               run executes the grid and streams per-cell JSONL results;
+               resume skips cells already in the store; report prints it
   help         this text
 ";
 
@@ -527,6 +545,155 @@ fn cmd_config(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the campaign grid from CLI axis overrides on top of a preset.
+fn grid_from_args(args: &Args) -> Result<ckptwin::campaign::Grid> {
+    use ckptwin::campaign::{grid::parse_strategy, Grid, PredictorKind};
+    let mut grid = match args.get_str("grid").unwrap_or("paper") {
+        "paper" => Grid::paper(),
+        "smoke" => Grid::smoke(),
+        other => return Err(anyhow!("unknown grid preset '{other}' (paper|smoke)")),
+    };
+    fn parse_list<T, E: std::fmt::Display>(
+        raw: &str,
+        what: &str,
+        parse: impl Fn(&str) -> Result<T, E>,
+    ) -> Result<Vec<T>> {
+        raw.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| parse(t).map_err(|e| anyhow!("bad {what} '{t}': {e}")))
+            .collect()
+    }
+    if let Some(raw) = args.get_str("procs") {
+        grid.procs = parse_list(raw, "procs", str::parse::<u64>)?;
+    }
+    if let Some(raw) = args.get_str("cp-ratios") {
+        grid.cp_ratios = parse_list(raw, "cp-ratio", str::parse::<f64>)?;
+    }
+    if let Some(raw) = args.get_str("laws") {
+        grid.fault_laws = parse_list(raw, "law", |t| {
+            Law::parse(t).ok_or("expected exponential|weibullK|lognormalS|uniform")
+        })?;
+    }
+    if let Some(raw) = args.get_str("predictors") {
+        grid.predictors =
+            parse_list(raw, "predictor", |t| PredictorKind::parse(t).ok_or("expected a|b"))?;
+    }
+    if let Some(raw) = args.get_str("windows") {
+        grid.windows = parse_list(raw, "window", str::parse::<f64>)?;
+    }
+    if let Some(raw) = args.get_str("strategies") {
+        grid.strategies = parse_list(raw, "strategy", |t| {
+            parse_strategy(t).ok_or("expected daly|young|rfo|instant|nockpt|withckpt")
+        })?;
+    }
+    if let Some(raw) = args.get_str("scale") {
+        grid.scale = raw
+            .parse::<f64>()
+            .map_err(|e| anyhow!("bad scale '{raw}': {e}"))?;
+    }
+    if args.has("uniform-fp") {
+        grid.uniform_false_preds = true;
+    }
+    if grid.is_empty() {
+        return Err(anyhow!("grid has an empty axis — nothing to run"));
+    }
+    Ok(grid)
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    use ckptwin::campaign::{self, CampaignOptions, Store};
+    // The mode is mandatory: defaulting to "run" would let a forgotten
+    // word (or a flag that swallowed the mode token) silently truncate a
+    // completed store.
+    let mode = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("usage: ckptwin campaign run|resume|report [options]"))?;
+    let out = args.get_str("out").unwrap_or("results/campaign.jsonl");
+
+    if mode == "report" {
+        // Read-only: don't let Store::open create an empty file at a
+        // mistyped path and report "0 cells".
+        if !std::path::Path::new(out).exists() {
+            return Err(anyhow!("no campaign store at {out}"));
+        }
+        let store = Store::open(std::path::Path::new(out))?;
+        println!(
+            "campaign store {} — {} cells{}",
+            out,
+            store.len(),
+            if store.skipped_lines > 0 {
+                format!(" ({} torn lines ignored)", store.skipped_lines)
+            } else {
+                String::new()
+            }
+        );
+        println!(
+            "{:<16} {:>6} {:>10} {:>10} {:>10} {:>12}  {}",
+            "hash", "inst", "waste", "±ci95", "T_R", "makespan(d)", "key"
+        );
+        for rec in store.records() {
+            println!(
+                "{:016x} {:>6} {:>10.4} {:>10.4} {:>10.0} {:>12.2}  {}",
+                rec.hash,
+                rec.instances,
+                rec.waste_mean,
+                rec.waste_ci95,
+                rec.tr,
+                rec.makespan_mean / SECONDS_PER_DAY,
+                rec.key
+            );
+        }
+        return Ok(());
+    }
+    if mode != "run" && mode != "resume" {
+        return Err(anyhow!("usage: ckptwin campaign run|resume|report [options]"));
+    }
+
+    let grid = grid_from_args(args)?;
+    let cells = grid.expand();
+    let mut store = if mode == "run" {
+        Store::create(std::path::Path::new(out))?
+    } else {
+        // Resume is read-modify: a mistyped path must not silently start
+        // an empty store and recompute the whole grid into the wrong file.
+        if !std::path::Path::new(out).exists() {
+            return Err(anyhow!(
+                "no campaign store at {out} to resume (use 'campaign run' to start one)"
+            ));
+        }
+        Store::open(std::path::Path::new(out))?
+    };
+    let opt = CampaignOptions {
+        instances: args.get_or("instances", harness::default_instances()),
+        block: args.get_or("block", 0usize),
+        threads: args.get_or("threads", 0usize),
+    };
+    println!(
+        "campaign {mode}: {} cells ({} already complete in store), {} instances/cell",
+        cells.len(),
+        cells
+            .iter()
+            .filter(|c| campaign::cell_complete(&store, c, opt.instances))
+            .count(),
+        opt.instances,
+    );
+    let t0 = std::time::Instant::now();
+    let (outcomes, skipped) = campaign::run_cells(&cells, &opt, Some(&mut store))?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "done: {} cells computed, {} skipped, {:.1}s ({:.1} cells/s)",
+        outcomes.len(),
+        skipped,
+        dt,
+        outcomes.len() as f64 / dt.max(1e-9),
+    );
+    println!("store: {} ({} cells total)", out, store.len());
+    Ok(())
+}
+
 fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
@@ -541,6 +708,7 @@ fn main() {
         Some("inspect") => cmd_inspect(&args),
         Some("replay") => cmd_replay(&args),
         Some("config") => cmd_config(&args),
+        Some("campaign") => cmd_campaign(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())

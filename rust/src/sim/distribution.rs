@@ -17,6 +17,12 @@ pub enum Law {
     /// Weibull with the given shape parameter k (k < 1 ⇒ infant mortality,
     /// representative of real platforms [Schroeder&Gibson'06]).
     Weibull { shape: f64 },
+    /// LogNormal with log-space standard deviation σ — heavier-tailed than
+    /// any Weibull the paper sweeps (all moments exist but the tail decays
+    /// sub-exponentially in log scale), giving campaigns a stress law
+    /// beyond the paper's envelope.  Mean-scaled: X = e^{m + σZ} with
+    /// m = ln(mean) − σ²/2 so E[X] = mean.
+    LogNormal { sigma: f64 },
     /// Uniform on [0, 2·mean] (used for false-prediction arrivals in
     /// Figures 8–13).
     Uniform,
@@ -28,20 +34,27 @@ impl Law {
         match self {
             Law::Exponential => "exponential".to_string(),
             Law::Weibull { shape } => format!("weibull{shape}"),
+            Law::LogNormal { sigma } => format!("lognormal{sigma}"),
             Law::Uniform => "uniform".to_string(),
         }
     }
 
-    /// Parse a label: "exponential" | "weibull0.7" | "uniform".
+    /// Parse a label: "exponential" | "weibull0.7" | "lognormal1.2" |
+    /// "uniform".
     pub fn parse(s: &str) -> Option<Law> {
         let s = s.trim().to_ascii_lowercase();
         match s.as_str() {
             "exp" | "exponential" => Some(Law::Exponential),
             "uniform" => Some(Law::Uniform),
-            _ => s
-                .strip_prefix("weibull")
-                .and_then(|rest| rest.parse::<f64>().ok())
-                .map(|shape| Law::Weibull { shape }),
+            _ => {
+                if let Some(rest) = s.strip_prefix("weibull") {
+                    rest.parse::<f64>().ok().map(|shape| Law::Weibull { shape })
+                } else if let Some(rest) = s.strip_prefix("lognormal") {
+                    rest.parse::<f64>().ok().map(|sigma| Law::LogNormal { sigma })
+                } else {
+                    None
+                }
+            }
         }
     }
 }
@@ -63,6 +76,11 @@ impl Distribution {
                 assert!(shape > 0.0, "Weibull shape must be positive");
                 mean / gamma(1.0 + 1.0 / shape)
             }
+            Law::LogNormal { sigma } => {
+                assert!(sigma > 0.0, "LogNormal sigma must be positive");
+                // e^m = mean · e^{−σ²/2} ⇒ E[e^{m+σZ}] = mean.
+                mean * (-0.5 * sigma * sigma).exp()
+            }
             _ => mean,
         };
         Distribution { law, mean, scale }
@@ -79,6 +97,14 @@ impl Distribution {
             Law::Weibull { shape } => {
                 let u = rng.f64_open();
                 self.scale * (-u.ln()).powf(1.0 / shape)
+            }
+            Law::LogNormal { sigma } => {
+                // Box–Muller (one draw of the pair); u1 open avoids ln(0).
+                let u1 = rng.f64_open();
+                let u2 = rng.f64();
+                let z = (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+                self.scale * (sigma * z).exp()
             }
             Law::Uniform => rng.range(0.0, 2.0 * self.scale).max(f64::MIN_POSITIVE),
         }
@@ -137,10 +163,49 @@ mod tests {
     }
 
     #[test]
+    fn lognormal_mean_scaled_and_quantiles() {
+        let sigma = 1.2;
+        let mean = 800.0;
+        let d = Distribution::new(Law::LogNormal { sigma }, mean);
+        let mut rng = Rng::new(9);
+        let n = 400_000;
+        let mut samples: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let m = samples.iter().sum::<f64>() / n as f64;
+        // CV = sqrt(e^{σ²} − 1) ≈ 1.8 at σ = 1.2: the mean needs many
+        // samples but converges; 3% tolerance is ~7 stderr.
+        assert!((m - mean).abs() / mean < 0.03, "mean {m}");
+        samples.sort_by(f64::total_cmp);
+        // Quantile sanity: the median is e^m = mean·e^{−σ²/2}, and the
+        // Φ(1) ≈ 0.8413 quantile is e^{m+σ}.
+        let e_m = mean * (-0.5 * sigma * sigma).exp();
+        let med = samples[n / 2];
+        assert!((med - e_m).abs() / e_m < 0.02, "median {med} vs {e_m}");
+        let q = samples.partition_point(|&x| x <= e_m * sigma.exp()) as f64 / n as f64;
+        assert!((q - 0.8413).abs() < 0.01, "Φ(1) quantile {q}");
+    }
+
+    #[test]
+    fn lognormal_heavier_tailed_than_weibull() {
+        // At matched means, the LogNormal σ=1.2 P99.9 exceeds the
+        // Weibull k=0.7 P99.9 — the point of adding the law.
+        let tail = |law: Law, seed: u64| {
+            let d = Distribution::new(law, 1000.0);
+            let mut rng = Rng::new(seed);
+            let mut xs: Vec<f64> = (0..200_000).map(|_| d.sample(&mut rng)).collect();
+            xs.sort_by(f64::total_cmp);
+            xs[(xs.len() as f64 * 0.999) as usize]
+        };
+        let ln_tail = tail(Law::LogNormal { sigma: 1.2 }, 10);
+        let wb_tail = tail(Law::Weibull { shape: 0.7 }, 10);
+        assert!(ln_tail > wb_tail, "lognormal {ln_tail} vs weibull {wb_tail}");
+    }
+
+    #[test]
     fn samples_strictly_positive() {
         for law in [
             Law::Exponential,
             Law::Weibull { shape: 0.5 },
+            Law::LogNormal { sigma: 1.2 },
             Law::Uniform,
         ] {
             let d = Distribution::new(law, 1.0);
@@ -157,10 +222,12 @@ mod tests {
             Law::Exponential,
             Law::Weibull { shape: 0.7 },
             Law::Weibull { shape: 0.5 },
+            Law::LogNormal { sigma: 1.2 },
             Law::Uniform,
         ] {
             assert_eq!(Law::parse(&law.label()), Some(law));
         }
         assert_eq!(Law::parse("nope"), None);
+        assert_eq!(Law::parse("lognormal"), None);
     }
 }

@@ -318,12 +318,17 @@ impl TraceStream {
         let faults = match (scenario.fault_model, scenario.fault_law) {
             // A superposition of (fresh or stationary) exponential
             // processes IS a Poisson process of rate n/μ_ind = 1/μ — use
-            // the cheap equivalent.
+            // the cheap equivalent.  LogNormal has no per-processor
+            // superposition implemented (the pool-thinning source is
+            // Weibull-specific), so it runs as a platform-level renewal
+            // process under every fault model (see DESIGN.md §Fault-model).
             (FaultModel::PlatformRenewal, law)
             | (FaultModel::PerProcessor { .. }, law @ Law::Exponential)
             | (FaultModel::PerProcessor { .. }, law @ Law::Uniform)
+            | (FaultModel::PerProcessor { .. }, law @ Law::LogNormal { .. })
             | (FaultModel::PerProcessorStationary { .. }, law @ Law::Exponential)
-            | (FaultModel::PerProcessorStationary { .. }, law @ Law::Uniform) => {
+            | (FaultModel::PerProcessorStationary { .. }, law @ Law::Uniform)
+            | (FaultModel::PerProcessorStationary { .. }, law @ Law::LogNormal { .. }) => {
                 FaultSource::Platform {
                     dist: Distribution::new(law, mu),
                     rng: Rng::stream(seed, 0xf4017),

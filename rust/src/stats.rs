@@ -1,12 +1,122 @@
 //! Summary statistics for repeated simulation instances (the paper reports
 //! averages over 100 randomly generated instances per point).
+//!
+//! Two accumulators:
+//! * [`Welford`] — constant-memory streaming mean/variance/CI with an
+//!   order-deterministic merge (Chan et al.), the unit of aggregation of
+//!   the campaign engine: memory stays O(cells) no matter how many
+//!   instances fan out per cell.
+//! * [`Summary`] — [`Welford`] plus retained values for order statistics
+//!   (percentiles/median), used where quantiles are reported.
 
-/// Online (Welford) accumulator plus order statistics.
+/// Constant-memory online accumulator: Welford mean/variance plus min/max.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Welford {
+    fn default() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> Self {
+        let mut w = Self::new();
+        for v in iter {
+            w.push(v);
+        }
+        w
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        let delta = v - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (v - self.mean);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Merge another accumulator into this one (Chan et al.'s parallel
+    /// update).  Floating-point results depend on merge *order*, so callers
+    /// that need run-to-run determinism (the campaign scheduler) must merge
+    /// partials in a fixed order regardless of completion order.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let n = na + nb;
+        let delta = other.mean - self.mean;
+        self.m2 += other.m2 + delta * delta * na * nb / n;
+        self.mean += delta * nb / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n - 1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Half-width of the normal-approximation 95% confidence interval.
+    pub fn ci95(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            1.96 * self.std() / (self.n as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// [`Welford`] plus retained values for order statistics.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     values: Vec<f64>,
-    mean: f64,
-    m2: f64,
+    w: Welford,
 }
 
 impl Summary {
@@ -24,10 +134,7 @@ impl Summary {
 
     pub fn push(&mut self, v: f64) {
         self.values.push(v);
-        let n = self.values.len() as f64;
-        let delta = v - self.mean;
-        self.mean += delta / n;
-        self.m2 += delta * (v - self.mean);
+        self.w.push(v);
     }
 
     pub fn len(&self) -> usize {
@@ -39,37 +146,29 @@ impl Summary {
     }
 
     pub fn mean(&self) -> f64 {
-        self.mean
+        self.w.mean()
     }
 
     /// Sample variance (n - 1 denominator).
     pub fn var(&self) -> f64 {
-        if self.values.len() < 2 {
-            0.0
-        } else {
-            self.m2 / (self.values.len() - 1) as f64
-        }
+        self.w.var()
     }
 
     pub fn std(&self) -> f64 {
-        self.var().sqrt()
+        self.w.std()
     }
 
     /// Half-width of the normal-approximation 95% confidence interval.
     pub fn ci95(&self) -> f64 {
-        if self.values.is_empty() {
-            0.0
-        } else {
-            1.96 * self.std() / (self.values.len() as f64).sqrt()
-        }
+        self.w.ci95()
     }
 
     pub fn min(&self) -> f64 {
-        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+        self.w.min()
     }
 
     pub fn max(&self) -> f64 {
-        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        self.w.max()
     }
 
     /// Linear-interpolation percentile, q in [0, 1].
@@ -126,5 +225,53 @@ mod tests {
         assert_eq!(s.mean(), 3.0);
         assert_eq!(s.std(), 0.0);
         assert_eq!(s.median(), 3.0);
+    }
+
+    #[test]
+    fn welford_matches_summary() {
+        let xs: Vec<f64> = (0..500).map(|i| ((i * 37) % 101) as f64 * 0.13).collect();
+        let s = Summary::from_iter(xs.iter().copied());
+        let w = Welford::from_iter(xs.iter().copied());
+        assert_eq!(w.len(), s.len());
+        assert!((w.mean() - s.mean()).abs() < 1e-12);
+        assert!((w.var() - s.var()).abs() < 1e-12);
+        assert!((w.ci95() - s.ci95()).abs() < 1e-12);
+        assert_eq!(w.min(), s.min());
+        assert_eq!(w.max(), s.max());
+    }
+
+    #[test]
+    fn welford_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..300).map(|i| (i as f64 * 0.7).sin() * 10.0).collect();
+        let whole = Welford::from_iter(xs.iter().copied());
+        // Merge three uneven partials in order.
+        let mut merged = Welford::new();
+        for chunk in [&xs[..50], &xs[50..260], &xs[260..]] {
+            let part = Welford::from_iter(chunk.iter().copied());
+            merged.merge(&part);
+        }
+        assert_eq!(merged.len(), whole.len());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-10);
+        assert!((merged.var() - whole.var()).abs() < 1e-10);
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+        // Merging the same partials in the same order is bit-deterministic.
+        let mut again = Welford::new();
+        for chunk in [&xs[..50], &xs[50..260], &xs[260..]] {
+            again.merge(&Welford::from_iter(chunk.iter().copied()));
+        }
+        assert_eq!(again, merged);
+    }
+
+    #[test]
+    fn welford_empty_and_singleton_merge() {
+        let mut w = Welford::new();
+        assert_eq!(w.ci95(), 0.0);
+        w.merge(&Welford::new());
+        assert!(w.is_empty());
+        w.merge(&Welford::from_iter([2.5]));
+        assert_eq!(w.mean(), 2.5);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.var(), 0.0);
     }
 }

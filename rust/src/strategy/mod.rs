@@ -26,6 +26,21 @@ pub enum PolicyKind {
     WithCkpt,
 }
 
+impl PolicyKind {
+    /// The analytic waste-model strategy this execution mode maps to
+    /// (Eqs. 3/14/10/4) — the single source of truth for every consumer
+    /// that pairs a simulated mode with its closed-form prediction.
+    pub fn grid_strategy(&self) -> crate::model::waste::GridStrategy {
+        use crate::model::waste::GridStrategy;
+        match self {
+            PolicyKind::IgnorePredictions => GridStrategy::Q0,
+            PolicyKind::Instant => GridStrategy::Instant,
+            PolicyKind::NoCkpt => GridStrategy::NoCkpt,
+            PolicyKind::WithCkpt => GridStrategy::WithCkpt,
+        }
+    }
+}
+
 /// A fully instantiated policy: mode + concrete periods.
 #[derive(Clone, Copy, Debug)]
 pub struct Policy {

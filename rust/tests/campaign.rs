@@ -1,0 +1,224 @@
+//! Campaign-engine integration tests: grid expansion, scenario-hash
+//! stability, work-stealing determinism, and the resumable store —
+//! including the acceptance scenario: a ≥200-cell grid run end-to-end,
+//! interrupted, and resumed with only the missing cells recomputed.
+
+use std::path::PathBuf;
+
+use ckptwin::campaign::{self, grid::fnv1a64, CampaignOptions, Grid, PredictorKind, Store};
+use ckptwin::sim::distribution::Law;
+use ckptwin::strategy::Strategy;
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "ckptwin-campaign-{tag}-{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// A grid small enough for unit tests but structurally like the paper's.
+fn small_grid() -> Grid {
+    Grid {
+        procs: vec![1 << 16, 1 << 17],
+        cp_ratios: vec![1.0],
+        fault_laws: vec![Law::Exponential, Law::Weibull { shape: 0.7 }],
+        uniform_false_preds: false,
+        predictors: vec![PredictorKind::PaperA],
+        windows: vec![600.0],
+        strategies: vec![Strategy::Rfo, Strategy::NoCkptI],
+        scale: 0.02,
+    }
+}
+
+#[test]
+fn grid_expansion_count_and_determinism() {
+    let g = Grid::paper();
+    let cells = g.expand();
+    // 4 N × 2 C_p × 3 laws × 2 predictors × 5 windows × 5 strategies.
+    assert_eq!(cells.len(), 1200);
+    assert_eq!(cells.len(), g.len());
+    let again = g.expand();
+    for (a, b) in cells.iter().zip(&again) {
+        assert_eq!(a.key(), b.key());
+        assert_eq!(a.hash, b.hash);
+        assert_eq!(a.instance_seed(3), b.instance_seed(3));
+    }
+    // Deterministic order: outermost axis is the fault law.
+    assert_eq!(cells[0].fault_law, Law::Exponential);
+    assert_eq!(cells[0].strategy, Strategy::Daly);
+    assert_eq!(cells[1].strategy, Strategy::Rfo);
+}
+
+#[test]
+fn scenario_hash_is_stable_and_parameter_sensitive() {
+    // The hash is FNV-1a of the canonical key — pinned to the published
+    // FNV-1a test vectors so an accidental algorithm change is caught even
+    // though cell hashes themselves are computed, not hardcoded.
+    assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+    assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+
+    let cells = small_grid().expand();
+    for c in &cells {
+        assert_eq!(c.hash, fnv1a64(c.key().as_bytes()));
+    }
+    // Any single-axis change moves the hash.
+    let mut seen: Vec<u64> = cells.iter().map(|c| c.hash).collect();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), cells.len());
+}
+
+#[test]
+fn work_stealing_matches_single_thread() {
+    // Property: the per-cell aggregates are BIT-identical between
+    // single-thread and multi-thread execution, for several block sizes.
+    let g = small_grid();
+    for block in [1, 3, 0] {
+        let opt1 = CampaignOptions { instances: 6, block, threads: 1 };
+        let opt8 = CampaignOptions { instances: 6, block, threads: 8 };
+        let a = campaign::evaluate_grid(&g, &opt1);
+        let b = campaign::evaluate_grid(&g, &opt8);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cell.hash, y.cell.hash);
+            assert_eq!(x.waste, y.waste, "cell {}", x.cell.key());
+            assert_eq!(x.makespan, y.makespan);
+            assert_eq!(x.tr, y.tr);
+        }
+    }
+}
+
+#[test]
+fn resume_skips_completed_cells() {
+    let path = tmp("skip");
+    let g = small_grid();
+    let cells = g.expand();
+    let opt = CampaignOptions { instances: 3, block: 2, threads: 2 };
+
+    // Fresh run computes everything.
+    let mut store = Store::create(&path).unwrap();
+    let (done, skipped) = campaign::run_cells(&cells, &opt, Some(&mut store)).unwrap();
+    assert_eq!(done.len(), cells.len());
+    assert_eq!(skipped, 0);
+    assert_eq!(store.len(), cells.len());
+    drop(store);
+
+    // Resume over the complete store computes nothing.
+    let mut store = Store::open(&path).unwrap();
+    let (done, skipped) = campaign::run_cells(&cells, &opt, Some(&mut store)).unwrap();
+    assert!(done.is_empty());
+    assert_eq!(skipped, cells.len());
+}
+
+#[test]
+fn resume_recomputes_underpowered_cells() {
+    // A store built with fewer instances than requested is not "complete":
+    // resume recomputes those cells and the new records supersede the old.
+    let path = tmp("upgrade");
+    let mut g = small_grid();
+    g.procs = vec![1 << 16];
+    let cells = g.expand();
+
+    let mut store = Store::create(&path).unwrap();
+    let quick = CampaignOptions { instances: 2, block: 1, threads: 2 };
+    campaign::run_cells(&cells, &quick, Some(&mut store)).unwrap();
+    drop(store);
+
+    let mut store = Store::open(&path).unwrap();
+    let precise = CampaignOptions { instances: 5, block: 2, threads: 2 };
+    let (done, skipped) = campaign::run_cells(&cells, &precise, Some(&mut store)).unwrap();
+    assert_eq!(done.len(), cells.len());
+    assert_eq!(skipped, 0);
+    drop(store);
+
+    // Reload: last-wins, every record upgraded to 5 instances...
+    let store = Store::open(&path).unwrap();
+    assert_eq!(store.len(), cells.len());
+    for c in &cells {
+        assert_eq!(store.get(c.hash).unwrap().instances, 5);
+    }
+    drop(store);
+    // ...and a downgrade request (2 ≤ 5) skips everything.
+    let mut store = Store::open(&path).unwrap();
+    let (done, skipped) = campaign::run_cells(&cells, &quick, Some(&mut store)).unwrap();
+    assert!(done.is_empty());
+    assert_eq!(skipped, cells.len());
+}
+
+/// Acceptance: a ≥200-cell grid runs end-to-end, writes per-cell JSONL
+/// results with stable scenario hashes, and resuming an interrupted store
+/// recomputes only the missing cells — with values identical to an
+/// uninterrupted run.
+#[test]
+fn interrupted_campaign_resumes_exactly() {
+    // 2^16..2^19 × 2 C_p × {exp, weibull0.7, lognormal1.2} × {A, B} ×
+    // 3 windows × 1 strategy = 288 cells (scaled-down job for test speed).
+    let grid = Grid {
+        procs: vec![1 << 16, 1 << 17, 1 << 18, 1 << 19],
+        cp_ratios: vec![1.0, 0.1],
+        fault_laws: vec![
+            Law::Exponential,
+            Law::Weibull { shape: 0.7 },
+            Law::LogNormal { sigma: 1.2 },
+        ],
+        uniform_false_preds: false,
+        predictors: vec![PredictorKind::PaperA, PredictorKind::PaperB],
+        windows: vec![300.0, 600.0, 900.0],
+        strategies: vec![Strategy::NoCkptI],
+        scale: 0.01,
+    };
+    let cells = grid.expand();
+    assert!(cells.len() >= 200, "{} cells", cells.len());
+    let opt = CampaignOptions { instances: 2, block: 1, threads: 0 };
+
+    // Reference: one uninterrupted run.
+    let ref_path = tmp("ref");
+    let mut ref_store = Store::create(&ref_path).unwrap();
+    let (reference, _) = campaign::run_cells(&cells, &opt, Some(&mut ref_store)).unwrap();
+    assert_eq!(reference.len(), cells.len());
+    assert_eq!(ref_store.len(), cells.len());
+    drop(ref_store);
+
+    // Every cell landed in the JSONL with its stable hash.
+    let ref_store = Store::open(&ref_path).unwrap();
+    for c in &cells {
+        let rec = ref_store.get(c.hash).unwrap_or_else(|| {
+            panic!("cell {} missing from store", c.key())
+        });
+        assert_eq!(rec.key, c.key());
+        assert_eq!(rec.instances, 2);
+        assert!(rec.waste_mean.is_finite() && rec.waste_mean > 0.0);
+    }
+
+    // "Interrupt": keep only the first 100 JSONL lines, plus a torn
+    // partial line as a crash would leave behind.
+    let int_path = tmp("int");
+    let text = std::fs::read_to_string(&ref_path).unwrap();
+    let mut head: String = text.lines().take(100).collect::<Vec<_>>().join("\n");
+    head.push('\n');
+    head.push_str("{\"hash\":\"00000000");
+    std::fs::write(&int_path, head).unwrap();
+
+    // Resume: exactly the missing cells are recomputed.
+    let mut store = Store::open(&int_path).unwrap();
+    assert_eq!(store.len(), 100);
+    assert_eq!(store.skipped_lines, 1);
+    let (resumed, skipped) = campaign::run_cells(&cells, &opt, Some(&mut store)).unwrap();
+    assert_eq!(skipped, 100);
+    assert_eq!(resumed.len(), cells.len() - 100);
+    assert_eq!(store.len(), cells.len());
+    drop(store);
+
+    // The resumed store is record-for-record identical to the reference.
+    let resumed_store = Store::open(&int_path).unwrap();
+    for c in &cells {
+        assert_eq!(
+            resumed_store.get(c.hash).unwrap(),
+            ref_store.get(c.hash).unwrap(),
+            "cell {} differs after resume",
+            c.key()
+        );
+    }
+}

@@ -1,0 +1,116 @@
+//! Vendored drop-in subset of the `anyhow` crate (offline environment: no
+//! crates.io).  Implements exactly the surface `ckptwin` uses: the
+//! [`Error`] type, the [`Result`] alias, the [`anyhow!`] macro, and the
+//! [`Context`] extension trait.  Errors are rendered eagerly into a
+//! message string; `{:#}` prints the same chain as `{}` (contexts are
+//! folded in `context: cause` order, like upstream's alternate format).
+
+use std::fmt;
+
+/// A string-backed error type, convertible from any `std::error::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like upstream anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent (it would otherwise collide with `impl From<T> for T`).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error branch of a `Result`.
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::Other, "disk on fire");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn macro_and_from_conversion() {
+        let e = anyhow!("bad value: {}", 42);
+        assert_eq!(e.to_string(), "bad value: 42");
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e: Result<()> = io_fail().context("loading manifest");
+        assert_eq!(e.unwrap_err().to_string(), "loading manifest: disk on fire");
+        let e: Result<()> = io_fail().with_context(|| format!("step {}", 3));
+        assert_eq!(e.unwrap_err().to_string(), "step 3: disk on fire");
+    }
+}
