@@ -2,10 +2,12 @@
 //! single-thread, and the fixed per-cell costs (expansion, hashing,
 //! store append).
 
-use ckptwin::bench_support::{bench_val, report_throughput};
+use ckptwin::bench_support::{bench_val, report_throughput, update_bench_json};
 use ckptwin::campaign::{self, CampaignOptions, CellOutcome, Grid, Store};
+use ckptwin::jsonio::Value;
 
 fn main() {
+    let mut json: Vec<(String, Value)> = Vec::new();
     let instances: usize = std::env::var("CKPTWIN_INSTANCES")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -33,22 +35,35 @@ fn main() {
             },
         );
         report_throughput(&r, n_cells as f64, "cell");
+        json.push((
+            format!("cells_per_s_{tag}"),
+            Value::Num(n_cells as f64 / r.median()),
+        ));
     }
 
-    // Store append path (JSON encode + flush per cell).
+    // Store append path (JSON encode + flush per record).  One store is
+    // reused across iterations: re-creating it per iteration would measure
+    // file creation, not append throughput.
     let opt = CampaignOptions { instances, block: 0, threads: 0 };
     let outcomes: Vec<CellOutcome> = campaign::evaluate_grid(&grid, &opt);
     let path = std::env::temp_dir().join(format!(
         "ckptwin-bench-store-{}.jsonl",
         std::process::id()
     ));
+    let mut store = Store::create(&path).expect("store");
     let r = bench_val("campaign/store_append_per_cell", 50.0, || {
-        let mut store = Store::create(&path).expect("store");
         for o in &outcomes {
             store.append(&o.record()).expect("append");
         }
         store.len()
     });
     report_throughput(&r, outcomes.len() as f64, "append");
+    json.push((
+        "store_appends_per_s".into(),
+        Value::Num(outcomes.len() as f64 / r.median()),
+    ));
+    drop(store);
     let _ = std::fs::remove_file(&path);
+
+    update_bench_json("bench_campaign", &json);
 }

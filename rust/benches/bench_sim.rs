@@ -1,0 +1,188 @@
+//! Bench: the PR 2 simulation fast path, measured against the seed code
+//! path **in the same run** — both numbers land in `BENCH_PR2.json`.
+//!
+//! * simulate-throughput (events/s): one campaign cell's worth of work —
+//!   the paper-set strategy variants over shared fault environments —
+//!   through the seed path (fresh heap `TraceStream` per simulation, as
+//!   `campaign::run_cells` did pre-change) vs the fast path (per-worker
+//!   `TracePool` replaying one flat-generated trace per seed).
+//! * single-simulation events/s: heap stream vs flat stream, no caching.
+//! * BestPeriod wall-clock: the pre-change exhaustive sweep over
+//!   heap-backed trace memos vs the adaptive racing search over
+//!   flat-backed memos.
+
+use ckptwin::bench_support::{bench_val, report_throughput, update_bench_json};
+use ckptwin::campaign::TracePool;
+use ckptwin::config::{PredictorSpec, Scenario};
+use ckptwin::jsonio::Value;
+use ckptwin::model::optimal;
+use ckptwin::sim::distribution::Law;
+use ckptwin::sim::engine::{simulate, simulate_from_capped};
+use ckptwin::sim::trace::{FlatTrace, TraceCache, TraceStream};
+use ckptwin::strategy::best_period::{search_with, SearchConfig};
+use ckptwin::strategy::{Policy, PolicyKind, Strategy};
+
+fn main() {
+    let mut json: Vec<(String, Value)> = Vec::new();
+
+    // ---- simulate-throughput: a campaign cell's strategy variants ------
+    // Weibull 0.7 per-processor traces at 2^18 procs: the paper's default
+    // regime, where trace generation is a large share of each simulation.
+    let sc = Scenario::paper(
+        1 << 18,
+        1.0,
+        PredictorSpec::paper_a(1200.0),
+        Law::Weibull { shape: 0.7 },
+        Law::Weibull { shape: 0.7 },
+    );
+    let pols: Vec<Policy> =
+        Strategy::paper_set().iter().map(|s| s.policy(&sc)).collect();
+    let seeds: [u64; 4] = [1, 2, 3, 4];
+    // Events consumed per full pass (identical on both paths).
+    let total_events: f64 = seeds
+        .iter()
+        .flat_map(|&seed| pols.iter().map(move |pol| (seed, pol)))
+        .map(|(seed, pol)| simulate(&sc, pol, seed).events as f64)
+        .sum();
+
+    let r_seedpath = bench_val("sim/cell_variants_seedpath", 300.0, || {
+        let mut acc = 0.0;
+        for &seed in &seeds {
+            for pol in &pols {
+                acc += simulate_from_capped(
+                    &sc,
+                    pol,
+                    1.0,
+                    seed,
+                    TraceStream::new(&sc, seed),
+                    f64::INFINITY,
+                )
+                .makespan;
+            }
+        }
+        acc
+    });
+    report_throughput(&r_seedpath, total_events, "event");
+
+    let r_fastpath = bench_val("sim/cell_variants_fastpath", 300.0, || {
+        let mut pool = TracePool::new();
+        let mut acc = 0.0;
+        for &seed in &seeds {
+            for pol in &pols {
+                acc += simulate_from_capped(
+                    &sc,
+                    pol,
+                    1.0,
+                    seed,
+                    pool.replay(0, &sc, seed),
+                    f64::INFINITY,
+                )
+                .makespan;
+            }
+        }
+        acc
+    });
+    report_throughput(&r_fastpath, total_events, "event");
+    let sim_speedup = r_seedpath.median() / r_fastpath.median();
+    println!("sim/cell_variants speedup: {sim_speedup:.2}x");
+    json.push((
+        "sim_events_per_s_seedpath".into(),
+        Value::Num(total_events / r_seedpath.median()),
+    ));
+    json.push((
+        "sim_events_per_s_fastpath".into(),
+        Value::Num(total_events / r_fastpath.median()),
+    ));
+    json.push(("sim_throughput_speedup".into(), Value::Num(sim_speedup)));
+
+    // ---- single simulation: heap vs flat stream, no caching ------------
+    // One fixed seed for both paths: bench_val calibrates its own
+    // iteration counts, so a rolling seed would time the two paths over
+    // different instance populations.
+    let pol = Strategy::WithCkptI.policy(&sc);
+    let single_seed = 100u64;
+    let single_events = simulate(&sc, &pol, single_seed).events as f64;
+    let r_heap = bench_val("sim/single_heap_stream", 120.0, || {
+        simulate_from_capped(
+            &sc,
+            &pol,
+            1.0,
+            single_seed,
+            TraceStream::new(&sc, single_seed),
+            f64::INFINITY,
+        )
+        .makespan
+    });
+    report_throughput(&r_heap, single_events, "event");
+    let r_flat = bench_val("sim/single_flat_stream", 120.0, || {
+        simulate_from_capped(
+            &sc,
+            &pol,
+            1.0,
+            single_seed,
+            FlatTrace::new(&sc, single_seed),
+            f64::INFINITY,
+        )
+        .makespan
+    });
+    report_throughput(&r_flat, single_events, "event");
+    json.push((
+        "single_sim_heap_vs_flat_speedup".into(),
+        Value::Num(r_heap.median() / r_flat.median()),
+    ));
+
+    // ---- BestPeriod search: exhaustive seed path vs adaptive race ------
+    let sc_bp = Scenario::paper(
+        1 << 18,
+        1.0,
+        PredictorSpec::paper_a(1200.0),
+        Law::Exponential,
+        Law::Exponential,
+    );
+    let tp = optimal::tp_extr(&sc_bp).max(sc_bp.platform.cp * 1.1);
+    let bp_seeds: Vec<u64> = (0..16).collect();
+
+    let r_exh = bench_val("best_period/exhaustive_seedpath_16seeds", 800.0, || {
+        // Pre-change behavior: fresh heap-backed memos per search call,
+        // every candidate scored on every seed.
+        let mut caches: Vec<TraceCache> = bp_seeds
+            .iter()
+            .map(|&s| TraceCache::reference(&sc_bp, s))
+            .collect();
+        search_with(
+            &sc_bp,
+            PolicyKind::WithCkpt,
+            tp,
+            &bp_seeds,
+            &SearchConfig::exhaustive(24, 8),
+            &mut caches,
+        )
+        .tr
+    });
+    let r_race = bench_val("best_period/adaptive_fastpath_16seeds", 800.0, || {
+        let mut caches: Vec<TraceCache> =
+            bp_seeds.iter().map(|&s| TraceCache::new(&sc_bp, s)).collect();
+        search_with(
+            &sc_bp,
+            PolicyKind::WithCkpt,
+            tp,
+            &bp_seeds,
+            &SearchConfig::adaptive(24, 8),
+            &mut caches,
+        )
+        .tr
+    });
+    let bp_speedup = r_exh.median() / r_race.median();
+    println!("best_period speedup: {bp_speedup:.2}x");
+    json.push((
+        "bestperiod_search_secs_seedpath".into(),
+        Value::Num(r_exh.median()),
+    ));
+    json.push((
+        "bestperiod_search_secs_fastpath".into(),
+        Value::Num(r_race.median()),
+    ));
+    json.push(("bestperiod_speedup".into(), Value::Num(bp_speedup)));
+
+    update_bench_json("bench_sim", &json);
+}

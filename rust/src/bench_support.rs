@@ -127,6 +127,55 @@ pub fn report_throughput(res: &BenchResult, items: f64, unit: &str) {
     );
 }
 
+/// Path of the machine-readable bench artifact: `BENCH_PR2.json` at the
+/// repository root (the parent of the crate), overridable with
+/// `CKPTWIN_BENCH_JSON`.
+pub fn bench_json_path() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("CKPTWIN_BENCH_JSON") {
+        return p.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_PR2.json")
+}
+
+/// Merge `entries` into the `section` object of the bench JSON at `path`,
+/// preserving other sections (each bench binary owns one section, so
+/// running them in any order composes one artifact).
+pub fn update_bench_json_at(
+    path: &std::path::Path,
+    section: &str,
+    entries: &[(String, crate::jsonio::Value)],
+) -> std::io::Result<()> {
+    use crate::jsonio::{self, Value};
+    use std::collections::BTreeMap;
+    let mut root: BTreeMap<String, Value> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| jsonio::parse(&t).ok())
+        .and_then(|v| match v {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        })
+        .unwrap_or_default();
+    let mut sec = match root.remove(section) {
+        Some(Value::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    for (k, v) in entries {
+        sec.insert(k.clone(), v.clone());
+    }
+    root.insert(section.to_string(), Value::Obj(sec));
+    std::fs::write(path, jsonio::to_string(&Value::Obj(root)) + "\n")
+}
+
+/// [`update_bench_json_at`] on [`bench_json_path`], logging (not failing)
+/// on I/O errors so a read-only checkout never kills a bench run.
+pub fn update_bench_json(section: &str, entries: &[(String, crate::jsonio::Value)]) {
+    let path = bench_json_path();
+    match update_bench_json_at(&path, section, entries) {
+        Ok(()) => println!("bench json: updated {} [{section}]", path.display()),
+        Err(e) => eprintln!("bench json: failed to write {}: {e}", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +187,30 @@ mod tests {
         assert!(!res.samples.is_empty());
         assert!(res.median() >= 0.0);
         assert!(res.min() <= res.mean() * 1.5 + 1e-9);
+    }
+
+    #[test]
+    fn bench_json_sections_merge() {
+        use crate::jsonio::{self, Value};
+        let path = std::env::temp_dir().join(format!(
+            "ckptwin-bench-json-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        update_bench_json_at(&path, "a", &[("x".into(), Value::Num(1.5))]).unwrap();
+        update_bench_json_at(
+            &path,
+            "b",
+            &[("y".into(), Value::Str("fast".into()))],
+        )
+        .unwrap();
+        // Re-writing a section merges keys instead of clobbering others.
+        update_bench_json_at(&path, "a", &[("z".into(), Value::Num(2.0))]).unwrap();
+        let v = jsonio::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("a").unwrap().get("x").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("a").unwrap().get("z").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("b").unwrap().get("y").unwrap().as_str(), Some("fast"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -93,6 +93,12 @@ pub struct Cell {
     /// Stable cell hash (scenario + strategy), derived from [`Cell::key`]
     /// at construction; keys the result store.
     pub hash: u64,
+    /// Stable hash of the full scenario minus the strategy
+    /// ([`Cell::scenario_key`]).  The strategy is the only cell axis that
+    /// does not shape the event trace, so this hash keys the per-worker
+    /// [`crate::campaign::TracePool`]: every strategy variant of one
+    /// scenario replays the same memoized traces.
+    pub scenario_hash: u64,
     /// Stable hash of the fault *environment* alone ([`Cell::trace_key`]:
     /// platform, laws, scale — no strategy, no predictor).  Seeds derive
     /// from this, so every strategy, predictor and window at one
@@ -120,9 +126,11 @@ impl Cell {
             strategy,
             scale,
             hash: 0,
+            scenario_hash: 0,
             trace_hash: 0,
         };
         cell.trace_hash = fnv1a64(cell.trace_key().as_bytes());
+        cell.scenario_hash = fnv1a64(cell.scenario_key().as_bytes());
         cell.hash = fnv1a64(cell.key().as_bytes());
         cell
     }
@@ -145,18 +153,24 @@ impl Cell {
         )
     }
 
-    /// Canonical, human-greppable identity string of the full cell.  The
-    /// store hash is FNV-1a of exactly this, so any parameter change
-    /// changes the hash and any re-expansion reproduces it.
-    pub fn key(&self) -> String {
+    /// Canonical identity of the simulated scenario: the fault environment
+    /// plus the predictor — everything that shapes the event trace, and
+    /// nothing that doesn't (the strategy only consumes it).
+    pub fn scenario_key(&self) -> String {
         format!(
-            "{};p={};r={};I={};strat={}",
+            "{};p={};r={};I={}",
             self.trace_key(),
             self.predictor.precision,
             self.predictor.recall,
             self.predictor.window,
-            self.strategy.name(),
         )
+    }
+
+    /// Canonical, human-greppable identity string of the full cell.  The
+    /// store hash is FNV-1a of exactly this, so any parameter change
+    /// changes the hash and any re-expansion reproduces it.
+    pub fn key(&self) -> String {
+        format!("{};strat={}", self.scenario_key(), self.strategy.name())
     }
 
     /// The concrete scenario this cell simulates.
@@ -349,6 +363,9 @@ mod tests {
         assert_ne!(a.strategy, b.strategy);
         assert_eq!(a.trace_key(), b.trace_key());
         assert_eq!(a.trace_hash, b.trace_hash);
+        // Same scenario too: they replay one TracePool entry.
+        assert_eq!(a.scenario_key(), b.scenario_key());
+        assert_eq!(a.scenario_hash, b.scenario_hash);
         // Paired comparison: identical instance seeds → identical traces.
         assert_eq!(a.instance_seed(7), b.instance_seed(7));
         // But distinct store identities.
@@ -381,6 +398,10 @@ mod tests {
         assert_eq!(a.trace_hash, b.trace_hash);
         assert_eq!(a.instance_seed(3), b.instance_seed(3));
         assert_ne!(a.hash, b.hash);
+        // A different predictor is a different event trace: the scenario
+        // hash (the TracePool key) must separate them even though the
+        // fault substream is shared.
+        assert_ne!(a.scenario_hash, b.scenario_hash);
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //!
 //! ```text
 //!   Grid ──expand──▶ [Cell; N] ──(cell × instance-block units)──▶
-//!     scheduler::run_units (shared atomic work queue, scoped threads)
-//!       each unit: simulate a block of instances → Welford partials
+//!     scheduler::run_units_stateful (shared atomic work queue, scoped
+//!         threads, one TracePool per worker)
+//!       each unit: replay the (scenario, seed) trace from the worker's
+//!         pool — generated once, shared by every strategy variant — and
+//!         simulate a block of instances → Welford partials
 //!     last unit of a cell: merge partials IN BLOCK ORDER (deterministic)
 //!       ──▶ CellOutcome ──append──▶ Store (JSONL keyed by scenario hash)
 //! ```
@@ -29,17 +32,19 @@
 //! subcommand (run / resume / report) exposes it directly.
 
 pub mod grid;
+pub mod pool;
 pub mod scheduler;
 pub mod store;
 
 pub use grid::{Cell, Grid, PredictorKind};
+pub use pool::TracePool;
 pub use store::{CellRecord, Store};
 
 use std::sync::Mutex;
 
 use anyhow::Result;
 
-use crate::sim::engine::simulate;
+use crate::sim::engine::simulate_from_capped;
 use crate::stats::Welford;
 
 /// Execution knobs for a campaign.
@@ -163,7 +168,11 @@ pub fn run_cells(
     let append_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
     let n_units = pending.len() * blocks_per_cell;
-    scheduler::run_units(n_units, opt.threads, |u| {
+    // Each worker owns a TracePool: the strategy variants of a scenario
+    // (and any other unit sharing scenario_hash + seed that lands on this
+    // worker) replay one memoized trace instead of regenerating it.  Hits
+    // only change speed, never values, so determinism is preserved.
+    scheduler::run_units_stateful(n_units, opt.threads, TracePool::new, |tp: &mut TracePool, u| {
         let (ci, bi) = (u / blocks_per_cell, u % blocks_per_cell);
         let cell = &cells[pending[ci]];
         let sc = cell.scenario();
@@ -171,7 +180,15 @@ pub fn run_cells(
         let mut waste = Welford::new();
         let mut makespan = Welford::new();
         for i in (bi * block)..((bi + 1) * block).min(instances) {
-            let out = simulate(&sc, &pol, cell.instance_seed(i as u64));
+            let seed = cell.instance_seed(i as u64);
+            let out = simulate_from_capped(
+                &sc,
+                &pol,
+                1.0,
+                seed,
+                tp.replay(cell.scenario_hash, &sc, seed),
+                f64::INFINITY,
+            );
             waste.push(out.waste());
             makespan.push(out.makespan);
         }
@@ -288,6 +305,35 @@ mod tests {
         let (outcomes, skipped) = run_cells(&doubled, &opt, None).unwrap();
         assert_eq!(outcomes.len(), cells.len());
         assert_eq!(skipped, cells.len());
+    }
+
+    #[test]
+    fn pooled_execution_matches_direct_simulation() {
+        // The TracePool replay path must be bit-identical to running each
+        // instance through a fresh stream, including the block-ordered
+        // Welford merge.
+        let g = tiny_grid();
+        let (instances, block) = (3usize, 2usize);
+        let opt = CampaignOptions { instances, block, threads: 4 };
+        let outcomes = evaluate_grid(&g, &opt);
+        for o in &outcomes {
+            let sc = o.cell.scenario();
+            let pol = o.cell.strategy.policy(&sc);
+            let mut waste = Welford::new();
+            for b in 0..instances.div_ceil(block) {
+                let mut part = Welford::new();
+                for i in (b * block)..((b + 1) * block).min(instances) {
+                    let out = crate::sim::engine::simulate(
+                        &sc,
+                        &pol,
+                        o.cell.instance_seed(i as u64),
+                    );
+                    part.push(out.waste());
+                }
+                waste.merge(&part);
+            }
+            assert_eq!(o.waste, waste, "cell {}", o.cell.key());
+        }
     }
 
     #[test]

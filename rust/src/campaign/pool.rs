@@ -1,0 +1,178 @@
+//! Campaign-wide trace memoization: one [`TraceCache`] per
+//! (scenario, instance seed), shared by every simulation that replays it.
+//!
+//! The strategy is the only cell axis that does not shape the event trace
+//! (seeds already derive from the fault-environment hash, and the
+//! predictor is part of the scenario), so the 4–5 strategy variants of a
+//! scenario point — and every BestPeriod candidate evaluated on it —
+//! simulate *identical* traces.  A `TracePool` keyed by
+//! [`crate::campaign::Cell::scenario_hash`] pays trace generation once per
+//! (scenario, seed) and replays it for every consumer.
+//!
+//! Pools are **worker-local** (held as per-worker state in
+//! [`crate::campaign::scheduler::run_units_stateful`]), so they need no
+//! locking; whether a lookup hits only changes speed, never values, so
+//! work stealing keeps its bit-determinism.  Memory is bounded by a total
+//! cached-event budget: crossing it clears the pool (traces are cheap to
+//! regenerate relative to juggling an eviction order).
+
+use std::collections::HashMap;
+
+use crate::config::Scenario;
+use crate::sim::trace::{Replay, TraceCache};
+
+/// Per-worker memo of generated traces, keyed by (scenario hash, seed).
+pub struct TracePool {
+    entries: HashMap<(u64, u64), TraceCache>,
+    max_events: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl Default for TracePool {
+    fn default() -> Self {
+        TracePool::with_budget(TracePool::DEFAULT_MAX_EVENTS)
+    }
+}
+
+impl TracePool {
+    /// Default per-pool budget: ~256k cached events (a few MB per worker;
+    /// hundreds of paper-scale traces).
+    pub const DEFAULT_MAX_EVENTS: usize = 1 << 18;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A pool that clears itself once it caches more than `max_events`
+    /// events in total.
+    pub fn with_budget(max_events: usize) -> Self {
+        TracePool {
+            entries: HashMap::new(),
+            max_events,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// A replay cursor over the memoized trace of (`scenario_hash`, `seed`),
+    /// generating it (from `sc`) on first use.  `scenario_hash` must
+    /// identify everything trace-relevant in `sc` — use
+    /// [`crate::campaign::Cell::scenario_hash`] for campaign cells.
+    ///
+    /// The budget is enforced on misses only: hits — the hot path — do no
+    /// bookkeeping beyond the lookup.  (Caches grow lazily during replay,
+    /// so a running counter could not stay exact anyway; an O(entries)
+    /// scan once per generated trace is noise next to the generation.)
+    // contains_key + insert instead of the entry API: the budget scan must
+    // run between the lookup and the insert, which entry()'s borrow of the
+    // map cannot interleave.
+    #[allow(clippy::map_entry)]
+    pub fn replay(&mut self, scenario_hash: u64, sc: &Scenario, seed: u64) -> Replay<'_> {
+        let key = (scenario_hash, seed);
+        if self.entries.contains_key(&key) {
+            self.hits += 1;
+        } else {
+            if self.cached_events() > self.max_events {
+                self.entries.clear();
+                self.evictions += 1;
+            }
+            self.misses += 1;
+            self.entries.insert(key, TraceCache::new(sc, seed));
+        }
+        self.entries.get_mut(&key).expect("present").replay()
+    }
+
+    /// Total events currently memoized across all entries.
+    pub fn cached_events(&self) -> usize {
+        self.entries.values().map(TraceCache::len).sum()
+    }
+
+    /// Number of memoized (scenario, seed) traces.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Lookups served from the memo.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that generated a fresh trace.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Budget-exceeded clears performed.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec};
+    use crate::sim::distribution::Law;
+    use crate::sim::engine::{simulate, simulate_from};
+    use crate::strategy::{Policy, PolicyKind};
+
+    fn sc() -> Scenario {
+        Scenario {
+            platform: Platform { mu: 40_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 8e5,
+        }
+    }
+
+    #[test]
+    fn pooled_replay_matches_fresh_simulation() {
+        let sc = sc();
+        let mut pool = TracePool::new();
+        let pols = [
+            Policy { kind: PolicyKind::IgnorePredictions, tr: 6000.0, tp: 700.0 },
+            Policy { kind: PolicyKind::Instant, tr: 6000.0, tp: 700.0 },
+            Policy { kind: PolicyKind::WithCkpt, tr: 6000.0, tp: 700.0 },
+        ];
+        for seed in [3u64, 4] {
+            for pol in &pols {
+                let direct = simulate(&sc, pol, seed);
+                let pooled =
+                    simulate_from(&sc, pol, 1.0, seed, pool.replay(7, &sc, seed));
+                assert_eq!(direct, pooled);
+            }
+        }
+        // 2 seeds × 3 policies: one miss per seed, the rest hits.
+        assert_eq!(pool.misses(), 2);
+        assert_eq!(pool.hits(), 4);
+        assert_eq!(pool.len(), 2);
+        assert!(pool.cached_events() > 0);
+    }
+
+    #[test]
+    fn over_budget_pool_clears_and_stays_correct() {
+        let sc = sc();
+        let mut pool = TracePool::with_budget(1); // absurdly tight
+        let pol = Policy { kind: PolicyKind::NoCkpt, tr: 6000.0, tp: 700.0 };
+        // Alternating seeds: every lookup is a miss (the clear evicts the
+        // other seed's trace), so each one runs the budget check.
+        for &seed in &[9u64, 10, 9, 10] {
+            let direct = simulate(&sc, &pol, seed);
+            let pooled =
+                simulate_from(&sc, &pol, 1.0, seed, pool.replay(1, &sc, seed));
+            assert_eq!(direct, pooled);
+        }
+        assert!(pool.evictions() >= 1, "budget never enforced");
+        assert_eq!(pool.misses(), 4);
+        assert_eq!(pool.hits(), 0);
+    }
+}

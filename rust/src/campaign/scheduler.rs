@@ -32,6 +32,24 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    run_units_stateful(n, threads, || (), |_: &mut (), i| f(i))
+}
+
+/// [`run_units`] with per-worker scratch state: each worker initializes one
+/// `S` with `init()` and threads it through every unit it claims.  This is
+/// how worker-lifetime caches (the campaign's [`crate::campaign::TracePool`],
+/// a [`crate::sim::trace::TraceArena`]) live across units without locking:
+/// the state is worker-local by construction.
+///
+/// Results must not depend on the state for determinism to survive work
+/// stealing — a cache is fine (hit or miss, same value), an accumulator is
+/// not.
+pub fn run_units_stateful<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     if n == 0 {
         return Vec::new();
     }
@@ -40,7 +58,8 @@ where
         t => t.min(n),
     };
     if threads <= 1 {
-        return (0..n).map(|i| f(i)).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -48,15 +67,17 @@ where
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 let next = &next;
+                let init = &init;
                 let f = &f;
                 scope.spawn(move || {
+                    let mut state = init();
                     let mut local: Vec<(usize, T)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        local.push((i, f(i)));
+                        local.push((i, f(&mut state, i)));
                     }
                     local
                 })
@@ -107,6 +128,22 @@ mod tests {
         assert_eq!(run_units(0, 8, |i| i), Vec::<usize>::new());
         assert_eq!(run_units(1, 8, |i| i + 1), vec![1]);
         assert_eq!(run_units(3, 0, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn stateful_state_is_reused_within_a_worker() {
+        // Each worker's state is a scratch Vec; results reflect the input
+        // only (cache semantics), so any thread count agrees.
+        let compute = |buf: &mut Vec<u64>, i: usize| {
+            buf.clear();
+            buf.extend((0..=i as u64).map(|k| k * k));
+            buf.iter().sum::<u64>()
+        };
+        let serial = run_units_stateful(50, 1, Vec::new, compute);
+        let parallel = run_units_stateful(50, 6, Vec::new, compute);
+        assert_eq!(serial, parallel);
+        // 0² + 1² + 2² + 3²
+        assert_eq!(serial[3], 14);
     }
 
     #[test]

@@ -62,7 +62,9 @@ pub fn run_seeds(sc: &Scenario, policy: &Policy, seeds: &[u64]) -> Vec<SimOutcom
 ///
 /// Seeds are claimed one at a time from the campaign scheduler's shared
 /// work queue (not statically chunked), so one heavy-tailed instance no
-/// longer serializes a whole chunk at the tail of the run.
+/// longer serializes a whole chunk at the tail of the run.  Each worker
+/// recycles its flat trace buffers through a [`TraceArena`], so the sweep
+/// allocates nothing per event.
 pub fn run_seeds_capped(
     sc: &Scenario,
     policy: &Policy,
@@ -71,11 +73,19 @@ pub fn run_seeds_capped(
 ) -> Vec<SimOutcome> {
     use crate::campaign::scheduler;
     use crate::sim::engine::simulate_from_capped;
-    use crate::sim::trace::TraceStream;
-    scheduler::run_units(seeds.len(), 0, |i| {
-        let seed = seeds[i];
-        simulate_from_capped(sc, policy, 1.0, seed, TraceStream::new(sc, seed), cap)
-    })
+    use crate::sim::trace::TraceArena;
+    scheduler::run_units_stateful(
+        seeds.len(),
+        0,
+        TraceArena::new,
+        |arena: &mut TraceArena, i| {
+            let seed = seeds[i];
+            let mut stream = arena.stream(sc, seed);
+            let out = simulate_from_capped(sc, policy, 1.0, seed, &mut stream, cap);
+            arena.recycle(stream);
+            out
+        },
+    )
 }
 
 /// One heuristic's result at one scenario point.
@@ -144,9 +154,12 @@ pub fn best_period_results_seeded(
     best_period_seeds: usize,
     seed_of: impl Fn(u64) -> u64,
 ) -> Vec<HeuristicResult> {
-    let mut out = Vec::new();
+    use crate::campaign::scheduler;
+    use crate::sim::engine::simulate_from;
+    use crate::sim::trace::TraceCache;
+
     if best_period_seeds == 0 {
-        return out;
+        return Vec::new();
     }
     let bp_seeds: Vec<u64> = (1000..1000 + best_period_seeds as u64).collect();
     let eval_seeds: Vec<u64> = (0..n as u64).map(seed_of).collect();
@@ -156,24 +169,53 @@ pub fn best_period_results_seeded(
         ("BestPeriod-NoCkptI", PolicyKind::NoCkpt),
         ("BestPeriod-WithCkptI", PolicyKind::WithCkpt),
     ];
-    for (name, kind) in variants {
-        let tp = crate::model::optimal::tp_extr(sc).max(sc.platform.cp * 1.1);
-        let bp = best_period::search(sc, kind, tp, &bp_seeds, 24, 8);
-        let pol = Policy { kind, tr: bp.tr, tp };
-        let outcomes = run_seeds(sc, &pol, &eval_seeds);
-        let waste = Summary::from_iter(outcomes.iter().map(|o| o.waste()));
-        let makespan =
-            outcomes.iter().map(|o| o.makespan).sum::<f64>() / outcomes.len() as f64;
-        out.push(HeuristicResult {
-            name: name.to_string(),
-            waste: waste.mean(),
-            waste_ci: waste.ci95(),
-            makespan,
-            analytic_waste: f64::NAN,
-            tr: bp.tr,
+    let tp = crate::model::optimal::tp_extr(sc).max(sc.platform.cp * 1.1);
+
+    // One trace memo per search seed, shared by all four variant searches:
+    // every candidate of every twin replays the same traces (and pays
+    // generation once per seed, not once per (variant, candidate, seed)).
+    let mut caches: Vec<TraceCache> =
+        bp_seeds.iter().map(|&s| TraceCache::new(sc, s)).collect();
+    let cfg = best_period::SearchConfig::adaptive(24, 8);
+    let searched: Vec<(&str, Policy)> = variants
+        .iter()
+        .map(|&(name, kind)| {
+            let bp = best_period::search_with(sc, kind, tp, &bp_seeds, &cfg, &mut caches);
+            (name, Policy { kind, tr: bp.tr, tp })
+        })
+        .collect();
+
+    // Evaluate the four twins per seed over one shared trace each — the
+    // twin rows stay trace-paired with each other and with the
+    // named-heuristic rows of the same scenario point.
+    let per_seed: Vec<Vec<SimOutcome>> =
+        scheduler::run_units(eval_seeds.len(), 0, |i| {
+            let seed = eval_seeds[i];
+            let mut cache = TraceCache::new(sc, seed);
+            searched
+                .iter()
+                .map(|(_, pol)| simulate_from(sc, pol, 1.0, seed, cache.replay()))
+                .collect()
         });
-    }
-    out
+
+    searched
+        .iter()
+        .enumerate()
+        .map(|(vi, (name, pol))| {
+            let waste =
+                Summary::from_iter(per_seed.iter().map(|outs| outs[vi].waste()));
+            let makespan = per_seed.iter().map(|outs| outs[vi].makespan).sum::<f64>()
+                / per_seed.len() as f64;
+            HeuristicResult {
+                name: name.to_string(),
+                waste: waste.mean(),
+                waste_ci: waste.ci95(),
+                makespan,
+                analytic_waste: f64::NAN,
+                tr: pol.tr,
+            }
+        })
+        .collect()
 }
 
 /// Write CSV rows to `results/<name>.csv` (creating the directory); returns

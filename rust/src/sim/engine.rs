@@ -32,11 +32,11 @@
 
 use crate::config::Scenario;
 use crate::sim::timeline::{Span, Timeline};
-use crate::sim::trace::{Event, EventSource, Prediction, TraceStream};
+use crate::sim::trace::{Event, EventSource, FlatTrace, Prediction};
 use crate::strategy::{Policy, PolicyKind};
 
 /// Statistics of one simulated execution.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SimOutcome {
     /// Total wall-clock time to complete the job (s).
     pub makespan: f64,
@@ -72,7 +72,14 @@ pub struct SimOutcome {
 
 impl SimOutcome {
     /// WASTE = (Time_final - Time_base) / Time_final (§2.1).
+    ///
+    /// A degenerate run (capped at zero, or an empty outcome) has
+    /// `makespan == 0` and wasted nothing: the division is guarded so this
+    /// reports 0.0 instead of NaN, which would poison every mean it enters.
     pub fn waste(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
         (self.makespan - self.job_size) / self.makespan
     }
 }
@@ -129,8 +136,8 @@ pub fn simulate_traced(
     seed: u64,
 ) -> (SimOutcome, Timeline) {
     policy.validate(scenario);
-    let mut stream = TraceStream::new(scenario, seed);
-    let next_ev = EventSource::next_event(&mut stream);
+    let mut stream = FlatTrace::new(scenario, seed);
+    let next_ev = stream.next_event();
     let work_quantum = policy.tr - scenario.platform.c;
     let mut eng = Engine {
         sc: scenario,
@@ -166,7 +173,7 @@ pub fn simulate_q(
     seed: u64,
 ) -> SimOutcome {
     assert!((0.0..=1.0).contains(&q));
-    let stream = TraceStream::new(scenario, seed);
+    let stream = FlatTrace::new(scenario, seed);
     simulate_from(scenario, policy, q, seed, stream)
 }
 
@@ -687,6 +694,26 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn waste_is_zero_not_nan_for_degenerate_runs() {
+        // A run capped at t = 0 completes no work in no time; its waste is
+        // 0, not 0/0 (regression: NaN here poisoned search means).
+        let sc = base_scenario();
+        let pol = policy(PolicyKind::IgnorePredictions, 6000.0, 600.0);
+        let out = simulate_from_capped(
+            &sc,
+            &pol,
+            1.0,
+            1,
+            crate::sim::trace::FlatTrace::new(&sc, 1),
+            0.0,
+        );
+        assert_eq!(out.makespan, 0.0);
+        assert_eq!(out.job_size, 0.0);
+        assert_eq!(out.waste(), 0.0);
+        assert_eq!(SimOutcome::default().waste(), 0.0);
     }
 
     #[test]

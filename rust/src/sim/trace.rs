@@ -16,6 +16,20 @@
 //! The stream is unbounded and lazy: the simulated makespan is not known in
 //! advance, so events are produced on demand with just enough look-ahead
 //! (window + C_p) to guarantee global time order.
+//!
+//! Two interchangeable implementations produce the *same* event sequence
+//! (same RNG streams, same total order; `tests/fast_path.rs` proves them
+//! bit-identical):
+//!
+//! * [`TraceStream`] — the seed implementation: a `BinaryHeap` merge that
+//!   pays a pop-and-refill per event.  Kept as the reference for golden
+//!   tests and baselines (and by the coordinator, which is not hot).
+//! * [`FlatTrace`] — the fast path: batched generation into flat,
+//!   time-sorted `Vec<Event>` buffers (one horizon's worth of faults and
+//!   false predictions per batch, two-pointer merged).  The only heap left
+//!   is the one inside the per-processor Weibull superposition, where it is
+//!   genuinely needed.  With buffers recycled through a [`TraceArena`],
+//!   steady-state simulation performs zero allocations per event.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -67,6 +81,14 @@ impl Event {
     }
 }
 
+/// The total event order shared by the heap and flat implementations:
+/// visible time, faults before predictions on ties.
+fn event_order(a: &Event, b: &Event) -> Ordering {
+    a.time()
+        .total_cmp(&b.time())
+        .then_with(|| a.rank().cmp(&b.rank()))
+}
+
 /// Min-heap wrapper with a total order on (time, rank).
 #[derive(Clone, Copy, Debug)]
 struct HeapEvent(Event);
@@ -85,11 +107,7 @@ impl PartialOrd for HeapEvent {
 impl Ord for HeapEvent {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reversed: BinaryHeap is a max-heap, we want the earliest event.
-        other
-            .0
-            .time()
-            .total_cmp(&self.0.time())
-            .then_with(|| other.0.rank().cmp(&self.0.rank()))
+        event_order(&other.0, &self.0)
     }
 }
 
@@ -274,48 +292,13 @@ enum FaultSource {
 }
 
 impl FaultSource {
-    fn next(&mut self) -> f64 {
-        match self {
-            FaultSource::Platform { dist, rng, last } => {
-                *last += dist.sample(rng);
-                *last
-            }
-            FaultSource::PerProc(src) => src.next(),
-        }
-    }
-}
-
-/// Unbounded, lazily generated, time-sorted event stream.
-pub struct TraceStream {
-    rng_fault: Rng,
-    rng_fp: Rng,
-    faults: FaultSource,
-    /// None when the predictor emits no false predictions (p = 1 or r = 0).
-    fp_dist: Option<Distribution>,
-    recall: f64,
-    window: f64,
-    cp: f64,
-    last_fault_raw: f64,
-    last_fp_raw: f64,
-    heap: BinaryHeap<HeapEvent>,
-}
-
-impl TraceStream {
-    /// Build the stream for a scenario.  `seed` fixes the whole trace: two
-    /// strategies given the same (scenario, seed) see the *same* faults and
-    /// predictions, as in the paper's per-instance comparisons.
-    pub fn new(scenario: &Scenario, seed: u64) -> Self {
+    /// Build the scenario's fault arrival process.  Shared by the heap
+    /// reference stream and the flat fast path — identical wiring (same
+    /// RNG stream ids, same model dispatch) is what keeps the two
+    /// bit-identical.
+    fn for_scenario(scenario: &Scenario, seed: u64) -> FaultSource {
         let mu = scenario.platform.mu;
-        let pred = scenario.predictor;
-        let fp_dist = if pred.recall > 0.0 && pred.precision < 1.0 {
-            Some(Distribution::new(
-                scenario.false_pred_law,
-                pred.mu_false(mu),
-            ))
-        } else {
-            None
-        };
-        let faults = match (scenario.fault_model, scenario.fault_law) {
+        match (scenario.fault_model, scenario.fault_law) {
             // A superposition of (fresh or stationary) exponential
             // processes IS a Poisson process of rate n/μ_ind = 1/μ — use
             // the cheap equivalent.  LogNormal has no per-processor
@@ -355,14 +338,139 @@ impl TraceStream {
                     true,
                 ))
             }
+        }
+    }
+
+    fn next(&mut self) -> f64 {
+        match self {
+            FaultSource::Platform { dist, rng, last } => {
+                *last += dist.sample(rng);
+                *last
+            }
+            FaultSource::PerProc(src) => src.next(),
+        }
+    }
+}
+
+/// Fault-substream event construction: recall coin, window placement,
+/// too-late-to-announce reclassification.  One shared implementation so the
+/// heap and flat streams consume the RNG identically.
+struct FaultGen {
+    rng: Rng,
+    recall: f64,
+    window: f64,
+    cp: f64,
+}
+
+impl FaultGen {
+    /// Events for the fault striking at `tf`: the fault itself and, when
+    /// predicted and announceable, its window.  RNG order: recall coin,
+    /// then uniform window offset (E_I^f = I/2).
+    fn events(&mut self, tf: f64) -> (Event, Option<Event>) {
+        if self.rng.bernoulli(self.recall) {
+            let offset = self.rng.range(0.0, self.window);
+            let ws = tf - offset;
+            let notify = ws - self.cp;
+            if notify >= 0.0 {
+                return (
+                    Event::Fault { t: tf, predicted: true },
+                    Some(Event::Prediction(Prediction {
+                        notify_t: notify,
+                        window_start: ws,
+                        window_end: ws + self.window,
+                        true_positive: true,
+                    })),
+                );
+            }
+            // Prediction would be announced before t = 0: too late to act —
+            // reclassify as unpredicted (§2.2).
+        }
+        (Event::Fault { t: tf, predicted: false }, None)
+    }
+}
+
+/// False-prediction substream: raw window starts from `dist` (None when the
+/// predictor emits no false predictions — p = 1 or r = 0), announced `C_p`
+/// early; windows whose announcement would land before t = 0 are dropped.
+struct FpGen {
+    dist: Option<Distribution>,
+    rng: Rng,
+    window: f64,
+    cp: f64,
+}
+
+impl FpGen {
+    /// Advance the raw cursor; returns the announcement event, if any.
+    fn next(&mut self, last_raw: &mut f64) -> Option<Event> {
+        let Some(dist) = self.dist else {
+            *last_raw = f64::INFINITY;
+            return None;
         };
+        *last_raw += dist.sample(&mut self.rng);
+        let ws = *last_raw;
+        let notify = ws - self.cp;
+        if notify >= 0.0 {
+            return Some(Event::Prediction(Prediction {
+                notify_t: notify,
+                window_start: ws,
+                window_end: ws + self.window,
+                true_positive: false,
+            }));
+        }
+        None
+    }
+}
+
+/// The three substream generators of a trace, wired identically for every
+/// stream implementation ([`TraceStream`] and [`FlatTrace`]).
+fn trace_parts(scenario: &Scenario, seed: u64) -> (FaultSource, FaultGen, FpGen) {
+    let mu = scenario.platform.mu;
+    let pred = scenario.predictor;
+    let fp_dist = if pred.recall > 0.0 && pred.precision < 1.0 {
+        Some(Distribution::new(scenario.false_pred_law, pred.mu_false(mu)))
+    } else {
+        None
+    };
+    let faults = FaultSource::for_scenario(scenario, seed);
+    let fault_gen = FaultGen {
+        rng: Rng::stream(seed, 0x0fa17),
+        recall: pred.recall,
+        window: pred.window,
+        cp: scenario.platform.cp,
+    };
+    let fp_gen = FpGen {
+        dist: fp_dist,
+        rng: Rng::stream(seed, 0xfa15e),
+        window: pred.window,
+        cp: scenario.platform.cp,
+    };
+    (faults, fault_gen, fp_gen)
+}
+
+/// Unbounded, lazily generated, time-sorted event stream (heap-merged
+/// reference implementation; see [`FlatTrace`] for the fast path).
+pub struct TraceStream {
+    faults: FaultSource,
+    fault_gen: FaultGen,
+    fp_gen: FpGen,
+    window: f64,
+    cp: f64,
+    last_fault_raw: f64,
+    last_fp_raw: f64,
+    heap: BinaryHeap<HeapEvent>,
+}
+
+impl TraceStream {
+    /// Build the stream for a scenario.  `seed` fixes the whole trace: two
+    /// strategies given the same (scenario, seed) see the *same* faults and
+    /// predictions, as in the paper's per-instance comparisons.
+    pub fn new(scenario: &Scenario, seed: u64) -> Self {
+        let (faults, fault_gen, fp_gen) = trace_parts(scenario, seed);
         TraceStream {
-            rng_fault: Rng::stream(seed, 0x0fa17),
-            rng_fp: Rng::stream(seed, 0xfa15e),
             faults,
-            fp_dist,
-            recall: pred.recall,
-            window: pred.window,
+            fault_gen,
+            fp_gen,
+            window: scenario.predictor.window,
             cp: scenario.platform.cp,
             last_fault_raw: 0.0,
             last_fp_raw: 0.0,
@@ -372,43 +480,16 @@ impl TraceStream {
 
     fn gen_fault(&mut self) {
         self.last_fault_raw = self.faults.next();
-        let tf = self.last_fault_raw;
-        if self.rng_fault.bernoulli(self.recall) {
-            // Fault position uniform inside the window ⇒ E_I^f = I/2.
-            let offset = self.rng_fault.range(0.0, self.window);
-            let ws = tf - offset;
-            let notify = ws - self.cp;
-            if notify >= 0.0 {
-                self.heap.push(HeapEvent(Event::Prediction(Prediction {
-                    notify_t: notify,
-                    window_start: ws,
-                    window_end: ws + self.window,
-                    true_positive: true,
-                })));
-                self.heap.push(HeapEvent(Event::Fault { t: tf, predicted: true }));
-                return;
-            }
-            // Prediction would be announced before t = 0: too late to act —
-            // reclassify as unpredicted (§2.2).
+        let (fault, pred) = self.fault_gen.events(self.last_fault_raw);
+        if let Some(p) = pred {
+            self.heap.push(HeapEvent(p));
         }
-        self.heap.push(HeapEvent(Event::Fault { t: tf, predicted: false }));
+        self.heap.push(HeapEvent(fault));
     }
 
     fn gen_fp(&mut self) {
-        let Some(dist) = self.fp_dist else {
-            self.last_fp_raw = f64::INFINITY;
-            return;
-        };
-        self.last_fp_raw += dist.sample(&mut self.rng_fp);
-        let ws = self.last_fp_raw;
-        let notify = ws - self.cp;
-        if notify >= 0.0 {
-            self.heap.push(HeapEvent(Event::Prediction(Prediction {
-                notify_t: notify,
-                window_start: ws,
-                window_end: ws + self.window,
-                true_positive: false,
-            })));
+        if let Some(ev) = self.fp_gen.next(&mut self.last_fp_raw) {
+            self.heap.push(HeapEvent(ev));
         }
     }
 
@@ -458,21 +539,220 @@ impl EventSource for TraceStream {
     }
 }
 
+impl<S: EventSource + ?Sized> EventSource for &mut S {
+    fn next_event(&mut self) -> Event {
+        (**self).next_event()
+    }
+}
+
+/// The reusable flat buffers of a [`FlatTrace`]: pending fault-substream
+/// events, pending false predictions, and the merged batch being emitted.
+/// Recycled through a [`TraceArena`] so repeated simulations allocate
+/// nothing once the buffers reach steady-state capacity.
+#[derive(Default)]
+pub struct TraceBufs {
+    fault: Vec<Event>,
+    fp: Vec<Event>,
+    merged: Vec<Event>,
+}
+
+impl TraceBufs {
+    fn clear(&mut self) {
+        self.fault.clear();
+        self.fp.clear();
+        self.merged.clear();
+    }
+}
+
+/// Flat-buffer fast path: the same event sequence as [`TraceStream`], but
+/// generated a horizon batch at a time instead of a heap op per event.
+///
+/// Each refill advances the emission horizon by one chunk, drains the raw
+/// arrival processes far enough (horizon + window + C_p) that every event
+/// below the horizon is known, sorts the fault-substream scratch vector
+/// (predictions can precede earlier faults' strikes, so it is not generated
+/// in order), and two-pointer merges it with the (naturally ordered)
+/// false-prediction vector into the emission buffer.  Events beyond the
+/// horizon stay in their scratch vectors for the next batch.
+pub struct FlatTrace {
+    faults: FaultSource,
+    fault_gen: FaultGen,
+    fp_gen: FpGen,
+    window: f64,
+    cp: f64,
+    last_fault_raw: f64,
+    last_fp_raw: f64,
+    /// Events with visible time < `horizon` have been merged already.
+    horizon: f64,
+    /// Horizon advance per refill (a few dozen platform MTBFs: enough to
+    /// amortize the batch bookkeeping, small enough not to overshoot the
+    /// makespan by much).
+    chunk: f64,
+    bufs: TraceBufs,
+    pos: usize,
+}
+
+impl FlatTrace {
+    /// Build the fast stream for a scenario (same seeding contract as
+    /// [`TraceStream::new`]).
+    pub fn new(scenario: &Scenario, seed: u64) -> Self {
+        Self::with_bufs(scenario, seed, TraceBufs::default())
+    }
+
+    /// [`FlatTrace::new`] reusing previously allocated buffers (see
+    /// [`TraceArena`]).
+    pub fn with_bufs(scenario: &Scenario, seed: u64, mut bufs: TraceBufs) -> Self {
+        bufs.clear();
+        let (faults, fault_gen, fp_gen) = trace_parts(scenario, seed);
+        let window = scenario.predictor.window;
+        let cp = scenario.platform.cp;
+        FlatTrace {
+            faults,
+            fault_gen,
+            fp_gen,
+            window,
+            cp,
+            last_fault_raw: 0.0,
+            last_fp_raw: 0.0,
+            horizon: 0.0,
+            chunk: (32.0 * scenario.platform.mu).max(8.0 * (window + cp)),
+            bufs,
+            pos: 0,
+        }
+    }
+
+    /// Recover the buffers for reuse (see [`TraceArena::recycle`]).
+    pub fn into_bufs(self) -> TraceBufs {
+        self.bufs
+    }
+
+    /// Generate and merge the next non-empty batch of events.
+    fn refill(&mut self) {
+        loop {
+            let h = self.horizon + self.chunk;
+            // Any event with visible time < h comes from a raw arrival at
+            // or before h + window + cp (a fault strikes at its arrival; a
+            // window opens at most window + cp after its announcement), so
+            // draining both processes to there completes the batch.
+            let gen_to = h + self.window + self.cp;
+            while self.last_fault_raw <= gen_to {
+                self.last_fault_raw = self.faults.next();
+                let (fault, pred) = self.fault_gen.events(self.last_fault_raw);
+                self.bufs.fault.push(fault);
+                if let Some(p) = pred {
+                    self.bufs.fault.push(p);
+                }
+            }
+            while self.last_fp_raw <= gen_to {
+                if let Some(ev) = self.fp_gen.next(&mut self.last_fp_raw) {
+                    self.bufs.fp.push(ev);
+                }
+            }
+            self.horizon = h;
+            // In-place sort (carried tail + new events); the fp vector is
+            // generated in notify order and needs none.
+            self.bufs.fault.sort_unstable_by(event_order);
+            self.bufs.merged.clear();
+            self.pos = 0;
+            let (mut i, mut j) = (0usize, 0usize);
+            loop {
+                let take_fault = match (self.bufs.fault.get(i), self.bufs.fp.get(j)) {
+                    (None, None) => break,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    (Some(a), Some(b)) => event_order(a, b) != Ordering::Greater,
+                };
+                let ev = if take_fault { self.bufs.fault[i] } else { self.bufs.fp[j] };
+                if ev.time() >= h {
+                    break; // beyond the horizon: belongs to a later batch
+                }
+                if take_fault {
+                    i += 1;
+                } else {
+                    j += 1;
+                }
+                self.bufs.merged.push(ev);
+            }
+            self.bufs.fault.drain(..i);
+            self.bufs.fp.drain(..j);
+            if !self.bufs.merged.is_empty() {
+                return;
+            }
+        }
+    }
+}
+
+impl EventSource for FlatTrace {
+    fn next_event(&mut self) -> Event {
+        while self.pos == self.bufs.merged.len() {
+            self.refill();
+        }
+        let ev = self.bufs.merged[self.pos];
+        self.pos += 1;
+        ev
+    }
+}
+
+/// Recycler for [`TraceBufs`]: hand buffers from finished streams to new
+/// ones so back-to-back simulations (a worker thread draining a campaign
+/// queue, a harness seed sweep) allocate nothing per instance — and nothing
+/// per event.
+#[derive(Default)]
+pub struct TraceArena {
+    spare: Vec<TraceBufs>,
+}
+
+impl TraceArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A [`FlatTrace`] backed by recycled buffers when any are available.
+    pub fn stream(&mut self, scenario: &Scenario, seed: u64) -> FlatTrace {
+        FlatTrace::with_bufs(scenario, seed, self.spare.pop().unwrap_or_default())
+    }
+
+    /// Return a finished stream's buffers to the arena.
+    pub fn recycle(&mut self, stream: FlatTrace) {
+        self.spare.push(stream.into_bufs());
+    }
+}
+
+/// Which generator backs a [`TraceCache`].
+enum CacheSource {
+    Fast(FlatTrace),
+    Reference(TraceStream),
+}
+
 /// Memoized trace: generates events once and replays them for any number
 /// of simulations of the SAME (scenario, seed).
 ///
 /// The BestPeriod brute-force search simulates dozens of candidate periods
-/// against identical traces; without caching, trace generation (RNG +
+/// against identical traces, and the campaign runs several strategy
+/// variants per fault environment; without caching, trace generation (RNG +
 /// heaps + per-processor thinning) is regenerated per candidate and costs
 /// a significant fraction of each run.  `TraceCache` pays it once.
 pub struct TraceCache {
-    stream: TraceStream,
+    source: CacheSource,
     events: Vec<Event>,
 }
 
 impl TraceCache {
+    /// A cache backed by the flat fast path (the default).
     pub fn new(scenario: &Scenario, seed: u64) -> Self {
-        TraceCache { stream: TraceStream::new(scenario, seed), events: Vec::new() }
+        TraceCache {
+            source: CacheSource::Fast(FlatTrace::new(scenario, seed)),
+            events: Vec::new(),
+        }
+    }
+
+    /// A cache backed by the heap-merged seed stream — baselines and
+    /// golden equivalence tests only.
+    pub fn reference(scenario: &Scenario, seed: u64) -> Self {
+        TraceCache {
+            source: CacheSource::Reference(TraceStream::new(scenario, seed)),
+            events: Vec::new(),
+        }
     }
 
     /// A fresh replay cursor over this cache.
@@ -480,7 +760,17 @@ impl TraceCache {
         Replay { cache: self, pos: 0 }
     }
 
-    /// Events materialized so far (diagnostics).
+    /// Materialize one more event from the backing stream.
+    fn extend(&mut self) {
+        let ev = match &mut self.source {
+            CacheSource::Fast(s) => s.next_event(),
+            CacheSource::Reference(s) => s.next_event(),
+        };
+        self.events.push(ev);
+    }
+
+    /// Events materialized so far (diagnostics; also the unit of the
+    /// [`crate::campaign::TracePool`] memory budget).
     pub fn len(&self) -> usize {
         self.events.len()
     }
@@ -499,8 +789,7 @@ pub struct Replay<'a> {
 impl EventSource for Replay<'_> {
     fn next_event(&mut self) -> Event {
         if self.pos == self.cache.events.len() {
-            let ev = self.cache.stream.next_event();
-            self.cache.events.push(ev);
+            self.cache.extend();
         }
         let ev = self.cache.events[self.pos];
         self.pos += 1;
@@ -774,5 +1063,59 @@ mod tests {
         let expected = 2_000_000.0 / mu_false;
         let rel = (fps.len() as f64 - expected).abs() / expected;
         assert!(rel < 0.05, "{} vs {expected}", fps.len());
+    }
+
+    #[test]
+    fn flat_stream_matches_heap_stream() {
+        // Event-by-event equality of the fast path and the reference heap
+        // stream, across the fault models and a false-prediction mix.
+        for (sc, n_events) in [
+            (scenario(0.85, 0.82, 600.0), 4000),
+            (scenario(0.7, 0.4, 300.0), 4000),
+            (scenario(0.0, 0.5, 300.0), 500),
+            (paper_scenario(FaultModel::PerProcessor { n: 1 << 16 }, 0.7), 2000),
+            (
+                paper_scenario(
+                    FaultModel::PerProcessorStationary { n: 1 << 16 },
+                    0.5,
+                ),
+                500,
+            ),
+        ] {
+            let mut heap = TraceStream::new(&sc, 11);
+            let mut flat = FlatTrace::new(&sc, 11);
+            for k in 0..n_events {
+                assert_eq!(heap.next_event(), flat.next_event(), "event {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn arena_recycled_stream_is_identical() {
+        let sc = scenario(0.85, 0.82, 600.0);
+        let mut want = Vec::new();
+        let mut fresh = FlatTrace::new(&sc, 5);
+        for _ in 0..1500 {
+            want.push(fresh.next_event());
+        }
+        let mut arena = TraceArena::new();
+        for _ in 0..3 {
+            let mut ts = arena.stream(&sc, 5);
+            for w in &want {
+                assert_eq!(ts.next_event(), *w);
+            }
+            arena.recycle(ts);
+        }
+    }
+
+    #[test]
+    fn reference_cache_matches_fast_cache() {
+        let sc = scenario(0.7, 0.4, 300.0);
+        let mut fast = TraceCache::new(&sc, 13);
+        let mut reference = TraceCache::reference(&sc, 13);
+        let (mut a, mut b) = (fast.replay(), reference.replay());
+        for _ in 0..3000 {
+            assert_eq!(a.next_event(), b.next_event());
+        }
     }
 }

@@ -6,14 +6,27 @@
 //! periods of the prediction-aware strategies are near-optimal, while
 //! Daly's (and to a lesser extent RFO's) can be far off under Weibull laws.
 //!
-//! The search is a two-stage grid: a coarse geometric sweep over
-//! `[1.05 C, min(job, 40 T_ref)]`, then a linear refinement around the
-//! best coarse point.  Every candidate is scored by the mean waste over the
-//! given instance seeds (the same seeds for every candidate — paired
-//! comparison).  The expensive variant of this search is exactly what the
-//! `waste_grid` PJRT artifact accelerates on the *analytic* side
-//! (`runtime::waste_grid`); the simulation side is parallelized in the
-//! harness.
+//! The candidate set is a two-stage grid: a coarse geometric sweep over
+//! `[1.05 C, min(job, 40 T_ref)]` (plus the analytic reference period,
+//! deduplicated against the grid), then a linear refinement around the best
+//! coarse point.  Every candidate is scored by the mean waste over the
+//! given instance seeds — the same seeds, replaying the same memoized
+//! traces, for every candidate (paired comparison).
+//!
+//! Two sweep modes:
+//!
+//! * **exhaustive** ([`search_exhaustive`], or `exact` in
+//!   [`SearchConfig`]): every candidate is scored on every seed — the
+//!   pre-adaptive reference behavior, with deterministic eval counts.
+//! * **adaptive** ([`search`], the default): successive-halving style
+//!   racing.  All candidates are scored on a small seed prefix first;
+//!   candidates whose mean waste is *statistically dominated* (paired mean
+//!   difference to the current leader exceeding three paired standard
+//!   errors plus a small slack) are eliminated; the seed budget doubles
+//!   and only survivors continue.  Once every survivor is provably within
+//!   the tolerance of the leader, the race stops early.  A paired test
+//!   (`adaptive_search_within_tolerance_of_exhaustive`) pins the result
+//!   quality to the exhaustive sweep.
 
 use crate::config::Scenario;
 use crate::sim::engine::{simulate, simulate_from_capped};
@@ -25,10 +38,46 @@ use crate::strategy::{Policy, PolicyKind};
 pub struct BestPeriod {
     /// The winning regular period.
     pub tr: f64,
-    /// Mean waste achieved at `tr` over the search seeds.
+    /// Mean waste achieved at `tr` over the seeds the search spent on it
+    /// (all of them in exhaustive mode; possibly a prefix when the
+    /// adaptive race stopped early).
     pub waste: f64,
     /// Number of simulations executed by the search.
     pub evals: u64,
+}
+
+/// Sweep shape and mode of a [`search_with`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchConfig {
+    /// Points of the coarse geometric sweep.
+    pub coarse: usize,
+    /// Points of the linear refinement around the coarse winner.
+    pub refine: usize,
+    /// Exhaustive mode: score every candidate on every seed.
+    pub exact: bool,
+    /// Adaptive mode's waste tolerance: elimination slack and early-stop
+    /// threshold both derive from it (ignored when `exact`).
+    pub tolerance: f64,
+}
+
+impl SearchConfig {
+    /// The racing configuration used by default (tolerance 0.01 waste).
+    pub fn adaptive(coarse: usize, refine: usize) -> Self {
+        SearchConfig { coarse, refine, exact: false, tolerance: 0.01 }
+    }
+
+    /// The pre-adaptive full sweep.
+    pub fn exhaustive(coarse: usize, refine: usize) -> Self {
+        SearchConfig { coarse, refine, exact: true, tolerance: 0.0 }
+    }
+}
+
+/// The makespan cap shared by every search simulation: a candidate whose
+/// makespan exceeds ~50x the job (waste ≥ 0.98) cannot win any search;
+/// abandoning it early keeps the brute force tractable in the heavy-tailed
+/// regimes.
+fn hopeless_cap(sc: &Scenario) -> f64 {
+    50.0 * sc.job_size + 100.0 * sc.platform.mu
 }
 
 /// Mean simulated waste of `kind` at period `tr` over `seeds`.
@@ -41,8 +90,9 @@ pub fn mean_waste(sc: &Scenario, kind: PolicyKind, tr: f64, tp: f64, seeds: &[u6
     sum / seeds.len() as f64
 }
 
-/// [`mean_waste`] over memoized traces: identical results, but trace
-/// generation is paid once per seed instead of once per (seed, candidate).
+/// [`mean_waste`] over memoized traces with the hopeless-candidate cutoff:
+/// identical results for viable candidates, but trace generation is paid
+/// once per seed instead of once per (seed, candidate).
 pub fn mean_waste_cached(
     sc: &Scenario,
     kind: PolicyKind,
@@ -52,10 +102,7 @@ pub fn mean_waste_cached(
     caches: &mut [TraceCache],
 ) -> f64 {
     let pol = Policy { kind, tr, tp };
-    // Hopeless-candidate cutoff: a candidate whose makespan exceeds
-    // 50x the job (waste >= 0.98) cannot win any search; abandoning it
-    // early keeps the brute force tractable in the heavy-tailed regimes.
-    let cap = 50.0 * sc.job_size + 100.0 * sc.platform.mu;
+    let cap = hopeless_cap(sc);
     let sum: f64 = seeds
         .iter()
         .zip(caches.iter_mut())
@@ -67,8 +114,138 @@ pub fn mean_waste_cached(
     sum / seeds.len() as f64
 }
 
+/// The coarse candidate set: geometric grid over `[1.05 C, hi]` plus the
+/// analytic reference period — included exactly once (it is deduplicated
+/// against the grid, e.g. when clamping lands it on `hi`).
+/// Returns (candidates, grid ratio, lo, hi).
+fn candidate_grid(sc: &Scenario, coarse: usize) -> (Vec<f64>, f64, f64, f64) {
+    let c = sc.platform.c;
+    let lo = 1.05 * c;
+    // Upper bound: well past any sensible period, but capped by the job
+    // itself (a period larger than the job == "never checkpoint").
+    let t_ref = crate::model::optimal::rfo_period(&sc.platform);
+    let hi = (40.0 * t_ref).min(sc.job_size).max(2.0 * lo);
+    let ratio = (hi / lo).powf(1.0 / (coarse.max(2) - 1) as f64);
+    let mut cands: Vec<f64> =
+        (0..coarse).map(|k| lo * ratio.powi(k as i32)).collect();
+    let t_ref = t_ref.min(hi).max(lo);
+    if !cands.iter().any(|&g| (g - t_ref).abs() <= 1e-9 * t_ref) {
+        cands.push(t_ref);
+    }
+    (cands, ratio, lo, hi)
+}
+
+/// The refinement candidates around a coarse winner `btr`: the winner
+/// itself plus `refine` linearly spaced points within one grid ratio.
+fn refine_grid(btr: f64, ratio: f64, lo: f64, hi: f64, refine: usize) -> Vec<f64> {
+    let span = btr * (ratio - 1.0);
+    let lo2 = (btr - span).max(lo);
+    let hi2 = (btr + span).min(hi);
+    let mut cands = vec![btr];
+    for k in 0..refine {
+        cands.push(lo2 + (hi2 - lo2) * (k as f64 + 0.5) / refine as f64);
+    }
+    cands
+}
+
+/// Race `cands` over `seeds`: evaluate on a doubling seed prefix,
+/// eliminating statistically dominated candidates between stages, stopping
+/// early once every survivor is within `tol` of the leader.  Returns
+/// (winner index, winner mean waste over the seeds it consumed, evals).
+#[allow(clippy::too_many_arguments)]
+fn race(
+    sc: &Scenario,
+    kind: PolicyKind,
+    tp: f64,
+    cands: &[f64],
+    seeds: &[u64],
+    caches: &mut [TraceCache],
+    cap: f64,
+    tol: f64,
+) -> (usize, f64, u64) {
+    let n = seeds.len();
+    let mut wastes: Vec<Vec<f64>> = vec![Vec::with_capacity(n); cands.len()];
+    let mut alive: Vec<usize> = (0..cands.len()).collect();
+    let mut evals = 0u64;
+    let mut s = 0usize;
+    loop {
+        let s_next = if s == 0 { n.min(2) } else { (s * 2).min(n) };
+        for &ci in &alive {
+            let pol = Policy { kind, tr: cands[ci], tp };
+            for k in s..s_next {
+                let w = simulate_from_capped(
+                    sc,
+                    &pol,
+                    1.0,
+                    seeds[k],
+                    caches[k].replay(),
+                    cap,
+                )
+                .waste();
+                wastes[ci].push(w);
+            }
+            evals += (s_next - s) as u64;
+        }
+        s = s_next;
+        let mean_of = |ci: usize| wastes[ci].iter().sum::<f64>() / s as f64;
+        // First minimum wins ties, like the exhaustive sweep's `w < best`.
+        let mut leader = alive[0];
+        for &ci in &alive[1..] {
+            if mean_of(ci) < mean_of(leader) {
+                leader = ci;
+            }
+        }
+        if s == n {
+            return (leader, mean_of(leader), evals);
+        }
+        // Paired statistics of candidate ci against the leader over the
+        // seeds seen so far: (mean difference, its standard error).
+        let leader_w = wastes[leader].clone();
+        let paired = |ci: usize| -> (f64, f64) {
+            let mut mean_d = 0.0;
+            for (w, l) in wastes[ci].iter().zip(&leader_w) {
+                mean_d += w - l;
+            }
+            mean_d /= s as f64;
+            let mut var = 0.0;
+            for (w, l) in wastes[ci].iter().zip(&leader_w) {
+                let d = (w - l) - mean_d;
+                var += d * d;
+            }
+            let var = if s >= 2 { var / (s - 1) as f64 } else { 0.0 };
+            (mean_d, (var / s as f64).sqrt())
+        };
+        // Elimination: dominated by more than 3 paired standard errors
+        // (plus a small absolute slack so near-ties at tiny s survive the
+        // unreliable variance estimate in neither direction).
+        alive.retain(|&ci| {
+            if ci == leader {
+                return true;
+            }
+            let (mean_d, se) = paired(ci);
+            mean_d <= 3.0 * se + 0.1 * tol
+        });
+        // Equivalence stop: no survivor can still beat the leader by more
+        // than tol/2 (2 standard errors below its observed deficit), so
+        // spending the remaining seed budget cannot change the answer by
+        // more than the tolerance.  Needs ≥ 4 seeds for a usable se.
+        if s >= 4
+            && alive.iter().all(|&ci| {
+                if ci == leader {
+                    return true;
+                }
+                let (mean_d, se) = paired(ci);
+                2.0 * se - mean_d <= 0.5 * tol
+            })
+        {
+            return (leader, mean_of(leader), evals);
+        }
+    }
+}
+
 /// Brute-force search for the best `T_R` (the proactive period `tp` is kept
-/// fixed at its analytic optimum, as in the paper).
+/// fixed at its analytic optimum, as in the paper), with the default
+/// adaptive racing configuration.  See [`search_with`].
 pub fn search(
     sc: &Scenario,
     kind: PolicyKind,
@@ -77,49 +254,73 @@ pub fn search(
     coarse: usize,
     refine: usize,
 ) -> BestPeriod {
-    assert!(!seeds.is_empty());
-    let c = sc.platform.c;
-    let lo = 1.05 * c;
-    // Upper bound: well past any sensible period, but capped by the job
-    // itself (a period larger than the job == "never checkpoint").
-    let t_ref = crate::model::optimal::rfo_period(&sc.platform);
-    let hi = (40.0 * t_ref).min(sc.job_size).max(2.0 * lo);
-
-    // Memoize the per-seed traces: every candidate replays the same one.
     let mut caches: Vec<TraceCache> =
         seeds.iter().map(|&s| TraceCache::new(sc, s)).collect();
+    search_with(sc, kind, tp, seeds, &SearchConfig::adaptive(coarse, refine), &mut caches)
+}
 
-    let mut evals = 0u64;
-    let mut best = (f64::INFINITY, lo);
-    let ratio = (hi / lo).powf(1.0 / (coarse.max(2) - 1) as f64);
-    let mut candidates: Vec<f64> =
-        (0..coarse).map(|k| lo * ratio.powi(k as i32)).collect();
-    // Always include the analytic reference period in the sweep.
-    candidates.push(t_ref.min(hi).max(lo));
+/// [`search`] in exhaustive mode: every candidate scored on every seed
+/// (deterministic eval counts; the adaptive race's quality reference).
+pub fn search_exhaustive(
+    sc: &Scenario,
+    kind: PolicyKind,
+    tp: f64,
+    seeds: &[u64],
+    coarse: usize,
+    refine: usize,
+) -> BestPeriod {
+    let mut caches: Vec<TraceCache> =
+        seeds.iter().map(|&s| TraceCache::new(sc, s)).collect();
+    search_with(sc, kind, tp, seeds, &SearchConfig::exhaustive(coarse, refine), &mut caches)
+}
 
-    for &tr in &candidates {
-        let w = mean_waste_cached(sc, kind, tr, tp, seeds, &mut caches);
-        evals += seeds.len() as u64;
-        if w < best.0 {
-            best = (w, tr);
+/// The search core, over caller-supplied trace memos (`caches[k]` holds
+/// seed `seeds[k]`'s trace).  Passing the same caches to several searches —
+/// as the harness does for the four BestPeriod twins of one scenario —
+/// amortizes trace generation across all of them.
+pub fn search_with(
+    sc: &Scenario,
+    kind: PolicyKind,
+    tp: f64,
+    seeds: &[u64],
+    cfg: &SearchConfig,
+    caches: &mut [TraceCache],
+) -> BestPeriod {
+    assert!(!seeds.is_empty());
+    assert_eq!(seeds.len(), caches.len(), "one trace memo per seed");
+    let (cands, ratio, lo, hi) = candidate_grid(sc, cfg.coarse);
+
+    if cfg.exact {
+        let mut evals = 0u64;
+        let mut best = (f64::INFINITY, lo);
+        for &tr in &cands {
+            let w = mean_waste_cached(sc, kind, tr, tp, seeds, caches);
+            evals += seeds.len() as u64;
+            if w < best.0 {
+                best = (w, tr);
+            }
         }
+        let (mut bw, mut btr) = best;
+        for &tr in refine_grid(btr, ratio, lo, hi, cfg.refine).iter().skip(1) {
+            let w = mean_waste_cached(sc, kind, tr, tp, seeds, caches);
+            evals += seeds.len() as u64;
+            if w < bw {
+                bw = w;
+                btr = tr;
+            }
+        }
+        return BestPeriod { tr: btr, waste: bw, evals };
     }
 
-    // Linear refinement around the best coarse point.
-    let (mut bw, mut btr) = best;
-    let span = btr * (ratio - 1.0);
-    let lo2 = (btr - span).max(lo);
-    let hi2 = (btr + span).min(hi);
-    for k in 0..refine {
-        let tr = lo2 + (hi2 - lo2) * (k as f64 + 0.5) / refine as f64;
-        let w = mean_waste_cached(sc, kind, tr, tp, seeds, &mut caches);
-        evals += seeds.len() as u64;
-        if w < bw {
-            bw = w;
-            btr = tr;
-        }
-    }
-    BestPeriod { tr: btr, waste: bw, evals }
+    let cap = hopeless_cap(sc);
+    let (wi, _, e1) =
+        race(sc, kind, tp, &cands, seeds, caches, cap, cfg.tolerance);
+    // Refine around the coarse winner; the winner itself stays in the race
+    // so refinement can only improve on it.
+    let rcands = refine_grid(cands[wi], ratio, lo, hi, cfg.refine);
+    let (ri, rw, e2) =
+        race(sc, kind, tp, &rcands, seeds, caches, cap, cfg.tolerance);
+    BestPeriod { tr: rcands[ri], waste: rw, evals: e1 + e2 }
 }
 
 #[cfg(test)]
@@ -148,7 +349,7 @@ mod tests {
             let pol = strat.policy(&s);
             let w_formula =
                 mean_waste(&s, pol.kind, pol.tr, pol.tp, &seeds);
-            let bp = search(&s, pol.kind, pol.tp, &seeds, 24, 8);
+            let bp = search_exhaustive(&s, pol.kind, pol.tp, &seeds, 24, 8);
             assert!(
                 bp.waste <= w_formula + 1e-9,
                 "{}: search {} vs formula {}",
@@ -160,11 +361,59 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_search_within_tolerance_of_exhaustive() {
+        // The paired guarantee of the racing sweep: its winner, scored on
+        // the FULL seed set, is within the configured tolerance of the
+        // exhaustive winner (scored on the same seeds, same traces).
+        let s = sc();
+        let seeds: Vec<u64> = (0..8).collect();
+        let tol = SearchConfig::adaptive(16, 6).tolerance;
+        for kind in [PolicyKind::IgnorePredictions, PolicyKind::NoCkpt] {
+            let exact = search_exhaustive(&s, kind, 700.0, &seeds, 16, 6);
+            let fast = search(&s, kind, 700.0, &seeds, 16, 6);
+            let w_fast = mean_waste(&s, kind, fast.tr, 700.0, &seeds);
+            assert!(
+                w_fast <= exact.waste + 2.0 * tol,
+                "{kind:?}: adaptive {} (tr {}) vs exhaustive {} (tr {})",
+                w_fast,
+                fast.tr,
+                exact.waste,
+                exact.tr
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_degenerates_to_full_sweep_on_two_seeds() {
+        // With n = 2 the race's first stage already covers every seed, so
+        // adaptive and exhaustive agree exactly on the winner.
+        let s = sc();
+        let seeds: Vec<u64> = (0..2).collect();
+        let a = search(&s, PolicyKind::NoCkpt, 700.0, &seeds, 12, 4);
+        let b = search_exhaustive(&s, PolicyKind::NoCkpt, 700.0, &seeds, 12, 4);
+        assert_eq!(a.tr, b.tr);
+        assert!((a.waste - b.waste).abs() < 1e-12);
+    }
+
+    #[test]
     fn search_counts_evals() {
         let s = sc();
         let seeds: Vec<u64> = (0..2).collect();
-        let bp = search(&s, PolicyKind::IgnorePredictions, 700.0, &seeds, 10, 4);
+        let bp = search_exhaustive(&s, PolicyKind::IgnorePredictions, 700.0, &seeds, 10, 4);
         assert_eq!(bp.evals, ((10 + 1 + 4) * 2) as u64);
+        assert!(bp.tr > s.platform.c);
+    }
+
+    #[test]
+    fn search_dedups_reference_candidate() {
+        // With a job smaller than the RFO period, the reference candidate
+        // clamps onto `hi` — the last grid point — and must be swept only
+        // once: exactly (coarse + refine) × seeds evals, not +1.
+        let mut s = sc();
+        s.job_size = 5000.0;
+        let seeds: Vec<u64> = (0..2).collect();
+        let bp = search_exhaustive(&s, PolicyKind::IgnorePredictions, 700.0, &seeds, 10, 4);
+        assert_eq!(bp.evals, ((10 + 4) * 2) as u64);
         assert!(bp.tr > s.platform.c);
     }
 }

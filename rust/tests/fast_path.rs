@@ -1,0 +1,167 @@
+//! Golden equivalence of the simulation fast path (PR 2): the flat-buffer
+//! `FlatTrace`, the memoized `TraceCache`/`Replay`, and the campaign
+//! `TracePool` must produce **bit-identical** `SimOutcome`s to the seed
+//! heap-based `TraceStream` — across all four policy kinds, all fault
+//! models, and all three laws (including LogNormal).
+
+use ckptwin::campaign::TracePool;
+use ckptwin::config::{FaultModel, PredictorSpec, Scenario};
+use ckptwin::model::optimal;
+use ckptwin::sim::distribution::Law;
+use ckptwin::sim::engine::{simulate, simulate_from, simulate_q, SimOutcome};
+use ckptwin::sim::trace::{
+    EventSource, FlatTrace, TraceArena, TraceCache, TraceStream,
+};
+use ckptwin::strategy::{Policy, PolicyKind};
+
+const LAWS: [Law; 3] = [
+    Law::Exponential,
+    Law::Weibull { shape: 0.7 },
+    Law::LogNormal { sigma: 1.2 },
+];
+
+const KINDS: [PolicyKind; 4] = [
+    PolicyKind::IgnorePredictions,
+    PolicyKind::Instant,
+    PolicyKind::NoCkpt,
+    PolicyKind::WithCkpt,
+];
+
+fn fault_models() -> [FaultModel; 3] {
+    let n = 1u64 << 16;
+    [
+        FaultModel::PlatformRenewal,
+        FaultModel::PerProcessor { n },
+        FaultModel::PerProcessorStationary { n },
+    ]
+}
+
+/// A scaled-down paper scenario (predictor B: both false predictions and
+/// unpredicted faults are present in the trace).
+fn scenario(model: FaultModel, law: Law) -> Scenario {
+    let mut sc = Scenario::paper(
+        1 << 16,
+        1.0,
+        PredictorSpec::paper_b(900.0),
+        law,
+        law,
+    );
+    sc.fault_model = model;
+    sc.job_size *= 0.05;
+    sc
+}
+
+fn policy(sc: &Scenario, kind: PolicyKind) -> Policy {
+    let tp = optimal::tp_extr(sc).max(sc.platform.cp * 1.1);
+    let tr = optimal::rfo_period(&sc.platform)
+        .min(sc.job_size * 0.5)
+        .max(1.2 * sc.platform.c);
+    Policy { kind, tr, tp }
+}
+
+/// All outcomes must be equal in every field, bit for bit (`SimOutcome`
+/// derives `PartialEq`; f64 equality is exact and no field is NaN).
+fn assert_identical(tag: &str, reference: &SimOutcome, got: &SimOutcome) {
+    assert_eq!(reference, got, "{tag}: fast path diverged from reference");
+}
+
+#[test]
+fn fast_paths_bit_identical_to_reference_stream() {
+    for model in fault_models() {
+        for law in LAWS {
+            let sc = scenario(model, law);
+            for kind in KINDS {
+                let pol = policy(&sc, kind);
+                for seed in [1u64, 9] {
+                    let tag = format!("{model:?}/{}/{kind:?}/seed{seed}", law.label());
+                    // Reference: the seed heap-based stream.
+                    let reference = simulate_from(
+                        &sc,
+                        &pol,
+                        1.0,
+                        seed,
+                        TraceStream::new(&sc, seed),
+                    );
+                    // Fast path 1: the flat stream (what `simulate` uses).
+                    assert_identical(&tag, &reference, &simulate(&sc, &pol, seed));
+                    // Fast path 2: memoized replay, twice (generation pass
+                    // and pure-replay pass must agree).
+                    let mut cache = TraceCache::new(&sc, seed);
+                    let first = simulate_from(&sc, &pol, 1.0, seed, cache.replay());
+                    let second = simulate_from(&sc, &pol, 1.0, seed, cache.replay());
+                    assert_identical(&tag, &reference, &first);
+                    assert_identical(&tag, &reference, &second);
+                    // Reference-backed cache (the bench baseline) too.
+                    let mut rc = TraceCache::reference(&sc, seed);
+                    assert_identical(
+                        &tag,
+                        &reference,
+                        &simulate_from(&sc, &pol, 1.0, seed, rc.replay()),
+                    );
+                    // Fast path 3: arena-recycled flat stream.
+                    let mut arena = TraceArena::new();
+                    let mut stream = arena.stream(&sc, seed);
+                    let out = simulate_from(&sc, &pol, 1.0, seed, &mut stream);
+                    arena.recycle(stream);
+                    assert_identical(&tag, &reference, &out);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_pool_replays_are_bit_identical_across_policies() {
+    let sc = scenario(FaultModel::PerProcessor { n: 1 << 16 }, Law::Weibull { shape: 0.7 });
+    let mut pool = TracePool::new();
+    for seed in [2u64, 5] {
+        for kind in KINDS {
+            let pol = policy(&sc, kind);
+            let reference =
+                simulate_from(&sc, &pol, 1.0, seed, TraceStream::new(&sc, seed));
+            let pooled = simulate_from(
+                &sc,
+                &pol,
+                1.0,
+                seed,
+                pool.replay(0xce11, &sc, seed),
+            );
+            assert_identical(&format!("pool/{kind:?}/seed{seed}"), &reference, &pooled);
+        }
+    }
+    // 2 seeds × 4 policies: one generation per seed, the rest replays.
+    assert_eq!(pool.misses(), 2);
+    assert_eq!(pool.hits(), 6);
+}
+
+#[test]
+fn randomized_trust_uses_identical_coin_flips() {
+    // q < 1 exercises the dedicated rng_q stream; it must be independent
+    // of which trace implementation feeds the engine.
+    let sc = scenario(FaultModel::PlatformRenewal, Law::Exponential);
+    let pol = policy(&sc, PolicyKind::Instant);
+    for seed in [3u64, 7] {
+        let reference = simulate_from(&sc, &pol, 0.5, seed, TraceStream::new(&sc, seed));
+        let fast = simulate_q(&sc, &pol, 0.5, seed);
+        assert_identical(&format!("q0.5/seed{seed}"), &reference, &fast);
+    }
+}
+
+#[test]
+fn flat_stream_event_sequence_matches_heap_sequence() {
+    for model in fault_models() {
+        for law in LAWS {
+            let sc = scenario(model, law);
+            let mut heap = TraceStream::new(&sc, 17);
+            let mut flat = FlatTrace::new(&sc, 17);
+            for k in 0..1200 {
+                assert_eq!(
+                    heap.next_event(),
+                    flat.next_event(),
+                    "{model:?}/{} event {k}",
+                    law.label()
+                );
+            }
+        }
+    }
+}
