@@ -1,0 +1,85 @@
+//! The open strategy axis: run the registry's prediction-handling
+//! extensions through a campaign grid — ExactPred vs Instant (paired
+//! traces), and a QTrust sweep over the trust probability q.
+//!
+//! ```bash
+//! cargo run --release --example new_strategies
+//! ```
+//!
+//! The same campaigns run from the CLI with registry names only (note the
+//! quotes: parentheses are shell metacharacters):
+//!
+//! ```bash
+//! ckptwin campaign run --out results/exactpred.jsonl --scale 0.1 \
+//!   --procs 65536,262144 --cp-ratios 1.0 --laws exponential,weibull0.7 \
+//!   --predictors a --windows 300,900 \
+//!   --strategies "instant,exactpred,windowendckpt,nockpt"
+//! ckptwin campaign run --out results/qtrust.jsonl --scale 0.1 \
+//!   --procs 262144 --laws weibull0.7 --windows 600 \
+//!   --strategies "rfo,qtrust(q=0.25),qtrust(q=0.5),qtrust(q=0.75),nockpt"
+//! ckptwin campaign report --out results/qtrust.jsonl
+//! ```
+
+use ckptwin::campaign::{evaluate_grid, CampaignOptions, Grid, PredictorKind};
+use ckptwin::sim::distribution::Law;
+use ckptwin::strategy::registry::parse_strategy_list;
+
+fn main() {
+    let opt = CampaignOptions { instances: 20, block: 0, threads: 0 };
+
+    // --- ExactPred vs Instant (and friends), paired traces ---------------
+    // Cells at one scenario point share fault traces (the seed derives
+    // from the fault environment), so the deltas below are paired — the
+    // paper's comparison methodology, now covering registry extensions.
+    let grid = Grid {
+        procs: vec![1 << 16, 1 << 18],
+        cp_ratios: vec![1.0],
+        fault_laws: vec![Law::Exponential, Law::Weibull { shape: 0.7 }],
+        uniform_false_preds: false,
+        predictors: vec![PredictorKind::PaperA],
+        windows: vec![300.0, 900.0],
+        strategies: parse_strategy_list(
+            "instant,exactpred,windowendckpt,nockpt",
+        )
+        .expect("registered strategies"),
+        scale: 0.1,
+    };
+    println!("ExactPred vs Instant ({} cells):", grid.len());
+    println!(
+        "{:<14} {:>8} {:>6} {:<16} {:>10} {:>10}",
+        "law", "procs", "I", "strategy", "waste", "±ci95"
+    );
+    for o in evaluate_grid(&grid, &opt) {
+        let name = o.cell.strategy.to_string();
+        println!(
+            "{:<14} {:>8} {:>6} {name:<16} {:>10.4} {:>10.4}",
+            o.cell.fault_law.label(),
+            o.cell.procs,
+            o.cell.predictor.window,
+            o.waste.mean(),
+            o.waste.ci95(),
+        );
+    }
+
+    // --- QTrust sweep: the paper's claim that q is extremal --------------
+    // Interior trust probabilities should never beat both extremes
+    // (q = 0 is RFO's mode, q = 1 is NoCkptI).
+    let sweep = Grid {
+        procs: vec![1 << 18],
+        cp_ratios: vec![1.0],
+        fault_laws: vec![Law::Weibull { shape: 0.7 }],
+        uniform_false_preds: false,
+        predictors: vec![PredictorKind::PaperA],
+        windows: vec![600.0],
+        strategies: parse_strategy_list(
+            "rfo,qtrust(q=0.25),qtrust(q=0.5),qtrust(q=0.75),nockpt",
+        )
+        .expect("registered strategies"),
+        scale: 0.1,
+    };
+    println!("\nQTrust sweep (q = 0 is RFO's mode, q = 1 is NoCkptI):");
+    for o in evaluate_grid(&sweep, &opt) {
+        let name = o.cell.strategy.to_string();
+        println!("  {name:<16} waste {:.4} ±{:.4}", o.waste.mean(), o.waste.ci95());
+    }
+}

@@ -6,7 +6,7 @@ use ckptwin::bench_support::{bench_val, report_throughput};
 use ckptwin::config::{PredictorSpec, Scenario};
 use ckptwin::sim::distribution::Law;
 use ckptwin::sim::engine::simulate;
-use ckptwin::strategy::Strategy;
+use ckptwin::strategy::registry;
 
 fn main() {
     for (tag, procs) in [("2^16", 1u64 << 16), ("2^19", 1u64 << 19)] {
@@ -17,7 +17,8 @@ fn main() {
             Law::Weibull { shape: 0.7 },
             Law::Weibull { shape: 0.7 },
         );
-        for strat in [Strategy::Rfo, Strategy::WithCkptI] {
+        for name in ["RFO", "WithCkptI"] {
+            let strat = registry::get(name).unwrap();
             let pol = strat.policy(&sc);
             let mut seed = 0u64;
             // Events per instance, probed once, for the throughput line.
@@ -26,7 +27,7 @@ fn main() {
                 + probe.n_reg_ckpts as f64
                 + probe.n_pro_ckpts as f64;
             let r = bench_val(
-                &format!("engine/instance_{tag}_{}", strat.name()),
+                &format!("engine/instance_{tag}_{name}"),
                 80.0,
                 || {
                     seed += 1;

@@ -6,7 +6,7 @@ use ckptwin::bench_support::bench_val;
 use ckptwin::config::{PredictorSpec, Scenario};
 use ckptwin::harness::{evaluate_heuristics, run_instances};
 use ckptwin::sim::distribution::Law;
-use ckptwin::strategy::Strategy;
+use ckptwin::strategy::registry;
 
 fn main() {
     let instances: usize = std::env::var("CKPTWIN_INSTANCES")
@@ -29,7 +29,7 @@ fn main() {
     );
 
     // Figures 14-17 family: one T_R sweep column (4 heuristics x 1 period).
-    let pol = Strategy::WithCkptI.policy(&sc);
+    let pol = registry::get("WithCkptI").unwrap().policy(&sc);
     bench_val(
         &format!("figures/waste_vs_tr_point_{instances}inst"),
         300.0,

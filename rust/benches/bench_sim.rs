@@ -20,7 +20,7 @@ use ckptwin::sim::distribution::Law;
 use ckptwin::sim::engine::{simulate, simulate_from_capped};
 use ckptwin::sim::trace::{FlatTrace, TraceCache, TraceStream};
 use ckptwin::strategy::best_period::{search_with, SearchConfig};
-use ckptwin::strategy::{Policy, PolicyKind, Strategy};
+use ckptwin::strategy::{registry, Policy, PolicyKind};
 
 fn main() {
     let mut json: Vec<(String, Value)> = Vec::new();
@@ -36,7 +36,7 @@ fn main() {
         Law::Weibull { shape: 0.7 },
     );
     let pols: Vec<Policy> =
-        Strategy::paper_set().iter().map(|s| s.policy(&sc)).collect();
+        registry::paper_set().iter().map(|s| s.policy(&sc)).collect();
     let seeds: [u64; 4] = [1, 2, 3, 4];
     // Events consumed per full pass (identical on both paths).
     let total_events: f64 = seeds
@@ -99,7 +99,7 @@ fn main() {
     // One fixed seed for both paths: bench_val calibrates its own
     // iteration counts, so a rolling seed would time the two paths over
     // different instance populations.
-    let pol = Strategy::WithCkptI.policy(&sc);
+    let pol = registry::get("WithCkptI").unwrap().policy(&sc);
     let single_seed = 100u64;
     let single_events = simulate(&sc, &pol, single_seed).events as f64;
     let r_heap = bench_val("sim/single_heap_stream", 120.0, || {

@@ -12,7 +12,7 @@
 
 use crate::config::{PredictorSpec, Scenario};
 use crate::sim::distribution::Law;
-use crate::strategy::Strategy;
+use crate::strategy::{registry, StrategyId};
 
 /// FNV-1a 64-bit hash (stable across platforms and runs).
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -64,21 +64,13 @@ impl PredictorKind {
     }
 }
 
-/// Parse a strategy axis value by its paper name.
-pub fn parse_strategy(s: &str) -> Option<Strategy> {
-    match s.trim().to_ascii_lowercase().as_str() {
-        "daly" => Some(Strategy::Daly),
-        "young" => Some(Strategy::Young),
-        "rfo" => Some(Strategy::Rfo),
-        "instant" => Some(Strategy::Instant),
-        "nockpt" | "nockpti" => Some(Strategy::NoCkptI),
-        "withckpt" | "withckpti" => Some(Strategy::WithCkptI),
-        _ => None,
-    }
-}
-
 /// One campaign cell: a fully specified paper scenario plus the strategy to
 /// run on it.  The finest unit of scheduling and aggregation.
+///
+/// The strategy axis is a registry [`StrategyId`] (stable name + parameter
+/// map — see [`crate::strategy::registry`]), so any registered strategy,
+/// including parameterized ones like `QTrust(q=0.25)`, is a grid value with
+/// no campaign-layer edits.
 #[derive(Clone, Debug)]
 pub struct Cell {
     pub procs: u64,
@@ -86,7 +78,7 @@ pub struct Cell {
     pub fault_law: Law,
     pub false_pred_law: Law,
     pub predictor: PredictorSpec,
-    pub strategy: Strategy,
+    pub strategy: StrategyId,
     /// Job-size multiplier (1.0 = the paper's `Time_base = 10000 y / N`;
     /// small values make cheap smoke grids for tests and benches).
     pub scale: f64,
@@ -114,7 +106,7 @@ impl Cell {
         fault_law: Law,
         false_pred_law: Law,
         predictor: PredictorSpec,
-        strategy: Strategy,
+        strategy: StrategyId,
         scale: f64,
     ) -> Cell {
         let mut cell = Cell {
@@ -168,9 +160,13 @@ impl Cell {
 
     /// Canonical, human-greppable identity string of the full cell.  The
     /// store hash is FNV-1a of exactly this, so any parameter change
-    /// changes the hash and any re-expansion reproduces it.
+    /// changes the hash and any re-expansion reproduces it.  The strategy
+    /// component is the [`StrategyId`]'s canonical display form, which for
+    /// the paper's six named heuristics is byte-identical to the
+    /// pre-registry enum labels — existing stores stay resumable
+    /// (`tests/campaign.rs` pins the literal keys).
     pub fn key(&self) -> String {
-        format!("{};strat={}", self.scenario_key(), self.strategy.name())
+        format!("{};strat={}", self.scenario_key(), self.strategy)
     }
 
     /// The concrete scenario this cell simulates.
@@ -209,7 +205,7 @@ pub struct Grid {
     pub uniform_false_preds: bool,
     pub predictors: Vec<PredictorKind>,
     pub windows: Vec<f64>,
-    pub strategies: Vec<Strategy>,
+    pub strategies: Vec<StrategyId>,
     pub scale: f64,
 }
 
@@ -229,7 +225,7 @@ impl Grid {
             uniform_false_preds: false,
             predictors: vec![PredictorKind::PaperA, PredictorKind::PaperB],
             windows: crate::harness::PAPER_WINDOWS.to_vec(),
-            strategies: Strategy::paper_set().to_vec(),
+            strategies: registry::paper_set(),
             scale: 1.0,
         }
     }
@@ -243,7 +239,10 @@ impl Grid {
             uniform_false_preds: false,
             predictors: vec![PredictorKind::PaperA],
             windows: vec![600.0, 1200.0],
-            strategies: vec![Strategy::Rfo, Strategy::NoCkptI],
+            strategies: vec![
+                registry::get("RFO").expect("registered"),
+                registry::get("NoCkptI").expect("registered"),
+            ],
             scale: 0.05,
         }
     }
@@ -271,14 +270,14 @@ impl Grid {
                 for &procs in &self.procs {
                     for &cp_ratio in &self.cp_ratios {
                         for &pred in &self.predictors {
-                            for &strategy in &self.strategies {
+                            for strategy in &self.strategies {
                                 cells.push(Cell::new(
                                     procs,
                                     cp_ratio,
                                     law,
                                     fp_law,
                                     pred.spec(window),
-                                    strategy,
+                                    strategy.clone(),
                                     self.scale,
                                 ));
                             }
@@ -338,7 +337,7 @@ mod tests {
         small.procs = vec![1 << 16];
         small.fault_laws = vec![Law::Exponential];
         small.windows = vec![600.0];
-        small.strategies = vec![Strategy::Rfo];
+        small.strategies = vec![registry::get("RFO").unwrap()];
         let lone = &small.expand()[0];
         let full = Grid::smoke().expand();
         let twin = full.iter().find(|c| c.key() == lone.key()).unwrap();
@@ -383,7 +382,7 @@ mod tests {
             Law::Weibull { shape: 0.7 },
             Law::Weibull { shape: 0.7 },
             PredictorKind::PaperA.spec(300.0),
-            Strategy::Daly,
+            registry::get("Daly").unwrap(),
             1.0,
         );
         let b = Cell::new(
@@ -392,7 +391,7 @@ mod tests {
             Law::Weibull { shape: 0.7 },
             Law::Weibull { shape: 0.7 },
             PredictorKind::PaperB.spec(1200.0),
-            Strategy::NoCkptI,
+            registry::get("NoCkptI").unwrap(),
             1.0,
         );
         assert_eq!(a.trace_hash, b.trace_hash);
@@ -420,10 +419,34 @@ mod tests {
 
     #[test]
     fn strategy_and_predictor_parsing() {
-        assert_eq!(parse_strategy("withckpt"), Some(Strategy::WithCkptI));
-        assert_eq!(parse_strategy("NoCkptI"), Some(Strategy::NoCkptI));
-        assert_eq!(parse_strategy("nope"), None);
+        assert_eq!(
+            "withckpt".parse::<StrategyId>().unwrap(),
+            registry::get("WithCkptI").unwrap()
+        );
+        assert!("nope".parse::<StrategyId>().is_err());
         assert_eq!(PredictorKind::parse("A"), Some(PredictorKind::PaperA));
         assert_eq!(PredictorKind::parse("x"), None);
+    }
+
+    #[test]
+    fn parameterized_strategies_are_distinct_cells() {
+        // Two QTrust settings at one scenario point: same traces (paired
+        // comparison over q), distinct store identities.
+        let mk = |q: f64| {
+            Cell::new(
+                1 << 16,
+                1.0,
+                Law::Exponential,
+                Law::Exponential,
+                PredictorKind::PaperA.spec(600.0),
+                StrategyId::parse(&format!("qtrust(q={q})")).unwrap(),
+                1.0,
+            )
+        };
+        let (a, b) = (mk(0.25), mk(0.75));
+        assert_eq!(a.scenario_hash, b.scenario_hash);
+        assert_eq!(a.instance_seed(5), b.instance_seed(5));
+        assert_ne!(a.hash, b.hash);
+        assert!(a.key().ends_with("strat=QTrust(q=0.25)"), "{}", a.key());
     }
 }

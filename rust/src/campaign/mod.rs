@@ -46,6 +46,7 @@ use anyhow::Result;
 
 use crate::sim::engine::simulate_from_capped;
 use crate::stats::Welford;
+use crate::strategy::Policy;
 
 /// Execution knobs for a campaign.
 #[derive(Clone, Copy, Debug)]
@@ -109,6 +110,12 @@ struct CellState {
     slots: Vec<Option<(Welford, Welford)>>,
     remaining: usize,
     done: Option<CellOutcome>,
+    /// The instantiated policy, memoized by whichever worker claims the
+    /// cell's first block.  Analytic strategies are cheap to re-derive,
+    /// but registry strategies may instantiate by *search* (the
+    /// BestPeriod twins); memoizing keeps that cost per-cell, not
+    /// per-block, and every block provably uses the same periods.
+    policy: Option<Policy>,
 }
 
 /// Is `cell` already satisfactorily computed in `store`?  True when a
@@ -161,6 +168,7 @@ pub fn run_cells(
                 slots: vec![None; blocks_per_cell],
                 remaining: blocks_per_cell,
                 done: None,
+                policy: None,
             })
         })
         .collect();
@@ -176,7 +184,20 @@ pub fn run_cells(
         let (ci, bi) = (u / blocks_per_cell, u % blocks_per_cell);
         let cell = &cells[pending[ci]];
         let sc = cell.scenario();
-        let pol = cell.strategy.policy(&sc);
+        let pol = {
+            let mut st = states[ci].lock().expect("cell state poisoned");
+            match st.policy {
+                Some(p) => p,
+                None => {
+                    // Instantiation may search (BestPeriod twins); sibling
+                    // blocks of this cell wait on the lock — they need the
+                    // policy anyway — while other cells' units proceed.
+                    let p = cell.strategy.policy(&sc);
+                    st.policy = Some(p);
+                    p
+                }
+            }
+        };
         let mut waste = Welford::new();
         let mut makespan = Welford::new();
         for i in (bi * block)..((bi + 1) * block).min(instances) {
@@ -248,14 +269,17 @@ pub fn evaluate_grid(g: &Grid, opt: &CampaignOptions) -> Vec<CellOutcome> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::strategy::Strategy;
+    use crate::strategy::registry;
 
     fn tiny_grid() -> Grid {
         let mut g = Grid::smoke();
         g.procs = vec![1 << 16];
         g.windows = vec![600.0];
         g.scale = 0.02;
-        g.strategies = vec![Strategy::Rfo, Strategy::NoCkptI];
+        g.strategies = vec![
+            registry::get("RFO").unwrap(),
+            registry::get("NoCkptI").unwrap(),
+        ];
         g
     }
 

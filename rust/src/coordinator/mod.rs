@@ -278,14 +278,41 @@ pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Re
                         } else {
                             continue 'outer;
                         }
-                        // In-window behaviour.
+                        // In-window behaviour.  The step-driven coordinator mirrors
+                        // the discrete-event engine's policy logics at
+                        // step granularity; randomized trust (QTrust) runs
+                        // its base NoCkpt behaviour with q treated as 1 —
+                        // the real system always acts on what it trusts.
                         match pol.kind {
-                            PolicyKind::Instant | PolicyKind::IgnorePredictions => {}
-                            PolicyKind::NoCkpt => {
+                            PolicyKind::Instant
+                            | PolicyKind::ExactPred
+                            | PolicyKind::IgnorePredictions => {}
+                            PolicyKind::NoCkpt | PolicyKind::QTrust { .. } => {
                                 while sim_t < p.window_end
                                     && validated + since < job_steps
                                 {
                                     if !do_step!() {
+                                        continue 'outer;
+                                    }
+                                }
+                            }
+                            PolicyKind::WindowEndCkpt => {
+                                while sim_t < p.window_end
+                                    && validated + since < job_steps
+                                {
+                                    if !do_step!() {
+                                        continue 'outer;
+                                    }
+                                }
+                                // Terminal proactive checkpoint at t0 + I —
+                                // pointless (and never taken by the
+                                // engine's logic) once the job finished
+                                // in-window.
+                                if validated + since < job_steps {
+                                    let ck_end = sim_t + sc.platform.cp;
+                                    if advance_no_work!(ck_end) {
+                                        commit_ckpt!(0.0, true);
+                                    } else {
                                         continue 'outer;
                                     }
                                 }
@@ -342,7 +369,11 @@ pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Re
     rep.sim_makespan = sim_t;
     let job_sim_seconds = job_steps as f64 * sps;
     rep.sim_waste = (sim_t - job_sim_seconds) / sim_t;
-    rep.predicted_waste = waste_clipped(sc, pol.kind.grid_strategy(), pol.tr);
+    rep.predicted_waste = pol
+        .kind
+        .grid_strategy()
+        .map(|gs| waste_clipped(sc, gs, pol.tr))
+        .unwrap_or(f64::NAN);
     rep.wall_seconds = wall_start.elapsed().as_secs_f64();
     Ok(rep)
 }

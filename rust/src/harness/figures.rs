@@ -14,7 +14,7 @@
 use crate::campaign::{self, CampaignOptions, CellOutcome, Grid, PredictorKind};
 use crate::config::{PredictorSpec, Scenario};
 use crate::sim::distribution::Law;
-use crate::strategy::Strategy;
+use crate::strategy::registry;
 
 use super::{
     best_period_results_seeded, write_csv, HeuristicResult, PAPER_PROCS,
@@ -98,13 +98,17 @@ fn push_rows(
 fn outcome_to_result(o: &CellOutcome) -> HeuristicResult {
     use crate::model::waste::waste_clipped;
     let sc = o.cell.scenario();
-    let gs = o.cell.strategy.kind().grid_strategy();
     HeuristicResult {
-        name: o.cell.strategy.name().to_string(),
+        name: o.cell.strategy.to_string(),
         waste: o.waste.mean(),
         waste_ci: o.waste.ci95(),
         makespan: o.makespan.mean(),
-        analytic_waste: waste_clipped(&sc, gs, o.tr),
+        analytic_waste: o
+            .cell
+            .strategy
+            .grid_strategy()
+            .map(|gs| waste_clipped(&sc, gs, o.tr))
+            .unwrap_or(f64::NAN),
         tr: o.tr,
     }
 }
@@ -174,7 +178,7 @@ pub fn run_waste_vs_n(
             PredictorKind::PaperB
         }],
         windows: PAPER_WINDOWS.to_vec(),
-        strategies: Strategy::paper_set().to_vec(),
+        strategies: registry::paper_set(),
         scale: 1.0,
     };
     let rows = waste_rows_via_campaign(spec.id, &grid, instances, best_period_seeds);
@@ -233,11 +237,10 @@ pub fn run_waste_vs_tr(
             ("NoCkptI", PolicyKind::NoCkpt),
             ("WithCkptI", PolicyKind::WithCkpt),
         ];
-        let tp = crate::model::optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+        let tp = registry::default_tp(&sc);
         for k in 0..grid_points {
             let tr = lo * ratio.powi(k as i32);
             for (name, kind) in heuristics {
-                let gs = kind.grid_strategy();
                 let pol = Policy { kind, tr, tp };
                 // Terrible periods in the sweep are capped (waste saturates
                 // near 1 anyway); see engine::simulate_from_capped.
@@ -254,19 +257,20 @@ pub fn run_waste_vs_tr(
                     spec.procs,
                     waste.mean(),
                     waste.ci95(),
-                    waste_clipped(&sc, gs, tr),
+                    kind.grid_strategy()
+                        .map(|gs| waste_clipped(&sc, gs, tr))
+                        .unwrap_or(f64::NAN),
                 ));
             }
         }
         // Reference: where the named strategies put their periods.
-        for strat in Strategy::paper_set() {
+        for strat in registry::paper_set() {
             let pol = strat.policy(&sc);
             rows.push(format!(
-                "{},{},{window},{},{}-period,{:.1},,,",
+                "{},{},{window},{},{strat}-period,{:.1},,,",
                 spec.id,
                 law.label(),
                 spec.procs,
-                strat.name(),
                 pol.tr,
             ));
         }
@@ -312,7 +316,7 @@ pub fn run_waste_vs_i(
             PredictorKind::PaperB
         }],
         windows: I_SWEEP.to_vec(),
-        strategies: Strategy::paper_set().to_vec(),
+        strategies: registry::paper_set(),
         scale: 1.0,
     };
     let rows = waste_rows_via_campaign(spec.id, &grid, instances, best_period_seeds);

@@ -24,7 +24,7 @@ use crate::config::Scenario;
 use crate::sim::engine::simulate;
 use crate::sim::engine::SimOutcome;
 use crate::stats::Summary;
-use crate::strategy::{best_period, Policy, PolicyKind, Strategy};
+use crate::strategy::{best_period, registry, Policy, PolicyKind};
 
 /// Paper platform sizes: N = 2^16 … 2^19.
 pub const PAPER_PROCS: [u64; 4] = [1 << 16, 1 << 17, 1 << 18, 1 << 19];
@@ -116,16 +116,19 @@ pub fn evaluate_heuristics(
 ) -> Vec<HeuristicResult> {
     use crate::model::waste::waste_clipped;
     let mut out = Vec::new();
-    for strat in Strategy::paper_set() {
+    for strat in registry::paper_set() {
         let pol = strat.policy(sc);
         let (waste, makespan) = run_instances(sc, &pol, n);
-        let gs = pol.kind.grid_strategy();
         out.push(HeuristicResult {
-            name: strat.name().to_string(),
+            name: strat.to_string(),
             waste: waste.mean(),
             waste_ci: waste.ci95(),
             makespan,
-            analytic_waste: waste_clipped(sc, gs, pol.tr),
+            analytic_waste: pol
+                .kind
+                .grid_strategy()
+                .map(|gs| waste_clipped(sc, gs, pol.tr))
+                .unwrap_or(f64::NAN),
             tr: pol.tr,
         });
     }
@@ -169,7 +172,7 @@ pub fn best_period_results_seeded(
         ("BestPeriod-NoCkptI", PolicyKind::NoCkpt),
         ("BestPeriod-WithCkptI", PolicyKind::WithCkpt),
     ];
-    let tp = crate::model::optimal::tp_extr(sc).max(sc.platform.cp * 1.1);
+    let tp = registry::default_tp(sc);
 
     // One trace memo per search seed, shared by all four variant searches:
     // every candidate of every twin replays the same traces (and pays
@@ -255,7 +258,7 @@ mod tests {
     #[test]
     fn parallel_matches_serial() {
         let sc = small_scenario();
-        let pol = Strategy::Rfo.policy(&sc);
+        let pol = registry::get("RFO").unwrap().policy(&sc);
         let seeds: Vec<u64> = (0..16).collect();
         let par = run_seeds(&sc, &pol, &seeds);
         let ser: Vec<_> =

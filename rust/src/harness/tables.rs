@@ -8,7 +8,7 @@
 
 use crate::campaign::{self, CampaignOptions, Cell, PredictorKind};
 use crate::sim::distribution::Law;
-use crate::strategy::Strategy;
+use crate::strategy::{registry, StrategyId};
 use crate::util::SECONDS_PER_DAY;
 
 use super::write_csv;
@@ -38,14 +38,15 @@ pub const TABLE_WINDOWS: [f64; 3] = [300.0, 1200.0, 3000.0];
 pub const TABLE_PROCS: [u64; 2] = [1 << 16, 1 << 19];
 
 /// Rows of the table: (label, strategy, predictor; None = no predictor).
-fn table_rows() -> Vec<(String, Strategy, Option<bool>)> {
+fn table_rows() -> Vec<(String, StrategyId, Option<bool>)> {
+    let strat = |n: &str| registry::get(n).expect("registered");
     let mut rows = vec![
-        ("Daly".to_string(), Strategy::Daly, None),
-        ("RFO".to_string(), Strategy::Rfo, None),
+        ("Daly".to_string(), strat("Daly"), None),
+        ("RFO".to_string(), strat("RFO"), None),
     ];
     for (tag, is_a) in [("p=0.82,r=0.85", true), ("p=0.4,r=0.7", false)] {
-        for strat in [Strategy::NoCkptI, Strategy::WithCkptI, Strategy::Instant] {
-            rows.push((format!("{} [{tag}]", strat.name()), strat, Some(is_a)));
+        for name in ["NoCkptI", "WithCkptI", "Instant"] {
+            rows.push((format!("{name} [{tag}]"), strat(name), Some(is_a)));
         }
     }
     rows
@@ -83,7 +84,7 @@ pub fn run_table(id: u8, shape: f64, instances: usize) -> std::io::Result<Table>
                     law,
                     law,
                     kind.spec(window),
-                    *strat,
+                    strat.clone(),
                     1.0,
                 ));
             }

@@ -38,4 +38,4 @@ pub mod util;
 
 pub use config::{Platform, PredictorSpec, Scenario};
 pub use sim::engine::{simulate, SimOutcome};
-pub use strategy::{Policy, PolicyKind};
+pub use strategy::{Policy, PolicyKind, StrategyId};

@@ -19,6 +19,10 @@
 //!                   scenario hashes; `campaign resume` recomputes only the
 //!                   cells missing from an interrupted store; `campaign
 //!                   report` pretty-prints a store.
+//! * `strategies`  — list the strategy registry (names, aliases,
+//!                   parameters); any registered name — including the
+//!                   parameterized `qtrust(q=…)` and the BestPeriod
+//!                   twins — is valid wherever a strategy is named
 //!
 //! Run `ckptwin help` for per-command options.
 
@@ -63,9 +67,11 @@ COMMANDS
                [--procs 65536,131072,...] [--cp-ratios 1.0,0.1]
                [--laws exponential,weibull0.7,lognormal1.2]
                [--predictors a,b] [--windows 300,600,...]
-               [--strategies daly,young,rfo,instant,nockpt,withckpt]
+               [--strategies daly,rfo,nockpt,exactpred,qtrust(q=0.5),...]
                run executes the grid and streams per-cell JSONL results;
                resume skips cells already in the store; report prints it
+  strategies   list the strategy registry: names, aliases, parameters
+               (any registered name is valid wherever a strategy is named)
   help         this text
 ";
 
@@ -242,7 +248,7 @@ fn cmd_best_period(args: &Args) -> Result<()> {
         optimal::tr_extr_window(&sc));
 
     // Brute force over simulations.
-    let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+    let tp = ckptwin::strategy::registry::default_tp(&sc);
     for (name, kind) in [
         ("NoPred", PolicyKind::IgnorePredictions),
         ("Instant", PolicyKind::Instant),
@@ -291,12 +297,13 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     );
     let steps: u64 = args.get_or("steps", 400);
     let mtbf: f64 = args.get_or("mtbf", 4000.0);
-    let kind = match args.get_str("strategy").unwrap_or("withckpt") {
-        "rfo" => PolicyKind::IgnorePredictions,
-        "instant" => PolicyKind::Instant,
-        "nockpt" => PolicyKind::NoCkpt,
-        _ => PolicyKind::WithCkpt,
-    };
+    // Any registered strategy name maps to its engine mode ("rfo" and
+    // friends run as their execution mode with the e2e platform's periods).
+    let kind = ckptwin::strategy::StrategyId::parse(
+        args.get_str("strategy").unwrap_or("withckpt"),
+    )
+    .map_err(|e| anyhow!(e))?
+    .kind();
     let scenario = Scenario {
         platform: Platform { mu: mtbf, c: 120.0, cp: 60.0, d: 30.0, r: 60.0 },
         predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 240.0 },
@@ -307,10 +314,12 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     };
     let tr = match kind {
         PolicyKind::IgnorePredictions => optimal::rfo_period(&scenario.platform),
-        PolicyKind::Instant => optimal::tr_extr_instant(&scenario),
+        PolicyKind::Instant | PolicyKind::ExactPred => {
+            optimal::tr_extr_instant(&scenario)
+        }
         _ => optimal::tr_extr_window(&scenario),
     };
-    let tp = optimal::tp_extr(&scenario).max(scenario.platform.cp * 1.1);
+    let tp = ckptwin::strategy::registry::default_tp(&scenario);
     let cfg = CoordinatorConfig {
         scenario,
         policy: Policy { kind, tr, tp },
@@ -377,7 +386,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_ablation(args: &Args) -> Result<()> {
     use ckptwin::sim::engine::simulate_q;
-    use ckptwin::strategy::{Policy, PolicyKind, Strategy};
+    use ckptwin::strategy::{registry, Policy, PolicyKind, StrategyId};
     let procs: u64 = args.get_or("procs", 1 << 18);
     let n: usize = args.get_or("instances", 20);
     let window: f64 = args.get_or("window", 600.0);
@@ -396,16 +405,16 @@ fn cmd_ablation(args: &Args) -> Result<()> {
             procs, 1.0, PredictorSpec::paper_a(window), law, law,
         );
         sc.fault_model = model;
-        let w = |strat: Strategy| {
+        let w = |strat: StrategyId| {
             let pol = strat.policy(&sc);
             harness::run_instances(&sc, &pol, n).0.mean()
         };
         println!(
             "{:<28} {:>10.4} {:>10.4} {:>10.4}",
             name,
-            w(Strategy::Daly),
-            w(Strategy::Rfo),
-            w(Strategy::NoCkptI)
+            w(registry::get("Daly").unwrap()),
+            w(registry::get("RFO").unwrap()),
+            w(registry::get("NoCkptI").unwrap())
         );
     }
 
@@ -415,7 +424,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         procs, 1.0, PredictorSpec::paper_a(window), law, law,
     );
     let tr = optimal::tr_extr_window(&sc);
-    let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+    let tp = registry::default_tp(&sc);
     let pol = Policy { kind: PolicyKind::NoCkpt, tr, tp };
     print!("{:>8}", "q");
     for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
@@ -438,8 +447,10 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         let sc = Scenario::paper(
             procs, ratio, PredictorSpec::paper_a(3000.0), law, law,
         );
-        let wn = harness::run_instances(&sc, &Strategy::NoCkptI.policy(&sc), n).0.mean();
-        let ww = harness::run_instances(&sc, &Strategy::WithCkptI.policy(&sc), n).0.mean();
+        let nockpt = registry::get("NoCkptI").unwrap().policy(&sc);
+        let withckpt = registry::get("WithCkptI").unwrap().policy(&sc);
+        let wn = harness::run_instances(&sc, &nockpt, n).0.mean();
+        let ww = harness::run_instances(&sc, &withckpt, n).0.mean();
         println!("{ratio:<10} {wn:>12.4} {ww:>12.4}");
     }
     Ok(())
@@ -447,16 +458,11 @@ fn cmd_ablation(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     use ckptwin::sim::engine::simulate_traced;
-    use ckptwin::strategy::Strategy;
+    use ckptwin::strategy::StrategyId;
     let sc = scenario_from_args(args);
-    let strat = match args.get_str("strategy").unwrap_or("withckpt") {
-        "daly" => Strategy::Daly,
-        "young" => Strategy::Young,
-        "rfo" => Strategy::Rfo,
-        "instant" => Strategy::Instant,
-        "nockpt" => Strategy::NoCkptI,
-        _ => Strategy::WithCkptI,
-    };
+    let strat =
+        StrategyId::parse(args.get_str("strategy").unwrap_or("withckpt"))
+            .map_err(|e| anyhow!(e))?;
     let pol = strat.policy(&sc);
     let seed = args.get_or("seed", 0u64);
     let width = args.get_or("width", 100usize);
@@ -464,7 +470,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     tl.validate(out.makespan).map_err(|e| anyhow!("timeline: {e}"))?;
     println!(
         "{} @ T_R={:.0} T_P={:.0}, seed {seed}: makespan {:.0}s, waste {:.4}",
-        strat.name(), pol.tr, pol.tp, out.makespan, out.waste()
+        strat, pol.tr, pol.tp, out.makespan, out.waste()
     );
     println!(
         "faults {} ({} predicted) | reg ckpts {} | pro ckpts {} | preds seen {} trusted {}",
@@ -477,7 +483,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 fn cmd_replay(args: &Args) -> Result<()> {
     use ckptwin::sim::tracefile;
-    use ckptwin::strategy::Strategy;
+    use ckptwin::strategy::registry;
     let sc = scenario_from_args(args);
     if let Some(n) = args.get::<usize>("export") {
         // Generate a synthetic failure log from the scenario's fault law.
@@ -507,12 +513,12 @@ fn cmd_replay(args: &Args) -> Result<()> {
         faults.len()
     );
     println!("{:<12} {:>10} {:>12} {:>8}", "heuristic", "waste", "makespan(d)", "faults");
-    for strat in Strategy::paper_set() {
+    for strat in registry::paper_set() {
         let pol = strat.policy(&sc);
         let out = tracefile::replay(&sc, &pol, &faults, args.get_or("seed", 0));
+        let name = strat.to_string();
         println!(
-            "{:<12} {:>10.4} {:>12.2} {:>8}",
-            strat.name(),
+            "{name:<12} {:>10.4} {:>12.2} {:>8}",
             out.waste(),
             out.makespan / SECONDS_PER_DAY,
             out.n_faults
@@ -547,7 +553,8 @@ fn cmd_config(args: &Args) -> Result<()> {
 
 /// Build the campaign grid from CLI axis overrides on top of a preset.
 fn grid_from_args(args: &Args) -> Result<ckptwin::campaign::Grid> {
-    use ckptwin::campaign::{grid::parse_strategy, Grid, PredictorKind};
+    use ckptwin::campaign::{Grid, PredictorKind};
+    use ckptwin::strategy::registry;
     let mut grid = match args.get_str("grid").unwrap_or("paper") {
         "paper" => Grid::paper(),
         "smoke" => Grid::smoke(),
@@ -583,9 +590,9 @@ fn grid_from_args(args: &Args) -> Result<ckptwin::campaign::Grid> {
         grid.windows = parse_list(raw, "window", str::parse::<f64>)?;
     }
     if let Some(raw) = args.get_str("strategies") {
-        grid.strategies = parse_list(raw, "strategy", |t| {
-            parse_strategy(t).ok_or("expected daly|young|rfo|instant|nockpt|withckpt")
-        })?;
+        // Paren-aware: commas inside `qtrust(q=0.25,...)` do not split.
+        grid.strategies =
+            registry::parse_strategy_list(raw).map_err(|e| anyhow!(e))?;
     }
     if let Some(raw) = args.get_str("scale") {
         grid.scale = raw
@@ -694,6 +701,36 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// List the strategy registry: every name the campaign grids, harness and
+/// this CLI accept, with aliases, parameters and a one-line description.
+fn cmd_strategies(_args: &Args) -> Result<()> {
+    use ckptwin::strategy::registry;
+    println!(
+        "{:<24} {:<18} {:<28} {}",
+        "name", "parameters", "aliases", "description"
+    );
+    for def in registry::catalog() {
+        let params: String = def
+            .params
+            .iter()
+            .map(|p| format!("{}={} [{},{}]", p.key, p.default, p.min, p.max))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "{:<24} {:<18} {:<28} {}",
+            def.name,
+            if params.is_empty() { "-".to_string() } else { params },
+            def.aliases.join(","),
+            def.summary
+        );
+    }
+    println!(
+        "\nuse anywhere a strategy is named, e.g. \
+         `campaign run --strategies instant,exactpred,qtrust(q=0.25)`"
+    );
+    Ok(())
+}
+
 fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
@@ -709,6 +746,7 @@ fn main() {
         Some("replay") => cmd_replay(&args),
         Some("config") => cmd_config(&args),
         Some("campaign") => cmd_campaign(&args),
+        Some("strategies") => cmd_strategies(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())

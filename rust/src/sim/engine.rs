@@ -8,12 +8,9 @@
 //!   `T_R - C`, checkpoint `C`, repeat.
 //! * On a trusted prediction with window `[t0, t0+I]` (announced at
 //!   `t0 - C_p`): interrupt the period, take a proactive checkpoint during
-//!   `[t0 - C_p, t0]`, then
-//!   * **Instant** — return to regular mode at `t0`;
-//!   * **NoCkptI** — work without checkpointing until `t0 + I`;
-//!   * **WithCkptI** — loop "work `T_P - C_p`, checkpoint `C_p`" while in
-//!     proactive mode for less than `I` (Algorithm 1 lines 16–17);
-//!   and then resume the interrupted period.
+//!   `[t0 - C_p, t0]`, then hand control to the policy's in-window
+//!   behaviour, and finally resume the regular period as the policy
+//!   decides.
 //! * A fault loses all work since the last *completed* checkpoint, costs
 //!   downtime `D` + recovery `R` (faults during D+R restart it), and drops
 //!   the engine back into regular mode with a fresh period.
@@ -29,8 +26,20 @@
 //!
 //! The job completes the instant the cumulative useful work reaches
 //! `Time_base` (`job_size`); no terminal checkpoint is required.
+//!
+//! **Policies are behaviour, not enum tags**: the per-strategy decisions
+//! live behind the [`PolicyLogic`] trait (see [`crate::sim::policy`]), the
+//! main loop is generic over it, and each [`PolicyKind`] dispatches once —
+//! at entry — to a fully monomorphized loop, so the per-event hot path is
+//! as fast as the pre-trait hand-matched engine (`tests/fast_path.rs`
+//! pins the four original modes bit-identical).
 
 use crate::config::Scenario;
+use crate::sim::policy::{
+    ExactPredLogic, IgnoreLogic, InstantLogic, NoCkptLogic, PolicyLogic, QTrustLogic,
+    WindowEndCkptLogic, WithCkptLogic,
+};
+use crate::sim::rng::Rng;
 use crate::sim::timeline::{Span, Timeline};
 use crate::sim::trace::{Event, EventSource, FlatTrace, Prediction};
 use crate::strategy::{Policy, PolicyKind};
@@ -85,7 +94,7 @@ impl SimOutcome {
 }
 
 /// Outcome of advancing through one activity segment.
-enum Seg {
+pub enum Seg {
     /// Reached the segment end.
     Completed,
     /// The job's last unit of work completed (work segments only).
@@ -96,13 +105,18 @@ enum Seg {
     Notify(Prediction),
 }
 
-struct Engine<'a, S: EventSource> {
+/// The engine state a [`PolicyLogic`] implementation drives through the
+/// public methods ([`Engine::advance`], [`Engine::handle_fault`],
+/// [`Engine::commit_checkpoint`], [`Engine::abort_checkpoint`]).
+pub struct Engine<'a, S: EventSource, L: PolicyLogic> {
     sc: &'a Scenario,
     pol: &'a Policy,
-    /// Probability of trusting each prediction (the paper's q, §3.1).
+    logic: L,
+    /// Effective probability of trusting each prediction: the caller's q
+    /// (the paper's §3.1 knob) times the policy's own trust probability.
     trust_prob: f64,
     /// Dedicated stream for the q coin-flips (keeps traces unchanged).
-    rng_q: crate::sim::rng::Rng,
+    rng_q: Rng,
     /// Abandon the run once simulated time exceeds this (waste ≈ 1 regime;
     /// used by the BestPeriod search to skip hopeless candidates cheaply).
     t_cap: f64,
@@ -121,6 +135,94 @@ struct Engine<'a, S: EventSource> {
     out: SimOutcome,
 }
 
+/// The single construction path shared by every `simulate*` entry point:
+/// scenario + policy, with trust probability, seed, makespan cap and
+/// timeline recording as opt-in knobs.  (Historically each entry point
+/// hand-rolled its own engine — `simulate_traced` could take neither a q
+/// nor a cap; now every knob composes with every other.)
+struct EngineBuilder<'a> {
+    sc: &'a Scenario,
+    pol: &'a Policy,
+    q: f64,
+    seed: u64,
+    cap: f64,
+    record_timeline: bool,
+}
+
+impl<'a> EngineBuilder<'a> {
+    fn new(sc: &'a Scenario, pol: &'a Policy) -> Self {
+        EngineBuilder { sc, pol, q: 1.0, seed: 0, cap: f64::INFINITY, record_timeline: false }
+    }
+
+    fn trust(mut self, q: f64) -> Self {
+        assert!((0.0..=1.0).contains(&q), "trust probability q = {q}");
+        self.q = q;
+        self
+    }
+
+    fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    fn cap(mut self, cap: f64) -> Self {
+        self.cap = cap;
+        self
+    }
+
+    fn timeline(mut self, record: bool) -> Self {
+        self.record_timeline = record;
+        self
+    }
+
+    /// Dispatch on the policy kind once, then run the fully monomorphized
+    /// engine loop for that behaviour.
+    fn run<S: EventSource>(self, stream: S) -> (SimOutcome, Option<Timeline>) {
+        match self.pol.kind {
+            PolicyKind::IgnorePredictions => self.run_with(IgnoreLogic, stream),
+            PolicyKind::Instant => self.run_with(InstantLogic, stream),
+            PolicyKind::NoCkpt => self.run_with(NoCkptLogic, stream),
+            PolicyKind::WithCkpt => self.run_with(WithCkptLogic, stream),
+            PolicyKind::ExactPred => self.run_with(ExactPredLogic, stream),
+            PolicyKind::WindowEndCkpt => self.run_with(WindowEndCkptLogic, stream),
+            PolicyKind::QTrust { q } => self.run_with(QTrustLogic { q }, stream),
+        }
+    }
+
+    fn run_with<S: EventSource, L: PolicyLogic>(
+        self,
+        logic: L,
+        mut stream: S,
+    ) -> (SimOutcome, Option<Timeline>) {
+        self.pol.validate(self.sc);
+        let next_ev = stream.next_event();
+        let mut eng = Engine {
+            sc: self.sc,
+            pol: self.pol,
+            trust_prob: self.q * logic.trust(),
+            logic,
+            rng_q: Rng::stream(self.seed, 0x7125_7),
+            t_cap: self.cap,
+            timeline: self.record_timeline.then(Timeline::default),
+            stream,
+            next_ev,
+            t: 0.0,
+            saved: 0.0,
+            unsaved: 0.0,
+            period_rem: self.pol.tr - self.sc.platform.c,
+            done: false,
+            out: SimOutcome::default(),
+        };
+        eng.run();
+        eng.out.makespan = eng.t;
+        // Capped runs report the work actually completed so waste() is
+        // honest.
+        eng.out.job_size =
+            if eng.done { self.sc.job_size } else { eng.saved + eng.unsaved };
+        (eng.out, eng.timeline)
+    }
+}
+
 /// Simulate one execution of `policy` under `scenario` with the fault and
 /// prediction trace fixed by `seed`.  The same (scenario, seed) pair yields
 /// the same trace for every policy, enabling paired comparisons.
@@ -135,44 +237,38 @@ pub fn simulate_traced(
     policy: &Policy,
     seed: u64,
 ) -> (SimOutcome, Timeline) {
-    policy.validate(scenario);
-    let mut stream = FlatTrace::new(scenario, seed);
-    let next_ev = stream.next_event();
-    let work_quantum = policy.tr - scenario.platform.c;
-    let mut eng = Engine {
-        sc: scenario,
-        pol: policy,
-        trust_prob: 1.0,
-        rng_q: crate::sim::rng::Rng::stream(seed, 0x7125_7),
-        t_cap: f64::INFINITY,
-        timeline: Some(Timeline::default()),
-        stream,
-        next_ev,
-        t: 0.0,
-        saved: 0.0,
-        unsaved: 0.0,
-        period_rem: work_quantum,
-        done: false,
-        out: SimOutcome::default(),
-    };
-    eng.run();
-    eng.out.makespan = eng.t;
-    eng.out.job_size = scenario.job_size;
-    (eng.out, eng.timeline.unwrap())
+    simulate_traced_q(scenario, policy, 1.0, seed)
+}
+
+/// [`simulate_traced`] with the §3.1 trust probability `q` — the shared
+/// engine builder gives the traced path every knob of the untraced one.
+pub fn simulate_traced_q(
+    scenario: &Scenario,
+    policy: &Policy,
+    q: f64,
+    seed: u64,
+) -> (SimOutcome, Timeline) {
+    let (out, tl) = EngineBuilder::new(scenario, policy)
+        .trust(q)
+        .seed(seed)
+        .timeline(true)
+        .run(FlatTrace::new(scenario, seed));
+    (out, tl.expect("timeline recording requested"))
 }
 
 /// Like [`simulate`], but each prediction is trusted only with probability
 /// `q` (§3.1's randomized-trust scheme).  `q = 1` is the paper's q=1
 /// strategies; `q = 0` behaves like `PolicyKind::IgnorePredictions`.  The
 /// paper proves analytically that the optimum is always at q ∈ {0, 1};
-/// `tests/prop.rs` verifies this by simulation.
+/// `tests/prop.rs` verifies this by simulation.  (Randomized trust is also
+/// available as the first-class `QTrust` strategy — see
+/// [`crate::strategy::registry`].)
 pub fn simulate_q(
     scenario: &Scenario,
     policy: &Policy,
     q: f64,
     seed: u64,
 ) -> SimOutcome {
-    assert!((0.0..=1.0).contains(&q));
     let stream = FlatTrace::new(scenario, seed);
     simulate_from(scenario, policy, q, seed, stream)
 }
@@ -201,42 +297,36 @@ pub fn simulate_from_capped<S: EventSource>(
     policy: &Policy,
     q: f64,
     seed: u64,
-    mut stream: S,
+    stream: S,
     cap: f64,
 ) -> SimOutcome {
-    policy.validate(scenario);
-    let next_ev = stream.next_event();
-    let work_quantum = policy.tr - scenario.platform.c;
-    let mut eng = Engine {
-        sc: scenario,
-        pol: policy,
-        trust_prob: q,
-        rng_q: crate::sim::rng::Rng::stream(seed, 0x7125_7),
-        t_cap: cap,
-        timeline: None,
-        stream,
-        next_ev,
-        t: 0.0,
-        saved: 0.0,
-        unsaved: 0.0,
-        period_rem: work_quantum,
-        done: false,
-        out: SimOutcome::default(),
-    };
-    eng.run();
-    eng.out.makespan = eng.t;
-    // Capped runs report the work actually completed so waste() is honest.
-    eng.out.job_size = if eng.done {
-        scenario.job_size
-    } else {
-        eng.saved + eng.unsaved
-    };
-    eng.out
+    EngineBuilder::new(scenario, policy)
+        .trust(q)
+        .seed(seed)
+        .cap(cap)
+        .run(stream)
+        .0
 }
 
-impl<'a, S: EventSource> Engine<'a, S> {
-    fn listen(&self) -> bool {
-        !matches!(self.pol.kind, PolicyKind::IgnorePredictions)
+impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
+    /// Current simulated time.
+    pub fn now(&self) -> f64 {
+        self.t
+    }
+
+    /// Has the job's last unit of work completed?
+    pub fn job_done(&self) -> bool {
+        self.done
+    }
+
+    /// The scenario being simulated.
+    pub fn scenario(&self) -> &Scenario {
+        self.sc
+    }
+
+    /// The instantiated policy (periods `tr` / `tp`).
+    pub fn policy(&self) -> &Policy {
+        self.pol
     }
 
     /// Pop the next trace event.
@@ -245,12 +335,13 @@ impl<'a, S: EventSource> Engine<'a, S> {
         self.next_ev = self.stream.next_event();
     }
 
-    /// Advance from `self.t` to `end`, doing useful work iff `work`.
+    /// Advance from the current time to `end`, doing useful work iff
+    /// `work`.
     ///
     /// Consumes every trace event with visible time < the stopping point:
     /// faults always interrupt; predictions interrupt iff `listen`
     /// (otherwise they are counted and dropped).
-    fn advance(&mut self, end: f64, work: bool, listen: bool) -> Seg {
+    pub fn advance(&mut self, end: f64, work: bool, listen: bool) -> Seg {
         loop {
             // Time at which the job would complete within this segment.
             let t_complete = if work {
@@ -293,7 +384,7 @@ impl<'a, S: EventSource> Engine<'a, S> {
                             }
                             continue; // coin said ignore this one
                         }
-                        if self.listen() {
+                        if self.logic.listens() {
                             self.out.n_preds_overlapped += 1;
                         }
                         continue; // ignored; keep advancing
@@ -307,7 +398,7 @@ impl<'a, S: EventSource> Engine<'a, S> {
     /// Lose unsaved work, then serve downtime + recovery (restarted by any
     /// fault that strikes during them).  Ends in regular mode with a fresh
     /// period.
-    fn handle_fault(&mut self) {
+    pub fn handle_fault(&mut self) {
         if let Some(tl) = self.timeline.as_mut() {
             tl.record_fault(self.t);
         }
@@ -339,7 +430,7 @@ impl<'a, S: EventSource> Engine<'a, S> {
     }
 
     /// A completed checkpoint secures all work done so far.
-    fn commit_checkpoint(&mut self, duration: f64, proactive: bool) {
+    pub fn commit_checkpoint(&mut self, duration: f64, proactive: bool) {
         if let Some(tl) = self.timeline.as_mut() {
             tl.push(Span::Ckpt {
                 start: self.t - duration,
@@ -357,9 +448,19 @@ impl<'a, S: EventSource> Engine<'a, S> {
         }
     }
 
-    /// Serve a trusted prediction: proactive checkpoint before the window,
-    /// then the in-window behaviour of the policy.  Returns with the engine
-    /// back in regular mode (or `done`).
+    /// Account a checkpoint destroyed or abandoned mid-write: its elapsed
+    /// time since `start` becomes idle time (the paper's §3.1 accounting).
+    pub fn abort_checkpoint(&mut self, start: f64) {
+        self.out.time_idle += self.t - start;
+        if let Some(tl) = self.timeline.as_mut() {
+            tl.push(Span::Idle { start, end: self.t });
+        }
+    }
+
+    /// Serve a trusted prediction: proactive checkpoint before the window
+    /// (common to every policy), then the policy's in-window behaviour,
+    /// then the policy's period-resumption decision.  Returns with the
+    /// engine back in regular mode (or `done`).
     fn handle_prediction(&mut self, p: Prediction) {
         self.out.n_preds_trusted += 1;
         let cp = self.sc.platform.cp;
@@ -372,10 +473,7 @@ impl<'a, S: EventSource> Engine<'a, S> {
             Seg::Fault => {
                 // The checkpoint is destroyed; its partial time is idle and
                 // the prediction is stale.
-                self.out.time_idle += self.t - ck_start;
-                if let Some(tl) = self.timeline.as_mut() {
-                    tl.push(Span::Idle { start: ck_start, end: self.t });
-                }
+                self.abort_checkpoint(ck_start);
                 self.handle_fault();
                 return;
             }
@@ -383,59 +481,20 @@ impl<'a, S: EventSource> Engine<'a, S> {
         }
 
         // 2. In-window behaviour.
-        match self.pol.kind {
-            PolicyKind::IgnorePredictions => unreachable!(),
-            PolicyKind::Instant => (), // straight back to regular mode
-            PolicyKind::NoCkpt => {
-                // Work without checkpointing until the window closes.
-                match self.advance(p.window_end, true, false) {
-                    Seg::Completed | Seg::JobDone => (),
-                    Seg::Fault => self.handle_fault(),
-                    Seg::Notify(_) => unreachable!(),
-                }
-            }
-            PolicyKind::WithCkpt => {
-                // Algorithm 1 lines 16–17: while in proactive mode (elapsed
-                // < I), work T_P - C_p then checkpoint C_p.  A started
-                // proactive period runs to completion even if it crosses
-                // t0 + I (the mode check happens at iteration boundaries).
-                while !self.done && self.t < p.window_end {
-                    let wend = self.t + (self.pol.tp - cp);
-                    match self.advance(wend, true, false) {
-                        Seg::Completed => (),
-                        Seg::JobDone => return,
-                        Seg::Fault => {
-                            self.handle_fault();
-                            return;
-                        }
-                        Seg::Notify(_) => unreachable!(),
-                    }
-                    let ck_start = self.t;
-                    let cend = self.t + cp;
-                    match self.advance(cend, false, false) {
-                        Seg::Completed => self.commit_checkpoint(cp, true),
-                        Seg::Fault => {
-                            self.out.time_idle += self.t - ck_start;
-                            if let Some(tl) = self.timeline.as_mut() {
-                                tl.push(Span::Idle {
-                                    start: ck_start,
-                                    end: self.t,
-                                });
-                            }
-                            self.handle_fault();
-                            return;
-                        }
-                        _ => unreachable!(),
-                    }
-                }
-            }
-        }
+        let logic = self.logic;
+        logic.in_window(self, p);
+
+        // 3. Period resumption (default: resume the interrupted period).
+        let fresh = self.pol.tr - self.sc.platform.c;
+        let mut rem = self.period_rem;
+        logic.resume_period(&mut rem, fresh);
+        self.period_rem = rem;
     }
 
     /// Main loop: regular mode until the job completes.
     fn run(&mut self) {
         let c = self.sc.platform.c;
-        let listen = self.listen();
+        let listen = self.logic.listens();
         while !self.done {
             if self.t >= self.t_cap {
                 return; // abandoned: hopeless-candidate cutoff
@@ -463,22 +522,18 @@ impl<'a, S: EventSource> Engine<'a, S> {
                     }
                     Seg::Fault => {
                         // Partial (destroyed) checkpoint time is idle.
-                        self.out.time_idle += self.t - start;
-                        if let Some(tl) = self.timeline.as_mut() {
-                            tl.push(Span::Idle { start, end: self.t });
-                        }
+                        self.abort_checkpoint(start);
                         self.handle_fault();
                     }
                     Seg::Notify(p) => {
                         // No time to finish the regular checkpoint before
                         // the proactive action: abort it (idle time).
                         self.out.n_ckpts_aborted += 1;
-                        self.out.time_idle += self.t - start;
-                        if let Some(tl) = self.timeline.as_mut() {
-                            tl.push(Span::Idle { start, end: self.t });
-                        }
+                        self.abort_checkpoint(start);
                         self.handle_prediction(p);
-                        // period_rem stays 0: retake the checkpoint after.
+                        // period_rem stays 0 unless the policy's
+                        // resumption decision says otherwise: by default
+                        // the checkpoint is retaken after the window.
                     }
                     Seg::JobDone => unreachable!("checkpoint does no work"),
                 }
@@ -727,5 +782,19 @@ mod tests {
         assert_eq!(out.makespan, 100.0);
         assert_eq!(out.n_reg_ckpts, 0);
         assert_eq!(out.waste(), 0.0);
+    }
+
+    #[test]
+    fn traced_q_matches_untraced_q() {
+        // The builder dedup: the traced path takes the same q (and cap)
+        // knobs as the untraced one and produces the same outcome.
+        let sc = base_scenario();
+        let pol = policy(PolicyKind::NoCkpt, 6000.0, 700.0);
+        for q in [0.0, 0.4, 1.0] {
+            let plain = simulate_q(&sc, &pol, q, 21);
+            let (traced, tl) = simulate_traced_q(&sc, &pol, q, 21);
+            assert_eq!(plain, traced, "q = {q}");
+            tl.validate(traced.makespan).expect("tiling");
+        }
     }
 }

@@ -12,10 +12,14 @@
 //!   with their windows, false predictions);
 //! * [`engine`] — the two-mode scheduling simulator (Algorithm 1 and the
 //!   simpler variants), which executes a policy against a trace and
-//!   produces a [`engine::SimOutcome`].
+//!   produces a [`engine::SimOutcome`];
+//! * [`policy`] — the [`policy::PolicyLogic`] trait: the per-strategy
+//!   decisions (announcement trust, in-window behaviour, period
+//!   resumption) the engine's monomorphized main loop is generic over.
 
 pub mod distribution;
 pub mod engine;
+pub mod policy;
 pub mod rng;
 pub mod timeline;
 pub mod tracefile;

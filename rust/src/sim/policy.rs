@@ -1,0 +1,237 @@
+//! Scheduling policies as behaviour: the [`PolicyLogic`] trait and its
+//! implementations.
+//!
+//! The engine's main loop ([`crate::sim::engine`]) is identical for every
+//! strategy the paper studies — regular periods, fault handling, the
+//! pre-window proactive checkpoint.  What differs between strategies is a
+//! small set of *decisions*:
+//!
+//! 1. **announcement** — is the engine listening for predictions at all
+//!    ([`PolicyLogic::listens`]), and with what probability is an
+//!    announcement trusted ([`PolicyLogic::trust`], the paper's q, §3.1)?
+//! 2. **in-window behaviour** — what happens between the pre-window
+//!    checkpoint at `t0` and the window close at `t0 + I`
+//!    ([`PolicyLogic::in_window`])?
+//! 3. **period resumption** — once the window is over, does the
+//!    interrupted regular period resume, or does a fresh one start
+//!    ([`PolicyLogic::resume_period`])?
+//!
+//! Each decision set is a zero-sized (or tiny `Copy`) type implementing
+//! [`PolicyLogic`]; the engine is generic over it and monomorphized, so the
+//! per-event hot path pays no dynamic dispatch — `tests/fast_path.rs`
+//! pins the four original modes bit-identical to the pre-trait engine.
+//!
+//! Implementations:
+//!
+//! | logic                 | `PolicyKind`          | behaviour |
+//! |-----------------------|-----------------------|-----------|
+//! | [`IgnoreLogic`]       | `IgnorePredictions`   | q = 0: never listens |
+//! | [`InstantLogic`]      | `Instant`             | §3.4: straight back to regular mode |
+//! | [`NoCkptLogic`]       | `NoCkpt`              | §3.3: work unprotected until `t0 + I` |
+//! | [`WithCkptLogic`]     | `WithCkpt`            | §3.2 / Algorithm 1: proactive periods in-window |
+//! | [`ExactPredLogic`]    | `ExactPred`           | I → 0 exact-prediction limit: like Instant, but the proactive checkpoint starts a *fresh* period |
+//! | [`WindowEndCkptLogic`]| `WindowEndCkpt`       | NoCkptI plus a terminal proactive checkpoint at `t0 + I` |
+//! | [`QTrustLogic`]       | `QTrust { q }`        | NoCkptI trusted with probability q (first-class §3.1 randomized trust) |
+//!
+//! To add a strategy: implement [`PolicyLogic`] here, add a
+//! [`crate::strategy::PolicyKind`] variant with a dispatch arm in
+//! [`crate::sim::engine`], and register a named entry in
+//! [`crate::strategy::registry`] — campaign grids, the harness and the CLI
+//! pick it up from the registry with no further edits.
+
+use crate::sim::engine::{Engine, Seg};
+use crate::sim::trace::{EventSource, Prediction};
+
+/// The per-strategy decisions of the two-mode scheduler.
+///
+/// Implementations must be cheap `Copy` values: the engine copies the
+/// logic out of itself before handing itself to [`PolicyLogic::in_window`]
+/// mutably.
+pub trait PolicyLogic: Copy {
+    /// Does the engine listen for prediction announcements at all?
+    /// `false` is the paper's q = 0 mode: announcements are counted and
+    /// dropped without consuming trust coin-flips.
+    fn listens(self) -> bool {
+        true
+    }
+
+    /// Probability that a heard announcement is trusted (the paper's q,
+    /// §3.1).  Composed multiplicatively with the trust probability the
+    /// caller passes to the `simulate*` entry points.
+    fn trust(self) -> f64 {
+        1.0
+    }
+
+    /// In-window behaviour, entered at `t0` right after the pre-window
+    /// proactive checkpoint committed.  Must leave the engine back in
+    /// regular mode: either run to a clean window exit, or delegate fault
+    /// recovery to [`Engine::handle_fault`] and return.
+    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction);
+
+    /// Decide how the regular period resumes after a served window.
+    /// `period_rem` holds the interrupted period's remaining work on
+    /// entry; `fresh` is a full period's work (`T_R - C`).  The default
+    /// keeps `period_rem` — the paper's semantics: the interrupted period
+    /// resumes where it stopped.
+    fn resume_period(self, period_rem: &mut f64, fresh: f64) {
+        let _ = (period_rem, fresh);
+    }
+}
+
+/// Work until `end` with no checkpoint protection, recovering from any
+/// fault that strikes.  Shared by every "work through the window" policy;
+/// returns the segment outcome so callers can tell a clean window exit
+/// (`Seg::Completed`) from a fault or early job completion.
+fn work_through_window<S: EventSource, L: PolicyLogic>(
+    eng: &mut Engine<'_, S, L>,
+    end: f64,
+) -> Seg {
+    match eng.advance(end, true, false) {
+        Seg::Fault => {
+            eng.handle_fault();
+            Seg::Fault
+        }
+        Seg::Notify(_) => unreachable!("not listening in-window"),
+        seg => seg,
+    }
+}
+
+/// One proactive checkpoint of duration `C_p` starting now; aborted (idle
+/// time) if a fault strikes mid-checkpoint.
+fn proactive_checkpoint<S: EventSource, L: PolicyLogic>(eng: &mut Engine<'_, S, L>) -> Seg {
+    let cp = eng.scenario().platform.cp;
+    let start = eng.now();
+    match eng.advance(start + cp, false, false) {
+        Seg::Completed => {
+            eng.commit_checkpoint(cp, true);
+            Seg::Completed
+        }
+        Seg::Fault => {
+            eng.abort_checkpoint(start);
+            eng.handle_fault();
+            Seg::Fault
+        }
+        _ => unreachable!("checkpoints do no work and do not listen"),
+    }
+}
+
+/// q = 0: predictions ignored entirely (Daly / Young / RFO execution mode).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IgnoreLogic;
+
+impl PolicyLogic for IgnoreLogic {
+    fn listens(self) -> bool {
+        false
+    }
+
+    fn in_window<S: EventSource>(self, _eng: &mut Engine<'_, S, Self>, _p: Prediction) {
+        unreachable!("q = 0 never trusts a prediction")
+    }
+}
+
+/// §3.4 Instant: proactive checkpoint before the window, immediate return
+/// to the interrupted regular period.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InstantLogic;
+
+impl PolicyLogic for InstantLogic {
+    fn in_window<S: EventSource>(self, _eng: &mut Engine<'_, S, Self>, _p: Prediction) {
+        // Straight back to regular mode.
+    }
+}
+
+/// §3.3 NoCkptI: work without checkpointing until the window closes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoCkptLogic;
+
+impl PolicyLogic for NoCkptLogic {
+    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction) {
+        work_through_window(eng, p.window_end);
+    }
+}
+
+/// §3.2 WithCkptI (Algorithm 1 lines 16–17): while in proactive mode
+/// (elapsed < I), work `T_P - C_p` then checkpoint `C_p`.  A started
+/// proactive period runs to completion even if it crosses `t0 + I` (the
+/// mode check happens at iteration boundaries).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WithCkptLogic;
+
+impl PolicyLogic for WithCkptLogic {
+    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction) {
+        let cp = eng.scenario().platform.cp;
+        let tp = eng.policy().tp;
+        while !eng.job_done() && eng.now() < p.window_end {
+            let wend = eng.now() + (tp - cp);
+            match eng.advance(wend, true, false) {
+                Seg::Completed => (),
+                Seg::JobDone => return,
+                Seg::Fault => {
+                    eng.handle_fault();
+                    return;
+                }
+                Seg::Notify(_) => unreachable!("not listening in-window"),
+            }
+            if let Seg::Fault = proactive_checkpoint(eng) {
+                return;
+            }
+        }
+    }
+}
+
+/// The I → 0 exact-prediction limit (the companion paper *Checkpointing
+/// algorithms and fault prediction* studies exact predictions; this is
+/// their natural embedding in the window framework): the scheduler treats
+/// the prediction as pinpointing the strike, so after the pre-window
+/// proactive checkpoint there is nothing to do in-window — and, unlike
+/// Instant, the proactive checkpoint *replaces* the period's checkpoint:
+/// a fresh regular period starts at the window exit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExactPredLogic;
+
+impl PolicyLogic for ExactPredLogic {
+    fn in_window<S: EventSource>(self, _eng: &mut Engine<'_, S, Self>, _p: Prediction) {
+        // The believed strike instant is the window itself; nothing to do.
+    }
+
+    fn resume_period(self, period_rem: &mut f64, fresh: f64) {
+        *period_rem = fresh;
+    }
+}
+
+/// NoCkptI plus a terminal proactive checkpoint at `t0 + I`: the window's
+/// unprotected work is secured before regular mode resumes, at the price
+/// of one more `C_p` per trusted window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowEndCkptLogic;
+
+impl PolicyLogic for WindowEndCkptLogic {
+    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction) {
+        if !matches!(work_through_window(eng, p.window_end), Seg::Completed) {
+            // Fault (already recovered) or the job finished in-window.
+            return;
+        }
+        proactive_checkpoint(eng);
+    }
+}
+
+/// §3.1 randomized trust as a first-class strategy: NoCkptI's execution
+/// mode, but each announcement is trusted only with probability `q`.  The
+/// paper proves the optimum is always at q ∈ {0, 1}; this strategy makes
+/// the interior of that claim directly simulable from campaign grids
+/// (previously only reachable through the `simulate_q` entry point).
+#[derive(Clone, Copy, Debug)]
+pub struct QTrustLogic {
+    /// Trust probability q ∈ [0, 1].
+    pub q: f64,
+}
+
+impl PolicyLogic for QTrustLogic {
+    fn trust(self) -> f64 {
+        self.q
+    }
+
+    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction) {
+        work_through_window(eng, p.window_end);
+    }
+}

@@ -154,7 +154,7 @@ mod tests {
     use super::*;
     use crate::config::{FaultModel, Platform};
     use crate::sim::rng::Rng;
-    use crate::strategy::Strategy;
+    use crate::strategy::registry;
 
     fn scenario(mu: f64) -> Scenario {
         Scenario {
@@ -207,8 +207,8 @@ mod tests {
     fn replay_completes_and_prediction_aware_wins() {
         let sc = scenario(30_000.0);
         let faults = synth_log(400, sc.platform.mu, 7);
-        let ign = replay(&sc, &Strategy::Rfo.policy(&sc), &faults, 3);
-        let aware = replay(&sc, &Strategy::NoCkptI.policy(&sc), &faults, 3);
+        let ign = replay(&sc, &registry::get("RFO").unwrap().policy(&sc), &faults, 3);
+        let aware = replay(&sc, &registry::get("NoCkptI").unwrap().policy(&sc), &faults, 3);
         assert!(ign.makespan >= sc.job_size);
         assert!(aware.makespan >= sc.job_size);
         assert!(ign.n_faults > 0);
@@ -223,9 +223,9 @@ mod tests {
     #[test]
     fn empty_log_runs_fault_free() {
         let sc = scenario(30_000.0);
-        let out = replay(&sc, &Strategy::Daly.policy(&sc), &[], 1);
+        let out = replay(&sc, &registry::get("Daly").unwrap().policy(&sc), &[], 1);
         assert_eq!(out.n_faults, 0);
-        let pol = Strategy::Daly.policy(&sc);
+        let pol = registry::get("Daly").unwrap().policy(&sc);
         let ideal = sc.platform.c / pol.tr;
         assert!((out.waste() - ideal).abs() < 0.01);
     }

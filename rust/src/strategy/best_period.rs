@@ -328,7 +328,7 @@ mod tests {
     use super::*;
     use crate::config::{FaultModel, Platform, PredictorSpec};
     use crate::sim::distribution::Law;
-    use crate::strategy::Strategy;
+    use crate::strategy::registry;
 
     fn sc() -> Scenario {
         Scenario {
@@ -345,15 +345,15 @@ mod tests {
     fn best_period_no_worse_than_formula() {
         let s = sc();
         let seeds: Vec<u64> = (0..8).collect();
-        for strat in [Strategy::Rfo, Strategy::Instant, Strategy::NoCkptI] {
+        for name in ["RFO", "Instant", "NoCkptI"] {
+            let strat = registry::get(name).unwrap();
             let pol = strat.policy(&s);
             let w_formula =
                 mean_waste(&s, pol.kind, pol.tr, pol.tp, &seeds);
             let bp = search_exhaustive(&s, pol.kind, pol.tp, &seeds, 24, 8);
             assert!(
                 bp.waste <= w_formula + 1e-9,
-                "{}: search {} vs formula {}",
-                strat.name(),
+                "{name}: search {} vs formula {}",
                 bp.waste,
                 w_formula
             );

@@ -1,20 +1,32 @@
-//! Checkpointing strategies: the paper's nine heuristics.
+//! Checkpointing strategies: execution modes, instantiated policies, and
+//! the data-driven strategy [`registry`].
 //!
-//! * Prediction-ignoring (q = 0): **Daly**, **Young**, **RFO** — periodic
-//!   checkpointing with the respective closed-form periods.
-//! * Prediction-aware (q = 1): **Instant**, **NoCkptI**, **WithCkptI** —
-//!   two-mode scheduling with the closed-form `T_R^extr` / `T_P^extr`.
-//! * [`best_period`] — the BestPeriod counterparts: same execution modes,
-//!   but `T_R` found by brute-force numerical search over simulations
-//!   (§4.1), the paper's yardstick for "how good are the formulas?".
+//! * [`PolicyKind`] — the engine execution modes (how predictions are
+//!   handled); each dispatches to a [`crate::sim::policy::PolicyLogic`]
+//!   implementation.
+//! * [`Policy`] — a fully instantiated policy: mode + concrete periods.
+//! * [`registry`] / [`StrategyId`] — the open strategy axis: stable string
+//!   names + parameter maps, instantiating policies and mapping to
+//!   analytic waste models where one exists.  The paper's named heuristics
+//!   (Daly, Young, RFO, Instant, NoCkptI, WithCkptI), their BestPeriod
+//!   twins, and the prediction-handling extensions (ExactPred,
+//!   WindowEndCkpt, QTrust) are all registry entries.
+//! * [`best_period`] — the BestPeriod brute-force numerical search over
+//!   simulations (§4.1), the paper's yardstick for "how good are the
+//!   formulas?".
 
 pub mod best_period;
+pub mod registry;
+
+pub use registry::StrategyId;
 
 use crate::config::Scenario;
-use crate::model::optimal;
 
-/// Execution mode of the engine (how predictions are handled).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Execution mode of the engine (how predictions are handled).  Each
+/// variant is dispatched — once, at simulation entry — to its
+/// [`crate::sim::policy::PolicyLogic`] implementation; the engine's main
+/// loop is monomorphized over that behaviour.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PolicyKind {
     /// q = 0: predictions ignored entirely.
     IgnorePredictions,
@@ -24,19 +36,37 @@ pub enum PolicyKind {
     NoCkpt,
     /// Proactive checkpoint + periodic proactive checkpoints in-window (§3.2).
     WithCkpt,
+    /// The I → 0 exact-prediction limit: like [`PolicyKind::Instant`], but
+    /// the proactive checkpoint replaces the period's checkpoint (fresh
+    /// period at the window exit).
+    ExactPred,
+    /// [`PolicyKind::NoCkpt`] plus a terminal proactive checkpoint at
+    /// `t0 + I` securing the window's work.
+    WindowEndCkpt,
+    /// [`PolicyKind::NoCkpt`] with §3.1 randomized trust: each
+    /// announcement is trusted with probability `q`.
+    QTrust {
+        /// Trust probability q ∈ [0, 1].
+        q: f64,
+    },
 }
 
 impl PolicyKind {
     /// The analytic waste-model strategy this execution mode maps to
     /// (Eqs. 3/14/10/4) — the single source of truth for every consumer
     /// that pairs a simulated mode with its closed-form prediction.
-    pub fn grid_strategy(&self) -> crate::model::waste::GridStrategy {
+    /// `None` for modes the paper derives no closed form for (the
+    /// harness reports NaN in the analytic column there).
+    pub fn grid_strategy(&self) -> Option<crate::model::waste::GridStrategy> {
         use crate::model::waste::GridStrategy;
         match self {
-            PolicyKind::IgnorePredictions => GridStrategy::Q0,
-            PolicyKind::Instant => GridStrategy::Instant,
-            PolicyKind::NoCkpt => GridStrategy::NoCkpt,
-            PolicyKind::WithCkpt => GridStrategy::WithCkpt,
+            PolicyKind::IgnorePredictions => Some(GridStrategy::Q0),
+            PolicyKind::Instant => Some(GridStrategy::Instant),
+            PolicyKind::NoCkpt => Some(GridStrategy::NoCkpt),
+            PolicyKind::WithCkpt => Some(GridStrategy::WithCkpt),
+            PolicyKind::ExactPred
+            | PolicyKind::WindowEndCkpt
+            | PolicyKind::QTrust { .. } => None,
         }
     }
 }
@@ -70,78 +100,9 @@ impl Policy {
             );
         }
         assert!(self.tr.is_finite() && self.tp.is_finite());
-    }
-}
-
-/// The paper's named heuristics (analytic periods).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Strategy {
-    /// Daly's periodic policy — the paper's reference baseline.
-    Daly,
-    /// Young's first-order periodic policy.
-    Young,
-    /// Refined First-Order periodic policy (q = 0 optimum, Eq. 3).
-    Rfo,
-    /// Instant (q = 1).
-    Instant,
-    /// NoCkptI (q = 1).
-    NoCkptI,
-    /// WithCkptI (q = 1), T_P = T_P^extr.
-    WithCkptI,
-}
-
-impl Strategy {
-    /// Display name matching the paper's figures.
-    pub fn name(&self) -> &'static str {
-        match self {
-            Strategy::Daly => "Daly",
-            Strategy::Young => "Young",
-            Strategy::Rfo => "RFO",
-            Strategy::Instant => "Instant",
-            Strategy::NoCkptI => "NoCkptI",
-            Strategy::WithCkptI => "WithCkptI",
+        if let PolicyKind::QTrust { q } = self.kind {
+            assert!((0.0..=1.0).contains(&q), "QTrust q = {q} out of [0, 1]");
         }
-    }
-
-    /// The five heuristics compared in the paper's simulations (§4.1);
-    /// Young is implemented as an extra but not plotted by the paper.
-    pub fn paper_set() -> [Strategy; 5] {
-        [
-            Strategy::Daly,
-            Strategy::Rfo,
-            Strategy::Instant,
-            Strategy::NoCkptI,
-            Strategy::WithCkptI,
-        ]
-    }
-
-    /// The engine mode this strategy runs in.
-    pub fn kind(&self) -> PolicyKind {
-        match self {
-            Strategy::Daly | Strategy::Young | Strategy::Rfo => {
-                PolicyKind::IgnorePredictions
-            }
-            Strategy::Instant => PolicyKind::Instant,
-            Strategy::NoCkptI => PolicyKind::NoCkpt,
-            Strategy::WithCkptI => PolicyKind::WithCkpt,
-        }
-    }
-
-    /// Instantiate the analytic policy for a scenario.
-    pub fn policy(&self, sc: &Scenario) -> Policy {
-        let tp = optimal::tp_extr(sc).max(sc.platform.cp * 1.1);
-        let tr = match self {
-            Strategy::Daly => optimal::daly_period(&sc.platform),
-            Strategy::Young => optimal::young_period(&sc.platform),
-            Strategy::Rfo => optimal::rfo_period(&sc.platform),
-            Strategy::Instant => optimal::tr_extr_instant(sc),
-            Strategy::NoCkptI | Strategy::WithCkptI => {
-                optimal::tr_extr_window(sc)
-            }
-        };
-        // Periods never exceed the job itself.
-        let tr = tr.min(sc.job_size.max(1.2 * sc.platform.c));
-        Policy { kind: self.kind(), tr, tp }
     }
 }
 
@@ -173,7 +134,7 @@ mod tests {
                     let s = Scenario::paper(
                         n, cp_ratio, pred, Law::Exponential, Law::Exponential,
                     );
-                    for strat in Strategy::paper_set() {
+                    for strat in registry::paper_set() {
                         let pol = strat.policy(&s);
                         pol.validate(&s); // must not panic
                     }
@@ -184,15 +145,18 @@ mod tests {
 
     #[test]
     fn q0_strategies_ignore_predictions() {
-        for s in [Strategy::Daly, Strategy::Young, Strategy::Rfo] {
-            assert_eq!(s.kind(), PolicyKind::IgnorePredictions);
+        for name in ["Daly", "Young", "RFO"] {
+            let id = registry::get(name).unwrap();
+            assert_eq!(id.kind(), PolicyKind::IgnorePredictions);
         }
     }
 
     #[test]
     fn period_ordering_young_daly() {
         let s = sc();
-        assert!(Strategy::Daly.policy(&s).tr > Strategy::Young.policy(&s).tr);
+        let daly = registry::get("Daly").unwrap().policy(&s).tr;
+        let young = registry::get("Young").unwrap().policy(&s).tr;
+        assert!(daly > young);
     }
 
     #[test]
@@ -200,5 +164,21 @@ mod tests {
     fn invalid_policy_panics() {
         let s = sc();
         Policy { kind: PolicyKind::Instant, tr: 100.0, tp: 700.0 }.validate(&s);
+    }
+
+    #[test]
+    fn grid_strategy_mapping_covers_paper_modes_only() {
+        use crate::model::waste::GridStrategy;
+        assert_eq!(
+            PolicyKind::IgnorePredictions.grid_strategy(),
+            Some(GridStrategy::Q0)
+        );
+        assert_eq!(
+            PolicyKind::WithCkpt.grid_strategy(),
+            Some(GridStrategy::WithCkpt)
+        );
+        assert_eq!(PolicyKind::ExactPred.grid_strategy(), None);
+        assert_eq!(PolicyKind::QTrust { q: 0.5 }.grid_strategy(), None);
+        assert_eq!(PolicyKind::WindowEndCkpt.grid_strategy(), None);
     }
 }

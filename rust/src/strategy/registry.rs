@@ -1,0 +1,615 @@
+//! Data-driven strategy registry: stable string names + parameter maps.
+//!
+//! The strategy axis is **open**: every strategy the stack can run —
+//! campaign grids, the figure/table harness, the `ckptwin` CLI — is a row
+//! in this registry, addressed by a [`StrategyId`] (a registered name plus
+//! a fully materialized parameter map).  Adding a strategy means adding a
+//! [`crate::sim::policy::PolicyLogic`] implementation (behaviour), a
+//! [`PolicyKind`] dispatch arm, and one registry row here; no campaign,
+//! harness or CLI edits.
+//!
+//! Identifier grammar (round-trips through [`StrategyId`]'s `FromStr` /
+//! `Display` pair):
+//!
+//! ```text
+//!   Daly                      a parameterless strategy (canonical name)
+//!   nockpt                    aliases parse case-insensitively
+//!   QTrust(q=0.25)            parameters as key=value, ';' separated
+//!   BestPeriod-NoCkptI(seeds=16)
+//! ```
+//!
+//! Display always emits the canonical form — registered name casing, every
+//! parameter present (defaults materialized) — so the string is also the
+//! stable identity the campaign store keys on: the parameterless names are
+//! byte-identical to the pre-registry `Strategy` enum labels, keeping
+//! existing JSONL stores resumable.
+//!
+//! Registered strategies:
+//!
+//! | name | mode | period T_R | analytic model |
+//! |------|------|-----------|----------------|
+//! | `Daly`, `Young`, `RFO` | q = 0 | closed forms | Eq. (3) |
+//! | `Instant` | Instant | `T_R^extr` (§3.4) | Eq. (14) |
+//! | `NoCkptI` | NoCkpt | `T_R^extr` (Eq. 6) | Eq. (10) |
+//! | `WithCkptI` | WithCkpt | `T_R^extr` (Eq. 6) | Eq. (4) |
+//! | `ExactPred` | ExactPred | `T_R^extr` (§3.4) | — (I → 0 limit of Eq. 14) |
+//! | `WindowEndCkpt` | WindowEndCkpt | `T_R^extr` (Eq. 6) | — |
+//! | `QTrust(q=…)` | QTrust | `T_R^extr` (Eq. 6) | — (paper: optimum at q ∈ {0,1}) |
+//! | `BestPeriod-*(seeds=…)` | as base | brute-force search (§4.1) | — |
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::config::Scenario;
+use crate::model::optimal;
+use crate::model::waste::GridStrategy;
+use crate::strategy::{best_period, Policy, PolicyKind};
+
+/// A parameter accepted by a registered strategy.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamDef {
+    /// Parameter key as written in identifiers (`q`, `seeds`).
+    pub key: &'static str,
+    /// Value used when the identifier omits the parameter.
+    pub default: f64,
+    /// Inclusive validity range.
+    pub min: f64,
+    /// Inclusive validity range.
+    pub max: f64,
+}
+
+/// One registry row: everything the stack needs to name, parse, describe
+/// and instantiate a strategy.
+pub struct StrategyDef {
+    /// Canonical display name (the paper's figure labels where they exist).
+    pub name: &'static str,
+    /// Lowercase aliases accepted by the parser.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `ckptwin strategies`.
+    pub summary: &'static str,
+    /// Accepted parameters (empty for the parameterless strategies).
+    pub params: &'static [ParamDef],
+    kind: fn(&StrategyId) -> PolicyKind,
+    /// Analytic regular period before the job-size clamp.
+    period: fn(&StrategyId, &Scenario) -> f64,
+}
+
+const P_Q: ParamDef = ParamDef { key: "q", default: 0.5, min: 0.0, max: 1.0 };
+const P_SEEDS: ParamDef =
+    ParamDef { key: "seeds", default: 10.0, min: 1.0, max: 100_000.0 };
+
+fn kind_ignore(_: &StrategyId) -> PolicyKind {
+    PolicyKind::IgnorePredictions
+}
+fn kind_instant(_: &StrategyId) -> PolicyKind {
+    PolicyKind::Instant
+}
+fn kind_nockpt(_: &StrategyId) -> PolicyKind {
+    PolicyKind::NoCkpt
+}
+fn kind_withckpt(_: &StrategyId) -> PolicyKind {
+    PolicyKind::WithCkpt
+}
+fn kind_exactpred(_: &StrategyId) -> PolicyKind {
+    PolicyKind::ExactPred
+}
+fn kind_windowend(_: &StrategyId) -> PolicyKind {
+    PolicyKind::WindowEndCkpt
+}
+fn kind_qtrust(id: &StrategyId) -> PolicyKind {
+    PolicyKind::QTrust { q: id.param("q") }
+}
+
+fn period_daly(_: &StrategyId, sc: &Scenario) -> f64 {
+    optimal::daly_period(&sc.platform)
+}
+fn period_young(_: &StrategyId, sc: &Scenario) -> f64 {
+    optimal::young_period(&sc.platform)
+}
+fn period_rfo(_: &StrategyId, sc: &Scenario) -> f64 {
+    optimal::rfo_period(&sc.platform)
+}
+fn period_instant(_: &StrategyId, sc: &Scenario) -> f64 {
+    optimal::tr_extr_instant(sc)
+}
+fn period_window(_: &StrategyId, sc: &Scenario) -> f64 {
+    optimal::tr_extr_window(sc)
+}
+
+/// BestPeriod twins: `T_R` found by the adaptive brute-force search (§4.1)
+/// over `seeds` dedicated instance streams (disjoint from the evaluation
+/// seeds, like the harness's twin runner).
+///
+/// Each instantiation generates its own search traces; sibling twin cells
+/// at one scenario point do not share them (the campaign memoizes the
+/// policy per cell, so the cost is per (cell, campaign), not per block —
+/// the figure harness's `best_period_results_seeded` remains the
+/// cache-sharing path for running all four twins on one scenario).
+fn period_best_period(id: &StrategyId, sc: &Scenario) -> f64 {
+    let n = id.param("seeds") as u64;
+    let seeds: Vec<u64> = (1000..1000 + n).collect();
+    let tp = default_tp(sc);
+    best_period::search(sc, id.kind(), tp, &seeds, 24, 8).tr
+}
+
+/// The proactive period every instantiation uses: `T_P^extr`, kept a hair
+/// above `C_p` so Algorithm 1's inner loop always fits one checkpoint.
+pub fn default_tp(sc: &Scenario) -> f64 {
+    optimal::tp_extr(sc).max(sc.platform.cp * 1.1)
+}
+
+/// The registry itself.  Order is presentation order (`ckptwin
+/// strategies`); lookups are by name/alias, never by index.
+static DEFS: &[StrategyDef] = &[
+    StrategyDef {
+        name: "Daly",
+        aliases: &["daly"],
+        summary: "periodic, predictions ignored; Daly's period (baseline)",
+        params: &[],
+        kind: kind_ignore,
+        period: period_daly,
+    },
+    StrategyDef {
+        name: "Young",
+        aliases: &["young"],
+        summary: "periodic, predictions ignored; Young's first-order period",
+        params: &[],
+        kind: kind_ignore,
+        period: period_young,
+    },
+    StrategyDef {
+        name: "RFO",
+        aliases: &["rfo"],
+        summary: "periodic, predictions ignored; RFO period (Eq. 3 optimum)",
+        params: &[],
+        kind: kind_ignore,
+        period: period_rfo,
+    },
+    StrategyDef {
+        name: "Instant",
+        aliases: &["instant"],
+        summary: "pre-window proactive checkpoint, immediate return (S3.4)",
+        params: &[],
+        kind: kind_instant,
+        period: period_instant,
+    },
+    StrategyDef {
+        name: "NoCkptI",
+        aliases: &["nockpt", "nockpti"],
+        summary: "work unprotected inside the window (S3.3)",
+        params: &[],
+        kind: kind_nockpt,
+        period: period_window,
+    },
+    StrategyDef {
+        name: "WithCkptI",
+        aliases: &["withckpt", "withckpti"],
+        summary: "proactive periods T_P in-window (S3.2, Algorithm 1)",
+        params: &[],
+        kind: kind_withckpt,
+        period: period_window,
+    },
+    StrategyDef {
+        name: "ExactPred",
+        aliases: &["exactpred", "exact-pred", "exact"],
+        summary: "I -> 0 exact limit: Instant + fresh period after the ckpt",
+        params: &[],
+        kind: kind_exactpred,
+        period: period_instant,
+    },
+    StrategyDef {
+        name: "WindowEndCkpt",
+        aliases: &["windowendckpt", "window-end-ckpt", "wec"],
+        summary: "NoCkptI plus a terminal proactive checkpoint at t0 + I",
+        params: &[],
+        kind: kind_windowend,
+        period: period_window,
+    },
+    StrategyDef {
+        name: "QTrust",
+        aliases: &["qtrust", "q-trust"],
+        summary: "NoCkptI trusted with probability q (S3.1 randomized trust)",
+        params: &[P_Q],
+        kind: kind_qtrust,
+        period: period_window,
+    },
+    StrategyDef {
+        name: "BestPeriod-NoPred",
+        aliases: &["bestperiod-nopred", "bp-nopred"],
+        summary: "q = 0 mode, T_R by brute-force search (S4.1)",
+        params: &[P_SEEDS],
+        kind: kind_ignore,
+        period: period_best_period,
+    },
+    StrategyDef {
+        name: "BestPeriod-Instant",
+        aliases: &["bestperiod-instant", "bp-instant"],
+        summary: "Instant mode, T_R by brute-force search (S4.1)",
+        params: &[P_SEEDS],
+        kind: kind_instant,
+        period: period_best_period,
+    },
+    StrategyDef {
+        name: "BestPeriod-NoCkptI",
+        aliases: &["bestperiod-nockpt", "bestperiod-nockpti", "bp-nockpti"],
+        summary: "NoCkptI mode, T_R by brute-force search (S4.1)",
+        params: &[P_SEEDS],
+        kind: kind_nockpt,
+        period: period_best_period,
+    },
+    StrategyDef {
+        name: "BestPeriod-WithCkptI",
+        aliases: &["bestperiod-withckpt", "bestperiod-withckpti", "bp-withckpti"],
+        summary: "WithCkptI mode, T_R by brute-force search (S4.1)",
+        params: &[P_SEEDS],
+        kind: kind_withckpt,
+        period: period_best_period,
+    },
+];
+
+fn find_def(token: &str) -> Option<&'static StrategyDef> {
+    let lower = token.to_ascii_lowercase();
+    DEFS.iter().find(|d| {
+        d.name.eq_ignore_ascii_case(token) || d.aliases.contains(&lower.as_str())
+    })
+}
+
+/// A parsed strategy identifier: registered name + fully materialized
+/// parameter values (defaults filled in at parse time, so two identifiers
+/// naming the same strategy compare and display identically).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StrategyId {
+    name: &'static str,
+    /// `(key, value)` in the registry's declaration order.
+    params: Vec<(&'static str, f64)>,
+}
+
+impl StrategyId {
+    /// The strategy registered under `name` (canonical name or alias,
+    /// case-insensitive), with default parameters.
+    pub fn with_defaults(def: &'static StrategyDef) -> StrategyId {
+        StrategyId {
+            name: def.name,
+            params: def.params.iter().map(|p| (p.key, p.default)).collect(),
+        }
+    }
+
+    /// Parse an identifier: `name` or `name(k=v;k2=v2)` (',' also accepted
+    /// as a parameter separator).  See the module docs for the grammar.
+    pub fn parse(s: &str) -> Result<StrategyId, String> {
+        let s = s.trim();
+        let (base, args) = match s.split_once('(') {
+            None => (s, None),
+            Some((base, rest)) => {
+                let inner = rest.strip_suffix(')').ok_or_else(|| {
+                    format!("strategy '{s}': missing closing ')'")
+                })?;
+                (base.trim(), Some(inner))
+            }
+        };
+        let def = find_def(base).ok_or_else(|| {
+            format!(
+                "unknown strategy '{base}' (known: {})",
+                DEFS.iter().map(|d| d.name).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+        let mut id = StrategyId::with_defaults(def);
+        if let Some(args) = args {
+            for kv in args.split([';', ',']).map(str::trim).filter(|t| !t.is_empty()) {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    format!("{}: expected key=value, got '{kv}'", def.name)
+                })?;
+                let v: f64 = v.trim().parse().map_err(|_| {
+                    format!("{}: parameter '{kv}' is not a number", def.name)
+                })?;
+                id.set_param(def, k.trim(), v)?;
+            }
+        }
+        Ok(id)
+    }
+
+    fn set_param(
+        &mut self,
+        def: &'static StrategyDef,
+        key: &str,
+        val: f64,
+    ) -> Result<(), String> {
+        let pd = def
+            .params
+            .iter()
+            .find(|p| p.key.eq_ignore_ascii_case(key))
+            .ok_or_else(|| {
+                format!("{}: unknown parameter '{key}'", def.name)
+            })?;
+        if !val.is_finite() || !(pd.min..=pd.max).contains(&val) {
+            return Err(format!(
+                "{}: {} = {val} outside [{}, {}]",
+                def.name, pd.key, pd.min, pd.max
+            ));
+        }
+        for slot in &mut self.params {
+            if slot.0 == pd.key {
+                slot.1 = val;
+            }
+        }
+        Ok(())
+    }
+
+    /// A copy with `key` set to `val` (validated against the registry).
+    pub fn with_param(mut self, key: &str, val: f64) -> Result<StrategyId, String> {
+        let def = self.def();
+        self.set_param(def, key, val)?;
+        Ok(self)
+    }
+
+    fn def(&self) -> &'static StrategyDef {
+        DEFS.iter()
+            .find(|d| d.name == self.name)
+            .expect("StrategyId only constructed from registry rows")
+    }
+
+    /// Canonical registered name (`"Daly"`, `"QTrust"`, …).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The value of a declared parameter.  Panics on undeclared keys —
+    /// construction guarantees every declared parameter is present.
+    pub fn param(&self, key: &str) -> f64 {
+        self.params
+            .iter()
+            .find(|(k, _)| *k == key)
+            .unwrap_or_else(|| panic!("{}: no parameter '{key}'", self.name))
+            .1
+    }
+
+    /// One-line description (for `ckptwin strategies`).
+    pub fn summary(&self) -> &'static str {
+        self.def().summary
+    }
+
+    /// The engine execution mode this strategy runs in.
+    pub fn kind(&self) -> PolicyKind {
+        (self.def().kind)(self)
+    }
+
+    /// The analytic waste model paired with this strategy, where the paper
+    /// derives one.
+    pub fn grid_strategy(&self) -> Option<GridStrategy> {
+        self.kind().grid_strategy()
+    }
+
+    /// Instantiate the policy for a scenario: the strategy's period rule
+    /// (closed form, or brute-force search for the BestPeriod twins), with
+    /// `T_P = T_P^extr` and the period clamped to the job itself.
+    pub fn policy(&self, sc: &Scenario) -> Policy {
+        let tp = default_tp(sc);
+        let tr = (self.def().period)(self, sc);
+        // Periods never exceed the job itself.
+        let tr = tr.min(sc.job_size.max(1.2 * sc.platform.c));
+        Policy { kind: self.kind(), tr, tp }
+    }
+}
+
+impl fmt::Display for StrategyId {
+    /// Canonical form: registered name, every parameter materialized.
+    /// This string is the campaign store identity — parameterless names
+    /// are byte-identical to the pre-registry enum labels.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name)?;
+        if !self.params.is_empty() {
+            f.write_str("(")?;
+            for (i, (k, v)) in self.params.iter().enumerate() {
+                if i > 0 {
+                    f.write_str(";")?;
+                }
+                write!(f, "{k}={v}")?;
+            }
+            f.write_str(")")?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for StrategyId {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        StrategyId::parse(s)
+    }
+}
+
+/// Look up a strategy by canonical name or alias, with default parameters.
+pub fn get(name: &str) -> Option<StrategyId> {
+    find_def(name).map(StrategyId::with_defaults)
+}
+
+/// The five heuristics compared in the paper's simulations (§4.1);
+/// Young is implemented as an extra but not plotted by the paper.
+pub fn paper_set() -> Vec<StrategyId> {
+    ["Daly", "RFO", "Instant", "NoCkptI", "WithCkptI"]
+        .iter()
+        .map(|n| get(n).expect("paper strategies are registered"))
+        .collect()
+}
+
+/// Every registered strategy with default parameters, in registry order.
+/// The generic invariant suite iterates this, so new registrations get
+/// coverage for free.
+pub fn all_defaults() -> Vec<StrategyId> {
+    DEFS.iter().map(StrategyId::with_defaults).collect()
+}
+
+/// The registry rows themselves (for `ckptwin strategies` and docs).
+pub fn catalog() -> impl Iterator<Item = &'static StrategyDef> {
+    DEFS.iter()
+}
+
+/// Parse a comma-separated strategy list, paren-aware: commas inside a
+/// `name(k=v,…)` parameter list do not split entries (`;` works too and
+/// needs no care).  Used by the CLI's `--strategies` axis.
+pub fn parse_strategy_list(raw: &str) -> Result<Vec<StrategyId>, String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut push = |tok: &str, out: &mut Vec<StrategyId>| -> Result<(), String> {
+        let tok = tok.trim();
+        if !tok.is_empty() {
+            out.push(StrategyId::parse(tok)?);
+        }
+        Ok(())
+    };
+    for (i, ch) in raw.char_indices() {
+        match ch {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                push(&raw[start..i], &mut out)?;
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    push(&raw[start..], &mut out)?;
+    if out.is_empty() {
+        return Err("empty strategy list".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PredictorSpec;
+    use crate::sim::distribution::Law;
+
+    fn sc() -> Scenario {
+        Scenario::paper(
+            1 << 16,
+            1.0,
+            PredictorSpec::paper_a(600.0),
+            Law::Exponential,
+            Law::Exponential,
+        )
+    }
+
+    #[test]
+    fn display_round_trips_for_every_registered_strategy() {
+        for id in all_defaults() {
+            let label = id.to_string();
+            let back: StrategyId = label.parse().unwrap_or_else(|e| {
+                panic!("'{label}' failed to re-parse: {e}")
+            });
+            assert_eq!(back, id, "round trip of '{label}'");
+            assert_eq!(back.to_string(), label);
+        }
+    }
+
+    #[test]
+    fn non_default_params_round_trip() {
+        for raw in ["QTrust(q=0.25)", "BestPeriod-NoCkptI(seeds=16)"] {
+            let id = StrategyId::parse(raw).unwrap();
+            assert_eq!(id.to_string(), raw);
+            assert_eq!(StrategyId::parse(&id.to_string()).unwrap(), id);
+        }
+        // ',' is accepted as a parameter separator on input.
+        assert_eq!(
+            StrategyId::parse("qtrust(q=0.25)").unwrap(),
+            StrategyId::parse("QTrust(q=0.25,)").unwrap()
+        );
+    }
+
+    #[test]
+    fn legacy_names_and_aliases_parse() {
+        // The pre-registry grid parser's vocabulary must keep working.
+        for (alias, canonical) in [
+            ("daly", "Daly"),
+            ("young", "Young"),
+            ("rfo", "RFO"),
+            ("instant", "Instant"),
+            ("nockpt", "NoCkptI"),
+            ("nockpti", "NoCkptI"),
+            ("withckpt", "WithCkptI"),
+            ("withckpti", "WithCkptI"),
+            ("exactpred", "ExactPred"),
+            ("wec", "WindowEndCkpt"),
+        ] {
+            assert_eq!(StrategyId::parse(alias).unwrap().name(), canonical);
+        }
+        assert!(StrategyId::parse("nope").is_err());
+    }
+
+    #[test]
+    fn legacy_display_names_unchanged() {
+        // These exact strings appear in store keys and CSV rows; changing
+        // one silently orphans every existing campaign store.
+        let expected =
+            ["Daly", "Young", "RFO", "Instant", "NoCkptI", "WithCkptI"];
+        for name in expected {
+            assert_eq!(get(name).unwrap().to_string(), name);
+        }
+    }
+
+    #[test]
+    fn parameter_validation() {
+        assert!(StrategyId::parse("QTrust(q=1.5)").is_err());
+        assert!(StrategyId::parse("QTrust(q=nan)").is_err());
+        assert!(StrategyId::parse("QTrust(frob=1)").is_err());
+        assert!(StrategyId::parse("QTrust(q=0.5").is_err()); // missing ')'
+        assert!(StrategyId::parse("Daly(q=0.5)").is_err()); // no params
+        assert!(StrategyId::parse("BestPeriod-NoPred(seeds=0)").is_err());
+        let q = StrategyId::parse("QTrust").unwrap();
+        assert_eq!(q.param("q"), 0.5); // default materialized
+    }
+
+    #[test]
+    fn kinds_and_policies() {
+        let s = sc();
+        let q = StrategyId::parse("qtrust(q=0.3)").unwrap();
+        assert_eq!(q.kind(), PolicyKind::QTrust { q: 0.3 });
+        let pol = q.policy(&s);
+        pol.validate(&s);
+        assert_eq!(
+            get("ExactPred").unwrap().policy(&s).tr,
+            get("Instant").unwrap().policy(&s).tr,
+            "ExactPred shares Instant's closed-form period"
+        );
+        assert_eq!(
+            get("WindowEndCkpt").unwrap().policy(&s).tr,
+            get("NoCkptI").unwrap().policy(&s).tr,
+        );
+    }
+
+    #[test]
+    fn paper_set_shape() {
+        let set = paper_set();
+        assert_eq!(set.len(), 5);
+        assert_eq!(set[0].name(), "Daly");
+        assert_eq!(set[4].name(), "WithCkptI");
+    }
+
+    #[test]
+    fn strategy_list_parsing_is_paren_aware() {
+        let ids = parse_strategy_list(
+            "instant, qtrust(q=0.25,) ,QTrust(q=0.75;)",
+        )
+        .unwrap();
+        assert_eq!(ids.len(), 3);
+        assert_eq!(ids[1].param("q"), 0.25);
+        assert_eq!(ids[2].param("q"), 0.75);
+        assert!(parse_strategy_list("").is_err());
+        assert!(parse_strategy_list("daly,,rfo").is_ok());
+        assert!(parse_strategy_list("daly,bogus").is_err());
+    }
+
+    #[test]
+    fn best_period_twin_instantiates_via_search() {
+        let mut s = sc();
+        s.job_size *= 0.02; // keep the search cheap
+        let id = StrategyId::parse("BestPeriod-NoPred(seeds=2)").unwrap();
+        let pol = id.policy(&s);
+        pol.validate(&s);
+        assert_eq!(pol.kind, PolicyKind::IgnorePredictions);
+        assert!(pol.tr > s.platform.c);
+    }
+}

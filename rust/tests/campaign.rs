@@ -7,7 +7,7 @@ use std::path::PathBuf;
 
 use ckptwin::campaign::{self, grid::fnv1a64, CampaignOptions, Grid, PredictorKind, Store};
 use ckptwin::sim::distribution::Law;
-use ckptwin::strategy::Strategy;
+use ckptwin::strategy::{registry, StrategyId};
 
 fn tmp(tag: &str) -> PathBuf {
     let p = std::env::temp_dir().join(format!(
@@ -27,7 +27,10 @@ fn small_grid() -> Grid {
         uniform_false_preds: false,
         predictors: vec![PredictorKind::PaperA],
         windows: vec![600.0],
-        strategies: vec![Strategy::Rfo, Strategy::NoCkptI],
+        strategies: vec![
+            registry::get("RFO").unwrap(),
+            registry::get("NoCkptI").unwrap(),
+        ],
         scale: 0.02,
     }
 }
@@ -47,8 +50,72 @@ fn grid_expansion_count_and_determinism() {
     }
     // Deterministic order: outermost axis is the fault law.
     assert_eq!(cells[0].fault_law, Law::Exponential);
-    assert_eq!(cells[0].strategy, Strategy::Daly);
-    assert_eq!(cells[1].strategy, Strategy::Rfo);
+    assert_eq!(cells[0].strategy, registry::get("Daly").unwrap());
+    assert_eq!(cells[1].strategy, registry::get("RFO").unwrap());
+}
+
+/// The registry port must not move a single store key: these literal
+/// strings (and their FNV-1a hashes) are what pre-registry stores were
+/// keyed on, so pinning them proves existing JSONL stores still resume.
+#[test]
+fn store_keys_stable_across_registry_port() {
+    let cell = |strat: &str| {
+        ckptwin::campaign::Cell::new(
+            1 << 16,
+            1.0,
+            Law::Exponential,
+            Law::Exponential,
+            ckptwin::PredictorSpec::paper_a(600.0),
+            StrategyId::parse(strat).unwrap(),
+            1.0,
+        )
+    };
+    for name in ["Daly", "Young", "RFO", "Instant", "NoCkptI", "WithCkptI"] {
+        let c = cell(name);
+        let expected = format!(
+            "procs=65536;cp=1;law=exponential;fp=exponential;scale=1;\
+             p=0.82;r=0.85;I=600;strat={name}"
+        );
+        assert_eq!(c.key(), expected);
+        assert_eq!(c.hash, fnv1a64(expected.as_bytes()));
+    }
+    // One fully pinned hash: any change to the key grammar or the hash
+    // function breaks resumability even if key() and hash stay mutually
+    // consistent.
+    let daly = cell("Daly");
+    assert_eq!(
+        daly.hash,
+        fnv1a64(
+            b"procs=65536;cp=1;law=exponential;fp=exponential;scale=1;\
+              p=0.82;r=0.85;I=600;strat=Daly"
+        )
+    );
+}
+
+/// A store written before the registry port (simulated by writing records
+/// under the pinned legacy keys) is recognized by a post-port resume: every
+/// cell is skipped, nothing is recomputed.
+#[test]
+fn legacy_store_resumes_under_registry() {
+    let path = tmp("legacy");
+    let g = small_grid();
+    let cells = g.expand();
+    let opt = CampaignOptions { instances: 2, block: 1, threads: 1 };
+
+    // Write the store with today's code...
+    let mut store = Store::create(&path).unwrap();
+    campaign::run_cells(&cells, &opt, Some(&mut store)).unwrap();
+    drop(store);
+    // ...and verify the on-disk keys are exactly the legacy strings.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("strat=RFO"), "{text}");
+    assert!(text.contains("strat=NoCkptI"));
+
+    let mut store = Store::open(&path).unwrap();
+    let (done, skipped) =
+        campaign::run_cells(&cells, &opt, Some(&mut store)).unwrap();
+    assert!(done.is_empty());
+    assert_eq!(skipped, cells.len());
 }
 
 #[test]
@@ -166,7 +233,7 @@ fn interrupted_campaign_resumes_exactly() {
         uniform_false_preds: false,
         predictors: vec![PredictorKind::PaperA, PredictorKind::PaperB],
         windows: vec![300.0, 600.0, 900.0],
-        strategies: vec![Strategy::NoCkptI],
+        strategies: vec![registry::get("NoCkptI").unwrap()],
         scale: 0.01,
     };
     let cells = grid.expand();

@@ -6,7 +6,7 @@ use ckptwin::harness::{evaluate_heuristics, run_instances};
 use ckptwin::model::optimal;
 use ckptwin::model::waste::{self, GridStrategy};
 use ckptwin::sim::distribution::Law;
-use ckptwin::strategy::{Policy, PolicyKind, Strategy};
+use ckptwin::strategy::{registry, Policy, PolicyKind};
 
 fn paper_scenario(procs: u64, window: f64, law: Law) -> Scenario {
     Scenario::paper(procs, 1.0, PredictorSpec::paper_a(window), law, law)
@@ -150,7 +150,7 @@ fn waste_increases_with_platform_size() {
     let mut prev = 0.0;
     for procs in [1u64 << 16, 1 << 17, 1 << 18, 1 << 19] {
         let sc = paper_scenario(procs, 600.0, Law::Exponential);
-        let pol = Strategy::Rfo.policy(&sc);
+        let pol = registry::get("RFO").unwrap().policy(&sc);
         let (w, _) = run_instances(&sc, &pol, 20);
         assert!(
             w.mean() > prev,
@@ -172,7 +172,7 @@ fn extreme_parameters_are_safe() {
         fault_model: FaultModel::PlatformRenewal,
         job_size: 200_000.0,
     };
-    for strat in Strategy::paper_set() {
+    for strat in registry::paper_set() {
         let pol = strat.policy(&sc);
         let out = ckptwin::simulate(&sc, &pol, 3);
         assert!(out.makespan.is_finite());

@@ -51,12 +51,17 @@ fn arb_scenario(rng: &mut Rng) -> Scenario {
 }
 
 fn arb_policy(sc: &Scenario, rng: &mut Rng) -> Policy {
-    let kind = [
-        PolicyKind::IgnorePredictions,
-        PolicyKind::Instant,
-        PolicyKind::NoCkpt,
-        PolicyKind::WithCkpt,
-    ][rng.below(4)];
+    // All seven execution modes, including the registry extensions — the
+    // conservation/determinism/accounting properties are mode-generic.
+    let kind = match rng.below(7) {
+        0 => PolicyKind::IgnorePredictions,
+        1 => PolicyKind::Instant,
+        2 => PolicyKind::NoCkpt,
+        3 => PolicyKind::WithCkpt,
+        4 => PolicyKind::ExactPred,
+        5 => PolicyKind::WindowEndCkpt,
+        _ => PolicyKind::QTrust { q: rng.range(0.05, 0.95) },
+    };
     let tr = rng.range(1.05 * sc.platform.c, 50.0 * sc.platform.c);
     let tp = rng.range(1.05 * sc.platform.cp, 4.0 * sc.platform.cp + 100.0);
     Policy { kind, tr, tp }
@@ -244,7 +249,7 @@ fn prop_ci_shrinks_with_instances() {
         Law::Exponential,
         Law::Exponential,
     );
-    let pol = ckptwin::strategy::Strategy::Rfo.policy(&sc);
+    let pol = ckptwin::strategy::registry::get("RFO").unwrap().policy(&sc);
     let (small, _) = run_instances(&sc, &pol, 8);
     let (large, _) = run_instances(&sc, &pol, 64);
     assert!(large.ci95() < small.ci95() * 1.2);

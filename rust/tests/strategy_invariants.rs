@@ -1,0 +1,255 @@
+//! Generic strategy invariants: every strategy in the registry — present
+//! and future — is automatically checked for work conservation, timeline
+//! tiling, waste bounds and determinism.  A new registration gets this
+//! coverage for free because the suite iterates `registry::all_defaults()`.
+//!
+//! The second half pins the three new prediction-handling strategies
+//! against hand-computed executions on a scripted event stream, and proves
+//! `QTrust(q)` bit-identical to the legacy `simulate_q` side door.
+
+use ckptwin::config::{FaultModel, Platform, PredictorSpec, Scenario};
+use ckptwin::sim::distribution::Law;
+use ckptwin::sim::engine::{
+    simulate, simulate_from, simulate_q, simulate_traced,
+};
+use ckptwin::sim::trace::{Event, EventSource, Prediction};
+use ckptwin::strategy::{registry, Policy, PolicyKind, StrategyId};
+
+/// A scaled-down paper scenario with both faults and (true + false)
+/// predictions present in the traces.
+fn invariant_scenario() -> Scenario {
+    let mut sc = Scenario::paper(
+        1 << 16,
+        1.0,
+        PredictorSpec::paper_b(900.0),
+        Law::Weibull { shape: 0.7 },
+        Law::Weibull { shape: 0.7 },
+    );
+    sc.job_size *= 0.02;
+    sc
+}
+
+/// Every registered strategy, with the BestPeriod twins dialed down to a
+/// cheap search budget so the suite stays fast.
+fn all_strategies() -> Vec<StrategyId> {
+    registry::all_defaults()
+        .into_iter()
+        .map(|id| {
+            if id.name().starts_with("BestPeriod-") {
+                id.with_param("seeds", 4.0).expect("seeds is declared")
+            } else {
+                id
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn every_registered_strategy_satisfies_engine_invariants() {
+    let sc = invariant_scenario();
+    for id in all_strategies() {
+        let pol = id.policy(&sc);
+        pol.validate(&sc);
+        for seed in [1u64, 7] {
+            let out = simulate(&sc, &pol, seed);
+            let tag = format!("{id}/seed{seed}");
+            // Work conservation: the makespan decomposes exactly.
+            let accounted = sc.job_size
+                + out.time_ckpt
+                + out.time_down
+                + out.time_idle
+                + out.work_lost;
+            assert!(
+                (out.makespan - accounted).abs() < 1e-6 * out.makespan,
+                "{tag}: makespan {} vs accounted {accounted}",
+                out.makespan
+            );
+            assert!(out.makespan >= sc.job_size, "{tag}");
+            // Waste in [0, 1).
+            assert!((0.0..1.0).contains(&out.waste()), "{tag}: {}", out.waste());
+            // Checkpoint accounting: counts × durations tile time_ckpt.
+            let expect = out.n_reg_ckpts as f64 * sc.platform.c
+                + out.n_pro_ckpts as f64 * sc.platform.cp;
+            assert!(
+                (out.time_ckpt - expect).abs() < 1e-6 * expect.max(1.0),
+                "{tag}: ckpt time {} vs counts {expect}",
+                out.time_ckpt
+            );
+            // Determinism per (strategy, seed).
+            let again = simulate(&sc, &pol, seed);
+            assert_eq!(out, again, "{tag}: nondeterministic");
+        }
+    }
+}
+
+#[test]
+fn every_registered_strategy_tiles_its_timeline() {
+    let sc = invariant_scenario();
+    for id in all_strategies() {
+        let pol = id.policy(&sc);
+        let (out, tl) = simulate_traced(&sc, &pol, 3);
+        let totals = tl
+            .validate(out.makespan)
+            .unwrap_or_else(|e| panic!("{id}: timeline does not tile: {e}"));
+        let work = out.makespan - out.time_ckpt - out.time_down - out.time_idle;
+        assert!((totals[0] - work).abs() < 1e-6 * out.makespan, "{id}: work");
+        assert!((totals[1] - out.time_ckpt).abs() < 1e-6, "{id}: ckpt");
+        assert!((totals[2] - out.time_down).abs() < 1e-6, "{id}: down");
+        assert!((totals[3] - out.time_idle).abs() < 1e-6, "{id}: idle");
+        assert_eq!(tl.faults.len() as u64, out.n_faults, "{id}: faults");
+    }
+}
+
+/// `QTrust(q)` as a first-class strategy is bit-identical to the legacy
+/// `simulate_q` side door running NoCkpt with the same q: the same trust
+/// coin-flip stream, the same trace, the same outcome.
+#[test]
+fn qtrust_strategy_matches_simulate_q_side_door() {
+    let sc = invariant_scenario();
+    for q in [0.0, 0.3, 0.75, 1.0] {
+        let id = StrategyId::parse(&format!("qtrust(q={q})")).unwrap();
+        let pol = id.policy(&sc);
+        assert_eq!(pol.kind, PolicyKind::QTrust { q });
+        let legacy = Policy { kind: PolicyKind::NoCkpt, tr: pol.tr, tp: pol.tp };
+        for seed in [2u64, 11] {
+            let via_strategy = simulate(&sc, &pol, seed);
+            let via_side_door = simulate_q(&sc, &legacy, q, seed);
+            assert_eq!(
+                via_strategy, via_side_door,
+                "q={q} seed={seed}: QTrust diverged from simulate_q"
+            );
+        }
+    }
+}
+
+/// With recall 0 there are no predictions at all, so ExactPred and Instant
+/// (which differ only in what they do about predictions) must coincide.
+#[test]
+fn exactpred_equals_instant_without_predictions() {
+    let mut sc = invariant_scenario();
+    sc.predictor.recall = 0.0;
+    let exact = registry::get("ExactPred").unwrap().policy(&sc);
+    let instant = registry::get("Instant").unwrap().policy(&sc);
+    assert_eq!(exact.tr, instant.tr);
+    for seed in [1u64, 4] {
+        let a = simulate(&sc, &exact, seed);
+        let b = simulate(&sc, &instant, seed);
+        assert_eq!(a, b, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scripted-stream goldens: one prediction, no faults, hand-computed
+// executions for each prediction-handling behaviour.
+// ---------------------------------------------------------------------------
+
+/// Replays a fixed event list, then reports quiet infinity.
+struct Scripted {
+    events: Vec<Event>,
+    next: usize,
+}
+
+impl Scripted {
+    /// One false-positive prediction: announced at t=1000, window
+    /// [1600, 2600] (C_p = 600, I = 1000).
+    fn one_prediction() -> Scripted {
+        Scripted {
+            events: vec![Event::Prediction(Prediction {
+                notify_t: 1000.0,
+                window_start: 1600.0,
+                window_end: 2600.0,
+                true_positive: false,
+            })],
+            next: 0,
+        }
+    }
+}
+
+impl EventSource for Scripted {
+    fn next_event(&mut self) -> Event {
+        let ev = self
+            .events
+            .get(self.next)
+            .copied()
+            .unwrap_or(Event::Fault { t: f64::INFINITY, predicted: false });
+        self.next += 1;
+        ev
+    }
+}
+
+/// C = C_p = 600, job 10000, T_R = 3600 (work 3000), T_P = 1200.
+fn scripted_scenario() -> Scenario {
+    Scenario {
+        platform: Platform { mu: 1e9, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+        predictor: PredictorSpec { recall: 0.5, precision: 0.5, window: 1000.0 },
+        fault_law: Law::Exponential,
+        false_pred_law: Law::Exponential,
+        fault_model: FaultModel::PlatformRenewal,
+        job_size: 10_000.0,
+    }
+}
+
+fn run_scripted(kind: PolicyKind) -> ckptwin::SimOutcome {
+    let sc = scripted_scenario();
+    let pol = Policy { kind, tr: 3600.0, tp: 1200.0 };
+    simulate_from(&sc, &pol, 1.0, 0, Scripted::one_prediction())
+}
+
+#[test]
+fn scripted_instant_resumes_interrupted_period() {
+    let out = run_scripted(PolicyKind::Instant);
+    // Pre-window ckpt at [1000,1600]; the interrupted period (2000 work
+    // left) resumes, then three full regular periods finish the job.
+    assert_eq!(out.makespan, 12_400.0);
+    assert_eq!((out.n_pro_ckpts, out.n_reg_ckpts), (1, 3));
+    assert_eq!(out.n_preds_trusted, 1);
+}
+
+#[test]
+fn scripted_exactpred_starts_fresh_period() {
+    let out = run_scripted(PolicyKind::ExactPred);
+    // Same pre-window ckpt, but it replaces the period's checkpoint: a
+    // fresh 3000-work period starts at 1600, saving one regular
+    // checkpoint relative to Instant on this trace.
+    assert_eq!(out.makespan, 11_800.0);
+    assert_eq!((out.n_pro_ckpts, out.n_reg_ckpts), (1, 2));
+    // The outcomes genuinely differ — resumption is the only difference.
+    assert_ne!(out.makespan, run_scripted(PolicyKind::Instant).makespan);
+}
+
+#[test]
+fn scripted_nockpt_works_through_window() {
+    let out = run_scripted(PolicyKind::NoCkpt);
+    // 1000 s of unprotected in-window work, then the period resumes.
+    assert_eq!(out.makespan, 11_800.0);
+    assert_eq!((out.n_pro_ckpts, out.n_reg_ckpts), (1, 2));
+}
+
+#[test]
+fn scripted_windowendckpt_takes_terminal_checkpoint() {
+    let out = run_scripted(PolicyKind::WindowEndCkpt);
+    // Like NoCkpt, plus a second proactive checkpoint at t0 + I = 2600.
+    assert_eq!(out.makespan, 12_400.0);
+    assert_eq!((out.n_pro_ckpts, out.n_reg_ckpts), (2, 2));
+    // The terminal checkpoint secures the window's work: total checkpoint
+    // time is exactly two proactive + two regular checkpoints.
+    assert_eq!(out.time_ckpt, 2.0 * 600.0 + 2.0 * 600.0);
+}
+
+#[test]
+fn scripted_withckpt_checkpoints_inside_window() {
+    let out = run_scripted(PolicyKind::WithCkpt);
+    // One in-window proactive period (work 600 + ckpt 600 crossing t0+I),
+    // then the interrupted period resumes.
+    assert_eq!(out.makespan, 13_000.0);
+    assert_eq!((out.n_pro_ckpts, out.n_reg_ckpts), (2, 3));
+}
+
+#[test]
+fn scripted_ignore_mode_drops_the_prediction() {
+    let out = run_scripted(PolicyKind::IgnorePredictions);
+    assert_eq!(out.makespan, 11_800.0); // 10000 work + 3 regular ckpts
+    assert_eq!((out.n_pro_ckpts, out.n_reg_ckpts), (0, 3));
+    assert_eq!(out.n_preds_seen, 1);
+    assert_eq!(out.n_preds_trusted, 0);
+}
