@@ -13,7 +13,9 @@
 //! * **L3 (this crate)** — coordination: the simulator, the analytic model,
 //!   the experiment harness, the [`campaign`] engine (declarative scenario
 //!   grids with work-stealing execution, streaming aggregation and a
-//!   resumable result store), and a *real* checkpointing coordinator that
+//!   resumable result store), the [`validate`] conformance engine
+//!   (CI-gated model-vs-simulation sweeps with statistical oracles), and a
+//!   *real* checkpointing coordinator that
 //!   trains a transformer LM (AOT-compiled to an HLO artifact) under fault
 //!   injection with proactive checkpointing.
 //! * **L2/L1 (build-time Python)** — JAX model + Pallas kernels, lowered
@@ -35,6 +37,7 @@ pub mod sim;
 pub mod stats;
 pub mod strategy;
 pub mod util;
+pub mod validate;
 
 pub use config::{Platform, PredictorSpec, Scenario};
 pub use sim::engine::{simulate, SimOutcome};

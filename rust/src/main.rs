@@ -19,6 +19,13 @@
 //!                   scenario hashes; `campaign resume` recomputes only the
 //!                   cells missing from an interrupted store; `campaign
 //!                   report` pretty-prints a store.
+//! * `validate`    — conformance sweeps on the campaign scheduler: per-cell
+//!                   simulated waste (Welford CIs) vs the closed-form model
+//!                   at the analytic optimum and at off-optimal periods,
+//!                   with validity-domain classification, a per-strategy
+//!                   deviation table, a resumable JSONL conformance store
+//!                   and a machine-readable `CONFORMANCE.json`; non-zero
+//!                   exit on any unexplained failure (the CI gate)
 //! * `strategies`  — list the strategy registry (names, aliases,
 //!                   parameters); any registered name — including the
 //!                   parameterized `qtrust(q=…)` and the BestPeriod
@@ -70,6 +77,17 @@ COMMANDS
                [--strategies daly,rfo,nockpt,exactpred,qtrust(q=0.5),...]
                run executes the grid and streams per-cell JSONL results;
                resume skips cells already in the store; report prints it
+  validate     conformance sweep: simulated waste vs the closed-form model
+               (Eqs. 3/4/10/14) per (strategy, law, predictor) cell, at the
+               analytic optimum and at off-optimal periods; CI-aware
+               tolerance verdicts, validity-domain classification, per-
+               strategy table + CONFORMANCE.json; exits non-zero on any
+               unexplained failure.  [--smoke | --grid default|smoke]
+               [--instances N] [--threads N] [--multipliers 0.75,1,1.5]
+               [--out results/conformance.jsonl] [--resume]
+               [--json CONFORMANCE.json] + the campaign axis overrides
+               (--procs, --laws, --predictors, --windows, --strategies,
+               --cp-ratios, --scale)
   strategies   list the strategy registry: names, aliases, parameters
                (any registered name is valid wherever a strategy is named)
   help         this text
@@ -553,24 +571,33 @@ fn cmd_config(args: &Args) -> Result<()> {
 
 /// Build the campaign grid from CLI axis overrides on top of a preset.
 fn grid_from_args(args: &Args) -> Result<ckptwin::campaign::Grid> {
-    use ckptwin::campaign::{Grid, PredictorKind};
-    use ckptwin::strategy::registry;
+    use ckptwin::campaign::Grid;
     let mut grid = match args.get_str("grid").unwrap_or("paper") {
         "paper" => Grid::paper(),
         "smoke" => Grid::smoke(),
         other => return Err(anyhow!("unknown grid preset '{other}' (paper|smoke)")),
     };
-    fn parse_list<T, E: std::fmt::Display>(
-        raw: &str,
-        what: &str,
-        parse: impl Fn(&str) -> Result<T, E>,
-    ) -> Result<Vec<T>> {
-        raw.split(',')
-            .map(str::trim)
-            .filter(|t| !t.is_empty())
-            .map(|t| parse(t).map_err(|e| anyhow!("bad {what} '{t}': {e}")))
-            .collect()
-    }
+    apply_grid_overrides(&mut grid, args)?;
+    Ok(grid)
+}
+
+fn parse_list<T, E: std::fmt::Display>(
+    raw: &str,
+    what: &str,
+    parse: impl Fn(&str) -> Result<T, E>,
+) -> Result<Vec<T>> {
+    raw.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| parse(t).map_err(|e| anyhow!("bad {what} '{t}': {e}")))
+        .collect()
+}
+
+/// Apply the shared CLI axis overrides (`--procs`, `--laws`, …) to a grid
+/// preset; used by both `campaign` and `validate`.
+fn apply_grid_overrides(grid: &mut ckptwin::campaign::Grid, args: &Args) -> Result<()> {
+    use ckptwin::campaign::PredictorKind;
+    use ckptwin::strategy::registry;
     if let Some(raw) = args.get_str("procs") {
         grid.procs = parse_list(raw, "procs", str::parse::<u64>)?;
     }
@@ -605,7 +632,7 @@ fn grid_from_args(args: &Args) -> Result<ckptwin::campaign::Grid> {
     if grid.is_empty() {
         return Err(anyhow!("grid has an empty axis — nothing to run"));
     }
-    Ok(grid)
+    Ok(())
 }
 
 fn cmd_campaign(args: &Args) -> Result<()> {
@@ -701,6 +728,109 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Conformance sweep: model vs simulation over a grid, with statistical
+/// verdicts per cell, a per-strategy table, a resumable JSONL store and
+/// the machine-readable CONFORMANCE.json artifact.  Exits non-zero when
+/// any applicable cell exceeds its declared tolerance — the CI gate.
+fn cmd_validate(args: &Args) -> Result<()> {
+    use ckptwin::validate::{self, ConformanceStore, SweepOptions, Verdict};
+
+    let smoke = args.has("smoke") || args.get_str("grid") == Some("smoke");
+    let mut grid = match args.get_str("grid").unwrap_or(if smoke {
+        "smoke"
+    } else {
+        "default"
+    }) {
+        "default" => validate::default_grid(),
+        "smoke" => validate::smoke_grid(),
+        other => return Err(anyhow!("unknown grid preset '{other}' (default|smoke)")),
+    };
+    apply_grid_overrides(&mut grid, args)?;
+    let mut multipliers: Vec<f64> = match args.get_str("multipliers") {
+        Some(raw) => parse_list(raw, "multiplier", str::parse::<f64>)?,
+        None if smoke => vec![1.0],
+        None => validate::DEFAULT_MULTIPLIERS.to_vec(),
+    };
+    if let Some(bad) = multipliers.iter().find(|m| !m.is_finite() || **m <= 0.0) {
+        return Err(anyhow!("multiplier {bad} must be a positive number"));
+    }
+    // Dedup repeated values: a duplicate would double-count its cells in
+    // the report (the sweep itself dedups by hash).
+    let mut seen = Vec::new();
+    multipliers.retain(|m| {
+        let fresh = !seen.contains(&m.to_bits());
+        seen.push(m.to_bits());
+        fresh
+    });
+    if multipliers.is_empty() {
+        return Err(anyhow!("empty multiplier list"));
+    }
+    let cells = validate::expand_cells(&grid, &multipliers);
+
+    let out = args.get_str("out").unwrap_or("results/conformance.jsonl");
+    let mut store = if args.has("resume") {
+        if !std::path::Path::new(out).exists() {
+            return Err(anyhow!("no conformance store at {out} to resume"));
+        }
+        ConformanceStore::open(std::path::Path::new(out))?
+    } else {
+        ConformanceStore::create(std::path::Path::new(out))?
+    };
+    let opt = SweepOptions {
+        instances: args.get_or("instances", if smoke { 40 } else { 100 }),
+        threads: args.get_or("threads", 0usize),
+        ..Default::default()
+    };
+    println!(
+        "conformance sweep: {} cells ({} grid points × {} strategies × {} multipliers), {} instances/cell",
+        cells.len(),
+        grid.len() / grid.strategies.len(),
+        grid.strategies.len(),
+        multipliers.len(),
+        opt.instances,
+    );
+    let t0 = std::time::Instant::now();
+    let (_fresh, skipped) = validate::run_sweep(&cells, &opt, Some(&mut store))?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    // Report over the full requested cell set, resumed records included;
+    // duplicate-hash cells (repeated axis values) count once, like the
+    // sweep itself.
+    let mut reported = std::collections::BTreeSet::new();
+    let reports: Vec<_> = cells
+        .iter()
+        .filter(|vc| reported.insert(vc.hash))
+        .filter_map(|vc| store.get(vc.hash))
+        .filter_map(ckptwin::validate::CellReport::from_record)
+        .collect();
+    let summaries = validate::summarize(&reports);
+    print!("{}", validate::render_table(&summaries));
+    let failures = validate::render_failures(&reports);
+    if !failures.is_empty() {
+        print!("{failures}");
+    }
+    let json_path = std::path::PathBuf::from(
+        args.get_str("json").unwrap_or("CONFORMANCE.json"),
+    );
+    let bytes = validate::write_json(&json_path, &reports, &summaries)?;
+    let n_fail = reports
+        .iter()
+        .filter(|r| matches!(r.verdict, Verdict::Fail))
+        .count();
+    println!(
+        "done in {dt:.1}s ({skipped} cells resumed); store {out}; wrote {} ({bytes} bytes)",
+        json_path.display()
+    );
+    if n_fail > 0 {
+        return Err(anyhow!(
+            "{n_fail} cells exceeded their conformance tolerance (see {})",
+            json_path.display()
+        ));
+    }
+    println!("all applicable cells within tolerance — zero unexplained failures");
+    Ok(())
+}
+
 /// List the strategy registry: every name the campaign grids, harness and
 /// this CLI accept, with aliases, parameters and a one-line description.
 fn cmd_strategies(_args: &Args) -> Result<()> {
@@ -746,6 +876,7 @@ fn main() {
         Some("replay") => cmd_replay(&args),
         Some("config") => cmd_config(&args),
         Some("campaign") => cmd_campaign(&args),
+        Some("validate") => cmd_validate(&args),
         Some("strategies") => cmd_strategies(&args),
         Some("help") | None => {
             print!("{HELP}");

@@ -12,6 +12,12 @@
 //! The same formulas are implemented in the L1 Pallas kernel
 //! (`python/compile/kernels/waste_grid.py`); `tests/runtime_roundtrip.rs`
 //! checks that the PJRT artifact and this module agree to f32 precision.
+//!
+//! [`waste::waste_checked`] is the domain-aware entry point: the guards the
+//! raw formulas silently violate (`p = 0`, `T_R ≤ C`, `μ ≤ D+R`, saturated
+//! values) come back as a typed [`waste::Applicability`].  The conformance
+//! subsystem ([`crate::validate`]) sweeps these formulas against the
+//! simulator and gates the agreement in CI.
 
 pub mod optimal;
 pub mod waste;

@@ -67,6 +67,117 @@ pub enum GridStrategy {
     WithCkpt = 3,
 }
 
+/// Why a closed-form waste evaluation is outside its validity domain.
+/// Each variant names one structural guard of Eqs. (3)/(4)/(10)/(14) that
+/// the raw formulas do *not* enforce themselves (they silently return
+/// inf, NaN or negative "waste" there).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Inapplicability {
+    /// `T_R ≤ C`: the period cannot even hold its own checkpoint — the
+    /// `(1 − C/T_R)` efficiency factor flips sign.
+    PeriodWithinCheckpoint,
+    /// `μ ≤ D + R`: the platform re-faults before recovery completes on
+    /// average; every formula's `(…)/μ` fraction exceeds 1.
+    MtbfWithinRecovery,
+    /// `p = 0` with a prediction-aware formula: Eqs. (4)/(10)/(14) divide
+    /// by `p·μ` (every prediction is false — the strategies degenerate).
+    ZeroPrecision,
+    /// WithCkptI only: `T_P` outside `[C_p, max(C_p, I)]` — no proactive
+    /// checkpoint fits the window the way Algorithm 1 assumes.
+    ProactivePeriodOutsideWindow,
+    /// The raw formula value fell outside (0, 1): the first-order
+    /// expansion is saturated and predicts nothing quantitative.
+    WasteOutOfRange,
+}
+
+impl Inapplicability {
+    /// Stable snake_case label (conformance stores / `CONFORMANCE.json`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Inapplicability::PeriodWithinCheckpoint => "period_within_checkpoint",
+            Inapplicability::MtbfWithinRecovery => "mtbf_within_recovery",
+            Inapplicability::ZeroPrecision => "zero_precision",
+            Inapplicability::ProactivePeriodOutsideWindow => {
+                "proactive_period_outside_window"
+            }
+            Inapplicability::WasteOutOfRange => "waste_out_of_range",
+        }
+    }
+}
+
+impl std::fmt::Display for Inapplicability {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A closed-form waste evaluation with its validity domain made explicit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Applicability {
+    /// The formula applies; the raw (unclipped) waste is in (0, 1).
+    Applicable(f64),
+    /// The scenario/period pair is outside the formula's domain.
+    Inapplicable(Inapplicability),
+}
+
+impl Applicability {
+    /// The waste value, when applicable.
+    pub fn value(self) -> Option<f64> {
+        match self {
+            Applicability::Applicable(w) => Some(w),
+            Applicability::Inapplicable(_) => None,
+        }
+    }
+
+    /// The domain violation, when inapplicable.
+    pub fn reason(self) -> Option<Inapplicability> {
+        match self {
+            Applicability::Applicable(_) => None,
+            Applicability::Inapplicable(r) => Some(r),
+        }
+    }
+}
+
+/// Domain-checked waste: the guards the raw formulas silently violate
+/// (division by `p·μ` at `p = 0`, sign flips at `T_R ≤ C` or `μ ≤ D+R`,
+/// saturated first-order values) become a typed [`Applicability`] instead
+/// of an inf/NaN/negative number.  `tp` is the proactive period WithCkpt
+/// evaluates Eq. (4) at; the other strategies ignore it.
+pub fn waste_checked(
+    sc: &Scenario,
+    strat: GridStrategy,
+    tr: f64,
+    tp: f64,
+) -> Applicability {
+    use Inapplicability::*;
+    let p = &sc.platform;
+    if !(tr > p.c) {
+        return Applicability::Inapplicable(PeriodWithinCheckpoint);
+    }
+    if !(p.mu > p.d + p.r) {
+        return Applicability::Inapplicable(MtbfWithinRecovery);
+    }
+    if strat != GridStrategy::Q0 && !(sc.predictor.precision > 0.0) {
+        return Applicability::Inapplicable(ZeroPrecision);
+    }
+    if strat == GridStrategy::WithCkpt
+        && !(tp >= p.cp && tp <= sc.predictor.window.max(p.cp))
+    {
+        return Applicability::Inapplicable(ProactivePeriodOutsideWindow);
+    }
+    let raw = match strat {
+        GridStrategy::Q0 => q0(sc, tr),
+        GridStrategy::Instant => instant(sc, tr),
+        GridStrategy::NoCkpt => nockpt(sc, tr),
+        GridStrategy::WithCkpt => withckpt(sc, tr, tp),
+    };
+    if raw.is_finite() && raw > 0.0 && raw < 1.0 {
+        Applicability::Applicable(raw)
+    } else {
+        Applicability::Inapplicable(WasteOutOfRange)
+    }
+}
+
 /// The kernel-compatible clipped waste: `clip(w, 0, 1)`, and 1.0 whenever
 /// `tr <= C`.  WithCkpt uses `T_P = clamp(T_P^extr, Cp, max(Cp, I))`.
 pub fn waste_clipped(sc: &Scenario, strat: GridStrategy, tr: f64) -> f64 {
@@ -159,6 +270,99 @@ mod tests {
         let tr = 6000.0;
         let tp = crate::model::optimal::tp_extr(&s);
         assert!(withckpt(&s, tr, tp) >= nockpt(&s, tr) - 1e-9);
+    }
+
+    #[test]
+    fn checked_guards_each_division_by_zero_edge() {
+        use Inapplicability::*;
+        let all = [
+            GridStrategy::Q0,
+            GridStrategy::Instant,
+            GridStrategy::NoCkpt,
+            GridStrategy::WithCkpt,
+        ];
+        let good = sc(60_000.0, 60.0, 0.82, 0.85, 3000.0);
+        let tp = crate::model::optimal::tp_extr(&good);
+
+        // T_R ≤ C: every formula's efficiency factor flips sign.
+        for strat in all {
+            assert_eq!(
+                waste_checked(&good, strat, 600.0, tp),
+                Applicability::Inapplicable(PeriodWithinCheckpoint),
+                "{strat:?}"
+            );
+            assert_eq!(
+                waste_checked(&good, strat, 100.0, tp).reason(),
+                Some(PeriodWithinCheckpoint)
+            );
+        }
+
+        // μ ≤ D + R: the raw formulas go negative, checked() classifies.
+        let dead = sc(600.0, 600.0, 0.82, 0.85, 600.0);
+        for strat in all {
+            assert_eq!(
+                waste_checked(&dead, strat, 6000.0, tp).reason(),
+                Some(MtbfWithinRecovery),
+                "{strat:?}"
+            );
+        }
+
+        // p = 0: Eqs. (4)/(10)/(14) divide by p·μ — raw value is non-finite
+        // (the silent-inf bug this guard pins), checked() classifies.
+        let p0 = sc(60_000.0, 600.0, 0.0, 0.85, 600.0);
+        assert!(!instant(&p0, 6000.0).is_finite());
+        for strat in [GridStrategy::Instant, GridStrategy::NoCkpt, GridStrategy::WithCkpt] {
+            assert_eq!(
+                waste_checked(&p0, strat, 6000.0, 700.0).reason(),
+                Some(ZeroPrecision),
+                "{strat:?}"
+            );
+        }
+        // …but Eq. (3) never divides by p: Q0 stays applicable.
+        assert!(waste_checked(&p0, GridStrategy::Q0, 6000.0, 700.0)
+            .value()
+            .is_some());
+
+        // WithCkpt: T_P must fit [C_p, max(C_p, I)].
+        assert_eq!(
+            waste_checked(&good, GridStrategy::WithCkpt, 6000.0, 30.0).reason(),
+            Some(ProactivePeriodOutsideWindow) // below C_p = 60
+        );
+        assert_eq!(
+            waste_checked(&good, GridStrategy::WithCkpt, 6000.0, 4000.0).reason(),
+            Some(ProactivePeriodOutsideWindow) // above I = 3000
+        );
+
+        // In-domain evaluation returns the raw formula value.
+        let w = waste_checked(&good, GridStrategy::NoCkpt, 6000.0, tp);
+        assert_eq!(w.value(), Some(nockpt(&good, 6000.0)));
+        assert_eq!(w.reason(), None);
+    }
+
+    #[test]
+    fn checked_classifies_saturated_first_order_values() {
+        // A barely-valid MTBF keeps the domain guards quiet but pushes the
+        // raw Eq. (3) value past 1: WasteOutOfRange, not a number > 1.
+        let s = sc(1000.0, 600.0, 0.82, 0.85, 600.0);
+        assert!(q0(&s, 6000.0) >= 1.0);
+        assert_eq!(
+            waste_checked(&s, GridStrategy::Q0, 6000.0, 700.0).reason(),
+            Some(Inapplicability::WasteOutOfRange)
+        );
+    }
+
+    #[test]
+    fn inapplicability_labels_are_stable() {
+        // These strings are conformance-store/JSON identities.
+        assert_eq!(
+            Inapplicability::PeriodWithinCheckpoint.label(),
+            "period_within_checkpoint"
+        );
+        assert_eq!(Inapplicability::ZeroPrecision.to_string(), "zero_precision");
+        assert_eq!(
+            Inapplicability::MtbfWithinRecovery.label(),
+            "mtbf_within_recovery"
+        );
     }
 
     #[test]

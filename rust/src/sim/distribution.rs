@@ -39,6 +39,25 @@ impl Law {
         }
     }
 
+    /// Squared coefficient of variation CV² = Var/E² of the law (scale
+    /// free).  Drives the conformance tolerance's finite-horizon renewal
+    /// term: the expected event count of a renewal process over [0, T]
+    /// exceeds T/mean by ≈ (CV² − 1)/2 (the asymptotic renewal-function
+    /// constant), which is 0 exactly for the Exponential law.
+    pub fn cv2(&self) -> f64 {
+        match self {
+            Law::Exponential => 1.0,
+            // E[X^m] = λ^m Γ(1 + m/k) ⇒ CV² = Γ(1+2/k)/Γ(1+1/k)² − 1.
+            Law::Weibull { shape } => {
+                let g1 = gamma(1.0 + 1.0 / shape);
+                gamma(1.0 + 2.0 / shape) / (g1 * g1) - 1.0
+            }
+            Law::LogNormal { sigma } => (sigma * sigma).exp() - 1.0,
+            // U(0, 2m): Var = (2m)²/12 = m²/3.
+            Law::Uniform => 1.0 / 3.0,
+        }
+    }
+
     /// Parse a label: "exponential" | "weibull0.7" | "lognormal1.2" |
     /// "uniform".
     pub fn parse(s: &str) -> Option<Law> {
@@ -84,6 +103,24 @@ impl Distribution {
             _ => mean,
         };
         Distribution { law, mean, scale }
+    }
+
+    /// Analytic CDF F(x) of this mean-scaled law — the reference the
+    /// Kolmogorov–Smirnov goodness-of-fit oracles compare [`Self::sample`]
+    /// against (`crate::stats::ks_statistic`).
+    pub fn cdf(&self, x: f64) -> f64 {
+        if x <= 0.0 {
+            return 0.0;
+        }
+        match self.law {
+            Law::Exponential => 1.0 - (-x / self.scale).exp(),
+            Law::Weibull { shape } => 1.0 - (-(x / self.scale).powf(shape)).exp(),
+            // scale = e^m, so ln x − m = ln(x / scale).
+            Law::LogNormal { sigma } => {
+                crate::util::normal_cdf((x / self.scale).ln() / sigma)
+            }
+            Law::Uniform => (x / (2.0 * self.scale)).min(1.0),
+        }
     }
 
     /// Draw one inter-arrival time (strictly positive).
@@ -213,6 +250,122 @@ mod tests {
             for _ in 0..10_000 {
                 assert!(d.sample(&mut rng) > 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn ks_goodness_of_fit_against_analytic_cdfs() {
+        use crate::stats::{ks_critical, ks_statistic};
+        // Fixed seeds make these deterministic; the bound is 2× the 5%
+        // asymptotic critical value — astronomically unlikely to trip for a
+        // correct sampler (p ~ 1e-14 per draw), yet an order of magnitude
+        // below the distance any real sampler bug (wrong scale, wrong
+        // branch, closed-vs-open interval) produces.
+        let n = 20_000;
+        let bound = 2.0 * ks_critical(n, 0.05);
+        for (law, seed) in [
+            (Law::Exponential, 101u64),
+            (Law::Weibull { shape: 0.7 }, 102),
+            (Law::Weibull { shape: 0.5 }, 103),
+            (Law::Weibull { shape: 2.0 }, 104),
+            (Law::LogNormal { sigma: 1.2 }, 105),
+            (Law::Uniform, 106),
+        ] {
+            let d = Distribution::new(law, 700.0);
+            let mut rng = Rng::new(seed);
+            let samples: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+            let ks = ks_statistic(&samples, |x| d.cdf(x));
+            assert!(ks < bound, "{}: D = {ks} vs bound {bound}", law.label());
+        }
+    }
+
+    #[test]
+    fn ks_rejects_the_wrong_cdf() {
+        use crate::stats::{ks_critical, ks_statistic};
+        // Positive control: exponential samples tested against the
+        // Weibull-0.7 CDF must be rejected decisively — the oracle has
+        // power, not just tolerance.
+        let exp = Distribution::new(Law::Exponential, 700.0);
+        let weib = Distribution::new(Law::Weibull { shape: 0.7 }, 700.0);
+        let mut rng = Rng::new(107);
+        let samples: Vec<f64> = (0..20_000).map(|_| exp.sample(&mut rng)).collect();
+        let ks = ks_statistic(&samples, |x| weib.cdf(x));
+        assert!(ks > 8.0 * ks_critical(20_000, 0.01), "D = {ks}");
+        // And a mis-scaled mean is also caught.
+        let shifted = Distribution::new(Law::Exponential, 900.0);
+        let ks = ks_statistic(&samples, |x| shifted.cdf(x));
+        assert!(ks > 5.0 * ks_critical(20_000, 0.01), "D = {ks}");
+    }
+
+    #[test]
+    fn quantile_spot_checks_against_closed_forms() {
+        // Median and upper-quartile of each law, empirically vs closed
+        // form: Exp median = λ ln 2; Weibull q-quantile = λ(−ln(1−q))^{1/k};
+        // LogNormal median = e^m = mean·e^{−σ²/2}; Uniform median = mean.
+        let n = 200_000;
+        let mean = 1000.0;
+        let quantile = |law: Law, seed: u64, q: f64| -> f64 {
+            let d = Distribution::new(law, mean);
+            let mut rng = Rng::new(seed);
+            let mut xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+            xs.sort_by(f64::total_cmp);
+            xs[(q * n as f64) as usize]
+        };
+        let ln2 = std::f64::consts::LN_2;
+        let exp_med = quantile(Law::Exponential, 201, 0.5);
+        assert!((exp_med - mean * ln2).abs() / (mean * ln2) < 0.02, "{exp_med}");
+        for shape in [0.5, 0.7] {
+            let lambda = mean / crate::util::gamma(1.0 + 1.0 / shape);
+            let want = lambda * ln2.powf(1.0 / shape);
+            let got = quantile(Law::Weibull { shape }, 202, 0.5);
+            assert!((got - want).abs() / want < 0.03, "k={shape}: {got} vs {want}");
+            let want75 = lambda * (-(0.25f64).ln()).powf(1.0 / shape);
+            let got75 = quantile(Law::Weibull { shape }, 203, 0.75);
+            assert!((got75 - want75).abs() / want75 < 0.03, "k={shape}: {got75}");
+        }
+        let sigma = 0.8;
+        let want = mean * (-0.5 * sigma * sigma).exp();
+        let got = quantile(Law::LogNormal { sigma }, 204, 0.5);
+        assert!((got - want).abs() / want < 0.02, "{got} vs {want}");
+        let got = quantile(Law::Uniform, 205, 0.5);
+        assert!((got - mean).abs() / mean < 0.02, "{got}");
+    }
+
+    #[test]
+    fn cv2_known_values() {
+        assert_eq!(Law::Exponential.cv2(), 1.0);
+        assert!((Law::Uniform.cv2() - 1.0 / 3.0).abs() < 1e-12);
+        // Weibull k=1 IS exponential; k=0.5: Γ(5)/Γ(3)² − 1 = 24/4 − 1 = 5.
+        assert!((Law::Weibull { shape: 1.0 }.cv2() - 1.0).abs() < 1e-9);
+        assert!((Law::Weibull { shape: 0.5 }.cv2() - 5.0).abs() < 1e-6);
+        // k=0.7 sits between; heavier shapes are *less* variable.
+        let c07 = Law::Weibull { shape: 0.7 }.cv2();
+        assert!(c07 > 1.0 && c07 < 5.0, "{c07}");
+        assert!(Law::Weibull { shape: 2.0 }.cv2() < 1.0);
+        // LogNormal: e^{σ²} − 1.
+        let s = 1.2f64;
+        assert!((Law::LogNormal { sigma: s }.cv2() - ((s * s).exp() - 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_is_a_distribution_function() {
+        for law in [
+            Law::Exponential,
+            Law::Weibull { shape: 0.7 },
+            Law::LogNormal { sigma: 1.2 },
+            Law::Uniform,
+        ] {
+            let d = Distribution::new(law, 500.0);
+            assert_eq!(d.cdf(0.0), 0.0);
+            assert_eq!(d.cdf(-5.0), 0.0);
+            let mut prev = 0.0;
+            for k in 1..200 {
+                let f = d.cdf(k as f64 * 50.0);
+                assert!((0.0..=1.0).contains(&f));
+                assert!(f >= prev, "{}: CDF not monotone", law.label());
+                prev = f;
+            }
+            assert!(d.cdf(1e9) > 0.999, "{}", law.label());
         }
     }
 

@@ -8,6 +8,16 @@
 //!   instances fan out per cell.
 //! * [`Summary`] — [`Welford`] plus retained values for order statistics
 //!   (percentiles/median), used where quantiles are reported.
+//!
+//! Plus the statistical assertion toolkit shared by the conformance
+//! subsystem (`crate::validate`) and the test suites:
+//! * [`paired_diff`] — Welford over element-wise differences of two paired
+//!   samples (the CI of a *paired* comparison, the paper's methodology);
+//! * [`ks_statistic`] / [`ks_critical`] — one-sample Kolmogorov–Smirnov
+//!   distance against an analytic CDF, with asymptotic critical values
+//!   (goodness-of-fit oracles for `sim::distribution`);
+//! * [`excess_deviation`] — the part of |observed − expected| that a
+//!   CI-sized noise allowance cannot explain (tolerance verdicts).
 
 /// Constant-memory online accumulator: Welford mean/variance plus min/max.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -190,6 +200,53 @@ impl Summary {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Statistical assertion toolkit
+// ---------------------------------------------------------------------------
+
+/// Welford accumulator over the element-wise differences `xs[i] - ys[i]` of
+/// two paired samples.  `mean()` is the mean paired difference and `ci95()`
+/// its confidence half-width — much tighter than differencing two marginal
+/// CIs when the pairing (shared fault traces) is strong.  Panics when the
+/// samples' lengths differ: unpaired data has no paired CI.
+pub fn paired_diff(xs: &[f64], ys: &[f64]) -> Welford {
+    assert_eq!(xs.len(), ys.len(), "paired samples must have equal length");
+    Welford::from_iter(xs.iter().zip(ys).map(|(x, y)| x - y))
+}
+
+/// One-sample Kolmogorov–Smirnov statistic `D_n = sup_x |F_n(x) − F(x)|`
+/// of `samples` against the analytic CDF `F`.  Samples need not be sorted.
+pub fn ks_statistic(samples: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    assert!(!samples.is_empty(), "KS statistic of an empty sample");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let n = sorted.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f = cdf(x);
+        // The empirical CDF steps from i/n to (i+1)/n at x: both sides of
+        // the step bound the supremum.
+        d = d.max((f - i as f64 / n).abs());
+        d = d.max(((i + 1) as f64 / n - f).abs());
+    }
+    d
+}
+
+/// Asymptotic critical value of `D_n` at significance `alpha`: the
+/// Kolmogorov-distribution approximation `sqrt(-ln(alpha/2) / 2) / sqrt(n)`
+/// (c(0.05) ≈ 1.358, c(0.01) ≈ 1.628).  Valid for n ≳ 35.
+pub fn ks_critical(n: usize, alpha: f64) -> f64 {
+    assert!(n > 0 && alpha > 0.0 && alpha < 1.0);
+    (-(alpha / 2.0).ln() / 2.0).sqrt() / (n as f64).sqrt()
+}
+
+/// The deviation a tolerance must explain once sampling noise is granted:
+/// `max(0, |observed − expected| − noise)`, where `noise` is a CI
+/// half-width on the observation.  Zero means the CI alone covers the gap.
+pub fn excess_deviation(observed: f64, expected: f64, noise: f64) -> f64 {
+    ((observed - expected).abs() - noise).max(0.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,6 +318,60 @@ mod tests {
             again.merge(&Welford::from_iter(chunk.iter().copied()));
         }
         assert_eq!(again, merged);
+    }
+
+    #[test]
+    fn paired_diff_tighter_than_marginals() {
+        // Strongly paired data: y = x + small noise.  The paired CI must be
+        // far tighter than either marginal CI, and the mean difference
+        // recovered exactly.
+        let xs: Vec<f64> = (0..200).map(|i| (i as f64 * 0.37).sin() * 5.0).collect();
+        let ys: Vec<f64> =
+            xs.iter().enumerate().map(|(i, x)| x + 0.5 + 0.01 * (i % 3) as f64).collect();
+        let d = paired_diff(&ys, &xs);
+        assert_eq!(d.len(), xs.len());
+        assert!((d.mean() - 0.51).abs() < 0.01, "{}", d.mean());
+        let marginal = Welford::from_iter(xs.iter().copied());
+        assert!(d.ci95() < 0.1 * marginal.ci95());
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn paired_diff_rejects_unpaired() {
+        paired_diff(&[1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn ks_statistic_exact_small_cases() {
+        // Single sample at the median of U(0,1): F(0.5) = 0.5, steps 0 → 1,
+        // D = 0.5 on both sides.
+        let d = ks_statistic(&[0.5], |x| x);
+        assert!((d - 0.5).abs() < 1e-12);
+        // A perfect uniform grid at midpoints: D = 1/(2n).
+        let n = 100;
+        let grid: Vec<f64> = (0..n).map(|i| (i as f64 + 0.5) / n as f64).collect();
+        let d = ks_statistic(&grid, |x| x);
+        assert!((d - 0.5 / n as f64).abs() < 1e-12, "{d}");
+        // A shifted sample is far from uniform.
+        let shifted: Vec<f64> = grid.iter().map(|x| (x * 0.5).min(1.0)).collect();
+        assert!(ks_statistic(&shifted, |x| x) > 0.4);
+    }
+
+    #[test]
+    fn ks_critical_pinned_constants() {
+        // c(0.05) = 1.3581, c(0.01) = 1.6276 (classic table values).
+        assert!((ks_critical(1, 0.05) - 1.3581).abs() < 1e-3);
+        assert!((ks_critical(1, 0.01) - 1.6276).abs() < 1e-3);
+        assert!((ks_critical(100, 0.05) - 0.13581).abs() < 1e-4);
+        assert!(ks_critical(400, 0.05) < ks_critical(100, 0.05));
+    }
+
+    #[test]
+    fn excess_deviation_semantics() {
+        assert_eq!(excess_deviation(1.0, 1.0, 0.0), 0.0);
+        assert_eq!(excess_deviation(1.2, 1.0, 0.3), 0.0); // CI covers it
+        assert!((excess_deviation(1.5, 1.0, 0.2) - 0.3).abs() < 1e-12);
+        assert!((excess_deviation(0.5, 1.0, 0.2) - 0.3).abs() < 1e-12); // symmetric
     }
 
     #[test]

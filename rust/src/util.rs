@@ -112,6 +112,26 @@ pub fn gammq(a: f64, x: f64) -> f64 {
     }
 }
 
+/// Standard normal CDF Φ(z) via the Abramowitz–Stegun 7.1.26 erf
+/// approximation (|error| < 1.5e-7) — the LogNormal analytic CDF needed by
+/// the distribution goodness-of-fit oracles.
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// erf(x), Abramowitz–Stegun 7.1.26 (|error| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736
+                + t * (1.421_413_741
+                    + t * (-1.453_152_027 + t * 1.061_405_429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
 /// Clamp helper mirroring the paper's period-validity guards.
 pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
     x.max(lo).min(hi)
@@ -171,6 +191,20 @@ mod tests {
             let q = gammq(a, i as f64 * 0.1);
             assert!(q > 0.0 && q < prev, "i={i}");
             prev = q;
+        }
+    }
+
+    #[test]
+    fn normal_cdf_known_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((normal_cdf(1.0) - 0.841_344_746).abs() < 1e-6);
+        assert!((normal_cdf(-1.0) - 0.158_655_254).abs() < 1e-6);
+        assert!((normal_cdf(1.959_964) - 0.975).abs() < 1e-5);
+        assert!(normal_cdf(8.0) > 1.0 - 1e-9);
+        assert!(normal_cdf(-8.0) < 1e-9);
+        // Symmetry: Φ(z) + Φ(−z) = 1.
+        for z in [0.3, 0.9, 1.7, 2.6] {
+            assert!((normal_cdf(z) + normal_cdf(-z) - 1.0).abs() < 1e-12);
         }
     }
 

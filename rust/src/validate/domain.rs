@@ -1,0 +1,341 @@
+//! Validity-domain classification and the tolerance policy — the
+//! "statistical oracle" half of the conformance subsystem.
+//!
+//! A model-vs-simulation comparison is only meaningful inside the closed
+//! forms' validity domain.  [`classify`] encodes that domain as code: the
+//! structural guards of the formulas themselves
+//! ([`crate::model::waste::waste_checked`] — `p = 0`, `T_R ≤ C`,
+//! `μ ≤ D+R`, `T_P` vs the window, saturated values) plus the *regime*
+//! guards of the first-order derivation that only the comparison layer can
+//! know (period vs MTBF ratio, job horizon, prediction-window overlap,
+//! fault-model transients).  Out-of-domain cells classify as
+//! [`Inapplicable`] — reported, never failed.
+//!
+//! [`tolerance`] prices the residual, *explainable* disagreement between an
+//! in-domain formula and a finite simulation:
+//!
+//! ```text
+//!   tol = abs_floor + tail_floor·min(CV²−1, 2)      discretization floor
+//!       + curvature·(T_R/μ)²                        first-order truncation
+//!       + renewal_excess(laws, T_R, job)            finite-horizon renewal
+//!       + ci_mult·CI95(sim mean)                    sampling noise
+//! ```
+//!
+//! Each term is a known, bounded error source (see DESIGN.md §Validation);
+//! a deviation beyond their sum is a genuine conformance failure.
+
+use crate::config::{FaultModel, Scenario};
+use crate::model::waste::{self, Applicability, Inapplicability};
+use crate::sim::distribution::Law;
+use crate::strategy::PolicyKind;
+
+/// Why a conformance cell has no meaningful model-vs-sim comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Inapplicable {
+    /// A structural guard of the formula itself (see
+    /// [`crate::model::waste::Inapplicability`]).
+    Model(Inapplicability),
+    /// The paper derives no closed form for this strategy's execution
+    /// mode (ExactPred, WindowEndCkpt, QTrust).  The BestPeriod twins do
+    /// *not* land here: their modes map to the paper formulas, which the
+    /// sweep then checks at the twin's searched period.
+    NoClosedForm,
+    /// `T_R/μ` too large: the first-order expansion's truncated
+    /// O((T_R/μ)²) terms dominate — no tolerance is honest there.
+    BeyondFirstOrder,
+    /// Fewer than [`MIN_PERIODS`] regular periods fit the job: the
+    /// asymptotic waste model has no steady state to predict.
+    JobTooShort,
+    /// `(I + C_p)` is a large fraction of the predicted-event
+    /// inter-arrival μ_P: overlapping windows, which the analysis assumes
+    /// away (§2.3), dominate the execution.
+    WindowsOverlap,
+    /// Per-processor *fresh* fault traces under a non-exponential law: the
+    /// superposed infant-mortality transient puts the effective fault rate
+    /// far above the 1/μ the formulas assume (the paper's own
+    /// Daly-vs-BestPeriod gap; see DESIGN.md §Fault-model).
+    TransientFaultModel,
+    /// The finite-horizon renewal excess alone exceeds the cap: the job is
+    /// too short for this heavy-tailed law to reach its renewal rate.
+    HorizonTooShort,
+}
+
+impl Inapplicable {
+    /// Stable snake_case label (conformance stores / `CONFORMANCE.json`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Inapplicable::Model(m) => m.label(),
+            Inapplicable::NoClosedForm => "no_closed_form",
+            Inapplicable::BeyondFirstOrder => "beyond_first_order",
+            Inapplicable::JobTooShort => "job_too_short",
+            Inapplicable::WindowsOverlap => "windows_overlap",
+            Inapplicable::TransientFaultModel => "transient_fault_model",
+            Inapplicable::HorizonTooShort => "horizon_too_short",
+        }
+    }
+
+    /// Parse a stored label back (resume path).  Unknown labels — a store
+    /// written by a newer build — map to `None`.
+    pub fn parse(label: &str) -> Option<Inapplicable> {
+        use Inapplicability::*;
+        Some(match label {
+            "period_within_checkpoint" => Inapplicable::Model(PeriodWithinCheckpoint),
+            "mtbf_within_recovery" => Inapplicable::Model(MtbfWithinRecovery),
+            "zero_precision" => Inapplicable::Model(ZeroPrecision),
+            "proactive_period_outside_window" => {
+                Inapplicable::Model(ProactivePeriodOutsideWindow)
+            }
+            "waste_out_of_range" => Inapplicable::Model(WasteOutOfRange),
+            "no_closed_form" => Inapplicable::NoClosedForm,
+            "beyond_first_order" => Inapplicable::BeyondFirstOrder,
+            "job_too_short" => Inapplicable::JobTooShort,
+            "windows_overlap" => Inapplicable::WindowsOverlap,
+            "transient_fault_model" => Inapplicable::TransientFaultModel,
+            "horizon_too_short" => Inapplicable::HorizonTooShort,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for Inapplicable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// `T_R/μ` beyond this is outside the first-order expansion's regime.
+pub const FIRST_ORDER_MAX: f64 = 0.5;
+/// Minimum regular periods the job must hold for the asymptotic model.
+pub const MIN_PERIODS: f64 = 10.0;
+/// Maximum `(I + C_p)/μ_P` before window overlaps dominate.
+pub const OVERLAP_MAX: f64 = 0.25;
+
+/// Tolerance policy: the coefficients pricing each explainable error
+/// source (module docs give the formula; DESIGN.md §Validation derives it).
+#[derive(Clone, Copy, Debug)]
+pub struct TolerancePolicy {
+    /// Law-independent floor: final-period truncation, strike-position
+    /// discretization, residual second-order terms at tiny `T_R/μ`.
+    pub abs_floor: f64,
+    /// Extra floor per unit of excess CV² (heavy-tailed laws mix slower),
+    /// applied as `tail_floor · min(CV² − 1, 2)`.
+    pub tail_floor: f64,
+    /// Coefficient of the `(T_R/μ)²` first-order truncation term.
+    pub curvature: f64,
+    /// CI multiplier on the simulated mean's 95% half-width.
+    pub ci_mult: f64,
+    /// Cells whose renewal-excess term alone exceeds this classify as
+    /// [`Inapplicable::HorizonTooShort`] instead of hiding behind it.
+    pub max_renewal_excess: f64,
+}
+
+impl Default for TolerancePolicy {
+    fn default() -> Self {
+        TolerancePolicy {
+            abs_floor: 0.02,
+            tail_floor: 0.01,
+            curvature: 0.5,
+            ci_mult: 3.0,
+            max_renewal_excess: 0.05,
+        }
+    }
+}
+
+/// Finite-horizon renewal excess, in waste units: a renewal process with
+/// squared CV `c²` delivers ≈ `(c² − 1)/2` events *more* than `T/mean`
+/// over a finite horizon (the asymptotic renewal-function constant; 0 for
+/// Exponential).  Each excess fault costs ≈ `T_R/2 + D + R`, each excess
+/// false prediction ≈ `C_p` (when the strategy listens), spread over the
+/// job.
+pub fn renewal_excess_waste(sc: &Scenario, kind: PolicyKind, tr: f64) -> f64 {
+    let excess = |cv2: f64| (cv2 - 1.0).max(0.0) / 2.0;
+    let pf = &sc.platform;
+    let mut w = excess(sc.fault_law.cv2()) * (tr / 2.0 + pf.d + pf.r) / sc.job_size;
+    if !matches!(kind, PolicyKind::IgnorePredictions) {
+        w += excess(sc.false_pred_law.cv2()) * pf.cp / sc.job_size;
+    }
+    w
+}
+
+/// Classify a conformance cell: the model waste at `(tr, tp)` when the
+/// formula applies there, or the [`Inapplicable`] reason.
+pub fn classify(
+    sc: &Scenario,
+    kind: PolicyKind,
+    tr: f64,
+    tp: f64,
+    policy: &TolerancePolicy,
+) -> Result<f64, Inapplicable> {
+    let gs = kind.grid_strategy().ok_or(Inapplicable::NoClosedForm)?;
+    // Structural formula guards first (they also catch p = 0 before any
+    // division below).
+    let model = match waste::waste_checked(sc, gs, tr, tp) {
+        Applicability::Applicable(w) => w,
+        Applicability::Inapplicable(r) => return Err(Inapplicable::Model(r)),
+    };
+    // Regime guards of the first-order derivation.
+    if tr / sc.platform.mu > FIRST_ORDER_MAX {
+        return Err(Inapplicable::BeyondFirstOrder);
+    }
+    if sc.job_size < MIN_PERIODS * tr {
+        return Err(Inapplicable::JobTooShort);
+    }
+    if gs != waste::GridStrategy::Q0 {
+        let mu_p = sc.predictor.mu_p(sc.platform.mu);
+        if (sc.predictor.window + sc.platform.cp) / mu_p > OVERLAP_MAX {
+            return Err(Inapplicable::WindowsOverlap);
+        }
+    }
+    // Only Weibull has a per-processor superposition implemented; other
+    // laws run as platform-level renewals under every fault model (see
+    // DESIGN.md §Fault-model), so only fresh per-proc Weibull traces carry
+    // the infant-mortality transient.
+    if matches!(sc.fault_model, FaultModel::PerProcessor { .. })
+        && matches!(sc.fault_law, Law::Weibull { .. })
+    {
+        return Err(Inapplicable::TransientFaultModel);
+    }
+    if renewal_excess_waste(sc, kind, tr) > policy.max_renewal_excess {
+        return Err(Inapplicable::HorizonTooShort);
+    }
+    Ok(model)
+}
+
+/// The declared tolerance for a classified-applicable cell, given the
+/// simulated mean's CI half-width (see module docs for the terms).
+pub fn tolerance(
+    policy: &TolerancePolicy,
+    sc: &Scenario,
+    kind: PolicyKind,
+    tr: f64,
+    ci95: f64,
+) -> f64 {
+    let x = tr / sc.platform.mu;
+    policy.abs_floor
+        + policy.tail_floor * (sc.fault_law.cv2() - 1.0).clamp(0.0, 2.0)
+        + policy.curvature * x * x
+        + renewal_excess_waste(sc, kind, tr)
+        + policy.ci_mult * ci95
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Platform, PredictorSpec};
+    use crate::sim::distribution::Law;
+
+    fn sc(law: Law, fm: FaultModel) -> Scenario {
+        Scenario {
+            platform: Platform { mu: 60_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            fault_law: law,
+            false_pred_law: law,
+            fault_model: fm,
+            job_size: 1e6,
+        }
+    }
+
+    #[test]
+    fn classify_applies_in_the_paper_regime() {
+        let s = sc(Law::Exponential, FaultModel::PlatformRenewal);
+        let pol = TolerancePolicy::default();
+        let w = classify(&s, PolicyKind::IgnorePredictions, 8000.0, 700.0, &pol)
+            .expect("in-domain");
+        assert!((w - crate::model::waste::q0(&s, 8000.0)).abs() < 1e-12);
+        let w = classify(&s, PolicyKind::NoCkpt, 8000.0, 700.0, &pol).unwrap();
+        assert!((w - crate::model::waste::nockpt(&s, 8000.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn classify_names_each_regime_guard() {
+        let pol = TolerancePolicy::default();
+        let s = sc(Law::Exponential, FaultModel::PlatformRenewal);
+        assert_eq!(
+            classify(&s, PolicyKind::ExactPred, 8000.0, 700.0, &pol),
+            Err(Inapplicable::NoClosedForm)
+        );
+        assert_eq!(
+            classify(&s, PolicyKind::QTrust { q: 0.5 }, 8000.0, 700.0, &pol),
+            Err(Inapplicable::NoClosedForm)
+        );
+        // T_R/μ > 0.5.
+        assert_eq!(
+            classify(&s, PolicyKind::IgnorePredictions, 40_000.0, 700.0, &pol),
+            Err(Inapplicable::BeyondFirstOrder)
+        );
+        // Fewer than MIN_PERIODS periods in the job.
+        let mut short = s;
+        short.job_size = 50_000.0;
+        assert_eq!(
+            classify(&short, PolicyKind::IgnorePredictions, 8000.0, 700.0, &pol),
+            Err(Inapplicable::JobTooShort)
+        );
+        // Overlapping windows: huge I vs μ_P.
+        let mut wide = s;
+        wide.predictor.window = 30_000.0;
+        assert_eq!(
+            classify(&wide, PolicyKind::NoCkpt, 8000.0, 700.0, &pol),
+            Err(Inapplicable::WindowsOverlap)
+        );
+        // …but the q = 0 model never sees the window.
+        assert!(classify(&wide, PolicyKind::IgnorePredictions, 8000.0, 700.0, &pol)
+            .is_ok());
+        // Fresh per-processor Weibull traces: transient fault model.
+        let weib = sc(
+            Law::Weibull { shape: 0.7 },
+            FaultModel::PerProcessor { n: 1 << 16 },
+        );
+        assert_eq!(
+            classify(&weib, PolicyKind::NoCkpt, 8000.0, 700.0, &pol),
+            Err(Inapplicable::TransientFaultModel)
+        );
+        // The same law under the steady-state renewal is in-domain…
+        let weib_pr = sc(Law::Weibull { shape: 0.7 }, FaultModel::PlatformRenewal);
+        assert!(classify(&weib_pr, PolicyKind::NoCkpt, 8000.0, 700.0, &pol).is_ok());
+        // …and exponential per-processor traces are too (exactly Poisson).
+        let exp_pp =
+            sc(Law::Exponential, FaultModel::PerProcessor { n: 1 << 16 });
+        assert!(classify(&exp_pp, PolicyKind::NoCkpt, 8000.0, 700.0, &pol).is_ok());
+        // Heavy tail on a tiny job: the renewal excess alone blows the cap.
+        let mut heavy = sc(Law::Weibull { shape: 0.5 }, FaultModel::PlatformRenewal);
+        heavy.job_size = 150_000.0;
+        assert_eq!(
+            classify(&heavy, PolicyKind::IgnorePredictions, 8000.0, 700.0, &pol),
+            Err(Inapplicable::HorizonTooShort)
+        );
+        // Structural model guards pass through with their own reason.
+        let mut p0 = s;
+        p0.predictor.precision = 0.0;
+        assert_eq!(
+            classify(&p0, PolicyKind::Instant, 8000.0, 700.0, &pol),
+            Err(Inapplicable::Model(
+                crate::model::waste::Inapplicability::ZeroPrecision
+            ))
+        );
+    }
+
+    #[test]
+    fn tolerance_terms_behave() {
+        let pol = TolerancePolicy::default();
+        let exp = sc(Law::Exponential, FaultModel::PlatformRenewal);
+        let weib = sc(Law::Weibull { shape: 0.7 }, FaultModel::PlatformRenewal);
+        let kind = PolicyKind::IgnorePredictions;
+        // Zero CI, small period: tolerance is essentially the floor.
+        let base = tolerance(&pol, &exp, kind, 2000.0, 0.0);
+        assert!(base >= pol.abs_floor && base < pol.abs_floor + 0.01, "{base}");
+        // Heavier law ⇒ larger tolerance (tail floor + renewal excess).
+        assert!(tolerance(&pol, &weib, kind, 2000.0, 0.0) > base);
+        // Longer period ⇒ larger curvature term; CI enters ci_mult×.
+        assert!(tolerance(&pol, &exp, kind, 20_000.0, 0.0) > base);
+        let with_ci = tolerance(&pol, &exp, kind, 2000.0, 0.01);
+        assert!((with_ci - base - pol.ci_mult * 0.01).abs() < 1e-12);
+        // Exponential renewal excess is exactly zero.
+        assert_eq!(renewal_excess_waste(&exp, kind, 8000.0), 0.0);
+        assert!(renewal_excess_waste(&weib, kind, 8000.0) > 0.0);
+        // Prediction-aware strategies also pay the false-prediction term.
+        assert!(
+            renewal_excess_waste(&weib, PolicyKind::NoCkpt, 8000.0)
+                > renewal_excess_waste(&weib, kind, 8000.0)
+        );
+    }
+}

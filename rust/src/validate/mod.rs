@@ -1,0 +1,575 @@
+//! Conformance subsystem: model-vs-simulation validation sweeps with
+//! statistical oracles.
+//!
+//! The paper's headline claim is that the analytic waste model is
+//! "nicely corroborated by a comprehensive set of simulations" (§5).  This
+//! module turns that corroboration into an executable, CI-gated artifact:
+//! every registered strategy × fault-law × predictor cell of a campaign
+//! grid becomes a *checked* scenario, not just a simulated one.
+//!
+//! Dataflow (see DESIGN.md §Validation):
+//!
+//! ```text
+//!  Grid × period multipliers ──expand_cells──▶ [ValCell]
+//!    │ per cell (work-stealing scheduler, one TracePool per worker):
+//!    ├─ classify (validate::domain): closed form + validity domain
+//!    │     Inapplicable ⇒ verdict now, no simulation
+//!    ├─ simulate `instances` paired seeds (memoized trace replay)
+//!    │     → Welford waste mean/CI
+//!    └─ verdict: |sim − model| vs the declared tolerance
+//!  [CellReport] ──append──▶ ConformanceStore (resumable JSONL)
+//!            └──summarize──▶ per-strategy table + CONFORMANCE.json
+//! ```
+//!
+//! Cells are classified against each formula's validity domain *before*
+//! comparison, so out-of-domain cells (no closed form, `p = 0`, saturated
+//! first-order values, overlap-dominated windows, …) report as
+//! [`Verdict::Inapplicable`] with a named reason rather than as failures —
+//! the acceptance bar is **zero unexplained failures**, not zero
+//! classifications.
+//!
+//! The sweep runs each cell's instances on the same paired seed streams as
+//! the campaign engine ([`Cell::instance_seed`]) and replays memoized
+//! traces through a per-worker [`TracePool`], so strategy variants and
+//! period multipliers of one scenario share trace generation.
+//!
+//! `ckptwin validate` drives this from the CLI; `tests/conformance.rs`
+//! gates a small deterministic grid in tier-1.
+
+pub mod domain;
+pub mod report;
+pub mod store;
+
+pub use domain::{Inapplicable, TolerancePolicy};
+pub use report::{
+    render_failures, render_table, summarize, write_json, StrategySummary,
+};
+pub use store::{ConformanceRecord, ConformanceStore};
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::campaign::grid::fnv1a64;
+use crate::campaign::{scheduler, Cell, Grid, PredictorKind, TracePool};
+use crate::config::{FaultModel, Scenario};
+use crate::sim::distribution::Law;
+use crate::sim::engine::simulate_from;
+use crate::stats::Welford;
+use crate::strategy::registry;
+
+/// One conformance cell: a campaign [`Cell`] probed at `multiplier ×` the
+/// strategy's analytic period, under an explicit fault-trace model.
+#[derive(Clone, Debug)]
+pub struct ValCell {
+    pub cell: Cell,
+    /// Off-optimal period multiplier (1.0 = at the analytic optimum).
+    pub multiplier: f64,
+    /// Fault-trace model the sweep simulates under.  Conformance defaults
+    /// to [`FaultModel::PlatformRenewal`]: the steady-state regime the
+    /// closed forms assume (the per-processor fresh-start transient is a
+    /// known divergence, classified by `domain::classify`).
+    pub fault_model: FaultModel,
+    /// Stable identity hash (keys the conformance store).
+    pub hash: u64,
+    /// Trace-memo key: the scenario + fault model, minus strategy and
+    /// multiplier — everything that shapes the event trace.
+    pub pool_hash: u64,
+}
+
+fn fault_model_label(fm: FaultModel) -> String {
+    match fm {
+        FaultModel::PlatformRenewal => "platform".to_string(),
+        FaultModel::PerProcessor { n } => format!("perproc{n}"),
+        FaultModel::PerProcessorStationary { n } => format!("stationary{n}"),
+    }
+}
+
+impl ValCell {
+    pub fn new(cell: Cell, multiplier: f64, fault_model: FaultModel) -> ValCell {
+        assert!(multiplier.is_finite() && multiplier > 0.0, "multiplier {multiplier}");
+        let mut vc = ValCell { cell, multiplier, fault_model, hash: 0, pool_hash: 0 };
+        vc.hash = fnv1a64(vc.key().as_bytes());
+        vc.pool_hash = fnv1a64(
+            format!("{};fm={}", vc.cell.scenario_key(), fault_model_label(fault_model))
+                .as_bytes(),
+        );
+        vc
+    }
+
+    /// Canonical, human-greppable identity: the campaign cell key plus the
+    /// conformance axes (fault model, period multiplier).
+    pub fn key(&self) -> String {
+        format!(
+            "{};fm={};m={}",
+            self.cell.key(),
+            fault_model_label(self.fault_model),
+            self.multiplier,
+        )
+    }
+
+    /// The concrete scenario this cell simulates.
+    pub fn scenario(&self) -> Scenario {
+        let mut sc = self.cell.scenario();
+        sc.fault_model = self.fault_model;
+        sc
+    }
+}
+
+/// Expand a campaign grid × period multipliers into conformance cells
+/// (deterministic order: grid expansion order, multipliers innermost),
+/// under the steady-state platform-renewal fault model.
+pub fn expand_cells(grid: &Grid, multipliers: &[f64]) -> Vec<ValCell> {
+    let mut out = Vec::with_capacity(grid.len() * multipliers.len());
+    for cell in grid.expand() {
+        for &m in multipliers {
+            out.push(ValCell::new(cell.clone(), m, FaultModel::PlatformRenewal));
+        }
+    }
+    out
+}
+
+/// The default conformance grid: both predictors, the paper's three fault
+/// laws, two platform sizes and C_p ratios, three window sizes, every
+/// registered strategy except the BestPeriod twins (their period rule is
+/// itself simulation-derived; pass them explicitly to check Eq. (3)/(10)…
+/// at a *searched* period).  `scale = 0.25` keeps ≈ 20 faults per
+/// instance — enough steady state for the asymptotic model, cheap enough
+/// for a full sweep in seconds.
+pub fn default_grid() -> Grid {
+    Grid {
+        procs: vec![1 << 16, 1 << 17],
+        cp_ratios: vec![1.0, 0.1],
+        fault_laws: vec![
+            Law::Exponential,
+            Law::Weibull { shape: 0.7 },
+            Law::Weibull { shape: 0.5 },
+        ],
+        uniform_false_preds: false,
+        predictors: vec![PredictorKind::PaperA, PredictorKind::PaperB],
+        windows: vec![300.0, 600.0, 1200.0],
+        strategies: registry::all_defaults()
+            .into_iter()
+            .filter(|s| !s.name().starts_with("BestPeriod"))
+            .collect(),
+        scale: 0.25,
+    }
+}
+
+/// Default off-optimal period multipliers for [`default_grid`].
+pub const DEFAULT_MULTIPLIERS: [f64; 3] = [0.75, 1.0, 1.5];
+
+/// A cheap deterministic grid for CI smoke runs and the tier-1 gate.
+pub fn smoke_grid() -> Grid {
+    Grid {
+        procs: vec![1 << 16],
+        cp_ratios: vec![1.0, 0.1],
+        fault_laws: vec![Law::Exponential, Law::Weibull { shape: 0.7 }],
+        uniform_false_preds: false,
+        predictors: vec![PredictorKind::PaperA],
+        windows: vec![600.0, 1200.0],
+        strategies: registry::all_defaults()
+            .into_iter()
+            .filter(|s| !s.name().starts_with("BestPeriod"))
+            .collect(),
+        scale: 0.2,
+    }
+}
+
+/// Execution knobs for a conformance sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOptions {
+    /// Random instances per applicable cell (paired seeds, like the
+    /// campaign engine).
+    pub instances: usize,
+    /// Worker threads; 0 = all available cores.
+    pub threads: usize,
+    /// The tolerance policy (see [`domain::TolerancePolicy`]).
+    pub tolerance: TolerancePolicy,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            instances: 100,
+            threads: 0,
+            tolerance: TolerancePolicy::default(),
+        }
+    }
+}
+
+/// The structured verdict of one conformance cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verdict {
+    /// |sim − model| within the declared tolerance.
+    Pass,
+    /// Exceeded the tolerance: a genuine model/simulation disagreement.
+    Fail,
+    /// No meaningful comparison at this cell (named reason).
+    Inapplicable(Inapplicable),
+}
+
+impl Verdict {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Fail => "fail",
+            Verdict::Inapplicable(_) => "inapplicable",
+        }
+    }
+}
+
+/// One verdicted conformance cell.
+#[derive(Clone, Debug)]
+pub struct CellReport {
+    pub hash: u64,
+    pub key: String,
+    /// Strategy display name.
+    pub strategy: String,
+    /// Fault-law label.
+    pub law: String,
+    pub multiplier: f64,
+    /// Regular period probed (NaN when never instantiated).
+    pub tr: f64,
+    /// Simulated instances (0 for inapplicable cells).
+    pub instances: u64,
+    pub sim_mean: f64,
+    pub sim_ci95: f64,
+    /// Closed-form waste at the probed period (NaN when inapplicable).
+    pub model: f64,
+    /// |sim − model| (NaN when inapplicable).
+    pub deviation: f64,
+    /// Declared tolerance (NaN when inapplicable).
+    pub tolerance: f64,
+    pub verdict: Verdict,
+}
+
+impl CellReport {
+    /// Relative deviation |sim − model| / model (NaN when inapplicable).
+    pub fn rel_deviation(&self) -> f64 {
+        self.deviation / self.model
+    }
+
+    /// The persisted form of this report.
+    pub fn record(&self) -> ConformanceRecord {
+        ConformanceRecord {
+            hash: self.hash,
+            key: self.key.clone(),
+            strategy: self.strategy.clone(),
+            law: self.law.clone(),
+            multiplier: self.multiplier,
+            tr: self.tr,
+            instances: self.instances,
+            sim_mean: self.sim_mean,
+            sim_ci95: self.sim_ci95,
+            model: self.model,
+            deviation: self.deviation,
+            tolerance: self.tolerance,
+            verdict: self.verdict.label().to_string(),
+            reason: match self.verdict {
+                Verdict::Inapplicable(r) => r.label().to_string(),
+                _ => String::new(),
+            },
+        }
+    }
+
+    /// Rebuild a report from a stored record (resume path).  `None` when
+    /// the record's verdict/reason vocabulary is unknown (a newer build).
+    pub fn from_record(rec: &ConformanceRecord) -> Option<CellReport> {
+        let verdict = match rec.verdict.as_str() {
+            "pass" => Verdict::Pass,
+            "fail" => Verdict::Fail,
+            "inapplicable" => Verdict::Inapplicable(Inapplicable::parse(&rec.reason)?),
+            _ => return None,
+        };
+        Some(CellReport {
+            hash: rec.hash,
+            key: rec.key.clone(),
+            strategy: rec.strategy.clone(),
+            law: rec.law.clone(),
+            multiplier: rec.multiplier,
+            tr: rec.tr,
+            instances: rec.instances,
+            sim_mean: rec.sim_mean,
+            sim_ci95: rec.sim_ci95,
+            model: rec.model,
+            deviation: rec.deviation,
+            tolerance: rec.tolerance,
+            verdict,
+        })
+    }
+}
+
+/// Verdict one cell: classify, then (when applicable) simulate the paired
+/// instances through the worker's trace pool and compare.
+fn evaluate_cell(vc: &ValCell, opt: &SweepOptions, pool: &mut TracePool) -> CellReport {
+    let sc = vc.scenario();
+    let kind = vc.cell.strategy.kind();
+    let base = CellReport {
+        hash: vc.hash,
+        key: vc.key(),
+        strategy: vc.cell.strategy.to_string(),
+        law: vc.cell.fault_law.label(),
+        multiplier: vc.multiplier,
+        tr: f64::NAN,
+        instances: 0,
+        sim_mean: f64::NAN,
+        sim_ci95: f64::NAN,
+        model: f64::NAN,
+        deviation: f64::NAN,
+        tolerance: f64::NAN,
+        verdict: Verdict::Inapplicable(Inapplicable::NoClosedForm),
+    };
+    // No closed form ⇒ no comparison; skip policy instantiation entirely.
+    // (ExactPred/WindowEndCkpt/QTrust land here.  The BestPeriod twins do
+    // NOT: their *mode* maps to a paper formula, so they instantiate —
+    // a brute-force search, paid per (cell, multiplier) — and are compared
+    // to that formula at the searched period.)
+    if kind.grid_strategy().is_none() {
+        return base;
+    }
+    let pol = vc.cell.strategy.policy(&sc);
+    let tr = pol.tr * vc.multiplier;
+    let model = match domain::classify(&sc, kind, tr, pol.tp, &opt.tolerance) {
+        Err(reason) => {
+            return CellReport { tr, verdict: Verdict::Inapplicable(reason), ..base }
+        }
+        Ok(m) => m,
+    };
+    let pol = crate::strategy::Policy { kind, tr, tp: pol.tp };
+    let mut waste = Welford::new();
+    for i in 0..opt.instances.max(1) {
+        let seed = vc.cell.instance_seed(i as u64);
+        let out =
+            simulate_from(&sc, &pol, 1.0, seed, pool.replay(vc.pool_hash, &sc, seed));
+        waste.push(out.waste());
+    }
+    let deviation = (waste.mean() - model).abs();
+    let tolerance = domain::tolerance(&opt.tolerance, &sc, kind, tr, waste.ci95());
+    CellReport {
+        tr,
+        instances: waste.len() as u64,
+        sim_mean: waste.mean(),
+        sim_ci95: waste.ci95(),
+        model,
+        deviation,
+        tolerance,
+        verdict: if deviation <= tolerance { Verdict::Pass } else { Verdict::Fail },
+        ..base
+    }
+}
+
+/// Is `vc` already satisfactorily verdicted in `store`?  Inapplicable
+/// verdicts never need recomputation; pass/fail records are reusable when
+/// they hold at least the requested instance count.
+pub fn cell_complete(store: &ConformanceStore, vc: &ValCell, instances: usize) -> bool {
+    store.get(vc.hash).is_some_and(|rec| {
+        rec.verdict == "inapplicable" || rec.instances >= instances.max(1) as u64
+    })
+}
+
+/// Execute a conformance sweep on the work-stealing scheduler.
+///
+/// Cells already verdicted in `store` (see [`cell_complete`]) and
+/// duplicate-hash cells are skipped.  Each fresh verdict is appended (and
+/// flushed) to the store the moment it lands, so an interrupted sweep
+/// resumes.  Returns the freshly computed reports in (deduplicated) cell
+/// order plus the number of skipped cells.
+pub fn run_sweep(
+    cells: &[ValCell],
+    opt: &SweepOptions,
+    store: Option<&mut ConformanceStore>,
+) -> Result<(Vec<CellReport>, usize)> {
+    let mut seen = std::collections::BTreeSet::new();
+    let pending: Vec<usize> = (0..cells.len())
+        .filter(|&i| {
+            seen.insert(cells[i].hash)
+                && store
+                    .as_ref()
+                    .map_or(true, |s| !cell_complete(s, &cells[i], opt.instances))
+        })
+        .collect();
+    let skipped = cells.len() - pending.len();
+    if pending.is_empty() {
+        return Ok((Vec::new(), skipped));
+    }
+    let store_mx = store.map(Mutex::new);
+    let append_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let reports = scheduler::run_units_stateful(
+        pending.len(),
+        opt.threads,
+        TracePool::new,
+        |pool: &mut TracePool, u| {
+            let rep = evaluate_cell(&cells[pending[u]], opt, pool);
+            if let Some(mx) = &store_mx {
+                let mut s = mx.lock().expect("conformance store poisoned");
+                if let Err(e) = s.append(&rep.record()) {
+                    let mut slot = append_err.lock().expect("append_err poisoned");
+                    if slot.is_none() {
+                        *slot = Some(
+                            e.context(format!("persisting cell {:016x}", rep.hash)),
+                        );
+                    }
+                }
+            }
+            rep
+        },
+    );
+    if let Some(e) = append_err.into_inner().expect("append_err poisoned") {
+        return Err(e);
+    }
+    Ok((reports, skipped))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cells() -> Vec<ValCell> {
+        let mut g = smoke_grid();
+        g.procs = vec![1 << 16];
+        g.cp_ratios = vec![1.0];
+        g.fault_laws = vec![Law::Exponential];
+        g.windows = vec![600.0];
+        g.strategies = vec![
+            registry::get("RFO").unwrap(),
+            registry::get("NoCkptI").unwrap(),
+            registry::get("ExactPred").unwrap(),
+        ];
+        expand_cells(&g, &[1.0])
+    }
+
+    #[test]
+    fn val_cell_identity_is_stable_and_multiplier_aware() {
+        let g = smoke_grid();
+        let cells = expand_cells(&g, &[0.75, 1.0]);
+        assert_eq!(cells.len(), 2 * g.len());
+        // Multipliers separate hashes but share the trace-pool key.
+        let (a, b) = (&cells[0], &cells[1]);
+        assert_eq!(a.cell.hash, b.cell.hash);
+        assert_ne!(a.hash, b.hash);
+        assert_eq!(a.pool_hash, b.pool_hash);
+        assert!(a.key().ends_with(";fm=platform;m=0.75"), "{}", a.key());
+        // Same cell re-expanded hashes identically.
+        let again = expand_cells(&g, &[0.75, 1.0]);
+        assert_eq!(again[0].hash, cells[0].hash);
+        assert_eq!(again[0].key(), cells[0].key());
+        // The simulated scenario really runs the platform-renewal model.
+        assert_eq!(a.scenario().fault_model, FaultModel::PlatformRenewal);
+    }
+
+    #[test]
+    fn sweep_verdicts_every_cell_with_zero_unexplained_failures() {
+        let cells = tiny_cells();
+        let opt = SweepOptions { instances: 24, threads: 2, ..Default::default() };
+        let (reports, skipped) = run_sweep(&cells, &opt, None).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(reports.len(), cells.len());
+        let mut passes = 0;
+        for r in &reports {
+            match r.verdict {
+                Verdict::Pass => {
+                    passes += 1;
+                    assert!(r.deviation <= r.tolerance);
+                    assert!(r.sim_mean > 0.0 && r.sim_mean < 1.0);
+                    assert!(r.model > 0.0 && r.model < 1.0);
+                    assert_eq!(r.instances, 24);
+                }
+                Verdict::Fail => panic!(
+                    "{}: |sim − model| = {} > tolerance {}",
+                    r.key, r.deviation, r.tolerance
+                ),
+                Verdict::Inapplicable(reason) => {
+                    assert_eq!(r.strategy, "ExactPred", "{}: {reason}", r.key);
+                    assert_eq!(reason, Inapplicable::NoClosedForm);
+                    assert_eq!(r.instances, 0);
+                    assert!(r.model.is_nan());
+                }
+            }
+        }
+        assert_eq!(passes, 2, "RFO and NoCkptI must both verdict Pass");
+    }
+
+    #[test]
+    fn sweep_is_thread_count_deterministic() {
+        let cells = tiny_cells();
+        let opt1 = SweepOptions { instances: 10, threads: 1, ..Default::default() };
+        let opt8 = SweepOptions { instances: 10, threads: 8, ..Default::default() };
+        let (a, _) = run_sweep(&cells, &opt1, None).unwrap();
+        let (b, _) = run_sweep(&cells, &opt8, None).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.hash, y.hash);
+            assert_eq!(x.sim_mean.to_bits(), y.sim_mean.to_bits(), "{}", x.key);
+            assert_eq!(x.verdict, y.verdict);
+        }
+    }
+
+    #[test]
+    fn sweep_resumes_from_store() {
+        let path = std::env::temp_dir().join(format!(
+            "ckptwin-validate-resume-{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let cells = tiny_cells();
+        let opt = SweepOptions { instances: 8, threads: 2, ..Default::default() };
+        {
+            let mut store = ConformanceStore::create(&path).unwrap();
+            let (fresh, skipped) = run_sweep(&cells, &opt, Some(&mut store)).unwrap();
+            assert_eq!(fresh.len(), cells.len());
+            assert_eq!(skipped, 0);
+            assert_eq!(store.len(), cells.len());
+        }
+        // Reopen: everything is already verdicted (including the
+        // inapplicable ExactPred cell, which stores 0 instances).
+        let mut store = ConformanceStore::open(&path).unwrap();
+        let (fresh, skipped) = run_sweep(&cells, &opt, Some(&mut store)).unwrap();
+        assert!(fresh.is_empty());
+        assert_eq!(skipped, cells.len());
+        // Stored records round-trip into reports (bitwise on the floats —
+        // NaN fields must survive the null serialization too).
+        for rec in store.records() {
+            let rep = CellReport::from_record(rec).expect("known vocabulary");
+            let back = rep.record();
+            assert_eq!(back.key, rec.key);
+            assert_eq!(back.verdict, rec.verdict);
+            assert_eq!(back.reason, rec.reason);
+            assert_eq!(back.instances, rec.instances);
+            assert_eq!(back.sim_mean.to_bits(), rec.sim_mean.to_bits());
+            assert_eq!(back.model.to_bits(), rec.model.to_bits());
+            assert_eq!(back.tolerance.to_bits(), rec.tolerance.to_bits());
+        }
+        // A higher instance count re-verdicts the applicable cells only.
+        let more = SweepOptions { instances: 16, ..opt };
+        let (fresh, skipped) = run_sweep(&cells, &more, Some(&mut store)).unwrap();
+        assert_eq!(fresh.len(), 2);
+        assert_eq!(skipped, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn off_optimal_multipliers_also_conform() {
+        let mut g = smoke_grid();
+        g.procs = vec![1 << 16];
+        g.cp_ratios = vec![1.0];
+        g.fault_laws = vec![Law::Exponential];
+        g.windows = vec![600.0];
+        g.strategies = vec![registry::get("RFO").unwrap()];
+        let cells = expand_cells(&g, &[0.6, 1.0, 1.8]);
+        let opt = SweepOptions { instances: 24, threads: 0, ..Default::default() };
+        let (reports, _) = run_sweep(&cells, &opt, None).unwrap();
+        assert_eq!(reports.len(), 3);
+        for r in &reports {
+            assert_eq!(
+                r.verdict,
+                Verdict::Pass,
+                "{}: dev {} vs tol {}",
+                r.key,
+                r.deviation,
+                r.tolerance
+            );
+        }
+        // The probed periods really differ.
+        assert!(reports[0].tr < reports[1].tr && reports[1].tr < reports[2].tr);
+    }
+}

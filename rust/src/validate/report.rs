@@ -1,0 +1,317 @@
+//! Conformance reporting: per-strategy summaries, a paper-style terminal
+//! table, failing-cell detail lines, and the machine-readable
+//! `CONFORMANCE.json` artifact CI uploads.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::jsonio::Value;
+use crate::validate::{CellReport, Verdict};
+
+/// Aggregated conformance of one strategy across a sweep.
+#[derive(Clone, Debug, Default)]
+pub struct StrategySummary {
+    pub strategy: String,
+    pub cells: usize,
+    pub pass: usize,
+    pub fail: usize,
+    pub inapplicable: usize,
+    /// Max / mean |sim − model| over the compared (pass + fail) cells.
+    pub max_deviation: f64,
+    pub mean_deviation: f64,
+    /// Max relative deviation |sim − model| / model over compared cells.
+    pub max_rel_deviation: f64,
+    /// Inapplicability reasons seen, with counts (label → count).
+    pub reasons: BTreeMap<&'static str, usize>,
+}
+
+impl StrategySummary {
+    /// Pass rate over the compared (applicable) cells; NaN when none.
+    pub fn pass_rate(&self) -> f64 {
+        self.pass as f64 / (self.pass + self.fail) as f64
+    }
+}
+
+/// Summarize per strategy, in first-seen order (= registry order for grid
+/// sweeps, since the strategy axis is innermost-but-one).
+pub fn summarize(reports: &[CellReport]) -> Vec<StrategySummary> {
+    let mut order: Vec<String> = Vec::new();
+    let mut by_name: BTreeMap<String, StrategySummary> = BTreeMap::new();
+    for r in reports {
+        let s = by_name.entry(r.strategy.clone()).or_insert_with(|| {
+            order.push(r.strategy.clone());
+            StrategySummary { strategy: r.strategy.clone(), ..Default::default() }
+        });
+        s.cells += 1;
+        match r.verdict {
+            Verdict::Pass | Verdict::Fail => {
+                if matches!(r.verdict, Verdict::Pass) {
+                    s.pass += 1;
+                } else {
+                    s.fail += 1;
+                }
+                // Streaming mean over compared cells.
+                let n = (s.pass + s.fail) as f64;
+                s.mean_deviation += (r.deviation - s.mean_deviation) / n;
+                s.max_deviation = s.max_deviation.max(r.deviation);
+                s.max_rel_deviation = s.max_rel_deviation.max(r.rel_deviation());
+            }
+            Verdict::Inapplicable(reason) => {
+                s.inapplicable += 1;
+                *s.reasons.entry(reason.label()).or_insert(0) += 1;
+            }
+        }
+    }
+    order.into_iter().map(|n| by_name.remove(&n).expect("present")).collect()
+}
+
+/// Paper-style per-strategy conformance table.
+pub fn render_table(summaries: &[StrategySummary]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<22} {:>6} {:>6} {:>6} {:>7} {:>10} {:>10} {:>9}\n",
+        "strategy", "cells", "pass", "fail", "inappl", "max|dev|", "mean|dev|", "pass rate"
+    ));
+    for s in summaries {
+        let compared = s.pass + s.fail;
+        out.push_str(&format!(
+            "{:<22} {:>6} {:>6} {:>6} {:>7} {:>10} {:>10} {:>9}\n",
+            s.strategy,
+            s.cells,
+            s.pass,
+            s.fail,
+            s.inapplicable,
+            if compared > 0 { format!("{:.4}", s.max_deviation) } else { "-".into() },
+            if compared > 0 { format!("{:.4}", s.mean_deviation) } else { "-".into() },
+            if compared > 0 {
+                format!("{:.0}%", 100.0 * s.pass_rate())
+            } else {
+                "-".into()
+            },
+        ));
+    }
+    out
+}
+
+/// Detail lines for every failing cell (empty string when none fail).
+pub fn render_failures(reports: &[CellReport]) -> String {
+    let mut out = String::new();
+    for r in reports {
+        if matches!(r.verdict, Verdict::Fail) {
+            out.push_str(&format!(
+                "FAIL {}: sim {:.4} ±{:.4} vs model {:.4} — |dev| {:.4} > tol {:.4}\n",
+                r.key, r.sim_mean, r.sim_ci95, r.model, r.deviation, r.tolerance
+            ));
+        }
+    }
+    out
+}
+
+fn num_or_null(x: f64) -> Value {
+    if x.is_finite() {
+        Value::Num(x)
+    } else {
+        Value::Null
+    }
+}
+
+/// Build the `CONFORMANCE.json` document.
+pub fn conformance_json(reports: &[CellReport], summaries: &[StrategySummary]) -> Value {
+    let (mut pass, mut fail, mut inapplicable) = (0usize, 0usize, 0usize);
+    for r in reports {
+        match r.verdict {
+            Verdict::Pass => pass += 1,
+            Verdict::Fail => fail += 1,
+            Verdict::Inapplicable(_) => inapplicable += 1,
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".into(), Value::Str("ckptwin-conformance/1".into()));
+    let mut summary = BTreeMap::new();
+    summary.insert("cells".into(), Value::Num(reports.len() as f64));
+    summary.insert("pass".into(), Value::Num(pass as f64));
+    summary.insert("fail".into(), Value::Num(fail as f64));
+    summary.insert("inapplicable".into(), Value::Num(inapplicable as f64));
+    doc.insert("summary".into(), Value::Obj(summary));
+    doc.insert(
+        "strategies".into(),
+        Value::Arr(
+            summaries
+                .iter()
+                .map(|s| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".into(), Value::Str(s.strategy.clone()));
+                    o.insert("cells".into(), Value::Num(s.cells as f64));
+                    o.insert("pass".into(), Value::Num(s.pass as f64));
+                    o.insert("fail".into(), Value::Num(s.fail as f64));
+                    o.insert(
+                        "inapplicable".into(),
+                        Value::Num(s.inapplicable as f64),
+                    );
+                    o.insert("max_deviation".into(), num_or_null(s.max_deviation));
+                    o.insert("mean_deviation".into(), num_or_null(s.mean_deviation));
+                    o.insert(
+                        "max_rel_deviation".into(),
+                        num_or_null(s.max_rel_deviation),
+                    );
+                    o.insert("pass_rate".into(), num_or_null(s.pass_rate()));
+                    let reasons = s
+                        .reasons
+                        .iter()
+                        .map(|(k, v)| ((*k).to_string(), Value::Num(*v as f64)))
+                        .collect();
+                    o.insert("reasons".into(), Value::Obj(reasons));
+                    Value::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    doc.insert(
+        "cells".into(),
+        Value::Arr(
+            reports
+                .iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("key".into(), Value::Str(r.key.clone()));
+                    o.insert("hash".into(), Value::Str(format!("{:016x}", r.hash)));
+                    o.insert("strategy".into(), Value::Str(r.strategy.clone()));
+                    o.insert("law".into(), Value::Str(r.law.clone()));
+                    o.insert("multiplier".into(), Value::Num(r.multiplier));
+                    o.insert("tr".into(), num_or_null(r.tr));
+                    o.insert("instances".into(), Value::Num(r.instances as f64));
+                    o.insert("sim_mean".into(), num_or_null(r.sim_mean));
+                    o.insert("sim_ci95".into(), num_or_null(r.sim_ci95));
+                    o.insert("model".into(), num_or_null(r.model));
+                    o.insert("deviation".into(), num_or_null(r.deviation));
+                    o.insert("tolerance".into(), num_or_null(r.tolerance));
+                    o.insert("verdict".into(), Value::Str(r.verdict.label().into()));
+                    if let Verdict::Inapplicable(reason) = r.verdict {
+                        o.insert("reason".into(), Value::Str(reason.label().into()));
+                    }
+                    Value::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    Value::Obj(doc)
+}
+
+/// Write `CONFORMANCE.json` (creating parent directories); returns the
+/// serialized length in bytes.
+pub fn write_json(
+    path: &Path,
+    reports: &[CellReport],
+    summaries: &[StrategySummary],
+) -> std::io::Result<usize> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let text = crate::jsonio::to_string(&conformance_json(reports, summaries));
+    std::fs::write(path, &text)?;
+    Ok(text.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::validate::Inapplicable;
+
+    fn rep(strategy: &str, verdict: Verdict, dev: f64) -> CellReport {
+        CellReport {
+            hash: 42,
+            key: format!("k-{strategy}-{dev}"),
+            strategy: strategy.into(),
+            law: "exponential".into(),
+            multiplier: 1.0,
+            tr: 8000.0,
+            instances: if matches!(verdict, Verdict::Inapplicable(_)) { 0 } else { 10 },
+            sim_mean: 0.15,
+            sim_ci95: 0.004,
+            model: 0.148,
+            deviation: dev,
+            tolerance: 0.05,
+            verdict,
+        }
+    }
+
+    #[test]
+    fn summarize_groups_and_aggregates() {
+        let reports = vec![
+            rep("RFO", Verdict::Pass, 0.010),
+            rep("RFO", Verdict::Pass, 0.030),
+            rep("RFO", Verdict::Fail, 0.080),
+            rep("QTrust(q=0.5)", Verdict::Inapplicable(Inapplicable::NoClosedForm), f64::NAN),
+        ];
+        let sums = summarize(&reports);
+        assert_eq!(sums.len(), 2);
+        assert_eq!(sums[0].strategy, "RFO");
+        assert_eq!((sums[0].pass, sums[0].fail, sums[0].inapplicable), (2, 1, 0));
+        assert!((sums[0].max_deviation - 0.08).abs() < 1e-12);
+        assert!((sums[0].mean_deviation - 0.04).abs() < 1e-12);
+        assert!((sums[0].pass_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(sums[1].strategy, "QTrust(q=0.5)");
+        assert_eq!(sums[1].inapplicable, 1);
+        assert_eq!(sums[1].reasons.get("no_closed_form"), Some(&1));
+        assert!(sums[1].pass_rate().is_nan());
+    }
+
+    #[test]
+    fn renders_are_well_formed() {
+        let reports = vec![
+            rep("RFO", Verdict::Pass, 0.01),
+            rep("NoCkptI", Verdict::Fail, 0.09),
+        ];
+        let table = render_table(&summarize(&reports));
+        assert!(table.contains("RFO") && table.contains("NoCkptI"));
+        assert!(table.contains("100%"));
+        let fails = render_failures(&reports);
+        assert!(fails.starts_with("FAIL k-NoCkptI"));
+        assert_eq!(render_failures(&reports[..1]), "");
+    }
+
+    #[test]
+    fn json_document_is_valid_and_complete() {
+        let reports = vec![
+            rep("RFO", Verdict::Pass, 0.01),
+            rep("ExactPred", Verdict::Inapplicable(Inapplicable::NoClosedForm), f64::NAN),
+        ];
+        let doc = conformance_json(&reports, &summarize(&reports));
+        let text = crate::jsonio::to_string(&doc);
+        let back = crate::jsonio::parse(&text).expect("valid JSON despite NaN fields");
+        assert_eq!(
+            back.get("summary").unwrap().get("pass").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            back.get("summary").unwrap().get("inapplicable").unwrap().as_usize(),
+            Some(1)
+        );
+        let cells = match back.get("cells").unwrap() {
+            Value::Arr(v) => v,
+            _ => panic!("cells must be an array"),
+        };
+        assert_eq!(cells.len(), 2);
+        assert_eq!(
+            cells[1].get("reason").and_then(Value::as_str),
+            Some("no_closed_form")
+        );
+        assert_eq!(cells[1].get("model"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn write_json_creates_dirs() {
+        let dir = std::env::temp_dir()
+            .join(format!("ckptwin-conf-json-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/CONFORMANCE.json");
+        let reports = vec![rep("RFO", Verdict::Pass, 0.01)];
+        let n = write_json(&path, &reports, &summarize(&reports)).unwrap();
+        assert!(n > 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::jsonio::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

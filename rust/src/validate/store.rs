@@ -1,0 +1,325 @@
+//! Resumable JSONL conformance store: one line per verdicted cell, keyed
+//! by the stable [`crate::validate::ValCell`] hash.
+//!
+//! Same crash-consistency contract as the campaign result store
+//! (`campaign::store`): append + flush per cell, torn final line detected
+//! and repaired on reopen, re-appended hashes are last-wins.  A conformance
+//! sweep interrupted mid-run resumes from its store and re-verdicts only
+//! the missing cells.
+//!
+//! Non-finite numbers (an inapplicable cell has no model value, no
+//! deviation) are serialized as JSON `null` — `NaN` is not JSON — and come
+//! back as `f64::NAN`.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::jsonio::{self, Value};
+
+/// One persisted conformance verdict (one JSONL line).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConformanceRecord {
+    /// Stable conformance-cell hash ([`crate::validate::ValCell::hash`]).
+    pub hash: u64,
+    /// Canonical cell key (provenance; greppable).
+    pub key: String,
+    /// Strategy display name (`StrategyId` canonical form).
+    pub strategy: String,
+    /// Fault-law label.
+    pub law: String,
+    /// Off-optimal period multiplier (1.0 = at the analytic optimum).
+    pub multiplier: f64,
+    /// Regular period probed (NaN when never instantiated).
+    pub tr: f64,
+    /// Simulated instances (0 for inapplicable cells).
+    pub instances: u64,
+    pub sim_mean: f64,
+    pub sim_ci95: f64,
+    /// Closed-form waste at the probed period (NaN when inapplicable).
+    pub model: f64,
+    /// |sim − model| (NaN when inapplicable).
+    pub deviation: f64,
+    /// The declared tolerance for this cell (NaN when inapplicable).
+    pub tolerance: f64,
+    /// `"pass"`, `"fail"`, or `"inapplicable"`.
+    pub verdict: String,
+    /// Inapplicability label (empty for pass/fail).
+    pub reason: String,
+}
+
+fn num_or_null(x: f64) -> Value {
+    if x.is_finite() {
+        Value::Num(x)
+    } else {
+        Value::Null
+    }
+}
+
+impl ConformanceRecord {
+    fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("hash".into(), Value::Str(format!("{:016x}", self.hash)));
+        obj.insert("key".into(), Value::Str(self.key.clone()));
+        obj.insert("strategy".into(), Value::Str(self.strategy.clone()));
+        obj.insert("law".into(), Value::Str(self.law.clone()));
+        obj.insert("multiplier".into(), Value::Num(self.multiplier));
+        obj.insert("tr".into(), num_or_null(self.tr));
+        obj.insert("instances".into(), Value::Num(self.instances as f64));
+        obj.insert("sim_mean".into(), num_or_null(self.sim_mean));
+        obj.insert("sim_ci95".into(), num_or_null(self.sim_ci95));
+        obj.insert("model".into(), num_or_null(self.model));
+        obj.insert("deviation".into(), num_or_null(self.deviation));
+        obj.insert("tolerance".into(), num_or_null(self.tolerance));
+        obj.insert("verdict".into(), Value::Str(self.verdict.clone()));
+        obj.insert("reason".into(), Value::Str(self.reason.clone()));
+        jsonio::to_string(&Value::Obj(obj))
+    }
+
+    fn from_json(line: &str) -> Option<ConformanceRecord> {
+        let v = jsonio::parse(line).ok()?;
+        let opt_num =
+            |k: &str| v.get(k).and_then(Value::as_f64).unwrap_or(f64::NAN);
+        let text = |k: &str| Some(v.get(k)?.as_str()?.to_string());
+        Some(ConformanceRecord {
+            hash: u64::from_str_radix(v.get("hash")?.as_str()?, 16).ok()?,
+            key: text("key")?,
+            strategy: text("strategy")?,
+            law: text("law")?,
+            multiplier: v.get("multiplier")?.as_f64()?,
+            tr: opt_num("tr"),
+            instances: v.get("instances")?.as_f64()? as u64,
+            sim_mean: opt_num("sim_mean"),
+            sim_ci95: opt_num("sim_ci95"),
+            model: opt_num("model"),
+            deviation: opt_num("deviation"),
+            tolerance: opt_num("tolerance"),
+            verdict: text("verdict")?,
+            reason: text("reason")?,
+        })
+    }
+}
+
+/// Append-only JSONL store with an in-memory index by cell hash.
+pub struct ConformanceStore {
+    path: PathBuf,
+    file: File,
+    records: BTreeMap<u64, ConformanceRecord>,
+    /// Unparseable lines skipped on open (a torn tail from an interrupt).
+    pub skipped_lines: usize,
+}
+
+impl ConformanceStore {
+    /// Open for resuming: parse existing records (creating the file if
+    /// missing) and append new ones after them.
+    pub fn open(path: impl AsRef<Path>) -> Result<ConformanceStore> {
+        ConformanceStore::open_inner(path.as_ref(), false)
+    }
+
+    /// Open for a fresh sweep: truncate any existing store.
+    pub fn create(path: impl AsRef<Path>) -> Result<ConformanceStore> {
+        ConformanceStore::open_inner(path.as_ref(), true)
+    }
+
+    fn open_inner(path: &Path, truncate: bool) -> Result<ConformanceStore> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let mut records = BTreeMap::new();
+        let mut skipped_lines = 0;
+        if !truncate && path.exists() {
+            let reader = BufReader::new(
+                File::open(path)
+                    .with_context(|| format!("opening {}", path.display()))?,
+            );
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match ConformanceRecord::from_json(&line) {
+                    Some(rec) => {
+                        records.insert(rec.hash, rec);
+                    }
+                    None => skipped_lines += 1,
+                }
+            }
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(!truncate)
+            .write(true)
+            .truncate(truncate)
+            .open(path)
+            .with_context(|| format!("opening {} for append", path.display()))?;
+        // Repair a torn tail so the next append starts on a fresh line.
+        if !truncate {
+            let len = file.metadata()?.len();
+            if len > 0 {
+                let mut last = [0u8; 1];
+                let mut probe = File::open(path)?;
+                std::io::Seek::seek(&mut probe, std::io::SeekFrom::End(-1))?;
+                std::io::Read::read_exact(&mut probe, &mut last)?;
+                if last[0] != b'\n' {
+                    file.write_all(b"\n")?;
+                    file.flush()?;
+                }
+            }
+        }
+        Ok(ConformanceStore { path: path.to_path_buf(), file, records, skipped_lines })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn contains(&self, hash: u64) -> bool {
+        self.records.contains_key(&hash)
+    }
+
+    pub fn get(&self, hash: u64) -> Option<&ConformanceRecord> {
+        self.records.get(&hash)
+    }
+
+    /// All records, ordered by hash.
+    pub fn records(&self) -> impl Iterator<Item = &ConformanceRecord> {
+        self.records.values()
+    }
+
+    /// Append one verdicted cell and flush it to disk immediately.  A
+    /// record whose hash is already present supersedes the earlier line
+    /// (last-wins, both in memory and on reload).
+    pub fn append(&mut self, rec: &ConformanceRecord) -> Result<()> {
+        let mut line = rec.to_json();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.flush()?;
+        self.records.insert(rec.hash, rec.clone());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "ckptwin-conformance-{tag}-{}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    fn rec(hash: u64, verdict: &str) -> ConformanceRecord {
+        ConformanceRecord {
+            hash,
+            key: format!("cell-{hash}"),
+            strategy: "NoCkptI".into(),
+            law: "exponential".into(),
+            multiplier: 1.0,
+            tr: 8210.0,
+            instances: 40,
+            sim_mean: 0.1312,
+            sim_ci95: 0.0041,
+            model: 0.1278,
+            deviation: 0.0034,
+            tolerance: 0.041,
+            verdict: verdict.into(),
+            reason: String::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_resume() {
+        let path = tmp("rt");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = ConformanceStore::create(&path).unwrap();
+            s.append(&rec(3, "pass")).unwrap();
+            s.append(&rec(u64::MAX - 1, "fail")).unwrap();
+        }
+        let s = ConformanceStore::open(&path).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(3).unwrap(), &rec(3, "pass"));
+        assert_eq!(s.get(u64::MAX - 1).unwrap().verdict, "fail");
+        assert_eq!(s.skipped_lines, 0);
+    }
+
+    #[test]
+    fn non_finite_fields_serialize_as_null_and_read_back_as_nan() {
+        let path = tmp("nan");
+        let _ = std::fs::remove_file(&path);
+        let mut inap = rec(9, "inapplicable");
+        inap.instances = 0;
+        inap.tr = f64::NAN;
+        inap.sim_mean = f64::NAN;
+        inap.sim_ci95 = f64::NAN;
+        inap.model = f64::NAN;
+        inap.deviation = f64::NAN;
+        inap.tolerance = f64::NAN;
+        inap.reason = "no_closed_form".into();
+        {
+            let mut s = ConformanceStore::create(&path).unwrap();
+            s.append(&inap).unwrap();
+        }
+        // The line must be valid JSON (no bare NaN tokens).
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(jsonio::parse(text.trim()).is_ok(), "{text}");
+        assert!(text.contains("\"model\":null"), "{text}");
+        let s = ConformanceStore::open(&path).unwrap();
+        let back = s.get(9).unwrap();
+        assert!(back.model.is_nan() && back.deviation.is_nan());
+        assert_eq!(back.reason, "no_closed_form");
+        assert_eq!(back.instances, 0);
+    }
+
+    #[test]
+    fn torn_tail_is_skipped_and_repaired() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = ConformanceStore::create(&path).unwrap();
+            s.append(&rec(21, "pass")).unwrap();
+        }
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"hash\":\"00");
+        std::fs::write(&path, text).unwrap();
+        let mut s = ConformanceStore::open(&path).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.skipped_lines, 1);
+        s.append(&rec(22, "pass")).unwrap();
+        drop(s);
+        let s = ConformanceStore::open(&path).unwrap();
+        assert!(s.contains(21) && s.contains(22));
+    }
+
+    #[test]
+    fn reappend_supersedes_last_wins() {
+        let path = tmp("supersede");
+        let _ = std::fs::remove_file(&path);
+        let mut s = ConformanceStore::create(&path).unwrap();
+        s.append(&rec(5, "fail")).unwrap();
+        let mut upgraded = rec(5, "pass");
+        upgraded.instances = 100;
+        s.append(&upgraded).unwrap();
+        assert_eq!(s.len(), 1);
+        drop(s);
+        let s = ConformanceStore::open(&path).unwrap();
+        assert_eq!(s.get(5).unwrap().verdict, "pass");
+        assert_eq!(s.get(5).unwrap().instances, 100);
+    }
+}

@@ -1,0 +1,264 @@
+//! Tier-1 conformance gate: a small deterministic model-vs-simulation
+//! sweep (exponential + Weibull, every registered strategy) asserting the
+//! ISSUE's acceptance bar — every applicable (strategy, law, predictor)
+//! cell within its declared tolerance or explicitly classified
+//! `Inapplicable`, zero unexplained failures.
+//!
+//! The CLI runs the same machinery over larger grids (`ckptwin validate`);
+//! this file pins a fixed subset so any model/engine/policy drift breaks
+//! the build, not just the artifact.
+
+use ckptwin::campaign::Grid;
+use ckptwin::strategy::registry;
+use ckptwin::validate::{
+    self, domain, expand_cells, CellReport, ConformanceStore, Inapplicable,
+    SweepOptions, Verdict,
+};
+
+/// The gate's grid: both paper fault-law families, both C_p ratios, two
+/// window sizes, every registered strategy except the BestPeriod twins
+/// (checked separately below — their instantiation is a search).
+fn gate_grid() -> Grid {
+    validate::smoke_grid()
+}
+
+fn run_gate(instances: usize, multipliers: &[f64]) -> Vec<CellReport> {
+    let cells = expand_cells(&gate_grid(), multipliers);
+    let opt = SweepOptions { instances, ..Default::default() };
+    let (reports, skipped) = validate::run_sweep(&cells, &opt, None).unwrap();
+    assert_eq!(skipped, 0);
+    assert_eq!(reports.len(), cells.len());
+    reports
+}
+
+#[test]
+fn every_cell_passes_or_is_classified() {
+    let reports = run_gate(32, &[1.0]);
+    let mut pass = 0;
+    let mut inapplicable = 0;
+    for r in &reports {
+        match r.verdict {
+            Verdict::Pass => {
+                pass += 1;
+                assert!(r.deviation <= r.tolerance, "{}", r.key);
+                assert!(r.model > 0.0 && r.model < 1.0, "{}", r.key);
+                assert!(r.sim_ci95 >= 0.0 && r.sim_mean > 0.0, "{}", r.key);
+            }
+            Verdict::Fail => panic!(
+                "unexplained conformance failure at {}:\n  sim {:.4} ±{:.4} vs \
+                 model {:.4} — |dev| {:.4} > tol {:.4}",
+                r.key, r.sim_mean, r.sim_ci95, r.model, r.deviation, r.tolerance
+            ),
+            Verdict::Inapplicable(reason) => {
+                inapplicable += 1;
+                // Every classification must be one the gate grid explains:
+                // strategies without closed forms, and WithCkptI cells
+                // whose window cannot hold the proactive period.
+                match reason {
+                    Inapplicable::NoClosedForm => assert!(
+                        ["ExactPred", "WindowEndCkpt"].contains(&r.strategy.as_str())
+                            || r.strategy.starts_with("QTrust"),
+                        "{}: unexpected no_closed_form",
+                        r.key
+                    ),
+                    Inapplicable::Model(
+                        ckptwin::model::waste::Inapplicability::ProactivePeriodOutsideWindow,
+                    ) => {
+                        assert_eq!(r.strategy, "WithCkptI", "{}", r.key);
+                    }
+                    other => panic!("{}: unexpected classification {other}", r.key),
+                }
+            }
+        }
+    }
+    // The gate grid has 8 scenario points × 9 strategies.  Applicable:
+    // 3 q=0 strategies + Instant + NoCkptI everywhere (40 cells), and
+    // WithCkptI wherever T_P fits the window (6 of 8).
+    assert_eq!(reports.len(), 72);
+    assert_eq!(pass, 46, "applicable-cell census drifted");
+    assert_eq!(inapplicable, 26);
+    // Both fault laws are actually compared, not classified away.
+    for law in ["exponential", "weibull0.7"] {
+        assert!(
+            reports
+                .iter()
+                .any(|r| r.law == law && matches!(r.verdict, Verdict::Pass)),
+            "no passing {law} cell"
+        );
+    }
+}
+
+#[test]
+fn off_optimal_periods_also_conform() {
+    // Sweep the formulas off their optimum: Eqs. (3)/(10)/(14) are curves
+    // in T_R, not just optimal points.  Restricted to the q=0 strategies +
+    // NoCkptI on the exponential law to keep tier-1 fast.
+    let mut grid = gate_grid();
+    grid.fault_laws = vec![ckptwin::sim::distribution::Law::Exponential];
+    grid.cp_ratios = vec![1.0];
+    grid.windows = vec![600.0];
+    grid.strategies = vec![
+        registry::get("Daly").unwrap(),
+        registry::get("RFO").unwrap(),
+        registry::get("NoCkptI").unwrap(),
+    ];
+    let cells = expand_cells(&grid, &[0.7, 1.0, 1.4]);
+    let opt = SweepOptions { instances: 32, ..Default::default() };
+    let (reports, _) = validate::run_sweep(&cells, &opt, None).unwrap();
+    assert_eq!(reports.len(), 9);
+    for r in &reports {
+        assert_eq!(
+            r.verdict,
+            Verdict::Pass,
+            "{}: sim {:.4} vs model {:.4}, |dev| {:.4} > tol {:.4}",
+            r.key,
+            r.sim_mean,
+            r.model,
+            r.deviation,
+            r.tolerance
+        );
+    }
+    // The multiplier axis really probes distinct periods, and the model
+    // follows the simulation away from the optimum (waste rises off-opt).
+    let daly: Vec<&CellReport> =
+        reports.iter().filter(|r| r.strategy == "Daly").collect();
+    assert_eq!(daly.len(), 3);
+    assert!(daly[0].tr < daly[1].tr && daly[1].tr < daly[2].tr);
+    assert!(daly[0].model > daly[1].model || daly[2].model > daly[1].model);
+}
+
+#[test]
+fn best_period_twin_conforms_at_its_searched_period() {
+    // A BestPeriod twin has no closed form *rule*, but its searched period
+    // is still a point on Eq. (3)'s curve: the comparison must hold there
+    // too (search seeds are disjoint from evaluation seeds, so there is no
+    // selection bias).
+    let mut grid = gate_grid();
+    grid.fault_laws = vec![ckptwin::sim::distribution::Law::Exponential];
+    grid.cp_ratios = vec![1.0];
+    grid.windows = vec![600.0];
+    grid.strategies =
+        vec![registry::StrategyId::parse("BestPeriod-NoPred(seeds=4)").unwrap()];
+    let cells = expand_cells(&grid, &[1.0]);
+    let opt = SweepOptions { instances: 24, ..Default::default() };
+    let (reports, _) = validate::run_sweep(&cells, &opt, None).unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert_eq!(
+        r.verdict,
+        Verdict::Pass,
+        "{}: |dev| {:.4} > tol {:.4}",
+        r.key,
+        r.deviation,
+        r.tolerance
+    );
+    assert!(r.tr > 0.0 && r.tr.is_finite());
+}
+
+#[test]
+fn gate_is_deterministic_across_runs_and_threads() {
+    let a = run_gate(10, &[1.0]);
+    let b = run_gate(10, &[1.0]);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.key, y.key);
+        assert_eq!(x.verdict, y.verdict, "{}", x.key);
+        assert_eq!(x.sim_mean.to_bits(), y.sim_mean.to_bits(), "{}", x.key);
+        assert_eq!(x.deviation.to_bits(), y.deviation.to_bits(), "{}", x.key);
+    }
+    // And single-threaded agrees bit-for-bit with the pool.
+    let cells = expand_cells(&gate_grid(), &[1.0]);
+    let serial = validate::run_sweep(
+        &cells,
+        &SweepOptions { instances: 10, threads: 1, ..Default::default() },
+        None,
+    )
+    .unwrap()
+    .0;
+    for (x, y) in a.iter().zip(&serial) {
+        assert_eq!(x.sim_mean.to_bits(), y.sim_mean.to_bits(), "{}", x.key);
+    }
+}
+
+#[test]
+fn conformance_store_resumes_and_artifact_is_valid_json() {
+    let dir = std::env::temp_dir()
+        .join(format!("ckptwin-conformance-gate-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let store_path = dir.join("conformance.jsonl");
+    let json_path = dir.join("CONFORMANCE.json");
+
+    let mut grid = gate_grid();
+    grid.fault_laws = vec![ckptwin::sim::distribution::Law::Exponential];
+    grid.windows = vec![600.0];
+    let cells = expand_cells(&grid, &[1.0]);
+    let opt = SweepOptions { instances: 8, ..Default::default() };
+    {
+        let mut store = ConformanceStore::create(&store_path).unwrap();
+        let (fresh, _) = validate::run_sweep(&cells, &opt, Some(&mut store)).unwrap();
+        assert_eq!(fresh.len(), cells.len());
+        assert_eq!(store.len(), cells.len());
+    }
+    // Resume: nothing recomputed, reports reconstructable from disk.
+    let mut store = ConformanceStore::open(&store_path).unwrap();
+    let (fresh, skipped) = validate::run_sweep(&cells, &opt, Some(&mut store)).unwrap();
+    assert!(fresh.is_empty());
+    assert_eq!(skipped, cells.len());
+    let reports: Vec<CellReport> = cells
+        .iter()
+        .map(|vc| CellReport::from_record(store.get(vc.hash).unwrap()).unwrap())
+        .collect();
+    // The artifact round-trips through the strict JSON parser.
+    let summaries = validate::summarize(&reports);
+    validate::write_json(&json_path, &reports, &summaries).unwrap();
+    let text = std::fs::read_to_string(&json_path).unwrap();
+    let doc = ckptwin::jsonio::parse(&text).expect("CONFORMANCE.json is valid JSON");
+    assert_eq!(
+        doc.get("schema").and_then(ckptwin::jsonio::Value::as_str),
+        Some("ckptwin-conformance/1")
+    );
+    let total = doc.get("summary").unwrap().get("cells").unwrap().as_usize();
+    assert_eq!(total, Some(cells.len()));
+    assert_eq!(
+        doc.get("summary").unwrap().get("fail").unwrap().as_usize(),
+        Some(0),
+        "gate sweep must have zero failures in the artifact too"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tolerance_policy_has_teeth() {
+    // The oracle is not vacuous: a deliberately wrong "model" value at a
+    // typical cell exceeds the declared tolerance.  (Guards against the
+    // tolerance growing until everything passes.)
+    let grid = gate_grid();
+    let cells = expand_cells(&grid, &[1.0]);
+    let rfo_cell = cells
+        .iter()
+        .find(|c| c.cell.strategy.name() == "RFO" && c.cell.fault_law.label() == "exponential")
+        .unwrap();
+    let sc = rfo_cell.scenario();
+    let pol = rfo_cell.cell.strategy.policy(&sc);
+    let tol_policy = domain::TolerancePolicy::default();
+    let model = domain::classify(
+        &sc,
+        ckptwin::strategy::PolicyKind::IgnorePredictions,
+        pol.tr,
+        pol.tp,
+        &tol_policy,
+    )
+    .expect("RFO/exponential is in-domain");
+    // A 2× model error must NOT fit the tolerance even with a generous CI.
+    let tol = domain::tolerance(
+        &tol_policy,
+        &sc,
+        ckptwin::strategy::PolicyKind::IgnorePredictions,
+        pol.tr,
+        0.01,
+    );
+    assert!(
+        model > 2.0 * tol,
+        "tolerance {tol} is vacuous against model waste {model}"
+    );
+}

@@ -191,6 +191,71 @@ fn prop_closed_form_minimizes_waste() {
     });
 }
 
+/// `tr_extr` formulas are *local minima* of their own waste curves: a
+/// ±ε probe around the returned period never finds a lower waste, over
+/// random valid scenarios.  (The grid tests above check global shape at
+/// fixed points; this checks the calculus at the stationary point itself,
+/// wherever the guards leave it interior.)
+#[test]
+fn prop_tr_extr_is_a_local_minimum() {
+    let mut probed = 0;
+    for_cases(41, 80, |case, rng| {
+        let sc = arb_scenario(rng);
+        let cases: [(f64, fn(&Scenario, f64) -> f64); 2] = [
+            (optimal::tr_extr_instant(&sc), waste::instant),
+            (optimal::tr_extr_window(&sc), waste::nockpt),
+        ];
+        for (tr_opt, f) in cases {
+            // Only interior optima: at the 1.1C clamp the derivative need
+            // not vanish (the guard, not the calculus, chose the point).
+            if tr_opt <= 1.1 * sc.platform.c * 1.0001 {
+                continue;
+            }
+            probed += 1;
+            let w0 = f(&sc, tr_opt);
+            for eps in [1e-2, 1e-3] {
+                let lo = f(&sc, tr_opt * (1.0 - eps));
+                let hi = f(&sc, tr_opt * (1.0 + eps));
+                assert!(
+                    lo >= w0 - 1e-10 && hi >= w0 - 1e-10,
+                    "case {case}: T* = {tr_opt} not a local min \
+                     (f(T*) = {w0}, f(-) = {lo}, f(+) = {hi})\n{sc:?}"
+                );
+            }
+        }
+    });
+    assert!(probed >= 25, "only {probed} interior optima probed");
+}
+
+/// Same for `tp_extr`: a ±ε probe in the proactive period around
+/// `T_P^extr` (at fixed `T_R`) never lowers Eq. (4)'s waste, whenever the
+/// clamp `[C_p, max(C_p, I)]` leaves the optimum interior.
+#[test]
+fn prop_tp_extr_is_a_local_minimum() {
+    let mut probed = 0;
+    for_cases(43, 120, |case, rng| {
+        let sc = arb_scenario(rng);
+        let tp_opt = optimal::tp_extr(&sc);
+        let (cp, i) = (sc.platform.cp, sc.predictor.window);
+        if tp_opt <= cp * 1.0001 || tp_opt >= i.max(cp) * 0.9999 {
+            return; // clamped: boundary, not stationary point
+        }
+        probed += 1;
+        let tr = optimal::tr_extr_window(&sc);
+        let w0 = waste::withckpt(&sc, tr, tp_opt);
+        for eps in [1e-2, 1e-3] {
+            let lo = waste::withckpt(&sc, tr, tp_opt * (1.0 - eps));
+            let hi = waste::withckpt(&sc, tr, tp_opt * (1.0 + eps));
+            assert!(
+                lo >= w0 - 1e-10 && hi >= w0 - 1e-10,
+                "case {case}: T_P* = {tp_opt} not a local min \
+                 (f(T_P*) = {w0}, f(-) = {lo}, f(+) = {hi})\n{sc:?}"
+            );
+        }
+    });
+    assert!(probed >= 20, "only {probed} interior optima probed");
+}
+
 /// Waste is monotone in 1/μ at fixed period (more faults, more waste) for
 /// the analytic model.
 #[test]
