@@ -20,7 +20,7 @@
 //! ckptwin campaign report --out results/qtrust.jsonl
 //! ```
 
-use ckptwin::campaign::{evaluate_grid, CampaignOptions, Grid, PredictorKind};
+use ckptwin::campaign::{evaluate_grid, CampaignOptions, Grid};
 use ckptwin::sim::distribution::Law;
 use ckptwin::strategy::registry::parse_strategy_list;
 
@@ -36,7 +36,7 @@ fn main() {
         cp_ratios: vec![1.0],
         fault_laws: vec![Law::Exponential, Law::Weibull { shape: 0.7 }],
         uniform_false_preds: false,
-        predictors: vec![PredictorKind::PaperA],
+        predictors: vec![ckptwin::predictor::registry::get("a").unwrap()],
         windows: vec![300.0, 900.0],
         strategies: parse_strategy_list(
             "instant,exactpred,windowendckpt,nockpt",
@@ -69,7 +69,7 @@ fn main() {
         cp_ratios: vec![1.0],
         fault_laws: vec![Law::Weibull { shape: 0.7 }],
         uniform_false_preds: false,
-        predictors: vec![PredictorKind::PaperA],
+        predictors: vec![ckptwin::predictor::registry::get("a").unwrap()],
         windows: vec![600.0],
         strategies: parse_strategy_list(
             "rfo,qtrust(q=0.25),qtrust(q=0.5),qtrust(q=0.75),nockpt",

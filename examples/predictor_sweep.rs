@@ -1,10 +1,14 @@
 //! Predictor trade-off study: when is a fault predictor worth trusting?
 //!
-//! Sweeps (i) the literature predictors surveyed in the paper's Table 6 and
-//! (ii) a synthetic recall × precision × window grid, reporting for each the
-//! best prediction-aware heuristic vs RFO — reproducing the paper's §4.2
-//! conclusion that below a platform-MTBF threshold (or past a window size)
-//! predictions become useless or harmful.
+//! Sweeps (i) the literature predictors surveyed in the paper's Table 6,
+//! (ii) a synthetic recall × precision × window grid, and (iii) every
+//! window-placement model in the predictor registry, reporting for each
+//! the best prediction-aware heuristic vs RFO — reproducing the paper's
+//! §4.2 conclusion that below a platform-MTBF threshold (or past a window
+//! size) predictions become useless or harmful, and showing how the
+//! placement model itself moves the verdict (a late-biased window helps —
+//! more of the window's work precedes the fault; jittered placement hurts —
+//! effective recall drops).
 //!
 //! ```bash
 //! cargo run --release --example predictor_sweep -- --procs 262144
@@ -13,8 +17,9 @@
 use ckptwin::cli::Args;
 use ckptwin::config::{PredictorSpec, Scenario};
 use ckptwin::harness::evaluate_heuristics;
-use ckptwin::predictor::table6_presets;
+use ckptwin::predictor::{registry as predictors, table6_presets};
 use ckptwin::sim::distribution::Law;
+use ckptwin::sim::trace::{Event, TraceStream};
 
 fn best_aware(results: &[ckptwin::harness::HeuristicResult]) -> (String, f64) {
     results
@@ -71,7 +76,7 @@ fn main() {
     for r in recalls {
         print!("{r:>8.2}");
         for p in precisions {
-            let spec = PredictorSpec { recall: r, precision: p, window: 600.0 };
+            let spec = PredictorSpec::paper(r, p, 600.0);
             let sc = Scenario::paper(procs, 1.0, spec, law, law);
             let res = evaluate_heuristics(&sc, instances, 0);
             let rfo = res.iter().find(|x| x.name == "RFO").unwrap().waste;
@@ -81,7 +86,51 @@ fn main() {
         println!();
     }
 
-    // --- Part 3: window-size threshold ----------------------------------
+    // --- Part 3: registry window-placement models ------------------------
+    // Every registered predictor model end-to-end: measured effective
+    // (r, p) from a generated trace, plus the RFO-vs-aware verdict.
+    println!("\nregistry predictor models (I = 600 s):");
+    println!(
+        "{:<44} {:>7} {:>7} {:>8} {:>8} {:>8}",
+        "predictor", "r_eff", "p_eff", "RFO", "best", "verdict"
+    );
+    for pid in predictors::all_defaults() {
+        let spec = pid.spec(600.0);
+        let sc = Scenario::paper(procs, 1.0, spec, law, law);
+        // Effective quality, measured on one trace: jitter loses windows,
+        // the others keep their nominal r/p.
+        let horizon = 400.0 * sc.platform.mu;
+        let evs = TraceStream::new(&sc, 1).take_until(horizon);
+        let faults: Vec<f64> = evs
+            .iter()
+            .filter_map(|e| match e {
+                Event::Fault { t, .. } => Some(*t),
+                _ => None,
+            })
+            .collect();
+        let announced: Vec<_> = evs
+            .iter()
+            .filter_map(|e| match e {
+                Event::Prediction(p) => Some(*p),
+                _ => None,
+            })
+            .collect();
+        let (r_eff, p_eff) = ckptwin::predictor::score(&faults, &announced);
+        let res = evaluate_heuristics(&sc, instances, 0);
+        let rfo = res.iter().find(|r| r.name == "RFO").unwrap().waste;
+        let (_, bwaste) = best_aware(&res);
+        println!(
+            "{:<44} {:>7.3} {:>7.3} {:>8.4} {:>8.4} {:>8}",
+            pid.to_string(),
+            r_eff,
+            p_eff,
+            rfo,
+            bwaste,
+            if bwaste < rfo { "trust" } else { "ignore" }
+        );
+    }
+
+    // --- Part 4: window-size threshold ----------------------------------
     println!("\nwindow-size threshold (predictor A): waste vs I");
     println!("{:>8} {:>10} {:>10} {:>10}", "I(s)", "RFO", "best-aware", "verdict");
     for window in [150.0, 300.0, 600.0, 1200.0, 2400.0, 3000.0, 4800.0] {

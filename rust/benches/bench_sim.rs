@@ -18,7 +18,8 @@ use ckptwin::jsonio::Value;
 use ckptwin::model::optimal;
 use ckptwin::sim::distribution::Law;
 use ckptwin::sim::engine::{simulate, simulate_from_capped};
-use ckptwin::sim::trace::{FlatTrace, TraceCache, TraceStream};
+use ckptwin::predictor::registry as registry_predictors;
+use ckptwin::sim::trace::{EventSource, FlatTrace, TraceCache, TraceStream};
 use ckptwin::strategy::best_period::{search_with, SearchConfig};
 use ckptwin::strategy::{registry, Policy, PolicyKind};
 
@@ -183,6 +184,49 @@ fn main() {
         Value::Num(r_race.median()),
     ));
     json.push(("bestperiod_speedup".into(), Value::Num(bp_speedup)));
+
+    // ---- trace generation: paper predictor vs mixedwin model -----------
+    // The PR 5 predictor-model refactor routes every window draw through
+    // the PredictorModel trait object; this tracks its cost on the fixed-
+    // window paper path (target: no regression) and prices the
+    // heterogeneous-window model's extra per-announcement draw.
+    let gen_events = |sc: &Scenario| {
+        let mut ts = FlatTrace::new(sc, 7);
+        let mut acc = 0.0;
+        for _ in 0..20_000 {
+            acc += ts.next_event().time();
+        }
+        acc
+    };
+    let sc_paper = Scenario::paper(
+        1 << 18,
+        1.0,
+        PredictorSpec::paper_a(600.0),
+        Law::Exponential,
+        Law::Exponential,
+    );
+    let mut sc_mixed = sc_paper;
+    sc_mixed.predictor = registry_predictors::get("mixedwin")
+        .expect("registered")
+        .spec(600.0);
+    let r_gen_paper =
+        bench_val("trace_gen/paper_fixed_window", 120.0, || gen_events(&sc_paper));
+    report_throughput(&r_gen_paper, 20_000.0, "event");
+    let r_gen_mixed =
+        bench_val("trace_gen/mixedwin", 120.0, || gen_events(&sc_mixed));
+    report_throughput(&r_gen_mixed, 20_000.0, "event");
+    json.push((
+        "trace_gen_events_per_s_paper".into(),
+        Value::Num(20_000.0 / r_gen_paper.median()),
+    ));
+    json.push((
+        "trace_gen_events_per_s_mixedwin".into(),
+        Value::Num(20_000.0 / r_gen_mixed.median()),
+    ));
+    json.push((
+        "trace_gen_mixedwin_overhead".into(),
+        Value::Num(r_gen_mixed.median() / r_gen_paper.median()),
+    ));
 
     update_bench_json("bench_sim", &json);
 }

@@ -10,7 +10,8 @@
 //! whether a cell is computed in a fresh run, a resume, or a differently
 //! sized grid containing it.
 
-use crate::config::{PredictorSpec, Scenario};
+use crate::config::{PredModel, PredictorSpec, Scenario};
+use crate::predictor::registry::PredictorId;
 use crate::sim::distribution::Law;
 use crate::strategy::{registry, StrategyId};
 
@@ -29,39 +30,6 @@ fn mix64(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^ (z >> 31)
-}
-
-/// Predictor axis values (the paper's two reference predictors).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum PredictorKind {
-    /// Predictor A [Yu et al. 2011]: p = 0.82, r = 0.85.
-    PaperA,
-    /// Predictor B [Zheng et al. 2010]: p = 0.4, r = 0.7.
-    PaperB,
-}
-
-impl PredictorKind {
-    pub fn spec(&self, window: f64) -> PredictorSpec {
-        match self {
-            PredictorKind::PaperA => PredictorSpec::paper_a(window),
-            PredictorKind::PaperB => PredictorSpec::paper_b(window),
-        }
-    }
-
-    pub fn label(&self) -> &'static str {
-        match self {
-            PredictorKind::PaperA => "a",
-            PredictorKind::PaperB => "b",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<PredictorKind> {
-        match s.trim().to_ascii_lowercase().as_str() {
-            "a" => Some(PredictorKind::PaperA),
-            "b" => Some(PredictorKind::PaperB),
-            _ => None,
-        }
-    }
 }
 
 /// One campaign cell: a fully specified paper scenario plus the strategy to
@@ -147,15 +115,23 @@ impl Cell {
 
     /// Canonical identity of the simulated scenario: the fault environment
     /// plus the predictor — everything that shapes the event trace, and
-    /// nothing that doesn't (the strategy only consumes it).
+    /// nothing that doesn't (the strategy only consumes it).  Non-paper
+    /// window-placement models append a `pm=<model>` component; paper
+    /// predictors keep the pre-registry key byte-identical, so existing
+    /// campaign and conformance stores stay resumable
+    /// (`tests/campaign.rs` pins the literal strings).
     pub fn scenario_key(&self) -> String {
-        format!(
+        let mut key = format!(
             "{};p={};r={};I={}",
             self.trace_key(),
             self.predictor.precision,
             self.predictor.recall,
             self.predictor.window,
-        )
+        );
+        if self.predictor.model != PredModel::Paper {
+            key.push_str(&format!(";pm={}", self.predictor.model.label()));
+        }
+        key
     }
 
     /// Canonical, human-greppable identity string of the full cell.  The
@@ -203,7 +179,11 @@ pub struct Grid {
     pub fault_laws: Vec<Law>,
     /// False predictions ~ Uniform (Figures 8–13) instead of the fault law.
     pub uniform_false_preds: bool,
-    pub predictors: Vec<PredictorKind>,
+    /// The predictor axis: registry identifiers
+    /// ([`crate::predictor::registry`]) — the paper's `a`/`b` pair, the
+    /// parameterized `paper(r;p)`, or any registered window-placement
+    /// model (`biased(beta=2)`, `mixedwin(…)`, `jitter(…)`, `classed(…)`).
+    pub predictors: Vec<PredictorId>,
     pub windows: Vec<f64>,
     pub strategies: Vec<StrategyId>,
     pub scale: f64,
@@ -223,7 +203,7 @@ impl Grid {
                 Law::Weibull { shape: 0.5 },
             ],
             uniform_false_preds: false,
-            predictors: vec![PredictorKind::PaperA, PredictorKind::PaperB],
+            predictors: crate::predictor::registry::paper_pair(),
             windows: crate::harness::PAPER_WINDOWS.to_vec(),
             strategies: registry::paper_set(),
             scale: 1.0,
@@ -237,7 +217,8 @@ impl Grid {
             cp_ratios: vec![1.0],
             fault_laws: vec![Law::Exponential, Law::Weibull { shape: 0.7 }],
             uniform_false_preds: false,
-            predictors: vec![PredictorKind::PaperA],
+            predictors: vec![crate::predictor::registry::get("a")
+                .expect("registered")],
             windows: vec![600.0, 1200.0],
             strategies: vec![
                 registry::get("RFO").expect("registered"),
@@ -269,7 +250,7 @@ impl Grid {
             for &window in &self.windows {
                 for &procs in &self.procs {
                     for &cp_ratio in &self.cp_ratios {
-                        for &pred in &self.predictors {
+                        for pred in &self.predictors {
                             for strategy in &self.strategies {
                                 cells.push(Cell::new(
                                     procs,
@@ -381,7 +362,7 @@ mod tests {
             1.0,
             Law::Weibull { shape: 0.7 },
             Law::Weibull { shape: 0.7 },
-            PredictorKind::PaperA.spec(300.0),
+            crate::predictor::registry::get("a").unwrap().spec(300.0),
             registry::get("Daly").unwrap(),
             1.0,
         );
@@ -390,7 +371,7 @@ mod tests {
             1.0,
             Law::Weibull { shape: 0.7 },
             Law::Weibull { shape: 0.7 },
-            PredictorKind::PaperB.spec(1200.0),
+            crate::predictor::registry::get("b").unwrap().spec(1200.0),
             registry::get("NoCkptI").unwrap(),
             1.0,
         );
@@ -424,8 +405,42 @@ mod tests {
             registry::get("WithCkptI").unwrap()
         );
         assert!("nope".parse::<StrategyId>().is_err());
-        assert_eq!(PredictorKind::parse("A"), Some(PredictorKind::PaperA));
-        assert_eq!(PredictorKind::parse("x"), None);
+        assert_eq!(
+            "A".parse::<PredictorId>().unwrap(),
+            crate::predictor::registry::get("a").unwrap()
+        );
+        assert!("x".parse::<PredictorId>().is_err());
+    }
+
+    #[test]
+    fn non_paper_predictor_models_separate_keys_but_share_fault_traces() {
+        let mk = |spec: PredictorSpec| {
+            Cell::new(
+                1 << 16,
+                1.0,
+                Law::Exponential,
+                Law::Exponential,
+                spec,
+                registry::get("NoCkptI").unwrap(),
+                1.0,
+            )
+        };
+        let paper = mk(PredictorSpec::paper_a(600.0));
+        let biased = mk(PredictorId::parse("biased(beta=2)").unwrap().spec(600.0));
+        // The fault environment is predictor-independent: paired traces.
+        assert_eq!(paper.trace_hash, biased.trace_hash);
+        assert_eq!(paper.instance_seed(4), biased.instance_seed(4));
+        // But the event trace (and the store identity) differ: the model
+        // label lands in the scenario key.
+        assert_ne!(paper.scenario_hash, biased.scenario_hash);
+        assert_ne!(paper.hash, biased.hash);
+        assert!(
+            biased.scenario_key().ends_with(";pm=biased(beta=2)"),
+            "{}",
+            biased.scenario_key()
+        );
+        // Paper cells carry NO pm component: pre-registry keys unchanged.
+        assert!(!paper.key().contains("pm="), "{}", paper.key());
     }
 
     #[test]
@@ -438,7 +453,7 @@ mod tests {
                 1.0,
                 Law::Exponential,
                 Law::Exponential,
-                PredictorKind::PaperA.spec(600.0),
+                PredictorSpec::paper_a(600.0),
                 StrategyId::parse(&format!("qtrust(q={q})")).unwrap(),
                 1.0,
             )

@@ -36,7 +36,8 @@ pub mod pool;
 pub mod scheduler;
 pub mod store;
 
-pub use grid::{Cell, Grid, PredictorKind};
+pub use crate::predictor::registry::PredictorId;
+pub use grid::{Cell, Grid};
 pub use pool::TracePool;
 pub use store::{CellRecord, Store};
 

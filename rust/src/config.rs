@@ -39,26 +39,153 @@ impl Platform {
     }
 }
 
-/// Fault-predictor characteristics (§2.2).
+/// Window-placement semantics of a predictor — the *model* half of the
+/// predictor axis (the numeric half is [`PredictorSpec`]'s r/p/I).
+///
+/// The paper's §2.2 predictor announces fixed-length windows with the
+/// fault uniform inside ([`PredModel::Paper`]); its companion surveys
+/// (arXiv:1207.6936, arXiv:1302.3752) describe real predictors whose
+/// windows vary in size and whose placement is anything but uniform.
+/// Each variant dispatches to a [`crate::predictor::model::PredictorModel`]
+/// implementation (the behaviour: how windows are drawn per announcement),
+/// mirroring how [`crate::strategy::PolicyKind`] dispatches to
+/// `PolicyLogic` — and, like there, the *open* axis is the registry
+/// ([`crate::predictor::registry`]): adding a model means a trait impl, a
+/// variant here, and one registry row.
+///
+/// The enum itself carries the closed-form-facing properties (E_I^f,
+/// window bounds, placement slack), so `model::waste` / `model::optimal`
+/// never need the boxed behaviour object.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PredModel {
+    /// The paper's §2.2 predictor: fixed window length I, fault placed
+    /// uniformly in-window (E_I^f = I/2), exact lead time C_p.
+    Paper,
+    /// Non-uniform in-window placement: the fault's position in the window
+    /// is `I · U^(1/β)` (density `β x^(β−1)/I^β`), so E_I^f = I·β/(β+1).
+    /// β = 1 is uniform; β > 1 biases the fault late in the window, β < 1
+    /// early.  The closed forms stay valid with the per-model E_I^f.
+    Biased { beta: f64 },
+    /// Two-class heterogeneous window sizes: each announcement (true or
+    /// false) uses window length `i1` with probability `w`, else `i2` —
+    /// the fixed-I assumption of Eqs. (4)/(10)/(14) does not hold
+    /// (classified `non_uniform_window` by `validate::domain`).  The
+    /// spec's `window` field keeps the grid-axis value for store keys; the
+    /// drawn windows use `i1`/`i2` only.
+    MixedWindow { i1: f64, i2: f64, w: f64 },
+    /// Noisy window placement: the announced window is shifted by
+    /// Gaussian noise `σ·Z` (clamped to ±3σ so trace look-ahead stays
+    /// bounded).  The lead time C_p stays exact, but the fault can fall
+    /// outside its announced window — effective recall drops below r, so
+    /// the closed forms (which assume nominal r) do not apply.
+    Jitter { sigma: f64 },
+    /// Per-announcement confidence classes: announcements come from a
+    /// high-precision class (probability `frac` of all announcements,
+    /// precision `p_hi`) or a low one (`p_lo`), with overall precision
+    /// `frac·p_hi + (1−frac)·p_lo`.  Low-class announcements carry trust
+    /// weight `p_lo/p_hi`, which scales the §3.1 trust probability q —
+    /// pairing naturally with the `QTrust` policy (confidence-weighted
+    /// randomized trust).
+    Classed { p_hi: f64, p_lo: f64, frac: f64 },
+}
+
+impl PredModel {
+    /// Canonical label, appended to campaign/conformance store keys for
+    /// non-paper models (paper cells keep their pre-registry keys
+    /// byte-identical — see [`crate::campaign::Cell::scenario_key`]).
+    pub fn label(&self) -> String {
+        match self {
+            PredModel::Paper => "paper".to_string(),
+            PredModel::Biased { beta } => format!("biased(beta={beta})"),
+            PredModel::MixedWindow { i1, i2, w } => {
+                format!("mixedwin(i1={i1};i2={i2};w={w})")
+            }
+            PredModel::Jitter { sigma } => format!("jitter(sigma={sigma})"),
+            PredModel::Classed { p_hi, p_lo, frac } => {
+                format!("classed(p_hi={p_hi};p_lo={p_lo};frac={frac})")
+            }
+        }
+    }
+}
+
+impl fmt::Display for PredModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Fault-predictor characteristics (§2.2): recall r, precision p, window
+/// length I, and the window-placement [`PredModel`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PredictorSpec {
     /// Recall r: fraction of faults that are predicted.
     pub recall: f64,
     /// Precision p: fraction of predictions that are correct.
     pub precision: f64,
-    /// Prediction-window length I (s).
+    /// Prediction-window length I (s).  [`PredModel::MixedWindow`] draws
+    /// its own sizes and uses this only as the grid-axis label.
     pub window: f64,
+    /// Window-placement semantics (see [`PredModel`]).
+    pub model: PredModel,
 }
 
 impl PredictorSpec {
     /// Predictor A [Yu et al. 2011]: p = 0.82, r = 0.85.
     pub fn paper_a(window: f64) -> Self {
-        PredictorSpec { recall: 0.85, precision: 0.82, window }
+        PredictorSpec {
+            recall: 0.85,
+            precision: 0.82,
+            window,
+            model: PredModel::Paper,
+        }
     }
 
     /// Predictor B [Zheng et al. 2010]: p = 0.4, r = 0.7.
     pub fn paper_b(window: f64) -> Self {
-        PredictorSpec { recall: 0.7, precision: 0.4, window }
+        PredictorSpec {
+            recall: 0.7,
+            precision: 0.4,
+            window,
+            model: PredModel::Paper,
+        }
+    }
+
+    /// The paper's uniform/fixed-I predictor with explicit r/p.
+    pub fn paper(recall: f64, precision: f64, window: f64) -> Self {
+        PredictorSpec { recall, precision, window, model: PredModel::Paper }
+    }
+
+    /// Expected fault position within the window, E_I^f — the quantity the
+    /// closed forms (Eqs. 4/10/14, `T_P^extr`, `T_R^extr`) consume.  Model
+    /// dispatched: the paper's I/2 is just the uniform-placement case.
+    pub fn e_if(&self) -> f64 {
+        match self.model {
+            PredModel::Paper
+            | PredModel::Jitter { .. }
+            | PredModel::Classed { .. } => self.window / 2.0,
+            PredModel::Biased { beta } => self.window * beta / (beta + 1.0),
+            PredModel::MixedWindow { i1, i2, w } => {
+                (w * i1 + (1.0 - w) * i2) / 2.0
+            }
+        }
+    }
+
+    /// The longest window this predictor can announce (trace look-ahead).
+    pub fn max_window(&self) -> f64 {
+        match self.model {
+            PredModel::MixedWindow { i1, i2, .. } => i1.max(i2),
+            _ => self.window,
+        }
+    }
+
+    /// Largest backward shift of a window start relative to its
+    /// uniform-placement position (the trace generators widen their
+    /// look-ahead by this; nonzero only for [`PredModel::Jitter`]).
+    pub fn placement_slack(&self) -> f64 {
+        match self.model {
+            PredModel::Jitter { sigma } => 3.0 * sigma,
+            _ => 0.0,
+        }
     }
 
     /// Mean time between predicted events μ_P = pμ / r (§2.3).
@@ -146,11 +273,11 @@ impl Scenario {
         }
     }
 
-    /// Expected fault position within the window, E_I^f.  Fault positions
-    /// are drawn uniformly over the window in the trace generator, so this
-    /// is I/2 (the paper's default assumption).
+    /// Expected fault position within the window, E_I^f — delegates to the
+    /// predictor model ([`PredictorSpec::e_if`]; the paper's uniform
+    /// placement gives I/2, other models expose their own value).
     pub fn e_if(&self) -> f64 {
-        self.predictor.window / 2.0
+        self.predictor.e_if()
     }
 }
 
@@ -239,6 +366,7 @@ impl RawConfig {
 /// recall = 0.85
 /// precision = 0.82
 /// window = 1200.0
+/// model = "biased(beta=2)"  # optional placement model; default "paper"
 ///
 /// [laws]
 /// fault = "weibull0.7"  # exponential | weibullK | uniform
@@ -276,16 +404,56 @@ pub fn scenario_from_str(text: &str) -> Result<Scenario, ConfigError> {
             return Err(ConfigError("platform.job_size required when mu given".into()))
         }
     };
-    let predictor = PredictorSpec {
-        recall: raw
-            .get_f64("predictor", "recall")?
-            .ok_or_else(|| ConfigError("predictor.recall required".into()))?,
-        precision: raw
-            .get_f64("predictor", "precision")?
-            .ok_or_else(|| ConfigError("predictor.precision required".into()))?,
-        window: raw
-            .get_f64("predictor", "window")?
-            .ok_or_else(|| ConfigError("predictor.window required".into()))?,
+    let recall = raw
+        .get_f64("predictor", "recall")?
+        .ok_or_else(|| ConfigError("predictor.recall required".into()))?;
+    let precision = raw
+        .get_f64("predictor", "precision")?
+        .ok_or_else(|| ConfigError("predictor.precision required".into()))?;
+    let window = raw
+        .get_f64("predictor", "window")?
+        .ok_or_else(|| ConfigError("predictor.window required".into()))?;
+    // Optional window-placement model, named like a registry predictor
+    // (`model = "biased(beta=2)"`).  The explicit recall/precision keys
+    // are the only source of r/p in a config file: an r/p written inside
+    // the model string is rejected (two places stating the same number is
+    // a contradiction waiting to happen), and rows that pin their own
+    // values (`a`/`b`) or imply one (`classed`'s precision is its class
+    // mix) must agree with the keys — silently simulating different
+    // numbers than the file states would be worse than an error.
+    let predictor = match raw.get("predictor", "model") {
+        None => PredictorSpec { recall, precision, window, model: PredModel::Paper },
+        Some(s) => {
+            let (mut id, explicit) =
+                crate::predictor::registry::PredictorId::parse_with_explicit(s)
+                    .map_err(|e| ConfigError(format!("predictor.model: {e}")))?;
+            if explicit.iter().any(|k| *k == "r" || *k == "p") {
+                return Err(ConfigError(format!(
+                    "predictor.model '{s}': set recall/precision via the \
+                     explicit keys, not inside the model string"
+                )));
+            }
+            // Thread the file keys into the row's r/p parameters.
+            for (key, file_val) in [("r", recall), ("p", precision)] {
+                if id.has_param(key) {
+                    id = id
+                        .with_param(key, file_val)
+                        .map_err(|e| ConfigError(format!("predictor.model: {e}")))?;
+                }
+            }
+            let spec = id.spec(window);
+            if (spec.recall - recall).abs() > 1e-9
+                || (spec.precision - precision).abs() > 1e-9
+            {
+                return Err(ConfigError(format!(
+                    "predictor.model '{s}' implies recall {} / precision {}, \
+                     but the file sets recall {recall} / precision {precision} \
+                     — make them agree (classed precision is frac*p_hi + (1-frac)*p_lo)",
+                    spec.recall, spec.precision,
+                )));
+            }
+            spec
+        }
     };
     let fault_law = raw
         .get("laws", "fault")
@@ -385,5 +553,115 @@ false_pred = "uniform"
         assert!(scenario_from_str("[platform]\nc = x\n").is_err());
         assert!(scenario_from_str("key_without_section\n").is_err());
         assert!(scenario_from_str("[predictor]\nrecall = 0.5\n").is_err());
+    }
+
+    #[test]
+    fn e_if_dispatches_on_the_predictor_model() {
+        let mut spec = PredictorSpec::paper_a(600.0);
+        assert_eq!(spec.e_if(), 300.0);
+        assert_eq!(spec.max_window(), 600.0);
+        assert_eq!(spec.placement_slack(), 0.0);
+        // β = 2 biases faults late: E = 2I/3.
+        spec.model = PredModel::Biased { beta: 2.0 };
+        assert!((spec.e_if() - 400.0).abs() < 1e-12);
+        // β = 1 recovers the uniform I/2.
+        spec.model = PredModel::Biased { beta: 1.0 };
+        assert!((spec.e_if() - 300.0).abs() < 1e-12);
+        spec.model = PredModel::MixedWindow { i1: 300.0, i2: 1200.0, w: 0.5 };
+        assert_eq!(spec.e_if(), 375.0); // (0.5·300 + 0.5·1200)/2
+        assert_eq!(spec.max_window(), 1200.0);
+        spec.model = PredModel::Jitter { sigma: 100.0 };
+        assert_eq!(spec.e_if(), 300.0);
+        assert_eq!(spec.placement_slack(), 300.0);
+        // The scenario delegates to the spec.
+        let mut sc = Scenario::paper(
+            1 << 16,
+            1.0,
+            PredictorSpec::paper_a(600.0),
+            Law::Exponential,
+            Law::Exponential,
+        );
+        sc.predictor.model = PredModel::Biased { beta: 3.0 };
+        assert!((sc.e_if() - 450.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_labels_are_stable_store_identities() {
+        assert_eq!(PredModel::Paper.label(), "paper");
+        assert_eq!(PredModel::Biased { beta: 2.0 }.label(), "biased(beta=2)");
+        assert_eq!(
+            PredModel::MixedWindow { i1: 300.0, i2: 1200.0, w: 0.5 }.label(),
+            "mixedwin(i1=300;i2=1200;w=0.5)"
+        );
+        assert_eq!(
+            PredModel::Jitter { sigma: 120.0 }.to_string(),
+            "jitter(sigma=120)"
+        );
+        assert_eq!(
+            PredModel::Classed { p_hi: 0.95, p_lo: 0.6, frac: 0.5 }.label(),
+            "classed(p_hi=0.95;p_lo=0.6;frac=0.5)"
+        );
+    }
+
+    #[test]
+    fn config_file_predictor_model_key() {
+        let text = r#"
+[platform]
+procs = 65536
+
+[predictor]
+recall = 0.7
+precision = 0.4
+window = 900
+model = "biased(beta=2)"
+"#;
+        let s = scenario_from_str(text).unwrap();
+        assert_eq!(s.predictor.model, PredModel::Biased { beta: 2.0 });
+        assert_eq!(s.predictor.recall, 0.7);
+        assert_eq!(s.predictor.precision, 0.4);
+        assert!(scenario_from_str(
+            "[platform]\nprocs = 65536\n[predictor]\nrecall = 0.7\n\
+             precision = 0.4\nwindow = 900\nmodel = \"frob\"\n"
+        )
+        .is_err());
+        // Rows that pin or imply r/p must agree with the explicit keys:
+        // predictor "a" is r=0.85/p=0.82, and classed's precision is its
+        // class mix — contradictions are errors, not silent overrides.
+        assert!(scenario_from_str(
+            "[platform]\nprocs = 65536\n[predictor]\nrecall = 0.7\n\
+             precision = 0.4\nwindow = 900\nmodel = \"a\"\n"
+        )
+        .is_err());
+        // An r/p written inside the model string is rejected outright —
+        // the explicit keys are the only source, so the file can never
+        // state two different numbers for one quantity (even when they
+        // happen to agree, or to equal the registry default).
+        for model in ["biased(beta=2;r=0.5)", "biased(beta=2;r=0.85)", "paper(p=0.4)"] {
+            assert!(
+                scenario_from_str(&format!(
+                    "[platform]\nprocs = 65536\n[predictor]\nrecall = 0.5\n\
+                     precision = 0.4\nwindow = 900\nmodel = \"{model}\"\n"
+                ))
+                .is_err(),
+                "{model}"
+            );
+        }
+        assert!(scenario_from_str(
+            "[platform]\nprocs = 65536\n[predictor]\nrecall = 0.85\n\
+             precision = 0.9\nwindow = 900\n\
+             model = \"classed(p_hi=0.95;p_lo=0.6;frac=0.5)\"\n"
+        )
+        .is_err());
+        // …and the implied classed precision parses cleanly.
+        let s = scenario_from_str(
+            "[platform]\nprocs = 65536\n[predictor]\nrecall = 0.85\n\
+             precision = 0.775\nwindow = 900\n\
+             model = \"classed(p_hi=0.95;p_lo=0.6;frac=0.5)\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            s.predictor.model,
+            PredModel::Classed { p_hi: 0.95, p_lo: 0.6, frac: 0.5 }
+        );
     }
 }

@@ -388,11 +388,7 @@ mod tests {
     fn config(tag: &str, mu: f64, kind: PolicyKind) -> CoordinatorConfig {
         let scenario = Scenario {
             platform: Platform { mu, c: 120.0, cp: 60.0, d: 30.0, r: 60.0 },
-            predictor: PredictorSpec {
-                recall: 0.85,
-                precision: 0.82,
-                window: 240.0,
-            },
+            predictor: PredictorSpec::paper(0.85, 0.82, 240.0),
             fault_law: Law::Exponential,
             false_pred_law: Law::Exponential,
             fault_model: FaultModel::PlatformRenewal,

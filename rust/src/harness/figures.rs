@@ -11,7 +11,7 @@
 //! is a 3 (distribution) × 5 (window size) panel over the 4 platform sizes.
 //! Every runner returns its CSV rows and writes `results/figN.csv`.
 
-use crate::campaign::{self, CampaignOptions, CellOutcome, Grid, PredictorKind};
+use crate::campaign::{self, CampaignOptions, CellOutcome, Grid, PredictorId};
 use crate::config::{PredictorSpec, Scenario};
 use crate::sim::distribution::Law;
 use crate::strategy::registry;
@@ -66,6 +66,12 @@ fn predictor(a: bool, window: f64) -> PredictorSpec {
     } else {
         PredictorSpec::paper_b(window)
     }
+}
+
+/// The registry identifier of a paper predictor ("a" or "b").
+fn predictor_id(a: bool) -> PredictorId {
+    crate::predictor::registry::get(if a { "a" } else { "b" })
+        .expect("paper predictors are registered")
 }
 
 /// CSV header shared by the waste-vs-N and waste-vs-I figures.
@@ -172,11 +178,7 @@ pub fn run_waste_vs_n(
         cp_ratios: vec![spec.cp_ratio],
         fault_laws: PAPER_LAWS.to_vec(),
         uniform_false_preds: spec.uniform_false_preds,
-        predictors: vec![if spec.predictor_a {
-            PredictorKind::PaperA
-        } else {
-            PredictorKind::PaperB
-        }],
+        predictors: vec![predictor_id(spec.predictor_a)],
         windows: PAPER_WINDOWS.to_vec(),
         strategies: registry::paper_set(),
         scale: 1.0,
@@ -310,11 +312,7 @@ pub fn run_waste_vs_i(
         cp_ratios: vec![1.0],
         fault_laws: PAPER_LAWS.to_vec(),
         uniform_false_preds: false,
-        predictors: vec![if spec.predictor_a {
-            PredictorKind::PaperA
-        } else {
-            PredictorKind::PaperB
-        }],
+        predictors: vec![predictor_id(spec.predictor_a)],
         windows: I_SWEEP.to_vec(),
         strategies: registry::paper_set(),
         scale: 1.0,

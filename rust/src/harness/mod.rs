@@ -247,7 +247,7 @@ mod tests {
     fn small_scenario() -> Scenario {
         Scenario {
             platform: Platform { mu: 30_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
-            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            predictor: PredictorSpec::paper(0.85, 0.82, 600.0),
             fault_law: Law::Exponential,
             false_pred_law: Law::Exponential,
             fault_model: FaultModel::PlatformRenewal,

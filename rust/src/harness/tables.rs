@@ -6,7 +6,8 @@
 //! {NoCkptI, WithCkptI, Instant} for predictor A (p=.82, r=.85) and
 //! predictor B (p=.4, r=.7).
 
-use crate::campaign::{self, CampaignOptions, Cell, PredictorKind};
+use crate::campaign::{self, CampaignOptions, Cell};
+use crate::config::PredictorSpec;
 use crate::sim::distribution::Law;
 use crate::strategy::{registry, StrategyId};
 use crate::util::SECONDS_PER_DAY;
@@ -72,18 +73,18 @@ pub fn run_table(id: u8, shape: f64, instances: usize) -> std::io::Result<Table>
     for &window in &TABLE_WINDOWS {
         for &procs in &TABLE_PROCS {
             for (_, strat, pred) in &rows {
-                let kind = match pred {
-                    Some(false) => PredictorKind::PaperB,
+                let spec = match pred {
+                    Some(false) => PredictorSpec::paper_b(window),
                     // Prediction-ignoring rows: predictor is irrelevant to
                     // the policy; keep A's event stream for the trace.
-                    Some(true) | None => PredictorKind::PaperA,
+                    Some(true) | None => PredictorSpec::paper_a(window),
                 };
                 campaign_cells.push(Cell::new(
                     procs,
                     1.0,
                     law,
                     law,
-                    kind.spec(window),
+                    spec,
                     strat.clone(),
                     1.0,
                 ));

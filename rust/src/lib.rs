@@ -39,6 +39,7 @@ pub mod strategy;
 pub mod util;
 pub mod validate;
 
-pub use config::{Platform, PredictorSpec, Scenario};
+pub use config::{Platform, PredModel, PredictorSpec, Scenario};
+pub use predictor::PredictorId;
 pub use sim::engine::{simulate, SimOutcome};
 pub use strategy::{Policy, PolicyKind, StrategyId};

@@ -30,6 +30,10 @@
 //!                   parameters); any registered name — including the
 //!                   parameterized `qtrust(q=…)` and the BestPeriod
 //!                   twins — is valid wherever a strategy is named
+//! * `predictors`  — list the predictor registry; any registered name —
+//!                   the paper's `a`/`b` or a parameterized model like
+//!                   `biased(beta=2)` — is valid wherever a predictor is
+//!                   named (`--predictor`, `--predictors`, config files)
 //!
 //! Run `ckptwin help` for per-command options.
 
@@ -49,7 +53,8 @@ ckptwin — Checkpointing strategies with prediction windows (2013), full repro
 USAGE: ckptwin <command> [options]
 
 COMMANDS
-  simulate     --procs 65536 --cp-ratio 1.0 --predictor a|b --window 600
+  simulate     --procs 65536 --cp-ratio 1.0 --predictor a|b|biased(beta=2)|...
+               --window 600
                --law exponential|weibull0.7|weibull0.5 [--fp-law uniform]
                [--instances 100] [--best-period-seeds 0]
   analytic     same scenario options; prints Eqs. 3/4/10/14 optima
@@ -73,7 +78,7 @@ COMMANDS
                [--block N] [--scale F] [--uniform-fp]
                [--procs 65536,131072,...] [--cp-ratios 1.0,0.1]
                [--laws exponential,weibull0.7,lognormal1.2]
-               [--predictors a,b] [--windows 300,600,...]
+               [--predictors a,b,biased(beta=2),...] [--windows 300,600,...]
                [--strategies daly,rfo,nockpt,exactpred,qtrust(q=0.5),...]
                run executes the grid and streams per-cell JSONL results;
                resume skips cells already in the store; report prints it
@@ -90,27 +95,38 @@ COMMANDS
                --cp-ratios, --scale)
   strategies   list the strategy registry: names, aliases, parameters
                (any registered name is valid wherever a strategy is named)
+  predictors   list the predictor registry: names, aliases, parameters
+               (any registered name is valid wherever a predictor is
+               named: --predictor, --predictors, [predictor] model in
+               config files; e.g. a, b, paper(r=0.9;p=0.7),
+               biased(beta=2), mixedwin(i1=300;i2=1200;w=0.5),
+               jitter(sigma=120), classed(p_hi=0.95;p_lo=0.6;frac=0.5))
   help         this text
 ";
 
-fn scenario_from_args(args: &Args) -> Scenario {
+fn scenario_from_args(args: &Args) -> Result<Scenario> {
     let procs: u64 = args.get_or("procs", 1 << 16);
     let cp_ratio: f64 = args.get_or("cp-ratio", 1.0);
     let window: f64 = args.get_or("window", 600.0);
-    let predictor = match args.get_str("predictor").unwrap_or("a") {
-        "b" => PredictorSpec::paper_b(window),
-        _ => PredictorSpec::paper_a(window),
-    };
+    // Any registry predictor is valid: a|b, or a parameterized model like
+    // biased(beta=2).  A typo or out-of-range parameter is an error —
+    // silently falling back to predictor A would make a sweep over model
+    // parameters report identical predictor-A numbers without warning.
+    let predictor = ckptwin::predictor::registry::PredictorId::parse(
+        args.get_str("predictor").unwrap_or("a"),
+    )
+    .map_err(|e| anyhow!(e))?
+    .spec(window);
     let law = args
         .get_str("law")
         .and_then(Law::parse)
         .unwrap_or(Law::Exponential);
     let fp_law = args.get_str("fp-law").and_then(Law::parse).unwrap_or(law);
-    Scenario::paper(procs, cp_ratio, predictor, law, fp_law)
+    Ok(Scenario::paper(procs, cp_ratio, predictor, law, fp_law))
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let sc = scenario_from_args(args);
+    let sc = scenario_from_args(args)?;
     let n = args.get_or("instances", harness::default_instances());
     let bp = args.get_or("best-period-seeds", 0usize);
     println!(
@@ -139,7 +155,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_analytic(args: &Args) -> Result<()> {
-    let sc = scenario_from_args(args);
+    let sc = scenario_from_args(args)?;
     let pf = &sc.platform;
     println!("closed-form periods (s):");
     println!("  Young      T = {:>10.1}", optimal::young_period(pf));
@@ -255,7 +271,7 @@ fn cmd_table(args: &Args) -> Result<()> {
 
 fn cmd_best_period(args: &Args) -> Result<()> {
     use ckptwin::strategy::PolicyKind;
-    let sc = scenario_from_args(args);
+    let sc = scenario_from_args(args)?;
     let grid_n: usize = args.get_or("grid", 256);
     let seeds: Vec<u64> = (0..args.get_or("instances", 20u64)).collect();
 
@@ -324,7 +340,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     .kind();
     let scenario = Scenario {
         platform: Platform { mu: mtbf, c: 120.0, cp: 60.0, d: 30.0, r: 60.0 },
-        predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 240.0 },
+        predictor: PredictorSpec::paper(0.85, 0.82, 240.0),
         fault_law: Law::Exponential,
         false_pred_law: Law::Exponential,
         fault_model: FaultModel::PlatformRenewal,
@@ -477,7 +493,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
 fn cmd_inspect(args: &Args) -> Result<()> {
     use ckptwin::sim::engine::simulate_traced;
     use ckptwin::strategy::StrategyId;
-    let sc = scenario_from_args(args);
+    let sc = scenario_from_args(args)?;
     let strat =
         StrategyId::parse(args.get_str("strategy").unwrap_or("withckpt"))
             .map_err(|e| anyhow!(e))?;
@@ -502,7 +518,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 fn cmd_replay(args: &Args) -> Result<()> {
     use ckptwin::sim::tracefile;
     use ckptwin::strategy::registry;
-    let sc = scenario_from_args(args);
+    let sc = scenario_from_args(args)?;
     if let Some(n) = args.get::<usize>("export") {
         // Generate a synthetic failure log from the scenario's fault law.
         let mut ts = ckptwin::sim::trace::TraceStream::new(&sc, args.get_or("seed", 0));
@@ -596,7 +612,6 @@ fn parse_list<T, E: std::fmt::Display>(
 /// Apply the shared CLI axis overrides (`--procs`, `--laws`, …) to a grid
 /// preset; used by both `campaign` and `validate`.
 fn apply_grid_overrides(grid: &mut ckptwin::campaign::Grid, args: &Args) -> Result<()> {
-    use ckptwin::campaign::PredictorKind;
     use ckptwin::strategy::registry;
     if let Some(raw) = args.get_str("procs") {
         grid.procs = parse_list(raw, "procs", str::parse::<u64>)?;
@@ -610,8 +625,10 @@ fn apply_grid_overrides(grid: &mut ckptwin::campaign::Grid, args: &Args) -> Resu
         })?;
     }
     if let Some(raw) = args.get_str("predictors") {
-        grid.predictors =
-            parse_list(raw, "predictor", |t| PredictorKind::parse(t).ok_or("expected a|b"))?;
+        // Paren-aware like --strategies: commas inside biased(beta=2,...)
+        // do not split.
+        grid.predictors = ckptwin::predictor::registry::parse_predictor_list(raw)
+            .map_err(|e| anyhow!(e))?;
     }
     if let Some(raw) = args.get_str("windows") {
         grid.windows = parse_list(raw, "window", str::parse::<f64>)?;
@@ -861,6 +878,38 @@ fn cmd_strategies(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// List the predictor registry: every name the campaign/validate grids and
+/// `--predictor(s)` accept, with aliases, parameters and a description.
+fn cmd_predictors(_args: &Args) -> Result<()> {
+    use ckptwin::predictor::registry;
+    println!(
+        "{:<12} {:<44} {:<24} {}",
+        "name", "parameters", "aliases", "description"
+    );
+    for def in registry::catalog() {
+        let params: String = def
+            .params
+            .iter()
+            .map(|p| format!("{}={}", p.key, p.default))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "{:<12} {:<44} {:<24} {}",
+            def.name,
+            if params.is_empty() { "-".to_string() } else { params },
+            def.aliases.join(","),
+            def.summary
+        );
+    }
+    println!(
+        "\nuse anywhere a predictor is named, e.g. `campaign run \
+         --predictors a,biased(beta=2),mixedwin(i1=300;i2=1200;w=0.5)`;\n\
+         non-paper models classify out-of-domain conformance cells by name \
+         (see `ckptwin validate`)"
+    );
+    Ok(())
+}
+
 fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
@@ -878,6 +927,7 @@ fn main() {
         Some("campaign") => cmd_campaign(&args),
         Some("validate") => cmd_validate(&args),
         Some("strategies") => cmd_strategies(&args),
+        Some("predictors") => cmd_predictors(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())

@@ -92,7 +92,7 @@ mod tests {
     fn sc(mu: f64, cp: f64, p: f64, r: f64, i: f64) -> Scenario {
         Scenario {
             platform: Platform { mu, c: 600.0, cp, d: 60.0, r: 600.0 },
-            predictor: PredictorSpec { recall: r, precision: p, window: i },
+            predictor: PredictorSpec::paper(r, p, i),
             fault_law: Law::Exponential,
             false_pred_law: Law::Exponential,
             fault_model: FaultModel::PlatformRenewal,

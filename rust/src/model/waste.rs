@@ -204,7 +204,7 @@ mod tests {
     fn sc(mu: f64, cp: f64, p: f64, r: f64, i: f64) -> Scenario {
         Scenario {
             platform: Platform { mu, c: 600.0, cp, d: 60.0, r: 600.0 },
-            predictor: PredictorSpec { recall: r, precision: p, window: i },
+            predictor: PredictorSpec::paper(r, p, i),
             fault_law: Law::Exponential,
             false_pred_law: Law::Exponential,
             fault_model: FaultModel::PlatformRenewal,
@@ -243,6 +243,32 @@ mod tests {
         for tr in [2000.0, 6000.0] {
             assert!((instant(&s, tr) - nockpt(&s, tr)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn formulas_consume_the_model_e_if_not_the_literal_half_window() {
+        // Eqs. (4)/(10)/(14) are derived in terms of E_I^f; the biased
+        // placement model changes E_I^f (β = 2 ⇒ 2I/3) without changing I,
+        // and every prediction-aware formula must follow.  Eq. (3) ignores
+        // the predictor entirely.
+        let mut s = sc(60_000.0, 600.0, 0.82, 0.85, 600.0);
+        let tr = 6000.0;
+        let (q0_u, inst_u, nock_u, with_u) = (
+            q0(&s, tr),
+            instant(&s, tr),
+            nockpt(&s, tr),
+            withckpt(&s, tr, 650.0),
+        );
+        s.predictor.model = crate::config::PredModel::Biased { beta: 2.0 };
+        assert_eq!(s.e_if(), 400.0);
+        assert_eq!(q0(&s, tr), q0_u, "Eq. (3) is predictor-blind");
+        // A later expected strike loses more in-window work: waste rises.
+        assert!(instant(&s, tr) > inst_u);
+        assert!(nockpt(&s, tr) > nock_u);
+        assert!(withckpt(&s, tr, 650.0) > with_u);
+        // β = 1 is the uniform model: bitwise-identical formulas.
+        s.predictor.model = crate::config::PredModel::Biased { beta: 1.0 };
+        assert_eq!(nockpt(&s, tr), nock_u);
     }
 
     #[test]

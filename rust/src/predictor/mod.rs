@@ -1,38 +1,50 @@
-//! Fault-predictor simulation for the *online* coordinator.
+//! Fault-predictor simulation: the prediction-model trait ([`model`]), the
+//! data-driven predictor [`registry`], and the *online* feed for the
+//! coordinator and log-replay paths.
 //!
 //! The trace module (`sim::trace`) generates merged event streams for the
-//! discrete-event simulator.  The coordinator, by contrast, runs a real
-//! workload in scaled wall-clock time and needs the predictor as an online
-//! component: given the (secret) schedule of injected faults, emit the
-//! prediction feed the application would observe — true predictions for a
-//! `recall` fraction of faults (window placed so the fault is uniform
-//! inside it), plus false predictions at rate `1/μ_false`, each announced
-//! `C_p` (lead time) before its window opens.
+//! discrete-event simulator.  The coordinator and `ckptwin replay`, by
+//! contrast, run against a known fault schedule and need the predictor as
+//! an online component: given the (secret) schedule of injected faults,
+//! emit the prediction feed the application would observe — true
+//! predictions for a `recall` fraction of faults (windows placed by the
+//! spec's [`crate::config::PredModel`]), plus false predictions at rate
+//! `1/μ_false`, each announced `C_p` (lead time) before its window opens.
+//!
+//! [`feed`] and the trace streams share one substream implementation
+//! (`sim::trace::pred_gens` — same RNG stream ids, same model behaviour,
+//! same §2.2 before-t = 0 drop), so for identical (fault schedule, seed)
+//! pairs the online feed and the offline trace emit **bit-identical**
+//! announcement sequences (`tests/predictor_models.rs` pins this; the
+//! historical implementation used a private RNG wiring and could drift).
 //!
 //! Table 6 presets from the paper's related-work survey are provided for
 //! the predictor-sweep example.
 
-use crate::config::PredictorSpec;
-use crate::sim::distribution::{Distribution, Law};
-use crate::sim::rng::Rng;
+pub mod model;
+pub mod registry;
 
-/// One announced prediction, in simulated seconds.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct Announcement {
-    /// When the application learns of the prediction.
-    pub notify_t: f64,
-    pub window_start: f64,
-    pub window_end: f64,
-    /// Metadata for scoring the predictor afterwards (not visible to the
-    /// checkpointing policy).
-    pub true_positive: bool,
-}
+pub use registry::PredictorId;
+
+use crate::config::PredictorSpec;
+use crate::sim::distribution::Law;
+use crate::sim::trace::{pred_gens, Event, Prediction};
+
+/// One announced prediction, in simulated seconds — exactly the trace
+/// layer's [`Prediction`] (one type, one code path; the old standalone
+/// `Announcement` struct was a field-for-field duplicate).
+pub type Announcement = Prediction;
 
 /// Generate the prediction feed for a known fault schedule on `[0, horizon)`.
 ///
 /// Returns announcements sorted by `notify_t`.  Predicted faults whose
 /// notification would fall before t = 0 are silently dropped (equivalently
 /// reclassified as unpredicted, §2.2).
+///
+/// Runs on the same substream generators as the trace streams
+/// (`sim::trace::pred_gens`), so the announcements are bit-identical to
+/// the prediction events a [`crate::sim::trace::TraceStream`] with the
+/// same seed produces for the same fault arrivals.
 pub fn feed(
     faults: &[f64],
     spec: &PredictorSpec,
@@ -42,41 +54,65 @@ pub fn feed(
     horizon: f64,
     seed: u64,
 ) -> Vec<Announcement> {
-    let mut rng = Rng::stream(seed, 0xfeed);
+    let (mut fault_gen, mut fp_gen) =
+        pred_gens(spec, cp, mu, false_pred_law, seed);
     let mut out = Vec::new();
     for &tf in faults {
-        if rng.bernoulli(spec.recall) {
-            let offset = rng.range(0.0, spec.window);
-            let ws = tf - offset;
-            if ws - cp >= 0.0 {
-                out.push(Announcement {
-                    notify_t: ws - cp,
-                    window_start: ws,
-                    window_end: ws + spec.window,
-                    true_positive: true,
-                });
-            }
+        if let (_, Some(Event::Prediction(p))) = fault_gen.events(tf) {
+            out.push(p);
         }
     }
-    if spec.recall > 0.0 && spec.precision < 1.0 {
-        let dist = Distribution::new(false_pred_law, spec.mu_false(mu));
-        let mut t = 0.0;
-        loop {
-            t += dist.sample(&mut rng);
-            if t >= horizon {
-                break;
-            }
-            if t - cp >= 0.0 {
-                out.push(Announcement {
-                    notify_t: t - cp,
-                    window_start: t,
-                    window_end: t + spec.window,
-                    true_positive: false,
-                });
-            }
+    let mut last_raw = 0.0;
+    loop {
+        let ev = fp_gen.next(&mut last_raw);
+        if last_raw >= horizon {
+            break;
+        }
+        if let Some(Event::Prediction(p)) = ev {
+            out.push(p);
         }
     }
     out.sort_by(|a, b| a.notify_t.total_cmp(&b.notify_t));
+    out
+}
+
+/// For each fault (in input order), is it inside some true-positive window
+/// of the feed?
+///
+/// Complexity: O(F log F + W log W) — true-positive windows are sorted
+/// once and swept with a two-pointer scan over the sorted faults.  Window
+/// lengths within one feed may vary (the mixed-window model), so the left
+/// pointer retires a window only once it is out of reach of the *longest*
+/// window length.  Shared by [`score`] and the log-replay trace
+/// synthesizer ([`crate::sim::tracefile::LogTrace`]), which used to
+/// rescan quadratically.
+pub fn covered(faults: &[f64], feed: &[Announcement]) -> Vec<bool> {
+    let mut wins: Vec<(f64, f64)> = feed
+        .iter()
+        .filter(|a| a.true_positive)
+        .map(|a| (a.window_start, a.window_end))
+        .collect();
+    wins.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let max_len = wins.iter().map(|w| w.1 - w.0).fold(0.0, f64::max);
+    let mut order: Vec<usize> = (0..faults.len()).collect();
+    order.sort_by(|&a, &b| faults[a].total_cmp(&faults[b]));
+
+    let mut out = vec![false; faults.len()];
+    let mut lo = 0usize;
+    for &fi in &order {
+        let tf = faults[fi];
+        while lo < wins.len() && wins[lo].0 < tf - max_len {
+            lo += 1;
+        }
+        let mut j = lo;
+        while j < wins.len() && wins[j].0 <= tf {
+            if wins[j].1 >= tf {
+                out[fi] = true;
+                break;
+            }
+            j += 1;
+        }
+    }
     out
 }
 
@@ -87,45 +123,20 @@ pub fn feed(
 /// 0.0 keeps sweep aggregations (means over scored feeds) NaN-free.
 /// Symmetrically, an empty fault schedule scores recall 0.0.
 ///
-/// Complexity: O(F log F + W log W) — true-positive windows are sorted
-/// once and swept with a two-pointer scan over the sorted faults (the
-/// previous implementation was O(F × W), quadratic in the feed length).
+/// Because §2.2 reclassifies pre-t = 0 announcements as unpredicted (they
+/// are dropped from the feed), the measured recall of a short schedule
+/// sits *below* the nominal r — the early faults' windows were never
+/// announced, so nothing covers them.  Models whose windows can miss
+/// their fault (`jitter`) depress it further; both effects are the
+/// predictor's *effective* quality, which is exactly what this measures.
 pub fn score(faults: &[f64], feed: &[Announcement]) -> (f64, f64) {
     if feed.is_empty() {
         return (0.0, 0.0);
     }
     let true_pos = feed.iter().filter(|a| a.true_positive).count();
     let precision = true_pos as f64 / feed.len() as f64;
-
-    // Sorted true-positive windows.  Window lengths within one feed may
-    // vary in principle, so the left pointer retires a window only once it
-    // is out of reach of the *longest* window length.
-    let mut wins: Vec<(f64, f64)> = feed
-        .iter()
-        .filter(|a| a.true_positive)
-        .map(|a| (a.window_start, a.window_end))
-        .collect();
-    wins.sort_by(|a, b| a.0.total_cmp(&b.0));
-    let max_len = wins.iter().map(|w| w.1 - w.0).fold(0.0, f64::max);
-    let mut sorted_faults = faults.to_vec();
-    sorted_faults.sort_by(f64::total_cmp);
-
-    let mut lo = 0usize;
-    let mut covered = 0usize;
-    for &tf in &sorted_faults {
-        while lo < wins.len() && wins[lo].0 < tf - max_len {
-            lo += 1;
-        }
-        let mut j = lo;
-        while j < wins.len() && wins[j].0 <= tf {
-            if wins[j].1 >= tf {
-                covered += 1;
-                break;
-            }
-            j += 1;
-        }
-    }
-    (covered as f64 / sorted_faults.len().max(1) as f64, precision)
+    let n_covered = covered(faults, feed).into_iter().filter(|&c| c).count();
+    (n_covered as f64 / faults.len().max(1) as f64, precision)
 }
 
 /// Predictor characteristics surveyed in the paper's Table 6.
@@ -133,23 +144,25 @@ pub fn score(faults: &[f64], feed: &[Announcement]) -> (f64, f64) {
 /// sources left unspecified are represented with the paper's test sizes.)
 pub fn table6_presets() -> Vec<(&'static str, PredictorSpec)> {
     vec![
-        ("Zheng'10-300s", PredictorSpec { recall: 0.70, precision: 0.40, window: 300.0 }),
-        ("Zheng'10-600s", PredictorSpec { recall: 0.60, precision: 0.35, window: 600.0 }),
-        ("Yu'11-accurate", PredictorSpec { recall: 0.852, precision: 0.823, window: 600.0 }),
-        ("Yu'11-period", PredictorSpec { recall: 0.652, precision: 0.648, window: 600.0 }),
-        ("Gainaru'12", PredictorSpec { recall: 0.43, precision: 0.93, window: 300.0 }),
-        ("Fulp'08", PredictorSpec { recall: 0.75, precision: 0.70, window: 600.0 }),
-        ("Liang'07-1h", PredictorSpec { recall: 0.30, precision: 0.20, window: 3600.0 }),
-        ("Liang'07-6h", PredictorSpec { recall: 0.90, precision: 0.40, window: 21_600.0 }),
+        ("Zheng'10-300s", PredictorSpec::paper(0.70, 0.40, 300.0)),
+        ("Zheng'10-600s", PredictorSpec::paper(0.60, 0.35, 600.0)),
+        ("Yu'11-accurate", PredictorSpec::paper(0.852, 0.823, 600.0)),
+        ("Yu'11-period", PredictorSpec::paper(0.652, 0.648, 600.0)),
+        ("Gainaru'12", PredictorSpec::paper(0.43, 0.93, 300.0)),
+        ("Fulp'08", PredictorSpec::paper(0.75, 0.70, 600.0)),
+        ("Liang'07-1h", PredictorSpec::paper(0.30, 0.20, 3600.0)),
+        ("Liang'07-6h", PredictorSpec::paper(0.90, 0.40, 21_600.0)),
     ]
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::distribution::Distribution;
+    use crate::sim::rng::Rng;
 
     fn spec() -> PredictorSpec {
-        PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 }
+        PredictorSpec::paper(0.85, 0.82, 600.0)
     }
 
     fn fault_schedule(n: usize, mean: f64, seed: u64) -> Vec<f64> {
@@ -176,6 +189,7 @@ mod tests {
         for a in &f {
             assert!((a.window_end - a.window_start - 600.0).abs() < 1e-9);
             assert!((a.window_start - a.notify_t - 60.0).abs() < 1e-9);
+            assert_eq!(a.weight, 1.0, "paper predictor is single-class");
         }
     }
 
@@ -212,6 +226,7 @@ mod tests {
             window_start: 10.0,
             window_end: 20.0,
             true_positive: false,
+            weight: 1.0,
         }];
         let (recall, precision) = score(&[], &f);
         assert_eq!(recall, 0.0);

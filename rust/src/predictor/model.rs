@@ -1,0 +1,415 @@
+//! Prediction-window behaviour: the [`PredictorModel`] trait and its
+//! implementations — the predictor-axis mirror of `sim::policy`'s
+//! `PolicyLogic`.
+//!
+//! A predictor model answers two questions, consuming its substream RNG in
+//! a **fixed, documented order** (that order is the bit-identity contract
+//! between the offline trace generators in `sim::trace` and the online
+//! [`crate::predictor::feed`], which share these implementations):
+//!
+//! 1. [`PredictorModel::true_window`] — given a fault at `tf`, is it
+//!    predicted (the recall coin, always the first draw), and if so where
+//!    does its announced window sit?
+//! 2. [`PredictorModel::false_shape`] — what window shape (length, trust
+//!    weight) does a false prediction announce?  Its start is always the
+//!    raw arrival the shared generator drew, so the false-prediction
+//!    substream stays in notify order by construction.
+//!
+//! Lead time (`C_p` before the window start) and the before-t = 0
+//! announcement-drop convention (§2.2: "reclassified as unpredicted") are
+//! handled by the shared generators, not per model, so every model
+//! inherits them identically.
+//!
+//! The closed-form-facing properties of a model (E_I^f, window bounds,
+//! placement slack) live on [`crate::config::PredModel`] — cheap pure
+//! data, no boxed object needed by `model::waste`/`model::optimal`.
+//!
+//! | model | [`PredModel`] | behaviour |
+//! |-------|---------------|-----------|
+//! | [`PaperModel`]      | `Paper`         | fixed I, fault uniform in-window (§2.2) |
+//! | [`BiasedModel`]     | `Biased{beta}`  | fault position `I·U^(1/β)`, E_I^f = I·β/(β+1) |
+//! | [`MixedWindowModel`]| `MixedWindow{…}`| window length i1 w.p. w, else i2 (true + false windows) |
+//! | [`JitterModel`]     | `Jitter{sigma}` | window shifted by clamped Gaussian noise; faults can escape |
+//! | [`ClassedModel`]    | `Classed{…}`    | hi/lo confidence classes; lo carries trust weight p_lo/p_hi |
+//!
+//! To add a model: implement [`PredictorModel`] here, add a
+//! [`crate::config::PredModel`] variant (with its E_I^f/window-bound
+//! properties and a `validate::domain` classification arm), and register a
+//! named entry in [`crate::predictor::registry`] — campaign grids, the
+//! harness and the CLI pick it up with no further edits.
+
+use crate::config::{PredModel, PredictorSpec};
+use crate::sim::rng::Rng;
+
+/// A drawn prediction window, before lead-time handling: the shared
+/// generators announce it `C_p` before `start` (dropping announcements
+/// that would land before t = 0).
+#[derive(Clone, Copy, Debug)]
+pub struct DrawnWindow {
+    /// Window start t0.
+    pub start: f64,
+    /// Window length (t0 + len is the window end).
+    pub len: f64,
+    /// Per-announcement trust weight: multiplies the engine's §3.1 trust
+    /// probability q.  1.0 for single-class predictors; < 1.0 for the
+    /// low-confidence class of [`ClassedModel`].
+    pub weight: f64,
+    /// Does the announced window actually contain the fault?  True for
+    /// every exact-placement model; [`JitterModel`] windows can miss.
+    pub covers: bool,
+}
+
+/// Per-announcement window semantics of a predictor (see module docs).
+///
+/// RNG contract: `true_window` draws the recall coin **first** and returns
+/// `None` (no further draws) when it fails; every extra draw a model makes
+/// is its own business, but the order must be deterministic — the trace
+/// and feed paths replay it from identical stream seeds.
+///
+/// False predictions only get to choose a *shape* (length, trust weight):
+/// their start is the raw arrival the shared generator drew, by
+/// construction — so the false-prediction substream is always generated
+/// in notify order, which the flat trace's merge relies on (a model that
+/// could shift false window starts would silently break that invariant).
+///
+/// `Send + Sync`: one instance is shared by the fault and
+/// false-prediction generators of a trace.
+pub trait PredictorModel: Send + Sync {
+    /// The recall decision and window placement for the fault at `tf`.
+    fn true_window(&self, rng: &mut Rng, tf: f64) -> Option<DrawnWindow>;
+
+    /// The (length, trust weight) of a false prediction's window; the
+    /// shared generator anchors it at the drawn arrival time.
+    fn false_shape(&self, rng: &mut Rng) -> (f64, f64);
+}
+
+/// Instantiate the behaviour object for a spec's [`PredModel`] — the
+/// single dispatch point, mirroring `EngineBuilder::run`'s kind dispatch.
+pub fn instantiate(spec: &PredictorSpec) -> Box<dyn PredictorModel> {
+    let (r, i) = (spec.recall, spec.window);
+    match spec.model {
+        PredModel::Paper => Box::new(PaperModel { recall: r, window: i }),
+        PredModel::Biased { beta } => {
+            Box::new(BiasedModel { recall: r, window: i, beta })
+        }
+        PredModel::MixedWindow { i1, i2, w } => {
+            Box::new(MixedWindowModel { recall: r, i1, i2, w })
+        }
+        PredModel::Jitter { sigma } => {
+            Box::new(JitterModel { recall: r, window: i, sigma })
+        }
+        PredModel::Classed { p_hi, p_lo, frac } => {
+            Box::new(ClassedModel::new(r, i, p_hi, p_lo, frac))
+        }
+    }
+}
+
+/// §2.2: fixed window length I, fault uniform in-window.  RNG order:
+/// recall coin, then the uniform offset — exactly the pre-trait
+/// `FaultGen`, so the paper predictor's streams are bit-identical
+/// (`tests/fast_path.rs` pins this).
+pub struct PaperModel {
+    pub recall: f64,
+    pub window: f64,
+}
+
+impl PredictorModel for PaperModel {
+    fn true_window(&self, rng: &mut Rng, tf: f64) -> Option<DrawnWindow> {
+        if !rng.bernoulli(self.recall) {
+            return None;
+        }
+        let offset = rng.range(0.0, self.window);
+        Some(DrawnWindow {
+            start: tf - offset,
+            len: self.window,
+            weight: 1.0,
+            covers: true,
+        })
+    }
+
+    fn false_shape(&self, _rng: &mut Rng) -> (f64, f64) {
+        (self.window, 1.0)
+    }
+}
+
+/// Non-uniform in-window placement: fault position `I·U^(1/β)` from the
+/// window start (β = 1 is uniform).  RNG order: recall coin, position
+/// draw.
+pub struct BiasedModel {
+    pub recall: f64,
+    pub window: f64,
+    pub beta: f64,
+}
+
+impl PredictorModel for BiasedModel {
+    fn true_window(&self, rng: &mut Rng, tf: f64) -> Option<DrawnWindow> {
+        if !rng.bernoulli(self.recall) {
+            return None;
+        }
+        let offset = self.window * rng.f64().powf(1.0 / self.beta);
+        Some(DrawnWindow {
+            start: tf - offset,
+            len: self.window,
+            weight: 1.0,
+            covers: true,
+        })
+    }
+
+    fn false_shape(&self, _rng: &mut Rng) -> (f64, f64) {
+        (self.window, 1.0)
+    }
+}
+
+/// Two-class heterogeneous window sizes: every announcement — true or
+/// false — uses length `i1` with probability `w`, else `i2`; the fault is
+/// uniform inside whichever window was drawn.  RNG order (true): recall
+/// coin, size coin, offset; (false): size coin.
+pub struct MixedWindowModel {
+    pub recall: f64,
+    pub i1: f64,
+    pub i2: f64,
+    pub w: f64,
+}
+
+impl MixedWindowModel {
+    fn draw_len(&self, rng: &mut Rng) -> f64 {
+        if rng.bernoulli(self.w) {
+            self.i1
+        } else {
+            self.i2
+        }
+    }
+}
+
+impl PredictorModel for MixedWindowModel {
+    fn true_window(&self, rng: &mut Rng, tf: f64) -> Option<DrawnWindow> {
+        if !rng.bernoulli(self.recall) {
+            return None;
+        }
+        let len = self.draw_len(rng);
+        let offset = rng.range(0.0, len);
+        Some(DrawnWindow { start: tf - offset, len, weight: 1.0, covers: true })
+    }
+
+    fn false_shape(&self, rng: &mut Rng) -> (f64, f64) {
+        (self.draw_len(rng), 1.0)
+    }
+}
+
+/// Noisy window placement: uniform placement plus Gaussian noise `σ·Z` on
+/// the window start, Z clamped to ±3 (keeps the trace look-ahead bounded
+/// by `PredictorSpec::placement_slack` = 3σ).  The lead time stays exactly
+/// `C_p`; the fault can fall outside its announced window, in which case
+/// the announcement is recorded as a false positive and the fault as
+/// unpredicted (honest trace metadata — `predictor::score` measures the
+/// *effective* recall/precision).  RNG order: recall coin, offset, two
+/// noise uniforms (Box–Muller).
+pub struct JitterModel {
+    pub recall: f64,
+    pub window: f64,
+    pub sigma: f64,
+}
+
+impl PredictorModel for JitterModel {
+    fn true_window(&self, rng: &mut Rng, tf: f64) -> Option<DrawnWindow> {
+        if !rng.bernoulli(self.recall) {
+            return None;
+        }
+        let offset = rng.range(0.0, self.window);
+        // Box–Muller, clamped to ±3σ.
+        let (u1, u2) = (rng.f64_open(), rng.f64());
+        let z = (-2.0 * u1.ln()).sqrt()
+            * (2.0 * std::f64::consts::PI * u2).cos();
+        let noise = self.sigma * z.clamp(-3.0, 3.0);
+        let start = tf - offset + noise;
+        let covers = tf >= start && tf <= start + self.window;
+        Some(DrawnWindow { start, len: self.window, weight: 1.0, covers })
+    }
+
+    fn false_shape(&self, _rng: &mut Rng) -> (f64, f64) {
+        (self.window, 1.0)
+    }
+}
+
+/// Per-announcement confidence classes (precision `p_hi` / `p_lo`,
+/// `frac` of announcements in the high class).  Window placement is the
+/// paper's uniform fixed-I; what changes is the trust weight each
+/// announcement carries: 1.0 for the high class, `p_lo/p_hi` for the low
+/// one.  Class frequencies are consistent with the overall precision
+/// `p = frac·p_hi + (1−frac)·p_lo` by Bayes: P(hi | true) =
+/// `frac·p_hi/p`, P(hi | false) = `frac·(1−p_hi)/(1−p)`.  RNG order
+/// (true): recall coin, offset, class coin; (false): class coin.
+pub struct ClassedModel {
+    pub recall: f64,
+    pub window: f64,
+    /// P(high class | true announcement).
+    hi_given_true: f64,
+    /// P(high class | false announcement).
+    hi_given_false: f64,
+    /// Trust weight of the low class (p_lo/p_hi, capped at 1).
+    weight_lo: f64,
+}
+
+impl ClassedModel {
+    pub fn new(recall: f64, window: f64, p_hi: f64, p_lo: f64, frac: f64) -> Self {
+        let p = frac * p_hi + (1.0 - frac) * p_lo;
+        let hi_given_true = if p > 0.0 { (frac * p_hi / p).min(1.0) } else { 0.0 };
+        let hi_given_false = if p < 1.0 {
+            (frac * (1.0 - p_hi) / (1.0 - p)).min(1.0)
+        } else {
+            0.0
+        };
+        ClassedModel {
+            recall,
+            window,
+            hi_given_true,
+            hi_given_false,
+            weight_lo: (p_lo / p_hi).min(1.0),
+        }
+    }
+
+    fn weight(&self, rng: &mut Rng, p_hi_class: f64) -> f64 {
+        if rng.bernoulli(p_hi_class) {
+            1.0
+        } else {
+            self.weight_lo
+        }
+    }
+}
+
+impl PredictorModel for ClassedModel {
+    fn true_window(&self, rng: &mut Rng, tf: f64) -> Option<DrawnWindow> {
+        if !rng.bernoulli(self.recall) {
+            return None;
+        }
+        let offset = rng.range(0.0, self.window);
+        let weight = self.weight(rng, self.hi_given_true);
+        Some(DrawnWindow {
+            start: tf - offset,
+            len: self.window,
+            weight,
+            covers: true,
+        })
+    }
+
+    fn false_shape(&self, rng: &mut Rng) -> (f64, f64) {
+        (self.window, self.weight(rng, self.hi_given_false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(model: PredModel) -> PredictorSpec {
+        PredictorSpec { recall: 1.0, precision: 0.8, window: 600.0, model }
+    }
+
+    #[test]
+    fn paper_model_consumes_rng_like_the_seed_generator() {
+        // coin + uniform offset, in that order — the bit-identity contract.
+        let m = instantiate(&spec(PredModel::Paper));
+        let mut rng = Rng::new(7);
+        let mut reference = Rng::new(7);
+        let w = m.true_window(&mut rng, 10_000.0).expect("recall 1");
+        assert!(reference.bernoulli(1.0));
+        let offset = reference.range(0.0, 600.0);
+        assert_eq!(w.start, 10_000.0 - offset);
+        assert_eq!(w.len, 600.0);
+        assert_eq!(w.weight, 1.0);
+        assert!(w.covers);
+        // False-window shapes draw nothing for the paper model.
+        let before = rng.clone().next_u64();
+        let (len, weight) = m.false_shape(&mut rng);
+        assert_eq!(rng.next_u64(), before);
+        assert_eq!((len, weight), (600.0, 1.0));
+    }
+
+    #[test]
+    fn biased_mean_position_matches_e_if() {
+        let sp = spec(PredModel::Biased { beta: 2.0 });
+        let m = instantiate(&sp);
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| {
+                let w = m.true_window(&mut rng, 1e6).unwrap();
+                1e6 - w.start // fault position within the window
+            })
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - sp.e_if()).abs() < 5.0, "{mean} vs {}", sp.e_if());
+        assert!((sp.e_if() - 400.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixedwin_draws_both_sizes_at_rate_w() {
+        let m = instantiate(&spec(PredModel::MixedWindow {
+            i1: 300.0,
+            i2: 1200.0,
+            w: 0.25,
+        }));
+        let mut rng = Rng::new(2);
+        let n = 10_000;
+        let mut small = 0;
+        for _ in 0..n {
+            let w = m.true_window(&mut rng, 1e6).unwrap();
+            assert!(w.len == 300.0 || w.len == 1200.0);
+            // The fault always sits inside the drawn window.
+            assert!(1e6 >= w.start && 1e6 <= w.start + w.len);
+            small += (w.len == 300.0) as usize;
+        }
+        let frac = small as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "{frac}");
+        // False-window shapes draw sizes too.
+        let (len, _) = m.false_shape(&mut rng);
+        assert!(len == 300.0 || len == 1200.0);
+    }
+
+    #[test]
+    fn jitter_keeps_noise_bounded_and_sometimes_misses() {
+        let sigma = 400.0;
+        let sp = spec(PredModel::Jitter { sigma });
+        let m = instantiate(&sp);
+        let mut rng = Rng::new(3);
+        let n = 10_000;
+        let mut missed = 0;
+        for _ in 0..n {
+            let w = m.true_window(&mut rng, 1e6).unwrap();
+            // start ≥ tf − I − 3σ (the look-ahead bound trace gen relies on).
+            assert!(w.start >= 1e6 - sp.window - sp.placement_slack() - 1e-9);
+            assert!(w.start <= 1e6 + sp.placement_slack() + 1e-9);
+            let covers = 1e6 >= w.start && 1e6 <= w.start + w.len;
+            assert_eq!(covers, w.covers);
+            missed += !w.covers as usize;
+        }
+        // σ comparable to I: a solid fraction of windows miss their fault.
+        let miss = missed as f64 / n as f64;
+        assert!(miss > 0.1 && miss < 0.9, "{miss}");
+    }
+
+    #[test]
+    fn classed_weights_and_frequencies_are_bayes_consistent() {
+        let (p_hi, p_lo, frac) = (0.95, 0.6, 0.5);
+        let m = ClassedModel::new(1.0, 600.0, p_hi, p_lo, frac);
+        let p = frac * p_hi + (1.0 - frac) * p_lo;
+        assert!((m.hi_given_true - frac * p_hi / p).abs() < 1e-12);
+        assert!(
+            (m.hi_given_false - frac * (1.0 - p_hi) / (1.0 - p)).abs() < 1e-12
+        );
+        // Total-probability check: P(hi) = frac.
+        let p_hi_total =
+            m.hi_given_true * p + m.hi_given_false * (1.0 - p);
+        assert!((p_hi_total - frac).abs() < 1e-12);
+        let mut rng = Rng::new(4);
+        let n = 20_000;
+        let mut hi = 0;
+        for _ in 0..n {
+            let w = m.true_window(&mut rng, 1e6).unwrap();
+            assert!(w.weight == 1.0 || (w.weight - p_lo / p_hi).abs() < 1e-12);
+            hi += (w.weight == 1.0) as usize;
+        }
+        let observed = hi as f64 / n as f64;
+        assert!((observed - m.hi_given_true).abs() < 0.02, "{observed}");
+    }
+}

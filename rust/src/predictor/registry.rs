@@ -1,0 +1,532 @@
+//! Data-driven predictor registry: stable string names + parameter maps —
+//! the predictor-axis mirror of [`crate::strategy::registry`].
+//!
+//! The predictor axis is **open**: every predictor the stack can simulate —
+//! campaign grids, the conformance sweeps, the `ckptwin` CLI — is a row in
+//! this registry, addressed by a [`PredictorId`] (a registered name plus a
+//! fully materialized parameter map).  Adding a predictor means adding a
+//! [`crate::predictor::model::PredictorModel`] implementation (behaviour),
+//! a [`crate::config::PredModel`] variant (dispatch + closed-form
+//! properties + `validate::domain` classification), and one registry row
+//! here; no campaign, harness or CLI edits.
+//!
+//! Identifier grammar (round-trips through [`PredictorId`]'s `FromStr` /
+//! `Display` pair — the same grammar as strategy identifiers):
+//!
+//! ```text
+//!   a                         the paper's predictor A (canonical name)
+//!   paper-b                   aliases parse case-insensitively
+//!   biased(beta=2)            parameters as key=value, ';' separated
+//!   mixedwin(i1=300;i2=1200;w=0.5)
+//! ```
+//!
+//! A [`PredictorId`] plus a window-axis value materializes into a
+//! [`PredictorSpec`] ([`PredictorId::spec`]); the spec — not the id — is
+//! what campaign cells carry, so store keys stay derived from the
+//! predictor's *parameters* (`p=…;r=…;I=…`, plus a `pm=<model>` suffix
+//! for non-paper models) and existing paper-predictor keys are
+//! byte-identical to their pre-registry form.
+//!
+//! Registered predictors:
+//!
+//! | name | model | notes |
+//! |------|-------|-------|
+//! | `a` | paper | Yu et al. 2011: p = 0.82, r = 0.85 |
+//! | `b` | paper | Zheng et al. 2010: p = 0.4, r = 0.7 |
+//! | `paper(r;p)` | paper | the §2.2 predictor with explicit r/p |
+//! | `biased(beta;r;p)` | non-uniform placement | E_I^f = I·β/(β+1), closed forms stay valid |
+//! | `mixedwin(i1;i2;w;r;p)` | two window classes | breaks fixed-I ⇒ classified `non_uniform_window` |
+//! | `jitter(sigma;r;p)` | noisy placement | faults can escape ⇒ `noisy_window_placement` |
+//! | `classed(p_hi;p_lo;frac;r)` | confidence classes | trust weights pair with `QTrust` ⇒ `confidence_classes` |
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::config::{PredModel, PredictorSpec};
+use crate::strategy::registry::ParamDef;
+
+/// One registry row: everything the stack needs to name, parse, describe
+/// and materialize a predictor.
+pub struct PredictorDef {
+    /// Canonical display name.
+    pub name: &'static str,
+    /// Lowercase aliases accepted by the parser.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `ckptwin predictors`.
+    pub summary: &'static str,
+    /// Accepted parameters (empty for the fixed paper predictors).
+    pub params: &'static [ParamDef],
+    spec: fn(&PredictorId, f64) -> PredictorSpec,
+}
+
+const P_R: ParamDef = ParamDef { key: "r", default: 0.85, min: 0.0, max: 1.0 };
+const P_P: ParamDef = ParamDef { key: "p", default: 0.82, min: 0.0, max: 1.0 };
+const P_BETA: ParamDef =
+    ParamDef { key: "beta", default: 2.0, min: 0.05, max: 20.0 };
+const P_I1: ParamDef =
+    ParamDef { key: "i1", default: 300.0, min: 1.0, max: 1e7 };
+const P_I2: ParamDef =
+    ParamDef { key: "i2", default: 1200.0, min: 1.0, max: 1e7 };
+const P_W: ParamDef = ParamDef { key: "w", default: 0.5, min: 0.0, max: 1.0 };
+const P_SIGMA: ParamDef =
+    ParamDef { key: "sigma", default: 120.0, min: 0.0, max: 1e6 };
+const P_PHI: ParamDef =
+    ParamDef { key: "p_hi", default: 0.95, min: 0.01, max: 1.0 };
+const P_PLO: ParamDef =
+    ParamDef { key: "p_lo", default: 0.6, min: 0.01, max: 1.0 };
+const P_FRAC: ParamDef =
+    ParamDef { key: "frac", default: 0.5, min: 0.0, max: 1.0 };
+
+fn spec_a(_: &PredictorId, window: f64) -> PredictorSpec {
+    PredictorSpec::paper_a(window)
+}
+fn spec_b(_: &PredictorId, window: f64) -> PredictorSpec {
+    PredictorSpec::paper_b(window)
+}
+fn spec_paper(id: &PredictorId, window: f64) -> PredictorSpec {
+    PredictorSpec::paper(id.param("r"), id.param("p"), window)
+}
+fn spec_biased(id: &PredictorId, window: f64) -> PredictorSpec {
+    PredictorSpec {
+        recall: id.param("r"),
+        precision: id.param("p"),
+        window,
+        model: PredModel::Biased { beta: id.param("beta") },
+    }
+}
+fn spec_mixedwin(id: &PredictorId, window: f64) -> PredictorSpec {
+    PredictorSpec {
+        recall: id.param("r"),
+        precision: id.param("p"),
+        window,
+        model: PredModel::MixedWindow {
+            i1: id.param("i1"),
+            i2: id.param("i2"),
+            w: id.param("w"),
+        },
+    }
+}
+fn spec_jitter(id: &PredictorId, window: f64) -> PredictorSpec {
+    PredictorSpec {
+        recall: id.param("r"),
+        precision: id.param("p"),
+        window,
+        model: PredModel::Jitter { sigma: id.param("sigma") },
+    }
+}
+fn spec_classed(id: &PredictorId, window: f64) -> PredictorSpec {
+    let (p_hi, p_lo, frac) =
+        (id.param("p_hi"), id.param("p_lo"), id.param("frac"));
+    PredictorSpec {
+        recall: id.param("r"),
+        // Overall precision is implied by the class mix.
+        precision: frac * p_hi + (1.0 - frac) * p_lo,
+        window,
+        model: PredModel::Classed { p_hi, p_lo, frac },
+    }
+}
+
+/// The registry itself.  Order is presentation order (`ckptwin
+/// predictors`); lookups are by name/alias, never by index.
+static DEFS: &[PredictorDef] = &[
+    PredictorDef {
+        name: "a",
+        aliases: &["paper-a", "yu11"],
+        summary: "paper predictor A [Yu'11]: p=0.82 r=0.85, uniform fixed-I",
+        params: &[],
+        spec: spec_a,
+    },
+    PredictorDef {
+        name: "b",
+        aliases: &["paper-b", "zheng10"],
+        summary: "paper predictor B [Zheng'10]: p=0.4 r=0.7, uniform fixed-I",
+        params: &[],
+        spec: spec_b,
+    },
+    PredictorDef {
+        name: "paper",
+        aliases: &["uniform"],
+        summary: "the S2.2 uniform fixed-I predictor with explicit r/p",
+        params: &[P_R, P_P],
+        spec: spec_paper,
+    },
+    PredictorDef {
+        name: "biased",
+        aliases: &["beta-placed"],
+        summary: "non-uniform in-window placement: E_I^f = I*beta/(beta+1)",
+        params: &[P_BETA, P_R, P_P],
+        spec: spec_biased,
+    },
+    PredictorDef {
+        name: "mixedwin",
+        aliases: &["mixed-window", "mixed"],
+        summary: "two-class window sizes: i1 with prob w, else i2",
+        params: &[P_I1, P_I2, P_W, P_R, P_P],
+        spec: spec_mixedwin,
+    },
+    PredictorDef {
+        name: "jitter",
+        aliases: &["noisy-lead"],
+        summary: "window placement jittered by clamped Gaussian sigma noise",
+        params: &[P_SIGMA, P_R, P_P],
+        spec: spec_jitter,
+    },
+    PredictorDef {
+        name: "classed",
+        aliases: &["confidence", "two-class"],
+        summary: "hi/lo confidence classes; lo trust weight pairs with QTrust",
+        params: &[P_PHI, P_PLO, P_FRAC, P_R],
+        spec: spec_classed,
+    },
+];
+
+fn find_def(token: &str) -> Option<&'static PredictorDef> {
+    let lower = token.to_ascii_lowercase();
+    DEFS.iter().find(|d| {
+        d.name.eq_ignore_ascii_case(token) || d.aliases.contains(&lower.as_str())
+    })
+}
+
+/// A parsed predictor identifier: registered name + fully materialized
+/// parameter values (defaults filled in at parse time, so two identifiers
+/// naming the same predictor compare and display identically).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictorId {
+    name: &'static str,
+    /// `(key, value)` in the registry's declaration order.
+    params: Vec<(&'static str, f64)>,
+}
+
+impl PredictorId {
+    /// The predictor registered under `def`, with default parameters.
+    pub fn with_defaults(def: &'static PredictorDef) -> PredictorId {
+        PredictorId {
+            name: def.name,
+            params: def.params.iter().map(|p| (p.key, p.default)).collect(),
+        }
+    }
+
+    /// Parse an identifier: `name` or `name(k=v;k2=v2)` (',' also accepted
+    /// as a parameter separator).  See the module docs for the grammar.
+    pub fn parse(s: &str) -> Result<PredictorId, String> {
+        Ok(Self::parse_with_explicit(s)?.0)
+    }
+
+    /// [`PredictorId::parse`] that also reports which parameter keys the
+    /// identifier *explicitly* supplied (canonical key names, in supply
+    /// order).  Config files use this to reject r/p written inside a
+    /// `model = "…"` string — the file's explicit recall/precision keys
+    /// are the only source there — without re-implementing the grammar.
+    pub fn parse_with_explicit(
+        s: &str,
+    ) -> Result<(PredictorId, Vec<&'static str>), String> {
+        let s = s.trim();
+        let (base, args) = match s.split_once('(') {
+            None => (s, None),
+            Some((base, rest)) => {
+                let inner = rest.strip_suffix(')').ok_or_else(|| {
+                    format!("predictor '{s}': missing closing ')'")
+                })?;
+                (base.trim(), Some(inner))
+            }
+        };
+        let def = find_def(base).ok_or_else(|| {
+            format!(
+                "unknown predictor '{base}' (known: {})",
+                DEFS.iter().map(|d| d.name).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+        let mut id = PredictorId::with_defaults(def);
+        let mut explicit = Vec::new();
+        if let Some(args) = args {
+            for kv in args.split([';', ',']).map(str::trim).filter(|t| !t.is_empty()) {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    format!("{}: expected key=value, got '{kv}'", def.name)
+                })?;
+                let v: f64 = v.trim().parse().map_err(|_| {
+                    format!("{}: parameter '{kv}' is not a number", def.name)
+                })?;
+                explicit.push(id.set_param(def, k.trim(), v)?);
+            }
+        }
+        id.check_cross_params()?;
+        Ok((id, explicit))
+    }
+
+    /// Cross-parameter constraints the per-parameter ranges cannot
+    /// express.  Checked after parse and after every `with_param`, so an
+    /// invalid combination errors loudly instead of degenerating silently.
+    fn check_cross_params(&self) -> Result<(), String> {
+        if self.name == "classed" {
+            let (p_hi, p_lo) = (self.param("p_hi"), self.param("p_lo"));
+            if p_lo > p_hi {
+                return Err(format!(
+                    "classed: p_lo = {p_lo} must not exceed p_hi = {p_hi} \
+                     (the high class is the more precise one; swap them)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Set a declared parameter; returns the canonical key that was set.
+    fn set_param(
+        &mut self,
+        def: &'static PredictorDef,
+        key: &str,
+        val: f64,
+    ) -> Result<&'static str, String> {
+        let pd = def
+            .params
+            .iter()
+            .find(|p| p.key.eq_ignore_ascii_case(key))
+            .ok_or_else(|| {
+                format!("{}: unknown parameter '{key}'", def.name)
+            })?;
+        if !val.is_finite() || !(pd.min..=pd.max).contains(&val) {
+            return Err(format!(
+                "{}: {} = {val} outside [{}, {}]",
+                def.name, pd.key, pd.min, pd.max
+            ));
+        }
+        for slot in &mut self.params {
+            if slot.0 == pd.key {
+                slot.1 = val;
+            }
+        }
+        Ok(pd.key)
+    }
+
+    /// A copy with `key` set to `val` (validated against the registry).
+    pub fn with_param(mut self, key: &str, val: f64) -> Result<PredictorId, String> {
+        let def = self.def();
+        self.set_param(def, key, val)?;
+        self.check_cross_params()?;
+        Ok(self)
+    }
+
+    fn def(&self) -> &'static PredictorDef {
+        DEFS.iter()
+            .find(|d| d.name == self.name)
+            .expect("PredictorId only constructed from registry rows")
+    }
+
+    /// Canonical registered name (`"a"`, `"biased"`, …).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Does this predictor's registry row declare parameter `key`?
+    pub fn has_param(&self, key: &str) -> bool {
+        self.params.iter().any(|(k, _)| *k == key)
+    }
+
+    /// The value of a declared parameter.  Panics on undeclared keys —
+    /// construction guarantees every declared parameter is present.
+    pub fn param(&self, key: &str) -> f64 {
+        self.params
+            .iter()
+            .find(|(k, _)| *k == key)
+            .unwrap_or_else(|| panic!("{}: no parameter '{key}'", self.name))
+            .1
+    }
+
+    /// One-line description (for `ckptwin predictors`).
+    pub fn summary(&self) -> &'static str {
+        self.def().summary
+    }
+
+    /// Materialize the spec this predictor announces at window-axis value
+    /// `window` (the mixed-window model draws its own sizes and keeps
+    /// `window` only as the axis label).
+    pub fn spec(&self, window: f64) -> PredictorSpec {
+        (self.def().spec)(self, window)
+    }
+}
+
+impl fmt::Display for PredictorId {
+    /// Canonical form: registered name, every parameter materialized.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name)?;
+        if !self.params.is_empty() {
+            f.write_str("(")?;
+            for (i, (k, v)) in self.params.iter().enumerate() {
+                if i > 0 {
+                    f.write_str(";")?;
+                }
+                write!(f, "{k}={v}")?;
+            }
+            f.write_str(")")?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for PredictorId {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        PredictorId::parse(s)
+    }
+}
+
+/// Look up a predictor by canonical name or alias, with default parameters.
+pub fn get(name: &str) -> Option<PredictorId> {
+    find_def(name).map(PredictorId::with_defaults)
+}
+
+/// The paper's two reference predictors (the pre-registry campaign axis).
+pub fn paper_pair() -> Vec<PredictorId> {
+    vec![get("a").expect("registered"), get("b").expect("registered")]
+}
+
+/// Every registered predictor with default parameters, in registry order.
+/// The generic invariant and conformance suites iterate this, so new
+/// registrations get coverage for free.
+pub fn all_defaults() -> Vec<PredictorId> {
+    DEFS.iter().map(PredictorId::with_defaults).collect()
+}
+
+/// The registry rows themselves (for `ckptwin predictors` and docs).
+pub fn catalog() -> impl Iterator<Item = &'static PredictorDef> {
+    DEFS.iter()
+}
+
+/// Parse a comma-separated predictor list, paren-aware: commas inside a
+/// `name(k=v,…)` parameter list do not split entries.  Used by the CLI's
+/// `--predictors` axis (same splitter as `--strategies`).
+pub fn parse_predictor_list(raw: &str) -> Result<Vec<PredictorId>, String> {
+    let mut out = Vec::new();
+    for tok in crate::util::split_top_level(raw) {
+        let tok = tok.trim();
+        if !tok.is_empty() {
+            out.push(PredictorId::parse(tok)?);
+        }
+    }
+    if out.is_empty() {
+        return Err("empty predictor list".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_round_trips_for_every_registered_predictor() {
+        for id in all_defaults() {
+            let label = id.to_string();
+            let back: PredictorId = label.parse().unwrap_or_else(|e| {
+                panic!("'{label}' failed to re-parse: {e}")
+            });
+            assert_eq!(back, id, "round trip of '{label}'");
+            assert_eq!(back.to_string(), label);
+        }
+    }
+
+    #[test]
+    fn non_default_params_round_trip() {
+        for raw in [
+            "biased(beta=3;r=0.7;p=0.4)",
+            "mixedwin(i1=150;i2=2400;w=0.3;r=0.85;p=0.82)",
+            "jitter(sigma=300;r=0.85;p=0.82)",
+        ] {
+            let id = PredictorId::parse(raw).unwrap();
+            assert_eq!(id.to_string(), raw);
+            assert_eq!(PredictorId::parse(&id.to_string()).unwrap(), id);
+        }
+        // ',' is accepted as a parameter separator on input.
+        assert_eq!(
+            PredictorId::parse("biased(beta=3)").unwrap(),
+            PredictorId::parse("Biased(beta=3,)").unwrap()
+        );
+        // parse_with_explicit reports exactly the supplied keys
+        // (canonical names), defaults stay implicit.
+        let (id, explicit) =
+            PredictorId::parse_with_explicit("biased(beta=3;R=0.7)").unwrap();
+        assert_eq!(explicit, vec!["beta", "r"]);
+        assert_eq!(id.param("p"), 0.82);
+        assert!(PredictorId::parse_with_explicit("a").unwrap().1.is_empty());
+    }
+
+    #[test]
+    fn aliases_and_errors() {
+        for (alias, canonical) in [
+            ("A", "a"),
+            ("paper-b", "b"),
+            ("yu11", "a"),
+            ("uniform", "paper"),
+            ("mixed", "mixedwin"),
+            ("noisy-lead", "jitter"),
+            ("confidence", "classed"),
+        ] {
+            assert_eq!(PredictorId::parse(alias).unwrap().name(), canonical);
+        }
+        assert!(PredictorId::parse("nope").is_err());
+        assert!(PredictorId::parse("biased(beta=0)").is_err()); // below min
+        assert!(PredictorId::parse("biased(frob=1)").is_err());
+        assert!(PredictorId::parse("biased(beta=2").is_err()); // missing ')'
+        assert!(PredictorId::parse("a(r=0.5)").is_err()); // no params
+        assert!(PredictorId::parse("jitter(sigma=nan)").is_err());
+        // Cross-parameter constraint: an inverted class pair would
+        // silently degenerate to the paper predictor — reject it instead,
+        // on parse and on with_param alike.
+        assert!(PredictorId::parse("classed(p_hi=0.3;p_lo=0.9)").is_err());
+        assert!(get("classed").unwrap().with_param("p_lo", 0.99).is_err());
+        assert!(get("classed").unwrap().with_param("p_lo", 0.9).is_ok());
+    }
+
+    #[test]
+    fn specs_materialize_correctly() {
+        let a = get("a").unwrap().spec(600.0);
+        assert_eq!(a, PredictorSpec::paper_a(600.0));
+        let b = get("b").unwrap().spec(900.0);
+        assert_eq!(b, PredictorSpec::paper_b(900.0));
+        // Generic paper row with defaults == predictor A numbers.
+        assert_eq!(get("paper").unwrap().spec(600.0), a);
+
+        let biased = PredictorId::parse("biased(beta=2)").unwrap().spec(600.0);
+        assert_eq!(biased.model, PredModel::Biased { beta: 2.0 });
+        assert!((biased.e_if() - 400.0).abs() < 1e-12);
+
+        let mixed = get("mixedwin").unwrap().spec(600.0);
+        assert_eq!(
+            mixed.model,
+            PredModel::MixedWindow { i1: 300.0, i2: 1200.0, w: 0.5 }
+        );
+        assert_eq!(mixed.max_window(), 1200.0);
+
+        // Classed: overall precision implied by the class mix.
+        let classed = get("classed").unwrap().spec(600.0);
+        assert!((classed.precision - (0.5 * 0.95 + 0.5 * 0.6)).abs() < 1e-12);
+        assert_eq!(
+            classed.model,
+            PredModel::Classed { p_hi: 0.95, p_lo: 0.6, frac: 0.5 }
+        );
+    }
+
+    #[test]
+    fn predictor_list_parsing_is_paren_aware() {
+        let ids = parse_predictor_list(
+            "a, biased(beta=2,r=0.7) ,mixedwin(i1=300,i2=1200,w=0.5)",
+        )
+        .unwrap();
+        assert_eq!(ids.len(), 3);
+        assert_eq!(ids[0].name(), "a");
+        assert_eq!(ids[1].param("beta"), 2.0);
+        assert_eq!(ids[1].param("r"), 0.7);
+        assert_eq!(ids[2].param("i2"), 1200.0);
+        assert!(parse_predictor_list("").is_err());
+        assert!(parse_predictor_list("a,,b").is_ok());
+        assert!(parse_predictor_list("a,bogus").is_err());
+    }
+
+    #[test]
+    fn paper_pair_matches_the_old_axis() {
+        let pair = paper_pair();
+        assert_eq!(pair.len(), 2);
+        assert_eq!(pair[0].spec(600.0), PredictorSpec::paper_a(600.0));
+        assert_eq!(pair[1].spec(600.0), PredictorSpec::paper_b(600.0));
+    }
+}

@@ -376,10 +376,12 @@ impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
                         self.bump_event();
                         self.out.n_preds_seen += 1;
                         if listen {
-                            // §3.1: trust the predictor with probability q.
-                            if self.trust_prob >= 1.0
-                                || self.rng_q.bernoulli(self.trust_prob)
-                            {
+                            // §3.1: trust the predictor with probability q,
+                            // scaled by the announcement's confidence
+                            // weight (1.0 for single-class predictors, so
+                            // the paper's streams are untouched).
+                            let trust = self.trust_prob * p.weight;
+                            if trust >= 1.0 || self.rng_q.bernoulli(trust) {
                                 return Seg::Notify(p);
                             }
                             continue; // coin said ignore this one
@@ -551,7 +553,7 @@ mod tests {
     fn base_scenario() -> Scenario {
         Scenario {
             platform: Platform { mu: 50_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
-            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            predictor: PredictorSpec::paper(0.85, 0.82, 600.0),
             fault_law: Law::Exponential,
             false_pred_law: Law::Exponential,
             fault_model: FaultModel::PlatformRenewal,
@@ -630,7 +632,7 @@ mod tests {
         // Accurate predictor, short window, many faults: trusting must win.
         let mut sc = base_scenario();
         sc.platform.mu = 20_000.0;
-        sc.predictor = PredictorSpec { recall: 0.95, precision: 0.95, window: 300.0 };
+        sc.predictor = PredictorSpec::paper(0.95, 0.95, 300.0);
         sc.job_size = 5e6;
         let tr = crate::model::optimal::rfo_period(&sc.platform);
         let ign = simulate(&sc, &policy(PolicyKind::IgnorePredictions, tr, 600.0), 5);

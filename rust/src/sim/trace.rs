@@ -3,15 +3,22 @@
 //!
 //! Following §4.1 of the paper: a random fault trace (Exponential or Weibull
 //! inter-arrival, mean μ) is generated; each fault is *predicted* with
-//! probability r (the recall).  A predicted fault is placed uniformly at
-//! random inside its prediction window `[ws, ws + I]` (hence E_I^f = I/2),
-//! and the prediction is made available exactly `C_p` seconds before the
-//! window starts (§2.2 — earlier predictions are indistinguishable, later
-//! ones useless).  A second, independent trace of *false* predictions is
-//! generated with inter-arrival mean `μ_P/(1-p) = pμ/(r(1-p))`, from either
-//! the same law or a Uniform law (Figures 8–13).  Both traces are merged
-//! into one stream sorted by *engine-visible* time (prediction notify time,
-//! fault strike time).
+//! probability r (the recall), and its window is placed by the scenario's
+//! predictor model ([`crate::predictor::model::PredictorModel`] — the
+//! paper's model places the fault uniformly inside a fixed-length window
+//! `[ws, ws + I]`, hence E_I^f = I/2; other registered models bias the
+//! placement, mix window sizes, jitter the placement, or attach
+//! confidence classes).  The prediction is made available exactly `C_p`
+//! seconds before the window starts (§2.2 — earlier predictions are
+//! indistinguishable, later ones useless).  A second, independent trace of
+//! *false* predictions is generated with inter-arrival mean
+//! `μ_P/(1-p) = pμ/(r(1-p))`, from either the same law or a Uniform law
+//! (Figures 8–13), window shapes from the same model.  Both traces are
+//! merged into one stream sorted by *engine-visible* time (prediction
+//! notify time, fault strike time).  The substream generators
+//! (`FaultGen`/`FpGen`) are also the implementation of the online
+//! `predictor::feed`, so the offline trace and the online coordinator
+//! consume one code path.
 //!
 //! The stream is unbounded and lazy: the simulated makespan is not known in
 //! advance, so events are produced on demand with just enough look-ahead
@@ -33,8 +40,10 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
-use crate::config::{FaultModel, Scenario};
+use crate::config::{FaultModel, PredictorSpec, Scenario};
+use crate::predictor::model::PredictorModel;
 use crate::sim::distribution::{Distribution, Law};
 use crate::sim::rng::Rng;
 use crate::util::gamma;
@@ -52,6 +61,13 @@ pub struct Prediction {
     /// The engine must NOT branch on this — it is trace metadata used by
     /// statistics and tests only.
     pub true_positive: bool,
+    /// Per-announcement trust weight: multiplies the engine's §3.1 trust
+    /// probability q.  1.0 for single-class predictors (the paper's);
+    /// confidence-classed predictors discount their low class (see
+    /// [`crate::predictor::model::ClassedModel`]).  Unlike
+    /// `true_positive`, the engine *may* branch on this — it is part of
+    /// what the predictor announces.
+    pub weight: f64,
 }
 
 /// An event as seen by the simulation engine, in visible-time order.
@@ -352,33 +368,36 @@ impl FaultSource {
     }
 }
 
-/// Fault-substream event construction: recall coin, window placement,
-/// too-late-to-announce reclassification.  One shared implementation so the
-/// heap and flat streams consume the RNG identically.
-struct FaultGen {
+/// Fault-substream event construction: the predictor model's recall coin
+/// and window placement, plus the too-late-to-announce reclassification.
+/// One shared implementation — used by the heap stream, the flat stream
+/// AND the online `predictor::feed` — so every consumer draws the RNG
+/// identically (that sharing is what makes the offline trace and the
+/// online feed emit bit-identical announcements).
+pub(crate) struct FaultGen {
     rng: Rng,
-    recall: f64,
-    window: f64,
+    model: Arc<dyn PredictorModel>,
     cp: f64,
 }
 
 impl FaultGen {
     /// Events for the fault striking at `tf`: the fault itself and, when
-    /// predicted and announceable, its window.  RNG order: recall coin,
-    /// then uniform window offset (E_I^f = I/2).
-    fn events(&mut self, tf: f64) -> (Event, Option<Event>) {
-        if self.rng.bernoulli(self.recall) {
-            let offset = self.rng.range(0.0, self.window);
-            let ws = tf - offset;
-            let notify = ws - self.cp;
+    /// predicted and announceable, its window.  RNG order is the model's
+    /// contract ([`crate::predictor::model`]); the paper model draws the
+    /// recall coin then a uniform window offset (E_I^f = I/2), exactly as
+    /// the pre-trait generator did.
+    pub(crate) fn events(&mut self, tf: f64) -> (Event, Option<Event>) {
+        if let Some(w) = self.model.true_window(&mut self.rng, tf) {
+            let notify = w.start - self.cp;
             if notify >= 0.0 {
                 return (
-                    Event::Fault { t: tf, predicted: true },
+                    Event::Fault { t: tf, predicted: w.covers },
                     Some(Event::Prediction(Prediction {
                         notify_t: notify,
-                        window_start: ws,
-                        window_end: ws + self.window,
-                        true_positive: true,
+                        window_start: w.start,
+                        window_end: w.start + w.len,
+                        true_positive: w.covers,
+                        weight: w.weight,
                     })),
                 );
             }
@@ -390,60 +409,81 @@ impl FaultGen {
 }
 
 /// False-prediction substream: raw window starts from `dist` (None when the
-/// predictor emits no false predictions — p = 1 or r = 0), announced `C_p`
-/// early; windows whose announcement would land before t = 0 are dropped.
-struct FpGen {
+/// predictor emits no false predictions — p = 1 or r = 0), window shape
+/// from the predictor model, announced `C_p` early; windows whose
+/// announcement would land before t = 0 are dropped.
+pub(crate) struct FpGen {
     dist: Option<Distribution>,
     rng: Rng,
-    window: f64,
+    model: Arc<dyn PredictorModel>,
     cp: f64,
 }
 
 impl FpGen {
     /// Advance the raw cursor; returns the announcement event, if any.
-    fn next(&mut self, last_raw: &mut f64) -> Option<Event> {
+    /// The window start IS the raw arrival (models choose only the shape),
+    /// so this substream is generated in notify order by construction —
+    /// the flat trace's merge relies on that.
+    pub(crate) fn next(&mut self, last_raw: &mut f64) -> Option<Event> {
         let Some(dist) = self.dist else {
             *last_raw = f64::INFINITY;
             return None;
         };
         *last_raw += dist.sample(&mut self.rng);
+        let (len, weight) = self.model.false_shape(&mut self.rng);
         let ws = *last_raw;
         let notify = ws - self.cp;
         if notify >= 0.0 {
             return Some(Event::Prediction(Prediction {
                 notify_t: notify,
                 window_start: ws,
-                window_end: ws + self.window,
+                window_end: ws + len,
                 true_positive: false,
+                weight,
             }));
         }
         None
     }
 }
 
-/// The three substream generators of a trace, wired identically for every
-/// stream implementation ([`TraceStream`] and [`FlatTrace`]).
-fn trace_parts(scenario: &Scenario, seed: u64) -> (FaultSource, FaultGen, FpGen) {
-    let mu = scenario.platform.mu;
-    let pred = scenario.predictor;
+/// The two prediction substream generators, wired identically for the
+/// offline trace streams and the online [`crate::predictor::feed`]: same
+/// stream ids, same model behaviour, same lead-time and t = 0 handling.
+pub(crate) fn pred_gens(
+    pred: &PredictorSpec,
+    cp: f64,
+    mu: f64,
+    false_pred_law: Law,
+    seed: u64,
+) -> (FaultGen, FpGen) {
     let fp_dist = if pred.recall > 0.0 && pred.precision < 1.0 {
-        Some(Distribution::new(scenario.false_pred_law, pred.mu_false(mu)))
+        Some(Distribution::new(false_pred_law, pred.mu_false(mu)))
     } else {
         None
     };
-    let faults = FaultSource::for_scenario(scenario, seed);
+    // One behaviour object per trace, shared by both substreams.
+    let model: Arc<dyn PredictorModel> =
+        Arc::from(crate::predictor::model::instantiate(pred));
     let fault_gen = FaultGen {
         rng: Rng::stream(seed, 0x0fa17),
-        recall: pred.recall,
-        window: pred.window,
-        cp: scenario.platform.cp,
+        model: Arc::clone(&model),
+        cp,
     };
-    let fp_gen = FpGen {
-        dist: fp_dist,
-        rng: Rng::stream(seed, 0xfa15e),
-        window: pred.window,
-        cp: scenario.platform.cp,
-    };
+    let fp_gen = FpGen { dist: fp_dist, rng: Rng::stream(seed, 0xfa15e), model, cp };
+    (fault_gen, fp_gen)
+}
+
+/// The three substream generators of a trace, wired identically for every
+/// stream implementation ([`TraceStream`] and [`FlatTrace`]).
+fn trace_parts(scenario: &Scenario, seed: u64) -> (FaultSource, FaultGen, FpGen) {
+    let faults = FaultSource::for_scenario(scenario, seed);
+    let (fault_gen, fp_gen) = pred_gens(
+        &scenario.predictor,
+        scenario.platform.cp,
+        scenario.platform.mu,
+        scenario.false_pred_law,
+        seed,
+    );
     (faults, fault_gen, fp_gen)
 }
 
@@ -453,7 +493,11 @@ pub struct TraceStream {
     faults: FaultSource,
     fault_gen: FaultGen,
     fp_gen: FpGen,
-    window: f64,
+    /// Largest gap between a raw arrival and its earliest visible event:
+    /// the predictor's longest window plus any placement slack (the lead
+    /// time `cp` is added where the bound is applied).  Equals the window
+    /// length I for the paper predictor.
+    lookback: f64,
     cp: f64,
     last_fault_raw: f64,
     last_fp_raw: f64,
@@ -470,7 +514,8 @@ impl TraceStream {
             faults,
             fault_gen,
             fp_gen,
-            window: scenario.predictor.window,
+            lookback: scenario.predictor.max_window()
+                + scenario.predictor.placement_slack(),
             cp: scenario.platform.cp,
             last_fault_raw: 0.0,
             last_fp_raw: 0.0,
@@ -498,9 +543,9 @@ impl TraceStream {
         loop {
             if let Some(HeapEvent(ev)) = self.heap.peek() {
                 // A future raw arrival at time t can create an event no
-                // earlier than t - window - cp; once both cursors are past
-                // this horizon, the heap minimum is globally minimal.
-                let safe = ev.time() + self.window + self.cp;
+                // earlier than t - lookback - cp; once both cursors are
+                // past this horizon, the heap minimum is globally minimal.
+                let safe = ev.time() + self.lookback + self.cp;
                 if self.last_fault_raw > safe && self.last_fp_raw > safe {
                     return self.heap.pop().unwrap().0;
                 }
@@ -578,7 +623,8 @@ pub struct FlatTrace {
     faults: FaultSource,
     fault_gen: FaultGen,
     fp_gen: FpGen,
-    window: f64,
+    /// See [`TraceStream`]: max window + placement slack.
+    lookback: f64,
     cp: f64,
     last_fault_raw: f64,
     last_fp_raw: f64,
@@ -604,18 +650,19 @@ impl FlatTrace {
     pub fn with_bufs(scenario: &Scenario, seed: u64, mut bufs: TraceBufs) -> Self {
         bufs.clear();
         let (faults, fault_gen, fp_gen) = trace_parts(scenario, seed);
-        let window = scenario.predictor.window;
+        let lookback = scenario.predictor.max_window()
+            + scenario.predictor.placement_slack();
         let cp = scenario.platform.cp;
         FlatTrace {
             faults,
             fault_gen,
             fp_gen,
-            window,
+            lookback,
             cp,
             last_fault_raw: 0.0,
             last_fp_raw: 0.0,
             horizon: 0.0,
-            chunk: (32.0 * scenario.platform.mu).max(8.0 * (window + cp)),
+            chunk: (32.0 * scenario.platform.mu).max(8.0 * (lookback + cp)),
             bufs,
             pos: 0,
         }
@@ -631,10 +678,10 @@ impl FlatTrace {
         loop {
             let h = self.horizon + self.chunk;
             // Any event with visible time < h comes from a raw arrival at
-            // or before h + window + cp (a fault strikes at its arrival; a
-            // window opens at most window + cp after its announcement), so
-            // draining both processes to there completes the batch.
-            let gen_to = h + self.window + self.cp;
+            // or before h + lookback + cp (a fault strikes at its arrival;
+            // a window opens at most lookback + cp after its announcement),
+            // so draining both processes to there completes the batch.
+            let gen_to = h + self.lookback + self.cp;
             while self.last_fault_raw <= gen_to {
                 self.last_fault_raw = self.faults.next();
                 let (fault, pred) = self.fault_gen.events(self.last_fault_raw);
@@ -812,7 +859,7 @@ mod tests {
                 d: 10.0,
                 r: 100.0,
             },
-            predictor: PredictorSpec { recall, precision, window },
+            predictor: PredictorSpec::paper(recall, precision, window),
             fault_law: Law::Exponential,
             false_pred_law: Law::Exponential,
             fault_model: FaultModel::PlatformRenewal,

@@ -22,7 +22,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::{PredictorSpec, Scenario};
 use crate::predictor;
 use crate::sim::distribution::Law;
-use crate::sim::trace::{Event, EventSource, Prediction};
+use crate::sim::trace::{Event, EventSource};
 
 /// Write a failure log: one fault time (seconds, ascending) per line.
 pub fn write_failure_log(path: &Path, faults: &[f64]) -> Result<()> {
@@ -87,21 +87,15 @@ impl LogTrace {
         let feed =
             predictor::feed(faults, spec, cp, mu, false_pred_law, horizon, seed);
         // Which faults are covered by a window of the feed (=> predicted)?
+        // One shared two-pointer sweep (predictor::covered) instead of the
+        // old per-fault rescan of the whole feed.
+        let covered = predictor::covered(faults, &feed);
         let mut events: Vec<Event> = Vec::with_capacity(faults.len() + feed.len());
-        for &tf in faults {
-            let predicted = feed.iter().any(|a| {
-                a.true_positive && tf >= a.window_start && tf <= a.window_end
-            });
+        for (&tf, &predicted) in faults.iter().zip(&covered) {
             events.push(Event::Fault { t: tf, predicted });
         }
-        for a in feed {
-            events.push(Event::Prediction(Prediction {
-                notify_t: a.notify_t,
-                window_start: a.window_start,
-                window_end: a.window_end,
-                true_positive: a.true_positive,
-            }));
-        }
+        // The feed's announcements ARE trace predictions (one shared type).
+        events.extend(feed.into_iter().map(Event::Prediction));
         events.sort_by(|a, b| a.time().total_cmp(&b.time()));
         LogTrace { events, pos: 0, guard_t: horizon * 1e3 + 1e12 }
     }
@@ -159,7 +153,7 @@ mod tests {
     fn scenario(mu: f64) -> Scenario {
         Scenario {
             platform: Platform { mu, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
-            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            predictor: PredictorSpec::paper(0.85, 0.82, 600.0),
             fault_law: Law::Exponential,
             false_pred_law: Law::Exponential,
             fault_model: FaultModel::PlatformRenewal,

@@ -447,30 +447,17 @@ pub fn catalog() -> impl Iterator<Item = &'static StrategyDef> {
 
 /// Parse a comma-separated strategy list, paren-aware: commas inside a
 /// `name(k=v,…)` parameter list do not split entries (`;` works too and
-/// needs no care).  Used by the CLI's `--strategies` axis.
+/// needs no care).  Used by the CLI's `--strategies` axis; the splitter
+/// ([`crate::util::split_top_level`]) is shared with the predictor
+/// registry's `--predictors` parser.
 pub fn parse_strategy_list(raw: &str) -> Result<Vec<StrategyId>, String> {
     let mut out = Vec::new();
-    let mut depth = 0usize;
-    let mut start = 0usize;
-    let mut push = |tok: &str, out: &mut Vec<StrategyId>| -> Result<(), String> {
+    for tok in crate::util::split_top_level(raw) {
         let tok = tok.trim();
         if !tok.is_empty() {
             out.push(StrategyId::parse(tok)?);
         }
-        Ok(())
-    };
-    for (i, ch) in raw.char_indices() {
-        match ch {
-            '(' => depth += 1,
-            ')' => depth = depth.saturating_sub(1),
-            ',' if depth == 0 => {
-                push(&raw[start..i], &mut out)?;
-                start = i + 1;
-            }
-            _ => {}
-        }
     }
-    push(&raw[start..], &mut out)?;
     if out.is_empty() {
         return Err("empty strategy list".into());
     }

@@ -137,6 +137,30 @@ pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
     x.max(lo).min(hi)
 }
 
+/// Split `raw` on top-level commas: commas inside parentheses do not
+/// split, so `qtrust(q=0.25,…)` or `biased(beta=2,r=0.7)` stay one token.
+/// Shared by the CLI's `--strategies` and `--predictors` list parsers
+/// (`strategy::registry::parse_strategy_list`,
+/// `predictor::registry::parse_predictor_list`).
+pub fn split_top_level(raw: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in raw.char_indices() {
+        match ch {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&raw[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&raw[start..]);
+    out
+}
+
 /// Relative difference |a-b| / max(|a|,|b|,eps); used by tests.
 pub fn rel_diff(a: f64, b: f64) -> f64 {
     let denom = a.abs().max(b.abs()).max(1e-300);
@@ -213,5 +237,18 @@ mod tests {
         assert_eq!(clamp(5.0, 0.0, 10.0), 5.0);
         assert_eq!(clamp(-5.0, 0.0, 10.0), 0.0);
         assert_eq!(clamp(50.0, 0.0, 10.0), 10.0);
+    }
+
+    #[test]
+    fn split_top_level_is_paren_aware() {
+        assert_eq!(split_top_level("a,b"), vec!["a", "b"]);
+        assert_eq!(
+            split_top_level("x(k=1,j=2),y"),
+            vec!["x(k=1,j=2)", "y"]
+        );
+        assert_eq!(split_top_level(""), vec![""]);
+        assert_eq!(split_top_level("a,,b"), vec!["a", "", "b"]);
+        // Unbalanced ')' does not underflow.
+        assert_eq!(split_top_level("a),b"), vec!["a)", "b"]);
     }
 }

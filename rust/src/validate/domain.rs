@@ -58,6 +58,22 @@ pub enum Inapplicable {
     /// The finite-horizon renewal excess alone exceeds the cap: the job is
     /// too short for this heavy-tailed law to reach its renewal rate.
     HorizonTooShort,
+    /// The predictor's window sizes vary per announcement
+    /// ([`crate::config::PredModel::MixedWindow`]): the fixed-I terms of
+    /// Eqs. (4)/(10)/(14) — window exposure `(1−p)I`, the `T_P` fit — have
+    /// no single I to use.  (Eq. (3) never sees the window: q = 0 cells
+    /// stay applicable.)
+    NonUniformWindow,
+    /// The predictor's window placement is noisy
+    /// ([`crate::config::PredModel::Jitter`]): faults can fall outside
+    /// their announced window, so the *effective* recall sits below the
+    /// nominal r the formulas are evaluated at.
+    NoisyWindowPlacement,
+    /// The predictor attaches per-announcement confidence weights
+    /// ([`crate::config::PredModel::Classed`]): the engine's trust
+    /// probability varies per announcement, while the q = 1 formulas
+    /// assume every prediction is acted on.
+    ConfidenceClasses,
 }
 
 impl Inapplicable {
@@ -71,6 +87,9 @@ impl Inapplicable {
             Inapplicable::WindowsOverlap => "windows_overlap",
             Inapplicable::TransientFaultModel => "transient_fault_model",
             Inapplicable::HorizonTooShort => "horizon_too_short",
+            Inapplicable::NonUniformWindow => "non_uniform_window",
+            Inapplicable::NoisyWindowPlacement => "noisy_window_placement",
+            Inapplicable::ConfidenceClasses => "confidence_classes",
         }
     }
 
@@ -92,6 +111,9 @@ impl Inapplicable {
             "windows_overlap" => Inapplicable::WindowsOverlap,
             "transient_fault_model" => Inapplicable::TransientFaultModel,
             "horizon_too_short" => Inapplicable::HorizonTooShort,
+            "non_uniform_window" => Inapplicable::NonUniformWindow,
+            "noisy_window_placement" => Inapplicable::NoisyWindowPlacement,
+            "confidence_classes" => Inapplicable::ConfidenceClasses,
             _ => return None,
         })
     }
@@ -167,6 +189,26 @@ pub fn classify(
     policy: &TolerancePolicy,
 ) -> Result<f64, Inapplicable> {
     let gs = kind.grid_strategy().ok_or(Inapplicable::NoClosedForm)?;
+    // Predictor-model assumptions of the prediction-aware formulas.  The
+    // `biased` model stays in-domain: the derivation only consumes the
+    // fault's expected in-window position E_I^f, which `Scenario::e_if`
+    // now exposes per model.  Eq. (3) ignores predictions, so q = 0 cells
+    // are compared under every model.
+    if gs != waste::GridStrategy::Q0 {
+        use crate::config::PredModel;
+        match sc.predictor.model {
+            PredModel::Paper | PredModel::Biased { .. } => {}
+            PredModel::MixedWindow { .. } => {
+                return Err(Inapplicable::NonUniformWindow)
+            }
+            PredModel::Jitter { .. } => {
+                return Err(Inapplicable::NoisyWindowPlacement)
+            }
+            PredModel::Classed { .. } => {
+                return Err(Inapplicable::ConfidenceClasses)
+            }
+        }
+    }
     // Structural formula guards first (they also catch p = 0 before any
     // division below).
     let model = match waste::waste_checked(sc, gs, tr, tp) {
@@ -182,7 +224,7 @@ pub fn classify(
     }
     if gs != waste::GridStrategy::Q0 {
         let mu_p = sc.predictor.mu_p(sc.platform.mu);
-        if (sc.predictor.window + sc.platform.cp) / mu_p > OVERLAP_MAX {
+        if (sc.predictor.max_window() + sc.platform.cp) / mu_p > OVERLAP_MAX {
             return Err(Inapplicable::WindowsOverlap);
         }
     }
@@ -227,7 +269,7 @@ mod tests {
     fn sc(law: Law, fm: FaultModel) -> Scenario {
         Scenario {
             platform: Platform { mu: 60_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
-            predictor: PredictorSpec { recall: 0.85, precision: 0.82, window: 600.0 },
+            predictor: PredictorSpec::paper(0.85, 0.82, 600.0),
             fault_law: law,
             false_pred_law: law,
             fault_model: fm,
@@ -312,6 +354,72 @@ mod tests {
                 crate::model::waste::Inapplicability::ZeroPrecision
             ))
         );
+    }
+
+    #[test]
+    fn classify_names_each_predictor_model_guard() {
+        use crate::config::PredModel;
+        let pol = TolerancePolicy::default();
+        let mut s = sc(Law::Exponential, FaultModel::PlatformRenewal);
+
+        // Biased placement: in-domain, compared at the per-model E_I^f.
+        s.predictor.model = PredModel::Biased { beta: 2.0 };
+        let w = classify(&s, PolicyKind::NoCkpt, 8000.0, 700.0, &pol)
+            .expect("biased stays in-domain");
+        assert!(
+            (w - crate::model::waste::nockpt(&s, 8000.0)).abs() < 1e-12,
+            "biased must be priced with its own e_if"
+        );
+        // And the value genuinely differs from the uniform-placement one.
+        let mut uni = s;
+        uni.predictor.model = PredModel::Paper;
+        let w_uni =
+            classify(&uni, PolicyKind::NoCkpt, 8000.0, 700.0, &pol).unwrap();
+        assert!((w - w_uni).abs() > 1e-9, "e_if shift must move the model");
+
+        // Mixed windows / jitter / classes: named classifications for the
+        // prediction-aware formulas…
+        s.predictor.model =
+            PredModel::MixedWindow { i1: 300.0, i2: 1200.0, w: 0.5 };
+        assert_eq!(
+            classify(&s, PolicyKind::NoCkpt, 8000.0, 700.0, &pol),
+            Err(Inapplicable::NonUniformWindow)
+        );
+        s.predictor.model = PredModel::Jitter { sigma: 120.0 };
+        assert_eq!(
+            classify(&s, PolicyKind::Instant, 8000.0, 700.0, &pol),
+            Err(Inapplicable::NoisyWindowPlacement)
+        );
+        s.predictor.model =
+            PredModel::Classed { p_hi: 0.95, p_lo: 0.6, frac: 0.5 };
+        assert_eq!(
+            classify(&s, PolicyKind::WithCkpt, 8000.0, 700.0, &pol),
+            Err(Inapplicable::ConfidenceClasses)
+        );
+        // …while Eq. (3) never sees the predictor: q = 0 stays applicable
+        // under every model.
+        for model in [
+            PredModel::MixedWindow { i1: 300.0, i2: 1200.0, w: 0.5 },
+            PredModel::Jitter { sigma: 120.0 },
+            PredModel::Classed { p_hi: 0.95, p_lo: 0.6, frac: 0.5 },
+        ] {
+            s.predictor.model = model;
+            assert!(
+                classify(&s, PolicyKind::IgnorePredictions, 8000.0, 700.0, &pol)
+                    .is_ok(),
+                "{model:?}"
+            );
+        }
+
+        // The new labels are stable store identities and round-trip.
+        for (v, label) in [
+            (Inapplicable::NonUniformWindow, "non_uniform_window"),
+            (Inapplicable::NoisyWindowPlacement, "noisy_window_placement"),
+            (Inapplicable::ConfidenceClasses, "confidence_classes"),
+        ] {
+            assert_eq!(v.label(), label);
+            assert_eq!(Inapplicable::parse(label), Some(v));
+        }
     }
 
     #[test]

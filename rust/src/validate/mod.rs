@@ -51,7 +51,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use crate::campaign::grid::fnv1a64;
-use crate::campaign::{scheduler, Cell, Grid, PredictorKind, TracePool};
+use crate::campaign::{scheduler, Cell, Grid, TracePool};
 use crate::config::{FaultModel, Scenario};
 use crate::sim::distribution::Law;
 use crate::sim::engine::simulate_from;
@@ -146,7 +146,7 @@ pub fn default_grid() -> Grid {
             Law::Weibull { shape: 0.5 },
         ],
         uniform_false_preds: false,
-        predictors: vec![PredictorKind::PaperA, PredictorKind::PaperB],
+        predictors: crate::predictor::registry::paper_pair(),
         windows: vec![300.0, 600.0, 1200.0],
         strategies: registry::all_defaults()
             .into_iter()
@@ -166,7 +166,8 @@ pub fn smoke_grid() -> Grid {
         cp_ratios: vec![1.0, 0.1],
         fault_laws: vec![Law::Exponential, Law::Weibull { shape: 0.7 }],
         uniform_false_preds: false,
-        predictors: vec![PredictorKind::PaperA],
+        predictors: vec![crate::predictor::registry::get("a")
+            .expect("registered")],
         windows: vec![600.0, 1200.0],
         strategies: registry::all_defaults()
             .into_iter()

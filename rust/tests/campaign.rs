@@ -5,7 +5,8 @@
 
 use std::path::PathBuf;
 
-use ckptwin::campaign::{self, grid::fnv1a64, CampaignOptions, Grid, PredictorKind, Store};
+use ckptwin::campaign::{self, grid::fnv1a64, CampaignOptions, Grid, Store};
+use ckptwin::predictor::registry as predictors;
 use ckptwin::sim::distribution::Law;
 use ckptwin::strategy::{registry, StrategyId};
 
@@ -25,7 +26,7 @@ fn small_grid() -> Grid {
         cp_ratios: vec![1.0],
         fault_laws: vec![Law::Exponential, Law::Weibull { shape: 0.7 }],
         uniform_false_preds: false,
-        predictors: vec![PredictorKind::PaperA],
+        predictors: vec![predictors::get("a").unwrap()],
         windows: vec![600.0],
         strategies: vec![
             registry::get("RFO").unwrap(),
@@ -90,6 +91,54 @@ fn store_keys_stable_across_registry_port() {
               p=0.82;r=0.85;I=600;strat=Daly"
         )
     );
+}
+
+/// The predictor-registry port must not move paper-predictor keys either:
+/// the `pm=<model>` key component appears ONLY for non-paper placement
+/// models, so every pre-existing store (paper predictors by construction)
+/// still resumes; non-paper cells get their own stable, pinned grammar.
+#[test]
+fn predictor_model_keys_extend_without_moving_legacy_ones() {
+    let cell = |spec: ckptwin::PredictorSpec| {
+        ckptwin::campaign::Cell::new(
+            1 << 16,
+            1.0,
+            Law::Exponential,
+            Law::Exponential,
+            spec,
+            StrategyId::parse("NoCkptI").unwrap(),
+            1.0,
+        )
+    };
+    // Legacy grammar, byte-identical (no pm component anywhere).
+    let paper = cell(ckptwin::PredictorSpec::paper_a(600.0));
+    assert_eq!(
+        paper.key(),
+        "procs=65536;cp=1;law=exponential;fp=exponential;scale=1;\
+         p=0.82;r=0.85;I=600;strat=NoCkptI"
+    );
+    // A registered non-paper model appends its canonical label before the
+    // strategy component.
+    let biased = cell(
+        predictors::PredictorId::parse("biased(beta=2)")
+            .unwrap()
+            .spec(600.0),
+    );
+    let expected = "procs=65536;cp=1;law=exponential;fp=exponential;scale=1;\
+                    p=0.82;r=0.85;I=600;pm=biased(beta=2);strat=NoCkptI";
+    assert_eq!(biased.key(), expected);
+    assert_eq!(biased.hash, fnv1a64(expected.as_bytes()));
+    // Distinct models are distinct store rows at one scenario point…
+    let jitter = cell(
+        predictors::PredictorId::parse("jitter(sigma=120;r=0.85;p=0.82)")
+            .unwrap()
+            .spec(600.0),
+    );
+    assert_ne!(biased.hash, jitter.hash);
+    // …but all predictor variants share the fault-environment seeds
+    // (paired comparisons across the predictor axis).
+    assert_eq!(paper.trace_hash, biased.trace_hash);
+    assert_eq!(paper.instance_seed(9), jitter.instance_seed(9));
 }
 
 /// A store written before the registry port (simulated by writing records
@@ -231,7 +280,7 @@ fn interrupted_campaign_resumes_exactly() {
             Law::LogNormal { sigma: 1.2 },
         ],
         uniform_false_preds: false,
-        predictors: vec![PredictorKind::PaperA, PredictorKind::PaperB],
+        predictors: predictors::paper_pair(),
         windows: vec![300.0, 600.0, 900.0],
         strategies: vec![registry::get("NoCkptI").unwrap()],
         scale: 0.01,

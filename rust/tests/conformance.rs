@@ -227,6 +227,84 @@ fn conformance_store_resumes_and_artifact_is_valid_json() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Predictor-axis census, pinned: a grid over all five registered
+/// predictor models.  The `biased` model must PASS the prediction-aware
+/// comparisons — the closed forms priced at its per-model E_I^f (the
+/// tentpole's E_I^f dataflow, checked end-to-end against the simulator) —
+/// while `mixedwin`/`jitter`/`classed` classify under their named reasons
+/// and the q = 0 formula (predictor-blind) passes everywhere.
+#[test]
+fn predictor_model_census_is_pinned() {
+    use ckptwin::predictor::registry as predictors;
+    let grid = Grid {
+        procs: vec![1 << 16],
+        cp_ratios: vec![1.0],
+        fault_laws: vec![ckptwin::sim::distribution::Law::Exponential],
+        uniform_false_preds: false,
+        predictors: vec![
+            predictors::get("a").unwrap(),
+            predictors::PredictorId::parse("biased(beta=2)").unwrap(),
+            predictors::get("mixedwin").unwrap(),
+            predictors::get("jitter").unwrap(),
+            predictors::get("classed").unwrap(),
+        ],
+        windows: vec![1200.0],
+        strategies: vec![
+            registry::get("RFO").unwrap(),
+            registry::get("Instant").unwrap(),
+            registry::get("NoCkptI").unwrap(),
+            registry::get("WithCkptI").unwrap(),
+        ],
+        scale: 0.25,
+    };
+    let cells = expand_cells(&grid, &[1.0]);
+    assert_eq!(cells.len(), 20);
+    let opt = SweepOptions { instances: 32, ..Default::default() };
+    let (reports, _) = validate::run_sweep(&cells, &opt, None).unwrap();
+    let (mut pass, mut inapplicable) = (0, 0);
+    for r in &reports {
+        let model_of = |key: &str| {
+            ["mixedwin", "jitter(", "classed"]
+                .iter()
+                .find(|m| key.contains(*m))
+                .copied()
+        };
+        match r.verdict {
+            Verdict::Pass => {
+                pass += 1;
+                // Only q = 0 cells pass for the formula-breaking models.
+                if let Some(m) = model_of(&r.key) {
+                    assert_eq!(r.strategy, "RFO", "{m}: {}", r.key);
+                }
+            }
+            Verdict::Fail => panic!(
+                "unexplained failure at {}: sim {:.4} vs model {:.4}, \
+                 |dev| {:.4} > tol {:.4}",
+                r.key, r.sim_mean, r.model, r.deviation, r.tolerance
+            ),
+            Verdict::Inapplicable(reason) => {
+                inapplicable += 1;
+                let expected = match model_of(&r.key) {
+                    Some("mixedwin") => Inapplicable::NonUniformWindow,
+                    Some("jitter(") => Inapplicable::NoisyWindowPlacement,
+                    Some("classed") => Inapplicable::ConfidenceClasses,
+                    _ => panic!("{}: unexpected classification {reason}", r.key),
+                };
+                assert_eq!(reason, expected, "{}", r.key);
+                assert_ne!(r.strategy, "RFO", "{}", r.key);
+            }
+        }
+    }
+    // 4 paper-a passes + 4 biased passes + 3 × (1 q=0 pass).
+    assert_eq!(pass, 11, "predictor-axis census drifted");
+    assert_eq!(inapplicable, 9);
+    // The biased cells really were compared (not classified away).
+    assert!(reports
+        .iter()
+        .any(|r| r.key.contains("biased") && r.verdict == Verdict::Pass
+            && r.strategy == "NoCkptI"));
+}
+
 #[test]
 fn tolerance_policy_has_teeth() {
     // The oracle is not vacuous: a deliberately wrong "model" value at a

@@ -166,7 +166,7 @@ fn waste_increases_with_platform_size() {
 fn extreme_parameters_are_safe() {
     let sc = Scenario {
         platform: Platform { mu: 2000.0, c: 600.0, cp: 1200.0, d: 60.0, r: 600.0 },
-        predictor: PredictorSpec { recall: 0.7, precision: 0.4, window: 3000.0 },
+        predictor: PredictorSpec::paper(0.7, 0.4, 3000.0),
         fault_law: Law::Weibull { shape: 0.5 },
         false_pred_law: Law::Uniform,
         fault_model: FaultModel::PlatformRenewal,

@@ -38,11 +38,11 @@ fn arb_scenario(rng: &mut Rng) -> Scenario {
             d: rng.range(0.0, 120.0),
             r: rng.range(60.0, 1200.0),
         },
-        predictor: PredictorSpec {
-            recall: rng.range(0.05, 0.99),
-            precision: rng.range(0.05, 0.99),
+        predictor: PredictorSpec::paper(
+            rng.range(0.05, 0.99),
+            rng.range(0.05, 0.99),
             window,
-        },
+        ),
         fault_law: law,
         false_pred_law: fp_law,
         fault_model: FaultModel::PlatformRenewal,

@@ -122,6 +122,60 @@ fn qtrust_strategy_matches_simulate_q_side_door() {
     }
 }
 
+/// The same conservation/accounting/tiling/determinism suite over every
+/// predictor in `predictor::registry` — the predictor axis gets the
+/// engine-invariant coverage automatically, exactly like the strategy
+/// axis: a new registered model is checked here with no test edits.
+/// (The BestPeriod twins are skipped: their execution modes are already
+/// covered and their per-(strategy × predictor) searches would dominate
+/// tier-1 runtime.)
+#[test]
+fn every_registry_predictor_satisfies_engine_invariants() {
+    let strategies: Vec<StrategyId> = registry::all_defaults()
+        .into_iter()
+        .filter(|s| !s.name().starts_with("BestPeriod-"))
+        .collect();
+    for pid in ckptwin::predictor::registry::all_defaults() {
+        let mut sc = invariant_scenario();
+        sc.predictor = pid.spec(900.0);
+        for id in &strategies {
+            let pol = id.policy(&sc);
+            pol.validate(&sc);
+            let seed = 5u64;
+            let out = simulate(&sc, &pol, seed);
+            let tag = format!("{pid}/{id}");
+            // Work conservation.
+            let accounted = sc.job_size
+                + out.time_ckpt
+                + out.time_down
+                + out.time_idle
+                + out.work_lost;
+            assert!(
+                (out.makespan - accounted).abs() < 1e-6 * out.makespan,
+                "{tag}: makespan {} vs accounted {accounted}",
+                out.makespan
+            );
+            // Waste in [0, 1) and checkpoint accounting.
+            assert!((0.0..1.0).contains(&out.waste()), "{tag}: {}", out.waste());
+            let expect = out.n_reg_ckpts as f64 * sc.platform.c
+                + out.n_pro_ckpts as f64 * sc.platform.cp;
+            assert!(
+                (out.time_ckpt - expect).abs() < 1e-6 * expect.max(1.0),
+                "{tag}: ckpt time {} vs counts {expect}",
+                out.time_ckpt
+            );
+            // Determinism.
+            assert_eq!(out, simulate(&sc, &pol, seed), "{tag}: nondeterministic");
+            // Timeline tiling (the traced path shares the engine builder,
+            // so its outcome must also equal the untraced one).
+            let (tout, tl) = simulate_traced(&sc, &pol, seed);
+            assert_eq!(tout, out, "{tag}: traced path diverged");
+            tl.validate(tout.makespan)
+                .unwrap_or_else(|e| panic!("{tag}: timeline does not tile: {e}"));
+        }
+    }
+}
+
 /// With recall 0 there are no predictions at all, so ExactPred and Instant
 /// (which differ only in what they do about predictions) must coincide.
 #[test]
@@ -159,6 +213,7 @@ impl Scripted {
                 window_start: 1600.0,
                 window_end: 2600.0,
                 true_positive: false,
+                weight: 1.0,
             })],
             next: 0,
         }
@@ -181,7 +236,7 @@ impl EventSource for Scripted {
 fn scripted_scenario() -> Scenario {
     Scenario {
         platform: Platform { mu: 1e9, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
-        predictor: PredictorSpec { recall: 0.5, precision: 0.5, window: 1000.0 },
+        predictor: PredictorSpec::paper(0.5, 0.5, 1000.0),
         fault_law: Law::Exponential,
         false_pred_law: Law::Exponential,
         fault_model: FaultModel::PlatformRenewal,
