@@ -41,10 +41,13 @@ pub use grid::{Cell, Grid};
 pub use pool::TracePool;
 pub use store::{CellRecord, Store};
 
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::obs::SpanTimer;
 use crate::sim::engine::simulate_from_capped;
 use crate::stats::Welford;
 use crate::strategy::Policy;
@@ -105,6 +108,98 @@ impl CellOutcome {
     }
 }
 
+/// Throughput telemetry of one campaign execution ([`run_cells_metered`]).
+///
+/// Gathered lock-free: workers bump relaxed atomics once per *unit* (an
+/// instance block), never per event, and per-worker [`TracePool`] stats
+/// are folded in as deltas at unit boundaries — the simulation hot path
+/// is untouched.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CampaignMetrics {
+    /// Cells newly computed (skipped/resumed cells excluded).
+    pub cells: usize,
+    /// Simulation instances executed.
+    pub instances: u64,
+    /// Trace events consumed across all simulations.
+    pub sim_events: u64,
+    /// Wall-clock seconds of the execution phase.
+    pub elapsed_secs: f64,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    pub pool_evictions: u64,
+}
+
+impl CampaignMetrics {
+    pub fn cells_per_sec(&self) -> f64 {
+        if self.elapsed_secs > 0.0 {
+            self.cells as f64 / self.elapsed_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn events_per_sec(&self) -> f64 {
+        if self.elapsed_secs > 0.0 {
+            self.sim_events as f64 / self.elapsed_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Trace-pool hit rate in [0, 1] (0 when the pool was never asked).
+    pub fn pool_hit_rate(&self) -> f64 {
+        let asked = self.pool_hits + self.pool_misses;
+        if asked > 0 {
+            self.pool_hits as f64 / asked as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Lock-free progress/throughput accumulators shared by the workers.
+#[derive(Default)]
+struct Meter {
+    units_done: AtomicUsize,
+    cells_done: AtomicUsize,
+    instances: AtomicU64,
+    sim_events: AtomicU64,
+    pool_hits: AtomicU64,
+    pool_misses: AtomicU64,
+    pool_evictions: AtomicU64,
+}
+
+/// Per-worker scratch: the trace pool plus the pool-stat watermarks
+/// already folded into the [`Meter`] (stats are cumulative; workers
+/// report deltas at unit boundaries).
+struct WorkerState {
+    tp: TracePool,
+    seen_hits: u64,
+    seen_misses: u64,
+    seen_evictions: u64,
+}
+
+impl WorkerState {
+    fn new() -> WorkerState {
+        WorkerState {
+            tp: TracePool::new(),
+            seen_hits: 0,
+            seen_misses: 0,
+            seen_evictions: 0,
+        }
+    }
+
+    fn flush_pool_stats(&mut self, meter: &Meter) {
+        let (h, m, e) = (self.tp.hits(), self.tp.misses(), self.tp.evictions());
+        meter.pool_hits.fetch_add(h - self.seen_hits, Ordering::Relaxed);
+        meter.pool_misses.fetch_add(m - self.seen_misses, Ordering::Relaxed);
+        meter
+            .pool_evictions
+            .fetch_add(e - self.seen_evictions, Ordering::Relaxed);
+        (self.seen_hits, self.seen_misses, self.seen_evictions) = (h, m, e);
+    }
+}
+
 /// Per-cell in-flight state: one slot per instance block, merged in slot
 /// order by whichever worker completes the last block.
 struct CellState {
@@ -144,6 +239,20 @@ pub fn run_cells(
     opt: &CampaignOptions,
     store: Option<&mut Store>,
 ) -> Result<(Vec<CellOutcome>, usize)> {
+    let (outcomes, skipped, _) = run_cells_metered(cells, opt, store, false)?;
+    Ok((outcomes, skipped))
+}
+
+/// [`run_cells`] plus throughput telemetry, and (optionally) a stderr
+/// heartbeat: a monitor thread that prints progress, rates and an ETA
+/// every couple of seconds while the workers grind.  The heartbeat is
+/// meant for interactive CLI runs — library callers pass `false`.
+pub fn run_cells_metered(
+    cells: &[Cell],
+    opt: &CampaignOptions,
+    store: Option<&mut Store>,
+    heartbeat: bool,
+) -> Result<(Vec<CellOutcome>, usize, CampaignMetrics)> {
     let instances = opt.instances.max(1);
     let block = opt.block_size();
     let blocks_per_cell = instances.div_ceil(block);
@@ -159,7 +268,7 @@ pub fn run_cells(
         .collect();
     let skipped = cells.len() - pending.len();
     if pending.is_empty() {
-        return Ok((Vec::new(), skipped));
+        return Ok((Vec::new(), skipped, CampaignMetrics::default()));
     }
 
     let states: Vec<Mutex<CellState>> = pending
@@ -177,11 +286,14 @@ pub fn run_cells(
     let append_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
     let n_units = pending.len() * blocks_per_cell;
+    let meter = Meter::default();
+    let finished = AtomicBool::new(false);
+    let timer = SpanTimer::start();
     // Each worker owns a TracePool: the strategy variants of a scenario
     // (and any other unit sharing scenario_hash + seed that lands on this
     // worker) replay one memoized trace instead of regenerating it.  Hits
     // only change speed, never values, so determinism is preserved.
-    scheduler::run_units_stateful(n_units, opt.threads, TracePool::new, |tp: &mut TracePool, u| {
+    let unit = |ws: &mut WorkerState, u: usize| {
         let (ci, bi) = (u / blocks_per_cell, u % blocks_per_cell);
         let cell = &cells[pending[ci]];
         let sc = cell.scenario();
@@ -201,6 +313,8 @@ pub fn run_cells(
         };
         let mut waste = Welford::new();
         let mut makespan = Welford::new();
+        let mut events: u64 = 0;
+        let mut sims: u64 = 0;
         for i in (bi * block)..((bi + 1) * block).min(instances) {
             let seed = cell.instance_seed(i as u64);
             let out = simulate_from_capped(
@@ -208,12 +322,19 @@ pub fn run_cells(
                 &pol,
                 1.0,
                 seed,
-                tp.replay(cell.scenario_hash, &sc, seed),
+                ws.tp.replay(cell.scenario_hash, &sc, seed),
                 f64::INFINITY,
             );
             waste.push(out.waste());
             makespan.push(out.makespan);
+            events += out.events;
+            sims += 1;
         }
+        // One batch of relaxed bumps per unit, after the simulation work.
+        meter.sim_events.fetch_add(events, Ordering::Relaxed);
+        meter.instances.fetch_add(sims, Ordering::Relaxed);
+        meter.units_done.fetch_add(1, Ordering::Relaxed);
+        ws.flush_pool_stats(&meter);
         let mut st = states[ci].lock().expect("cell state poisoned");
         st.slots[bi] = Some((waste, makespan));
         st.remaining -= 1;
@@ -241,8 +362,25 @@ pub fn run_cells(
                 }
             }
             st.done = Some(outcome);
+            meter.cells_done.fetch_add(1, Ordering::Relaxed);
         }
+    };
+    std::thread::scope(|s| {
+        if heartbeat {
+            s.spawn(|| heartbeat_loop(&meter, &finished, n_units, pending.len(), &timer));
+        }
+        scheduler::run_units_stateful(n_units, opt.threads, WorkerState::new, unit);
+        finished.store(true, Ordering::Relaxed);
     });
+    let metrics = CampaignMetrics {
+        cells: pending.len(),
+        instances: meter.instances.load(Ordering::Relaxed),
+        sim_events: meter.sim_events.load(Ordering::Relaxed),
+        elapsed_secs: timer.elapsed_secs(),
+        pool_hits: meter.pool_hits.load(Ordering::Relaxed),
+        pool_misses: meter.pool_misses.load(Ordering::Relaxed),
+        pool_evictions: meter.pool_evictions.load(Ordering::Relaxed),
+    };
 
     if let Some(e) = append_err.into_inner().expect("append_err poisoned") {
         return Err(e);
@@ -256,7 +394,39 @@ pub fn run_cells(
                 .expect("cell completed")
         })
         .collect();
-    Ok((outcomes, skipped))
+    Ok((outcomes, skipped, metrics))
+}
+
+/// The heartbeat monitor: wake every ~2 s, print progress + ETA to stderr,
+/// exit within one period of the workers draining the queue.
+fn heartbeat_loop(
+    meter: &Meter,
+    finished: &AtomicBool,
+    n_units: usize,
+    n_cells: usize,
+    timer: &SpanTimer,
+) {
+    loop {
+        std::thread::sleep(Duration::from_millis(2000));
+        if finished.load(Ordering::Relaxed) {
+            return;
+        }
+        let done = meter.units_done.load(Ordering::Relaxed);
+        let elapsed = timer.elapsed_secs();
+        let eta = if done > 0 {
+            elapsed / done as f64 * (n_units - done) as f64
+        } else {
+            f64::NAN
+        };
+        let events = meter.sim_events.load(Ordering::Relaxed);
+        eprintln!(
+            "[campaign] {done}/{n_units} units, {}/{} cells, {:.0} events/s, ETA {:.0}s",
+            meter.cells_done.load(Ordering::Relaxed),
+            n_cells,
+            events as f64 / elapsed.max(1e-9),
+            eta,
+        );
+    }
 }
 
 /// Expand and execute a grid without a store (in-memory sweep); outcomes in
@@ -359,6 +529,35 @@ mod tests {
             }
             assert_eq!(o.waste, waste, "cell {}", o.cell.key());
         }
+    }
+
+    #[test]
+    fn metered_run_matches_plain_run_and_counts_everything() {
+        let g = tiny_grid();
+        let cells = g.expand();
+        let opt = CampaignOptions { instances: 4, block: 2, threads: 3 };
+        let (plain, _) = run_cells(&cells, &opt, None).unwrap();
+        let (metered, skipped, m) =
+            run_cells_metered(&cells, &opt, None, false).unwrap();
+        assert_eq!(skipped, 0);
+        // Telemetry is passive: aggregates are bit-identical.
+        for (a, b) in plain.iter().zip(&metered) {
+            assert_eq!(a.waste, b.waste, "cell {}", a.cell.key());
+            assert_eq!(a.makespan, b.makespan);
+        }
+        assert_eq!(m.cells, cells.len());
+        assert_eq!(m.instances, (cells.len() * 4) as u64);
+        // Every simulation consumes at least one trace event, and the pool
+        // was consulted once per instance.
+        assert!(m.sim_events >= m.instances);
+        assert_eq!(m.pool_hits + m.pool_misses, m.instances);
+        assert!((0.0..=1.0).contains(&m.pool_hit_rate()));
+        assert!(m.elapsed_secs >= 0.0);
+        // Nothing ran => empty metrics.
+        let (_, _, m2) = run_cells_metered(&[], &opt, None, false).unwrap();
+        assert_eq!(m2.instances, 0);
+        assert_eq!(m2.events_per_sec(), 0.0);
+        assert_eq!(m2.pool_hit_rate(), 0.0);
     }
 
     #[test]

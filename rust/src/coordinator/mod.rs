@@ -30,6 +30,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Scenario;
 use crate::model::waste::waste_clipped;
+use crate::obs::{Hist, SpanTimer, Stopwatch};
 use crate::sim::trace::{Event, TraceStream};
 use crate::strategy::{Policy, PolicyKind};
 use checkpoint::CheckpointStore;
@@ -76,6 +77,11 @@ pub struct Report {
     pub steps_lost: u64,
     /// Wall-clock seconds of the run.
     pub wall_seconds: f64,
+    /// Wall-clock latency (ns) of each leader-loop pass: one scheduling
+    /// decision plus the action it dispatched (step, checkpoint queue,
+    /// recovery).  log2-bucketed; the tail exposes slow recoveries and
+    /// checkpoint stalls.
+    pub decision_ns: Hist,
 }
 
 enum WriterMsg {
@@ -256,7 +262,16 @@ pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Re
     }
 
     // --- main loop ---------------------------------------------------------
+    // One latency sample per leader-loop pass.  The `continue 'outer`
+    // jumps inside the macros bypass any end-of-iteration code, so each
+    // pass is closed out (and its span recorded) at the top of the next.
+    let mut decisions = Stopwatch::new();
+    let mut pass_timer: Option<SpanTimer> = None;
     'outer: while validated + since < job_steps {
+        if let Some(t) = pass_timer {
+            decisions.record_nanos(t.elapsed_nanos());
+        }
+        pass_timer = Some(SpanTimer::start());
         // 1. Consume any event already due at sim_t.
         while next_ev.time() <= sim_t {
             match next_ev {
@@ -361,6 +376,11 @@ pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Re
         }
     }
 
+    if let Some(t) = pass_timer {
+        decisions.record_nanos(t.elapsed_nanos());
+    }
+    rep.decision_ns = decisions.take();
+
     tx.send(WriterMsg::Stop).ok();
     writer
         .join()
@@ -422,6 +442,10 @@ mod tests {
         // + 120 s ckpt.
         assert!(rep.sim_waste > 0.0 && rep.sim_waste < 0.15, "{}", rep.sim_waste);
         assert!(rep.n_reg_ckpts > 0);
+        // One decision-latency sample per leader-loop pass: at least one
+        // per executed step, and the histogram books must balance.
+        assert!(rep.decision_ns.count() >= rep.steps_executed);
+        assert!(rep.decision_ns.quantile(0.99) >= rep.decision_ns.quantile(0.5));
     }
 
     #[test]

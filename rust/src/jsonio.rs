@@ -1,10 +1,17 @@
 //! Minimal JSON reader/writer (offline environment: no serde).
 //!
 //! Covers the full JSON grammar minus exotic escapes; used to consume
-//! `artifacts/manifest.json` and to emit experiment metadata.
+//! `artifacts/manifest.json` and to emit experiment metadata.  Also hosts
+//! [`JsonlAppender`], the resumable-JSONL primitive shared by the campaign
+//! result store and the conformance store.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write as _};
+use std::path::Path;
+
+use anyhow::Context;
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -312,6 +319,93 @@ fn write_value(out: &mut String, v: &Value) {
     }
 }
 
+/// The crash-consistent half of a resumable JSONL store: open (optionally
+/// truncating), replay existing lines through a caller-supplied parser,
+/// repair a torn final line, and append flushed lines.
+///
+/// Contract shared by `campaign::store::Store` and
+/// `validate::store::ConformanceStore`:
+/// * every append is one line, flushed before the call returns, so an
+///   interrupt loses at most the line in flight;
+/// * an unparseable line during replay (the torn tail of an interrupted
+///   write) is counted in [`JsonlAppender::skipped_lines`], not an error;
+/// * if the file does not end in `\n`, a newline is appended on open so
+///   the next record starts on a fresh line;
+/// * duplicate-key semantics (last-wins) belong to the caller's replay
+///   callback — this type only sees lines.
+pub struct JsonlAppender {
+    file: File,
+    /// Unparseable lines skipped during replay.
+    pub skipped_lines: usize,
+}
+
+impl JsonlAppender {
+    /// Open `path` (creating parent directories and the file as needed).
+    /// With `truncate`, existing content is discarded; otherwise every
+    /// non-empty existing line is passed to `on_line`, which returns
+    /// whether it parsed (false ⇒ counted as skipped).
+    pub fn open(
+        path: &Path,
+        truncate: bool,
+        mut on_line: impl FnMut(&str) -> bool,
+    ) -> anyhow::Result<JsonlAppender> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let mut skipped_lines = 0;
+        if !truncate && path.exists() {
+            let reader = BufReader::new(
+                File::open(path)
+                    .with_context(|| format!("opening {}", path.display()))?,
+            );
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if !on_line(&line) {
+                    skipped_lines += 1;
+                }
+            }
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(!truncate)
+            .write(true)
+            .truncate(truncate)
+            .open(path)
+            .with_context(|| format!("opening {} for append", path.display()))?;
+        // Repair a torn tail: if the last line was cut before its newline,
+        // terminate it so the next append starts on a fresh line.
+        if !truncate {
+            let len = file.metadata()?.len();
+            if len > 0 {
+                let mut last = [0u8; 1];
+                let mut probe = File::open(path)?;
+                std::io::Seek::seek(&mut probe, std::io::SeekFrom::End(-1))?;
+                std::io::Read::read_exact(&mut probe, &mut last)?;
+                if last[0] != b'\n' {
+                    file.write_all(b"\n")?;
+                    file.flush()?;
+                }
+            }
+        }
+        Ok(JsonlAppender { file, skipped_lines })
+    }
+
+    /// Append one serialized record (the newline is added here) and flush
+    /// it to disk before returning.
+    pub fn append_line(&mut self, line: &str) -> anyhow::Result<()> {
+        self.file.write_all(line.as_bytes())?;
+        self.file.write_all(b"\n")?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,5 +450,45 @@ mod tests {
     fn unicode_escape_and_utf8() {
         let v = parse(r#""café μ""#).unwrap();
         assert_eq!(v.as_str(), Some("café μ"));
+    }
+
+    #[test]
+    fn jsonl_appender_replays_and_repairs_torn_tail() {
+        let path = std::env::temp_dir().join(format!(
+            "ckptwin-jsonl-appender-{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut f = JsonlAppender::open(&path, true, |_| true).unwrap();
+            f.append_line(r#"{"a":1}"#).unwrap();
+            f.append_line(r#"{"a":2}"#).unwrap();
+        }
+        // Tear the file mid-record.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"a\":3");
+        std::fs::write(&path, &text).unwrap();
+        let mut lines = Vec::new();
+        let mut f = JsonlAppender::open(&path, false, |l| {
+            let ok = parse(l).is_ok();
+            if ok {
+                lines.push(l.to_string());
+            }
+            ok
+        })
+        .unwrap();
+        assert_eq!(lines, [r#"{"a":1}"#, r#"{"a":2}"#]);
+        assert_eq!(f.skipped_lines, 1);
+        // The torn tail was newline-terminated, so this append starts
+        // cleanly on its own line.
+        f.append_line(r#"{"a":4}"#).unwrap();
+        drop(f);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with("{\"a\":3\n{\"a\":4}\n"), "{text}");
+        // Truncating open discards everything.
+        let f = JsonlAppender::open(&path, true, |_| panic!("no replay")).unwrap();
+        assert_eq!(f.skipped_lines, 0);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "");
+        let _ = std::fs::remove_file(&path);
     }
 }

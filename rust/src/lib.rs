@@ -31,6 +31,7 @@ pub mod coordinator;
 pub mod harness;
 pub mod jsonio;
 pub mod model;
+pub mod obs;
 pub mod predictor;
 pub mod runtime;
 pub mod sim;

@@ -26,6 +26,18 @@
 //!                   deviation table, a resumable JSONL conformance store
 //!                   and a machine-readable `CONFORMANCE.json`; non-zero
 //!                   exit on any unexplained failure (the CI gate)
+//! * `metrics`     — telemetry snapshot + waste-accounting audit: runs a
+//!                   metered campaign (cells/sec, events/sec, trace-pool
+//!                   hit-rate), re-simulates every cell with the
+//!                   `EventCounters` recorder and checks that the
+//!                   counter-derived time decomposition tiles each
+//!                   makespan and reconciles with `SimOutcome::waste()`,
+//!                   compares campaign-aggregated decompositions
+//!                   term-by-term against the closed-form waste terms,
+//!                   times a short coordinator run's decision latency,
+//!                   and writes everything to `METRICS.json` (schema
+//!                   `ckptwin-metrics/1`); non-zero exit on any audit
+//!                   violation (the CI gate)
 //! * `strategies`  — list the strategy registry (names, aliases,
 //!                   parameters); any registered name — including the
 //!                   parameterized `qtrust(q=…)` and the BestPeriod
@@ -75,7 +87,7 @@ COMMANDS
   config       <file.toml> [--instances N]
   campaign     run|resume|report [--out results/campaign.jsonl]
                [--grid paper|smoke] [--instances N] [--threads N]
-               [--block N] [--scale F] [--uniform-fp]
+               [--block N] [--scale F] [--uniform-fp] [--heartbeat]
                [--procs 65536,131072,...] [--cp-ratios 1.0,0.1]
                [--laws exponential,weibull0.7,lognormal1.2]
                [--predictors a,b,biased(beta=2),...] [--windows 300,600,...]
@@ -93,6 +105,16 @@ COMMANDS
                [--json CONFORMANCE.json] + the campaign axis overrides
                (--procs, --laws, --predictors, --windows, --strategies,
                --cp-ratios, --scale)
+  metrics      telemetry snapshot + waste-accounting audit: metered
+               campaign throughput (cells/s, events/s, pool hit-rate),
+               per-simulation counter-vs-outcome audit (decomposed times
+               must tile the makespan), campaign-aggregate decomposition
+               vs the closed-form waste terms, coordinator decision-
+               latency histogram; writes METRICS.json and exits non-zero
+               on any audit violation.  [--grid smoke|paper]
+               [--instances N] [--threads N] [--json METRICS.json]
+               [--heartbeat] [--steps 240] [--mtbf 3000] [--seed 42]
+               + the campaign axis overrides (--procs, --laws, ...)
   strategies   list the strategy registry: names, aliases, parameters
                (any registered name is valid wherever a strategy is named)
   predictors   list the predictor registry: names, aliases, parameters
@@ -731,15 +753,20 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             .count(),
         opt.instances,
     );
-    let t0 = std::time::Instant::now();
-    let (outcomes, skipped) = campaign::run_cells(&cells, &opt, Some(&mut store))?;
-    let dt = t0.elapsed().as_secs_f64();
+    let (outcomes, skipped, m) = campaign::run_cells_metered(
+        &cells,
+        &opt,
+        Some(&mut store),
+        args.has("heartbeat"),
+    )?;
     println!(
-        "done: {} cells computed, {} skipped, {:.1}s ({:.1} cells/s)",
+        "done: {} cells computed, {} skipped, {:.1}s ({:.1} cells/s, {:.0} events/s, pool hit-rate {:.2})",
         outcomes.len(),
         skipped,
-        dt,
-        outcomes.len() as f64 / dt.max(1e-9),
+        m.elapsed_secs,
+        m.cells_per_sec(),
+        m.events_per_sec(),
+        m.pool_hit_rate(),
     );
     println!("store: {} ({} cells total)", out, store.len());
     Ok(())
@@ -848,6 +875,333 @@ fn cmd_validate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Assemble a JSON object from `(key, value)` pairs — the `METRICS.json`
+/// section builder (`cmd_metrics`).
+fn json_obj(pairs: Vec<(&str, ckptwin::jsonio::Value)>) -> ckptwin::jsonio::Value {
+    let map = pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    ckptwin::jsonio::Value::Obj(map)
+}
+
+/// Telemetry snapshot + waste-accounting audit (`ckptwin metrics`).
+///
+/// Three phases, one artifact:
+///
+/// 1. **campaign** — the grid runs on the metered scheduler; cells/sec,
+///    events/sec and trace-pool efficacy land in the registry.
+/// 2. **audit** — every cell re-simulates with the [`EventCounters`]
+///    recorder attached.  Per simulation, the recorded run must equal the
+///    plain run bit-for-bit (recorders are pure observers) and the
+///    counter-derived time decomposition must tile the makespan and
+///    reconcile with `SimOutcome::waste()` (`EventCounters::audit`).  Per
+///    cell, where a closed form applies, the aggregated decomposition is
+///    compared term-by-term (regular ckpt / proactive ckpt / down /
+///    re-exec) against the model's waste terms at the cell's conformance
+///    tolerance.
+/// 3. **coordinator** — a short synthetic-workload run samples per-pass
+///    decision latency into a log2 histogram.
+///
+/// Everything is assembled into `METRICS.json` (schema
+/// `ckptwin-metrics/1`); any audit violation exits non-zero — the CI gate.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    use ckptwin::campaign::{self, CampaignOptions, Grid};
+    use ckptwin::jsonio::Value;
+    use ckptwin::obs::{report, EventCounters, MetricsRegistry};
+    use ckptwin::sim::engine::{simulate_q, simulate_recorded};
+    use ckptwin::sim::trace::FlatTrace;
+    use ckptwin::stats::Welford;
+    use ckptwin::validate::{domain, TolerancePolicy};
+
+    let obj = json_obj;
+
+    // The default grid is the conformance smoke grid: every registered
+    // strategy with a default period rule (the BestPeriod twins search,
+    // which the audit doesn't need), both C_p ratios, two laws, two
+    // windows — a census of the engine's execution modes.
+    let mut grid = match args.get_str("grid").unwrap_or("smoke") {
+        "smoke" => ckptwin::validate::smoke_grid(),
+        "paper" => Grid::paper(),
+        other => return Err(anyhow!("unknown grid preset '{other}' (smoke|paper)")),
+    };
+    apply_grid_overrides(&mut grid, args)?;
+    let cells = grid.expand();
+    let instances = args.get_or("instances", harness::default_instances()).max(1);
+    let opt = CampaignOptions {
+        instances,
+        block: args.get_or("block", 0usize),
+        threads: args.get_or("threads", 0usize),
+    };
+    let mut reg = MetricsRegistry::new();
+
+    // --- phase 1: metered campaign (throughput telemetry) ----------------
+    println!("metrics: campaign phase — {} cells, {} instances/cell", cells.len(), instances);
+    let (_outcomes, _skipped, m) =
+        campaign::run_cells_metered(&cells, &opt, None, args.has("heartbeat"))?;
+    reg.add("campaign.cells", m.cells as u64);
+    reg.add("campaign.instances", m.instances);
+    reg.add("campaign.sim_events", m.sim_events);
+    reg.add("campaign.pool_hits", m.pool_hits);
+    reg.add("campaign.pool_misses", m.pool_misses);
+    reg.add("campaign.pool_evictions", m.pool_evictions);
+    reg.set_gauge("campaign.elapsed_secs", m.elapsed_secs);
+    reg.set_gauge("campaign.cells_per_sec", m.cells_per_sec());
+    reg.set_gauge("campaign.events_per_sec", m.events_per_sec());
+    reg.set_gauge("campaign.pool_hit_rate", m.pool_hit_rate());
+    println!(
+        "  {} cells, {} sims, {} events in {:.2}s — {:.1} cells/s, {:.0} events/s, pool hit-rate {:.2}",
+        m.cells,
+        m.instances,
+        m.sim_events,
+        m.elapsed_secs,
+        m.cells_per_sec(),
+        m.events_per_sec(),
+        m.pool_hit_rate(),
+    );
+    let campaign_section = obj(vec![
+        ("cells", Value::Num(m.cells as f64)),
+        ("instances", Value::Num(m.instances as f64)),
+        ("sim_events", Value::Num(m.sim_events as f64)),
+        ("elapsed_secs", Value::Num(m.elapsed_secs)),
+        ("cells_per_sec", Value::Num(m.cells_per_sec())),
+        ("events_per_sec", Value::Num(m.events_per_sec())),
+        (
+            "pool",
+            obj(vec![
+                ("hits", Value::Num(m.pool_hits as f64)),
+                ("misses", Value::Num(m.pool_misses as f64)),
+                ("evictions", Value::Num(m.pool_evictions as f64)),
+                ("hit_rate", Value::Num(m.pool_hit_rate())),
+            ]),
+        ),
+    ]);
+
+    // --- phase 2: waste-accounting audit ---------------------------------
+    println!("metrics: audit phase — recorder census over every cell");
+    let tolpol = TolerancePolicy::default();
+    let mut total = EventCounters::default();
+    let mut audit_sims: u64 = 0;
+    let mut violations: Vec<String> = Vec::new();
+    let mut term_rows: Vec<Value> = Vec::new();
+    let mut term_failures = 0usize;
+    let mut sum_makespan = 0.0f64;
+    let mut sum_job = 0.0f64;
+    let mut seen = std::collections::BTreeSet::new();
+    for cell in &cells {
+        if !seen.insert(cell.hash) {
+            continue;
+        }
+        let sc = cell.scenario();
+        let pol = cell.strategy.policy(&sc);
+        let mut cc = EventCounters::default();
+        let mut waste = Welford::new();
+        let mut cell_makespan = 0.0f64;
+        for i in 0..instances as u64 {
+            let seed = cell.instance_seed(i);
+            let plain = simulate_q(&sc, &pol, 1.0, seed);
+            let mut c = EventCounters::default();
+            let out = simulate_recorded(&sc, &pol, 1.0, seed, FlatTrace::new(&sc, seed), &mut c);
+            audit_sims += 1;
+            if out != plain {
+                violations.push(format!(
+                    "{}: seed {seed}: recorded run diverged from plain run",
+                    cell.key()
+                ));
+            }
+            if let Err(e) = c.audit(&out) {
+                violations.push(format!("{}: seed {seed}: {e}", cell.key()));
+            }
+            reg.observe("audit.faults_per_sim", out.n_faults);
+            reg.observe("audit.events_per_sim", out.events);
+            waste.push(out.waste());
+            cell_makespan += out.makespan;
+            sum_job += out.job_size;
+            cc.merge(&c);
+        }
+        sum_makespan += cell_makespan;
+        total.merge(&cc);
+        // Term-by-term model comparison, where a closed form applies at
+        // this cell (same classification the conformance sweep uses).
+        let kind = cell.strategy.kind();
+        let gs = match kind.grid_strategy() {
+            Some(gs) => gs,
+            None => continue,
+        };
+        let model_total = match domain::classify(&sc, kind, pol.tr, pol.tp, &tolpol) {
+            Ok(m) => m,
+            Err(_) => continue,
+        };
+        let terms = waste::waste_terms(&sc, gs, pol.tr, pol.tp);
+        let tol = domain::tolerance(&tolpol, &sc, kind, pol.tr, waste.ci95());
+        let sim = [
+            cc.time_ckpt_reg / cell_makespan,
+            cc.time_ckpt_pro / cell_makespan,
+            cc.time_down / cell_makespan,
+            cc.time_reexec / cell_makespan,
+        ];
+        let model = [terms.ckpt_reg, terms.ckpt_pro, terms.down, terms.reexec];
+        let mut dev = (waste.mean() - model_total).abs();
+        for (s, mv) in sim.iter().zip(&model) {
+            dev = dev.max((s - mv).abs());
+        }
+        let within = dev <= tol;
+        if !within {
+            term_failures += 1;
+        }
+        term_rows.push(obj(vec![
+            ("key", Value::Str(cell.key())),
+            ("strategy", Value::Str(cell.strategy.to_string())),
+            ("law", Value::Str(cell.fault_law.label())),
+            ("tr", Value::Num(pol.tr)),
+            (
+                "model",
+                obj(vec![
+                    ("ckpt_reg", Value::Num(terms.ckpt_reg)),
+                    ("ckpt_pro", Value::Num(terms.ckpt_pro)),
+                    ("down", Value::Num(terms.down)),
+                    ("reexec", Value::Num(terms.reexec)),
+                    ("total", Value::Num(model_total)),
+                ]),
+            ),
+            (
+                "sim",
+                obj(vec![
+                    ("ckpt_reg", Value::Num(sim[0])),
+                    ("ckpt_pro", Value::Num(sim[1])),
+                    ("down", Value::Num(sim[2])),
+                    ("reexec", Value::Num(sim[3])),
+                    ("waste", Value::Num(waste.mean())),
+                ]),
+            ),
+            ("deviation_max", Value::Num(dev)),
+            ("tolerance", Value::Num(tol)),
+            ("within_tolerance", Value::Bool(within)),
+        ]));
+    }
+    // Campaign-level reconciliation: aggregated counters must reproduce
+    // the aggregate waste exactly (follows from the per-sim identities;
+    // asserted independently so a merge bug can't hide).
+    let agg_waste_sim = (sum_makespan - sum_job) / sum_makespan;
+    let mut overhead = total.time_ckpt_reg + total.time_ckpt_pro + total.time_down;
+    overhead += total.time_idle + total.time_reexec;
+    let agg_waste_counters = overhead / sum_makespan;
+    if (agg_waste_sim - agg_waste_counters).abs() > 1e-6 {
+        violations.push(format!(
+            "campaign aggregate: counter-derived waste {agg_waste_counters} \
+             != simulated waste {agg_waste_sim}"
+        ));
+    }
+    reg.add("audit.sims", audit_sims);
+    reg.add("audit.violations", violations.len() as u64);
+    reg.add("audit.model_term_failures", term_failures as u64);
+    println!(
+        "  {} sims audited: {} identity violations, {}/{} model-term cells within tolerance",
+        audit_sims,
+        violations.len(),
+        term_rows.len() - term_failures,
+        term_rows.len(),
+    );
+    let examples: Vec<Value> = violations.iter().take(5).map(|s| Value::Str(s.clone())).collect();
+    let audit_section = obj(vec![
+        ("sims", Value::Num(audit_sims as f64)),
+        ("violations", Value::Num(violations.len() as f64)),
+        ("violation_examples", Value::Arr(examples)),
+        ("aggregate_waste_sim", Value::Num(agg_waste_sim)),
+        ("aggregate_waste_counters", Value::Num(agg_waste_counters)),
+        ("counters", report::counters_json(&total)),
+        ("model_terms", Value::Arr(term_rows)),
+        ("model_term_failures", Value::Num(term_failures as f64)),
+    ]);
+
+    // --- phase 3: coordinator decision latency ---------------------------
+    println!("metrics: coordinator phase — synthetic workload");
+    let coordinator_section = {
+        use ckptwin::config::Platform;
+        use ckptwin::coordinator::{self, workload::SyntheticWorkload, CoordinatorConfig};
+        use ckptwin::strategy::{Policy, PolicyKind};
+        let steps: u64 = args.get_or("steps", 240);
+        let mtbf: f64 = args.get_or("mtbf", 3000.0);
+        let scenario = Scenario {
+            platform: Platform { mu: mtbf, c: 120.0, cp: 60.0, d: 30.0, r: 60.0 },
+            predictor: PredictorSpec::paper(0.85, 0.82, 240.0),
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 0.0,
+        };
+        let tr = optimal::tr_extr_window(&scenario);
+        let tp = ckptwin::strategy::registry::default_tp(&scenario);
+        let cfg = CoordinatorConfig {
+            scenario,
+            policy: Policy { kind: PolicyKind::WithCkpt, tr, tp },
+            seconds_per_step: 30.0,
+            total_steps: steps,
+            ckpt_dir: args.get_str("ckpt-dir").unwrap_or("results/metrics-ckpts").into(),
+            seed: args.get_or("seed", 42),
+            log_every: 0,
+        };
+        let mut wl = SyntheticWorkload::new(64);
+        let rep = coordinator::run(&cfg, &mut wl)?;
+        let d = &rep.decision_ns;
+        if !d.is_empty() {
+            reg.set_gauge("coordinator.decision_p50_ns", d.quantile(0.5) as f64);
+            reg.set_gauge("coordinator.decision_p99_ns", d.quantile(0.99) as f64);
+        }
+        reg.add("coordinator.steps_executed", rep.steps_executed);
+        reg.add("coordinator.n_faults", rep.n_faults);
+        println!(
+            "  {} steps ({} lost), {} faults; decision latency p50 {}ns p99 {}ns over {} passes",
+            rep.steps_executed,
+            rep.steps_lost,
+            rep.n_faults,
+            d.quantile(0.5),
+            d.quantile(0.99),
+            d.count(),
+        );
+        obj(vec![
+            ("steps_executed", Value::Num(rep.steps_executed as f64)),
+            ("steps_lost", Value::Num(rep.steps_lost as f64)),
+            ("n_faults", Value::Num(rep.n_faults as f64)),
+            ("sim_makespan", Value::Num(rep.sim_makespan)),
+            ("sim_waste", Value::Num(rep.sim_waste)),
+            ("decision_ns", report::hist_json(d)),
+        ])
+    };
+
+    // --- artifact + gate --------------------------------------------------
+    let doc = report::metrics_json(
+        &reg,
+        &[
+            ("campaign", campaign_section),
+            ("audit", audit_section),
+            ("coordinator", coordinator_section),
+        ],
+    );
+    let json_path = std::path::PathBuf::from(args.get_str("json").unwrap_or("METRICS.json"));
+    let bytes = report::write_json(&json_path, &doc)?;
+    println!("wrote {} ({bytes} bytes, schema {})", json_path.display(), report::SCHEMA);
+    if !violations.is_empty() {
+        for v in violations.iter().take(5) {
+            eprintln!("audit violation: {v}");
+        }
+        return Err(anyhow!(
+            "{} waste-accounting audit violations (see {})",
+            violations.len(),
+            json_path.display()
+        ));
+    }
+    if term_failures > 0 {
+        return Err(anyhow!(
+            "{term_failures} cells' aggregated decomposition exceeded the \
+             closed-form term tolerance (see {})",
+            json_path.display()
+        ));
+    }
+    println!(
+        "audit clean: every decomposition tiles its makespan and reconciles \
+         with waste(); all model terms within tolerance"
+    );
+    Ok(())
+}
+
 /// List the strategy registry: every name the campaign grids, harness and
 /// this CLI accept, with aliases, parameters and a one-line description.
 fn cmd_strategies(_args: &Args) -> Result<()> {
@@ -926,6 +1280,7 @@ fn main() {
         Some("config") => cmd_config(&args),
         Some("campaign") => cmd_campaign(&args),
         Some("validate") => cmd_validate(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some("strategies") => cmd_strategies(&args),
         Some("predictors") => cmd_predictors(&args),
         Some("help") | None => {

@@ -178,6 +178,98 @@ pub fn waste_checked(
     }
 }
 
+/// The closed-form waste split into the paper's §2.1 loss sources, for
+/// the waste-accounting audit (`ckptwin metrics`): each field is that
+/// source's fraction of the makespan, and their sum reproduces the full
+/// Eq. (3)/(4)/(10)/(14) value (pinned to 1e-12 relative by
+/// `terms_sum_to_the_formula_value`).  The simulation-side counterpart
+/// is [`crate::obs::EventCounters`]'s time decomposition divided by the
+/// makespan.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WasteTerms {
+    /// Regular checkpoint overhead (the `C/T_R` term).
+    pub ckpt_reg: f64,
+    /// Proactive checkpoint overhead: the pre-window `C_p` per trusted
+    /// prediction, plus (WithCkptI) the `C_p/T_P` share of the in-window
+    /// occupancy.
+    pub ckpt_pro: f64,
+    /// Downtime + recovery (the `(D+R)/μ` term).
+    pub down: f64,
+    /// Re-executed work and the remaining fault-induced loss (the `T_R/2`
+    /// unpredicted-fault term, the in-window exposure, minus the paper's
+    /// "head" credit for useful in-window work).
+    pub reexec: f64,
+}
+
+impl WasteTerms {
+    /// The reassembled waste — equals the closed-form value.
+    pub fn total(&self) -> f64 {
+        self.ckpt_reg + self.ckpt_pro + self.down + self.reexec
+    }
+}
+
+/// Decompose the closed-form waste of `strat` at periods (`tr`, `tp`)
+/// into [`WasteTerms`].  Uses the same inputs as the formula functions;
+/// the caller is responsible for domain checks ([`waste_checked`]) — out
+/// of domain the terms are as meaningless as the raw formula value.
+pub fn waste_terms(
+    sc: &Scenario,
+    strat: GridStrategy,
+    tr: f64,
+    tp: f64,
+) -> WasteTerms {
+    let pf = &sc.platform;
+    let (p, r) = (sc.predictor.precision, sc.predictor.recall);
+    let (i, e) = (sc.predictor.window, sc.e_if());
+    let eff = 1.0 - pf.c / tr; // the (1 - C/T_R) efficiency factor
+    let ckpt_reg = pf.c / tr;
+    let down = eff * (pf.d + pf.r) / pf.mu;
+    match strat {
+        // Eq. (3) = C/T + (1-C/T)·[(D+R) + T/2]/μ: no proactive mode.
+        GridStrategy::Q0 => WasteTerms {
+            ckpt_reg,
+            ckpt_pro: 0.0,
+            down,
+            reexec: eff * (tr / 2.0) / pf.mu,
+        },
+        // Eq. (14): inner = [p(D+R) + r·Cp + (1-r)p·T/2 + p·r·E]/(pμ).
+        GridStrategy::Instant => WasteTerms {
+            ckpt_reg,
+            ckpt_pro: eff * r * pf.cp / (p * pf.mu),
+            down,
+            reexec: eff * ((1.0 - r) * tr / 2.0 + r * e) / pf.mu,
+        },
+        // Eq. (10): like Instant plus the in-window exposure
+        // W = r·[(1-p)I + p·E]/(pμ), minus the head credit
+        // A = r·(1-p)I/(pμ) for useful work done during false windows.
+        GridStrategy::NoCkpt => {
+            let w = r * ((1.0 - p) * i + p * e) / (p * pf.mu);
+            let a = r * (1.0 - p) * i / (p * pf.mu);
+            WasteTerms {
+                ckpt_reg,
+                ckpt_pro: eff * r * pf.cp / (p * pf.mu),
+                down,
+                reexec: eff * ((1.0 - r) * tr / 2.0 / pf.mu + w) - a,
+            }
+        }
+        // Eq. (4): same inner as Eq. (10); the head carries the
+        // (1 - Cp/T_P) in-window work share, so the complementary
+        // Cp/T_P share of A = r·[(1-p)I + p(E-T_P)]/(pμ) is proactive
+        // checkpoint overhead and the rest stays with re-execution:
+        //   -(1-Cp/T_P)·A  =  (Cp/T_P)·A - A.
+        GridStrategy::WithCkpt => {
+            let w = r * ((1.0 - p) * i + p * e) / (p * pf.mu);
+            let a = r * ((1.0 - p) * i + p * (e - tp)) / (p * pf.mu);
+            WasteTerms {
+                ckpt_reg,
+                ckpt_pro: eff * r * pf.cp / (p * pf.mu) + (pf.cp / tp) * a,
+                down,
+                reexec: eff * ((1.0 - r) * tr / 2.0 / pf.mu + w) - a,
+            }
+        }
+    }
+}
+
 /// The kernel-compatible clipped waste: `clip(w, 0, 1)`, and 1.0 whenever
 /// `tr <= C`.  WithCkpt uses `T_P = clamp(T_P^extr, Cp, max(Cp, I))`.
 pub fn waste_clipped(sc: &Scenario, strat: GridStrategy, tr: f64) -> f64 {
@@ -389,6 +481,54 @@ mod tests {
             Inapplicability::MtbfWithinRecovery.label(),
             "mtbf_within_recovery"
         );
+    }
+
+    #[test]
+    fn terms_sum_to_the_formula_value() {
+        // The audit's decomposition invariant: for every strategy the
+        // WasteTerms reassemble the exact closed-form value (different
+        // summation order, so 1e-12 relative — far below any conformance
+        // tolerance).
+        let scenarios = [
+            sc(60_000.0, 600.0, 0.82, 0.85, 600.0),
+            sc(60_000.0, 60.0, 0.82, 0.85, 3000.0),
+            sc(200_000.0, 300.0, 0.95, 0.5, 900.0),
+        ];
+        for s in &scenarios {
+            for tr in [2000.0, 6000.0, 20_000.0] {
+                let tp = crate::model::optimal::tp_extr(s)
+                    .clamp(s.platform.cp, s.predictor.window.max(s.platform.cp));
+                for (strat, formula) in [
+                    (GridStrategy::Q0, q0(s, tr)),
+                    (GridStrategy::Instant, instant(s, tr)),
+                    (GridStrategy::NoCkpt, nockpt(s, tr)),
+                    (GridStrategy::WithCkpt, withckpt(s, tr, tp)),
+                ] {
+                    let t = waste_terms(s, strat, tr, tp);
+                    assert!(
+                        (t.total() - formula).abs() <= 1e-12 * formula.abs().max(1.0),
+                        "{strat:?} tr={tr}: {} vs {formula}",
+                        t.total()
+                    );
+                    // Overhead terms are nonnegative in-domain.
+                    assert!(t.ckpt_reg >= 0.0 && t.ckpt_pro >= 0.0 && t.down >= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn terms_recall_zero_has_no_proactive_share() {
+        // r = 0: predictions never fire, so every strategy's decomposition
+        // collapses onto Eq. (3)'s.
+        let s = sc(60_000.0, 600.0, 0.82, 0.0, 600.0);
+        let base = waste_terms(&s, GridStrategy::Q0, 6000.0, 650.0);
+        for strat in [GridStrategy::Instant, GridStrategy::NoCkpt, GridStrategy::WithCkpt]
+        {
+            let t = waste_terms(&s, strat, 6000.0, 650.0);
+            assert_eq!(t.ckpt_pro, 0.0, "{strat:?}");
+            assert!((t.total() - base.total()).abs() < 1e-12, "{strat:?}");
+        }
     }
 
     #[test]

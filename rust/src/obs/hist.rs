@@ -1,0 +1,217 @@
+//! Log2-bucketed histograms: fixed-size, allocation-free, mergeable.
+//!
+//! Values are `u64` (the natural unit is nanoseconds for latency, or raw
+//! event counts); bucket `i >= 1` covers `[2^(i-1), 2^i - 1]`, bucket 0
+//! holds exact zeros.  Recording is a couple of integer ops — cheap enough
+//! for per-step coordinator timing — and merging is element-wise addition,
+//! which makes the shard-merge dataflow of
+//! [`crate::obs::registry::MetricsRegistry`] exact and associative.
+
+/// Number of buckets: zeros + one per bit of a `u64`.
+pub const BUCKETS: usize = 65;
+
+/// A log2-bucketed histogram over `u64` samples.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hist {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { counts: [0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+/// The bucket index for a sample: 0 for 0, else `1 + floor(log2(v))`.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// The inclusive value range `[lo, hi]` covered by bucket `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    match i {
+        0 => (0, 0),
+        64 => (1 << 63, u64::MAX),
+        _ => (1 << (i - 1), (1 << i) - 1),
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one (element-wise; associative
+    /// and commutative, so shard merge order never matters).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile
+    /// (`q` in `[0, 1]`).  Bucket resolution: a factor of 2.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_bounds(i).1.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Non-empty buckets as `(lo, hi, count)` triples, low to high.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let (lo, hi) = bucket_bounds(i);
+                (lo, hi, c)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        // 0 is its own bucket; v >= 1 lands in 1 + floor(log2 v).
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(7), 3);
+        assert_eq!(bucket_of(8), 4);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        // Every bucket's bounds round-trip through bucket_of.
+        for i in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(bucket_of(lo), i, "lo of bucket {i}");
+            assert_eq!(bucket_of(hi), i, "hi of bucket {i}");
+        }
+        // Buckets tile u64 with no gaps.
+        for i in 1..BUCKETS {
+            assert_eq!(bucket_bounds(i).0, bucket_bounds(i - 1).1 + 1);
+        }
+    }
+
+    #[test]
+    fn record_and_stats() {
+        let mut h = Hist::new();
+        for v in [0u64, 1, 2, 3, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1006);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - 201.2).abs() < 1e-12);
+        let nz = h.nonzero_buckets();
+        assert_eq!(nz[0], (0, 0, 1)); // the zero
+        assert_eq!(nz[1], (1, 1, 1)); // 1
+        assert_eq!(nz[2], (2, 3, 2)); // 2 and 3
+    }
+
+    #[test]
+    fn quantiles_bound_by_buckets() {
+        let mut h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        // p50 of 1..=1000 is 500, whose bucket is [256, 511].
+        assert_eq!(h.quantile(0.5), 511);
+        // p100 clamps to the observed max, not the bucket's upper bound.
+        assert_eq!(h.quantile(1.0), 1000);
+        assert_eq!(h.quantile(0.0), bucket_bounds(bucket_of(1)).1);
+        assert_eq!(Hist::new().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_sequential() {
+        let samples: Vec<u64> =
+            (0..200).map(|i| (i * i * 2654435761u64) >> 13).collect();
+        // Sequential reference.
+        let mut all = Hist::new();
+        for &v in &samples {
+            all.record(v);
+        }
+        // Three shards, merged in both association orders.
+        let mut shards = [Hist::new(), Hist::new(), Hist::new()];
+        for (i, &v) in samples.iter().enumerate() {
+            shards[i % 3].record(v);
+        }
+        let mut left = shards[0].clone(); // (a + b) + c
+        left.merge(&shards[1]);
+        left.merge(&shards[2]);
+        let mut bc = shards[1].clone(); // a + (b + c)
+        bc.merge(&shards[2]);
+        let mut right = shards[0].clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        assert_eq!(left, all);
+    }
+}

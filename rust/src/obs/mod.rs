@@ -1,0 +1,386 @@
+//! Observability: zero-dependency telemetry for the whole stack.
+//!
+//! Four small pieces:
+//!
+//! * [`Recorder`] — the engine's event sink.  Every method has an empty
+//!   `#[inline]` default, so the engine monomorphized over
+//!   [`NoopRecorder`] compiles the hooks away entirely: the default
+//!   simulation path is the pre-telemetry hot path, and
+//!   `tests/fast_path.rs` stays bit-identical.  Recorders observe; they
+//!   never touch the engine's RNG streams, so an *enabled* recorder is
+//!   also bit-identical to a disabled one.
+//! * [`EventCounters`] — the standard recorder: event counts plus the
+//!   paper's §2.1 time decomposition (work / regular ckpt / proactive
+//!   ckpt / re-executed / down / idle).  Its [`EventCounters::audit`]
+//!   checks the waste-accounting identity against a
+//!   [`crate::sim::engine::SimOutcome`]: the decomposed times must tile
+//!   the makespan and reconcile with `waste()`.
+//! * [`registry::MetricsRegistry`] — sharded counters / gauges / log2
+//!   histograms ([`hist::Hist`]), merged at worker join (no hot-path
+//!   locks).
+//! * [`span::SpanTimer`] / [`span::Stopwatch`] — wall-clock span timing
+//!   feeding histograms (coordinator decision latency).
+//!
+//! [`report`] assembles everything into the `METRICS.json` artifact
+//! (schema `ckptwin-metrics/1`) behind `ckptwin metrics`.
+
+pub mod hist;
+pub mod registry;
+pub mod report;
+pub mod span;
+
+pub use hist::Hist;
+pub use registry::MetricsRegistry;
+pub use span::{SpanTimer, Stopwatch};
+
+use crate::sim::engine::SimOutcome;
+
+/// The engine's telemetry sink.  All methods default to empty inline
+/// bodies: a `NoopRecorder` engine is the plain engine.
+///
+/// Contract: implementations must be pure observers.  They may not read
+/// or advance any RNG, and the engine calls them only *after* its own
+/// accounting for the same event — enabling a recorder can never change
+/// a simulation result (pinned by `tests/metrics.rs` against the
+/// `fast_path` goldens).
+pub trait Recorder {
+    /// A fault struck at simulated time `t` (`predicted`: trace metadata —
+    /// was it covered by a prediction?).
+    #[inline]
+    fn fault(&mut self, t: f64, predicted: bool) {
+        let _ = (t, predicted);
+    }
+
+    /// A prediction announcement arrived (trusted or not).
+    #[inline]
+    fn prediction_seen(&mut self) {}
+
+    /// A prediction was trusted: the proactive sequence starts.
+    #[inline]
+    fn prediction_trusted(&mut self) {}
+
+    /// A prediction was dropped: the §3.1 coin said no, or the policy
+    /// never listens (q = 0 mode).
+    #[inline]
+    fn prediction_ignored(&mut self) {}
+
+    /// A prediction arrived while the engine was busy (proactive
+    /// sequence or downtime) and was dropped — prediction-aware
+    /// policies only.
+    #[inline]
+    fn prediction_overlapped(&mut self) {}
+
+    /// `amount` seconds of useful work were executed (possibly destroyed
+    /// later; see [`Recorder::rollback`]).
+    #[inline]
+    fn work(&mut self, amount: f64) {
+        let _ = amount;
+    }
+
+    /// A checkpoint completed (`duration` seconds; `proactive`: C_p vs C).
+    #[inline]
+    fn ckpt_committed(&mut self, duration: f64, proactive: bool) {
+        let _ = (duration, proactive);
+    }
+
+    /// A checkpoint was destroyed or abandoned `elapsed` seconds in; the
+    /// time is accounted as idle (§3.1).
+    #[inline]
+    fn ckpt_aborted(&mut self, elapsed: f64) {
+        let _ = elapsed;
+    }
+
+    /// A fault destroyed `work_lost` seconds of unsaved work (it will be
+    /// re-executed).
+    #[inline]
+    fn rollback(&mut self, work_lost: f64) {
+        let _ = work_lost;
+    }
+
+    /// One downtime + recovery stint of `elapsed` seconds (a fault during
+    /// D + R restarts the stint; each stint is reported separately).
+    #[inline]
+    fn downtime(&mut self, elapsed: f64) {
+        let _ = elapsed;
+    }
+}
+
+/// The default sink: records nothing, costs nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {}
+
+/// Forwarding impl so callers can keep ownership of their recorder and
+/// hand the engine a `&mut` (the engine is generic over `R: Recorder` by
+/// value).
+impl<R: Recorder + ?Sized> Recorder for &mut R {
+    #[inline]
+    fn fault(&mut self, t: f64, predicted: bool) {
+        (**self).fault(t, predicted);
+    }
+    #[inline]
+    fn prediction_seen(&mut self) {
+        (**self).prediction_seen();
+    }
+    #[inline]
+    fn prediction_trusted(&mut self) {
+        (**self).prediction_trusted();
+    }
+    #[inline]
+    fn prediction_ignored(&mut self) {
+        (**self).prediction_ignored();
+    }
+    #[inline]
+    fn prediction_overlapped(&mut self) {
+        (**self).prediction_overlapped();
+    }
+    #[inline]
+    fn work(&mut self, amount: f64) {
+        (**self).work(amount);
+    }
+    #[inline]
+    fn ckpt_committed(&mut self, duration: f64, proactive: bool) {
+        (**self).ckpt_committed(duration, proactive);
+    }
+    #[inline]
+    fn ckpt_aborted(&mut self, elapsed: f64) {
+        (**self).ckpt_aborted(elapsed);
+    }
+    #[inline]
+    fn rollback(&mut self, work_lost: f64) {
+        (**self).rollback(work_lost);
+    }
+    #[inline]
+    fn downtime(&mut self, elapsed: f64) {
+        (**self).downtime(elapsed);
+    }
+}
+
+/// Standard engine recorder: event counts + the §2.1 time decomposition.
+///
+/// The float fields accumulate the *same values in the same order* as the
+/// engine's own accounting, so `time_reexec` / `time_down` / `time_idle`
+/// equal the outcome's `work_lost` / `time_down` / `time_idle` bit for
+/// bit; the regular/proactive checkpoint split and the makespan tiling
+/// hold to summation-order tolerance (1e-6 relative, the same bound
+/// `Timeline::validate` uses).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EventCounters {
+    pub n_faults: u64,
+    pub n_predicted_faults: u64,
+    pub n_preds_seen: u64,
+    pub n_preds_trusted: u64,
+    pub n_preds_ignored: u64,
+    pub n_preds_overlapped: u64,
+    pub n_reg_ckpts: u64,
+    pub n_pro_ckpts: u64,
+    pub n_ckpts_aborted: u64,
+    pub n_rollbacks: u64,
+    pub n_down_stints: u64,
+    /// Useful work executed, including work later destroyed (s).
+    pub time_work: f64,
+    /// Completed regular checkpoints (s).
+    pub time_ckpt_reg: f64,
+    /// Completed proactive checkpoints (s).
+    pub time_ckpt_pro: f64,
+    /// Work destroyed by faults — will be re-executed (s).
+    pub time_reexec: f64,
+    /// Downtime + recovery (s).
+    pub time_down: f64,
+    /// Aborted-checkpoint idle time (s).
+    pub time_idle: f64,
+}
+
+impl Recorder for EventCounters {
+    #[inline]
+    fn fault(&mut self, _t: f64, predicted: bool) {
+        self.n_faults += 1;
+        self.n_predicted_faults += predicted as u64;
+    }
+    #[inline]
+    fn prediction_seen(&mut self) {
+        self.n_preds_seen += 1;
+    }
+    #[inline]
+    fn prediction_trusted(&mut self) {
+        self.n_preds_trusted += 1;
+    }
+    #[inline]
+    fn prediction_ignored(&mut self) {
+        self.n_preds_ignored += 1;
+    }
+    #[inline]
+    fn prediction_overlapped(&mut self) {
+        self.n_preds_overlapped += 1;
+    }
+    #[inline]
+    fn work(&mut self, amount: f64) {
+        self.time_work += amount;
+    }
+    #[inline]
+    fn ckpt_committed(&mut self, duration: f64, proactive: bool) {
+        if proactive {
+            self.n_pro_ckpts += 1;
+            self.time_ckpt_pro += duration;
+        } else {
+            self.n_reg_ckpts += 1;
+            self.time_ckpt_reg += duration;
+        }
+    }
+    #[inline]
+    fn ckpt_aborted(&mut self, elapsed: f64) {
+        self.n_ckpts_aborted += 1;
+        self.time_idle += elapsed;
+    }
+    #[inline]
+    fn rollback(&mut self, work_lost: f64) {
+        self.n_rollbacks += 1;
+        self.time_reexec += work_lost;
+    }
+    #[inline]
+    fn downtime(&mut self, elapsed: f64) {
+        self.n_down_stints += 1;
+        self.time_down += elapsed;
+    }
+}
+
+impl EventCounters {
+    /// Fold another simulation's counters into this one (campaign-level
+    /// aggregation; exact for the integer fields).
+    pub fn merge(&mut self, o: &EventCounters) {
+        self.n_faults += o.n_faults;
+        self.n_predicted_faults += o.n_predicted_faults;
+        self.n_preds_seen += o.n_preds_seen;
+        self.n_preds_trusted += o.n_preds_trusted;
+        self.n_preds_ignored += o.n_preds_ignored;
+        self.n_preds_overlapped += o.n_preds_overlapped;
+        self.n_reg_ckpts += o.n_reg_ckpts;
+        self.n_pro_ckpts += o.n_pro_ckpts;
+        self.n_ckpts_aborted += o.n_ckpts_aborted;
+        self.n_rollbacks += o.n_rollbacks;
+        self.n_down_stints += o.n_down_stints;
+        self.time_work += o.time_work;
+        self.time_ckpt_reg += o.time_ckpt_reg;
+        self.time_ckpt_pro += o.time_ckpt_pro;
+        self.time_reexec += o.time_reexec;
+        self.time_down += o.time_down;
+        self.time_idle += o.time_idle;
+    }
+
+    /// Total checkpoint time (regular + proactive).
+    pub fn time_ckpt(&self) -> f64 {
+        self.time_ckpt_reg + self.time_ckpt_pro
+    }
+
+    /// Sum of the full time decomposition — must tile the makespan.
+    pub fn time_total(&self) -> f64 {
+        self.time_work
+            + self.time_ckpt_reg
+            + self.time_ckpt_pro
+            + self.time_down
+            + self.time_idle
+    }
+
+    /// The waste-accounting audit against one simulation's outcome.
+    ///
+    /// Identities checked (tol = 1e-6 relative, the `Timeline::validate`
+    /// bound; integer counters and same-order float sums are exact):
+    ///
+    /// 1. every shared event counter matches the outcome's;
+    /// 2. `seen == trusted + ignored + overlapped` (every announcement is
+    ///    classified exactly once);
+    /// 3. `time_reexec == work_lost`, `time_down`, `time_idle` — bit
+    ///    equal (same values, same accumulation order);
+    /// 4. `time_ckpt_reg + time_ckpt_pro == time_ckpt` (the split tiles
+    ///    the combined figure);
+    /// 5. `time_work == job_size + work_lost` (executed work = useful
+    ///    work + re-executed work — also holds for capped partial runs);
+    /// 6. **tiling**: `work + ckpt + down + idle == makespan`, which with
+    ///    (5) is exactly `waste() == (makespan - job_size)/makespan`.
+    pub fn audit(&self, out: &SimOutcome) -> Result<(), String> {
+        let tol = 1e-6 * out.makespan.max(1.0);
+        let int = |name: &str, a: u64, b: u64| {
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("{name}: counters {a} != outcome {b}"))
+            }
+        };
+        int("n_faults", self.n_faults, out.n_faults)?;
+        int("n_predicted_faults", self.n_predicted_faults, out.n_predicted_faults)?;
+        int("n_preds_seen", self.n_preds_seen, out.n_preds_seen)?;
+        int("n_preds_trusted", self.n_preds_trusted, out.n_preds_trusted)?;
+        int("n_reg_ckpts", self.n_reg_ckpts, out.n_reg_ckpts)?;
+        int("n_pro_ckpts", self.n_pro_ckpts, out.n_pro_ckpts)?;
+        let classified =
+            self.n_preds_trusted + self.n_preds_ignored + self.n_preds_overlapped;
+        int("preds classified", classified, out.n_preds_seen)?;
+        let bit = |name: &str, a: f64, b: f64| {
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("{name}: counters {a} != outcome {b} (bit identity)"))
+            }
+        };
+        bit("time_reexec/work_lost", self.time_reexec, out.work_lost)?;
+        bit("time_down", self.time_down, out.time_down)?;
+        bit("time_idle", self.time_idle, out.time_idle)?;
+        let near = |name: &str, a: f64, b: f64| {
+            if (a - b).abs() <= tol {
+                Ok(())
+            } else {
+                Err(format!("{name}: {a} vs {b} (tol {tol})"))
+            }
+        };
+        near("ckpt split", self.time_ckpt(), out.time_ckpt)?;
+        near("work identity", self.time_work, out.job_size + out.work_lost)?;
+        near("makespan tiling", self.time_total(), out.makespan)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_merge_adds_everything() {
+        let mut a = EventCounters::default();
+        a.fault(1.0, true);
+        a.work(10.0);
+        a.ckpt_committed(2.0, false);
+        let mut b = EventCounters::default();
+        b.fault(2.0, false);
+        b.ckpt_committed(3.0, true);
+        b.downtime(4.0);
+        a.merge(&b);
+        assert_eq!(a.n_faults, 2);
+        assert_eq!(a.n_predicted_faults, 1);
+        assert_eq!(a.n_reg_ckpts, 1);
+        assert_eq!(a.n_pro_ckpts, 1);
+        assert_eq!(a.time_ckpt(), 5.0);
+        assert_eq!(a.time_down, 4.0);
+        assert_eq!(a.time_work, 10.0);
+    }
+
+    #[test]
+    fn audit_rejects_a_cooked_decomposition() {
+        // An outcome whose books don't balance must be caught — the audit
+        // is not vacuous.
+        let mut c = EventCounters::default();
+        c.work(100.0);
+        c.ckpt_committed(10.0, false);
+        let mut out = SimOutcome {
+            makespan: 110.0,
+            job_size: 100.0,
+            n_reg_ckpts: 1,
+            time_ckpt: 10.0,
+            ..SimOutcome::default()
+        };
+        assert!(c.audit(&out).is_ok());
+        out.makespan = 115.0; // 5 unaccounted seconds
+        let err = c.audit(&out).unwrap_err();
+        assert!(err.contains("tiling"), "{err}");
+    }
+}

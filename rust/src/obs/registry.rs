@@ -1,0 +1,154 @@
+//! Sharded metrics registry: counters, gauges and log2 histograms.
+//!
+//! Concurrency model: there are **no hot-path locks**.  Each campaign
+//! worker owns a private `MetricsRegistry` shard (created by the
+//! scheduler's per-worker `init`, like its `TracePool`), records into it
+//! freely, and the shards are merged into one registry when the workers
+//! join.  Counter and histogram merges are exact integer addition —
+//! associative and commutative — so the merged totals are independent of
+//! worker count and join order (the same bit-determinism contract the
+//! campaign's Welford block merge follows).
+//!
+//! Names are `&'static str` so recording never allocates; the convention
+//! is `layer.noun` (`campaign.sim_events`, `pool.hits`,
+//! `coordinator.decision_ns`).
+
+use std::collections::BTreeMap;
+
+use crate::obs::hist::Hist;
+
+/// One metrics shard (also the merged root — merging is closed).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Hist>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to a counter (creating it at 0).
+    #[inline]
+    pub fn add(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    /// Increment a counter by one.
+    #[inline]
+    pub fn inc(&mut self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    /// Set a gauge to its latest value.
+    #[inline]
+    pub fn set_gauge(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Record one sample into a histogram (creating it empty).
+    #[inline]
+    pub fn observe(&mut self, name: &'static str, v: u64) {
+        self.hists.entry(name).or_default().record(v);
+    }
+
+    /// Counter value (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.counters.iter().map(|(&k, &v)| (k, v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.gauges.iter().map(|(&k, &v)| (k, v))
+    }
+
+    pub fn hists(&self) -> impl Iterator<Item = (&'static str, &Hist)> + '_ {
+        self.hists.iter().map(|(&k, v)| (k, v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Fold a worker shard into this registry: counters and histograms
+    /// add element-wise; gauges are last-writer-wins (they describe the
+    /// run, not a sum — merge order only matters if two shards set the
+    /// same gauge, which the naming convention avoids).
+    pub fn merge(&mut self, shard: &MetricsRegistry) {
+        for (&k, &v) in &shard.counters {
+            self.add(k, v);
+        }
+        for (&k, &v) in &shard.gauges {
+            self.gauges.insert(k, v);
+        }
+        for (&k, h) in &shard.hists {
+            self.hists.entry(k).or_default().merge(h);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_hists_roundtrip() {
+        let mut m = MetricsRegistry::new();
+        m.inc("a");
+        m.add("a", 4);
+        m.set_gauge("g", 2.5);
+        m.observe("h", 3);
+        m.observe("h", 300);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.counter("nope"), 0);
+        assert_eq!(m.gauge("g"), Some(2.5));
+        assert_eq!(m.hist("h").unwrap().count(), 2);
+        assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn shard_merge_equals_sequential_recording() {
+        // The same event stream recorded into 3 shards (round-robin) and
+        // merged must equal one registry that saw everything.
+        let mut seq = MetricsRegistry::new();
+        let mut shards =
+            vec![MetricsRegistry::new(), MetricsRegistry::new(), MetricsRegistry::new()];
+        for i in 0..100u64 {
+            let shard = &mut shards[(i % 3) as usize];
+            seq.inc("events");
+            shard.inc("events");
+            seq.observe("lat", i * 17);
+            shard.observe("lat", i * 17);
+        }
+        let mut merged = MetricsRegistry::new();
+        // Merge in a scrambled order: totals must not care.
+        for s in [&shards[2], &shards[0], &shards[1]] {
+            merged.merge(s);
+        }
+        assert_eq!(merged.counter("events"), seq.counter("events"));
+        assert_eq!(merged.hist("lat").unwrap(), seq.hist("lat").unwrap());
+    }
+
+    #[test]
+    fn gauge_merge_is_last_wins() {
+        let mut a = MetricsRegistry::new();
+        let mut b = MetricsRegistry::new();
+        a.set_gauge("g", 1.0);
+        b.set_gauge("g", 2.0);
+        a.merge(&b);
+        assert_eq!(a.gauge("g"), Some(2.0));
+    }
+}

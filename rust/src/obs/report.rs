@@ -1,0 +1,243 @@
+//! `METRICS.json` (schema `ckptwin-metrics/1`): the machine-readable
+//! telemetry artifact the `ckptwin metrics` subcommand emits and CI
+//! uploads.
+//!
+//! This module only knows how to render observability primitives
+//! ([`Hist`], [`EventCounters`], [`MetricsRegistry`]) into
+//! [`crate::jsonio::Value`] trees and assemble them into the versioned
+//! document; the *content* of the campaign / audit / coordinator sections
+//! is built by the caller (`main::cmd_metrics`), keeping `obs` free of
+//! upward dependencies.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::jsonio::Value;
+use crate::obs::hist::Hist;
+use crate::obs::registry::MetricsRegistry;
+use crate::obs::EventCounters;
+
+/// The artifact's schema tag; bump on breaking layout changes.
+pub const SCHEMA: &str = "ckptwin-metrics/1";
+
+fn num_or_null(x: f64) -> Value {
+    if x.is_finite() {
+        Value::Num(x)
+    } else {
+        Value::Null
+    }
+}
+
+/// Render a histogram: summary stats, tail quantiles, and the non-empty
+/// log2 buckets as `[lo, hi, count]` triples.
+pub fn hist_json(h: &Hist) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("count".into(), Value::Num(h.count() as f64));
+    o.insert("sum".into(), Value::Num(h.sum() as f64));
+    if h.is_empty() {
+        o.insert("min".into(), Value::Null);
+        o.insert("max".into(), Value::Null);
+        o.insert("mean".into(), Value::Null);
+    } else {
+        o.insert("min".into(), Value::Num(h.min() as f64));
+        o.insert("max".into(), Value::Num(h.max() as f64));
+        o.insert("mean".into(), num_or_null(h.mean()));
+    }
+    for (name, q) in [("p50", 0.50), ("p90", 0.90), ("p99", 0.99)] {
+        o.insert(
+            name.into(),
+            if h.is_empty() {
+                Value::Null
+            } else {
+                Value::Num(h.quantile(q) as f64)
+            },
+        );
+    }
+    o.insert(
+        "buckets".into(),
+        Value::Arr(
+            h.nonzero_buckets()
+                .into_iter()
+                .map(|(lo, hi, n)| {
+                    Value::Arr(vec![
+                        Value::Num(lo as f64),
+                        Value::Num(hi as f64),
+                        Value::Num(n as f64),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    Value::Obj(o)
+}
+
+/// Render an [`EventCounters`]: every event count and the time
+/// decomposition, plus the derived totals.
+pub fn counters_json(c: &EventCounters) -> Value {
+    let mut o = BTreeMap::new();
+    for (k, v) in [
+        ("n_faults", c.n_faults),
+        ("n_predicted_faults", c.n_predicted_faults),
+        ("n_preds_seen", c.n_preds_seen),
+        ("n_preds_trusted", c.n_preds_trusted),
+        ("n_preds_ignored", c.n_preds_ignored),
+        ("n_preds_overlapped", c.n_preds_overlapped),
+        ("n_reg_ckpts", c.n_reg_ckpts),
+        ("n_pro_ckpts", c.n_pro_ckpts),
+        ("n_ckpts_aborted", c.n_ckpts_aborted),
+        ("n_rollbacks", c.n_rollbacks),
+        ("n_down_stints", c.n_down_stints),
+    ] {
+        o.insert(k.into(), Value::Num(v as f64));
+    }
+    for (k, v) in [
+        ("time_work", c.time_work),
+        ("time_ckpt_reg", c.time_ckpt_reg),
+        ("time_ckpt_pro", c.time_ckpt_pro),
+        ("time_reexec", c.time_reexec),
+        ("time_down", c.time_down),
+        ("time_idle", c.time_idle),
+        ("time_total", c.time_total()),
+    ] {
+        o.insert(k.into(), num_or_null(v));
+    }
+    Value::Obj(o)
+}
+
+/// Render a full registry: counters and gauges as flat maps, histograms
+/// via [`hist_json`].
+pub fn registry_json(r: &MetricsRegistry) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "counters".into(),
+        Value::Obj(
+            r.counters()
+                .map(|(k, v)| (k.to_string(), Value::Num(v as f64)))
+                .collect(),
+        ),
+    );
+    o.insert(
+        "gauges".into(),
+        Value::Obj(
+            r.gauges().map(|(k, v)| (k.to_string(), num_or_null(v))).collect(),
+        ),
+    );
+    o.insert(
+        "hists".into(),
+        Value::Obj(
+            r.hists().map(|(k, h)| (k.to_string(), hist_json(h))).collect(),
+        ),
+    );
+    Value::Obj(o)
+}
+
+/// Assemble the versioned document: `{"schema": ..., "registry": ...}`
+/// plus the caller-built named sections (campaign, audit, coordinator).
+pub fn metrics_json(registry: &MetricsRegistry, sections: &[(&str, Value)]) -> Value {
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".into(), Value::Str(SCHEMA.into()));
+    doc.insert("registry".into(), registry_json(registry));
+    for (name, section) in sections {
+        doc.insert((*name).to_string(), section.clone());
+    }
+    Value::Obj(doc)
+}
+
+/// Write a metrics document (creating parent directories); returns the
+/// serialized length in bytes.
+pub fn write_json(path: &Path, doc: &Value) -> std::io::Result<usize> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let text = crate::jsonio::to_string(doc);
+    std::fs::write(path, &text)?;
+    Ok(text.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_json_has_stats_and_buckets() {
+        let mut h = Hist::default();
+        for v in [0u64, 3, 3, 900] {
+            h.record(v);
+        }
+        let doc = hist_json(&h);
+        assert_eq!(doc.get("count").unwrap().as_usize(), Some(4));
+        assert_eq!(doc.get("min").unwrap().as_usize(), Some(0));
+        assert_eq!(doc.get("max").unwrap().as_usize(), Some(900));
+        let buckets = match doc.get("buckets").unwrap() {
+            Value::Arr(v) => v,
+            _ => panic!("buckets must be an array"),
+        };
+        assert_eq!(buckets.len(), 3); // zero bucket, [2,3], [512,1023]
+        // Empty histogram: stats are null, buckets empty.
+        let empty = hist_json(&Hist::default());
+        assert_eq!(empty.get("mean"), Some(&Value::Null));
+        assert_eq!(empty.get("p99"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn counters_json_lists_every_field() {
+        let c = EventCounters {
+            n_faults: 3,
+            time_work: 120.5,
+            ..EventCounters::default()
+        };
+        let doc = counters_json(&c);
+        assert_eq!(doc.get("n_faults").unwrap().as_usize(), Some(3));
+        assert_eq!(doc.get("time_work").unwrap().as_f64(), Some(120.5));
+        assert_eq!(doc.get("time_total").unwrap().as_f64(), Some(120.5));
+        if let Value::Obj(m) = &doc {
+            assert_eq!(m.len(), 11 + 7);
+        } else {
+            panic!("counters must render as an object");
+        }
+    }
+
+    #[test]
+    fn document_roundtrips_through_the_parser() {
+        let mut reg = MetricsRegistry::default();
+        reg.add("campaign.sim_events", 42);
+        reg.set_gauge("pool.hit_rate", 0.75);
+        reg.observe("coordinator.decision_ns", 1024);
+        let mut section = BTreeMap::new();
+        section.insert("cells_per_sec".into(), Value::Num(10.0));
+        let doc = metrics_json(&reg, &[("campaign", Value::Obj(section))]);
+        let text = crate::jsonio::to_string(&doc);
+        let back = crate::jsonio::parse(&text).expect("valid JSON");
+        assert_eq!(back.get("schema").and_then(Value::as_str), Some(SCHEMA));
+        assert_eq!(
+            back.get("registry")
+                .unwrap()
+                .get("counters")
+                .unwrap()
+                .get("campaign.sim_events")
+                .unwrap()
+                .as_usize(),
+            Some(42)
+        );
+        assert_eq!(
+            back.get("campaign").unwrap().get("cells_per_sec").unwrap().as_f64(),
+            Some(10.0)
+        );
+    }
+
+    #[test]
+    fn write_json_creates_dirs() {
+        let dir = std::env::temp_dir()
+            .join(format!("ckptwin-metrics-json-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/METRICS.json");
+        let doc = metrics_json(&MetricsRegistry::default(), &[]);
+        let n = write_json(&path, &doc).unwrap();
+        assert!(n > 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::jsonio::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,96 @@
+//! Lightweight span timers: measure a wall-clock interval in nanoseconds
+//! and feed it straight into a log2 histogram.
+//!
+//! A [`SpanTimer`] is a thin `Instant` wrapper; [`Stopwatch`] accumulates
+//! many spans into a [`Hist`] (the coordinator's per-step decision latency
+//! uses one).  Timers are *observability only* — simulated time lives in
+//! the engine; nothing here may influence simulation results.
+
+use std::time::Instant;
+
+use crate::obs::hist::Hist;
+
+/// One in-flight timed span.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanTimer {
+    start: Instant,
+}
+
+impl SpanTimer {
+    /// Start timing now.
+    pub fn start() -> SpanTimer {
+        SpanTimer { start: Instant::now() }
+    }
+
+    /// Nanoseconds since `start()` (saturated to `u64`).
+    pub fn elapsed_nanos(&self) -> u64 {
+        let n = self.start.elapsed().as_nanos();
+        u64::try_from(n).unwrap_or(u64::MAX)
+    }
+
+    /// Seconds since `start()`.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// A histogram-backed accumulator of timed spans.
+#[derive(Clone, Debug, Default)]
+pub struct Stopwatch {
+    hist: Hist,
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        Stopwatch::default()
+    }
+
+    /// Time one closure and record its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t = SpanTimer::start();
+        let out = f();
+        self.hist.record(t.elapsed_nanos());
+        out
+    }
+
+    /// Record an externally measured span (nanoseconds).
+    pub fn record_nanos(&mut self, nanos: u64) {
+        self.hist.record(nanos);
+    }
+
+    /// The accumulated latency histogram.
+    pub fn hist(&self) -> &Hist {
+        &self.hist
+    }
+
+    /// Take the histogram out, leaving an empty one.
+    pub fn take(&mut self) -> Hist {
+        std::mem::take(&mut self.hist)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_is_monotonic() {
+        let t = SpanTimer::start();
+        let a = t.elapsed_nanos();
+        let b = t.elapsed_nanos();
+        assert!(b >= a);
+        assert!(t.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates_spans() {
+        let mut sw = Stopwatch::new();
+        let x = sw.time(|| 2 + 2);
+        assert_eq!(x, 4);
+        sw.record_nanos(1024);
+        assert_eq!(sw.hist().count(), 2);
+        let h = sw.take();
+        assert_eq!(h.count(), 2);
+        assert!(sw.hist().is_empty());
+    }
+}

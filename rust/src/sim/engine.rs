@@ -35,6 +35,7 @@
 //! pins the four original modes bit-identical).
 
 use crate::config::Scenario;
+use crate::obs::{NoopRecorder, Recorder};
 use crate::sim::policy::{
     ExactPredLogic, IgnoreLogic, InstantLogic, NoCkptLogic, PolicyLogic, QTrustLogic,
     WindowEndCkptLogic, WithCkptLogic,
@@ -108,10 +109,15 @@ pub enum Seg {
 /// The engine state a [`PolicyLogic`] implementation drives through the
 /// public methods ([`Engine::advance`], [`Engine::handle_fault`],
 /// [`Engine::commit_checkpoint`], [`Engine::abort_checkpoint`]).
-pub struct Engine<'a, S: EventSource, L: PolicyLogic> {
+pub struct Engine<'a, S: EventSource, L: PolicyLogic, R: Recorder = NoopRecorder> {
     sc: &'a Scenario,
     pol: &'a Policy,
     logic: L,
+    /// Telemetry sink ([`crate::obs`]).  The default [`NoopRecorder`]'s
+    /// empty inline hooks compile away; any recorder observes *after* the
+    /// engine's own accounting and never touches an RNG stream, so
+    /// enabling one cannot perturb outcomes.
+    rec: R,
     /// Effective probability of trusting each prediction: the caller's q
     /// (the paper's §3.1 knob) times the policy's own trust probability.
     trust_prob: f64,
@@ -177,22 +183,31 @@ impl<'a> EngineBuilder<'a> {
 
     /// Dispatch on the policy kind once, then run the fully monomorphized
     /// engine loop for that behaviour.
-    fn run<S: EventSource>(self, stream: S) -> (SimOutcome, Option<Timeline>) {
+    fn run<S: EventSource, R: Recorder>(
+        self,
+        stream: S,
+        rec: R,
+    ) -> (SimOutcome, Option<Timeline>) {
         match self.pol.kind {
-            PolicyKind::IgnorePredictions => self.run_with(IgnoreLogic, stream),
-            PolicyKind::Instant => self.run_with(InstantLogic, stream),
-            PolicyKind::NoCkpt => self.run_with(NoCkptLogic, stream),
-            PolicyKind::WithCkpt => self.run_with(WithCkptLogic, stream),
-            PolicyKind::ExactPred => self.run_with(ExactPredLogic, stream),
-            PolicyKind::WindowEndCkpt => self.run_with(WindowEndCkptLogic, stream),
-            PolicyKind::QTrust { q } => self.run_with(QTrustLogic { q }, stream),
+            PolicyKind::IgnorePredictions => self.run_with(IgnoreLogic, stream, rec),
+            PolicyKind::Instant => self.run_with(InstantLogic, stream, rec),
+            PolicyKind::NoCkpt => self.run_with(NoCkptLogic, stream, rec),
+            PolicyKind::WithCkpt => self.run_with(WithCkptLogic, stream, rec),
+            PolicyKind::ExactPred => self.run_with(ExactPredLogic, stream, rec),
+            PolicyKind::WindowEndCkpt => {
+                self.run_with(WindowEndCkptLogic, stream, rec)
+            }
+            PolicyKind::QTrust { q } => {
+                self.run_with(QTrustLogic { q }, stream, rec)
+            }
         }
     }
 
-    fn run_with<S: EventSource, L: PolicyLogic>(
+    fn run_with<S: EventSource, L: PolicyLogic, R: Recorder>(
         self,
         logic: L,
         mut stream: S,
+        rec: R,
     ) -> (SimOutcome, Option<Timeline>) {
         self.pol.validate(self.sc);
         let next_ev = stream.next_event();
@@ -201,6 +216,7 @@ impl<'a> EngineBuilder<'a> {
             pol: self.pol,
             trust_prob: self.q * logic.trust(),
             logic,
+            rec,
             rng_q: Rng::stream(self.seed, 0x7125_7),
             t_cap: self.cap,
             timeline: self.record_timeline.then(Timeline::default),
@@ -252,7 +268,7 @@ pub fn simulate_traced_q(
         .trust(q)
         .seed(seed)
         .timeline(true)
-        .run(FlatTrace::new(scenario, seed));
+        .run(FlatTrace::new(scenario, seed), NoopRecorder);
     (out, tl.expect("timeline recording requested"))
 }
 
@@ -304,11 +320,29 @@ pub fn simulate_from_capped<S: EventSource>(
         .trust(q)
         .seed(seed)
         .cap(cap)
-        .run(stream)
+        .run(stream, NoopRecorder)
         .0
 }
 
-impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
+/// [`simulate_from`] with a telemetry [`Recorder`] attached.  The caller
+/// keeps ownership of the recorder (the forwarding `impl Recorder for
+/// &mut R` hands the engine a reborrow), so per-simulation counters can
+/// be audited against the returned outcome and then merged into
+/// campaign-level aggregates.  With [`crate::obs::EventCounters`] the
+/// outcome is bit-identical to [`simulate_from`] — recorders observe
+/// after the fact and never touch the RNG streams.
+pub fn simulate_recorded<S: EventSource, R: Recorder>(
+    scenario: &Scenario,
+    policy: &Policy,
+    q: f64,
+    seed: u64,
+    stream: S,
+    rec: &mut R,
+) -> SimOutcome {
+    EngineBuilder::new(scenario, policy).trust(q).seed(seed).run(stream, rec).0
+}
+
+impl<S: EventSource, L: PolicyLogic, R: Recorder> Engine<'_, S, L, R> {
     /// Current simulated time.
     pub fn now(&self) -> f64 {
         self.t
@@ -353,6 +387,7 @@ impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
             let stop = end.min(t_complete).min(te);
             if work {
                 self.unsaved += stop - self.t;
+                self.rec.work(stop - self.t);
                 if let Some(tl) = self.timeline.as_mut() {
                     tl.push(Span::Work { start: self.t, end: stop });
                 }
@@ -370,11 +405,13 @@ impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
                         self.bump_event();
                         self.out.n_faults += 1;
                         self.out.n_predicted_faults += predicted as u64;
+                        self.rec.fault(self.t, predicted);
                         return Seg::Fault;
                     }
                     Event::Prediction(p) => {
                         self.bump_event();
                         self.out.n_preds_seen += 1;
+                        self.rec.prediction_seen();
                         if listen {
                             // §3.1: trust the predictor with probability q,
                             // scaled by the announcement's confidence
@@ -384,10 +421,14 @@ impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
                             if trust >= 1.0 || self.rng_q.bernoulli(trust) {
                                 return Seg::Notify(p);
                             }
+                            self.rec.prediction_ignored();
                             continue; // coin said ignore this one
                         }
                         if self.logic.listens() {
                             self.out.n_preds_overlapped += 1;
+                            self.rec.prediction_overlapped();
+                        } else {
+                            self.rec.prediction_ignored();
                         }
                         continue; // ignored; keep advancing
                     }
@@ -405,6 +446,7 @@ impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
             tl.record_fault(self.t);
         }
         self.out.work_lost += self.unsaved;
+        self.rec.rollback(self.unsaved);
         self.unsaved = 0.0;
         loop {
             let start = self.t;
@@ -412,6 +454,7 @@ impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
             match self.advance(end, false, false) {
                 Seg::Completed => {
                     self.out.time_down += self.t - start;
+                    self.rec.downtime(self.t - start);
                     if let Some(tl) = self.timeline.as_mut() {
                         tl.push(Span::Down { start, end: self.t });
                     }
@@ -419,6 +462,7 @@ impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
                 }
                 Seg::Fault => {
                     self.out.time_down += self.t - start;
+                    self.rec.downtime(self.t - start);
                     if let Some(tl) = self.timeline.as_mut() {
                         tl.push(Span::Down { start, end: self.t });
                         tl.record_fault(self.t);
@@ -448,12 +492,14 @@ impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
         } else {
             self.out.n_reg_ckpts += 1;
         }
+        self.rec.ckpt_committed(duration, proactive);
     }
 
     /// Account a checkpoint destroyed or abandoned mid-write: its elapsed
     /// time since `start` becomes idle time (the paper's §3.1 accounting).
     pub fn abort_checkpoint(&mut self, start: f64) {
         self.out.time_idle += self.t - start;
+        self.rec.ckpt_aborted(self.t - start);
         if let Some(tl) = self.timeline.as_mut() {
             tl.push(Span::Idle { start, end: self.t });
         }
@@ -465,6 +511,7 @@ impl<S: EventSource, L: PolicyLogic> Engine<'_, S, L> {
     /// engine back in regular mode (or `done`).
     fn handle_prediction(&mut self, p: Prediction) {
         self.out.n_preds_trusted += 1;
+        self.rec.prediction_trusted();
         let cp = self.sc.platform.cp;
 
         // 1. Proactive checkpoint during [t0 - Cp, t0].  (We are at t0 - Cp:

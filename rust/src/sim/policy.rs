@@ -39,6 +39,7 @@
 //! [`crate::strategy::registry`] — campaign grids, the harness and the CLI
 //! pick it up from the registry with no further edits.
 
+use crate::obs::Recorder;
 use crate::sim::engine::{Engine, Seg};
 use crate::sim::trace::{EventSource, Prediction};
 
@@ -66,7 +67,11 @@ pub trait PolicyLogic: Copy {
     /// proactive checkpoint committed.  Must leave the engine back in
     /// regular mode: either run to a clean window exit, or delegate fault
     /// recovery to [`Engine::handle_fault`] and return.
-    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction);
+    fn in_window<S: EventSource, R: Recorder>(
+        self,
+        eng: &mut Engine<'_, S, Self, R>,
+        p: Prediction,
+    );
 
     /// Decide how the regular period resumes after a served window.
     /// `period_rem` holds the interrupted period's remaining work on
@@ -82,8 +87,8 @@ pub trait PolicyLogic: Copy {
 /// fault that strikes.  Shared by every "work through the window" policy;
 /// returns the segment outcome so callers can tell a clean window exit
 /// (`Seg::Completed`) from a fault or early job completion.
-fn work_through_window<S: EventSource, L: PolicyLogic>(
-    eng: &mut Engine<'_, S, L>,
+fn work_through_window<S: EventSource, L: PolicyLogic, R: Recorder>(
+    eng: &mut Engine<'_, S, L, R>,
     end: f64,
 ) -> Seg {
     match eng.advance(end, true, false) {
@@ -98,7 +103,9 @@ fn work_through_window<S: EventSource, L: PolicyLogic>(
 
 /// One proactive checkpoint of duration `C_p` starting now; aborted (idle
 /// time) if a fault strikes mid-checkpoint.
-fn proactive_checkpoint<S: EventSource, L: PolicyLogic>(eng: &mut Engine<'_, S, L>) -> Seg {
+fn proactive_checkpoint<S: EventSource, L: PolicyLogic, R: Recorder>(
+    eng: &mut Engine<'_, S, L, R>,
+) -> Seg {
     let cp = eng.scenario().platform.cp;
     let start = eng.now();
     match eng.advance(start + cp, false, false) {
@@ -124,7 +131,11 @@ impl PolicyLogic for IgnoreLogic {
         false
     }
 
-    fn in_window<S: EventSource>(self, _eng: &mut Engine<'_, S, Self>, _p: Prediction) {
+    fn in_window<S: EventSource, R: Recorder>(
+        self,
+        _eng: &mut Engine<'_, S, Self, R>,
+        _p: Prediction,
+    ) {
         unreachable!("q = 0 never trusts a prediction")
     }
 }
@@ -135,7 +146,11 @@ impl PolicyLogic for IgnoreLogic {
 pub struct InstantLogic;
 
 impl PolicyLogic for InstantLogic {
-    fn in_window<S: EventSource>(self, _eng: &mut Engine<'_, S, Self>, _p: Prediction) {
+    fn in_window<S: EventSource, R: Recorder>(
+        self,
+        _eng: &mut Engine<'_, S, Self, R>,
+        _p: Prediction,
+    ) {
         // Straight back to regular mode.
     }
 }
@@ -145,7 +160,11 @@ impl PolicyLogic for InstantLogic {
 pub struct NoCkptLogic;
 
 impl PolicyLogic for NoCkptLogic {
-    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction) {
+    fn in_window<S: EventSource, R: Recorder>(
+        self,
+        eng: &mut Engine<'_, S, Self, R>,
+        p: Prediction,
+    ) {
         work_through_window(eng, p.window_end);
     }
 }
@@ -158,7 +177,11 @@ impl PolicyLogic for NoCkptLogic {
 pub struct WithCkptLogic;
 
 impl PolicyLogic for WithCkptLogic {
-    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction) {
+    fn in_window<S: EventSource, R: Recorder>(
+        self,
+        eng: &mut Engine<'_, S, Self, R>,
+        p: Prediction,
+    ) {
         let cp = eng.scenario().platform.cp;
         let tp = eng.policy().tp;
         while !eng.job_done() && eng.now() < p.window_end {
@@ -190,7 +213,11 @@ impl PolicyLogic for WithCkptLogic {
 pub struct ExactPredLogic;
 
 impl PolicyLogic for ExactPredLogic {
-    fn in_window<S: EventSource>(self, _eng: &mut Engine<'_, S, Self>, _p: Prediction) {
+    fn in_window<S: EventSource, R: Recorder>(
+        self,
+        _eng: &mut Engine<'_, S, Self, R>,
+        _p: Prediction,
+    ) {
         // The believed strike instant is the window itself; nothing to do.
     }
 
@@ -206,7 +233,11 @@ impl PolicyLogic for ExactPredLogic {
 pub struct WindowEndCkptLogic;
 
 impl PolicyLogic for WindowEndCkptLogic {
-    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction) {
+    fn in_window<S: EventSource, R: Recorder>(
+        self,
+        eng: &mut Engine<'_, S, Self, R>,
+        p: Prediction,
+    ) {
         if !matches!(work_through_window(eng, p.window_end), Seg::Completed) {
             // Fault (already recovered) or the job finished in-window.
             return;
@@ -231,7 +262,11 @@ impl PolicyLogic for QTrustLogic {
         self.q
     }
 
-    fn in_window<S: EventSource>(self, eng: &mut Engine<'_, S, Self>, p: Prediction) {
+    fn in_window<S: EventSource, R: Recorder>(
+        self,
+        eng: &mut Engine<'_, S, Self, R>,
+        p: Prediction,
+    ) {
         work_through_window(eng, p.window_end);
     }
 }

@@ -114,6 +114,27 @@ impl Timeline {
         Ok(totals)
     }
 
+    /// Additive per-kind totals with the checkpoint time split into its
+    /// regular and proactive components:
+    /// `[work, ckpt_reg, ckpt_pro, down, idle]`.  Unlike
+    /// [`Timeline::validate`] this does no tiling check — it is the
+    /// span-level counterpart of [`crate::obs::EventCounters`]'s time
+    /// decomposition (`tests/metrics.rs` cross-checks the two).
+    pub fn totals_split(&self) -> [f64; 5] {
+        let mut totals = [0.0f64; 5];
+        for span in &self.spans {
+            let idx = match span {
+                Span::Work { .. } => 0,
+                Span::Ckpt { proactive: false, .. } => 1,
+                Span::Ckpt { proactive: true, .. } => 2,
+                Span::Down { .. } => 3,
+                Span::Idle { .. } => 4,
+            };
+            totals[idx] += span.duration();
+        }
+        totals
+    }
+
     /// Render an ASCII strip of `width` characters covering the makespan.
     pub fn render(&self, width: usize) -> String {
         let width = width.max(10);
@@ -171,6 +192,21 @@ mod tests {
         let totals = tl2.validate(7.0).unwrap();
         assert_eq!(totals[0], 5.0);
         assert_eq!(totals[1], 2.0);
+    }
+
+    #[test]
+    fn totals_split_separates_proactive_from_regular() {
+        let mut tl = Timeline::default();
+        tl.push(Span::Work { start: 0.0, end: 5.0 });
+        tl.push(Span::Ckpt { start: 5.0, end: 6.0, proactive: false });
+        tl.push(Span::Ckpt { start: 6.0, end: 8.0, proactive: true });
+        tl.push(Span::Down { start: 8.0, end: 11.0 });
+        tl.push(Span::Idle { start: 11.0, end: 11.5 });
+        let t = tl.totals_split();
+        assert_eq!(t, [5.0, 1.0, 2.0, 3.0, 0.5]);
+        // Consistent with validate()'s coarse totals.
+        let coarse = tl.validate(11.5).unwrap();
+        assert_eq!(coarse, [t[0], t[1] + t[2], t[3], t[4]]);
     }
 
     #[test]

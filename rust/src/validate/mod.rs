@@ -53,10 +53,15 @@ use anyhow::Result;
 use crate::campaign::grid::fnv1a64;
 use crate::campaign::{scheduler, Cell, Grid, TracePool};
 use crate::config::{FaultModel, Scenario};
+use crate::obs::SpanTimer;
 use crate::sim::distribution::Law;
 use crate::sim::engine::simulate_from;
 use crate::stats::Welford;
 use crate::strategy::registry;
+
+/// Sweep throughput telemetry — the same shape as a campaign's (cells,
+/// instances, events, wall-clock, trace-pool efficacy).
+pub type SweepMetrics = crate::campaign::CampaignMetrics;
 
 /// One conformance cell: a campaign [`Cell`] probed at `multiplier ×` the
 /// strategy's analytic period, under an explicit fault-trace model.
@@ -302,8 +307,13 @@ impl CellReport {
 }
 
 /// Verdict one cell: classify, then (when applicable) simulate the paired
-/// instances through the worker's trace pool and compare.
-fn evaluate_cell(vc: &ValCell, opt: &SweepOptions, pool: &mut TracePool) -> CellReport {
+/// instances through the worker's trace pool and compare.  Also returns
+/// (instances simulated, trace events consumed) for the sweep telemetry.
+fn evaluate_cell(
+    vc: &ValCell,
+    opt: &SweepOptions,
+    pool: &mut TracePool,
+) -> (CellReport, u64, u64) {
     let sc = vc.scenario();
     let kind = vc.cell.strategy.kind();
     let base = CellReport {
@@ -327,29 +337,36 @@ fn evaluate_cell(vc: &ValCell, opt: &SweepOptions, pool: &mut TracePool) -> Cell
     // a brute-force search, paid per (cell, multiplier) — and are compared
     // to that formula at the searched period.)
     if kind.grid_strategy().is_none() {
-        return base;
+        return (base, 0, 0);
     }
     let pol = vc.cell.strategy.policy(&sc);
     let tr = pol.tr * vc.multiplier;
     let model = match domain::classify(&sc, kind, tr, pol.tp, &opt.tolerance) {
         Err(reason) => {
-            return CellReport { tr, verdict: Verdict::Inapplicable(reason), ..base }
+            return (
+                CellReport { tr, verdict: Verdict::Inapplicable(reason), ..base },
+                0,
+                0,
+            )
         }
         Ok(m) => m,
     };
     let pol = crate::strategy::Policy { kind, tr, tp: pol.tp };
     let mut waste = Welford::new();
+    let mut events: u64 = 0;
     for i in 0..opt.instances.max(1) {
         let seed = vc.cell.instance_seed(i as u64);
         let out =
             simulate_from(&sc, &pol, 1.0, seed, pool.replay(vc.pool_hash, &sc, seed));
         waste.push(out.waste());
+        events += out.events;
     }
     let deviation = (waste.mean() - model).abs();
     let tolerance = domain::tolerance(&opt.tolerance, &sc, kind, tr, waste.ci95());
-    CellReport {
+    let sims = waste.len() as u64;
+    let rep = CellReport {
         tr,
-        instances: waste.len() as u64,
+        instances: sims,
         sim_mean: waste.mean(),
         sim_ci95: waste.ci95(),
         model,
@@ -357,7 +374,8 @@ fn evaluate_cell(vc: &ValCell, opt: &SweepOptions, pool: &mut TracePool) -> Cell
         tolerance,
         verdict: if deviation <= tolerance { Verdict::Pass } else { Verdict::Fail },
         ..base
-    }
+    };
+    (rep, sims, events)
 }
 
 /// Is `vc` already satisfactorily verdicted in `store`?  Inapplicable
@@ -381,6 +399,19 @@ pub fn run_sweep(
     opt: &SweepOptions,
     store: Option<&mut ConformanceStore>,
 ) -> Result<(Vec<CellReport>, usize)> {
+    let (reports, skipped, _) = run_sweep_metered(cells, opt, store)?;
+    Ok((reports, skipped))
+}
+
+/// [`run_sweep`] plus throughput telemetry.  Harvested through the
+/// scheduler's per-unit return values — each unit carries its instance /
+/// event counts and trace-pool deltas back to the join, so the workers
+/// share nothing and the hot path is untouched.
+pub fn run_sweep_metered(
+    cells: &[ValCell],
+    opt: &SweepOptions,
+    store: Option<&mut ConformanceStore>,
+) -> Result<(Vec<CellReport>, usize, SweepMetrics)> {
     let mut seen = std::collections::BTreeSet::new();
     let pending: Vec<usize> = (0..cells.len())
         .filter(|&i| {
@@ -392,16 +423,23 @@ pub fn run_sweep(
         .collect();
     let skipped = cells.len() - pending.len();
     if pending.is_empty() {
-        return Ok((Vec::new(), skipped));
+        return Ok((Vec::new(), skipped, SweepMetrics::default()));
     }
     let store_mx = store.map(Mutex::new);
     let append_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-    let reports = scheduler::run_units_stateful(
+    /// Worker scratch: the trace pool plus the pool-stat watermarks
+    /// already reported through earlier units' return values.
+    struct Worker {
+        tp: TracePool,
+        seen: (u64, u64, u64),
+    }
+    let timer = SpanTimer::start();
+    let out = scheduler::run_units_stateful(
         pending.len(),
         opt.threads,
-        TracePool::new,
-        |pool: &mut TracePool, u| {
-            let rep = evaluate_cell(&cells[pending[u]], opt, pool);
+        || Worker { tp: TracePool::new(), seen: (0, 0, 0) },
+        |w: &mut Worker, u| {
+            let (rep, sims, events) = evaluate_cell(&cells[pending[u]], opt, &mut w.tp);
             if let Some(mx) = &store_mx {
                 let mut s = mx.lock().expect("conformance store poisoned");
                 if let Err(e) = s.append(&rep.record()) {
@@ -413,13 +451,31 @@ pub fn run_sweep(
                     }
                 }
             }
-            rep
+            let now = (w.tp.hits(), w.tp.misses(), w.tp.evictions());
+            let delta =
+                (now.0 - w.seen.0, now.1 - w.seen.1, now.2 - w.seen.2);
+            w.seen = now;
+            (rep, sims, events, delta)
         },
     );
     if let Some(e) = append_err.into_inner().expect("append_err poisoned") {
         return Err(e);
     }
-    Ok((reports, skipped))
+    let mut metrics = SweepMetrics {
+        cells: pending.len(),
+        elapsed_secs: timer.elapsed_secs(),
+        ..SweepMetrics::default()
+    };
+    let mut reports = Vec::with_capacity(out.len());
+    for (rep, sims, events, (h, m, e)) in out {
+        metrics.instances += sims;
+        metrics.sim_events += events;
+        metrics.pool_hits += h;
+        metrics.pool_misses += m;
+        metrics.pool_evictions += e;
+        reports.push(rep);
+    }
+    Ok((reports, skipped, metrics))
 }
 
 #[cfg(test)]
@@ -489,6 +545,22 @@ mod tests {
             }
         }
         assert_eq!(passes, 2, "RFO and NoCkptI must both verdict Pass");
+    }
+
+    #[test]
+    fn metered_sweep_reports_throughput() {
+        let cells = tiny_cells();
+        let opt = SweepOptions { instances: 8, threads: 2, ..Default::default() };
+        let (reports, skipped, m) = run_sweep_metered(&cells, &opt, None).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(reports.len(), cells.len());
+        assert_eq!(m.cells, cells.len());
+        // ExactPred has no closed form → only RFO and NoCkptI simulate.
+        assert_eq!(m.instances, 16);
+        assert!(m.sim_events >= m.instances);
+        // One pool lookup per simulated instance.
+        assert_eq!(m.pool_hits + m.pool_misses, m.instances);
+        assert!(m.elapsed_secs >= 0.0);
     }
 
     #[test]

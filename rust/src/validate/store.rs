@@ -12,13 +12,11 @@
 //! back as `f64::NAN`.
 
 use std::collections::BTreeMap;
-use std::fs::{File, OpenOptions};
-use std::io::{BufRead, BufReader, Write};
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::jsonio::{self, Value};
+use crate::jsonio::{self, JsonlAppender, Value};
 
 /// One persisted conformance verdict (one JSONL line).
 #[derive(Clone, Debug, PartialEq)]
@@ -106,7 +104,7 @@ impl ConformanceRecord {
 /// Append-only JSONL store with an in-memory index by cell hash.
 pub struct ConformanceStore {
     path: PathBuf,
-    file: File,
+    file: JsonlAppender,
     records: BTreeMap<u64, ConformanceRecord>,
     /// Unparseable lines skipped on open (a torn tail from an interrupt).
     pub skipped_lines: usize,
@@ -125,53 +123,19 @@ impl ConformanceStore {
     }
 
     fn open_inner(path: &Path, truncate: bool) -> Result<ConformanceStore> {
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)
-                    .with_context(|| format!("creating {}", dir.display()))?;
-            }
-        }
+        // Replay existing lines last-wins; the appender repairs a torn
+        // tail and counts unparseable lines (see `jsonio::JsonlAppender`).
         let mut records = BTreeMap::new();
-        let mut skipped_lines = 0;
-        if !truncate && path.exists() {
-            let reader = BufReader::new(
-                File::open(path)
-                    .with_context(|| format!("opening {}", path.display()))?,
-            );
-            for line in reader.lines() {
-                let line = line?;
-                if line.trim().is_empty() {
-                    continue;
+        let file = JsonlAppender::open(path, truncate, |line| {
+            match ConformanceRecord::from_json(line) {
+                Some(rec) => {
+                    records.insert(rec.hash, rec);
+                    true
                 }
-                match ConformanceRecord::from_json(&line) {
-                    Some(rec) => {
-                        records.insert(rec.hash, rec);
-                    }
-                    None => skipped_lines += 1,
-                }
+                None => false,
             }
-        }
-        let mut file = OpenOptions::new()
-            .create(true)
-            .append(!truncate)
-            .write(true)
-            .truncate(truncate)
-            .open(path)
-            .with_context(|| format!("opening {} for append", path.display()))?;
-        // Repair a torn tail so the next append starts on a fresh line.
-        if !truncate {
-            let len = file.metadata()?.len();
-            if len > 0 {
-                let mut last = [0u8; 1];
-                let mut probe = File::open(path)?;
-                std::io::Seek::seek(&mut probe, std::io::SeekFrom::End(-1))?;
-                std::io::Read::read_exact(&mut probe, &mut last)?;
-                if last[0] != b'\n' {
-                    file.write_all(b"\n")?;
-                    file.flush()?;
-                }
-            }
-        }
+        })?;
+        let skipped_lines = file.skipped_lines;
         Ok(ConformanceStore { path: path.to_path_buf(), file, records, skipped_lines })
     }
 
@@ -204,10 +168,7 @@ impl ConformanceStore {
     /// record whose hash is already present supersedes the earlier line
     /// (last-wins, both in memory and on reload).
     pub fn append(&mut self, rec: &ConformanceRecord) -> Result<()> {
-        let mut line = rec.to_json();
-        line.push('\n');
-        self.file.write_all(line.as_bytes())?;
-        self.file.flush()?;
+        self.file.append_line(&rec.to_json())?;
         self.records.insert(rec.hash, rec.clone());
         Ok(())
     }

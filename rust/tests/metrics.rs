@@ -1,0 +1,219 @@
+//! Telemetry-layer gates (PR 6).
+//!
+//! 1. **Recorder transparency** — attaching an [`EventCounters`] recorder
+//!    must not perturb a simulation: the recorded outcome equals the
+//!    plain one bit for bit, across policy kinds, laws and fault models
+//!    (the recorder contract `tests/fast_path.rs`'s goldens rely on).
+//! 2. **Waste-accounting audit** — the counter-derived time decomposition
+//!    tiles the makespan exactly and reconciles with
+//!    `SimOutcome::waste()`, for every `registry::all_defaults()`
+//!    strategy under the default predictor.
+//! 3. **Timeline cross-check** — the counters' time decomposition equals
+//!    the span-level `Timeline::totals_split()` figures.
+//! 4. **Golden artifact** — a `METRICS.json`-shaped document (schema
+//!    `ckptwin-metrics/1`) round-trips through the JSON parser with the
+//!    required headline fields intact.
+
+use ckptwin::config::{FaultModel, PredictorSpec, Scenario};
+use ckptwin::model::optimal;
+use ckptwin::obs::{report, EventCounters, Hist, MetricsRegistry};
+use ckptwin::sim::distribution::Law;
+use ckptwin::sim::engine::{simulate_q, simulate_recorded, simulate_traced};
+use ckptwin::sim::trace::FlatTrace;
+use ckptwin::strategy::{registry, Policy, PolicyKind};
+
+/// Scaled-down paper scenario (predictor B: the trace carries both false
+/// predictions and unpredicted faults — every recorder hook fires).
+fn scenario(model: FaultModel, law: Law) -> Scenario {
+    let mut sc = Scenario::paper(1 << 16, 1.0, PredictorSpec::paper_b(900.0), law, law);
+    sc.fault_model = model;
+    sc.job_size *= 0.05;
+    sc
+}
+
+fn policy(sc: &Scenario, kind: PolicyKind) -> Policy {
+    let tp = optimal::tp_extr(sc).max(sc.platform.cp * 1.1);
+    let tr = optimal::rfo_period(&sc.platform)
+        .min(sc.job_size * 0.5)
+        .max(1.2 * sc.platform.c);
+    Policy { kind, tr, tp }
+}
+
+#[test]
+fn recorder_is_a_pure_observer_bit_identical_outcomes() {
+    let models = [
+        FaultModel::PlatformRenewal,
+        FaultModel::PerProcessor { n: 1 << 16 },
+        FaultModel::PerProcessorStationary { n: 1 << 16 },
+    ];
+    let laws = [
+        Law::Exponential,
+        Law::Weibull { shape: 0.7 },
+        Law::LogNormal { sigma: 1.2 },
+    ];
+    let kinds = [
+        PolicyKind::IgnorePredictions,
+        PolicyKind::Instant,
+        PolicyKind::NoCkpt,
+        PolicyKind::WithCkpt,
+    ];
+    for model in models {
+        for law in laws {
+            let sc = scenario(model, law);
+            for kind in kinds {
+                let pol = policy(&sc, kind);
+                for seed in [1u64, 9] {
+                    let tag = format!("{model:?}/{}/{kind:?}/seed{seed}", law.label());
+                    let plain = simulate_q(&sc, &pol, 1.0, seed);
+                    let mut c = EventCounters::default();
+                    let recorded = simulate_recorded(
+                        &sc,
+                        &pol,
+                        1.0,
+                        seed,
+                        FlatTrace::new(&sc, seed),
+                        &mut c,
+                    );
+                    assert_eq!(plain, recorded, "{tag}: recorder perturbed the simulation");
+                    c.audit(&recorded)
+                        .unwrap_or_else(|e| panic!("{tag}: audit: {e}"));
+                    assert!(c.n_faults > 0, "{tag}: trace had no faults");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn audit_identity_holds_for_every_registered_strategy() {
+    // The census the issue demands: every `all_defaults()` strategy —
+    // BestPeriod twins included (their policy instantiation searches) —
+    // under the default predictor, three seeds each.
+    let mut sc = Scenario::paper(
+        1 << 16,
+        1.0,
+        PredictorSpec::paper_a(600.0),
+        Law::Exponential,
+        Law::Exponential,
+    );
+    sc.job_size *= 0.02; // keeps the BestPeriod searches cheap
+    for strat in registry::all_defaults() {
+        let pol = strat.policy(&sc);
+        for seed in [0u64, 4, 11] {
+            let mut c = EventCounters::default();
+            let out = simulate_recorded(&sc, &pol, 1.0, seed, FlatTrace::new(&sc, seed), &mut c);
+            c.audit(&out)
+                .unwrap_or_else(|e| panic!("{strat}/seed{seed}: audit: {e}"));
+            // The audited tiling is exactly the waste identity.
+            let waste_from_counters =
+                (out.makespan - (c.time_work - c.time_reexec)) / out.makespan;
+            assert!(
+                (waste_from_counters - out.waste()).abs() <= 1e-6 * out.makespan.max(1.0),
+                "{strat}/seed{seed}: counter waste {waste_from_counters} vs \
+                 outcome {}",
+                out.waste()
+            );
+        }
+    }
+}
+
+#[test]
+fn counters_match_timeline_span_totals() {
+    // Two independent observers of the same engine run — the per-event
+    // recorder and the span-level timeline — must tell the same story.
+    let sc = scenario(FaultModel::PlatformRenewal, Law::Weibull { shape: 0.7 });
+    for kind in [PolicyKind::NoCkpt, PolicyKind::WithCkpt] {
+        let pol = policy(&sc, kind);
+        for seed in [2u64, 7] {
+            let (out, tl) = simulate_traced(&sc, &pol, seed);
+            let mut c = EventCounters::default();
+            let recorded = simulate_recorded(
+                &sc,
+                &pol,
+                1.0,
+                seed,
+                FlatTrace::new(&sc, seed),
+                &mut c,
+            );
+            assert_eq!(out, recorded);
+            let [work, ckpt_reg, ckpt_pro, down, idle] = tl.totals_split();
+            let tol = 1e-6 * out.makespan.max(1.0);
+            for (name, a, b) in [
+                ("work", c.time_work, work),
+                ("ckpt_reg", c.time_ckpt_reg, ckpt_reg),
+                ("ckpt_pro", c.time_ckpt_pro, ckpt_pro),
+                ("down", c.time_down, down),
+                ("idle", c.time_idle, idle),
+            ] {
+                assert!(
+                    (a - b).abs() <= tol,
+                    "{kind:?}/seed{seed}: {name}: counters {a} vs timeline {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_metrics_document_roundtrips_with_headline_fields() {
+    use ckptwin::jsonio::{self, Value};
+    use std::collections::BTreeMap;
+
+    // Assemble the same shape `ckptwin metrics` emits, from fixed inputs.
+    let mut reg = MetricsRegistry::new();
+    reg.add("campaign.cells", 8);
+    reg.add("campaign.sim_events", 4096);
+    reg.set_gauge("campaign.cells_per_sec", 125.0);
+    reg.set_gauge("campaign.events_per_sec", 64000.0);
+    reg.set_gauge("campaign.pool_hit_rate", 0.75);
+    reg.observe("audit.faults_per_sim", 17);
+    let mut decisions = Hist::default();
+    for v in [800u64, 1200, 1500, 90_000] {
+        decisions.record(v);
+    }
+    let section = |pairs: Vec<(&str, Value)>| {
+        let map: BTreeMap<String, Value> =
+            pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        Value::Obj(map)
+    };
+    let doc = report::metrics_json(
+        &reg,
+        &[
+            (
+                "campaign",
+                section(vec![
+                    ("cells_per_sec", Value::Num(125.0)),
+                    ("events_per_sec", Value::Num(64000.0)),
+                    ("pool", section(vec![("hit_rate", Value::Num(0.75))])),
+                ]),
+            ),
+            ("audit", section(vec![("sims", Value::Num(32.0)), ("violations", Value::Num(0.0))])),
+            ("coordinator", section(vec![("decision_ns", report::hist_json(&decisions))])),
+        ],
+    );
+
+    // Write + parse back: the golden round-trip.
+    let name = format!("ckptwin-metrics-golden-{}.json", std::process::id());
+    let path = std::env::temp_dir().join(name);
+    let n = report::write_json(&path, &doc).unwrap();
+    assert!(n > 0);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let back = jsonio::parse(&text).expect("valid JSON");
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(back.get("schema").and_then(Value::as_str), Some(report::SCHEMA));
+    let campaign = back.get("campaign").expect("campaign section");
+    assert_eq!(campaign.get("cells_per_sec").and_then(Value::as_f64), Some(125.0));
+    assert_eq!(campaign.get("events_per_sec").and_then(Value::as_f64), Some(64000.0));
+    let pool = campaign.get("pool").expect("pool section");
+    assert_eq!(pool.get("hit_rate").and_then(Value::as_f64), Some(0.75));
+    let audit = back.get("audit").expect("audit section");
+    assert_eq!(audit.get("violations").and_then(Value::as_usize), Some(0));
+    let coord = back.get("coordinator").expect("coordinator section");
+    let hist = coord.get("decision_ns").expect("decision histogram");
+    assert_eq!(hist.get("count").and_then(Value::as_usize), Some(4));
+    assert_eq!(hist.get("max").and_then(Value::as_usize), Some(90_000));
+    // The registry carries the merged shard counters too.
+    let counters = back.get("registry").and_then(|r| r.get("counters")).expect("counters");
+    assert_eq!(counters.get("campaign.sim_events").and_then(Value::as_usize), Some(4096));
+}

@@ -302,6 +302,46 @@ fn prop_best_period_upper_bounded_by_formula() {
     });
 }
 
+/// Sharded aggregation (the campaign / telemetry merge path): a random
+/// stream split at random shard boundaries and merged in order agrees
+/// with one sequential accumulator to ULP-scale tolerance, for any shard
+/// count — the Chan et al. parallel update loses no precision worth
+/// caring about.
+#[test]
+fn prop_welford_shard_merge_matches_sequential() {
+    use ckptwin::stats::Welford;
+    for_cases(47, 60, |case, rng| {
+        let n = 50 + rng.below(500);
+        let xs: Vec<f64> = (0..n).map(|_| rng.range(-1e3, 1e3)).collect();
+        let whole = Welford::from_iter(xs.iter().copied());
+        // 1..=6 shards at random cut points (empty shards allowed).
+        let mut cuts: Vec<usize> = (0..rng.below(6)).map(|_| rng.below(n + 1)).collect();
+        cuts.push(0);
+        cuts.push(n);
+        cuts.sort_unstable();
+        let mut merged = Welford::new();
+        for w in cuts.windows(2) {
+            merged.merge(&Welford::from_iter(xs[w[0]..w[1]].iter().copied()));
+        }
+        assert_eq!(merged.len(), whole.len(), "case {case}");
+        let mean_scale = whole.mean().abs().max(1.0);
+        assert!(
+            (merged.mean() - whole.mean()).abs() <= 1e-12 * mean_scale,
+            "case {case}: mean {} vs {}",
+            merged.mean(),
+            whole.mean()
+        );
+        assert!(
+            (merged.var() - whole.var()).abs() <= 1e-9 * whole.var().max(1e-9),
+            "case {case}: var {} vs {}",
+            merged.var(),
+            whole.var()
+        );
+        assert_eq!(merged.min(), whole.min(), "case {case}");
+        assert_eq!(merged.max(), whole.max(), "case {case}");
+    });
+}
+
 /// Statistics sanity on real outcomes: CI halves when instances quadruple
 /// (approximately — random, so generous tolerance).
 #[test]
