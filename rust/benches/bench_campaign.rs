@@ -50,6 +50,8 @@ fn main() {
         "ckptwin-bench-store-{}.jsonl",
         std::process::id()
     ));
+    // `create` now refuses non-empty leftovers from an earlier run.
+    let _ = std::fs::remove_file(&path);
     let mut store = Store::create(&path).expect("store");
     let r = bench_val("campaign/store_append_per_cell", 50.0, || {
         for o in &outcomes {

@@ -45,7 +45,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::obs::SpanTimer;
 use crate::sim::engine::simulate_from_capped;
@@ -247,12 +247,66 @@ pub fn run_cells(
 /// heartbeat: a monitor thread that prints progress, rates and an ETA
 /// every couple of seconds while the workers grind.  The heartbeat is
 /// meant for interactive CLI runs — library callers pass `false`.
+///
+/// Worker panics are contained and retried (up to 2 requeues per unit);
+/// a cell that still cannot complete surfaces as an error naming the
+/// degraded cells — callers that want the partial results instead use
+/// [`run_cells_contained`].
 pub fn run_cells_metered(
     cells: &[Cell],
     opt: &CampaignOptions,
     store: Option<&mut Store>,
     heartbeat: bool,
 ) -> Result<(Vec<CellOutcome>, usize, CampaignMetrics)> {
+    let run = run_cells_contained(cells, opt, store, heartbeat, 2)?;
+    if !run.degraded.is_empty() {
+        let keys: Vec<&str> =
+            run.degraded.iter().map(|d| d.key.as_str()).collect();
+        bail!(
+            "{} cell(s) degraded after contained worker panics: {}",
+            run.degraded.len(),
+            keys.join(", ")
+        );
+    }
+    Ok((run.outcomes, run.skipped, run.metrics))
+}
+
+/// A cell that lost at least one work unit to a contained worker panic
+/// (after the per-unit retry budget); absent from the outcome list and
+/// from the store.
+#[derive(Clone, Debug)]
+pub struct DegradedCell {
+    pub hash: u64,
+    pub key: String,
+    /// The exhausted unit failures mapped to this cell.
+    pub failures: Vec<scheduler::UnitFailure>,
+}
+
+/// Outcome of a contained campaign execution ([`run_cells_contained`]).
+#[derive(Debug)]
+pub struct CampaignRun {
+    /// Completed cells, in (deduplicated) cell order.
+    pub outcomes: Vec<CellOutcome>,
+    /// Cells skipped (already satisfactorily in the store, or duplicates).
+    pub skipped: usize,
+    pub metrics: CampaignMetrics,
+    /// Cells that could not complete — the degraded manifest.
+    pub degraded: Vec<DegradedCell>,
+}
+
+/// The containment-aware core of the campaign engine: like
+/// [`run_cells_metered`], but a worker panic (including injected
+/// `sched.worker` / `pool.insert` faults) only costs the unit in flight —
+/// the unit is requeued up to `unit_retries` times, and cells that still
+/// cannot complete are returned in the degraded manifest instead of
+/// poisoning the run.
+pub fn run_cells_contained(
+    cells: &[Cell],
+    opt: &CampaignOptions,
+    store: Option<&mut Store>,
+    heartbeat: bool,
+    unit_retries: u32,
+) -> Result<CampaignRun> {
     let instances = opt.instances.max(1);
     let block = opt.block_size();
     let blocks_per_cell = instances.div_ceil(block);
@@ -268,7 +322,12 @@ pub fn run_cells_metered(
         .collect();
     let skipped = cells.len() - pending.len();
     if pending.is_empty() {
-        return Ok((Vec::new(), skipped, CampaignMetrics::default()));
+        return Ok(CampaignRun {
+            outcomes: Vec::new(),
+            skipped,
+            metrics: CampaignMetrics::default(),
+            degraded: Vec::new(),
+        });
     }
 
     let states: Vec<Mutex<CellState>> = pending
@@ -298,7 +357,10 @@ pub fn run_cells_metered(
         let cell = &cells[pending[ci]];
         let sc = cell.scenario();
         let pol = {
-            let mut st = states[ci].lock().expect("cell state poisoned");
+            // Contained panics can poison cell-state mutexes; every update
+            // under them is transactional (slot writes, counter moves), so
+            // recovering the inner value is sound.
+            let mut st = states[ci].lock().unwrap_or_else(|e| e.into_inner());
             match st.policy {
                 Some(p) => p,
                 None => {
@@ -335,7 +397,7 @@ pub fn run_cells_metered(
         meter.instances.fetch_add(sims, Ordering::Relaxed);
         meter.units_done.fetch_add(1, Ordering::Relaxed);
         ws.flush_pool_stats(&meter);
-        let mut st = states[ci].lock().expect("cell state poisoned");
+        let mut st = states[ci].lock().unwrap_or_else(|e| e.into_inner());
         st.slots[bi] = Some((waste, makespan));
         st.remaining -= 1;
         if st.remaining == 0 {
@@ -350,9 +412,10 @@ pub fn run_cells_metered(
             }
             let outcome = CellOutcome { cell: cell.clone(), waste, makespan, tr: pol.tr };
             if let Some(mx) = &store_mx {
-                let mut s = mx.lock().expect("store poisoned");
+                let mut s = mx.lock().unwrap_or_else(|e| e.into_inner());
                 if let Err(e) = s.append(&outcome.record()) {
-                    let mut slot = append_err.lock().expect("append_err poisoned");
+                    let mut slot =
+                        append_err.lock().unwrap_or_else(|e| e.into_inner());
                     if slot.is_none() {
                         *slot = Some(e.context(format!(
                             "persisting cell {:016x}",
@@ -365,12 +428,19 @@ pub fn run_cells_metered(
             meter.cells_done.fetch_add(1, Ordering::Relaxed);
         }
     };
-    std::thread::scope(|s| {
+    let contained = std::thread::scope(|s| {
         if heartbeat {
             s.spawn(|| heartbeat_loop(&meter, &finished, n_units, pending.len(), &timer));
         }
-        scheduler::run_units_stateful(n_units, opt.threads, WorkerState::new, unit);
+        let run = scheduler::run_units_contained(
+            n_units,
+            opt.threads,
+            unit_retries,
+            WorkerState::new,
+            unit,
+        );
         finished.store(true, Ordering::Relaxed);
+        run
     });
     let metrics = CampaignMetrics {
         cells: pending.len(),
@@ -382,19 +452,35 @@ pub fn run_cells_metered(
         pool_evictions: meter.pool_evictions.load(Ordering::Relaxed),
     };
 
-    if let Some(e) = append_err.into_inner().expect("append_err poisoned") {
+    if let Some(e) = append_err.into_inner().unwrap_or_else(|e| e.into_inner()) {
         return Err(e);
     }
-    let outcomes = states
-        .into_iter()
-        .map(|st| {
-            st.into_inner()
-                .expect("cell state poisoned")
-                .done
-                .expect("cell completed")
-        })
-        .collect();
-    Ok((outcomes, skipped, metrics))
+    // Map exhausted unit failures back to their cells: any cell missing
+    // its outcome must own at least one failed unit.
+    let mut failures_by_cell: std::collections::BTreeMap<
+        usize,
+        Vec<scheduler::UnitFailure>,
+    > = std::collections::BTreeMap::new();
+    for f in contained.failures {
+        failures_by_cell.entry(f.unit / blocks_per_cell).or_default().push(f);
+    }
+    let mut outcomes = Vec::new();
+    let mut degraded = Vec::new();
+    for (ci, st) in states.into_iter().enumerate() {
+        let st = st.into_inner().unwrap_or_else(|e| e.into_inner());
+        match st.done {
+            Some(o) => outcomes.push(o),
+            None => {
+                let cell = &cells[pending[ci]];
+                degraded.push(DegradedCell {
+                    hash: cell.hash,
+                    key: cell.key(),
+                    failures: failures_by_cell.remove(&ci).unwrap_or_default(),
+                });
+            }
+        }
+    }
+    Ok(CampaignRun { outcomes, skipped, metrics, degraded })
 }
 
 /// The heartbeat monitor: wake every ~2 s, print progress + ETA to stderr,

@@ -75,6 +75,20 @@ impl TracePool {
         if self.entries.contains_key(&key) {
             self.hits += 1;
         } else {
+            // Fail point `pool.insert`: fires on the miss path, before the
+            // fresh trace lands in the memo.  The pool has no Result
+            // channel, so every error-ish mode degrades to a panic — the
+            // scheduler's containment catches it and rebuilds the worker's
+            // pool, which is exactly the state-reinit path under test.
+            {
+                use crate::resilience::failpoint::{self, Mode, Site};
+                if let Some(inj) = failpoint::check(Site::PoolInsert) {
+                    if inj.mode == Mode::Kill {
+                        failpoint::kill_now(&inj);
+                    }
+                    panic!("injected panic at pool.insert (hit {})", inj.hit);
+                }
+            }
             if self.cached_events() > self.max_events {
                 self.entries.clear();
                 self.evictions += 1;

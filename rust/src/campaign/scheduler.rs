@@ -11,7 +11,11 @@
 //! per-unit partial aggregates in a fixed order (see
 //! [`crate::stats::Welford::merge`]).
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::resilience::failpoint::{self, Mode, Site};
 
 /// Worker count for `n_units` of work: all available cores, but never more
 /// threads than units.
@@ -50,46 +54,172 @@ where
     I: Fn() -> S + Sync,
     F: Fn(&mut S, usize) -> T + Sync,
 {
+    let run = run_units_contained(n, threads, 0, init, f);
+    if let Some(fail) = run.failures.first() {
+        // The old behaviour was an opaque `join().expect(..)`; name the
+        // unit so a panicking cell is identifiable from the message.
+        panic!(
+            "unit {} panicked after {} attempt(s): {}",
+            fail.unit, fail.attempts, fail.message
+        );
+    }
+    run.results.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// One unit that exhausted its attempts (see [`run_units_contained`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnitFailure {
+    /// Unit index that panicked.
+    pub unit: usize,
+    /// Attempts made (1 + retries granted).
+    pub attempts: u32,
+    /// Panic payload (stringified).
+    pub message: String,
+}
+
+/// Outcome of a contained run: per-unit results (`None` where the unit
+/// ultimately failed) plus the failure manifest, sorted by unit.
+#[derive(Debug)]
+pub struct ContainedRun<T> {
+    pub results: Vec<Option<T>>,
+    pub failures: Vec<UnitFailure>,
+}
+
+/// [`run_units_stateful`] with panic containment: each unit runs under
+/// `catch_unwind`, a panicking unit is requeued up to `retries` times
+/// (the worker's scratch state is rebuilt first — the panic may have left
+/// it inconsistent), and units that exhaust their attempts are reported
+/// in [`ContainedRun::failures`] instead of poisoning the whole run.
+///
+/// Fail point `sched.worker` fires inside the contained region, so
+/// injected worker panics exercise exactly this requeue path.
+pub fn run_units_contained<T, S, I, F>(
+    n: usize,
+    threads: usize,
+    retries: u32,
+    init: I,
+    f: F,
+) -> ContainedRun<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     if n == 0 {
-        return Vec::new();
+        return ContainedRun { results: Vec::new(), failures: Vec::new() };
     }
     let threads = match threads {
         0 => default_threads(n),
         t => t.min(n),
     };
+    let attempt = |state: &mut S, i: usize| -> Result<T, String> {
+        std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if let Some(inj) = failpoint::check(Site::SchedWorker) {
+                if inj.mode == Mode::Kill {
+                    failpoint::kill_now(&inj);
+                }
+                panic!("injected panic at sched.worker (hit {})", inj.hit);
+            }
+            f(state, i)
+        }))
+        .map_err(panic_message)
+    };
     if threads <= 1 {
+        // Inline on the caller, as before — same containment semantics.
         let mut state = init();
-        return (0..n).map(|i| f(&mut state, i)).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                let next = &next;
-                let init = &init;
-                let f = &f;
-                scope.spawn(move || {
-                    let mut state = init();
-                    let mut local: Vec<(usize, T)> = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        local.push((i, f(&mut state, i)));
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut failures = Vec::new();
+        let mut queue: Vec<(usize, u32)> = (0..n).rev().map(|i| (i, 0u32)).collect();
+        while let Some((i, tried)) = queue.pop() {
+            match attempt(&mut state, i) {
+                Ok(v) => results[i] = Some(v),
+                Err(message) => {
+                    state = init();
+                    if tried < retries {
+                        queue.push((i, tried + 1));
+                    } else {
+                        failures.push(UnitFailure {
+                            unit: i,
+                            attempts: tried + 1,
+                            message,
+                        });
                     }
-                    local
-                })
-            })
-            .collect();
-        for h in handles {
-            for (i, v) in h.join().expect("campaign worker panicked") {
-                out[i] = Some(v);
+                }
             }
         }
+        failures.sort_by_key(|f| f.unit);
+        return ContainedRun { results, failures };
+    }
+    // LIFO retry queue seeded in unit order (0 pops first); `resolved`
+    // counts units with a final outcome so idle workers know when to exit
+    // even while a failed unit is in flight on another worker.
+    let queue: Mutex<Vec<(usize, u32)>> =
+        Mutex::new((0..n).rev().map(|i| (i, 0u32)).collect());
+    let resolved = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    let failures: Mutex<Vec<UnitFailure>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let job = lock_queue(&queue).pop();
+                    let Some((i, tried)) = job else {
+                        if resolved.load(Ordering::SeqCst) >= n {
+                            break;
+                        }
+                        std::thread::yield_now();
+                        continue;
+                    };
+                    match attempt(&mut state, i) {
+                        Ok(v) => {
+                            results.lock().unwrap_or_else(|e| e.into_inner())[i] =
+                                Some(v);
+                            resolved.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(message) => {
+                            state = init();
+                            if tried < retries {
+                                lock_queue(&queue).push((i, tried + 1));
+                            } else {
+                                failures
+                                    .lock()
+                                    .unwrap_or_else(|e| e.into_inner())
+                                    .push(UnitFailure {
+                                        unit: i,
+                                        attempts: tried + 1,
+                                        message,
+                                    });
+                                resolved.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                }
+            });
+        }
     });
-    out.into_iter().map(|o| o.unwrap()).collect()
+    let results = results.into_inner().unwrap_or_else(|e| e.into_inner());
+    let mut failures = failures.into_inner().unwrap_or_else(|e| e.into_inner());
+    failures.sort_by_key(|f| f.unit);
+    ContainedRun { results, failures }
+}
+
+/// Poison-recovering queue lock: injected panics can poison the mutex,
+/// but every update is a whole-value push/pop, so the inner Vec is sound.
+fn lock_queue(
+    m: &Mutex<Vec<(usize, u32)>>,
+) -> std::sync::MutexGuard<'_, Vec<(usize, u32)>> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic (non-string payload)".to_string()
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +274,75 @@ mod tests {
         assert_eq!(serial, parallel);
         // 0² + 1² + 2² + 3²
         assert_eq!(serial[3], 14);
+    }
+
+    #[test]
+    fn contained_run_reports_failed_unit_and_keeps_the_rest() {
+        let run = run_units_contained(
+            20,
+            4,
+            1,
+            || (),
+            |_: &mut (), i| {
+                if i == 13 {
+                    panic!("boom on unit {i}");
+                }
+                i * 2
+            },
+        );
+        assert_eq!(run.failures.len(), 1);
+        assert_eq!(run.failures[0].unit, 13);
+        assert_eq!(run.failures[0].attempts, 2); // 1 try + 1 retry
+        assert!(run.failures[0].message.contains("boom on unit 13"));
+        for (i, r) in run.results.iter().enumerate() {
+            if i == 13 {
+                assert!(r.is_none());
+            } else {
+                assert_eq!(*r, Some(i * 2));
+            }
+        }
+    }
+
+    #[test]
+    fn contained_retry_recovers_flaky_unit() {
+        use std::sync::atomic::AtomicBool;
+        let first = AtomicBool::new(true);
+        let run = run_units_contained(
+            5,
+            1,
+            2,
+            || (),
+            |_: &mut (), i| {
+                if i == 2 && first.swap(false, Ordering::SeqCst) {
+                    panic!("flaky once");
+                }
+                i + 100
+            },
+        );
+        assert!(run.failures.is_empty(), "{:?}", run.failures);
+        let vals: Vec<usize> = run.results.into_iter().map(|o| o.unwrap()).collect();
+        assert_eq!(vals, vec![100, 101, 102, 103, 104]);
+    }
+
+    #[test]
+    fn stateful_panic_names_the_unit() {
+        let caught = std::panic::catch_unwind(|| {
+            run_units_stateful(8, 3, || (), |_: &mut (), i| {
+                if i == 5 {
+                    panic!("bad cell");
+                }
+                i
+            });
+        })
+        .unwrap_err();
+        let msg = caught
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains("unit 5") && msg.contains("bad cell"),
+            "panic message should name the unit: {msg}"
+        );
     }
 
     #[test]

@@ -14,9 +14,11 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::jsonio::{self, JsonlAppender, Value};
+use crate::jsonio::{self, JsonlAppender, RecordCheck, Value};
+use crate::resilience::failpoint::{self, Site};
+use crate::resilience::retry::Backoff;
 
 /// One persisted cell result (one JSONL line).
 #[derive(Clone, Debug, PartialEq)]
@@ -49,11 +51,16 @@ impl CellRecord {
         obj.insert("waste_max".into(), Value::Num(self.waste_max));
         obj.insert("makespan_mean".into(), Value::Num(self.makespan_mean));
         obj.insert("tr".into(), Value::Num(self.tr));
-        jsonio::to_string(&Value::Obj(obj))
+        // Seal with a per-record CRC so interior corruption (not just a
+        // torn tail) is detected and quarantined on reload.
+        jsonio::seal_record(obj)
     }
 
     fn from_json(line: &str) -> Option<CellRecord> {
-        let v = jsonio::parse(line).ok()?;
+        CellRecord::from_value(&jsonio::parse(line).ok()?)
+    }
+
+    fn from_value(v: &Value) -> Option<CellRecord> {
         let num = |k: &str| v.get(k).and_then(Value::as_f64);
         Some(CellRecord {
             hash: u64::from_str_radix(v.get("hash")?.as_str()?, 16).ok()?,
@@ -77,6 +84,10 @@ pub struct Store {
     records: BTreeMap<u64, CellRecord>,
     /// Unparseable lines skipped on open (a torn tail from an interrupt).
     pub skipped_lines: usize,
+    /// Lines that parsed but failed their CRC seal (interior corruption).
+    /// The damaged cells are simply absent from the index, so a resume
+    /// recomputes them; callers surface the count.
+    pub quarantined_lines: usize,
 }
 
 impl Store {
@@ -86,17 +97,43 @@ impl Store {
         Store::open_inner(path.as_ref(), false)
     }
 
-    /// Open for a fresh run: truncate any existing store.
+    /// Open for a fresh run.  Refuses to clobber an existing *non-empty*
+    /// store — a stray `create` used to silently destroy campaign
+    /// results; pass `--force` (→ [`Store::create_force`]) or use
+    /// `campaign resume` instead.
     pub fn create(path: impl AsRef<Path>) -> Result<Store> {
+        let path = path.as_ref();
+        if let Ok(meta) = std::fs::metadata(path) {
+            if meta.len() > 0 {
+                bail!(
+                    "refusing to overwrite non-empty store {} (use --force, \
+                     or resume to keep existing results)",
+                    path.display()
+                );
+            }
+        }
+        Store::open_inner(path, true)
+    }
+
+    /// Open for a fresh run, truncating any existing store (`--force`).
+    pub fn create_force(path: impl AsRef<Path>) -> Result<Store> {
         Store::open_inner(path.as_ref(), true)
     }
 
     fn open_inner(path: &Path, truncate: bool) -> Result<Store> {
         // Replay existing lines last-wins; the appender repairs a torn
         // tail and counts unparseable lines (see `jsonio::JsonlAppender`).
+        // Lines whose CRC seal fails are quarantined: counted, kept out
+        // of the index, but not treated as torn (they parsed fine).
         let mut records = BTreeMap::new();
+        let mut quarantined_lines = 0usize;
         let file = JsonlAppender::open(path, truncate, |line| {
-            match CellRecord::from_json(line) {
+            let Ok(v) = jsonio::parse(line) else { return false };
+            if jsonio::check_record(&v) == RecordCheck::Corrupt {
+                quarantined_lines += 1;
+                return true;
+            }
+            match CellRecord::from_value(&v) {
                 Some(rec) => {
                     records.insert(rec.hash, rec);
                     true
@@ -105,7 +142,13 @@ impl Store {
             }
         })?;
         let skipped_lines = file.skipped_lines;
-        Ok(Store { path: path.to_path_buf(), file, records, skipped_lines })
+        Ok(Store {
+            path: path.to_path_buf(),
+            file,
+            records,
+            skipped_lines,
+            quarantined_lines,
+        })
     }
 
     pub fn path(&self) -> &Path {
@@ -137,8 +180,19 @@ impl Store {
     /// record whose hash is already present supersedes the earlier line
     /// (last-wins, both in memory and on reload) — resume uses this to
     /// upgrade cells recomputed with a higher instance count.
+    ///
+    /// Transient IO faults (fail point `store.append`) are absorbed by a
+    /// bounded-exponential-backoff retry with deterministic jitter; any
+    /// other failure surfaces after the attempts are exhausted.
     pub fn append(&mut self, rec: &CellRecord) -> Result<()> {
-        self.file.append_line(&rec.to_json())?;
+        let line = rec.to_json();
+        let file = &mut self.file;
+        Backoff::default().run(|_attempt| {
+            if let Some(inj) = failpoint::check(Site::StoreAppend) {
+                inj.trigger()?;
+            }
+            file.append_line(&line)
+        })?;
         self.records.insert(rec.hash, rec.clone());
         Ok(())
     }
@@ -189,7 +243,7 @@ mod tests {
     }
 
     #[test]
-    fn create_truncates_open_appends() {
+    fn create_refuses_nonempty_force_truncates() {
         let path = tmp("trunc");
         let _ = std::fs::remove_file(&path);
         {
@@ -201,12 +255,66 @@ mod tests {
             assert_eq!(s.len(), 1);
             s.append(&rec(8)).unwrap();
         }
+        // A stray create must not clobber the two results on disk.
+        let err = Store::create(&path).unwrap_err().to_string();
+        assert!(err.contains("refusing to overwrite"), "{err}");
         {
             let s = Store::open(&path).unwrap();
             assert_eq!(s.len(), 2);
         }
+        // --force truncates explicitly.
+        let s = Store::create_force(&path).unwrap();
+        assert_eq!(s.len(), 0);
+        drop(s);
+        // create on an existing but empty store is fine.
         let s = Store::create(&path).unwrap();
         assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn interior_corruption_is_quarantined() {
+        let path = tmp("quarantine");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = Store::create(&path).unwrap();
+            for h in [1u64, 2, 3] {
+                s.append(&rec(h)).unwrap();
+            }
+        }
+        // Corrupt a *middle* record's payload, keeping it valid JSON: the
+        // line still parses, so only the CRC seal can catch it.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let damaged = lines[1].replace("\"instances\":10", "\"instances\":99");
+        let text = format!("{}\n{}\n{}\n", lines[0], damaged, lines[2]);
+        std::fs::write(&path, text).unwrap();
+        let s = Store::open(&path).unwrap();
+        assert_eq!(s.quarantined_lines, 1);
+        assert_eq!(s.skipped_lines, 0);
+        // The damaged cell is absent (a resume would recompute it); its
+        // neighbours are intact.
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(1) && !s.contains(2) && s.contains(3));
+    }
+
+    #[test]
+    fn legacy_unsealed_records_still_load() {
+        let path = tmp("legacy");
+        let _ = std::fs::remove_file(&path);
+        // A pre-seal store: records without a crc field.
+        let mut legacy = String::new();
+        legacy.push_str(
+            "{\"hash\":\"0000000000000001\",\"instances\":10,\"key\":\"cell-1\",\
+             \"makespan_mean\":5500000,\"tr\":4321,\"waste_ci95\":0.006,\
+             \"waste_max\":0.15,\"waste_mean\":0.125,\"waste_min\":0.1,\
+             \"waste_var\":0.0001}\n",
+        );
+        std::fs::write(&path, legacy).unwrap();
+        let s = Store::open(&path).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.quarantined_lines, 0);
+        assert_eq!(s.get(1).unwrap(), &rec(1));
     }
 
     #[test]

@@ -21,27 +21,8 @@ use anyhow::{anyhow, Context, Result};
 
 const MAGIC: &[u8; 8] = b"CKPTWIN1";
 
-/// CRC-32 (IEEE 802.3), bitwise implementation with a small lookup table.
-pub fn crc32(data: &[u8]) -> u32 {
-    // Build the table once.
-    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
-    let table = TABLE.get_or_init(|| {
-        let mut t = [0u32; 256];
-        for (i, e) in t.iter_mut().enumerate() {
-            let mut c = i as u32;
-            for _ in 0..8 {
-                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
-            }
-            *e = c;
-        }
-        t
-    });
-    let mut crc = 0xFFFF_FFFFu32;
-    for &b in data {
-        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
-    }
-    crc ^ 0xFFFF_FFFF
-}
+/// CRC-32 (IEEE 802.3); canonical implementation lives in [`crate::util`].
+pub use crate::util::crc32;
 
 /// A checkpoint directory with retention.
 pub struct CheckpointStore {
@@ -140,6 +121,23 @@ impl CheckpointStore {
         }
     }
 
+    /// Delete every checkpoint taken after `step`.
+    ///
+    /// Crash–resume hygiene: the coordinator's async writer may have
+    /// persisted checkpoints *ahead* of the state a resumed run restores
+    /// (its snapshot captures `validated` at snapshot time).  Dropping the
+    /// future ones makes `load_latest` agree with the restored state, so a
+    /// replayed run serves faults from the same checkpoint the original
+    /// would have.
+    pub fn remove_after(&self, step: u64) -> Result<()> {
+        for s in self.steps()? {
+            if s > step {
+                let _ = fs::remove_file(self.path_for(s));
+            }
+        }
+        Ok(())
+    }
+
     fn retain(&self) -> Result<()> {
         let steps = self.steps()?;
         if steps.len() > self.keep {
@@ -207,5 +205,17 @@ mod tests {
         // Standard test vector: CRC32("123456789") = 0xCBF43926.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn remove_after_drops_future_checkpoints() {
+        let store = CheckpointStore::new(tmpdir("rmafter"), 10).unwrap();
+        for step in [1u64, 5, 9, 12] {
+            store.save(step, &[step as f32]).unwrap();
+        }
+        store.remove_after(5).unwrap();
+        assert_eq!(store.steps().unwrap(), vec![1, 5]);
+        let (step, _) = store.load_latest().unwrap().unwrap();
+        assert_eq!(step, 5);
     }
 }

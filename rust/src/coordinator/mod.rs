@@ -28,9 +28,15 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::campaign::grid::fnv1a64;
 use crate::config::Scenario;
 use crate::model::waste::waste_clipped;
 use crate::obs::{Hist, SpanTimer, Stopwatch};
+use crate::resilience::failpoint::{self, Site};
+use crate::resilience::retry::Backoff;
+use crate::resilience::snapshot::{
+    plan_period_passes, CoordinatorSnapshot, SnapshotStore,
+};
 use crate::sim::trace::{Event, TraceStream};
 use crate::strategy::{Policy, PolicyKind};
 use checkpoint::CheckpointStore;
@@ -53,6 +59,28 @@ pub struct CoordinatorConfig {
     pub seed: u64,
     /// Record the loss every this many validated steps (0 = every step).
     pub log_every: u64,
+    /// Self-checkpointing of the coordinator's *own* state (`None` = off).
+    pub selfckpt: Option<SelfCkptOptions>,
+}
+
+/// Options for the coordinator's own periodic state snapshot — the
+/// checkpointing system checkpointing itself, at a period chosen by the
+/// paper's first-order model from *measured* wall costs (see
+/// [`crate::resilience::snapshot::plan_period_passes`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SelfCkptOptions {
+    /// Assumed coordinator crash rate: mean leader-loop passes between
+    /// crashes (μ on the pass clock).  The chaos harness injects crashes
+    /// at exactly this granularity via the `coord.pass` fail point.
+    pub crash_mtbf_passes: f64,
+    /// Re-run the period planner every this many snapshots (≥ 1).
+    pub replan_every: u64,
+}
+
+impl Default for SelfCkptOptions {
+    fn default() -> Self {
+        SelfCkptOptions { crash_mtbf_passes: 200.0, replan_every: 1 }
+    }
 }
 
 /// Outcome of a coordinator run.
@@ -75,6 +103,11 @@ pub struct Report {
     pub steps_executed: u64,
     /// Steps whose work was destroyed by faults.
     pub steps_lost: u64,
+    /// Leader-loop passes completed (deterministic given the seed).
+    pub passes: u64,
+    /// Self-snapshots written.  Pacing is wall-driven, so this count may
+    /// vary run to run; it is excluded from [`Report::fingerprint`].
+    pub n_self_snaps: u64,
     /// Wall-clock seconds of the run.
     pub wall_seconds: f64,
     /// Wall-clock latency (ns) of each leader-loop pass: one scheduling
@@ -82,6 +115,53 @@ pub struct Report {
     /// recovery).  log2-bucketed; the tail exposes slow recoveries and
     /// checkpoint stalls.
     pub decision_ns: Hist,
+}
+
+impl Report {
+    /// Order-stable hash of every deterministic field — the crash–resume
+    /// equivalence oracle.  Wall-clock observables (`wall_seconds`,
+    /// `decision_ns`, `n_self_snaps`) are excluded: self-snapshot pacing
+    /// is wall-driven and must not perturb the simulated outcome.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(96 + 12 * self.losses.len());
+        for &(step, loss) in &self.losses {
+            bytes.extend_from_slice(&step.to_le_bytes());
+            bytes.extend_from_slice(&loss.to_le_bytes());
+        }
+        for f in [self.sim_makespan, self.sim_waste, self.predicted_waste] {
+            bytes.extend_from_slice(&f.to_bits().to_le_bytes());
+        }
+        for c in [
+            self.n_faults,
+            self.n_recoveries,
+            self.n_reg_ckpts,
+            self.n_pro_ckpts,
+            self.n_preds_trusted,
+            self.steps_executed,
+            self.steps_lost,
+            self.passes,
+        ] {
+            bytes.extend_from_slice(&c.to_le_bytes());
+        }
+        fnv1a64(&bytes)
+    }
+}
+
+/// Stable hash of everything that shapes a run's deterministic outcome;
+/// [`run_from`] refuses a self-snapshot taken under a different
+/// configuration.
+pub fn config_fingerprint(config: &CoordinatorConfig) -> u64 {
+    fnv1a64(
+        format!(
+            "{:?}|{:?}|{}|{}|{}",
+            config.scenario,
+            config.policy,
+            config.seconds_per_step,
+            config.total_steps,
+            config.seed,
+        )
+        .as_bytes(),
+    )
 }
 
 enum WriterMsg {
@@ -94,6 +174,20 @@ enum WriterMsg {
 
 /// Run the coordinator to completion.
 pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Report> {
+    run_from(config, workload, None)
+}
+
+/// Run the coordinator, optionally resuming from a self-snapshot a crashed
+/// (or killed) earlier run left behind.  A resumed run restores the full
+/// deterministic state at the snapshot's pass boundary — simulation clock,
+/// counters, loss curve, workload parameters, trace-stream position — and
+/// produces a [`Report`] with the *same* [`Report::fingerprint`] as an
+/// uninterrupted run; `ckptwin chaos` gates on exactly that equivalence.
+pub fn run_from(
+    config: &CoordinatorConfig,
+    workload: &mut dyn Workload,
+    resume: Option<&CoordinatorSnapshot>,
+) -> Result<Report> {
     let sc = &config.scenario;
     let pol = &config.policy;
     pol.validate(sc);
@@ -131,7 +225,12 @@ pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Re
 
     let mut stream = TraceStream::new(sc, config.seed);
     let mut next_ev = stream.next_event();
+    // Trace events consumed so far (the pop above is #1).  A self-snapshot
+    // records this count; resume re-derives the stream from the seed and
+    // fast-forwards to the same position.
+    let mut events_consumed: u64 = 1;
 
+    let cfg_fp = config_fingerprint(config);
     let wall_start = Instant::now();
     let mut rep = Report::default();
     let mut sim_t = 0.0f64;
@@ -140,14 +239,71 @@ pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Re
     let mut validated: u64 = 0;
     let mut since: u64 = 0;
     let mut period_done: u64 = 0; // steps completed in the current period
+    let mut passes: u64 = 0; // completed leader-loop passes
 
-    // Take checkpoint step-0 so recovery always has something to load.
-    store.save(0, &workload.snapshot())?;
+    match resume {
+        None => {
+            // A fresh run owns the directory's future: drop checkpoints a
+            // previous (crashed) run may have left past step 0 — recovery
+            // must never load state from a different history.  Then take
+            // checkpoint step-0 so recovery always has something to load.
+            store.remove_after(0)?;
+            store.save(0, &workload.snapshot())?;
+        }
+        Some(snap) => {
+            if snap.config_fingerprint != cfg_fp {
+                return Err(anyhow!(
+                    "self-snapshot belongs to a different configuration \
+                     ({:016x} != {:016x})",
+                    snap.config_fingerprint,
+                    cfg_fp
+                ));
+            }
+            for _ in 1..snap.events_consumed {
+                next_ev = stream.next_event();
+            }
+            events_consumed = snap.events_consumed;
+            sim_t = snap.sim_t;
+            validated = snap.validated;
+            since = snap.since;
+            period_done = snap.period_done;
+            passes = snap.passes;
+            let [nf, nr, nc, np, nt, se, sl] = snap.counters;
+            rep.n_faults = nf;
+            rep.n_recoveries = nr;
+            rep.n_reg_ckpts = nc;
+            rep.n_pro_ckpts = np;
+            rep.n_preds_trusted = nt;
+            rep.steps_executed = se;
+            rep.steps_lost = sl;
+            rep.losses = snap.losses.clone();
+            workload.restore(snap.workload.clone())?;
+            // Durable hygiene: the crashed run's async writer may have
+            // persisted checkpoints *past* the snapshot point — drop them
+            // so `load_latest` agrees with the restored state — and
+            // re-seed `validated` in case retention already evicted it.
+            store.remove_after(snap.validated)?;
+            store.save(snap.validated, &snap.ckpt_theta)?;
+        }
+    }
+
+    // Self-checkpointing bookkeeping.  Pacing is wall-clock-driven, but a
+    // snapshot has no simulation-clock effect, so the deterministic outcome
+    // (and Report::fingerprint) is identical with it on or off.
+    let snap_store = match &config.selfckpt {
+        Some(_) => Some(SnapshotStore::new(&config.ckpt_dir)?),
+        None => None,
+    };
+    let mut period_passes: u64 = 16; // bootstrap until costs are measured
+    let mut next_snap_pass: u64 = passes + period_passes;
+    let mut pass_ns_total: u64 = 0;
+    let mut snap_ns_total: u64 = 0;
 
     // --- helpers -----------------------------------------------------------
     macro_rules! pop_event {
         () => {{
             next_ev = stream.next_event();
+            events_consumed += 1;
         }};
     }
 
@@ -269,9 +425,72 @@ pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Re
     let mut pass_timer: Option<SpanTimer> = None;
     'outer: while validated + since < job_steps {
         if let Some(t) = pass_timer {
-            decisions.record_nanos(t.elapsed_nanos());
+            let ns = t.elapsed_nanos();
+            pass_ns_total += ns;
+            decisions.record_nanos(ns);
         }
         pass_timer = Some(SpanTimer::start());
+        // 0a. Self-snapshot at the pass boundary.  The state captured here
+        // is exactly the resume point: `passes` passes completed, the next
+        // one not yet started — `run_from` re-executes it from the top.
+        if let (Some(opts), Some(snaps)) = (&config.selfckpt, &snap_store) {
+            if passes >= next_snap_pass {
+                let t0 = Instant::now();
+                // Drain the writer so `validated` is durable and loadable.
+                let (ack_tx, ack_rx) = mpsc::channel();
+                tx.send(WriterMsg::Sync(ack_tx))
+                    .map_err(|_| anyhow!("checkpoint writer died"))?;
+                ack_rx
+                    .recv()
+                    .map_err(|_| anyhow!("checkpoint writer died"))?;
+                let snap = CoordinatorSnapshot {
+                    config_fingerprint: cfg_fp,
+                    passes,
+                    sim_t,
+                    validated,
+                    since,
+                    period_done,
+                    events_consumed,
+                    counters: [
+                        rep.n_faults,
+                        rep.n_recoveries,
+                        rep.n_reg_ckpts,
+                        rep.n_pro_ckpts,
+                        rep.n_preds_trusted,
+                        rep.steps_executed,
+                        rep.steps_lost,
+                    ],
+                    losses: rep.losses.clone(),
+                    workload: workload.snapshot(),
+                    ckpt_theta: store.load(validated)?,
+                };
+                Backoff::default().run(|_attempt| snaps.save(&snap))?;
+                rep.n_self_snaps += 1;
+                snap_ns_total += t0.elapsed().as_nanos() as u64;
+                // Dogfood: replan the snapshot period with the repo's own
+                // first-order optimum, fed the *measured* mean pass and
+                // snapshot costs and the assumed crash rate.
+                if rep.n_self_snaps % opts.replan_every.max(1) == 0 {
+                    let mean_pass =
+                        pass_ns_total as f64 / 1e9 / passes.max(1) as f64;
+                    let mean_snap = snap_ns_total as f64
+                        / 1e9
+                        / rep.n_self_snaps as f64;
+                    period_passes = plan_period_passes(
+                        mean_snap,
+                        mean_pass,
+                        opts.crash_mtbf_passes,
+                    );
+                }
+                next_snap_pass = passes + period_passes;
+            }
+        }
+        // 0b. Fail point `coord.pass`: the chaos harness crashes runs here
+        // (error, panic, or hard kill) and resumes them from the snapshot.
+        if let Some(inj) = failpoint::check(Site::CoordPass) {
+            inj.trigger()?;
+        }
+        passes += 1;
         // 1. Consume any event already due at sim_t.
         while next_ev.time() <= sim_t {
             match next_ev {
@@ -380,6 +599,7 @@ pub fn run(config: &CoordinatorConfig, workload: &mut dyn Workload) -> Result<Re
         decisions.record_nanos(t.elapsed_nanos());
     }
     rep.decision_ns = decisions.take();
+    rep.passes = passes;
 
     tx.send(WriterMsg::Stop).ok();
     writer
@@ -427,6 +647,7 @@ mod tests {
             ckpt_dir: dir,
             seed: 42,
             log_every: 10,
+            selfckpt: None,
         }
     }
 
@@ -479,6 +700,72 @@ mod tests {
         let rep = run(&cfg, &mut w).unwrap();
         assert_eq!(rep.n_pro_ckpts, 0);
         assert_eq!(rep.n_preds_trusted, 0);
+    }
+
+    #[test]
+    fn self_snapshots_do_not_perturb_the_deterministic_outcome() {
+        let base = config("snapoff", 4000.0, PolicyKind::WithCkpt);
+        let mut w1 = SyntheticWorkload::new(32);
+        let plain = run(&base, &mut w1).unwrap();
+        assert_eq!(plain.n_self_snaps, 0);
+        let with_snap = CoordinatorConfig {
+            ckpt_dir: base.ckpt_dir.with_extension("snap"),
+            selfckpt: Some(SelfCkptOptions::default()),
+            ..base.clone()
+        };
+        let _ = std::fs::remove_dir_all(&with_snap.ckpt_dir);
+        let mut w2 = SyntheticWorkload::new(32);
+        let snapped = run(&with_snap, &mut w2).unwrap();
+        assert!(snapped.n_self_snaps >= 1, "no snapshot in {} passes", snapped.passes);
+        assert_eq!(snapped.fingerprint(), plain.fingerprint());
+        assert_eq!(snapped.losses, plain.losses);
+        assert_eq!(snapped.passes, plain.passes);
+    }
+
+    #[test]
+    fn resume_from_self_snapshot_reproduces_the_golden_report() {
+        let mut cfg = config("resume", 4000.0, PolicyKind::WithCkpt);
+        cfg.selfckpt = Some(SelfCkptOptions::default());
+        let mut w = SyntheticWorkload::new(32);
+        let golden = run(&cfg, &mut w).unwrap();
+        assert!(golden.n_self_snaps >= 1);
+        // The completed run left its last self-snapshot behind.  Resume
+        // from it with a fresh workload, exactly as a restarted process
+        // would — the checkpoint dir still holds files written *after*
+        // the snapshot, so this also exercises `remove_after` hygiene.
+        let snap = SnapshotStore::new(&cfg.ckpt_dir)
+            .unwrap()
+            .load()
+            .unwrap()
+            .expect("snapshot written");
+        assert!(snap.passes < golden.passes);
+        let mut w2 = SyntheticWorkload::new(32);
+        let resumed = run_from(&cfg, &mut w2, Some(&snap)).unwrap();
+        assert_eq!(resumed.fingerprint(), golden.fingerprint());
+        assert_eq!(resumed.losses, golden.losses);
+        assert_eq!(resumed.sim_makespan, golden.sim_makespan);
+        assert_eq!(resumed.steps_executed, golden.steps_executed);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_configuration() {
+        let mut cfg = config("fpmismatch", 1e12, PolicyKind::IgnorePredictions);
+        cfg.selfckpt = Some(SelfCkptOptions::default());
+        let mut w = SyntheticWorkload::new(8);
+        run(&cfg, &mut w).unwrap();
+        let snap = SnapshotStore::new(&cfg.ckpt_dir)
+            .unwrap()
+            .load()
+            .unwrap()
+            .expect("snapshot written");
+        let mut other = cfg.clone();
+        other.seed = cfg.seed + 1;
+        let mut w2 = SyntheticWorkload::new(8);
+        let err = run_from(&other, &mut w2, Some(&snap)).unwrap_err();
+        assert!(
+            err.to_string().contains("different configuration"),
+            "{err}"
+        );
     }
 
     #[test]

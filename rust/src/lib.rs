@@ -33,6 +33,7 @@ pub mod jsonio;
 pub mod model;
 pub mod obs;
 pub mod predictor;
+pub mod resilience;
 pub mod runtime;
 pub mod sim;
 pub mod stats;

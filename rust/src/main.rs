@@ -38,6 +38,13 @@
 //!                   and writes everything to `METRICS.json` (schema
 //!                   `ckptwin-metrics/1`); non-zero exit on any audit
 //!                   violation (the CI gate)
+//! * `chaos`       — crash–resume equivalence gate: golden runs vs runs
+//!                   crashed (torn writes, transient IO, killed coordinator
+//!                   passes) and resumed, compared record-for-record and
+//!                   fingerprint-for-fingerprint; writes `CHAOS.json` and
+//!                   exits non-zero on any divergence (the CI gate).  The
+//!                   global `--inject "site:p=0.01,seed=42"` flag arms the
+//!                   same fail points under any other subcommand.
 //! * `strategies`  — list the strategy registry (names, aliases,
 //!                   parameters); any registered name — including the
 //!                   parameterized `qtrust(q=…)` and the BestPeriod
@@ -85,14 +92,15 @@ COMMANDS
                against a recorded failure log; --export N writes a
                synthetic log instead
   config       <file.toml> [--instances N]
-  campaign     run|resume|report [--out results/campaign.jsonl]
+  campaign     run|resume|report [--out results/campaign.jsonl] [--force]
                [--grid paper|smoke] [--instances N] [--threads N]
                [--block N] [--scale F] [--uniform-fp] [--heartbeat]
                [--procs 65536,131072,...] [--cp-ratios 1.0,0.1]
                [--laws exponential,weibull0.7,lognormal1.2]
                [--predictors a,b,biased(beta=2),...] [--windows 300,600,...]
                [--strategies daly,rfo,nockpt,exactpred,qtrust(q=0.5),...]
-               run executes the grid and streams per-cell JSONL results;
+               run executes the grid and streams per-cell JSONL results
+               (refusing to clobber a non-empty store without --force);
                resume skips cells already in the store; report prints it
   validate     conformance sweep: simulated waste vs the closed-form model
                (Eqs. 3/4/10/14) per (strategy, law, predictor) cell, at the
@@ -115,6 +123,15 @@ COMMANDS
                [--instances N] [--threads N] [--json METRICS.json]
                [--heartbeat] [--steps 240] [--mtbf 3000] [--seed 42]
                + the campaign axis overrides (--procs, --laws, ...)
+  chaos        crash–resume equivalence gate: randomized kill/resume
+               cycles over the campaign store (torn partial-line writes,
+               transient IO), the conformance store, and the coordinator
+               (killed passes resumed from its self-snapshot); each
+               survivor must match its golden run record for record /
+               fingerprint for fingerprint.  Writes CHAOS.json; non-zero
+               exit on any divergence or unquarantined corruption.
+               [--smoke (25 cycles) | --cycles 100] [--seed 42]
+               [--dir results/chaos-scratch] [--json CHAOS.json]
   strategies   list the strategy registry: names, aliases, parameters
                (any registered name is valid wherever a strategy is named)
   predictors   list the predictor registry: names, aliases, parameters
@@ -124,6 +141,14 @@ COMMANDS
                biased(beta=2), mixedwin(i1=300;i2=1200;w=0.5),
                jitter(sigma=120), classed(p_hi=0.95;p_lo=0.6;frac=0.5))
   help         this text
+
+GLOBAL
+  --inject \"site:key=val,...[;site:...]\"  arm deterministic fail points
+               for the whole process: sites store.append, jsonl.tail,
+               sched.worker, pool.insert, coord.pass, snapshot.write;
+               keys p= (per-hit probability), nth= (fire on the nth hit),
+               seed=, mode=transient|torn|panic|kill (default kill).
+               e.g. --inject \"store.append:p=0.01,seed=42,mode=transient\"
 ";
 
 fn scenario_from_args(args: &Args) -> Result<Scenario> {
@@ -387,6 +412,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
             .into(),
         seed: args.get_or("seed", 42),
         log_every: 10,
+        selfckpt: None,
     };
     println!(
         "e2e: {} steps, policy {:?} T_R={tr:.0} T_P={tp:.0}, MTBF {mtbf}s",
@@ -728,7 +754,11 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     let grid = grid_from_args(args)?;
     let cells = grid.expand();
     let mut store = if mode == "run" {
-        Store::create(std::path::Path::new(out))?
+        if args.has("force") {
+            Store::create_force(std::path::Path::new(out))?
+        } else {
+            Store::create(std::path::Path::new(out))?
+        }
     } else {
         // Resume is read-modify: a mistyped path must not silently start
         // an empty store and recompute the whole grid into the wrong file.
@@ -1137,6 +1167,7 @@ fn cmd_metrics(args: &Args) -> Result<()> {
             ckpt_dir: args.get_str("ckpt-dir").unwrap_or("results/metrics-ckpts").into(),
             seed: args.get_or("seed", 42),
             log_every: 0,
+            selfckpt: None,
         };
         let mut wl = SyntheticWorkload::new(64);
         let rep = coordinator::run(&cfg, &mut wl)?;
@@ -1264,8 +1295,71 @@ fn cmd_predictors(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ckptwin chaos` — the crash–resume equivalence gate.
+///
+/// Runs randomized kill/resume cycles over the campaign store, the
+/// conformance store, and the coordinator (see `resilience::chaos`),
+/// writes `CHAOS.json`, and exits non-zero on any divergence.  `--smoke`
+/// is the 25-cycle CI variant; the full gate defaults to 100 cycles.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use ckptwin::resilience::chaos::{self, ChaosOptions};
+    let cycles: u64 = args.get_or("cycles", if args.has("smoke") { 25 } else { 100 });
+    let seed: u64 = args.get_or("seed", 42);
+    let dir = std::path::PathBuf::from(args.get_str("dir").unwrap_or("results/chaos-scratch"));
+    println!(
+        "chaos: {cycles} kill/resume cycles (seed {seed}) over \
+         campaign store, conformance store, coordinator"
+    );
+    let t0 = std::time::Instant::now();
+    let rep = chaos::run_chaos(&ChaosOptions { cycles, seed, dir })?;
+    let json_path = std::path::PathBuf::from(args.get_str("json").unwrap_or("CHAOS.json"));
+    let bytes = chaos::write_chaos_json(&json_path, &rep)?;
+    println!(
+        "chaos: {} cycles in {:.1}s — {} crashes injected, {} resumes, \
+         {} torn tails repaired, {} records quarantined, {} transient retries",
+        rep.cycles_run,
+        t0.elapsed().as_secs_f64(),
+        rep.crashes_injected,
+        rep.resumes,
+        rep.torn_tails_repaired,
+        rep.records_quarantined,
+        rep.transient_retries,
+    );
+    println!("wrote {} ({bytes} bytes, schema {})", json_path.display(), chaos::SCHEMA);
+    if !rep.ok() {
+        for d in &rep.divergences {
+            eprintln!("chaos divergence: {d}");
+        }
+        return Err(anyhow!(
+            "{} crash–resume divergence(s); see {}",
+            rep.divergences.len(),
+            json_path.display()
+        ));
+    }
+    println!("chaos gate clean: every crashed run resumed to an identical result");
+    Ok(())
+}
+
 fn main() {
     let args = Args::from_env();
+    // Global fault injection: armed once here and held for the whole
+    // process so every subcommand sees the same plan.  `chaos` arms its
+    // own per-cycle plans on this thread and would deadlock against an
+    // outer guard, so the combination is rejected.
+    let mut _inject_guard = None;
+    if let Some(spec) = args.get_str("inject") {
+        if args.subcommand.as_deref() == Some("chaos") {
+            eprintln!("error: `chaos` arms its own fail points; drop --inject");
+            std::process::exit(1);
+        }
+        match ckptwin::resilience::failpoint::Plan::parse(spec) {
+            Ok(plan) => _inject_guard = Some(ckptwin::resilience::failpoint::arm(plan)),
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
     let result = match args.subcommand.as_deref() {
         Some("simulate") => cmd_simulate(&args),
         Some("analytic") => cmd_analytic(&args),
@@ -1281,6 +1375,7 @@ fn main() {
         Some("campaign") => cmd_campaign(&args),
         Some("validate") => cmd_validate(&args),
         Some("metrics") => cmd_metrics(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("strategies") => cmd_strategies(&args),
         Some("predictors") => cmd_predictors(&args),
         Some("help") | None => {

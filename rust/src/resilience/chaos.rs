@@ -1,0 +1,575 @@
+//! Crash–resume equivalence harness: the gate behind `ckptwin chaos`.
+//!
+//! Each cycle produces a **golden** artifact with no faults armed, then
+//! reproduces it under injected crashes — killed at a randomized point,
+//! resumed, killed again — and requires the survivor to match the golden
+//! run exactly.  Three targets rotate per cycle:
+//!
+//! * **campaign store** — a reference JSONL store vs one written under
+//!   torn partial-line writes (`jsonl.tail:mode=torn`) and transient IO
+//!   faults (`store.append:mode=transient`), crashed and reopened until
+//!   complete, then corrupted interiorly and re-opened again.  Must match
+//!   record for record.
+//! * **conformance store** — same contract for the validation sweep's
+//!   verdict store.
+//! * **coordinator** — a golden [`crate::coordinator::Report`] vs a run
+//!   repeatedly crashed at the `coord.pass` fail point and resumed from
+//!   the coordinator's own self-snapshot.  Must match fingerprint for
+//!   fingerprint ([`crate::coordinator::Report::fingerprint`]).
+//!
+//! Every cycle's randomization (kill schedules, record counts, corruption
+//! positions) derives from the harness seed, so a failing run is replayed
+//! with `--seed`.  Counters are exported through
+//! [`crate::obs::MetricsRegistry`] into `CHAOS.json`
+//! (schema [`SCHEMA`]); divergences fail the run.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::campaign::grid::fnv1a64;
+use crate::campaign::store::{CellRecord, Store};
+use crate::config::{FaultModel, Platform, PredictorSpec, Scenario};
+use crate::coordinator::{self, CoordinatorConfig, SelfCkptOptions};
+use crate::coordinator::workload::SyntheticWorkload;
+use crate::jsonio::{self, Value};
+use crate::obs::report::registry_json;
+use crate::obs::MetricsRegistry;
+use crate::resilience::failpoint::{self, Plan};
+use crate::resilience::retry;
+use crate::resilience::snapshot::SnapshotStore;
+use crate::sim::distribution::Law;
+use crate::sim::rng::Rng;
+use crate::strategy::{Policy, PolicyKind};
+use crate::validate::store::{ConformanceRecord, ConformanceStore};
+
+/// `CHAOS.json` schema tag; bump on breaking layout changes.
+pub const SCHEMA: &str = "ckptwin-chaos/1";
+
+/// Crash/resume attempts per cycle before the harness runs the final
+/// attempt unarmed (which must then complete).
+const MAX_ATTEMPTS: usize = 10;
+
+#[derive(Clone, Debug)]
+pub struct ChaosOptions {
+    /// Randomized kill/resume cycles (rotating over the three targets).
+    pub cycles: u64,
+    /// Harness seed: every kill schedule and corruption derives from it.
+    pub seed: u64,
+    /// Scratch directory (created fresh; removed only by the caller).
+    pub dir: PathBuf,
+}
+
+/// Aggregated outcome of a chaos run.  `divergences` empty ⇔ the gate
+/// passes.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosReport {
+    pub cycles_run: u64,
+    pub crashes_injected: u64,
+    pub resumes: u64,
+    pub torn_tails_repaired: u64,
+    pub records_quarantined: u64,
+    pub transient_retries: u64,
+    pub divergences: Vec<String>,
+}
+
+impl ChaosReport {
+    pub fn ok(&self) -> bool {
+        self.divergences.is_empty()
+    }
+
+    /// Export the counters through the shared metrics registry.
+    pub fn metrics(&self) -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
+        m.add("chaos.cycles", self.cycles_run);
+        m.add("chaos.crashes_injected", self.crashes_injected);
+        m.add("chaos.resumes", self.resumes);
+        m.add("chaos.torn_tails_repaired", self.torn_tails_repaired);
+        m.add("chaos.records_quarantined", self.records_quarantined);
+        m.add("chaos.transient_retries", self.transient_retries);
+        m.add("chaos.divergences", self.divergences.len() as u64);
+        m
+    }
+}
+
+fn is_injected(e: &anyhow::Error) -> bool {
+    let s = e.to_string();
+    s.contains(failpoint::TRANSIENT_MARK) || s.contains(failpoint::CRASH_MARK)
+}
+
+/// Run the full harness.  Divergences are *reported*, not returned as
+/// `Err` — the caller still gets a complete `ChaosReport` (and can write
+/// `CHAOS.json`) before deciding the exit code.  `Err` means the harness
+/// itself broke (a non-injected IO failure).
+pub fn run_chaos(opt: &ChaosOptions) -> Result<ChaosReport> {
+    fs::create_dir_all(&opt.dir)
+        .with_context(|| format!("creating {}", opt.dir.display()))?;
+    let retries_before = retry::total_retries();
+    let mut rep = ChaosReport::default();
+    for cycle in 0..opt.cycles {
+        match cycle % 3 {
+            0 => campaign_store_cycle(opt, cycle, &mut rep)?,
+            1 => conformance_store_cycle(opt, cycle, &mut rep)?,
+            _ => coordinator_cycle(opt, cycle, &mut rep)?,
+        }
+        rep.cycles_run += 1;
+    }
+    rep.transient_retries = retry::total_retries() - retries_before;
+    Ok(rep)
+}
+
+/// Serialize `CHAOS.json`; returns byte length.
+pub fn write_chaos_json(path: &Path, rep: &ChaosReport) -> Result<usize> {
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".into(), Value::Str(SCHEMA.into()));
+    doc.insert("ok".into(), Value::Bool(rep.ok()));
+    doc.insert("cycles".into(), Value::Num(rep.cycles_run as f64));
+    doc.insert(
+        "divergences".into(),
+        Value::Arr(rep.divergences.iter().cloned().map(Value::Str).collect()),
+    );
+    doc.insert("registry".into(), registry_json(&rep.metrics()));
+    crate::obs::report::write_json(path, &Value::Obj(doc))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+// --- synthetic golden content ----------------------------------------------
+
+fn synth_cell(cycle: u64, i: u64) -> CellRecord {
+    CellRecord {
+        hash: fnv1a64(format!("chaos-cell-{cycle}-{i}").as_bytes()),
+        key: format!("chaos/c{cycle}/r{i}"),
+        instances: 10 + i,
+        waste_mean: 0.1 + i as f64 * 1e-3,
+        waste_var: 1e-4,
+        waste_ci95: 0.005,
+        waste_min: 0.05,
+        waste_max: 0.2,
+        makespan_mean: 5e6 + cycle as f64,
+        tr: 4000.0 + i as f64,
+    }
+}
+
+fn synth_verdict(cycle: u64, i: u64) -> ConformanceRecord {
+    ConformanceRecord {
+        hash: fnv1a64(format!("chaos-val-{cycle}-{i}").as_bytes()),
+        key: format!("chaos/v{cycle}/r{i}"),
+        strategy: "NoCkptI".into(),
+        law: "exponential".into(),
+        multiplier: 1.0 + i as f64 * 0.25,
+        tr: 8000.0 + i as f64,
+        instances: 40,
+        sim_mean: 0.12 + i as f64 * 1e-3,
+        sim_ci95: 0.004,
+        model: 0.118,
+        deviation: 0.002,
+        tolerance: 0.04,
+        verdict: "pass".into(),
+        reason: String::new(),
+    }
+}
+
+/// Corrupt one full line *interiorly*: still valid JSON, body no longer
+/// matching its CRC seal.  Only lines that currently carry a *clean*
+/// sealed record qualify — torn fragments left by earlier injected
+/// crashes are already unparseable and get *skipped* on reload, which is
+/// the wrong oracle for this probe (it must observe a *quarantine*).
+/// Returns false if no line qualifies.
+fn corrupt_interior(path: &Path, rng: &mut Rng) -> Result<bool> {
+    let text = fs::read_to_string(path)?;
+    let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+    let clean: Vec<usize> = lines
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| {
+            jsonio::parse(l)
+                .map(|v| jsonio::check_record(&v) == jsonio::RecordCheck::Clean)
+                .unwrap_or(false)
+        })
+        .map(|(i, _)| i)
+        .collect();
+    if clean.is_empty() {
+        return Ok(false);
+    }
+    let idx = clean[((rng.f64() * clean.len() as f64) as usize).min(clean.len() - 1)];
+    let damaged = lines[idx].replacen("\"key\":\"", "\"key\":\"x", 1);
+    if damaged == lines[idx] {
+        return Ok(false);
+    }
+    lines[idx] = damaged;
+    fs::write(path, lines.join("\n") + "\n")?;
+    Ok(true)
+}
+
+// --- store cycles ----------------------------------------------------------
+
+/// Drive `append_missing` to completion under an armed kill schedule,
+/// crashing (dropping the store mid-write) and reopening until every
+/// record landed.  Returns the number of crashes taken.
+fn write_under_chaos<R, S>(
+    path: &Path,
+    recs: &[R],
+    rng: &mut Rng,
+    seed: u64,
+    rep: &mut ChaosReport,
+    open: impl Fn(&Path, bool) -> Result<S>,
+    append_missing: impl Fn(&mut S, &[R]) -> Result<()>,
+) -> Result<()>
+where
+    S: TornCount,
+{
+    for attempt in 0..MAX_ATTEMPTS {
+        // Final attempt runs unarmed so the cycle always terminates.
+        let armed = if attempt + 1 < MAX_ATTEMPTS {
+            let nth = 1 + (rng.f64() * (recs.len() as f64 + 2.0)) as u64;
+            let spec = format!(
+                "jsonl.tail:mode=torn,nth={nth};\
+                 store.append:mode=transient,p=0.15,seed={seed}"
+            );
+            Some(failpoint::arm(Plan::parse(&spec)?))
+        } else {
+            None
+        };
+        let res = (|| -> Result<()> {
+            let mut s = open(path, attempt == 0)?;
+            rep.torn_tails_repaired += s.torn_lines() as u64;
+            append_missing(&mut s, recs)
+        })();
+        drop(armed);
+        match res {
+            Ok(()) => return Ok(()),
+            Err(e) if is_injected(&e) => {
+                rep.crashes_injected += 1;
+                rep.resumes += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(anyhow!("chaos: store never completed in {MAX_ATTEMPTS} attempts"))
+}
+
+/// The torn-tail counter both stores expose.
+trait TornCount {
+    fn torn_lines(&self) -> usize;
+}
+
+impl TornCount for Store {
+    fn torn_lines(&self) -> usize {
+        self.skipped_lines
+    }
+}
+
+impl TornCount for ConformanceStore {
+    fn torn_lines(&self) -> usize {
+        self.skipped_lines
+    }
+}
+
+fn campaign_store_cycle(
+    opt: &ChaosOptions,
+    cycle: u64,
+    rep: &mut ChaosReport,
+) -> Result<()> {
+    let n = 10 + (cycle % 6);
+    let recs: Vec<CellRecord> = (0..n).map(|i| synth_cell(cycle, i)).collect();
+    // Golden: uninterrupted reference store.
+    let golden_path = opt.dir.join(format!("store-golden-{cycle}.jsonl"));
+    let _ = fs::remove_file(&golden_path);
+    {
+        let mut g = Store::create(&golden_path)?;
+        for r in &recs {
+            g.append(r)?;
+        }
+    }
+    // Chaos: same records under torn writes + transient IO.
+    let chaos_path = opt.dir.join(format!("store-chaos-{cycle}.jsonl"));
+    let _ = fs::remove_file(&chaos_path);
+    let mut rng = Rng::stream(opt.seed, cycle.wrapping_mul(3).wrapping_add(1));
+    write_under_chaos(
+        &chaos_path,
+        &recs,
+        &mut rng,
+        opt.seed ^ cycle,
+        rep,
+        |p, fresh| if fresh { Store::create(p) } else { Store::open(p) },
+        |s, recs| {
+            for r in recs {
+                if !s.contains(r.hash) {
+                    s.append(r)?;
+                }
+            }
+            Ok(())
+        },
+    )?;
+    // Interior corruption: damage a full line, reopen (quarantine), heal.
+    if corrupt_interior(&chaos_path, &mut rng)? {
+        let mut s = Store::open(&chaos_path)?;
+        if s.quarantined_lines == 0 {
+            rep.divergences.push(format!(
+                "cycle {cycle}: interior corruption in {} was not quarantined",
+                chaos_path.display()
+            ));
+        }
+        rep.records_quarantined += s.quarantined_lines as u64;
+        for r in &recs {
+            if !s.contains(r.hash) {
+                s.append(r)?;
+            }
+        }
+    }
+    // Record-for-record equivalence.
+    let golden = Store::open(&golden_path)?;
+    let chaos = Store::open(&chaos_path)?;
+    let g: Vec<&CellRecord> = golden.records().collect();
+    let c: Vec<&CellRecord> = chaos.records().collect();
+    if g != c {
+        rep.divergences.push(format!(
+            "cycle {cycle}: campaign store diverged ({} vs {} records)",
+            g.len(),
+            c.len()
+        ));
+    }
+    Ok(())
+}
+
+fn conformance_store_cycle(
+    opt: &ChaosOptions,
+    cycle: u64,
+    rep: &mut ChaosReport,
+) -> Result<()> {
+    let n = 8 + (cycle % 5);
+    let recs: Vec<ConformanceRecord> =
+        (0..n).map(|i| synth_verdict(cycle, i)).collect();
+    let golden_path = opt.dir.join(format!("conf-golden-{cycle}.jsonl"));
+    let _ = fs::remove_file(&golden_path);
+    {
+        let mut g = ConformanceStore::create(&golden_path)?;
+        for r in &recs {
+            g.append(r)?;
+        }
+    }
+    let chaos_path = opt.dir.join(format!("conf-chaos-{cycle}.jsonl"));
+    let _ = fs::remove_file(&chaos_path);
+    let mut rng = Rng::stream(opt.seed, cycle.wrapping_mul(3).wrapping_add(2));
+    write_under_chaos(
+        &chaos_path,
+        &recs,
+        &mut rng,
+        opt.seed ^ cycle,
+        rep,
+        |p, fresh| {
+            if fresh {
+                ConformanceStore::create(p)
+            } else {
+                ConformanceStore::open(p)
+            }
+        },
+        |s, recs| {
+            for r in recs {
+                if !s.contains(r.hash) {
+                    s.append(r)?;
+                }
+            }
+            Ok(())
+        },
+    )?;
+    if corrupt_interior(&chaos_path, &mut rng)? {
+        let mut s = ConformanceStore::open(&chaos_path)?;
+        if s.quarantined_lines == 0 {
+            rep.divergences.push(format!(
+                "cycle {cycle}: interior corruption in {} was not quarantined",
+                chaos_path.display()
+            ));
+        }
+        rep.records_quarantined += s.quarantined_lines as u64;
+        for r in &recs {
+            if !s.contains(r.hash) {
+                s.append(r)?;
+            }
+        }
+    }
+    let golden = ConformanceStore::open(&golden_path)?;
+    let chaos = ConformanceStore::open(&chaos_path)?;
+    let g: Vec<&ConformanceRecord> = golden.records().collect();
+    let c: Vec<&ConformanceRecord> = chaos.records().collect();
+    if g != c {
+        rep.divergences.push(format!(
+            "cycle {cycle}: conformance store diverged ({} vs {} records)",
+            g.len(),
+            c.len()
+        ));
+    }
+    Ok(())
+}
+
+// --- coordinator cycles ----------------------------------------------------
+
+fn coord_config(opt: &ChaosOptions, cycle: u64, tag: &str) -> CoordinatorConfig {
+    const KINDS: [PolicyKind; 5] = [
+        PolicyKind::IgnorePredictions,
+        PolicyKind::WithCkpt,
+        PolicyKind::NoCkpt,
+        PolicyKind::Instant,
+        PolicyKind::WindowEndCkpt,
+    ];
+    let kind = KINDS[(cycle / 3) as usize % KINDS.len()];
+    let dir = opt.dir.join(format!("coord-{tag}-{cycle}"));
+    let _ = fs::remove_dir_all(&dir);
+    CoordinatorConfig {
+        scenario: Scenario {
+            platform: Platform { mu: 3500.0, c: 120.0, cp: 60.0, d: 30.0, r: 60.0 },
+            predictor: PredictorSpec::paper(0.85, 0.82, 240.0),
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 0.0, // steps drive the job size
+        },
+        policy: Policy { kind, tr: 1200.0, tp: 180.0 },
+        seconds_per_step: 30.0,
+        total_steps: 160,
+        ckpt_dir: dir,
+        seed: opt.seed ^ cycle,
+        log_every: 10,
+        selfckpt: Some(SelfCkptOptions::default()),
+    }
+}
+
+fn coordinator_cycle(
+    opt: &ChaosOptions,
+    cycle: u64,
+    rep: &mut ChaosReport,
+) -> Result<()> {
+    const PARAMS: usize = 24;
+    let golden_cfg = coord_config(opt, cycle, "golden");
+    let mut w = SyntheticWorkload::new(PARAMS);
+    let golden = coordinator::run(&golden_cfg, &mut w)?;
+
+    let chaos_cfg = coord_config(opt, cycle, "chaos");
+    let snaps = SnapshotStore::new(&chaos_cfg.ckpt_dir)?;
+    let mut rng = Rng::stream(opt.seed, cycle.wrapping_mul(3));
+    let mut resume = None;
+    let mut survivor = None;
+    for attempt in 0..MAX_ATTEMPTS {
+        let armed = if attempt + 1 < MAX_ATTEMPTS {
+            // Crash at a randomized pass; also rattle the snapshot writer
+            // with transient faults the backoff must absorb.
+            let nth = 1 + (rng.f64() * 2.0 * golden.passes as f64) as u64;
+            let spec = format!(
+                "coord.pass:mode=transient,nth={nth};\
+                 snapshot.write:mode=transient,p=0.1,seed={}",
+                opt.seed ^ cycle
+            );
+            Some(failpoint::arm(Plan::parse(&spec)?))
+        } else {
+            None
+        };
+        let mut w = SyntheticWorkload::new(PARAMS);
+        let res = coordinator::run_from(&chaos_cfg, &mut w, resume.as_ref());
+        drop(armed);
+        match res {
+            Ok(r) => {
+                survivor = Some(r);
+                break;
+            }
+            Err(e) if is_injected(&e) => {
+                rep.crashes_injected += 1;
+                rep.resumes += 1;
+                // Resume from whatever self-snapshot the crashed run left
+                // (None before the first snapshot ⇒ start over).
+                resume = snaps.load()?;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let survivor = survivor
+        .ok_or_else(|| anyhow!("chaos: coordinator never completed in {MAX_ATTEMPTS} attempts"))?;
+    if survivor.fingerprint() != golden.fingerprint() {
+        rep.divergences.push(format!(
+            "cycle {cycle}: coordinator fingerprint diverged \
+             ({:016x} vs golden {:016x}, policy {:?})",
+            survivor.fingerprint(),
+            golden.fingerprint(),
+            chaos_cfg.policy.kind
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pure helpers only: armed end-to-end cycles live in
+    // `tests/resilience.rs`, which serializes fail-point ownership.
+
+    #[test]
+    fn synthetic_records_are_deterministic_and_distinct() {
+        assert_eq!(synth_cell(3, 4), synth_cell(3, 4));
+        assert_ne!(synth_cell(3, 4).hash, synth_cell(3, 5).hash);
+        assert_eq!(synth_verdict(1, 2), synth_verdict(1, 2));
+        assert_ne!(synth_verdict(1, 2).hash, synth_verdict(2, 2).hash);
+    }
+
+    #[test]
+    fn corrupt_interior_breaks_the_seal_but_not_the_json() {
+        let dir = std::env::temp_dir()
+            .join(format!("ckptwin-chaos-corrupt-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.jsonl");
+        {
+            let mut s = Store::create(&path).unwrap();
+            for i in 0..4 {
+                s.append(&synth_cell(0, i)).unwrap();
+            }
+        }
+        let mut rng = Rng::new(7);
+        assert!(corrupt_interior(&path, &mut rng).unwrap());
+        // Every line still parses; exactly one fails its seal.
+        let text = fs::read_to_string(&path).unwrap();
+        let mut bad = 0;
+        for line in text.lines() {
+            let v = jsonio::parse(line).expect("still valid JSON");
+            if jsonio::check_record(&v) == jsonio::RecordCheck::Corrupt {
+                bad += 1;
+            }
+        }
+        assert_eq!(bad, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn chaos_json_roundtrips_with_schema() {
+        let rep = ChaosReport {
+            cycles_run: 5,
+            crashes_injected: 9,
+            resumes: 9,
+            torn_tails_repaired: 3,
+            records_quarantined: 1,
+            transient_retries: 4,
+            divergences: vec!["cycle 2: example".into()],
+        };
+        assert!(!rep.ok());
+        let dir = std::env::temp_dir()
+            .join(format!("ckptwin-chaos-json-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("CHAOS.json");
+        write_chaos_json(&path, &rep).unwrap();
+        let back = jsonio::parse(&fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("schema").and_then(Value::as_str), Some(SCHEMA));
+        assert_eq!(back.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(
+            back.get("registry")
+                .unwrap()
+                .get("counters")
+                .unwrap()
+                .get("chaos.crashes_injected")
+                .unwrap()
+                .as_usize(),
+            Some(9)
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,440 @@
+//! Deterministic, seeded fail-point registry.
+//!
+//! A *fail point* is a named site in the production code path where a
+//! fault can be injected at runtime: an IO error, a torn partial write, a
+//! worker panic, or a hard process kill.  Sites are enumerated in
+//! [`Site`]; the decision of whether hit `n` of a site fires is a pure
+//! function of the armed [`SiteConfig`] (see [`SiteConfig::fires`]), so
+//! chaos runs are bit-reproducible given the same plan.
+//!
+//! Zero-cost when disabled: [`check`] is a single relaxed atomic load on
+//! the fast path (the same compile-away discipline as
+//! `obs::NoopRecorder`); all bookkeeping lives behind a `#[cold]` branch
+//! that only runs while a plan is armed.
+//!
+//! Arming is process-global and serialized by a mutex so concurrent tests
+//! cannot observe each other's plans; hold the returned [`ArmGuard`] for
+//! the injection's lifetime.  The CLI arms via `--inject
+//! "site:p=0.01,seed=42"` (see `Plan::parse` for the grammar).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::sim::rng::Rng;
+
+/// Marker substring present in every injected *transient* error message.
+/// The vendored `anyhow` is string-backed (no downcasting), so transient
+/// classification — the only retryable class — matches on this text.
+pub const TRANSIENT_MARK: &str = "injected transient fault";
+
+/// Marker substring present in every injected *crash* error message.
+pub const CRASH_MARK: &str = "injected crash";
+
+/// Named injection sites threaded through the production layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// `campaign::Store::append` / `validate::ConformanceStore::append`
+    /// attempt body (before the line reaches the appender).
+    StoreAppend,
+    /// `jsonio::JsonlAppender::append_line` — supports `mode=torn`
+    /// (a deterministic partial-line write followed by a crash error).
+    JsonlTail,
+    /// `campaign::scheduler` worker body, before each unit runs.
+    SchedWorker,
+    /// `campaign::pool::TracePool::replay` miss path, before the insert.
+    PoolInsert,
+    /// Top of each `coordinator::run` pass (one `'outer` iteration).
+    CoordPass,
+    /// `resilience::snapshot::SnapshotStore::save` body.
+    SnapshotWrite,
+}
+
+impl Site {
+    pub const ALL: [Site; 6] = [
+        Site::StoreAppend,
+        Site::JsonlTail,
+        Site::SchedWorker,
+        Site::PoolInsert,
+        Site::CoordPass,
+        Site::SnapshotWrite,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::StoreAppend => "store.append",
+            Site::JsonlTail => "jsonl.tail",
+            Site::SchedWorker => "sched.worker",
+            Site::PoolInsert => "pool.insert",
+            Site::CoordPass => "coord.pass",
+            Site::SnapshotWrite => "snapshot.write",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Site> {
+        Site::ALL.iter().copied().find(|s| s.name() == name)
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Site::StoreAppend => 0,
+            Site::JsonlTail => 1,
+            Site::SchedWorker => 2,
+            Site::PoolInsert => 3,
+            Site::CoordPass => 4,
+            Site::SnapshotWrite => 5,
+        }
+    }
+}
+
+/// What happens when a site fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Retryable IO error (clears on the next attempt unless it fires
+    /// again) — exercises the bounded-backoff retry path.
+    Transient,
+    /// Torn write: at `jsonl.tail` a deterministic partial line is
+    /// flushed before the crash error; elsewhere it degrades to a plain
+    /// crash error.
+    Torn,
+    /// Worker panic — exercises `catch_unwind` containment.
+    Panic,
+    /// Hard process kill (`abort`) — exercises true crash–resume.
+    Kill,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Transient => "transient",
+            Mode::Torn => "torn",
+            Mode::Panic => "panic",
+            Mode::Kill => "kill",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Mode> {
+        [Mode::Transient, Mode::Torn, Mode::Panic, Mode::Kill]
+            .into_iter()
+            .find(|m| m.name() == name)
+    }
+}
+
+/// Armed behaviour of one site.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SiteConfig {
+    pub site: Site,
+    pub mode: Mode,
+    /// Per-hit firing probability (ignored when `nth` is set).
+    pub p: f64,
+    /// Fire exactly on the nth hit (1-based), once.
+    pub nth: Option<u64>,
+    /// Seed for the per-hit Bernoulli draw.
+    pub seed: u64,
+}
+
+impl SiteConfig {
+    /// Pure firing decision for 1-based hit counter `hit`: a function of
+    /// `(site, seed, hit)` only, so replaying a plan replays its faults.
+    pub fn fires(&self, hit: u64) -> bool {
+        if let Some(n) = self.nth {
+            return hit == n;
+        }
+        if self.p <= 0.0 {
+            return false;
+        }
+        Rng::stream(self.seed ^ (0x51_7e << 8 | self.site.index() as u64), hit)
+            .f64()
+            < self.p
+    }
+}
+
+/// A full injection plan: at most one config per site.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Plan {
+    pub sites: Vec<SiteConfig>,
+}
+
+impl Plan {
+    /// Parse the CLI grammar: `site:key=val,key=val[;site:...]` with keys
+    /// `p` (probability), `nth` (1-based hit), `seed`, `mode`
+    /// (`transient|torn|panic|kill`, default `kill`).  Examples:
+    /// `store.append:p=0.01,seed=42,mode=transient` or
+    /// `jsonl.tail:nth=3,mode=torn`.
+    pub fn parse(spec: &str) -> Result<Plan> {
+        let mut sites = Vec::new();
+        for part in spec.split(';').filter(|s| !s.trim().is_empty()) {
+            let part = part.trim();
+            let (name, opts) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("inject spec `{part}`: expected site:opts"))?;
+            let site = Site::parse(name.trim()).ok_or_else(|| {
+                anyhow!(
+                    "inject spec `{part}`: unknown site `{}` (valid: {})",
+                    name.trim(),
+                    Site::ALL.map(Site::name).join(", ")
+                )
+            })?;
+            let mut cfg = SiteConfig { site, mode: Mode::Kill, p: 0.0, nth: None, seed: 0 };
+            for kv in opts.split(',').filter(|s| !s.trim().is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("inject spec `{part}`: bad option `{kv}`"))?;
+                let (k, v) = (k.trim(), v.trim());
+                match k {
+                    "p" => {
+                        cfg.p = v
+                            .parse()
+                            .map_err(|_| anyhow!("inject spec `{part}`: bad p `{v}`"))?
+                    }
+                    "nth" => {
+                        cfg.nth = Some(v.parse().map_err(|_| {
+                            anyhow!("inject spec `{part}`: bad nth `{v}`")
+                        })?)
+                    }
+                    "seed" => {
+                        cfg.seed = v.parse().map_err(|_| {
+                            anyhow!("inject spec `{part}`: bad seed `{v}`")
+                        })?
+                    }
+                    "mode" => {
+                        cfg.mode = Mode::parse(v).ok_or_else(|| {
+                            anyhow!("inject spec `{part}`: bad mode `{v}`")
+                        })?
+                    }
+                    _ => bail!("inject spec `{part}`: unknown key `{k}`"),
+                }
+            }
+            if cfg.p <= 0.0 && cfg.nth.is_none() {
+                bail!("inject spec `{part}`: needs p= or nth=");
+            }
+            sites.push(cfg);
+        }
+        Ok(Plan { sites })
+    }
+}
+
+/// A fired injection, produced by [`check`].
+#[derive(Clone, Copy, Debug)]
+pub struct Injection {
+    pub site: Site,
+    pub mode: Mode,
+    /// 1-based hit count at which this injection fired.
+    pub hit: u64,
+}
+
+impl Injection {
+    /// The error this injection maps to (for `Transient`/`Torn` modes).
+    pub fn to_error(&self) -> anyhow::Error {
+        match self.mode {
+            Mode::Transient => anyhow!(
+                "{} at {} (hit {})",
+                TRANSIENT_MARK,
+                self.site.name(),
+                self.hit
+            ),
+            _ => anyhow!("{} at {} (hit {})", CRASH_MARK, self.site.name(), self.hit),
+        }
+    }
+
+    /// Act out the injection at a `Result`-returning site: `Transient` /
+    /// `Torn` become errors, `Panic` panics, `Kill` aborts the process.
+    pub fn trigger(&self) -> Result<()> {
+        match self.mode {
+            Mode::Transient | Mode::Torn => Err(self.to_error()),
+            Mode::Panic => panic!(
+                "injected panic at {} (hit {})",
+                self.site.name(),
+                self.hit
+            ),
+            Mode::Kill => kill_now(self),
+        }
+    }
+}
+
+/// Abort the process, announcing the injection on stderr first (the chaos
+/// harness greps the message in the child's output).
+pub fn kill_now(inj: &Injection) -> ! {
+    eprintln!("ckptwin: injected kill at {} (hit {})", inj.site.name(), inj.hit);
+    std::process::abort();
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+static HITS: [AtomicU64; 6] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+static FIRED: [AtomicU64; 6] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+fn plan_slot() -> &'static Mutex<Plan> {
+    static SLOT: OnceLock<Mutex<Plan>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(Plan::default()))
+}
+
+fn arm_mutex() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Keeps the plan armed; disarms (and clears counters' ownership) on drop.
+/// Also holds the global arm mutex, serializing concurrent armers.
+pub struct ArmGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for ArmGuard {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::SeqCst);
+        *plan_slot().lock().unwrap_or_else(|e| e.into_inner()) = Plan::default();
+    }
+}
+
+/// Arm `plan` process-wide, resetting all hit/fired counters.  Injection
+/// stays live until the returned guard drops.
+pub fn arm(plan: Plan) -> ArmGuard {
+    // An injected panic can poison the mutex of a previous armer; recover.
+    let lock = arm_mutex().lock().unwrap_or_else(|e| e.into_inner());
+    for i in 0..Site::ALL.len() {
+        HITS[i].store(0, Ordering::SeqCst);
+        FIRED[i].store(0, Ordering::SeqCst);
+    }
+    *plan_slot().lock().unwrap_or_else(|e| e.into_inner()) = plan;
+    ARMED.store(true, Ordering::SeqCst);
+    ArmGuard { _lock: lock }
+}
+
+/// Fast-path probe called from production sites.  One relaxed load when
+/// nothing is armed; hit accounting and the firing decision live in the
+/// cold half.
+#[inline]
+pub fn check(site: Site) -> Option<Injection> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    check_armed(site)
+}
+
+#[cold]
+fn check_armed(site: Site) -> Option<Injection> {
+    let cfg = {
+        let plan = plan_slot().lock().unwrap_or_else(|e| e.into_inner());
+        plan.sites.iter().copied().find(|c| c.site == site)?
+    };
+    // Hits only count while the site is in the plan, so `nth=` schedules
+    // are stable regardless of unrelated traffic before arming.
+    let hit = HITS[site.index()].fetch_add(1, Ordering::SeqCst) + 1;
+    if !cfg.fires(hit) {
+        return None;
+    }
+    FIRED[site.index()].fetch_add(1, Ordering::SeqCst);
+    Some(Injection { site, mode: cfg.mode, hit })
+}
+
+/// Hits recorded for `site` since the last [`arm`].
+pub fn hits(site: Site) -> u64 {
+    HITS[site.index()].load(Ordering::SeqCst)
+}
+
+/// Injections fired for `site` since the last [`arm`].
+pub fn fired(site: Site) -> u64 {
+    FIRED[site.index()].load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests here stick to the pure API (parse / fires) — arming is
+    // process-global, and lib tests run multithreaded.  End-to-end armed
+    // behaviour lives in `tests/resilience.rs`, which owns its process.
+
+    #[test]
+    fn site_names_roundtrip() {
+        for s in Site::ALL {
+            assert_eq!(Site::parse(s.name()), Some(s));
+            assert_eq!(Site::ALL[s.index()], s);
+        }
+        assert_eq!(Site::parse("nope"), None);
+    }
+
+    #[test]
+    fn plan_parse_grammar() {
+        let plan =
+            Plan::parse("store.append:p=0.25,seed=42,mode=transient;jsonl.tail:nth=3,mode=torn")
+                .unwrap();
+        assert_eq!(plan.sites.len(), 2);
+        assert_eq!(plan.sites[0].site, Site::StoreAppend);
+        assert_eq!(plan.sites[0].mode, Mode::Transient);
+        assert!((plan.sites[0].p - 0.25).abs() < 1e-12);
+        assert_eq!(plan.sites[0].seed, 42);
+        assert_eq!(plan.sites[1].site, Site::JsonlTail);
+        assert_eq!(plan.sites[1].nth, Some(3));
+        assert_eq!(plan.sites[1].mode, Mode::Torn);
+
+        assert!(Plan::parse("bogus.site:p=0.5").is_err());
+        assert!(Plan::parse("store.append:p=zero").is_err());
+        assert!(Plan::parse("store.append:frobnicate=1,p=0.5").is_err());
+        // A site with neither p nor nth would never fire — reject it.
+        assert!(Plan::parse("store.append:seed=9").is_err());
+        // Default mode is kill.
+        assert_eq!(Plan::parse("coord.pass:nth=1").unwrap().sites[0].mode, Mode::Kill);
+        // Empty spec is an empty (valid) plan.
+        assert!(Plan::parse("").unwrap().sites.is_empty());
+    }
+
+    #[test]
+    fn fires_is_pure_and_deterministic() {
+        let cfg = SiteConfig {
+            site: Site::StoreAppend,
+            mode: Mode::Transient,
+            p: 0.3,
+            nth: None,
+            seed: 7,
+        };
+        let a: Vec<bool> = (1..=200).map(|h| cfg.fires(h)).collect();
+        let b: Vec<bool> = (1..=200).map(|h| cfg.fires(h)).collect();
+        assert_eq!(a, b);
+        let n = a.iter().filter(|&&x| x).count();
+        // ~Binomial(200, 0.3): far away from 0 and 200.
+        assert!(n > 20 && n < 120, "{n}");
+        // A different seed gives a different schedule.
+        let other = SiteConfig { seed: 8, ..cfg };
+        assert_ne!(a, (1..=200).map(|h| other.fires(h)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nth_schedule_fires_exactly_once() {
+        let cfg = SiteConfig {
+            site: Site::CoordPass,
+            mode: Mode::Kill,
+            p: 0.0,
+            nth: Some(4),
+            seed: 0,
+        };
+        let fired: Vec<u64> = (1..=10).filter(|&h| cfg.fires(h)).collect();
+        assert_eq!(fired, vec![4]);
+    }
+
+    #[test]
+    fn injected_errors_carry_classification_marks() {
+        let t = Injection { site: Site::StoreAppend, mode: Mode::Transient, hit: 2 };
+        assert!(t.to_error().to_string().contains(TRANSIENT_MARK));
+        let c = Injection { site: Site::JsonlTail, mode: Mode::Torn, hit: 5 };
+        let msg = c.to_error().to_string();
+        assert!(msg.contains(CRASH_MARK) && msg.contains("jsonl.tail"), "{msg}");
+    }
+}

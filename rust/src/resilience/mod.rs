@@ -1,0 +1,28 @@
+//! Resilience subsystem: deterministic fault injection, crash–resume
+//! equivalence checking, and the coordinator's self-checkpointing.
+//!
+//! Four layers, from mechanism to harness:
+//!
+//! * [`failpoint`] — a seeded registry of named fail points threaded
+//!   through the store, JSONL appender, scheduler workers, trace pool,
+//!   and coordinator.  Zero-cost when disarmed (one relaxed atomic load);
+//!   armed from the CLI via `--inject "site:p=0.01,seed=42"`.
+//! * [`retry`] — bounded exponential backoff with deterministic jitter
+//!   for transient IO faults; the retry schedule is a pure function of
+//!   (seed, attempt).
+//! * [`snapshot`] — the coordinator's *own* checksummed, versioned
+//!   snapshot file, written at a period chosen by the repo's own
+//!   checkpoint-period model from measured snapshot cost and the assumed
+//!   crash rate (the subsystem dogfoods the paper it reproduces).
+//! * [`chaos`] — the crash–resume equivalence gate behind
+//!   `ckptwin chaos`: a golden uninterrupted run compared
+//!   record-for-record (and fingerprint-for-fingerprint) against runs
+//!   that are repeatedly killed and resumed, including torn partial-line
+//!   writes and interior corruption.
+//!
+//! Design notes live in `DESIGN.md` §Resilience.
+
+pub mod chaos;
+pub mod failpoint;
+pub mod retry;
+pub mod snapshot;

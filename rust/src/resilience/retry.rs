@@ -1,0 +1,169 @@
+//! Bounded exponential backoff with deterministic jitter.
+//!
+//! The retry *schedule* — how long attempt `n` waits — is a pure function
+//! of `(seed, attempt)` (see [`Backoff::delay_ms`]), so a chaos run that
+//! injects transient IO faults replays bit-identically: same fault plan,
+//! same retries, same final store.
+//!
+//! Only *transient* errors are retried.  The vendored `anyhow` carries no
+//! error types to downcast, so transience is a message classification:
+//! injected transient faults embed [`failpoint::TRANSIENT_MARK`]; every
+//! other error (real IO failures included) is treated as permanent and
+//! surfaces immediately.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+
+use super::failpoint;
+use crate::sim::rng::Rng;
+
+/// Process-wide count of retry sleeps taken (chaos telemetry).
+static RETRIES: AtomicU64 = AtomicU64::new(0);
+
+/// Total retries performed since process start.
+pub fn total_retries() -> u64 {
+    RETRIES.load(Ordering::Relaxed)
+}
+
+/// Is `e` a retryable transient fault?
+pub fn is_transient(e: &anyhow::Error) -> bool {
+    // `.context(..)` prepends text, so match anywhere in the chain.
+    e.to_string().contains(failpoint::TRANSIENT_MARK)
+}
+
+/// Bounded exponential backoff policy (copyable, all-public knobs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Backoff {
+    /// Delay before the 2nd attempt (ms); doubles per further attempt.
+    pub base_ms: u64,
+    /// Upper bound on any single delay (ms).
+    pub cap_ms: u64,
+    /// Total attempts (first try included).
+    pub attempts: u32,
+    /// Jitter seed — the schedule is pure in `(seed, attempt)`.
+    pub seed: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff { base_ms: 2, cap_ms: 40, attempts: 4, seed: 0x5eed_ba5e }
+    }
+}
+
+impl Backoff {
+    /// Sleep taken after failed attempt `attempt` (1-based): bounded
+    /// exponential `min(cap, base·2^(attempt-1))`, scaled by a
+    /// deterministic jitter factor in `[0.5, 1.0)` drawn from
+    /// `Rng::stream(seed, attempt)`.  Pure: no clocks, no global RNG.
+    pub fn delay_ms(&self, attempt: u32) -> u64 {
+        let exp = attempt.saturating_sub(1).min(16);
+        let raw = self.base_ms.saturating_mul(1u64 << exp).min(self.cap_ms);
+        let jitter = 0.5 + 0.5 * Rng::stream(self.seed, attempt as u64).f64();
+        ((raw as f64) * jitter).floor().max(1.0) as u64
+    }
+
+    /// Run `op` until it succeeds, it fails permanently, or attempts are
+    /// exhausted.  `op` receives the 1-based attempt number.  Transient
+    /// failures sleep [`Backoff::delay_ms`] between attempts and bump the
+    /// global retry counter.
+    pub fn run<T>(&self, mut op: impl FnMut(u32) -> Result<T>) -> Result<T> {
+        let mut attempt = 1u32;
+        loop {
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) if attempt < self.attempts && is_transient(&e) => {
+                    RETRIES.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        self.delay_ms(attempt),
+                    ));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn delay_is_pure_in_seed_and_attempt() {
+        let b = Backoff::default();
+        for attempt in 1..=8 {
+            // Same (seed, attempt) → same delay, across fresh policy values.
+            assert_eq!(b.delay_ms(attempt), Backoff::default().delay_ms(attempt));
+        }
+        // A different seed changes at least one delay in the schedule.
+        let other = Backoff { seed: 1234, ..Backoff::default() };
+        let a: Vec<u64> = (1..=8).map(|n| b.delay_ms(n)).collect();
+        let c: Vec<u64> = (1..=8).map(|n| other.delay_ms(n)).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn delay_is_bounded_exponential() {
+        let b = Backoff { base_ms: 2, cap_ms: 40, attempts: 10, seed: 9 };
+        for attempt in 1..=20 {
+            let d = b.delay_ms(attempt);
+            let raw = b.base_ms.saturating_mul(1u64 << attempt.saturating_sub(1).min(16)).min(b.cap_ms);
+            // Jitter keeps the delay within [raw/2, raw] (and ≥ 1ms).
+            assert!(d >= (raw / 2).max(1) && d <= raw, "attempt {attempt}: {d} vs raw {raw}");
+        }
+        // The cap binds for late attempts.
+        assert!(b.delay_ms(20) <= b.cap_ms);
+    }
+
+    #[test]
+    fn run_retries_only_transient_errors() {
+        let b = Backoff { base_ms: 1, cap_ms: 2, attempts: 3, seed: 0 };
+        // Transient twice, then success.
+        let mut calls = 0;
+        let out: Result<u32> = b.run(|attempt| {
+            calls += 1;
+            if attempt < 3 {
+                Err(anyhow!("{} at store.append (hit {attempt})", failpoint::TRANSIENT_MARK))
+            } else {
+                Ok(7)
+            }
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls, 3);
+
+        // Permanent errors surface immediately.
+        let mut calls = 0;
+        let out: Result<u32> = b.run(|_| {
+            calls += 1;
+            Err(anyhow!("disk on fire"))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1);
+
+        // Transient every time: attempts exhausted, last error returned.
+        let mut calls = 0;
+        let out: Result<u32> = b.run(|attempt| {
+            calls += 1;
+            Err(anyhow!("{} at store.append (hit {attempt})", failpoint::TRANSIENT_MARK))
+        });
+        let msg = out.unwrap_err().to_string();
+        assert!(is_transient_msg(&msg));
+        assert_eq!(calls, 3);
+    }
+
+    fn is_transient_msg(msg: &str) -> bool {
+        msg.contains(failpoint::TRANSIENT_MARK)
+    }
+
+    #[test]
+    fn transient_classification_survives_context() {
+        use anyhow::Context as _;
+        let e: Result<()> = Err(anyhow!("{} at jsonl.tail (hit 1)", failpoint::TRANSIENT_MARK));
+        let wrapped = e.context("appending cell record").unwrap_err();
+        assert!(is_transient(&wrapped));
+        let plain: anyhow::Error = anyhow!("permission denied");
+        assert!(!is_transient(&plain));
+    }
+}

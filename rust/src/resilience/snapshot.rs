@@ -1,0 +1,353 @@
+//! The coordinator's *own* checkpoint: a checksummed, versioned snapshot
+//! of its estimator/replay state, written at a period the repo's own
+//! period model chooses — the dogfood half of the resilience subsystem.
+//!
+//! File format (little-endian, single file `self.snap` in the checkpoint
+//! directory):
+//! ```text
+//! magic   "CKPTWSNP"             8 bytes
+//! version u32 (currently 1)      4 bytes
+//! body    (fields in order, see `encode`)
+//! crc32   u32 over magic..body   4 bytes
+//! ```
+//! Writes are temp-file + `rename` + fsync, so a crash mid-snapshot leaves
+//! the previous snapshot intact — the same atomicity contract as
+//! [`crate::coordinator::checkpoint::CheckpointStore`].
+//!
+//! The snapshot captures the coordinator's full deterministic state at a
+//! pass boundary: simulation clock, validated/since counters, how many
+//! trace events were consumed (the stream is re-derived from the seed and
+//! fast-forwarded on resume), the deterministic `Report` core, the live
+//! workload state, *and* the durable checkpoint payload at `validated` —
+//! so a resumed run can re-seed its checkpoint store even if retention
+//! already evicted that version.
+
+use std::fs;
+use std::io::{Read as _, Write as _};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::crc32;
+
+const MAGIC: &[u8; 8] = b"CKPTWSNP";
+const VERSION: u32 = 1;
+
+/// Everything the coordinator needs to resume a run at a pass boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoordinatorSnapshot {
+    /// Guard against resuming under a different configuration
+    /// (hash of scenario + policy + steps + seed).
+    pub config_fingerprint: u64,
+    /// Leader-loop passes completed.
+    pub passes: u64,
+    /// Simulation clock (s).
+    pub sim_t: f64,
+    /// Steps secured by the last committed checkpoint.
+    pub validated: u64,
+    /// Steps done since the last committed checkpoint.
+    pub since: u64,
+    /// Steps completed in the current regular period.
+    pub period_done: u64,
+    /// Trace events consumed from the stream (≥ 1: the pre-loop pop).
+    pub events_consumed: u64,
+    /// Deterministic `Report` counters, in fixed order: n_faults,
+    /// n_recoveries, n_reg_ckpts, n_pro_ckpts, n_preds_trusted,
+    /// steps_executed, steps_lost.
+    pub counters: [u64; 7],
+    /// Loss curve so far.
+    pub losses: Vec<(u64, f32)>,
+    /// Live workload state at the snapshot boundary.
+    pub workload: Vec<f32>,
+    /// Durable checkpoint payload at `validated` (re-seeds the checkpoint
+    /// store on resume if retention evicted it).
+    pub ckpt_theta: Vec<f32>,
+}
+
+impl CoordinatorSnapshot {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            128 + 12 * self.losses.len()
+                + 4 * (self.workload.len() + self.ckpt_theta.len()),
+        );
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.config_fingerprint.to_le_bytes());
+        out.extend_from_slice(&self.passes.to_le_bytes());
+        out.extend_from_slice(&self.sim_t.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.validated.to_le_bytes());
+        out.extend_from_slice(&self.since.to_le_bytes());
+        out.extend_from_slice(&self.period_done.to_le_bytes());
+        out.extend_from_slice(&self.events_consumed.to_le_bytes());
+        for c in self.counters {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.losses.len() as u64).to_le_bytes());
+        for &(step, loss) in &self.losses {
+            out.extend_from_slice(&step.to_le_bytes());
+            out.extend_from_slice(&loss.to_le_bytes());
+        }
+        for vec in [&self.workload, &self.ckpt_theta] {
+            out.extend_from_slice(&(vec.len() as u64).to_le_bytes());
+            for &f in vec.iter() {
+                out.extend_from_slice(&f.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    fn decode(bytes: &[u8]) -> Result<CoordinatorSnapshot> {
+        if bytes.len() < 16 || &bytes[..8] != MAGIC {
+            bail!("self-snapshot: bad magic/size");
+        }
+        let body_end = bytes.len() - 4;
+        let stored =
+            u32::from_le_bytes(bytes[body_end..].try_into().expect("4 bytes"));
+        if crc32(&bytes[..body_end]) != stored {
+            bail!("self-snapshot: checksum mismatch");
+        }
+        let mut cur = Cursor { bytes: &bytes[8..body_end], pos: 0 };
+        let version = cur.u32()?;
+        if version != VERSION {
+            bail!("self-snapshot: unsupported version {version}");
+        }
+        let config_fingerprint = cur.u64()?;
+        let passes = cur.u64()?;
+        let sim_t = f64::from_bits(cur.u64()?);
+        let validated = cur.u64()?;
+        let since = cur.u64()?;
+        let period_done = cur.u64()?;
+        let events_consumed = cur.u64()?;
+        let mut counters = [0u64; 7];
+        for c in counters.iter_mut() {
+            *c = cur.u64()?;
+        }
+        let n_losses = cur.u64()? as usize;
+        let mut losses = Vec::with_capacity(n_losses.min(1 << 20));
+        for _ in 0..n_losses {
+            let step = cur.u64()?;
+            losses.push((step, cur.f32()?));
+        }
+        let mut vecs = [Vec::new(), Vec::new()];
+        for v in vecs.iter_mut() {
+            let n = cur.u64()? as usize;
+            v.reserve(n.min(1 << 24));
+            for _ in 0..n {
+                v.push(cur.f32()?);
+            }
+        }
+        if cur.pos != cur.bytes.len() {
+            bail!("self-snapshot: trailing bytes");
+        }
+        let [workload, ckpt_theta] = vecs;
+        Ok(CoordinatorSnapshot {
+            config_fingerprint,
+            passes,
+            sim_t,
+            validated,
+            since,
+            period_done,
+            events_consumed,
+            counters,
+            losses,
+            workload,
+            ckpt_theta,
+        })
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| anyhow!("self-snapshot: truncated body"))?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+}
+
+/// Single-slot atomic snapshot file (`<dir>/self.snap`).
+pub struct SnapshotStore {
+    path: PathBuf,
+    tmp: PathBuf,
+}
+
+impl SnapshotStore {
+    pub fn new(dir: impl AsRef<Path>) -> Result<SnapshotStore> {
+        let dir = dir.as_ref();
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(SnapshotStore {
+            path: dir.join("self.snap"),
+            tmp: dir.join(".self.snap.tmp"),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Atomically persist `snap` (temp file + rename + fsync).  Fail point
+    /// `snapshot.write` fires before any bytes land, so an injected crash
+    /// here never produces a torn snapshot.
+    pub fn save(&self, snap: &CoordinatorSnapshot) -> Result<()> {
+        use crate::resilience::failpoint::{self, Site};
+        if let Some(inj) = failpoint::check(Site::SnapshotWrite) {
+            inj.trigger()?;
+        }
+        let mut payload = snap.encode();
+        let crc = crc32(&payload);
+        payload.extend_from_slice(&crc.to_le_bytes());
+        {
+            let mut f = fs::File::create(&self.tmp)
+                .with_context(|| format!("creating {}", self.tmp.display()))?;
+            f.write_all(&payload)?;
+            f.sync_all()?;
+        }
+        fs::rename(&self.tmp, &self.path)
+            .with_context(|| format!("publishing {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Load the snapshot, `Ok(None)` when none has been written yet.
+    pub fn load(&self) -> Result<Option<CoordinatorSnapshot>> {
+        let mut bytes = Vec::new();
+        match fs::File::open(&self.path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(anyhow!("opening {}: {e}", self.path.display()))
+            }
+            Ok(mut f) => {
+                f.read_to_end(&mut bytes)?;
+            }
+        }
+        CoordinatorSnapshot::decode(&bytes).map(Some)
+    }
+}
+
+/// Choose the self-snapshot period, in passes, from measured costs and
+/// the assumed crash rate — the paper's own first-order machinery
+/// ([`crate::model::optimal::daly_period`]) applied to the coordinator
+/// itself: μ = crash MTBF, C = R = snapshot cost, all on the wall clock.
+/// Returns the *work* portion of the period (`(T − C)/pass_cost`), ≥ 1.
+pub fn plan_period_passes(
+    mean_snap_secs: f64,
+    mean_pass_secs: f64,
+    crash_mtbf_passes: f64,
+) -> u64 {
+    let pass = mean_pass_secs.max(1e-9);
+    let c = mean_snap_secs.max(1e-9);
+    let p = crate::config::Platform {
+        mu: crash_mtbf_passes.max(1.0) * pass,
+        c,
+        cp: c,
+        d: 0.0,
+        r: c,
+    };
+    let t = crate::model::optimal::daly_period(&p);
+    (((t - c) / pass).round() as u64).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CoordinatorSnapshot {
+        CoordinatorSnapshot {
+            config_fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            passes: 321,
+            sim_t: 12_345.678,
+            validated: 120,
+            since: 7,
+            period_done: 3,
+            events_consumed: 42,
+            counters: [5, 5, 12, 3, 4, 140, 13],
+            losses: vec![(10, 3.5), (20, 2.25), (127, 1.125)],
+            workload: vec![127.0, 0.5, -0.25],
+            ckpt_theta: vec![120.0, 0.75],
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ckptwin-snap-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn roundtrip() {
+        let store = SnapshotStore::new(tmpdir("rt")).unwrap();
+        assert!(store.load().unwrap().is_none());
+        let snap = sample();
+        store.save(&snap).unwrap();
+        assert_eq!(store.load().unwrap().unwrap(), snap);
+        // Overwrite wins.
+        let mut snap2 = sample();
+        snap2.passes = 999;
+        snap2.losses.clear();
+        store.save(&snap2).unwrap();
+        assert_eq!(store.load().unwrap().unwrap(), snap2);
+    }
+
+    #[test]
+    fn corruption_and_truncation_detected() {
+        let store = SnapshotStore::new(tmpdir("corrupt")).unwrap();
+        store.save(&sample()).unwrap();
+        let clean = fs::read(store.path()).unwrap();
+        // Flip a body byte.
+        let mut bad = clean.clone();
+        bad[20] ^= 0x40;
+        fs::write(store.path(), &bad).unwrap();
+        assert!(store.load().is_err());
+        // Truncate.
+        fs::write(store.path(), &clean[..clean.len() - 9]).unwrap();
+        assert!(store.load().is_err());
+        // Garbage magic.
+        fs::write(store.path(), b"NOTASNAP-and-more").unwrap();
+        assert!(store.load().is_err());
+        // Restore the clean bytes: loads again.
+        fs::write(store.path(), &clean).unwrap();
+        assert_eq!(store.load().unwrap().unwrap(), sample());
+    }
+
+    #[test]
+    fn planner_period_is_sane_and_monotone_in_mtbf() {
+        // Cheap snapshots + rare crashes → long periods; expensive
+        // snapshots + frequent crashes → short (but ≥ 1).
+        let rare = plan_period_passes(0.001, 0.01, 10_000.0);
+        let frequent = plan_period_passes(0.001, 0.01, 10.0);
+        assert!(rare > frequent, "{rare} vs {frequent}");
+        assert!(frequent >= 1);
+        // Degenerate measurements still give a usable period.
+        assert!(plan_period_passes(0.0, 0.0, 0.0) >= 1);
+        // Daly first-order shape: doubling MTBF scales the work period by
+        // ~sqrt(2) when C ≪ μ.
+        let a = plan_period_passes(0.01, 0.01, 1_000.0);
+        let b = plan_period_passes(0.01, 0.01, 2_000.0);
+        let ratio = b as f64 / a as f64;
+        assert!(ratio > 1.2 && ratio < 1.7, "{ratio}");
+    }
+}

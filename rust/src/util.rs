@@ -137,6 +137,38 @@ pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
     x.max(lo).min(hi)
 }
 
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) over `data`.
+///
+/// Shared integrity primitive: the coordinator checkpoint container
+/// ([`crate::coordinator::checkpoint`]), the self-snapshot file
+/// ([`crate::resilience::snapshot`]), and the per-record JSONL seals
+/// ([`crate::jsonio::seal_record`]) all use this table-driven
+/// implementation so their checksums are mutually comparable in tooling.
+pub fn crc32(data: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        let mut i = 0usize;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            t[i] = c;
+            i += 1;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
 /// Split `raw` on top-level commas: commas inside parentheses do not
 /// split, so `qtrust(q=0.25,…)` or `biased(beta=2,r=0.7)` stay one token.
 /// Shared by the CLI's `--strategies` and `--predictors` list parsers

@@ -16,7 +16,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use crate::jsonio::{self, JsonlAppender, Value};
+use crate::jsonio::{self, JsonlAppender, RecordCheck, Value};
+use crate::resilience::failpoint::{self, Site};
+use crate::resilience::retry::Backoff;
 
 /// One persisted conformance verdict (one JSONL line).
 #[derive(Clone, Debug, PartialEq)]
@@ -74,11 +76,16 @@ impl ConformanceRecord {
         obj.insert("tolerance".into(), num_or_null(self.tolerance));
         obj.insert("verdict".into(), Value::Str(self.verdict.clone()));
         obj.insert("reason".into(), Value::Str(self.reason.clone()));
-        jsonio::to_string(&Value::Obj(obj))
+        // CRC-sealed like the campaign store: interior corruption is
+        // quarantined on reload instead of silently trusted.
+        jsonio::seal_record(obj)
     }
 
     fn from_json(line: &str) -> Option<ConformanceRecord> {
-        let v = jsonio::parse(line).ok()?;
+        ConformanceRecord::from_value(&jsonio::parse(line).ok()?)
+    }
+
+    fn from_value(v: &Value) -> Option<ConformanceRecord> {
         let opt_num =
             |k: &str| v.get(k).and_then(Value::as_f64).unwrap_or(f64::NAN);
         let text = |k: &str| Some(v.get(k)?.as_str()?.to_string());
@@ -108,6 +115,9 @@ pub struct ConformanceStore {
     records: BTreeMap<u64, ConformanceRecord>,
     /// Unparseable lines skipped on open (a torn tail from an interrupt).
     pub skipped_lines: usize,
+    /// Lines that parsed but failed their CRC seal (interior corruption);
+    /// the damaged cells are absent from the index and get re-verdicted.
+    pub quarantined_lines: usize,
 }
 
 impl ConformanceStore {
@@ -125,9 +135,16 @@ impl ConformanceStore {
     fn open_inner(path: &Path, truncate: bool) -> Result<ConformanceStore> {
         // Replay existing lines last-wins; the appender repairs a torn
         // tail and counts unparseable lines (see `jsonio::JsonlAppender`).
+        // CRC-seal failures are quarantined, not treated as torn.
         let mut records = BTreeMap::new();
+        let mut quarantined_lines = 0usize;
         let file = JsonlAppender::open(path, truncate, |line| {
-            match ConformanceRecord::from_json(line) {
+            let Ok(v) = jsonio::parse(line) else { return false };
+            if jsonio::check_record(&v) == RecordCheck::Corrupt {
+                quarantined_lines += 1;
+                return true;
+            }
+            match ConformanceRecord::from_value(&v) {
                 Some(rec) => {
                     records.insert(rec.hash, rec);
                     true
@@ -136,7 +153,13 @@ impl ConformanceStore {
             }
         })?;
         let skipped_lines = file.skipped_lines;
-        Ok(ConformanceStore { path: path.to_path_buf(), file, records, skipped_lines })
+        Ok(ConformanceStore {
+            path: path.to_path_buf(),
+            file,
+            records,
+            skipped_lines,
+            quarantined_lines,
+        })
     }
 
     pub fn path(&self) -> &Path {
@@ -168,7 +191,15 @@ impl ConformanceStore {
     /// record whose hash is already present supersedes the earlier line
     /// (last-wins, both in memory and on reload).
     pub fn append(&mut self, rec: &ConformanceRecord) -> Result<()> {
-        self.file.append_line(&rec.to_json())?;
+        let line = rec.to_json();
+        let file = &mut self.file;
+        // Same transient-fault retry policy as the campaign store.
+        Backoff::default().run(|_attempt| {
+            if let Some(inj) = failpoint::check(Site::StoreAppend) {
+                inj.trigger()?;
+            }
+            file.append_line(&line)
+        })?;
         self.records.insert(rec.hash, rec.clone());
         Ok(())
     }

@@ -31,6 +31,7 @@ fn config(tag: &str, mu: f64, kind: PolicyKind, steps: u64) -> CoordinatorConfig
         ckpt_dir: dir,
         seed: 7,
         log_every: 5,
+        selfckpt: None,
     }
 }
 

@@ -394,3 +394,97 @@ fn prop_optimal_trust_probability_is_extreme() {
         }
     });
 }
+
+/// Torn-tail repair (the crash model behind every JSONL store): truncate
+/// the file at a *random* byte offset, reopen, and require that (a) every
+/// record whose full line landed before the cut survives, (b) at most the
+/// one in-flight line is lost, and (c) the repair is idempotent — further
+/// reopens see exactly the same records and skip count.
+#[test]
+fn prop_jsonl_torn_tail_repair_idempotent_and_lossless() {
+    use ckptwin::jsonio::{self, JsonlAppender, RecordCheck, Value};
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    // Count (clean records, skipped lines) via a replaying open.
+    fn scan(path: &Path) -> (usize, usize) {
+        let mut good = 0;
+        let ap = JsonlAppender::open(path, false, |l| match jsonio::parse(l) {
+            Ok(v) if jsonio::check_record(&v) == RecordCheck::Clean => {
+                good += 1;
+                true
+            }
+            _ => false,
+        })
+        .unwrap();
+        (good, ap.skipped_lines)
+    }
+
+    for_cases(0xA11CE, 80, |case, rng| {
+        let path = std::env::temp_dir().join(format!(
+            "ckptwin-prop-torn-{}-{case}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let n = 3 + rng.below(6);
+        let mut lines = Vec::with_capacity(n);
+        {
+            let mut ap = JsonlAppender::open(&path, true, |_| true).unwrap();
+            for i in 0..n {
+                let mut obj = BTreeMap::new();
+                obj.insert("idx".to_string(), Value::Num(i as f64));
+                obj.insert("key".to_string(), Value::Str(format!("r{case}-{i}")));
+                let line = jsonio::seal_record(obj);
+                ap.append_line(&line).unwrap();
+                lines.push(line);
+            }
+        }
+        let full = std::fs::read(&path).unwrap();
+        let cut = rng.below(full.len() + 1);
+        std::fs::write(&path, &full[..cut]).unwrap();
+
+        // Expected survivors: every line whose `line\n` block is fully
+        // inside the cut, plus a final line cut exactly before its
+        // newline (complete JSON, only the terminator lost).
+        let mut off = 0;
+        let mut whole = 0;
+        let mut remainder = 0;
+        for line in &lines {
+            let end = off + line.len();
+            if end + 1 <= cut {
+                whole += 1;
+                off = end + 1;
+            } else {
+                remainder = cut - off;
+                break;
+            }
+        }
+        let tail_survives = whole < n && remainder == lines[whole].len();
+        let expect_good = whole + usize::from(tail_survives);
+        let expect_skip = usize::from(remainder > 0 && !tail_survives);
+
+        let (good, skipped) = scan(&path);
+        assert_eq!(
+            (good, skipped),
+            (expect_good, expect_skip),
+            "case {case}: cut {cut} of {} (lines of {:?})",
+            full.len(),
+            lines.iter().map(String::len).collect::<Vec<_>>()
+        );
+        assert!(good >= whole, "a fully-written record was dropped");
+
+        // Idempotence: repair already ran; reopening changes nothing.
+        assert_eq!(scan(&path), (expect_good, expect_skip), "case {case}");
+
+        // And the repaired file accepts appends on a fresh line.
+        {
+            let mut ap = JsonlAppender::open(&path, false, |_| true).unwrap();
+            let mut obj = BTreeMap::new();
+            obj.insert("idx".to_string(), Value::Num(n as f64));
+            obj.insert("key".to_string(), Value::Str("post-repair".into()));
+            ap.append_line(&jsonio::seal_record(obj)).unwrap();
+        }
+        assert_eq!(scan(&path), (expect_good + 1, expect_skip), "case {case}");
+        let _ = std::fs::remove_file(&path);
+    });
+}

@@ -1,0 +1,269 @@
+//! Resilience integration tests: the only place fail points are armed
+//! end-to-end (library unit tests stick to the pure APIs).
+//!
+//! Arming is process-global and integration tests share one process, so
+//! every test here serializes on [`SERIAL`] — without it, one test's plan
+//! would fire inside another's workload.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use ckptwin::campaign::scheduler;
+use ckptwin::campaign::store::{CellRecord, Store};
+use ckptwin::config::{FaultModel, Platform, PredictorSpec, Scenario};
+use ckptwin::coordinator::workload::SyntheticWorkload;
+use ckptwin::coordinator::{self, CoordinatorConfig, SelfCkptOptions};
+use ckptwin::resilience::chaos::{self, ChaosOptions};
+use ckptwin::resilience::failpoint::{self, Plan, Site};
+use ckptwin::resilience::retry::{self, Backoff};
+use ckptwin::resilience::snapshot::SnapshotStore;
+use ckptwin::sim::distribution::Law;
+use ckptwin::strategy::{Policy, PolicyKind};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking test (some tests *expect* panics inside workers) must
+    // not wedge the rest of the suite behind a poisoned lock.
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_file(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "ckptwin-resilience-{tag}-{}.jsonl",
+        std::process::id()
+    ))
+}
+
+fn rec(i: u64) -> CellRecord {
+    CellRecord {
+        hash: 0x1000 + i,
+        key: format!("cell-{i}"),
+        instances: 50,
+        waste_mean: 0.25 + i as f64 * 0.01,
+        waste_var: 0.002,
+        waste_ci95: 0.01,
+        waste_min: 0.1,
+        waste_max: 0.5,
+        makespan_mean: 9000.0 + i as f64,
+        tr: 1000.0,
+    }
+}
+
+/// A crash that tears the JSONL tail mid-record loses exactly the torn
+/// line; reopening repairs the tail, keeps every durable record, and the
+/// repair is idempotent.
+#[test]
+fn torn_tail_crash_resume_loses_no_durable_record() {
+    let _g = lock();
+    let path = tmp_file("torn");
+    let _ = std::fs::remove_file(&path);
+    let mut store = Store::create(&path).unwrap();
+    for i in 0..5 {
+        store.append(&rec(i)).unwrap();
+    }
+    {
+        let _arm = failpoint::arm(Plan::parse("jsonl.tail:nth=1,mode=torn").unwrap());
+        let err = store.append(&rec(5)).unwrap_err();
+        assert!(err.to_string().contains("injected"), "{err:#}");
+        assert_eq!(failpoint::fired(Site::JsonlTail), 1);
+    }
+    drop(store);
+
+    // The resume: the torn tail is detected, truncated away, and the
+    // record that was mid-write is simply absent (never acknowledged).
+    let mut store = Store::open(&path).unwrap();
+    assert_eq!(store.skipped_lines, 1, "torn tail not detected");
+    assert_eq!(store.len(), 5);
+    store.append(&rec(5)).unwrap();
+    drop(store);
+
+    // Idempotence: the repaired fragment persists as one inert skipped
+    // line; further reopens converge (same skips, all six records).
+    for _ in 0..2 {
+        let store = Store::open(&path).unwrap();
+        assert_eq!(store.skipped_lines, 1);
+        assert_eq!(store.len(), 6);
+        assert_eq!(store.get(rec(5).hash), Some(&rec(5)));
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Transient IO faults at `store.append` are absorbed by the bounded
+/// backoff retry — the caller never sees them, the record lands.
+#[test]
+fn transient_io_faults_are_absorbed_by_bounded_retry() {
+    let _g = lock();
+    let path = tmp_file("transient");
+    let _ = std::fs::remove_file(&path);
+    let before = retry::total_retries();
+    let mut store = Store::create(&path).unwrap();
+    {
+        let _arm =
+            failpoint::arm(Plan::parse("store.append:nth=1,mode=transient").unwrap());
+        store.append(&rec(0)).unwrap();
+        assert_eq!(failpoint::fired(Site::StoreAppend), 1);
+    }
+    assert!(retry::total_retries() > before, "retry counter did not move");
+    drop(store);
+    let store = Store::open(&path).unwrap();
+    assert_eq!(store.len(), 1);
+    assert_eq!(store.skipped_lines, 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A worker panic is contained: the unit is requeued and succeeds on the
+/// retry; with retries exhausted, the failure manifest names each unit.
+#[test]
+fn contained_scheduler_requeues_and_reports_failures() {
+    let _g = lock();
+    {
+        let _arm = failpoint::arm(Plan::parse("sched.worker:nth=2,mode=panic").unwrap());
+        let run = scheduler::run_units_contained(4, 1, 2, || (), |_, i| i * 10);
+        assert!(run.failures.is_empty(), "{:?}", run.failures);
+        assert_eq!(run.results, vec![Some(0), Some(10), Some(20), Some(30)]);
+        assert_eq!(failpoint::fired(Site::SchedWorker), 1);
+    }
+    {
+        let _arm = failpoint::arm(Plan::parse("sched.worker:p=1.0,mode=panic").unwrap());
+        let run = scheduler::run_units_contained(3, 1, 1, || (), |_, i| i);
+        assert_eq!(run.results, vec![None, None, None]);
+        assert_eq!(run.failures.len(), 3);
+        for (k, f) in run.failures.iter().enumerate() {
+            assert_eq!(f.unit, k);
+            assert_eq!(f.attempts, 2, "1 try + 1 retry");
+            assert!(f.message.contains("sched.worker"), "{}", f.message);
+        }
+    }
+}
+
+/// The stateful scheduler (no containment budget) panics with a message
+/// that names the unit index — the satellite's debuggability contract.
+#[test]
+fn stateful_scheduler_panic_names_the_unit() {
+    let _g = lock();
+    let _arm = failpoint::arm(Plan::parse("sched.worker:p=1.0,mode=panic").unwrap());
+    let caught = std::panic::catch_unwind(|| {
+        scheduler::run_units_stateful(2, 1, || (), |_: &mut (), i| i)
+    });
+    let payload = caught.expect_err("expected the run to panic");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(
+        msg.contains("unit 0 panicked after 1 attempt(s)"),
+        "unhelpful panic message: {msg}"
+    );
+}
+
+fn coord_config(tag: &str) -> CoordinatorConfig {
+    let scenario = Scenario {
+        platform: Platform { mu: 3000.0, c: 120.0, cp: 60.0, d: 30.0, r: 60.0 },
+        predictor: PredictorSpec::paper(0.85, 0.82, 240.0),
+        fault_law: Law::Exponential,
+        false_pred_law: Law::Exponential,
+        fault_model: FaultModel::PlatformRenewal,
+        job_size: 0.0,
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "ckptwin-resilience-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    CoordinatorConfig {
+        scenario,
+        policy: Policy { kind: PolicyKind::WithCkpt, tr: 1000.0, tp: 200.0 },
+        seconds_per_step: 30.0,
+        total_steps: 200,
+        ckpt_dir: dir,
+        seed: 11,
+        log_every: 10,
+        selfckpt: Some(SelfCkptOptions { crash_mtbf_passes: 60.0, replan_every: 1 }),
+    }
+}
+
+/// The crash–resume equivalence contract, end to end: a coordinator killed
+/// mid-run (injected `coord.pass` fault) and resumed from its own snapshot
+/// produces the identical Report fingerprint to an uninterrupted run.
+#[test]
+fn coordinator_killed_mid_run_resumes_to_the_golden_report() {
+    let _g = lock();
+    let golden_cfg = coord_config("golden");
+    let golden = coordinator::run(&golden_cfg, &mut SyntheticWorkload::new(32)).unwrap();
+    // Crash past the bootstrap snapshot (pass 16) so a resume point exists.
+    assert!(golden.passes > 40, "run too short to crash mid-way");
+
+    let cfg = coord_config("crash");
+    let snaps = SnapshotStore::new(&cfg.ckpt_dir).unwrap();
+    let nth = 1 + golden.passes / 2;
+    let mut resume = None;
+    let mut crashes = 0u64;
+    let rep = loop {
+        let attempt = {
+            let _arm = if crashes == 0 {
+                // First attempt: killed mid-run at pass `nth`.
+                Some(failpoint::arm(
+                    Plan::parse(&format!("coord.pass:nth={nth},mode=transient")).unwrap(),
+                ))
+            } else {
+                None // the restarted process runs clean to completion
+            };
+            coordinator::run_from(&cfg, &mut SyntheticWorkload::new(32), resume.as_ref())
+        };
+        match attempt {
+            Ok(rep) => break rep,
+            Err(e) => {
+                assert!(e.to_string().contains("injected"), "{e:#}");
+                crashes += 1;
+                resume = snaps.load().unwrap();
+                assert!(resume.is_some(), "crashed before the first self-snapshot");
+            }
+        }
+    };
+    assert_eq!(crashes, 1, "the injected crash should fire exactly once");
+    assert_eq!(rep.fingerprint(), golden.fingerprint());
+    assert_eq!(rep.losses, golden.losses);
+    assert_eq!(rep.passes, golden.passes);
+    assert_eq!(rep.steps_executed, golden.steps_executed);
+    let _ = std::fs::remove_dir_all(&golden_cfg.ckpt_dir);
+    let _ = std::fs::remove_dir_all(&cfg.ckpt_dir);
+}
+
+/// A short chaos gate run comes back clean and its CHAOS.json round-trips.
+#[test]
+fn chaos_gate_smoke_is_clean() {
+    let _g = lock();
+    let dir = std::env::temp_dir().join(format!(
+        "ckptwin-resilience-chaos-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let rep =
+        chaos::run_chaos(&ChaosOptions { cycles: 6, seed: 9, dir: dir.clone() }).unwrap();
+    assert!(rep.ok(), "divergences: {:?}", rep.divergences);
+    assert_eq!(rep.cycles_run, 6);
+    assert_eq!(rep.resumes, rep.crashes_injected);
+
+    let json = dir.join("CHAOS.json");
+    let bytes = chaos::write_chaos_json(&json, &rep).unwrap();
+    assert!(bytes > 0);
+    let doc = ckptwin::jsonio::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some(chaos::SCHEMA));
+    assert_eq!(doc.get("ok"), Some(&ckptwin::jsonio::Value::Bool(true)));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite (f), integration-visible: the backoff schedule is pure in
+/// (seed, attempt) and bounded by the cap.
+#[test]
+fn backoff_schedule_is_a_pure_function_of_seed_and_attempt() {
+    let b = Backoff { base_ms: 3, cap_ms: 50, attempts: 6, seed: 0xfeed };
+    let one: Vec<u64> = (1..=8).map(|a| b.delay_ms(a)).collect();
+    let two: Vec<u64> = (1..=8).map(|a| b.delay_ms(a)).collect();
+    assert_eq!(one, two);
+    assert!(one.iter().all(|&d| (1..=50).contains(&d)), "{one:?}");
+    let other = Backoff { seed: 0xbeef, ..b };
+    assert_ne!(one, (1..=8).map(|a| other.delay_ms(a)).collect::<Vec<_>>());
+}
