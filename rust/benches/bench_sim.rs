@@ -228,5 +228,52 @@ fn main() {
         Value::Num(r_gen_mixed.median() / r_gen_paper.median()),
     ));
 
+    // ---- per-processor trace generation: N-sweep to 10^6 (PR 8) --------
+    // The timer-wheel source behind FlatTrace, pulling raw events through
+    // the full merge, at 10^4..10^6 fresh-Weibull processors; plus the
+    // wheel-vs-heap ratio at 10^6 (same scenario, same seed, heap
+    // reference TraceStream) — the headline number of the scale-out work.
+    let sweep_sc = |n: u64| {
+        Scenario::paper(
+            n,
+            1.0,
+            PredictorSpec::paper_a(600.0),
+            Law::Weibull { shape: 0.7 },
+            Law::Weibull { shape: 0.7 },
+        )
+    };
+    const SWEEP_EVENTS: usize = 20_000;
+    let mut wheel_medians: Vec<f64> = Vec::new();
+    for (tag, n) in [("n1e4", 10_000u64), ("n1e5", 100_000), ("n1e6", 1_000_000)] {
+        let sc_n = sweep_sc(n);
+        let r = bench_val(&format!("trace_gen/perproc_wheel_{tag}"), 150.0, || {
+            let mut ts = FlatTrace::new(&sc_n, 7);
+            let mut acc = 0.0;
+            for _ in 0..SWEEP_EVENTS {
+                acc += ts.next_event().time();
+            }
+            acc
+        });
+        report_throughput(&r, SWEEP_EVENTS as f64, "event");
+        wheel_medians.push(r.median());
+        json.push((
+            format!("perproc_events_per_s_{tag}"),
+            Value::Num(SWEEP_EVENTS as f64 / r.median()),
+        ));
+    }
+    let sc_1e6 = sweep_sc(1_000_000);
+    let r_heap_1e6 = bench_val("trace_gen/perproc_heap_n1e6", 150.0, || {
+        let mut ts = TraceStream::new(&sc_1e6, 7);
+        let mut acc = 0.0;
+        for _ in 0..SWEEP_EVENTS {
+            acc += ts.next_event().time();
+        }
+        acc
+    });
+    report_throughput(&r_heap_1e6, SWEEP_EVENTS as f64, "event");
+    let wheel_speedup = r_heap_1e6.median() / wheel_medians[2];
+    println!("trace_gen/perproc wheel-vs-heap speedup at 1e6: {wheel_speedup:.2}x");
+    json.push(("wheel_vs_heap_speedup".into(), Value::Num(wheel_speedup)));
+
     update_bench_json("bench_sim", &json);
 }

@@ -65,6 +65,13 @@ pub struct Cell {
     /// environment simulates the *same* fault traces (the paper's
     /// paired-comparison methodology).
     pub trace_hash: u64,
+    /// Platform shard count: the per-processor pool is split into this
+    /// many wheel sub-sources with derived seeds
+    /// ([`crate::sim::trace::TraceCache::sharded`]).  1 = the unsharded
+    /// source (and the pre-shards key string, byte-identical).  Shards ≠ 1
+    /// are their *own* trace definition — the axis lands in
+    /// [`Cell::trace_key`], so hashes and instance seeds separate.
+    pub shards: u32,
 }
 
 impl Cell {
@@ -88,11 +95,25 @@ impl Cell {
             hash: 0,
             scenario_hash: 0,
             trace_hash: 0,
+            shards: 1,
         };
-        cell.trace_hash = fnv1a64(cell.trace_key().as_bytes());
-        cell.scenario_hash = fnv1a64(cell.scenario_key().as_bytes());
-        cell.hash = fnv1a64(cell.key().as_bytes());
+        cell.rehash();
         cell
+    }
+
+    /// The same cell with its platform split into `shards` sub-sources
+    /// (clamped to ≥ 1); identity hashes are recomputed, since shards ≠ 1
+    /// changes the fault trace.
+    pub fn with_shards(mut self, shards: u32) -> Cell {
+        self.shards = shards.max(1);
+        self.rehash();
+        self
+    }
+
+    fn rehash(&mut self) {
+        self.trace_hash = fnv1a64(self.trace_key().as_bytes());
+        self.scenario_hash = fnv1a64(self.scenario_key().as_bytes());
+        self.hash = fnv1a64(self.key().as_bytes());
     }
 
     /// Canonical identity of the fault environment: everything that shapes
@@ -103,14 +124,21 @@ impl Cell {
     /// Daly baseline and a predictor-B row of Tables 4/5 are scored on
     /// identical fault traces.
     pub fn trace_key(&self) -> String {
-        format!(
+        let mut key = format!(
             "procs={};cp={};law={};fp={};scale={}",
             self.procs,
             self.cp_ratio,
             self.fault_law.label(),
             self.false_pred_law.label(),
             self.scale,
-        )
+        );
+        // Like the `pm=` component of the scenario key: shards = 1 (the
+        // only pre-axis value) appends nothing, so existing stores stay
+        // resumable (`tests/campaign.rs` pins the literal strings).
+        if self.shards != 1 {
+            key.push_str(&format!(";shards={}", self.shards));
+        }
+        key
     }
 
     /// Canonical identity of the simulated scenario: the fault environment
@@ -187,6 +215,10 @@ pub struct Grid {
     pub windows: Vec<f64>,
     pub strategies: Vec<StrategyId>,
     pub scale: f64,
+    /// Platform-shards axis (see [`Cell::shards`]): how many per-worker
+    /// sub-sources each platform is split into.  `[1]` — the default for
+    /// every preset — reproduces the pre-axis grids exactly.
+    pub platform_shards: Vec<u32>,
 }
 
 impl Grid {
@@ -207,6 +239,7 @@ impl Grid {
             windows: crate::harness::PAPER_WINDOWS.to_vec(),
             strategies: registry::paper_set(),
             scale: 1.0,
+            platform_shards: vec![1],
         }
     }
 
@@ -225,6 +258,7 @@ impl Grid {
                 registry::get("NoCkptI").expect("registered"),
             ],
             scale: 0.05,
+            platform_shards: vec![1],
         }
     }
 
@@ -236,6 +270,7 @@ impl Grid {
             * self.predictors.len()
             * self.windows.len()
             * self.strategies.len()
+            * self.platform_shards.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -249,18 +284,23 @@ impl Grid {
             let fp_law = if self.uniform_false_preds { Law::Uniform } else { law };
             for &window in &self.windows {
                 for &procs in &self.procs {
-                    for &cp_ratio in &self.cp_ratios {
-                        for pred in &self.predictors {
-                            for strategy in &self.strategies {
-                                cells.push(Cell::new(
-                                    procs,
-                                    cp_ratio,
-                                    law,
-                                    fp_law,
-                                    pred.spec(window),
-                                    strategy.clone(),
-                                    self.scale,
-                                ));
+                    for &shards in &self.platform_shards {
+                        for &cp_ratio in &self.cp_ratios {
+                            for pred in &self.predictors {
+                                for strategy in &self.strategies {
+                                    cells.push(
+                                        Cell::new(
+                                            procs,
+                                            cp_ratio,
+                                            law,
+                                            fp_law,
+                                            pred.spec(window),
+                                            strategy.clone(),
+                                            self.scale,
+                                        )
+                                        .with_shards(shards),
+                                    );
+                                }
                             }
                         }
                     }
@@ -441,6 +481,39 @@ mod tests {
         );
         // Paper cells carry NO pm component: pre-registry keys unchanged.
         assert!(!paper.key().contains("pm="), "{}", paper.key());
+    }
+
+    #[test]
+    fn shard_axis_separates_hashes_but_default_keys_unchanged() {
+        let base = Cell::new(
+            1 << 20,
+            1.0,
+            Law::Weibull { shape: 0.7 },
+            Law::Weibull { shape: 0.7 },
+            PredictorSpec::paper_a(600.0),
+            registry::get("RFO").unwrap(),
+            1.0,
+        );
+        // shards = 1 is the identity: no key component, same hashes.
+        let one = base.clone().with_shards(1);
+        assert_eq!(one.key(), base.key());
+        assert_eq!(one.hash, base.hash);
+        assert!(!base.trace_key().contains("shards="), "{}", base.trace_key());
+        // shards ≠ 1 is a distinct fault environment.
+        let four = base.clone().with_shards(4);
+        assert!(four.trace_key().ends_with(";shards=4"), "{}", four.trace_key());
+        assert_ne!(four.trace_hash, base.trace_hash);
+        assert_ne!(four.hash, base.hash);
+        assert_ne!(four.instance_seed(0), base.instance_seed(0));
+        // The axis multiplies the grid and expansion honors it.
+        let mut g = Grid::smoke();
+        let plain = g.len();
+        g.platform_shards = vec![1, 8];
+        assert_eq!(g.len(), plain * 2);
+        let cells = g.expand();
+        assert_eq!(cells.len(), g.len());
+        assert!(cells.iter().any(|c| c.shards == 8));
+        assert!(cells.iter().any(|c| c.shards == 1));
     }
 
     #[test]

@@ -127,6 +127,17 @@ pub struct CampaignMetrics {
     pub pool_hits: u64,
     pub pool_misses: u64,
     pub pool_evictions: u64,
+    /// Failure times popped off per-processor timer wheels (0 when no cell
+    /// runs a per-proc Weibull superposition).
+    pub wheel_pops: u64,
+    /// Empty wheel buckets scanned while seeking the next failure — the
+    /// amortized-cost driver (healthy: a few per pop).
+    pub wheel_bucket_scans: u64,
+    /// Wheel items promoted down a level or redistributed on a rebase.
+    pub wheel_overflow_promotions: u64,
+    /// Head merges performed by sharded platform sources (0 without a
+    /// shards ≠ 1 cell).
+    pub shard_merges: u64,
 }
 
 impl CampaignMetrics {
@@ -167,6 +178,10 @@ struct Meter {
     pool_hits: AtomicU64,
     pool_misses: AtomicU64,
     pool_evictions: AtomicU64,
+    wheel_pops: AtomicU64,
+    wheel_bucket_scans: AtomicU64,
+    wheel_overflow_promotions: AtomicU64,
+    shard_merges: AtomicU64,
 }
 
 /// Per-worker scratch: the trace pool plus the pool-stat watermarks
@@ -177,6 +192,9 @@ struct WorkerState {
     seen_hits: u64,
     seen_misses: u64,
     seen_evictions: u64,
+    /// Watermarks of the pool's wheel counters already reported:
+    /// (pops, bucket scans, overflow promotions, shard merges).
+    seen_wheel: (u64, u64, u64, u64),
 }
 
 impl WorkerState {
@@ -186,6 +204,7 @@ impl WorkerState {
             seen_hits: 0,
             seen_misses: 0,
             seen_evictions: 0,
+            seen_wheel: (0, 0, 0, 0),
         }
     }
 
@@ -197,6 +216,28 @@ impl WorkerState {
             .pool_evictions
             .fetch_add(e - self.seen_evictions, Ordering::Relaxed);
         (self.seen_hits, self.seen_misses, self.seen_evictions) = (h, m, e);
+        // Wheel counters live in the cached traces, which budget clears
+        // evict wholesale — the cumulative view can shrink.  Clamp the
+        // delta and re-anchor the watermark (evicted-but-unreported work
+        // is dropped rather than double-counted).
+        let w = self
+            .tp
+            .wheel_stats()
+            .map(|(s, merges)| (s.pops, s.bucket_scans, s.overflow_promotions, merges))
+            .unwrap_or_default();
+        meter
+            .wheel_pops
+            .fetch_add(w.0.saturating_sub(self.seen_wheel.0), Ordering::Relaxed);
+        meter
+            .wheel_bucket_scans
+            .fetch_add(w.1.saturating_sub(self.seen_wheel.1), Ordering::Relaxed);
+        meter
+            .wheel_overflow_promotions
+            .fetch_add(w.2.saturating_sub(self.seen_wheel.2), Ordering::Relaxed);
+        meter
+            .shard_merges
+            .fetch_add(w.3.saturating_sub(self.seen_wheel.3), Ordering::Relaxed);
+        self.seen_wheel = w;
     }
 }
 
@@ -384,7 +425,9 @@ pub fn run_cells_contained(
                 &pol,
                 1.0,
                 seed,
-                ws.tp.replay(cell.scenario_hash, &sc, seed),
+                // The cell's shard count shapes the trace (shards ≠ 1 is
+                // part of scenario_hash, so the memo key separates too).
+                ws.tp.replay_sharded(cell.scenario_hash, &sc, seed, cell.shards),
                 f64::INFINITY,
             );
             waste.push(out.waste());
@@ -450,6 +493,12 @@ pub fn run_cells_contained(
         pool_hits: meter.pool_hits.load(Ordering::Relaxed),
         pool_misses: meter.pool_misses.load(Ordering::Relaxed),
         pool_evictions: meter.pool_evictions.load(Ordering::Relaxed),
+        wheel_pops: meter.wheel_pops.load(Ordering::Relaxed),
+        wheel_bucket_scans: meter.wheel_bucket_scans.load(Ordering::Relaxed),
+        wheel_overflow_promotions: meter
+            .wheel_overflow_promotions
+            .load(Ordering::Relaxed),
+        shard_merges: meter.shard_merges.load(Ordering::Relaxed),
     };
 
     if let Some(e) = append_err.into_inner().unwrap_or_else(|e| e.into_inner()) {

@@ -66,11 +66,26 @@ impl TracePool {
     /// bookkeeping beyond the lookup.  (Caches grow lazily during replay,
     /// so a running counter could not stay exact anyway; an O(entries)
     /// scan once per generated trace is noise next to the generation.)
+    pub fn replay(&mut self, scenario_hash: u64, sc: &Scenario, seed: u64) -> Replay<'_> {
+        self.replay_sharded(scenario_hash, sc, seed, 1)
+    }
+
+    /// [`TracePool::replay`] over a platform split into `shards` per-shard
+    /// sub-sources ([`TraceCache::sharded`]); `shards <= 1` is exactly
+    /// `replay`.  The caller's `scenario_hash` must already encode the
+    /// shard count (campaign cells do: shards ≠ 1 lands in
+    /// [`crate::campaign::Cell::trace_key`]), since it is the memo key.
     // contains_key + insert instead of the entry API: the budget scan must
     // run between the lookup and the insert, which entry()'s borrow of the
     // map cannot interleave.
     #[allow(clippy::map_entry)]
-    pub fn replay(&mut self, scenario_hash: u64, sc: &Scenario, seed: u64) -> Replay<'_> {
+    pub fn replay_sharded(
+        &mut self,
+        scenario_hash: u64,
+        sc: &Scenario,
+        seed: u64,
+        shards: u32,
+    ) -> Replay<'_> {
         let key = (scenario_hash, seed);
         if self.entries.contains_key(&key) {
             self.hits += 1;
@@ -94,9 +109,27 @@ impl TracePool {
                 self.evictions += 1;
             }
             self.misses += 1;
-            self.entries.insert(key, TraceCache::new(sc, seed));
+            self.entries.insert(key, TraceCache::sharded(sc, seed, shards));
         }
         self.entries.get_mut(&key).expect("present").replay()
+    }
+
+    /// Aggregate wheel/shard counters over every cached trace: summed
+    /// [`crate::sim::trace::WheelStats`] plus total shard merges (`None`
+    /// when no cached trace runs a wheel — platform-renewal scenarios).
+    pub fn wheel_stats(&self) -> Option<(crate::sim::trace::WheelStats, u64)> {
+        let mut agg: Option<(crate::sim::trace::WheelStats, u64)> = None;
+        for cache in self.entries.values() {
+            if let Some((s, m)) = cache.wheel_stats() {
+                let (a, merges) = agg.get_or_insert_with(Default::default);
+                a.pops += s.pops;
+                a.bucket_scans += s.bucket_scans;
+                a.overflow_promotions += s.overflow_promotions;
+                a.occupancy += s.occupancy;
+                *merges += m;
+            }
+        }
+        agg
     }
 
     /// Total events currently memoized across all entries.

@@ -469,7 +469,19 @@ pub fn scenario_from_str(text: &str) -> Result<Scenario, ConfigError> {
     // simulator); `model = "platform"` forces the steady-state renewal.
     let fault_model = match (raw.get("laws", "model"), procs) {
         (Some("platform"), _) | (_, None) => FaultModel::PlatformRenewal,
-        (_, Some(n)) => FaultModel::PerProcessor { n: n as u64 },
+        (_, Some(n)) => {
+            // `platform.procs = 0` would build a zero-processor pool the
+            // per-proc generator cannot sample from (its pool scan would
+            // never terminate); reject it here instead of at trace time.
+            if n as u64 == 0 {
+                return Err(ConfigError(
+                    "platform.procs must be >= 1 for the per-processor fault \
+                     model (use model = \"platform\" for the renewal model)"
+                        .into(),
+                ));
+            }
+            FaultModel::PerProcessor { n: n as u64 }
+        }
     };
     Ok(Scenario { platform, predictor, fault_law, false_pred_law, fault_model, job_size })
 }
@@ -663,5 +675,28 @@ model = "biased(beta=2)"
             s.predictor.model,
             PredModel::Classed { p_hi: 0.95, p_lo: 0.6, frac: 0.5 }
         );
+    }
+
+    #[test]
+    fn zero_procs_per_proc_model_is_rejected() {
+        // `procs = 0` under the per-processor fault model used to build a
+        // zero-processor pool whose generator looped forever; it is a
+        // config error now.  `mu` is given explicitly so the rejection is
+        // exercised on the fault-model path, not the μ derivation.
+        let err = scenario_from_str(
+            "[platform]\nprocs = 0\nmu = 60134.0\njob_size = 1e6\n\
+             [predictor]\nrecall = 0.85\nprecision = 0.82\nwindow = 900\n",
+        )
+        .unwrap_err();
+        assert!(err.0.contains("procs must be >= 1"), "{}", err.0);
+        // The explicit platform-renewal model never builds a pool, so the
+        // same count stays accepted there.
+        let s = scenario_from_str(
+            "[platform]\nprocs = 0\nmu = 60134.0\njob_size = 1e6\n\
+             [predictor]\nrecall = 0.85\nprecision = 0.82\nwindow = 900\n\
+             [laws]\nmodel = \"platform\"\n",
+        )
+        .unwrap();
+        assert_eq!(s.fault_model, FaultModel::PlatformRenewal);
     }
 }

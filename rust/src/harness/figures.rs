@@ -182,6 +182,7 @@ pub fn run_waste_vs_n(
         windows: PAPER_WINDOWS.to_vec(),
         strategies: registry::paper_set(),
         scale: 1.0,
+        platform_shards: vec![1],
     };
     let rows = waste_rows_via_campaign(spec.id, &grid, instances, best_period_seeds);
     write_csv(&format!("fig{}", spec.id), WASTE_HEADER, &rows)?;
@@ -316,6 +317,7 @@ pub fn run_waste_vs_i(
         windows: I_SWEEP.to_vec(),
         strategies: registry::paper_set(),
         scale: 1.0,
+        platform_shards: vec![1],
     };
     let rows = waste_rows_via_campaign(spec.id, &grid, instances, best_period_seeds);
     write_csv(&format!("fig{}", spec.id), WASTE_HEADER, &rows)?;

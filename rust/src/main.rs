@@ -99,6 +99,8 @@ COMMANDS
                [--laws exponential,weibull0.7,lognormal1.2]
                [--predictors a,b,biased(beta=2),...] [--windows 300,600,...]
                [--strategies daly,rfo,nockpt,exactpred,qtrust(q=0.5),...]
+               [--shards 1,4,...]  (platform-shards axis: split each
+               per-processor platform into S merged sub-sources)
                run executes the grid and streams per-cell JSONL results
                (refusing to clobber a non-empty store without --force);
                resume skips cells already in the store; report prints it
@@ -112,7 +114,12 @@ COMMANDS
                [--out results/conformance.jsonl] [--resume]
                [--json CONFORMANCE.json] + the campaign axis overrides
                (--procs, --laws, --predictors, --windows, --strategies,
-               --cp-ratios, --scale)
+               --cp-ratios, --scale, --shards)
+               --scale-check runs the platform-rate scale guard instead:
+               measured superposed fault rate vs the 1/mu approximation at
+               N = 10^4..10^6 (stationary must conform, fresh Weibull k<1
+               must flag platform_rate_nonconforming)
+               [--seeds 6] [--horizon-mtbfs 150]
   metrics      telemetry snapshot + waste-accounting audit: metered
                campaign throughput (cells/s, events/s, pool hit-rate),
                per-simulation counter-vs-outcome audit (decomposed times
@@ -663,6 +670,11 @@ fn apply_grid_overrides(grid: &mut ckptwin::campaign::Grid, args: &Args) -> Resu
     use ckptwin::strategy::registry;
     if let Some(raw) = args.get_str("procs") {
         grid.procs = parse_list(raw, "procs", str::parse::<u64>)?;
+        // N = 0 has no per-processor trace (an empty pool cannot fail);
+        // config files reject it too (`config::scenario_from_str`).
+        if grid.procs.contains(&0) {
+            return Err(anyhow!("--procs values must be >= 1"));
+        }
     }
     if let Some(raw) = args.get_str("cp-ratios") {
         grid.cp_ratios = parse_list(raw, "cp-ratio", str::parse::<f64>)?;
@@ -690,6 +702,12 @@ fn apply_grid_overrides(grid: &mut ckptwin::campaign::Grid, args: &Args) -> Resu
         grid.scale = raw
             .parse::<f64>()
             .map_err(|e| anyhow!("bad scale '{raw}': {e}"))?;
+    }
+    if let Some(raw) = args.get_str("shards") {
+        grid.platform_shards = parse_list(raw, "shards", str::parse::<u32>)?;
+        if grid.platform_shards.contains(&0) {
+            return Err(anyhow!("--shards values must be >= 1"));
+        }
     }
     if args.has("uniform-fp") {
         grid.uniform_false_preds = true;
@@ -809,6 +827,9 @@ fn cmd_campaign(args: &Args) -> Result<()> {
 fn cmd_validate(args: &Args) -> Result<()> {
     use ckptwin::validate::{self, ConformanceStore, SweepOptions, Verdict};
 
+    if args.has("scale-check") {
+        return cmd_validate_scale(args);
+    }
     let smoke = args.has("smoke") || args.get_str("grid") == Some("smoke");
     let mut grid = match args.get_str("grid").unwrap_or(if smoke {
         "smoke"
@@ -905,6 +926,88 @@ fn cmd_validate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ckptwin validate --scale-check`: the platform-rate scale guard
+/// ([`ckptwin::validate::domain::platform_rate_check`]) swept over
+/// N = 10^4..10^6.  At every N the measured superposed fault rate of the
+/// stationary (and exponential) per-processor traces must match the `1/μ`
+/// the closed forms assume, while fresh Weibull k < 1 traces must land in
+/// the named `platform_rate_nonconforming` regime (their infant-mortality
+/// transient runs hot of 1/μ over job-sized horizons).  Exits non-zero
+/// when any row disagrees with its expected regime.
+fn cmd_validate_scale(args: &Args) -> Result<()> {
+    use ckptwin::validate::domain::{self, PLATFORM_RATE_TOL};
+
+    // Defaults put the conforming rows' sampling noise well inside the
+    // tolerance: 6 seeds × 150 MTBFs ≈ 900 faults per row ⇒ σ ≈ 3.3%,
+    // three σ under PLATFORM_RATE_TOL.
+    let seeds: u64 = args.get_or("seeds", 6u64);
+    let horizon: f64 = args.get_or("horizon-mtbfs", 150.0);
+    println!(
+        "platform-rate scale conformance: tol {PLATFORM_RATE_TOL}, {seeds} seeds, \
+         horizon {horizon} platform MTBFs"
+    );
+    println!(
+        "{:>9} {:<22} {:>12} {:>12} {:>9}  verdict",
+        "procs", "trace", "measured", "nominal", "rel_err"
+    );
+    let mut failures = 0usize;
+    for n in [10_000u64, 100_000, 1_000_000] {
+        let rows: [(&str, Law, FaultModel, bool); 3] = [
+            (
+                "exponential fresh",
+                Law::Exponential,
+                FaultModel::PerProcessor { n },
+                true,
+            ),
+            (
+                "weibull0.7 stationary",
+                Law::Weibull { shape: 0.7 },
+                FaultModel::PerProcessorStationary { n },
+                true,
+            ),
+            (
+                "weibull0.7 fresh",
+                Law::Weibull { shape: 0.7 },
+                FaultModel::PerProcessor { n },
+                false,
+            ),
+        ];
+        for (name, law, fm, must_conform) in rows {
+            let mut sc =
+                Scenario::paper(n, 1.0, PredictorSpec::paper_a(600.0), law, law);
+            sc.fault_model = fm;
+            let chk = domain::platform_rate_check(&sc, seeds, horizon, PLATFORM_RATE_TOL);
+            let ok = chk.verdict.is_none() == must_conform;
+            if !ok {
+                failures += 1;
+            }
+            println!(
+                "{:>9} {:<22} {:>12.5e} {:>12.5e} {:>9.4}  {}{}",
+                n,
+                name,
+                chk.measured_rate,
+                chk.nominal_rate,
+                chk.rel_err,
+                match chk.verdict {
+                    None => "conforms",
+                    Some(v) => v.label(),
+                },
+                if ok { "" } else { "  <-- unexpected" },
+            );
+        }
+    }
+    if failures > 0 {
+        return Err(anyhow!(
+            "{failures} scale rows disagreed with their expected regime"
+        ));
+    }
+    println!(
+        "scale conformance holds: stationary/exponential traces match 1/mu, \
+         fresh Weibull k<1 flags platform_rate_nonconforming"
+    );
+    Ok(())
+}
+
 /// Assemble a JSON object from `(key, value)` pairs — the `METRICS.json`
 /// section builder (`cmd_metrics`).
 fn json_obj(pairs: Vec<(&str, ckptwin::jsonio::Value)>) -> ckptwin::jsonio::Value {
@@ -972,6 +1075,13 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     reg.add("campaign.pool_hits", m.pool_hits);
     reg.add("campaign.pool_misses", m.pool_misses);
     reg.add("campaign.pool_evictions", m.pool_evictions);
+    // Scale-out health: timer-wheel work per generated fault event and
+    // shard-merge traffic (zero on platform-renewal grids, whose traces
+    // never run a wheel).
+    reg.add("campaign.wheel_pops", m.wheel_pops);
+    reg.add("campaign.wheel_bucket_scans", m.wheel_bucket_scans);
+    reg.add("campaign.wheel_overflow_promotions", m.wheel_overflow_promotions);
+    reg.add("campaign.shard_merges", m.shard_merges);
     reg.set_gauge("campaign.elapsed_secs", m.elapsed_secs);
     reg.set_gauge("campaign.cells_per_sec", m.cells_per_sec());
     reg.set_gauge("campaign.events_per_sec", m.events_per_sec());
@@ -1000,6 +1110,18 @@ fn cmd_metrics(args: &Args) -> Result<()> {
                 ("misses", Value::Num(m.pool_misses as f64)),
                 ("evictions", Value::Num(m.pool_evictions as f64)),
                 ("hit_rate", Value::Num(m.pool_hit_rate())),
+            ]),
+        ),
+        (
+            "wheel",
+            obj(vec![
+                ("pops", Value::Num(m.wheel_pops as f64)),
+                ("bucket_scans", Value::Num(m.wheel_bucket_scans as f64)),
+                (
+                    "overflow_promotions",
+                    Value::Num(m.wheel_overflow_promotions as f64),
+                ),
+                ("shard_merges", Value::Num(m.shard_merges as f64)),
             ]),
         ),
     ]);

@@ -33,10 +33,22 @@
 //!   tests and baselines (and by the coordinator, which is not hot).
 //! * [`FlatTrace`] — the fast path: batched generation into flat,
 //!   time-sorted `Vec<Event>` buffers (one horizon's worth of faults and
-//!   false predictions per batch, two-pointer merged).  The only heap left
-//!   is the one inside the per-processor Weibull superposition, where it is
-//!   genuinely needed.  With buffers recycled through a [`TraceArena`],
-//!   steady-state simulation performs zero allocations per event.
+//!   false predictions per batch, two-pointer merged).  The per-processor
+//!   Weibull superposition runs on a two-level timer wheel (`PerProcWheel`)
+//!   instead of a heap: O(1) amortized insert/pop for the near-monotone
+//!   renewal workload, struct-of-arrays buckets scanned linearly instead
+//!   of pointer-chasing sift-downs.  With buffers (including the wheel's,
+//!   see [`WheelBufs`]) recycled through a [`TraceArena`], steady-state
+//!   simulation performs zero allocations per event.  The heap-based
+//!   `PerProcSource` stays as the reference implementation inside
+//!   [`TraceStream`]; `tests/fast_path.rs` and `tests/scale.rs` pin the
+//!   two bit-identical (same RNG draw order).
+//!
+//! For platforms too large for one source, a sharded source (see
+//! [`TraceCache::sharded`]) splits the processor pool into per-shard wheel
+//! sources with derived seed streams and merges their heads — the campaign
+//! layer uses this to spread one 10^6-proc platform across workers (see
+//! DESIGN.md §Platform scale-out).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -160,12 +172,20 @@ impl Ord for OrdF64 {
 ///
 /// Processors are i.i.d., so un-failed processors need no individual state:
 /// the source keeps (i) a *pool count* of processors whose first failure
-/// lies beyond the materialization `horizon`, and (ii) a min-heap of
-/// materialized failure times.  Extending the horizon thins the pool with
-/// geometric skipping over the conditional failure probability — O(number
-/// of failures), never O(n).  Every popped failure pushes that processor's
-/// next renewal (a fresh Weibull lifetime from the failure instant).
-struct PerProcSource {
+/// lies beyond the materialization `horizon`, and (ii) a priority structure
+/// of materialized failure times.  Extending the horizon thins the pool
+/// with geometric skipping over the conditional failure probability —
+/// O(number of failures), never O(n).  Every popped failure pushes that
+/// processor's next renewal (a fresh Weibull lifetime from the failure
+/// instant).
+///
+/// The sampling math and RNG draw order live here; the priority structure
+/// is supplied by the wrapper ([`PerProcSource`]'s `BinaryHeap` or
+/// [`PerProcWheel`]'s timer wheel).  Because `extend_into` draws the RNG in
+/// pool-index order — independent of where the failure times are stored —
+/// and every pop draws exactly one renewal, any wrapper that pops times in
+/// ascending `total_cmp` order produces a bit-identical platform trace.
+struct PerProcCore {
     rng: Rng,
     shape: f64,
     /// Per-processor Weibull scale λ_ind = μ_ind / Γ(1 + 1/k).
@@ -174,10 +194,30 @@ struct PerProcSource {
     pool: u64,
     horizon: f64,
     step: f64,
-    heap: BinaryHeap<OrdF64>,
 }
 
-impl PerProcSource {
+/// Advance the geometric-skipping cursor: from processor index `i`, skip
+/// `skip_f` non-failing processors (an f64 sampled as floor(lnU/ln(1-q))).
+/// Returns the index of the next failing processor, or `None` when the
+/// skip leaves the pool.  Integer-exact at any pool size: comparing
+/// `i as f64 + skip_f >= pool as f64` in f64 loses precision once indices
+/// exceed 2^53, silently failing (or double-counting) processors on
+/// ≥ petascale pools, so the skip is saturated into u64 arithmetic first.
+fn advance_index(i: u64, skip_f: f64, pool: u64) -> Option<u64> {
+    if !skip_f.is_finite() || skip_f < 0.0 {
+        return None;
+    }
+    // Saturate: any skip beyond u64::MAX is beyond every real pool.
+    let skip = if skip_f >= u64::MAX as f64 { u64::MAX } else { skip_f as u64 };
+    let idx = i.checked_add(skip)?;
+    if idx >= pool {
+        None
+    } else {
+        Some(idx)
+    }
+}
+
+impl PerProcCore {
     fn new(
         n: u64,
         shape: f64,
@@ -186,7 +226,11 @@ impl PerProcSource {
         rng: Rng,
         stationary: bool,
     ) -> Self {
-        PerProcSource {
+        // n = 0 has no failure to materialize, ever: next() would loop
+        // forever extending the horizon.  Rejected at config parse and CLI
+        // too; this is the last line of defence for programmatic callers.
+        assert!(n > 0, "per-processor fault model requires n >= 1 processors");
+        PerProcCore {
             rng,
             shape,
             lambda: mu_ind / gamma(1.0 + 1.0 / shape),
@@ -194,7 +238,6 @@ impl PerProcSource {
             pool: n,
             horizon: 0.0,
             step: step.max(1.0),
-            heap: BinaryHeap::new(),
         }
     }
 
@@ -235,8 +278,10 @@ impl PerProcSource {
         0.5 * (lo + hi)
     }
 
-    /// Materialize all pool (first-)failures in (horizon, horizon + step].
-    fn extend(&mut self) {
+    /// Materialize all pool (first-)failures in (horizon, horizon + step],
+    /// handing each failure time to `push`.  Called by the wrapper when its
+    /// structure holds nothing at or before the horizon.
+    fn extend_into(&mut self, mut push: impl FnMut(f64)) {
         let h1 = self.horizon;
         let h2 = self.horizon + self.step;
         let (s1, s2) = (self.pool_survival(h1), self.pool_survival(h2));
@@ -251,7 +296,7 @@ impl PerProcSource {
             for _ in 0..self.pool {
                 let u = self.rng.f64();
                 let target = s1 - u * (s1 - s2);
-                self.heap.push(OrdF64(self.invert_survival(h1, h2, target)));
+                push(self.invert_survival(h1, h2, target));
             }
             self.pool = 0;
             return;
@@ -263,16 +308,15 @@ impl PerProcSource {
         loop {
             let u = self.rng.f64_open();
             let skip = (u.ln() / ln1q).floor();
-            if !skip.is_finite() || i as f64 + skip >= self.pool as f64 {
+            let Some(idx) = advance_index(i, skip, self.pool) else {
                 break;
-            }
-            i += skip as u64;
-            // Processor i fails in (h1, h2]; inverse-CDF its failure time.
+            };
+            // Processor idx fails in (h1, h2]; inverse-CDF its failure time.
             let u2 = self.rng.f64();
             let target = s1 - u2 * (s1 - s2);
-            self.heap.push(OrdF64(self.invert_survival(h1, h2, target)));
+            push(self.invert_survival(h1, h2, target));
             failures += 1;
-            i += 1;
+            i = idx + 1;
             if i >= self.pool {
                 break;
             }
@@ -280,22 +324,370 @@ impl PerProcSource {
         self.pool -= failures;
     }
 
+    /// The failed processor's next renewal: a fresh Weibull lifetime from
+    /// the failure instant `t`.  Exactly one RNG draw per pop — part of the
+    /// bit-identity contract between wrappers.
+    #[inline]
+    fn renew(&mut self, t: f64) -> f64 {
+        let u = self.rng.f64_open();
+        t + self.lambda * (-u.ln()).powf(1.0 / self.shape)
+    }
+}
+
+/// Heap-backed per-processor superposition — the reference implementation
+/// (used by [`TraceStream`]; [`FlatTrace`] runs the wheel).
+struct PerProcSource {
+    core: PerProcCore,
+    heap: BinaryHeap<OrdF64>,
+}
+
+impl PerProcSource {
+    fn new(
+        n: u64,
+        shape: f64,
+        mu_ind: f64,
+        step: f64,
+        rng: Rng,
+        stationary: bool,
+    ) -> Self {
+        PerProcSource {
+            core: PerProcCore::new(n, shape, mu_ind, step, rng, stationary),
+            heap: BinaryHeap::new(),
+        }
+    }
+
     /// Next platform failure time (monotone non-decreasing).
     fn next(&mut self) -> f64 {
         loop {
             if let Some(&OrdF64(t)) = self.heap.peek() {
-                if t <= self.horizon || self.pool == 0 {
+                if t <= self.core.horizon || self.core.pool == 0 {
                     self.heap.pop();
-                    // The failed processor renews fresh from t.
-                    let u = self.rng.f64_open();
-                    let renewal =
-                        t + self.lambda * (-u.ln()).powf(1.0 / self.shape);
+                    let renewal = self.core.renew(t);
                     self.heap.push(OrdF64(renewal));
                     return t;
                 }
             }
-            self.extend();
+            let Self { core, heap } = self;
+            core.extend_into(|t| heap.push(OrdF64(t)));
         }
+    }
+}
+
+/// Number of buckets per wheel level.  256 level-0 buckets of width
+/// `step/64` give a level-0 span of 4 materialization steps; 256 level-1
+/// buckets of that span cover 1024 steps before anything lands in the
+/// unsorted far-future overflow.
+const WHEEL_BUCKETS: usize = 256;
+
+/// The recyclable struct-of-arrays storage of a [`PerProcWheel`]: two
+/// rings of flat time buckets plus the far-future overflow vector.
+/// Travels through [`TraceBufs`] / [`TraceArena`] so repeated simulations
+/// reuse the bucket allocations — zero per-event allocation at
+/// steady state, like the event buffers.
+#[derive(Default)]
+pub struct WheelBufs {
+    level0: Vec<Vec<f64>>,
+    level1: Vec<Vec<f64>>,
+    far: Vec<f64>,
+}
+
+impl WheelBufs {
+    fn reset(&mut self) {
+        self.level0.resize_with(WHEEL_BUCKETS, Vec::new);
+        self.level1.resize_with(WHEEL_BUCKETS, Vec::new);
+        for b in self.level0.iter_mut().chain(self.level1.iter_mut()) {
+            b.clear();
+        }
+        self.far.clear();
+    }
+}
+
+/// Scale-out health counters of a timer wheel (see
+/// `obs::MetricsRegistry` wiring in `ckptwin metrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WheelStats {
+    /// Failure times popped off the wheel.
+    pub pops: u64,
+    /// Empty level-0 buckets skipped while seeking the next event
+    /// (amortized cost driver: bucket scans per event).
+    pub bucket_scans: u64,
+    /// Items moved down from level 1 or redistributed from the far-future
+    /// overflow during a rebase.
+    pub overflow_promotions: u64,
+    /// Failure times currently resident in the wheel.
+    pub occupancy: u64,
+}
+
+/// Two-level timer wheel over failure times: the calendar-queue
+/// replacement for the per-processor `BinaryHeap`.
+///
+/// Layout: level 0 is a ring of [`WHEEL_BUCKETS`] buckets of width
+/// `g = step/64` starting at `base0`; level 1 is a ring of
+/// [`WHEEL_BUCKETS`] coarse buckets of width `span0 = 256·g` starting at
+/// `base1`; times at or beyond `base1 + span1` wait unsorted in `far`.
+/// Insert is O(1): two subtract-divide-index steps.  Pop drains the active
+/// level-0 bucket (sorted on activation — buckets are small, a handful of
+/// renewals each), advances across empty buckets, promotes the next coarse
+/// bucket down when level 0 is exhausted, and rebases the whole wheel onto
+/// `min(far)` when both levels run dry.
+///
+/// Why ordering holds: every insert is ≥ the last popped time (renewals
+/// strictly advance; `extend_into` only materializes beyond the old
+/// horizon, and pops stop at the horizon while the pool is non-empty), so
+/// nothing ever lands behind the cursor; and the far boundary
+/// `base1 + span1` is fixed between full rebases, so every far-resident
+/// time exceeds every level-resident time.
+struct TimerWheel {
+    g: f64,
+    span0: f64,
+    span1: f64,
+    base0: f64,
+    base1: f64,
+    /// Active level-0 bucket (index into `bufs.level0`).
+    cur0: usize,
+    /// Next level-1 coarse bucket to promote.  Invariant:
+    /// `base0 = base1 + (cur1 - 1)·span0`.
+    cur1: usize,
+    /// Consumed prefix of the active (sorted) level-0 bucket.
+    pos: usize,
+    active_sorted: bool,
+    len: u64,
+    bufs: WheelBufs,
+    stats: WheelStats,
+}
+
+impl TimerWheel {
+    fn new(step: f64, mut bufs: WheelBufs) -> Self {
+        bufs.reset();
+        let g = step / 64.0;
+        let span0 = g * WHEEL_BUCKETS as f64;
+        TimerWheel {
+            g,
+            span0,
+            span1: span0 * WHEEL_BUCKETS as f64,
+            base0: 0.0,
+            base1: 0.0,
+            cur0: 0,
+            cur1: 1,
+            pos: 0,
+            active_sorted: false,
+            len: 0,
+            bufs,
+            stats: WheelStats::default(),
+        }
+    }
+
+    /// File `t` into its bucket (no length bookkeeping — see [`insert`]).
+    fn place(&mut self, t: f64) {
+        let rel0 = t - self.base0;
+        if rel0 < self.span0 {
+            // Clamps absorb float rounding at bucket edges: an index below
+            // the cursor (t at the very start of the active bucket) joins
+            // the active bucket; an index of WHEEL_BUCKETS (t at the very
+            // end of the span) joins the last bucket.
+            let idx = ((rel0 / self.g) as usize)
+                .min(WHEEL_BUCKETS - 1)
+                .max(self.cur0);
+            if idx == self.cur0 && self.active_sorted {
+                // Same-bucket renewal: keep the consumed-prefix invariant
+                // by sorted-inserting into the unconsumed tail.
+                let tail = &self.bufs.level0[idx][self.pos..];
+                let at = self.pos
+                    + tail.partition_point(|x| x.total_cmp(&t) == Ordering::Less);
+                self.bufs.level0[idx].insert(at, t);
+            } else {
+                self.bufs.level0[idx].push(t);
+            }
+            return;
+        }
+        let rel1 = t - self.base1;
+        if rel1 < self.span1 {
+            let idx = ((rel1 / self.span0) as usize)
+                .min(WHEEL_BUCKETS - 1)
+                .max(self.cur1);
+            self.bufs.level1[idx].push(t);
+            return;
+        }
+        self.bufs.far.push(t);
+    }
+
+    fn insert(&mut self, t: f64) {
+        self.place(t);
+        self.len += 1;
+    }
+
+    /// Earliest resident time, or `None` when the wheel is empty.  Pops in
+    /// ascending `total_cmp` order — the heap-equivalence contract.
+    fn pop_min(&mut self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            // Drain the active level-0 bucket.
+            while self.cur0 < WHEEL_BUCKETS {
+                let bucket = &mut self.bufs.level0[self.cur0];
+                if self.pos < bucket.len() {
+                    if !self.active_sorted {
+                        bucket.sort_unstable_by(|a, b| a.total_cmp(b));
+                        self.active_sorted = true;
+                    }
+                    let t = bucket[self.pos];
+                    self.pos += 1;
+                    self.len -= 1;
+                    self.stats.pops += 1;
+                    return Some(t);
+                }
+                bucket.clear();
+                self.pos = 0;
+                self.active_sorted = false;
+                self.cur0 += 1;
+                self.stats.bucket_scans += 1;
+            }
+            // Level 0 exhausted: promote the next non-empty coarse bucket.
+            while self.cur1 < WHEEL_BUCKETS && self.bufs.level1[self.cur1].is_empty()
+            {
+                self.cur1 += 1;
+                self.stats.bucket_scans += 1;
+            }
+            if self.cur1 < WHEEL_BUCKETS {
+                let j = self.cur1;
+                self.base0 = self.base1 + j as f64 * self.span0;
+                self.cur0 = 0;
+                self.pos = 0;
+                self.active_sorted = false;
+                self.cur1 = j + 1;
+                let items = std::mem::take(&mut self.bufs.level1[j]);
+                self.stats.overflow_promotions += items.len() as u64;
+                for t in &items {
+                    let idx =
+                        (((t - self.base0) / self.g) as usize).min(WHEEL_BUCKETS - 1);
+                    self.bufs.level0[idx].push(*t);
+                }
+                // Hand the emptied coarse bucket's allocation back.
+                self.bufs.level1[j] = { let mut v = items; v.clear(); v };
+                continue;
+            }
+            // Both levels dry: rebase the wheel onto the far-future
+            // overflow (len > 0 guarantees it is non-empty).
+            let start = self
+                .bufs
+                .far
+                .iter()
+                .copied()
+                .min_by(|a, b| a.total_cmp(b))
+                .expect("wheel len > 0 with empty levels implies far items");
+            self.base0 = start;
+            self.base1 = start;
+            self.cur0 = 0;
+            self.cur1 = 1;
+            self.pos = 0;
+            self.active_sorted = false;
+            let far = std::mem::take(&mut self.bufs.far);
+            self.stats.overflow_promotions += far.len() as u64;
+            for t in far {
+                self.place(t);
+            }
+        }
+    }
+}
+
+/// Wheel-backed per-processor superposition: the same sampling core (and
+/// the same RNG draw order — bit-identical platform trace) as
+/// [`PerProcSource`], with the `BinaryHeap` replaced by a [`TimerWheel`].
+struct PerProcWheel {
+    core: PerProcCore,
+    wheel: TimerWheel,
+}
+
+impl PerProcWheel {
+    fn new(
+        n: u64,
+        shape: f64,
+        mu_ind: f64,
+        step: f64,
+        rng: Rng,
+        stationary: bool,
+        bufs: WheelBufs,
+    ) -> Self {
+        let core = PerProcCore::new(n, shape, mu_ind, step, rng, stationary);
+        let wheel = TimerWheel::new(core.step, bufs);
+        PerProcWheel { core, wheel }
+    }
+
+    /// Next platform failure time — the exact pop/renew/extend protocol of
+    /// [`PerProcSource::next`].
+    fn next(&mut self) -> f64 {
+        loop {
+            if let Some(t) = self.peek() {
+                if t <= self.core.horizon || self.core.pool == 0 {
+                    let t = self.wheel.pop_min().expect("peeked");
+                    let renewal = self.core.renew(t);
+                    self.wheel.insert(renewal);
+                    return t;
+                }
+            }
+            let Self { core, wheel } = self;
+            core.extend_into(|t| wheel.insert(t));
+        }
+    }
+
+    /// Earliest resident time without consuming it.
+    fn peek(&mut self) -> Option<f64> {
+        // pop_min leaves the popped value at `pos - 1` of the active
+        // bucket; rewinding the consumed prefix un-pops it.
+        let t = self.wheel.pop_min()?;
+        self.wheel.pos -= 1;
+        self.wheel.len += 1;
+        self.wheel.stats.pops -= 1;
+        Some(t)
+    }
+
+    fn stats(&self) -> WheelStats {
+        WheelStats { occupancy: self.wheel.len, ..self.wheel.stats }
+    }
+
+    /// Recover the bucket storage for recycling.
+    fn into_bufs(self) -> WheelBufs {
+        self.wheel.bufs
+    }
+}
+
+/// Derive shard `j`'s seed from the trace seed: a splitmix-style avalanche
+/// of (seed, shard index), so per-shard `Rng::stream(...)` streams are
+/// decorrelated from each other and from the unsharded stream.
+fn shard_seed(seed: u64, shard: u32) -> u64 {
+    let mut z = seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(shard as u64 + 1);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// S independent wheel sub-sources over a partition of the processor pool,
+/// merged by a linear min-scan over their head times.  The superposition
+/// of the S sub-superpositions is distributed identically to the single
+/// n-processor source (processors are i.i.d.), but draws different RNG
+/// streams — a shards ≠ 1 cell is its own trace definition, keyed by the
+/// campaign's `;shards=` axis.
+struct ShardedSource {
+    subs: Vec<PerProcWheel>,
+    /// Next undelivered failure time of each sub-source.
+    heads: Vec<f64>,
+    merges: u64,
+}
+
+impl ShardedSource {
+    fn next(&mut self) -> f64 {
+        // Linear min over S heads; ties break to the lowest shard index.
+        let mut k = 0;
+        for (j, t) in self.heads.iter().enumerate().skip(1) {
+            if t.total_cmp(&self.heads[k]) == Ordering::Less {
+                k = j;
+            }
+        }
+        let t = self.heads[k];
+        self.heads[k] = self.subs[k].next();
+        self.merges += 1;
+        t
     }
 }
 
@@ -303,58 +695,120 @@ impl PerProcSource {
 enum FaultSource {
     /// Single renewal process at the platform level.
     Platform { dist: Distribution, rng: Rng, last: f64 },
-    /// Per-processor superposition (fresh Weibull processes).
+    /// Per-processor superposition — heap reference implementation.
     PerProc(PerProcSource),
+    /// Per-processor superposition — timer-wheel fast path.
+    Wheel(PerProcWheel),
+    /// Per-shard wheel sources merged by head time.
+    Sharded(ShardedSource),
 }
 
 impl FaultSource {
-    /// Build the scenario's fault arrival process.  Shared by the heap
-    /// reference stream and the flat fast path — identical wiring (same
-    /// RNG stream ids, same model dispatch) is what keeps the two
-    /// bit-identical.
-    fn for_scenario(scenario: &Scenario, seed: u64) -> FaultSource {
-        let mu = scenario.platform.mu;
+    /// The per-processor superposition parameters of a scenario:
+    /// `(n, shape, stationary)` — or `None` when the scenario runs a
+    /// platform-level renewal process.
+    ///
+    /// A superposition of (fresh or stationary) exponential processes IS a
+    /// Poisson process of rate n/μ_ind = 1/μ — the cheap platform
+    /// equivalent is used.  LogNormal has no per-processor superposition
+    /// implemented (the pool-thinning source is Weibull-specific), so it
+    /// runs as a platform-level renewal process under every fault model
+    /// (see DESIGN.md §Fault-model).
+    fn per_proc_params(scenario: &Scenario) -> Option<(u64, f64, bool)> {
         match (scenario.fault_model, scenario.fault_law) {
-            // A superposition of (fresh or stationary) exponential
-            // processes IS a Poisson process of rate n/μ_ind = 1/μ — use
-            // the cheap equivalent.  LogNormal has no per-processor
-            // superposition implemented (the pool-thinning source is
-            // Weibull-specific), so it runs as a platform-level renewal
-            // process under every fault model (see DESIGN.md §Fault-model).
-            (FaultModel::PlatformRenewal, law)
-            | (FaultModel::PerProcessor { .. }, law @ Law::Exponential)
-            | (FaultModel::PerProcessor { .. }, law @ Law::Uniform)
-            | (FaultModel::PerProcessor { .. }, law @ Law::LogNormal { .. })
-            | (FaultModel::PerProcessorStationary { .. }, law @ Law::Exponential)
-            | (FaultModel::PerProcessorStationary { .. }, law @ Law::Uniform)
-            | (FaultModel::PerProcessorStationary { .. }, law @ Law::LogNormal { .. }) => {
-                FaultSource::Platform {
-                    dist: Distribution::new(law, mu),
-                    rng: Rng::stream(seed, 0xf4017),
-                    last: 0.0,
-                }
-            }
             (FaultModel::PerProcessor { n }, Law::Weibull { shape }) => {
-                FaultSource::PerProc(PerProcSource::new(
-                    n,
-                    shape,
-                    mu * n as f64, // μ_ind
-                    (scenario.job_size * 0.5).max(50.0 * mu),
-                    Rng::stream(seed, 0xf4017),
-                    false,
-                ))
+                Some((n, shape, false))
             }
             (FaultModel::PerProcessorStationary { n }, Law::Weibull { shape }) => {
-                FaultSource::PerProc(PerProcSource::new(
-                    n,
-                    shape,
-                    mu * n as f64,
-                    (scenario.job_size * 0.5).max(50.0 * mu),
-                    Rng::stream(seed, 0xf4017),
-                    true,
-                ))
+                Some((n, shape, true))
             }
+            _ => None,
         }
+    }
+
+    /// Platform-level renewal process (the non-superposed laws/models).
+    fn platform(scenario: &Scenario, seed: u64) -> FaultSource {
+        FaultSource::Platform {
+            dist: Distribution::new(scenario.fault_law, scenario.platform.mu),
+            rng: Rng::stream(seed, 0xf4017),
+            last: 0.0,
+        }
+    }
+
+    /// Materialization step of the per-processor sources: half the job (one
+    /// extension usually suffices) but at least 50 platform MTBFs.
+    fn step(scenario: &Scenario) -> f64 {
+        (scenario.job_size * 0.5).max(50.0 * scenario.platform.mu)
+    }
+
+    /// Build the scenario's fault arrival process — heap-backed reference
+    /// (the [`TraceStream`] seed path).  Shared wiring (same RNG stream
+    /// ids, same model dispatch) with the fast constructors below is what
+    /// keeps all paths bit-identical.
+    fn for_scenario(scenario: &Scenario, seed: u64) -> FaultSource {
+        match Self::per_proc_params(scenario) {
+            None => Self::platform(scenario, seed),
+            Some((n, shape, stationary)) => FaultSource::PerProc(PerProcSource::new(
+                n,
+                shape,
+                scenario.platform.mu * n as f64, // μ_ind
+                Self::step(scenario),
+                Rng::stream(seed, 0xf4017),
+                stationary,
+            )),
+        }
+    }
+
+    /// The fast-path equivalent of [`FaultSource::for_scenario`]: identical
+    /// RNG wiring, timer wheel instead of heap, recycled bucket storage.
+    fn for_scenario_fast(
+        scenario: &Scenario,
+        seed: u64,
+        bufs: WheelBufs,
+    ) -> FaultSource {
+        match Self::per_proc_params(scenario) {
+            None => Self::platform(scenario, seed),
+            Some((n, shape, stationary)) => FaultSource::Wheel(PerProcWheel::new(
+                n,
+                shape,
+                scenario.platform.mu * n as f64,
+                Self::step(scenario),
+                Rng::stream(seed, 0xf4017),
+                stationary,
+                bufs,
+            )),
+        }
+    }
+
+    /// Shard the scenario's processor pool into `shards` wheel sub-sources
+    /// with derived seeds (see [`shard_seed`]) and merge their heads.
+    /// Scenarios without a per-processor superposition (and `shards <= 1`)
+    /// fall back to the unsharded fast path — sharding only changes the
+    /// trace where a pool exists to split.
+    fn for_scenario_sharded(scenario: &Scenario, seed: u64, shards: u32) -> FaultSource {
+        let Some((n, shape, stationary)) = Self::per_proc_params(scenario) else {
+            return Self::platform(scenario, seed);
+        };
+        if shards <= 1 || u64::from(shards) >= n {
+            return Self::for_scenario_fast(scenario, seed, WheelBufs::default());
+        }
+        let s = u64::from(shards);
+        let mut subs = Vec::with_capacity(shards as usize);
+        for j in 0..shards {
+            // First n % S shards take the remainder processor each.
+            let n_j = n / s + u64::from(u64::from(j) < n % s);
+            subs.push(PerProcWheel::new(
+                n_j,
+                shape,
+                scenario.platform.mu * n as f64, // per-proc MTBF is global
+                Self::step(scenario),
+                Rng::stream(shard_seed(seed, j), 0xf4017),
+                stationary,
+                WheelBufs::default(),
+            ));
+        }
+        let heads = subs.iter_mut().map(PerProcWheel::next).collect();
+        FaultSource::Sharded(ShardedSource { subs, heads, merges: 0 })
     }
 
     fn next(&mut self) -> f64 {
@@ -364,6 +818,28 @@ impl FaultSource {
                 *last
             }
             FaultSource::PerProc(src) => src.next(),
+            FaultSource::Wheel(src) => src.next(),
+            FaultSource::Sharded(src) => src.next(),
+        }
+    }
+
+    /// Timer-wheel health counters (summed over shards), plus the shard
+    /// merge count — `None` for sources without a wheel.
+    fn wheel_stats(&self) -> Option<(WheelStats, u64)> {
+        match self {
+            FaultSource::Platform { .. } | FaultSource::PerProc(_) => None,
+            FaultSource::Wheel(src) => Some((src.stats(), 0)),
+            FaultSource::Sharded(src) => {
+                let mut agg = WheelStats::default();
+                for sub in &src.subs {
+                    let s = sub.stats();
+                    agg.pops += s.pops;
+                    agg.bucket_scans += s.bucket_scans;
+                    agg.overflow_promotions += s.overflow_promotions;
+                    agg.occupancy += s.occupancy;
+                }
+                Some((agg, src.merges))
+            }
         }
     }
 }
@@ -474,9 +950,13 @@ pub(crate) fn pred_gens(
 }
 
 /// The three substream generators of a trace, wired identically for every
-/// stream implementation ([`TraceStream`] and [`FlatTrace`]).
-fn trace_parts(scenario: &Scenario, seed: u64) -> (FaultSource, FaultGen, FpGen) {
-    let faults = FaultSource::for_scenario(scenario, seed);
+/// stream implementation ([`TraceStream`] and [`FlatTrace`]) — only the
+/// fault-source backing differs, and the backings are bit-identical.
+fn trace_parts_with(
+    scenario: &Scenario,
+    seed: u64,
+    faults: FaultSource,
+) -> (FaultSource, FaultGen, FpGen) {
     let (fault_gen, fp_gen) = pred_gens(
         &scenario.predictor,
         scenario.platform.cp,
@@ -485,6 +965,10 @@ fn trace_parts(scenario: &Scenario, seed: u64) -> (FaultSource, FaultGen, FpGen)
         seed,
     );
     (faults, fault_gen, fp_gen)
+}
+
+fn trace_parts(scenario: &Scenario, seed: u64) -> (FaultSource, FaultGen, FpGen) {
+    trace_parts_with(scenario, seed, FaultSource::for_scenario(scenario, seed))
 }
 
 /// Unbounded, lazily generated, time-sorted event stream (heap-merged
@@ -591,14 +1075,16 @@ impl<S: EventSource + ?Sized> EventSource for &mut S {
 }
 
 /// The reusable flat buffers of a [`FlatTrace`]: pending fault-substream
-/// events, pending false predictions, and the merged batch being emitted.
-/// Recycled through a [`TraceArena`] so repeated simulations allocate
-/// nothing once the buffers reach steady-state capacity.
+/// events, pending false predictions, the merged batch being emitted, and
+/// the timer wheel's bucket storage ([`WheelBufs`]).  Recycled through a
+/// [`TraceArena`] so repeated simulations allocate nothing once the
+/// buffers reach steady-state capacity.
 #[derive(Default)]
 pub struct TraceBufs {
     fault: Vec<Event>,
     fp: Vec<Event>,
     merged: Vec<Event>,
+    wheel: WheelBufs,
 }
 
 impl TraceBufs {
@@ -646,10 +1132,29 @@ impl FlatTrace {
     }
 
     /// [`FlatTrace::new`] reusing previously allocated buffers (see
-    /// [`TraceArena`]).
+    /// [`TraceArena`]).  The wheel bucket storage rides inside `bufs` and
+    /// is handed to the per-processor source when the scenario has one.
     pub fn with_bufs(scenario: &Scenario, seed: u64, mut bufs: TraceBufs) -> Self {
         bufs.clear();
-        let (faults, fault_gen, fp_gen) = trace_parts(scenario, seed);
+        let wheel_bufs = std::mem::take(&mut bufs.wheel);
+        let faults = FaultSource::for_scenario_fast(scenario, seed, wheel_bufs);
+        Self::from_source(scenario, seed, faults, bufs)
+    }
+
+    /// A [`FlatTrace`] whose platform is split into `shards` per-shard
+    /// wheel sources with derived seeds (see [`TraceCache::sharded`]).
+    pub fn sharded(scenario: &Scenario, seed: u64, shards: u32) -> Self {
+        let faults = FaultSource::for_scenario_sharded(scenario, seed, shards);
+        Self::from_source(scenario, seed, faults, TraceBufs::default())
+    }
+
+    fn from_source(
+        scenario: &Scenario,
+        seed: u64,
+        faults: FaultSource,
+        bufs: TraceBufs,
+    ) -> Self {
+        let (faults, fault_gen, fp_gen) = trace_parts_with(scenario, seed, faults);
         let lookback = scenario.predictor.max_window()
             + scenario.predictor.placement_slack();
         let cp = scenario.platform.cp;
@@ -668,9 +1173,21 @@ impl FlatTrace {
         }
     }
 
-    /// Recover the buffers for reuse (see [`TraceArena::recycle`]).
+    /// Recover the buffers for reuse (see [`TraceArena::recycle`]),
+    /// reclaiming the wheel's bucket storage when the source had one.
     pub fn into_bufs(self) -> TraceBufs {
-        self.bufs
+        let mut bufs = self.bufs;
+        if let FaultSource::Wheel(w) = self.faults {
+            bufs.wheel = w.into_bufs();
+        }
+        bufs
+    }
+
+    /// Timer-wheel health counters and shard merge count of the backing
+    /// fault source — `None` when the scenario runs a platform-level
+    /// renewal process or the heap reference.  See `ckptwin metrics`.
+    pub fn wheel_stats(&self) -> Option<(WheelStats, u64)> {
+        self.faults.wheel_stats()
     }
 
     /// Generate and merge the next non-empty batch of events.
@@ -793,12 +1310,32 @@ impl TraceCache {
         }
     }
 
+    /// A cache backed by a platform sharded into `shards` per-shard wheel
+    /// sources (see [`FlatTrace::sharded`]).  `shards <= 1` — or a
+    /// scenario without a per-processor pool to split — is exactly
+    /// [`TraceCache::new`].
+    pub fn sharded(scenario: &Scenario, seed: u64, shards: u32) -> Self {
+        TraceCache {
+            source: CacheSource::Fast(FlatTrace::sharded(scenario, seed, shards)),
+            events: Vec::new(),
+        }
+    }
+
     /// A cache backed by the heap-merged seed stream — baselines and
     /// golden equivalence tests only.
     pub fn reference(scenario: &Scenario, seed: u64) -> Self {
         TraceCache {
             source: CacheSource::Reference(TraceStream::new(scenario, seed)),
             events: Vec::new(),
+        }
+    }
+
+    /// Wheel/shard counters of the backing stream (see
+    /// [`FlatTrace::wheel_stats`]).
+    pub fn wheel_stats(&self) -> Option<(WheelStats, u64)> {
+        match &self.source {
+            CacheSource::Fast(s) => s.wheel_stats(),
+            CacheSource::Reference(_) => None,
         }
     }
 
@@ -841,6 +1378,25 @@ impl EventSource for Replay<'_> {
         let ev = self.cache.events[self.pos];
         self.pos += 1;
         ev
+    }
+}
+
+/// Measured platform fault rate (faults per second) of the scenario's
+/// trace over `[0, horizon)` — the *true* superposed process, as opposed
+/// to the `1/μ` approximation the closed forms assume.  Consumed by the
+/// scale-conformance guard (`validate::domain::platform_rate_check`),
+/// which compares the two at N = 10^4..10^6.
+pub fn measured_fault_rate(scenario: &Scenario, seed: u64, horizon: f64) -> f64 {
+    let mut ts = FlatTrace::new(scenario, seed);
+    let mut faults = 0u64;
+    loop {
+        let ev = ts.next_event();
+        if ev.time() >= horizon {
+            return faults as f64 / horizon;
+        }
+        if matches!(ev, Event::Fault { .. }) {
+            faults += 1;
+        }
     }
 }
 
@@ -1164,5 +1720,166 @@ mod tests {
         for _ in 0..3000 {
             assert_eq!(a.next_event(), b.next_event());
         }
+    }
+
+    #[test]
+    fn advance_index_is_integer_exact() {
+        // Plain in-range skip and the exact pool-boundary miss.
+        assert_eq!(advance_index(5, 3.0, 9), Some(8));
+        assert_eq!(advance_index(5, 4.0, 9), None);
+        assert_eq!(advance_index(0, 0.0, 1), Some(0));
+        // Non-finite and absurd skips leave the pool.
+        assert_eq!(advance_index(0, f64::INFINITY, 100), None);
+        assert_eq!(advance_index(0, 1e300, 1 << 60), None);
+        // At pool counts beyond 2^53 the old `i as f64 + skip >= pool as
+        // f64` comparison rounded (1<<60 - 1) + 0 up to the pool size and
+        // wrongly dropped the last processor.
+        assert_eq!(advance_index((1 << 60) - 1, 0.0, 1 << 60), Some((1 << 60) - 1));
+        assert_eq!(advance_index(u64::MAX - 1, 0.0, u64::MAX), Some(u64::MAX - 1));
+        assert_eq!(advance_index(u64::MAX, 5.0, u64::MAX), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "n >= 1")]
+    fn zero_processor_pool_is_rejected() {
+        // Regression: n = 0 used to loop forever in next(), extending the
+        // horizon with nothing to materialize.
+        PerProcSource::new(0, 0.7, 1e6, 1e4, Rng::new(1), false);
+    }
+
+    #[test]
+    fn wheel_source_matches_heap_source() {
+        // Unit-level wheel-vs-heap bit identity (the integration suite in
+        // tests/scale.rs covers the full law × convention × seed matrix).
+        for stationary in [false, true] {
+            let mut heap =
+                PerProcSource::new(1 << 14, 0.7, 6e7, 2e5, Rng::new(5), stationary);
+            let mut wheel = PerProcWheel::new(
+                1 << 14,
+                0.7,
+                6e7,
+                2e5,
+                Rng::new(5),
+                stationary,
+                WheelBufs::default(),
+            );
+            for k in 0..20_000 {
+                let (a, b) = (heap.next(), wheel.next());
+                assert!(a.to_bits() == b.to_bits(), "event {k}: {a} vs {b}");
+            }
+            let stats = wheel.stats();
+            assert_eq!(stats.pops, 20_000);
+            assert!(stats.occupancy > 0);
+        }
+    }
+
+    #[test]
+    fn timer_wheel_orders_across_levels_and_far_overflow() {
+        // Direct wheel exercise across all three tiers: level 0 (< 256),
+        // level 1 (< 65536) and the far-future overflow, with bucket-edge
+        // times and inserts interleaved with pops (every insert ≥ the last
+        // popped time, as the renewal workload guarantees).
+        let mut w = TimerWheel::new(64.0, WheelBufs::default()); // g=1
+        assert_eq!(w.span0, 256.0);
+        assert_eq!(w.span1, 65536.0);
+        let first = [
+            0.5, 3.0, 3.0, 7.25, 255.9, 256.0, 300.0, 1000.0, 65535.9, 65536.0,
+            1e9, 2e9,
+        ];
+        for &t in &first {
+            w.insert(t);
+        }
+        let mut expect: Vec<f64> = first.to_vec();
+        expect.sort_by(|a, b| a.total_cmp(b));
+        for want in expect.drain(..expect.len() - 5) {
+            assert_eq!(w.pop_min().unwrap().to_bits(), want.to_bits());
+        }
+        // Last popped was 300.0; interleave inserts at every tier, one of
+        // them into the just-drained active bucket's own range.
+        for t in [300.5, 64000.0, 70000.0, 3e9] {
+            w.insert(t);
+            expect.push(t);
+        }
+        expect.sort_by(|a, b| a.total_cmp(b));
+        for want in expect {
+            assert_eq!(w.pop_min().unwrap().to_bits(), want.to_bits());
+        }
+        assert!(w.pop_min().is_none());
+        assert_eq!(w.len, 0);
+        assert!(w.stats.overflow_promotions > 0, "far/level-1 path never exercised");
+        assert!(w.stats.bucket_scans > 0);
+        assert_eq!(w.stats.pops, 16);
+    }
+
+    #[test]
+    fn sharded_stream_is_deterministic_and_sorted() {
+        let sc = paper_scenario(FaultModel::PerProcessorStationary { n: 1 << 16 }, 0.7);
+        let horizon = 20.0 * sc.platform.mu;
+        let mut a = FlatTrace::sharded(&sc, 11, 4);
+        let mut b = FlatTrace::sharded(&sc, 11, 4);
+        let mut last = f64::NEG_INFINITY;
+        loop {
+            let (ea, eb) = (a.next_event(), b.next_event());
+            assert_eq!(ea, eb);
+            if ea.time() >= horizon {
+                break;
+            }
+            assert!(ea.time() >= last);
+            last = ea.time();
+        }
+        let (stats, merges) = a.wheel_stats().expect("sharded wheel");
+        assert!(merges > 0, "no shard merges counted");
+        assert!(stats.pops > 0);
+        // A different shard count is a different trace definition.
+        let e2 = FlatTrace::sharded(&sc, 11, 2).next_event();
+        let e4 = FlatTrace::sharded(&sc, 11, 4).next_event();
+        assert_ne!(e2, e4);
+    }
+
+    #[test]
+    fn sharded_rate_matches_unsharded() {
+        // Splitting an i.i.d. pool cannot change the platform rate: the
+        // stationary superposition stays at 1/μ for any shard count.
+        let sc = paper_scenario(FaultModel::PerProcessorStationary { n: 1 << 16 }, 0.7);
+        // ~1200 expected faults: sampling σ ≈ 2.9%, so the 10% tolerance
+        // sits beyond 3σ.
+        let horizon = 150.0 * sc.platform.mu;
+        let mut total = 0usize;
+        for seed in 0..8 {
+            let mut ts = FlatTrace::sharded(&sc, seed, 8);
+            loop {
+                let ev = ts.next_event();
+                if ev.time() >= horizon {
+                    break;
+                }
+                total += matches!(ev, Event::Fault { .. }) as usize;
+            }
+        }
+        let expected = 8.0 * horizon / sc.platform.mu;
+        let rel = (total as f64 - expected).abs() / expected;
+        assert!(rel < 0.10, "{total} vs {expected}");
+    }
+
+    #[test]
+    fn single_shard_equals_unsharded_fast_path() {
+        let sc = paper_scenario(FaultModel::PerProcessor { n: 1 << 16 }, 0.7);
+        let mut plain = FlatTrace::new(&sc, 3);
+        let mut one = FlatTrace::sharded(&sc, 3, 1);
+        for _ in 0..2000 {
+            assert_eq!(plain.next_event(), one.next_event());
+        }
+    }
+
+    #[test]
+    fn measured_rate_helper_agrees_with_stationary_theory() {
+        let sc = paper_scenario(FaultModel::PerProcessorStationary { n: 1 << 16 }, 0.7);
+        // 6 seeds × 200 MTBFs ≈ 1200 faults: σ ≈ 2.9% ⇒ 10% is > 3σ.
+        let horizon = 200.0 * sc.platform.mu;
+        let mut acc = 0.0;
+        for seed in 0..6 {
+            acc += measured_fault_rate(&sc, seed, horizon);
+        }
+        let rel = (acc / 6.0 * sc.platform.mu - 1.0).abs();
+        assert!(rel < 0.10, "mean rate·μ = {}", acc / 6.0 * sc.platform.mu);
     }
 }

@@ -74,6 +74,14 @@ pub enum Inapplicable {
     /// probability varies per announcement, while the q = 1 formulas
     /// assume every prediction is acted on.
     ConfidenceClasses,
+    /// The *measured* superposed platform fault rate disagrees with the
+    /// `1/μ_p` approximation the closed forms are evaluated at (found by
+    /// the N = 10^4..10^6 scale-conformance guard,
+    /// [`platform_rate_check`]).  Distinct from [`TransientFaultModel`],
+    /// which is the a-priori structural guard: this one is the a-posteriori
+    /// measurement — it fires when the trace itself proves the
+    /// approximation broken at the cell's platform scale.
+    PlatformRateNonconforming,
 }
 
 impl Inapplicable {
@@ -90,6 +98,7 @@ impl Inapplicable {
             Inapplicable::NonUniformWindow => "non_uniform_window",
             Inapplicable::NoisyWindowPlacement => "noisy_window_placement",
             Inapplicable::ConfidenceClasses => "confidence_classes",
+            Inapplicable::PlatformRateNonconforming => "platform_rate_nonconforming",
         }
     }
 
@@ -114,6 +123,7 @@ impl Inapplicable {
             "non_uniform_window" => Inapplicable::NonUniformWindow,
             "noisy_window_placement" => Inapplicable::NoisyWindowPlacement,
             "confidence_classes" => Inapplicable::ConfidenceClasses,
+            "platform_rate_nonconforming" => Inapplicable::PlatformRateNonconforming,
             _ => return None,
         })
     }
@@ -258,6 +268,61 @@ pub fn tolerance(
         + policy.curvature * x * x
         + renewal_excess_waste(sc, kind, tr)
         + policy.ci_mult * ci95
+}
+
+/// Default relative tolerance of the scale-conformance guard: the
+/// superposed platform rate may deviate from `1/μ_p` by this much before
+/// the closed forms' approximation counts as broken (generously above the
+/// sampling noise of the measurement horizons used).
+pub const PLATFORM_RATE_TOL: f64 = 0.10;
+
+/// One measurement of the scale-conformance guard (see
+/// [`platform_rate_check`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PlatformRateCheck {
+    /// Mean measured platform fault rate (faults/s) across the seeds.
+    pub measured_rate: f64,
+    /// The `1/μ_p` rate the closed forms assume (`config.rs` sets
+    /// `μ_p = μ_ind/N`).
+    pub nominal_rate: f64,
+    /// `|measured/nominal − 1|`.
+    pub rel_err: f64,
+    /// `Some(`[`Inapplicable::PlatformRateNonconforming`]`)` when the
+    /// deviation exceeds the tolerance — the named regime for cells whose
+    /// platform-scale trace breaks the approximation.
+    pub verdict: Option<Inapplicable>,
+}
+
+/// Scale-conformance guard: measure the scenario's *true* superposed
+/// platform fault rate over `horizon_mtbfs · μ` per seed and compare it
+/// against the `1/μ_p` approximation every closed form is evaluated at.
+///
+/// At any N the stationary superposition must conform (its rate is exactly
+/// `1/μ` by construction — a deviation is a generator bug); fresh Weibull
+/// k < 1 traces must *not* (the infant-mortality transient — this guard
+/// measuring the same break that [`Inapplicable::TransientFaultModel`]
+/// predicts structurally).  `ckptwin validate --scale` sweeps this at
+/// N = 10^4..10^6.
+pub fn platform_rate_check(
+    sc: &Scenario,
+    seeds: u64,
+    horizon_mtbfs: f64,
+    tol: f64,
+) -> PlatformRateCheck {
+    let horizon = horizon_mtbfs * sc.platform.mu;
+    let mut acc = 0.0;
+    for seed in 0..seeds.max(1) {
+        acc += crate::sim::trace::measured_fault_rate(sc, seed, horizon);
+    }
+    let measured_rate = acc / seeds.max(1) as f64;
+    let nominal_rate = 1.0 / sc.platform.mu;
+    let rel_err = (measured_rate / nominal_rate - 1.0).abs();
+    PlatformRateCheck {
+        measured_rate,
+        nominal_rate,
+        rel_err,
+        verdict: (rel_err > tol).then_some(Inapplicable::PlatformRateNonconforming),
+    }
 }
 
 #[cfg(test)]
@@ -416,10 +481,52 @@ mod tests {
             (Inapplicable::NonUniformWindow, "non_uniform_window"),
             (Inapplicable::NoisyWindowPlacement, "noisy_window_placement"),
             (Inapplicable::ConfidenceClasses, "confidence_classes"),
+            (
+                Inapplicable::PlatformRateNonconforming,
+                "platform_rate_nonconforming",
+            ),
         ] {
             assert_eq!(v.label(), label);
             assert_eq!(Inapplicable::parse(label), Some(v));
         }
+    }
+
+    #[test]
+    fn platform_rate_check_flags_fresh_weibull_transient() {
+        // Stationary superposition: the measured rate is 1/μ at any N, so
+        // the guard must conform.
+        let n = 1u64 << 14;
+        let mut stat = sc(
+            Law::Weibull { shape: 0.7 },
+            FaultModel::PerProcessorStationary { n },
+        );
+        // Pin μ_ind = μ·N explicitly so nominal 1/μ is the honest target.
+        // 6 seeds × 200 MTBFs ≈ 1200 faults: sampling σ ≈ 2.9%, so the
+        // 10% tolerance sits beyond 3σ of the conforming rate.
+        stat.platform.mu = 60_000.0;
+        let chk = platform_rate_check(&stat, 6, 200.0, PLATFORM_RATE_TOL);
+        assert!(
+            chk.verdict.is_none(),
+            "stationary rate must conform: rel_err {}",
+            chk.rel_err
+        );
+        assert!((chk.nominal_rate - 1.0 / 60_000.0).abs() < 1e-18);
+
+        // Fresh Weibull k < 1: every processor starts in its
+        // infant-mortality phase, so the early platform rate runs far hot
+        // of 1/μ — the named nonconforming regime.
+        let fresh = sc(
+            Law::Weibull { shape: 0.7 },
+            FaultModel::PerProcessor { n },
+        );
+        let chk = platform_rate_check(&fresh, 6, 200.0, PLATFORM_RATE_TOL);
+        assert_eq!(
+            chk.verdict,
+            Some(Inapplicable::PlatformRateNonconforming),
+            "fresh k<1 must break the μ_p approximation: rel_err {}",
+            chk.rel_err
+        );
+        assert!(chk.measured_rate > chk.nominal_rate);
     }
 
     #[test]

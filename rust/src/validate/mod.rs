@@ -158,6 +158,7 @@ pub fn default_grid() -> Grid {
             .filter(|s| !s.name().starts_with("BestPeriod"))
             .collect(),
         scale: 0.25,
+        platform_shards: vec![1],
     }
 }
 
@@ -179,6 +180,7 @@ pub fn smoke_grid() -> Grid {
             .filter(|s| !s.name().starts_with("BestPeriod"))
             .collect(),
         scale: 0.2,
+        platform_shards: vec![1],
     }
 }
 

@@ -33,6 +33,7 @@ fn small_grid() -> Grid {
             registry::get("NoCkptI").unwrap(),
         ],
         scale: 0.02,
+        platform_shards: vec![1],
     }
 }
 
@@ -284,6 +285,7 @@ fn interrupted_campaign_resumes_exactly() {
         windows: vec![300.0, 600.0, 900.0],
         strategies: vec![registry::get("NoCkptI").unwrap()],
         scale: 0.01,
+        platform_shards: vec![1],
     };
     let cells = grid.expand();
     assert!(cells.len() >= 200, "{} cells", cells.len());

@@ -256,6 +256,7 @@ fn predictor_model_census_is_pinned() {
             registry::get("WithCkptI").unwrap(),
         ],
         scale: 0.25,
+        platform_shards: vec![1],
     };
     let cells = expand_cells(&grid, &[1.0]);
     assert_eq!(cells.len(), 20);

@@ -85,6 +85,49 @@ fn recorder_is_a_pure_observer_bit_identical_outcomes() {
 }
 
 #[test]
+fn recorder_is_transparent_over_sharded_wheel_traces() {
+    // The scale-out paths — the timer-wheel generator behind every
+    // per-processor `FlatTrace` and the sharded merged source behind
+    // shards ≠ 1 campaign cells — honor the same recorder contract as the
+    // reference heap path.
+    use ckptwin::sim::engine::simulate_from;
+    for model in [
+        FaultModel::PerProcessor { n: 1 << 16 },
+        FaultModel::PerProcessorStationary { n: 1 << 16 },
+    ] {
+        let sc = scenario(model, Law::Weibull { shape: 0.7 });
+        for kind in [PolicyKind::NoCkpt, PolicyKind::WithCkpt] {
+            let pol = policy(&sc, kind);
+            for seed in [3u64, 12] {
+                for shards in [2u32, 4] {
+                    let tag = format!("{model:?}/{kind:?}/seed{seed}/shards{shards}");
+                    let plain = simulate_from(
+                        &sc,
+                        &pol,
+                        1.0,
+                        seed,
+                        FlatTrace::sharded(&sc, seed, shards),
+                    );
+                    let mut c = EventCounters::default();
+                    let recorded = simulate_recorded(
+                        &sc,
+                        &pol,
+                        1.0,
+                        seed,
+                        FlatTrace::sharded(&sc, seed, shards),
+                        &mut c,
+                    );
+                    assert_eq!(plain, recorded, "{tag}: recorder perturbed the run");
+                    c.audit(&recorded)
+                        .unwrap_or_else(|e| panic!("{tag}: audit: {e}"));
+                    assert!(c.n_faults > 0, "{tag}: trace had no faults");
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn audit_identity_holds_for_every_registered_strategy() {
     // The census the issue demands: every `all_defaults()` strategy —
     // BestPeriod twins included (their policy instantiation searches) —

@@ -246,6 +246,7 @@ fn every_registry_predictor_runs_end_to_end() {
             StrategyId::parse("qtrust(q=0.5)").unwrap(),
         ],
         scale: 0.02,
+        platform_shards: vec![1],
     };
     let cells = grid.expand();
     assert_eq!(cells.len(), 10);
