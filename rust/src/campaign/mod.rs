@@ -32,6 +32,7 @@
 //! subcommand (run / resume / report) exposes it directly.
 
 pub mod grid;
+pub mod overrides;
 pub mod pool;
 pub mod scheduler;
 pub mod store;

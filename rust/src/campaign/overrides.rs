@@ -1,0 +1,286 @@
+//! Shared grid-axis override backend.
+//!
+//! Three frontends set [`Grid`](crate::campaign::Grid) axes by name: the
+//! CLI flags (`ckptwin campaign/validate/metrics --procs … --strategies …`),
+//! the scenario-file `[axes]` section (`scenario::compile`), and tests.
+//! They all funnel through [`apply_override`], which is what guarantees a
+//! compiled `.ckpt` file and the equivalent CLI invocation produce
+//! byte-identical cell keys: there is exactly one place where an axis
+//! value string becomes grid state.
+//!
+//! Unknown axis keys are errors (with a nearest-match suggestion), not
+//! silently ignored — a typo like `--strategis` used to run the full
+//! default grid without complaint.
+
+use crate::campaign::Grid;
+use crate::predictor::registry as predictors;
+use crate::sim::distribution::Law;
+use crate::strategy::registry as strategies;
+use crate::util::split_top_level;
+
+/// Every axis key understood by [`apply_override`], in display order.
+/// CLI flag names and scenario-file `[axes]` keys are identical.
+pub const AXIS_KEYS: &[&str] = &[
+    "procs",
+    "cp-ratios",
+    "laws",
+    "predictors",
+    "windows",
+    "strategies",
+    "scale",
+    "shards",
+    "uniform-fp",
+];
+
+/// Levenshtein edit distance; small inputs only (axis keys, registry ids).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest candidate to `needle` (case-insensitive), if any is within an
+/// edit distance of `max(2, needle.len() / 3)`. Ties keep the earliest
+/// candidate, so deterministic for a fixed candidate order.
+pub fn nearest<'a>(needle: &str, candidates: impl IntoIterator<Item = &'a str>) -> Option<&'a str> {
+    let needle = needle.to_ascii_lowercase();
+    let budget = 2.max(needle.len() / 3);
+    let mut best: Option<(usize, &str)> = None;
+    for cand in candidates {
+        let d = edit_distance(&needle, &cand.to_ascii_lowercase());
+        if d <= budget && best.map_or(true, |(bd, _)| d < bd) {
+            best = Some((d, cand));
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+/// Reject option keys outside `AXIS_KEYS ∪ extra_allowed`, suggesting the
+/// nearest known key. `extra_allowed` carries the per-subcommand
+/// non-axis options (`--out`, `--instances`, …).
+pub fn check_keys<'a>(
+    present: impl IntoIterator<Item = &'a str>,
+    extra_allowed: &[&str],
+) -> Result<(), String> {
+    for key in present {
+        if AXIS_KEYS.contains(&key) || extra_allowed.contains(&key) {
+            continue;
+        }
+        let known = AXIS_KEYS.iter().chain(extra_allowed.iter()).copied();
+        return Err(match nearest(key, known) {
+            Some(s) => format!("unknown option '--{key}' (did you mean '--{s}'?)"),
+            None => format!("unknown option '--{key}'"),
+        });
+    }
+    Ok(())
+}
+
+fn parse_vals<T>(
+    raw: &str,
+    what: &str,
+    parse: impl Fn(&str) -> Result<T, String>,
+) -> Result<Vec<T>, String> {
+    let mut out = Vec::new();
+    for piece in split_top_level(raw) {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        out.push(parse(piece).map_err(|e| format!("bad {what} '{piece}': {e}"))?);
+    }
+    if out.is_empty() {
+        return Err(format!("empty {what} list"));
+    }
+    Ok(out)
+}
+
+/// `parse_strategy_list` with a nearest-registry-id suggestion appended
+/// when the failing token's base name is a near-miss of a known
+/// strategy name or alias.
+fn parse_strategies(raw: &str) -> Result<Vec<crate::strategy::StrategyId>, String> {
+    strategies::parse_strategy_list(raw).map_err(|e| {
+        let ids: Vec<&'static str> = strategies::catalog()
+            .flat_map(|d| std::iter::once(d.name).chain(d.aliases.iter().copied()))
+            .collect();
+        suggest_registry_id(raw, &ids)
+            .map(|s| format!("{e} (did you mean '{s}'?)"))
+            .unwrap_or(e)
+    })
+}
+
+fn parse_predictors(raw: &str) -> Result<Vec<crate::predictor::PredictorId>, String> {
+    predictors::parse_predictor_list(raw).map_err(|e| {
+        let ids: Vec<&'static str> = predictors::catalog()
+            .flat_map(|d| std::iter::once(d.name).chain(d.aliases.iter().copied()))
+            .collect();
+        suggest_registry_id(raw, &ids)
+            .map(|s| format!("{e} (did you mean '{s}'?)"))
+            .unwrap_or(e)
+    })
+}
+
+/// Find the first token in `raw` whose base name is not a known id and
+/// return the nearest candidate, if any.
+fn suggest_registry_id<'a>(raw: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    for tok in split_top_level(raw) {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let base = tok.split('(').next().unwrap_or(tok).trim();
+        if !candidates.iter().any(|c| c.eq_ignore_ascii_case(base)) {
+            return nearest(base, candidates.iter().copied());
+        }
+    }
+    None
+}
+
+/// Set one grid axis from its string value. Unknown `key` is an error
+/// (with the nearest axis-key suggestion); so are out-of-range values
+/// (`procs`/`shards` must be ≥ 1, `scale` finite and > 0) and unknown
+/// registry ids inside `strategies`/`predictors` lists.
+pub fn apply_override(grid: &mut Grid, key: &str, value: &str) -> Result<(), String> {
+    match key {
+        "procs" => {
+            grid.procs = parse_vals(value, "processor count", |s| {
+                s.parse::<u64>().map_err(|e| e.to_string()).and_then(|n| {
+                    if n == 0 {
+                        Err("must be >= 1".into())
+                    } else {
+                        Ok(n)
+                    }
+                })
+            })?;
+        }
+        "cp-ratios" => {
+            grid.cp_ratios =
+                parse_vals(value, "Cp ratio", |s| s.parse::<f64>().map_err(|e| e.to_string()))?;
+        }
+        "laws" => {
+            grid.fault_laws = parse_vals(value, "fault law", |s| {
+                Law::parse(s).ok_or_else(|| {
+                    "expected exponential|weibullK|lognormalS|uniform".to_string()
+                })
+            })?;
+        }
+        "predictors" => grid.predictors = parse_predictors(value)?,
+        "windows" => {
+            grid.windows = parse_vals(value, "window length", |s| {
+                s.parse::<f64>().map_err(|e| e.to_string())
+            })?;
+        }
+        "strategies" => grid.strategies = parse_strategies(value)?,
+        "scale" => {
+            let scale: f64 = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad scale '{value}'"))?;
+            if !scale.is_finite() || scale <= 0.0 {
+                return Err(format!("scale must be finite and > 0, got '{value}'"));
+            }
+            grid.scale = scale;
+        }
+        "shards" => {
+            grid.platform_shards = parse_vals(value, "shard count", |s| {
+                s.parse::<u32>().map_err(|e| e.to_string()).and_then(|n| {
+                    if n == 0 {
+                        Err("must be >= 1".into())
+                    } else {
+                        Ok(n)
+                    }
+                })
+            })?;
+        }
+        "uniform-fp" => {
+            grid.uniform_false_preds = match value.trim() {
+                "" | "true" => true,
+                "false" => false,
+                other => return Err(format!("bad uniform-fp value '{other}' (true|false)")),
+            };
+        }
+        other => {
+            return Err(match nearest(other, AXIS_KEYS.iter().copied()) {
+                Some(s) => format!("unknown grid axis '{other}' (did you mean '{s}'?)"),
+                None => format!("unknown grid axis '{other}'"),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("", "abc"), 3);
+    }
+
+    #[test]
+    fn nearest_suggests_within_budget() {
+        assert_eq!(nearest("procz", AXIS_KEYS.iter().copied()), Some("procs"));
+        assert_eq!(nearest("strategis", AXIS_KEYS.iter().copied()), Some("strategies"));
+        assert_eq!(nearest("zzzzzz", AXIS_KEYS.iter().copied()), None);
+    }
+
+    #[test]
+    fn unknown_axis_errors_with_suggestion() {
+        let mut g = Grid::smoke();
+        let err = apply_override(&mut g, "strategis", "Daly").unwrap_err();
+        assert!(err.contains("unknown grid axis 'strategis'"), "{err}");
+        assert!(err.contains("did you mean 'strategies'"), "{err}");
+    }
+
+    #[test]
+    fn bad_registry_id_suggests_nearest() {
+        let mut g = Grid::smoke();
+        let err = apply_override(&mut g, "strategies", "dailly").unwrap_err();
+        assert!(err.contains("unknown strategy"), "{err}");
+        assert!(err.to_ascii_lowercase().contains("did you mean 'daly'"), "{err}");
+        let err = apply_override(&mut g, "predictors", "mixedwim").unwrap_err();
+        assert!(err.contains("did you mean 'mixedwin'"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_values_rejected() {
+        let mut g = Grid::smoke();
+        assert!(apply_override(&mut g, "procs", "0").is_err());
+        assert!(apply_override(&mut g, "shards", "0").is_err());
+        assert!(apply_override(&mut g, "scale", "-1").is_err());
+        assert!(apply_override(&mut g, "scale", "nan").is_err());
+        assert!(apply_override(&mut g, "laws", "weibull").is_err());
+    }
+
+    #[test]
+    fn check_keys_allows_axes_and_extras() {
+        assert!(check_keys(["procs", "out"], &["out"]).is_ok());
+        let err = check_keys(["instancs"], &["instances"]).unwrap_err();
+        assert!(err.contains("did you mean '--instances'"), "{err}");
+    }
+
+    #[test]
+    fn uniform_fp_round_trips() {
+        let mut g = Grid::smoke();
+        assert!(!g.uniform_false_preds);
+        apply_override(&mut g, "uniform-fp", "true").unwrap();
+        assert!(g.uniform_false_preds);
+        apply_override(&mut g, "uniform-fp", "false").unwrap();
+        assert!(!g.uniform_false_preds);
+        assert!(apply_override(&mut g, "uniform-fp", "maybe").is_err());
+    }
+}

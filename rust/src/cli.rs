@@ -63,6 +63,17 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains(key) || self.kv.contains_key(key)
     }
+
+    /// Every option/flag name present on the command line, in sorted
+    /// order (kv options first, then bare flags). Lets subcommands
+    /// reject typo'd keys (`campaign::overrides::check_keys`) instead of
+    /// silently ignoring them.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.kv
+            .keys()
+            .map(String::as_str)
+            .chain(self.flags.iter().map(String::as_str))
+    }
 }
 
 #[cfg(test)]

@@ -106,6 +106,55 @@ impl PredModel {
             }
         }
     }
+
+    /// Inverse of [`PredModel::label`]: parse a canonical label back into
+    /// the model. `scenario::replay` uses this to rebuild a cell from its
+    /// store key; round-tripping is pinned by `parse_label(m.label()) == m`.
+    pub fn parse_label(raw: &str) -> Result<PredModel, String> {
+        let raw = raw.trim();
+        if raw == "paper" {
+            return Ok(PredModel::Paper);
+        }
+        let (name, rest) = raw
+            .split_once('(')
+            .ok_or_else(|| format!("bad predictor-model label '{raw}'"))?;
+        let inner = rest
+            .strip_suffix(')')
+            .ok_or_else(|| format!("unbalanced parens in predictor-model label '{raw}'"))?;
+        let mut params = std::collections::BTreeMap::new();
+        for piece in inner.split(';') {
+            let (k, v) = piece
+                .split_once('=')
+                .ok_or_else(|| format!("bad predictor-model param '{piece}' in '{raw}'"))?;
+            let v: f64 = v
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad number '{v}' in predictor-model label '{raw}'"))?;
+            params.insert(k.trim().to_string(), v);
+        }
+        let need = |key: &str| -> Result<f64, String> {
+            params
+                .get(key)
+                .copied()
+                .ok_or_else(|| format!("predictor-model label '{raw}' is missing '{key}'"))
+        };
+        let model = match name {
+            "biased" => PredModel::Biased { beta: need("beta")? },
+            "mixedwin" => PredModel::MixedWindow {
+                i1: need("i1")?,
+                i2: need("i2")?,
+                w: need("w")?,
+            },
+            "jitter" => PredModel::Jitter { sigma: need("sigma")? },
+            "classed" => PredModel::Classed {
+                p_hi: need("p_hi")?,
+                p_lo: need("p_lo")?,
+                frac: need("frac")?,
+            },
+            other => return Err(format!("unknown predictor model '{other}'")),
+        };
+        Ok(model)
+    }
 }
 
 impl fmt::Display for PredModel {

@@ -189,6 +189,49 @@ pub fn run_waste_vs_n(
     Ok(rows)
 }
 
+/// Re-emit a waste-vs-N figure preset in the scenario language.  The
+/// committed `scenarios/figN.ckpt` files are exactly this output (pinned
+/// by `tests/scenario.rs`), so the declarative suites can never drift
+/// from the harness presets: both the [`run_waste_vs_n`] grid and the
+/// compiled file reduce to `Grid::paper()` restricted to the spec's
+/// predictor and C_p ratio.
+pub fn waste_vs_n_scenario(spec: &WasteVsNSpec) -> String {
+    use crate::scenario::ast::{Entry, ScenarioFile, Section};
+    let entry = |key: &str, value: String| Entry { key: key.to_string(), value, line: 0 };
+    let section = |name: &str, entries: Vec<Entry>| Section {
+        name: name.to_string(),
+        line: 0,
+        entries,
+    };
+    let mut axes = vec![
+        entry("cp-ratios", format!("{}", spec.cp_ratio)),
+        entry(
+            "predictors",
+            (if spec.predictor_a { "a" } else { "b" }).to_string(),
+        ),
+    ];
+    if spec.uniform_false_preds {
+        axes.push(entry("uniform-fp", "true".to_string()));
+    }
+    // paper() holds 2 C_p ratios × 2 predictors; a figure pins one of each.
+    let cells = Grid::paper().len() / 4;
+    ScenarioFile {
+        sections: vec![
+            section(
+                "suite",
+                vec![
+                    entry("name", format!("fig{}", spec.id)),
+                    entry("kind", "campaign".to_string()),
+                    entry("base", "paper".to_string()),
+                ],
+            ),
+            section("axes", axes),
+            section("expect", vec![entry("cells", cells.to_string())]),
+        ],
+    }
+    .render()
+}
+
 /// Figures 14–17: waste as a function of the period T_R.
 /// (14, 15) = predictor A at N = 2^16, 2^19; (16, 17) = predictor B.
 #[derive(Clone, Copy, Debug)]

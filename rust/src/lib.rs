@@ -35,6 +35,7 @@ pub mod obs;
 pub mod predictor;
 pub mod resilience;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod stats;
 pub mod strategy;

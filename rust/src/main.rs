@@ -53,6 +53,18 @@
 //!                   the paper's `a`/`b` or a parameterized model like
 //!                   `biased(beta=2)` — is valid wherever a predictor is
 //!                   named (`--predictor`, `--predictors`, config files)
+//! * `lint`        — check declarative `.ckpt` scenario suites without
+//!                   running them: unknown sections/keys/registry ids
+//!                   (with nearest-match suggestions), out-of-range
+//!                   params, and validity-domain warnings
+//! * `explain`     — why one conformance cell passed / failed / was
+//!                   classified: the regime guard that fired with its
+//!                   measured value, or the 5-term priced tolerance
+//!                   broken out term by term
+//! * `replay`      — re-run stored campaign/conformance cells from their
+//!                   keys and diff field-for-field against the store
+//!                   (`--verify` is the CI bit-identity gate); the legacy
+//!                   `--log` form replays a recorded failure log
 //!
 //! Run `ckptwin help` for per-command options.
 
@@ -88,12 +100,27 @@ COMMANDS
                ablations behind DESIGN.md's design choices
   inspect      scenario options + [--strategy withckpt] [--seed 0]
                [--width 100]: ASCII execution timeline of one run
-  replay       --log faults.txt [scenario options]  run all heuristics
-               against a recorded failure log; --export N writes a
-               synthetic log instead
+  replay       <store.jsonl> <cell-hash>|--all [--verify]  re-run stored
+               campaign/conformance cells from their keys and diff the
+               fresh records field-for-field against the store;
+               --verify exits non-zero on any divergence.
+               Legacy form: --log faults.txt [scenario options] runs all
+               heuristics against a recorded failure log; --export N
+               writes a synthetic log instead
+  explain      <cell-key> | <store.jsonl> <cell-hash>  [--instances 40]
+               why a conformance cell passed / failed / classified: the
+               guard that fired with its measured value, or the 5-term
+               priced tolerance broken out term by term (campaign cell
+               keys are explained at multiplier 1.0, platform renewal)
+  lint         <file.ckpt> [...]  check scenario files without running
+               them: unknown sections/keys/registry ids (with nearest-
+               match suggestions), out-of-range params, compile errors;
+               warns how many cells would classify inapplicable.
+               Non-zero exit on any error
   config       <file.toml> [--instances N]
   campaign     run|resume|report [--out results/campaign.jsonl] [--force]
-               [--grid paper|smoke] [--instances N] [--threads N]
+               [--grid paper|smoke] [--scenario file.ckpt] [--instances N]
+               [--threads N]
                [--block N] [--scale F] [--uniform-fp] [--heartbeat]
                [--procs 65536,131072,...] [--cp-ratios 1.0,0.1]
                [--laws exponential,weibull0.7,lognormal1.2]
@@ -110,6 +137,7 @@ COMMANDS
                tolerance verdicts, validity-domain classification, per-
                strategy table + CONFORMANCE.json; exits non-zero on any
                unexplained failure.  [--smoke | --grid default|smoke]
+               [--scenario file.ckpt]
                [--instances N] [--threads N] [--multipliers 0.75,1,1.5]
                [--out results/conformance.jsonl] [--resume]
                [--json CONFORMANCE.json] + the campaign axis overrides
@@ -573,6 +601,11 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 fn cmd_replay(args: &Args) -> Result<()> {
     use ckptwin::sim::tracefile;
     use ckptwin::strategy::registry;
+    // Store form: `replay <store.jsonl> <cell-hash>|--all [--verify]`.
+    // The legacy failure-log form keeps its `--log`/`--export` options.
+    if !args.positional.is_empty() && !args.has("log") && !args.has("export") {
+        return cmd_replay_store(args);
+    }
     let sc = scenario_from_args(args)?;
     if let Some(n) = args.get::<usize>("export") {
         // Generate a synthetic failure log from the scenario's fault law.
@@ -616,6 +649,189 @@ fn cmd_replay(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `replay <store.jsonl> <cell-hash>|--all [--verify]` — re-run stored
+/// cells from their keys and diff field-for-field against the store.
+fn cmd_replay_store(args: &Args) -> Result<()> {
+    use ckptwin::campaign::Store;
+    use ckptwin::obs::MetricsRegistry;
+    use ckptwin::scenario::replay::{self, FieldDiff, StoreKind};
+    use ckptwin::validate::ConformanceStore;
+
+    let path_raw = args.positional.first().expect("dispatch checked positional");
+    let path = std::path::Path::new(path_raw);
+    let target_hash = match args.positional.get(1) {
+        Some(h) => Some(
+            u64::from_str_radix(h.trim_start_matches("0x"), 16)
+                .map_err(|_| anyhow!("bad cell hash '{h}' (16-digit hex, as printed by reports)"))?,
+        ),
+        None => None,
+    };
+    if target_hash.is_none() && !args.has("all") {
+        return Err(anyhow!(
+            "usage: ckptwin replay <store.jsonl> <cell-hash>|--all [--verify]"
+        ));
+    }
+    let verify = args.has("verify");
+    let kind = replay::sniff_store_kind(path)?;
+    let mut reg = MetricsRegistry::new();
+    let mut divergent = 0usize;
+    let mut replayed = 0usize;
+    let mut report = |key: &str, hash: u64, diffs: &[FieldDiff]| {
+        if diffs.is_empty() {
+            println!("{hash:016x} identical  {key}");
+        } else {
+            println!("{hash:016x} DIVERGED ({} fields)  {key}", diffs.len());
+            for d in diffs {
+                println!("    {:<14} stored={}  fresh={}", d.field, d.stored, d.fresh);
+            }
+        }
+    };
+    match kind {
+        StoreKind::Campaign => {
+            let store = Store::open(path)?;
+            for rec in store.records() {
+                if target_hash.is_some_and(|h| rec.hash != h) {
+                    continue;
+                }
+                let fresh = replay::replay_campaign(rec)?;
+                let diffs = replay::diff_campaign(rec, &fresh);
+                replayed += 1;
+                divergent += usize::from(!diffs.is_empty());
+                report(&rec.key, rec.hash, &diffs);
+            }
+        }
+        StoreKind::Conformance => {
+            let store = ConformanceStore::open(path)?;
+            for rec in store.records() {
+                if target_hash.is_some_and(|h| rec.hash != h) {
+                    continue;
+                }
+                let fresh = replay::replay_conformance(rec)?;
+                let diffs = replay::diff_conformance(rec, &fresh);
+                replayed += 1;
+                divergent += usize::from(!diffs.is_empty());
+                report(&rec.key, rec.hash, &diffs);
+            }
+        }
+    }
+    if replayed == 0 {
+        return Err(anyhow!(
+            "no record {:016x} in {}",
+            target_hash.unwrap_or_default(),
+            path.display()
+        ));
+    }
+    reg.add("replay.cells", replayed as u64);
+    reg.add("replay.divergent", divergent as u64);
+    println!(
+        "replayed {replayed} {} cell(s) from {}: {divergent} divergent",
+        match kind {
+            StoreKind::Campaign => "campaign",
+            StoreKind::Conformance => "conformance",
+        },
+        path.display()
+    );
+    if verify && divergent > 0 {
+        return Err(anyhow!("replay --verify: {divergent} cell(s) diverged from the store"));
+    }
+    Ok(())
+}
+
+/// `explain <cell-key> | <store.jsonl> <cell-hash>` — why a conformance
+/// cell passed, failed, or was classified inapplicable.
+fn cmd_explain(args: &Args) -> Result<()> {
+    use ckptwin::campaign::Store;
+    use ckptwin::scenario::{explain, replay};
+    use ckptwin::validate::{ConformanceStore, TolerancePolicy, ValCell};
+
+    let first = args.positional.first().ok_or_else(|| {
+        anyhow!("usage: ckptwin explain <cell-key> | <store.jsonl> <cell-hash> [--instances 40]")
+    })?;
+    // A campaign cell key (no fm=/m= suffix) is explained at the
+    // conformance baseline: multiplier 1.0, platform-renewal faults.
+    let wrap = |cell: ckptwin::campaign::Cell| {
+        ValCell::new(cell, 1.0, FaultModel::PlatformRenewal)
+    };
+    let vc = if first.contains(';') {
+        if first.contains(";fm=") {
+            replay::parse_val_cell_key(first)?
+        } else {
+            wrap(replay::parse_cell_key(first)?)
+        }
+    } else {
+        let hash_raw = args
+            .positional
+            .get(1)
+            .ok_or_else(|| anyhow!("usage: ckptwin explain <store.jsonl> <cell-hash>"))?;
+        let hash = u64::from_str_radix(hash_raw.trim_start_matches("0x"), 16)
+            .map_err(|_| anyhow!("bad cell hash '{hash_raw}' (16-digit hex)"))?;
+        let path = std::path::Path::new(first.as_str());
+        match replay::sniff_store_kind(path)? {
+            replay::StoreKind::Conformance => {
+                let store = ConformanceStore::open(path)?;
+                let rec = store
+                    .get(hash)
+                    .ok_or_else(|| anyhow!("no record {hash:016x} in {first}"))?;
+                replay::parse_val_cell_key(&rec.key)?
+            }
+            replay::StoreKind::Campaign => {
+                let store = Store::open(path)?;
+                let rec = store
+                    .get(hash)
+                    .ok_or_else(|| anyhow!("no record {hash:016x} in {first}"))?;
+                wrap(replay::parse_cell_key(&rec.key)?)
+            }
+        }
+    };
+    let instances = args.get_or("instances", 40usize);
+    let ex = explain::explain_cell(&vc, instances, &TolerancePolicy::default());
+    print!("{}", ex.render());
+    Ok(())
+}
+
+/// `lint <file.ckpt> [...]` — check scenario files without running them.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use ckptwin::obs::MetricsRegistry;
+    use ckptwin::scenario::lint_str;
+
+    if args.positional.is_empty() {
+        return Err(anyhow!("usage: ckptwin lint <file.ckpt> [...]"));
+    }
+    let mut reg = MetricsRegistry::new();
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        let rep = lint_str(&text);
+        reg.inc("lint.files");
+        reg.add("lint.errors", rep.errors.len() as u64);
+        reg.add("lint.warnings", rep.warnings.len() as u64);
+        for d in &rep.errors {
+            println!("{path}: error: {d}");
+        }
+        for d in &rep.warnings {
+            println!("{path}: warning: {d}");
+        }
+        if rep.ok() {
+            println!(
+                "{path}: ok — suite '{}' compiles to {} cells ({} warning(s))",
+                rep.name.as_deref().unwrap_or("?"),
+                rep.cells,
+                rep.warnings.len()
+            );
+        }
+    }
+    let errors = reg.counter("lint.errors");
+    println!(
+        "linted {} file(s): {errors} error(s), {} warning(s)",
+        reg.counter("lint.files"),
+        reg.counter("lint.warnings")
+    );
+    if errors > 0 {
+        return Err(anyhow!("{errors} lint error(s)"));
+    }
+    Ok(())
+}
+
 fn cmd_config(args: &Args) -> Result<()> {
     let path = args
         .positional
@@ -640,15 +856,43 @@ fn cmd_config(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build the campaign grid from CLI axis overrides on top of a preset.
-fn grid_from_args(args: &Args) -> Result<ckptwin::campaign::Grid> {
-    use ckptwin::campaign::Grid;
-    let mut grid = match args.get_str("grid").unwrap_or("paper") {
-        "paper" => Grid::paper(),
-        "smoke" => Grid::smoke(),
-        other => return Err(anyhow!("unknown grid preset '{other}' (paper|smoke)")),
+/// Load and compile a `--scenario file.ckpt`, requiring the given suite
+/// kind (a campaign file fed to `validate` — or vice versa — is an
+/// error, not a silent reinterpretation).
+fn suite_from_args(
+    args: &Args,
+    want: ckptwin::scenario::SuiteKind,
+) -> Result<Option<ckptwin::scenario::CompiledSuite>> {
+    let Some(path) = args.get_str("scenario") else {
+        return Ok(None);
     };
-    apply_grid_overrides(&mut grid, args)?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading scenario {path}: {e}"))?;
+    let suite = ckptwin::scenario::compile::compile_str(&text)
+        .map_err(|e| anyhow!("{path}: {e}"))?;
+    if suite.kind != want {
+        return Err(anyhow!(
+            "{path} is a {} suite; this subcommand runs {} suites",
+            suite.kind.label(),
+            want.label()
+        ));
+    }
+    Ok(Some(suite))
+}
+
+/// Build the campaign grid from a `--scenario` file or a `--grid` preset
+/// plus CLI axis overrides.
+fn grid_from_args(args: &Args, extra_allowed: &[&str]) -> Result<ckptwin::campaign::Grid> {
+    use ckptwin::campaign::Grid;
+    let mut grid = match suite_from_args(args, ckptwin::scenario::SuiteKind::Campaign)? {
+        Some(suite) => suite.grid,
+        None => match args.get_str("grid").unwrap_or("paper") {
+            "paper" => Grid::paper(),
+            "smoke" => Grid::smoke(),
+            other => return Err(anyhow!("unknown grid preset '{other}' (paper|smoke)")),
+        },
+    };
+    apply_grid_overrides(&mut grid, args, extra_allowed)?;
     Ok(grid)
 }
 
@@ -665,52 +909,29 @@ fn parse_list<T, E: std::fmt::Display>(
 }
 
 /// Apply the shared CLI axis overrides (`--procs`, `--laws`, …) to a grid
-/// preset; used by both `campaign` and `validate`.
-fn apply_grid_overrides(grid: &mut ckptwin::campaign::Grid, args: &Args) -> Result<()> {
-    use ckptwin::strategy::registry;
-    if let Some(raw) = args.get_str("procs") {
-        grid.procs = parse_list(raw, "procs", str::parse::<u64>)?;
-        // N = 0 has no per-processor trace (an empty pool cannot fail);
-        // config files reject it too (`config::scenario_from_str`).
-        if grid.procs.contains(&0) {
-            return Err(anyhow!("--procs values must be >= 1"));
+/// preset; used by `campaign`, `validate` and `metrics`.  Every present
+/// option key must be a grid axis or in `extra_allowed` (the
+/// subcommand's own options) — unknown keys error with a nearest-match
+/// suggestion instead of being silently ignored
+/// (`campaign::overrides::check_keys`).
+fn apply_grid_overrides(
+    grid: &mut ckptwin::campaign::Grid,
+    args: &Args,
+    extra_allowed: &[&str],
+) -> Result<()> {
+    use ckptwin::campaign::overrides;
+    overrides::check_keys(args.keys(), extra_allowed).map_err(|e| anyhow!(e))?;
+    for &key in overrides::AXIS_KEYS {
+        if key == "uniform-fp" {
+            // A bare `--uniform-fp` flag means true; `--uniform-fp=false`
+            // can switch a scenario-file default back off.
+            if args.has(key) {
+                overrides::apply_override(grid, key, args.get_str(key).unwrap_or("true"))
+                    .map_err(|e| anyhow!(e))?;
+            }
+        } else if let Some(raw) = args.get_str(key) {
+            overrides::apply_override(grid, key, raw).map_err(|e| anyhow!(e))?;
         }
-    }
-    if let Some(raw) = args.get_str("cp-ratios") {
-        grid.cp_ratios = parse_list(raw, "cp-ratio", str::parse::<f64>)?;
-    }
-    if let Some(raw) = args.get_str("laws") {
-        grid.fault_laws = parse_list(raw, "law", |t| {
-            Law::parse(t).ok_or("expected exponential|weibullK|lognormalS|uniform")
-        })?;
-    }
-    if let Some(raw) = args.get_str("predictors") {
-        // Paren-aware like --strategies: commas inside biased(beta=2,...)
-        // do not split.
-        grid.predictors = ckptwin::predictor::registry::parse_predictor_list(raw)
-            .map_err(|e| anyhow!(e))?;
-    }
-    if let Some(raw) = args.get_str("windows") {
-        grid.windows = parse_list(raw, "window", str::parse::<f64>)?;
-    }
-    if let Some(raw) = args.get_str("strategies") {
-        // Paren-aware: commas inside `qtrust(q=0.25,...)` do not split.
-        grid.strategies =
-            registry::parse_strategy_list(raw).map_err(|e| anyhow!(e))?;
-    }
-    if let Some(raw) = args.get_str("scale") {
-        grid.scale = raw
-            .parse::<f64>()
-            .map_err(|e| anyhow!("bad scale '{raw}': {e}"))?;
-    }
-    if let Some(raw) = args.get_str("shards") {
-        grid.platform_shards = parse_list(raw, "shards", str::parse::<u32>)?;
-        if grid.platform_shards.contains(&0) {
-            return Err(anyhow!("--shards values must be >= 1"));
-        }
-    }
-    if args.has("uniform-fp") {
-        grid.uniform_false_preds = true;
     }
     if grid.is_empty() {
         return Err(anyhow!("grid has an empty axis — nothing to run"));
@@ -769,7 +990,13 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         return Err(anyhow!("usage: ckptwin campaign run|resume|report [options]"));
     }
 
-    let grid = grid_from_args(args)?;
+    // Non-axis options `campaign run|resume` accepts; anything else on
+    // the command line is a typo'd axis and errors (overrides::check_keys).
+    const CAMPAIGN_KEYS: &[&str] = &[
+        "out", "force", "grid", "scenario", "instances", "threads", "block",
+        "heartbeat", "inject",
+    ];
+    let grid = grid_from_args(args, CAMPAIGN_KEYS)?;
     let cells = grid.expand();
     let mut store = if mode == "run" {
         if args.has("force") {
@@ -830,21 +1057,39 @@ fn cmd_validate(args: &Args) -> Result<()> {
     if args.has("scale-check") {
         return cmd_validate_scale(args);
     }
+    // Non-axis options `validate` accepts; anything else is a typo'd
+    // axis and errors (overrides::check_keys).
+    const VALIDATE_KEYS: &[&str] = &[
+        "smoke", "grid", "scenario", "multipliers", "out", "resume", "json",
+        "instances", "threads", "scale-check", "inject",
+    ];
     let smoke = args.has("smoke") || args.get_str("grid") == Some("smoke");
-    let mut grid = match args.get_str("grid").unwrap_or(if smoke {
-        "smoke"
-    } else {
-        "default"
-    }) {
-        "default" => validate::default_grid(),
-        "smoke" => validate::smoke_grid(),
-        other => return Err(anyhow!("unknown grid preset '{other}' (default|smoke)")),
+    let suite = suite_from_args(args, ckptwin::scenario::SuiteKind::Conformance)?;
+    let (mut grid, suite_multipliers) = match suite {
+        Some(suite) => (suite.grid, Some(suite.multipliers)),
+        None => {
+            let grid = match args.get_str("grid").unwrap_or(if smoke {
+                "smoke"
+            } else {
+                "default"
+            }) {
+                "default" => validate::default_grid(),
+                "smoke" => validate::smoke_grid(),
+                other => {
+                    return Err(anyhow!("unknown grid preset '{other}' (default|smoke)"))
+                }
+            };
+            (grid, None)
+        }
     };
-    apply_grid_overrides(&mut grid, args)?;
+    apply_grid_overrides(&mut grid, args, VALIDATE_KEYS)?;
     let mut multipliers: Vec<f64> = match args.get_str("multipliers") {
         Some(raw) => parse_list(raw, "multiplier", str::parse::<f64>)?,
-        None if smoke => vec![1.0],
-        None => validate::DEFAULT_MULTIPLIERS.to_vec(),
+        None => match suite_multipliers {
+            Some(ms) => ms,
+            None if smoke => vec![1.0],
+            None => validate::DEFAULT_MULTIPLIERS.to_vec(),
+        },
     };
     if let Some(bad) = multipliers.iter().find(|m| !m.is_finite() || **m <= 0.0) {
         return Err(anyhow!("multiplier {bad} must be a positive number"));
@@ -1055,7 +1300,12 @@ fn cmd_metrics(args: &Args) -> Result<()> {
         "paper" => Grid::paper(),
         other => return Err(anyhow!("unknown grid preset '{other}' (smoke|paper)")),
     };
-    apply_grid_overrides(&mut grid, args)?;
+    // Non-axis options `metrics` accepts (overrides::check_keys).
+    const METRICS_KEYS: &[&str] = &[
+        "grid", "instances", "threads", "block", "json", "heartbeat", "steps",
+        "mtbf", "seed", "ckpt-dir", "inject",
+    ];
+    apply_grid_overrides(&mut grid, args, METRICS_KEYS)?;
     let cells = grid.expand();
     let instances = args.get_or("instances", harness::default_instances()).max(1);
     let opt = CampaignOptions {
@@ -1500,6 +1750,8 @@ fn main() {
         Some("chaos") => cmd_chaos(&args),
         Some("strategies") => cmd_strategies(&args),
         Some("predictors") => cmd_predictors(&args),
+        Some("explain") => cmd_explain(&args),
+        Some("lint") => cmd_lint(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())

@@ -1,0 +1,191 @@
+//! Syntax layer of the `.ckpt` scenario language.
+//!
+//! The grammar is a deliberately tiny TOML-flavored subset, line-oriented
+//! so every diagnostic carries an exact line number:
+//!
+//! ```text
+//! # whole-line comments and blank lines are ignored
+//! [section]
+//! key = value            # value runs to end of line (no trailing comments)
+//! other-key = "quoted"   # surrounding double quotes are stripped
+//! ```
+//!
+//! The parser checks *syntax only* — unknown sections/keys are accepted
+//! here and rejected by `compile`/`lint`, which know the schema. It does
+//! reject structural duplicates (two `[axes]` sections, the same key
+//! twice in one section) because those are ambiguous no matter the
+//! schema.
+//!
+//! [`ScenarioFile::render`] emits the canonical form; `parse ∘ render`
+//! is a fixpoint (pinned by `tests/scenario.rs`), which is what makes
+//! committed `.ckpt` files diffable artifacts.
+
+use super::ScenarioError;
+
+/// One `key = value` entry with its source line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub key: String,
+    pub value: String,
+    pub line: usize,
+}
+
+/// One `[name]` section and its entries, in file order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Section {
+    pub name: String,
+    pub line: usize,
+    pub entries: Vec<Entry>,
+}
+
+impl Section {
+    pub fn get(&self, key: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.key == key)
+    }
+}
+
+/// A parsed `.ckpt` file: sections in file order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScenarioFile {
+    pub sections: Vec<Section>,
+}
+
+impl ScenarioFile {
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.iter().find(|s| s.name == name)
+    }
+
+    /// Parse scenario text. Errors carry 1-based line numbers.
+    pub fn parse(text: &str) -> Result<ScenarioFile, ScenarioError> {
+        let mut file = ScenarioFile::default();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let trimmed = raw.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = trimmed.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    ScenarioError::new(line, format!("unterminated section header '{trimmed}'"))
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(ScenarioError::new(line, "empty section name '[]'"));
+                }
+                if let Some(prev) = file.section(name) {
+                    return Err(ScenarioError::new(
+                        line,
+                        format!("duplicate section '[{name}]' (first defined at line {})", prev.line),
+                    ));
+                }
+                file.sections.push(Section { name: name.to_string(), line, entries: Vec::new() });
+                continue;
+            }
+            let (key, value) = trimmed.split_once('=').ok_or_else(|| {
+                ScenarioError::new(line, format!("expected 'key = value' or '[section]', got '{trimmed}'"))
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ScenarioError::new(line, "empty key before '='"));
+            }
+            let mut value = value.trim();
+            if value.len() >= 2 && value.starts_with('"') && value.ends_with('"') {
+                value = &value[1..value.len() - 1];
+            }
+            let section = file.sections.last_mut().ok_or_else(|| {
+                ScenarioError::new(line, format!("entry '{key}' appears before any [section]"))
+            })?;
+            if let Some(prev) = section.entries.iter().find(|e| e.key == key) {
+                return Err(ScenarioError::new(
+                    line,
+                    format!(
+                        "duplicate key '{key}' in [{}] (first set at line {})",
+                        section.name, prev.line
+                    ),
+                ));
+            }
+            section.entries.push(Entry { key: key.to_string(), value: value.to_string(), line });
+        }
+        Ok(file)
+    }
+
+    /// Canonical rendering: one section per block, `key = value` lines,
+    /// blank line between sections. `parse(render(f))` reproduces `f`
+    /// up to line numbers, and `render` is idempotent on its own output.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (i, section) in self.sections.iter().enumerate() {
+            if i > 0 {
+                out.push('\n');
+            }
+            out.push('[');
+            out.push_str(&section.name);
+            out.push_str("]\n");
+            for entry in &section.entries {
+                out.push_str(&entry.key);
+                out.push_str(" = ");
+                out.push_str(&entry.value);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_entries_and_comments() {
+        let f = ScenarioFile::parse(
+            "# header comment\n\n[suite]\nname = demo\n\n[axes]\nprocs = 1024, 2048\n",
+        )
+        .unwrap();
+        assert_eq!(f.sections.len(), 2);
+        assert_eq!(f.section("suite").unwrap().get("name").unwrap().value, "demo");
+        let procs = f.section("axes").unwrap().get("procs").unwrap();
+        assert_eq!(procs.value, "1024, 2048");
+        assert_eq!(procs.line, 7);
+    }
+
+    #[test]
+    fn quoted_values_are_stripped() {
+        let f = ScenarioFile::parse("[suite]\nname = \"paper fig 5\"\n").unwrap();
+        assert_eq!(f.section("suite").unwrap().get("name").unwrap().value, "paper fig 5");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = ScenarioFile::parse("[suite]\nname = a\n[suite]\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("duplicate section"), "{e}");
+        assert!(e.msg.contains("line 1"), "{e}");
+
+        let e = ScenarioFile::parse("[axes]\nprocs = 1\nprocs = 2\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("duplicate key 'procs'"), "{e}");
+
+        let e = ScenarioFile::parse("name = orphan\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(e.msg.contains("before any [section]"), "{e}");
+
+        let e = ScenarioFile::parse("[oops\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(e.msg.contains("unterminated"), "{e}");
+
+        let e = ScenarioFile::parse("[axes]\njust words\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.to_string().starts_with("line 2: "), "{e}");
+    }
+
+    #[test]
+    fn render_parse_fixpoint() {
+        let src = "[suite]\nname = demo\nkind = campaign\n\n[axes]\nprocs = 1024\n";
+        let f = ScenarioFile::parse(src).unwrap();
+        let rendered = f.render();
+        assert_eq!(rendered, src);
+        let f2 = ScenarioFile::parse(&rendered).unwrap();
+        assert_eq!(f, f2);
+    }
+}

@@ -1,0 +1,347 @@
+//! Schema layer: lower a parsed [`ScenarioFile`] to grid/conformance
+//! cells.
+//!
+//! Sections:
+//!
+//! ```text
+//! [suite]                        # required
+//! name = fig5                    # required: suite id (free text)
+//! kind = campaign                # campaign (default) | conformance
+//! base = paper                   # campaign: paper (default) | smoke
+//!                                # conformance: default (default) | smoke
+//!
+//! [axes]                         # optional; keys = overrides::AXIS_KEYS
+//! predictors = b                 # values use the exact CLI flag syntax
+//! cp-ratios = 1.0
+//!
+//! [sweep]                        # conformance only
+//! multipliers = 0.75, 1.0, 1.5   # default: 1.0 (smoke base) or
+//!                                # validate::DEFAULT_MULTIPLIERS
+//!
+//! [expect]                       # optional compile-time assertions
+//! cells = 300
+//! ```
+//!
+//! Every `[axes]` entry goes through
+//! [`overrides::apply_override`](crate::campaign::overrides::apply_override)
+//! on top of the `base` preset — the same call path as the CLI flags —
+//! so the compiled grid is byte-identical (keys and hashes) to the
+//! equivalent `ckptwin campaign/validate` invocation by construction.
+
+use super::ast::{ScenarioFile, Section};
+use super::ScenarioError;
+use crate::campaign::{overrides, Cell, Grid};
+use crate::util::split_top_level;
+use crate::validate::{self, ValCell};
+
+/// What the compiled grid feeds: a waste campaign or a model-vs-sim
+/// conformance sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SuiteKind {
+    Campaign,
+    Conformance,
+}
+
+impl SuiteKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SuiteKind::Campaign => "campaign",
+            SuiteKind::Conformance => "conformance",
+        }
+    }
+}
+
+/// A fully resolved suite: registry ids looked up, ranges checked,
+/// expectations verified.
+#[derive(Clone, Debug)]
+pub struct CompiledSuite {
+    pub name: String,
+    pub kind: SuiteKind,
+    /// Base preset the `[axes]` overrides were applied on top of.
+    pub base: String,
+    pub grid: Grid,
+    /// Period multipliers (conformance suites; `[1.0]`-equivalent unused
+    /// for campaigns).
+    pub multipliers: Vec<f64>,
+    pub expect_cells: Option<usize>,
+}
+
+impl CompiledSuite {
+    /// Total cell count: grid cells × multipliers for conformance
+    /// suites, grid cells for campaigns.
+    pub fn cell_count(&self) -> usize {
+        match self.kind {
+            SuiteKind::Campaign => self.grid.len(),
+            SuiteKind::Conformance => self.grid.len() * self.multipliers.len(),
+        }
+    }
+
+    /// Campaign cells in canonical grid-expansion order.
+    pub fn cells(&self) -> Vec<Cell> {
+        self.grid.expand()
+    }
+
+    /// Conformance cells (grid order, multipliers innermost).
+    pub fn val_cells(&self) -> Vec<ValCell> {
+        validate::expand_cells(&self.grid, &self.multipliers)
+    }
+}
+
+/// Known section names, for diagnostics.
+pub const SECTIONS: &[&str] = &["suite", "axes", "sweep", "expect"];
+
+/// Allowed keys per section (`[axes]` takes
+/// [`overrides::AXIS_KEYS`]).
+pub fn section_keys(section: &str) -> Option<&'static [&'static str]> {
+    match section {
+        "suite" => Some(&["name", "kind", "base"]),
+        "axes" => Some(overrides::AXIS_KEYS),
+        "sweep" => Some(&["multipliers"]),
+        "expect" => Some(&["cells"]),
+        _ => None,
+    }
+}
+
+fn unknown_section_err(section: &Section) -> ScenarioError {
+    let msg = match overrides::nearest(&section.name, SECTIONS.iter().copied()) {
+        Some(s) => format!("unknown section '[{}]' (did you mean '[{s}]'?)", section.name),
+        None => format!("unknown section '[{}]'", section.name),
+    };
+    ScenarioError::new(section.line, msg)
+}
+
+fn check_section_keys(section: &Section) -> Result<(), ScenarioError> {
+    let allowed = section_keys(&section.name).ok_or_else(|| unknown_section_err(section))?;
+    for entry in &section.entries {
+        if !allowed.contains(&entry.key.as_str()) {
+            let msg = match overrides::nearest(&entry.key, allowed.iter().copied()) {
+                Some(s) => format!(
+                    "unknown key '{}' in [{}] (did you mean '{s}'?)",
+                    entry.key, section.name
+                ),
+                None => format!("unknown key '{}' in [{}]", entry.key, section.name),
+            };
+            return Err(ScenarioError::new(entry.line, msg));
+        }
+    }
+    Ok(())
+}
+
+fn base_grid(kind: SuiteKind, base: &str) -> Option<Grid> {
+    match (kind, base) {
+        (SuiteKind::Campaign, "paper") => Some(Grid::paper()),
+        (SuiteKind::Campaign, "smoke") => Some(Grid::smoke()),
+        (SuiteKind::Conformance, "default") => Some(validate::default_grid()),
+        (SuiteKind::Conformance, "smoke") => Some(validate::smoke_grid()),
+        _ => None,
+    }
+}
+
+/// Parse a `[sweep] multipliers` list exactly like `ckptwin validate
+/// --multipliers`: finite, positive, bit-deduplicated, order-preserving.
+fn parse_multipliers(raw: &str, line: usize) -> Result<Vec<f64>, ScenarioError> {
+    let mut out: Vec<f64> = Vec::new();
+    for piece in split_top_level(raw) {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        let m: f64 = piece
+            .parse()
+            .map_err(|_| ScenarioError::new(line, format!("bad multiplier '{piece}'")))?;
+        if !m.is_finite() || m <= 0.0 {
+            return Err(ScenarioError::new(
+                line,
+                format!("multiplier must be finite and > 0, got '{piece}'"),
+            ));
+        }
+        if !out.iter().any(|x| x.to_bits() == m.to_bits()) {
+            out.push(m);
+        }
+    }
+    if out.is_empty() {
+        return Err(ScenarioError::new(line, "empty multipliers list"));
+    }
+    Ok(out)
+}
+
+/// Compile a parsed file. Stops at the first error (use
+/// [`super::lint`] to collect them all).
+pub fn compile(file: &ScenarioFile) -> Result<CompiledSuite, ScenarioError> {
+    for section in &file.sections {
+        check_section_keys(section)?;
+    }
+    let suite = file
+        .section("suite")
+        .ok_or_else(|| ScenarioError::new(0, "missing required [suite] section"))?;
+    let name = suite
+        .get("name")
+        .ok_or_else(|| ScenarioError::new(suite.line, "[suite] is missing 'name'"))?
+        .value
+        .clone();
+    let kind = match suite.get("kind") {
+        None => SuiteKind::Campaign,
+        Some(e) => match e.value.to_ascii_lowercase().as_str() {
+            "campaign" => SuiteKind::Campaign,
+            "conformance" => SuiteKind::Conformance,
+            other => {
+                return Err(ScenarioError::new(
+                    e.line,
+                    format!("unknown kind '{other}' (campaign|conformance)"),
+                ))
+            }
+        },
+    };
+    let default_base = match kind {
+        SuiteKind::Campaign => "paper",
+        SuiteKind::Conformance => "default",
+    };
+    let (base, base_line) = match suite.get("base") {
+        Some(e) => (e.value.to_ascii_lowercase(), e.line),
+        None => (default_base.to_string(), suite.line),
+    };
+    let mut grid = base_grid(kind, &base).ok_or_else(|| {
+        let known = match kind {
+            SuiteKind::Campaign => "paper|smoke",
+            SuiteKind::Conformance => "default|smoke",
+        };
+        ScenarioError::new(
+            base_line,
+            format!("unknown base '{base}' for a {} suite ({known})", kind.label()),
+        )
+    })?;
+
+    if let Some(axes) = file.section("axes") {
+        for entry in &axes.entries {
+            overrides::apply_override(&mut grid, &entry.key, &entry.value)
+                .map_err(|msg| ScenarioError::new(entry.line, msg))?;
+        }
+    }
+    if grid.is_empty() {
+        return Err(ScenarioError::new(0, "grid has an empty axis — nothing to run"));
+    }
+
+    let multipliers = match (kind, file.section("sweep")) {
+        (SuiteKind::Campaign, Some(s)) => {
+            return Err(ScenarioError::new(
+                s.line,
+                "[sweep] only applies to conformance suites (set kind = conformance)",
+            ));
+        }
+        (SuiteKind::Campaign, None) => vec![1.0],
+        (SuiteKind::Conformance, sweep) => match sweep.and_then(|s| s.get("multipliers")) {
+            Some(e) => parse_multipliers(&e.value, e.line)?,
+            None => {
+                if base == "smoke" {
+                    vec![1.0]
+                } else {
+                    validate::DEFAULT_MULTIPLIERS.to_vec()
+                }
+            }
+        },
+    };
+
+    let expect_cells = match file.section("expect").and_then(|s| s.get("cells")) {
+        Some(e) => Some(e.value.trim().parse::<usize>().map_err(|_| {
+            ScenarioError::new(e.line, format!("bad cell count '{}'", e.value))
+        })?),
+        None => None,
+    };
+
+    let compiled =
+        CompiledSuite { name, kind, base, grid, multipliers, expect_cells };
+    if let Some(expected) = compiled.expect_cells {
+        let got = compiled.cell_count();
+        if got != expected {
+            let line = file
+                .section("expect")
+                .and_then(|s| s.get("cells"))
+                .map(|e| e.line)
+                .unwrap_or(0);
+            return Err(ScenarioError::new(
+                line,
+                format!("expectation failed: [expect] cells = {expected}, grid compiles to {got}"),
+            ));
+        }
+    }
+    Ok(compiled)
+}
+
+/// Parse + compile in one step.
+pub fn compile_str(text: &str) -> Result<CompiledSuite, ScenarioError> {
+    compile(&ScenarioFile::parse(text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_campaign_suite_defaults_to_paper() {
+        let s = compile_str("[suite]\nname = t\n").unwrap();
+        assert_eq!(s.kind, SuiteKind::Campaign);
+        assert_eq!(s.base, "paper");
+        assert_eq!(s.grid.len(), Grid::paper().len());
+        assert_eq!(s.cell_count(), 1200);
+    }
+
+    #[test]
+    fn axes_override_base_preset() {
+        let s = compile_str(
+            "[suite]\nname = t\nbase = smoke\n\n[axes]\nstrategies = RFO\nwindows = 600\n",
+        )
+        .unwrap();
+        assert_eq!(s.grid.strategies.len(), 1);
+        assert_eq!(s.grid.windows, vec![600.0]);
+        assert_eq!(s.cell_count(), 4);
+    }
+
+    #[test]
+    fn conformance_suite_defaults_and_sweep() {
+        let s = compile_str("[suite]\nname = t\nkind = conformance\nbase = smoke\n").unwrap();
+        assert_eq!(s.multipliers, vec![1.0]);
+        assert_eq!(s.cell_count(), 72);
+        let s = compile_str(
+            "[suite]\nname = t\nkind = conformance\nbase = smoke\n\n[sweep]\nmultipliers = 0.75, 1.0, 0.75\n",
+        )
+        .unwrap();
+        assert_eq!(s.multipliers, vec![0.75, 1.0]);
+    }
+
+    #[test]
+    fn conformance_default_base_gets_default_multipliers() {
+        let s = compile_str("[suite]\nname = t\nkind = conformance\n").unwrap();
+        assert_eq!(s.base, "default");
+        assert_eq!(s.multipliers, validate::DEFAULT_MULTIPLIERS.to_vec());
+    }
+
+    #[test]
+    fn diagnostics_carry_lines_and_suggestions() {
+        let e = compile_str("[suite]\nname = t\n\n[axis]\nprocs = 1\n").unwrap_err();
+        assert_eq!(e.line, 4);
+        assert!(e.msg.contains("did you mean '[axes]'"), "{e}");
+
+        let e = compile_str("[suite]\nname = t\n\n[axes]\nprocz = 1\n").unwrap_err();
+        assert_eq!(e.line, 5);
+        assert!(e.msg.contains("did you mean 'procs'"), "{e}");
+
+        let e = compile_str("[suite]\nname = t\n\n[axes]\nstrategies = dailly\n").unwrap_err();
+        assert_eq!(e.line, 5);
+        assert!(e.to_string().to_ascii_lowercase().contains("did you mean"), "{e}");
+
+        let e = compile_str("[suite]\nname = t\n\n[sweep]\nmultipliers = 1\n").unwrap_err();
+        assert_eq!(e.line, 4);
+        assert!(e.msg.contains("conformance"), "{e}");
+
+        let e = compile_str("[suite]\nname = t\nbase = smoke\n\n[expect]\ncells = 17\n")
+            .unwrap_err();
+        assert_eq!(e.line, 6);
+        assert!(e.msg.contains("compiles to 16"), "{e}");
+    }
+
+    #[test]
+    fn missing_suite_or_name_is_an_error() {
+        assert!(compile_str("[axes]\nprocs = 1\n").unwrap_err().msg.contains("[suite]"));
+        assert!(compile_str("[suite]\nkind = campaign\n").unwrap_err().msg.contains("name"));
+    }
+}

@@ -1,0 +1,259 @@
+//! `ckptwin explain` — why a conformance cell passed, failed, or was
+//! classified.
+//!
+//! [`explain_cell`] re-derives one cell's verdict exactly as
+//! `validate::evaluate_cell` does (same guards, same paired seeds, same
+//! trace-pool replay — the sim statistics are bit-identical, pinned by
+//! `tests/scenario.rs`), but keeps the intermediate quantities:
+//! the [`Inapplicable`] guard that fired, rendered as a sentence with
+//! the measured value that tripped it, and the 5-term priced tolerance
+//! broken out term by term ([`tolerance_terms`]; the terms sum — in
+//! order — to `domain::tolerance` bit-for-bit).
+
+use crate::campaign::TracePool;
+use crate::config::Scenario;
+use crate::sim::engine::simulate_from;
+use crate::stats::Welford;
+use crate::strategy::{Policy, PolicyKind};
+use crate::validate::domain::{
+    self, Inapplicable, TolerancePolicy, FIRST_ORDER_MAX, MIN_PERIODS, OVERLAP_MAX,
+    PLATFORM_RATE_TOL,
+};
+use crate::validate::{ValCell, Verdict};
+
+/// One priced term of the tolerance budget.
+#[derive(Clone, Copy, Debug)]
+pub struct ToleranceTerm {
+    pub label: &'static str,
+    pub value: f64,
+}
+
+/// The 5 tolerance terms, in the exact order `domain::tolerance` sums
+/// them — so `terms.iter().fold(0.0, |a, t| a + t.value)` is
+/// bit-identical to the priced tolerance.
+pub fn tolerance_terms(
+    policy: &TolerancePolicy,
+    sc: &Scenario,
+    kind: PolicyKind,
+    tr: f64,
+    ci95: f64,
+) -> [ToleranceTerm; 5] {
+    let x = tr / sc.platform.mu;
+    [
+        ToleranceTerm { label: "abs_floor", value: policy.abs_floor },
+        ToleranceTerm {
+            label: "tail_spread",
+            value: policy.tail_floor * (sc.fault_law.cv2() - 1.0).clamp(0.0, 2.0),
+        },
+        ToleranceTerm { label: "curvature", value: policy.curvature * x * x },
+        ToleranceTerm {
+            label: "renewal_excess",
+            value: domain::renewal_excess_waste(sc, kind, tr),
+        },
+        ToleranceTerm { label: "sampling_ci", value: policy.ci_mult * ci95 },
+    ]
+}
+
+/// One sentence per [`Inapplicable`] variant, carrying the measured
+/// quantity that tripped the guard. Defined for *every* variant (even
+/// ones `classify` cannot reach for a given cell) so the transcript
+/// goldens in `tests/scenario.rs` can pin each one.
+pub fn guard_sentence(
+    reason: Inapplicable,
+    sc: &Scenario,
+    kind: PolicyKind,
+    tr: f64,
+    tp: f64,
+    policy: &TolerancePolicy,
+) -> String {
+    use crate::model::waste::Inapplicability as M;
+    let pf = &sc.platform;
+    match reason {
+        Inapplicable::Model(M::PeriodWithinCheckpoint) => format!(
+            "structural guard period_within_checkpoint: T_R = {tr:.3} <= C = {} leaves no room for work in a period",
+            pf.c
+        ),
+        Inapplicable::Model(M::MtbfWithinRecovery) => format!(
+            "structural guard mtbf_within_recovery: platform MTBF mu = {:.3} <= D + R = {} — the platform re-faults before it finishes recovering",
+            pf.mu,
+            pf.d + pf.r
+        ),
+        Inapplicable::Model(M::ZeroPrecision) => "structural guard zero_precision: predictor precision p = 0 — every prediction is false, and Eqs. (4)/(10)/(14) divide by p*mu".to_string(),
+        Inapplicable::Model(M::ProactivePeriodOutsideWindow) => format!(
+            "structural guard proactive_period_outside_window: T_P = {tp:.3} does not satisfy Cp = {} <= T_P <= I = {}",
+            pf.cp, sc.predictor.window
+        ),
+        Inapplicable::Model(M::WasteOutOfRange) => "structural guard waste_out_of_range: the closed form evaluates outside [0, 1] at this period".to_string(),
+        Inapplicable::NoClosedForm => "the paper derives no closed form for this execution mode (ExactPred / WindowEndCkpt / QTrust); there is no model value to compare against".to_string(),
+        Inapplicable::BeyondFirstOrder => format!(
+            "regime guard beyond_first_order: T_R/mu = {:.4} > {FIRST_ORDER_MAX} — the truncated O((T_R/mu)^2) terms of the first-order expansion dominate",
+            tr / pf.mu
+        ),
+        Inapplicable::JobTooShort => format!(
+            "regime guard job_too_short: the job holds {:.2} regular periods < {MIN_PERIODS} — no steady state for the asymptotic waste model",
+            sc.job_size / tr
+        ),
+        Inapplicable::WindowsOverlap => format!(
+            "regime guard windows_overlap: (I_max + Cp)/mu_P = {:.4} > {OVERLAP_MAX} — overlapping prediction windows, which the analysis assumes away (paper §2.3)",
+            (sc.predictor.max_window() + pf.cp) / sc.predictor.mu_p(pf.mu)
+        ),
+        Inapplicable::TransientFaultModel => format!(
+            "regime guard transient_fault_model: fresh per-processor {} traces carry the superposed infant-mortality transient the 1/mu rate assumption misses",
+            sc.fault_law.label()
+        ),
+        Inapplicable::HorizonTooShort => format!(
+            "regime guard horizon_too_short: the finite-horizon renewal excess alone is {:.4} > max_renewal_excess = {} — the job never reaches this heavy-tailed law's renewal rate",
+            domain::renewal_excess_waste(sc, kind, tr),
+            policy.max_renewal_excess
+        ),
+        Inapplicable::NonUniformWindow => format!(
+            "predictor-model guard non_uniform_window: {} varies the window length per announcement, so the fixed-I terms of Eqs. (4)/(10)/(14) have no single I",
+            sc.predictor.model.label()
+        ),
+        Inapplicable::NoisyWindowPlacement => format!(
+            "predictor-model guard noisy_window_placement: {} places windows with noise, so the effective recall sits below the nominal r = {} the formulas use",
+            sc.predictor.model.label(),
+            sc.predictor.recall
+        ),
+        Inapplicable::ConfidenceClasses => format!(
+            "predictor-model guard confidence_classes: {} attaches per-announcement trust, while the q = 1 formulas assume every prediction is acted on",
+            sc.predictor.model.label()
+        ),
+        Inapplicable::PlatformRateNonconforming => format!(
+            "scale guard platform_rate_nonconforming: the measured superposed platform fault rate deviates from the 1/mu = {:.3e} approximation by more than {PLATFORM_RATE_TOL} (a-posteriori scale-check verdict)",
+            1.0 / pf.mu
+        ),
+    }
+}
+
+/// Everything `explain` knows about one conformance cell.
+#[derive(Clone, Debug)]
+pub struct Explanation {
+    pub key: String,
+    pub strategy: String,
+    pub law: String,
+    pub multiplier: f64,
+    /// Regular period actually compared (NaN when no closed form exists,
+    /// so no policy was instantiated).
+    pub tr: f64,
+    pub instances: u64,
+    pub sim_mean: f64,
+    pub sim_ci95: f64,
+    pub model: f64,
+    pub deviation: f64,
+    pub tolerance: f64,
+    pub verdict: Verdict,
+    /// The guard sentence, when the cell classified [`Inapplicable`].
+    pub guard: Option<String>,
+    /// The 5 priced tolerance terms (empty when inapplicable).
+    pub terms: Vec<ToleranceTerm>,
+}
+
+/// Re-derive one cell's verdict, keeping the intermediates. Mirrors
+/// `validate::evaluate_cell` step for step: same early-outs, same
+/// paired seeds, same pool replay — the statistics are bit-identical to
+/// what a sweep at the same instance count stores.
+pub fn explain_cell(vc: &ValCell, instances: usize, policy: &TolerancePolicy) -> Explanation {
+    let sc = vc.scenario();
+    let kind = vc.cell.strategy.kind();
+    let mut ex = Explanation {
+        key: vc.key(),
+        strategy: vc.cell.strategy.to_string(),
+        law: vc.cell.fault_law.label(),
+        multiplier: vc.multiplier,
+        tr: f64::NAN,
+        instances: 0,
+        sim_mean: f64::NAN,
+        sim_ci95: f64::NAN,
+        model: f64::NAN,
+        deviation: f64::NAN,
+        tolerance: f64::NAN,
+        verdict: Verdict::Inapplicable(Inapplicable::NoClosedForm),
+        guard: None,
+        terms: Vec::new(),
+    };
+    if kind.grid_strategy().is_none() {
+        ex.guard = Some(guard_sentence(
+            Inapplicable::NoClosedForm,
+            &sc,
+            kind,
+            f64::NAN,
+            f64::NAN,
+            policy,
+        ));
+        return ex;
+    }
+    let pol = vc.cell.strategy.policy(&sc);
+    let tr = pol.tr * vc.multiplier;
+    ex.tr = tr;
+    let model = match domain::classify(&sc, kind, tr, pol.tp, policy) {
+        Err(reason) => {
+            ex.verdict = Verdict::Inapplicable(reason);
+            ex.guard = Some(guard_sentence(reason, &sc, kind, tr, pol.tp, policy));
+            return ex;
+        }
+        Ok(m) => m,
+    };
+    let pol = Policy { kind, tr, tp: pol.tp };
+    let mut pool = TracePool::new();
+    let mut waste = Welford::new();
+    for i in 0..instances.max(1) {
+        let seed = vc.cell.instance_seed(i as u64);
+        let out = simulate_from(&sc, &pol, 1.0, seed, pool.replay(vc.pool_hash, &sc, seed));
+        waste.push(out.waste());
+    }
+    ex.instances = waste.len() as u64;
+    ex.sim_mean = waste.mean();
+    ex.sim_ci95 = waste.ci95();
+    ex.model = model;
+    ex.deviation = (waste.mean() - model).abs();
+    ex.tolerance = domain::tolerance(policy, &sc, kind, tr, waste.ci95());
+    ex.terms = tolerance_terms(policy, &sc, kind, tr, waste.ci95()).to_vec();
+    ex.verdict =
+        if ex.deviation <= ex.tolerance { Verdict::Pass } else { Verdict::Fail };
+    ex
+}
+
+impl Explanation {
+    /// Deterministic multi-line transcript (the `ckptwin explain`
+    /// output; goldens pinned in `tests/scenario.rs`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("cell      {}\n", self.key));
+        out.push_str(&format!(
+            "scenario  strategy {} | law {} | multiplier {}\n",
+            self.strategy, self.law, self.multiplier
+        ));
+        out.push_str(&format!("verdict   {}\n", self.verdict.label()));
+        if let Some(guard) = &self.guard {
+            out.push_str(&format!("  guard: {guard}\n"));
+            if self.tr.is_finite() {
+                out.push_str(&format!("  period T_R = {:.3} (classified before simulation)\n", self.tr));
+            }
+            return out;
+        }
+        out.push_str(&format!(
+            "  period T_R = {:.3} (analytic optimum x {})\n",
+            self.tr, self.multiplier
+        ));
+        out.push_str(&format!(
+            "  simulated waste {:.6} +/- {:.6} (CI95, {} instances, paired seeds)\n",
+            self.sim_mean, self.sim_ci95, self.instances
+        ));
+        out.push_str(&format!("  model waste     {:.6}\n", self.model));
+        out.push_str(&format!(
+            "  deviation       {:.6} {} tolerance {:.6}\n",
+            self.deviation,
+            if self.deviation <= self.tolerance { "<=" } else { ">" },
+            self.tolerance
+        ));
+        out.push_str("  tolerance terms:\n");
+        let mut total = 0.0;
+        for t in &self.terms {
+            total += t.value;
+            out.push_str(&format!("    {:<16}{:.6}\n", t.label, t.value));
+        }
+        out.push_str(&format!("    {:<16}{total:.6}\n", "total"));
+        out
+    }
+}

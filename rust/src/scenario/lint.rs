@@ -1,0 +1,199 @@
+//! `ckptwin lint` — every diagnostic for a `.ckpt` file, before a sweep
+//! burns CPU.
+//!
+//! Unlike [`compile`](super::compile), which stops at the first error,
+//! lint collects *all* schema errors (unknown sections/keys with
+//! nearest-match suggestions, bad registry ids, out-of-range params,
+//! expectation mismatches) and then — when the file compiles — runs the
+//! `validate::domain` classifier over every compiled cell as a warning
+//! pre-pass: cells that would be classified out of the formulas'
+//! validity domain (WindowsOverlap, BeyondFirstOrder, JobTooShort,
+//! NoClosedForm, …) are reported per reason with counts. Those are
+//! warnings, not errors: classified cells are a first-class conformance
+//! outcome, but a suite that is *mostly* out of domain is usually a
+//! mis-set axis.
+
+use super::ast::ScenarioFile;
+use super::compile::{self, CompiledSuite, SuiteKind};
+use crate::validate::domain::{self, Inapplicable};
+use crate::validate::SweepOptions;
+
+/// One lint finding with its source line (0 = file-level).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diag {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line > 0 {
+            write!(f, "line {}: {}", self.line, self.msg)
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+/// Everything lint found. `errors` empty ⇒ the file compiles and is
+/// runnable; `warnings` are advisory (domain pre-classification).
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub errors: Vec<Diag>,
+    pub warnings: Vec<Diag>,
+    /// Compiled cell count (0 when the file does not compile).
+    pub cells: usize,
+    /// Suite name, when the file compiles.
+    pub name: Option<String>,
+}
+
+impl LintReport {
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
+
+/// Classify every compiled cell without simulating, and fold the
+/// out-of-domain reasons into per-reason warning counts.
+fn domain_warnings(suite: &CompiledSuite, out: &mut Vec<Diag>) {
+    let tolerance = SweepOptions::default().tolerance;
+    // Campaign suites are linted as their m = 1.0 conformance shadow:
+    // same cells, platform-renewal fault model, the model the sweep
+    // would price them against.
+    let cells = match suite.kind {
+        SuiteKind::Conformance => suite.val_cells(),
+        SuiteKind::Campaign => crate::validate::expand_cells(&suite.grid, &[1.0]),
+    };
+    let total = cells.len();
+    let mut counts: Vec<(Inapplicable, usize)> = Vec::new();
+    for vc in &cells {
+        let kind = vc.cell.strategy.kind();
+        // Mirrors validate::evaluate_cell: no closed form ⇒ no policy
+        // instantiation (this also keeps lint cheap for the BestPeriod
+        // twins, whose policy is a brute-force search).
+        let reason = if kind.grid_strategy().is_none() {
+            Some(Inapplicable::NoClosedForm)
+        } else {
+            let sc = vc.scenario();
+            let pol = vc.cell.strategy.policy(&sc);
+            domain::classify(&sc, kind, pol.tr * vc.multiplier, pol.tp, &tolerance).err()
+        };
+        if let Some(reason) = reason {
+            match counts.iter_mut().find(|(r, _)| *r == reason) {
+                Some((_, n)) => *n += 1,
+                None => counts.push((reason, 1)),
+            }
+        }
+    }
+    for (reason, n) in counts {
+        out.push(Diag {
+            line: 0,
+            msg: format!(
+                "{n}/{total} cells classify {} (reported, never failed)",
+                reason.label()
+            ),
+        });
+    }
+}
+
+/// Lint scenario text: parse, sweep the schema for every unknown
+/// section/key, compile, pre-classify.
+pub fn lint_str(text: &str) -> LintReport {
+    let mut report = LintReport::default();
+    let file = match ScenarioFile::parse(text) {
+        Ok(f) => f,
+        Err(e) => {
+            report.errors.push(Diag { line: e.line, msg: e.msg });
+            return report;
+        }
+    };
+    // Comprehensive schema sweep: collect every unknown section and key
+    // (compile would stop at the first).
+    for section in &file.sections {
+        match compile::section_keys(&section.name) {
+            None => {
+                let msg = match crate::campaign::overrides::nearest(
+                    &section.name,
+                    compile::SECTIONS.iter().copied(),
+                ) {
+                    Some(s) => format!(
+                        "unknown section '[{}]' (did you mean '[{s}]'?)",
+                        section.name
+                    ),
+                    None => format!("unknown section '[{}]'", section.name),
+                };
+                report.errors.push(Diag { line: section.line, msg });
+            }
+            Some(allowed) => {
+                for entry in &section.entries {
+                    if !allowed.contains(&entry.key.as_str()) {
+                        let msg = match crate::campaign::overrides::nearest(
+                            &entry.key,
+                            allowed.iter().copied(),
+                        ) {
+                            Some(s) => format!(
+                                "unknown key '{}' in [{}] (did you mean '{s}'?)",
+                                entry.key, section.name
+                            ),
+                            None => {
+                                format!("unknown key '{}' in [{}]", entry.key, section.name)
+                            }
+                        };
+                        report.errors.push(Diag { line: entry.line, msg });
+                    }
+                }
+            }
+        }
+    }
+    if !report.errors.is_empty() {
+        return report;
+    }
+    match compile::compile(&file) {
+        Err(e) => report.errors.push(Diag { line: e.line, msg: e.msg }),
+        Ok(suite) => {
+            report.cells = suite.cell_count();
+            report.name = Some(suite.name.clone());
+            domain_warnings(&suite, &mut report.warnings);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_multiple_schema_errors() {
+        let r = lint_str("[suite]\nname = t\n\n[axes]\nprocz = 1\nstrategis = Daly\n");
+        assert!(!r.ok());
+        assert_eq!(r.errors.len(), 2);
+        assert_eq!(r.errors[0].line, 5);
+        assert_eq!(r.errors[1].line, 6);
+        assert!(r.errors[0].msg.contains("did you mean 'procs'"), "{}", r.errors[0]);
+    }
+
+    #[test]
+    fn clean_conformance_suite_warns_about_classified_cells() {
+        let r = lint_str("[suite]\nname = census\nkind = conformance\nbase = smoke\n");
+        assert!(r.ok(), "{:?}", r.errors);
+        assert_eq!(r.cells, 72);
+        // The tier-1 census has 26 classified cells: 24 no_closed_form
+        // + 2 proactive_period_outside_window (pinned in
+        // tests/conformance.rs).
+        let total: usize = r
+            .warnings
+            .iter()
+            .map(|w| w.msg.split('/').next().unwrap().parse::<usize>().unwrap())
+            .sum();
+        assert_eq!(total, 26, "{:?}", r.warnings);
+        assert!(r.warnings.iter().any(|w| w.msg.contains("no_closed_form")));
+    }
+
+    #[test]
+    fn compile_errors_flow_through() {
+        let r = lint_str("[suite]\nname = t\nbase = nope\n");
+        assert!(!r.ok());
+        assert!(r.errors[0].msg.contains("unknown base"), "{}", r.errors[0]);
+    }
+}

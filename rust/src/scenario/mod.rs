@@ -1,0 +1,60 @@
+//! # Scenario language — declarative `.ckpt` suites
+//!
+//! A `.ckpt` file names strategies, predictors, fault laws, platform
+//! sizes and prediction windows by their registry ids and compiles to
+//! the exact same [`campaign::Grid`](crate::campaign::Grid) /
+//! [`validate::ValCell`](crate::validate::ValCell) cells the CLI flags
+//! produce — byte-identical store keys and scenario hashes, because the
+//! compiler funnels every `[axes]` entry through
+//! [`campaign::overrides::apply_override`](crate::campaign::overrides::apply_override),
+//! the same function that backs `--procs`/`--strategies`/… (pinned by
+//! `tests/scenario.rs`).
+//!
+//! Pipeline: text → [`ast::ScenarioFile`] (syntax + line numbers) →
+//! [`compile::CompiledSuite`] (registry resolution, range checks,
+//! expectation checks) → cells. [`lint`] runs the same pipeline but
+//! collects *all* diagnostics and adds a validity-domain pre-pass;
+//! [`replay`] inverts the store-key grammar so any stored cell can be
+//! re-run bit-identically from its hash; [`explain`] prints why a
+//! conformance cell passed/failed/was classified, with the 5-term
+//! priced tolerance broken out. See `DESIGN.md` §Scenario language.
+
+pub mod ast;
+pub mod compile;
+pub mod explain;
+pub mod lint;
+pub mod replay;
+
+pub use ast::ScenarioFile;
+pub use compile::{CompiledSuite, SuiteKind};
+pub use explain::{explain_cell, Explanation};
+pub use lint::{lint_str, LintReport};
+
+use std::fmt;
+
+/// A scenario-language diagnostic carrying the 1-based source line it
+/// points at (`line == 0` means the error is file-level, e.g. a missing
+/// required section).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScenarioError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl ScenarioError {
+    pub fn new(line: usize, msg: impl Into<String>) -> Self {
+        ScenarioError { line, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "line {}: {}", self.line, self.msg)
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}

@@ -1,0 +1,413 @@
+//! `ckptwin replay <store> <cell-hash> [--verify]` — re-run any stored
+//! campaign/conformance cell from its hash and diff the fresh record
+//! field-for-field against the stored one.
+//!
+//! The cell key grammar (see
+//! [`campaign::Cell::key`](crate::campaign::Cell) /
+//! [`validate::ValCell::key`](crate::validate::ValCell)) is total: it
+//! names every input that shapes a record — platform size, C_p ratio,
+//! laws, predictor spec + model, strategy id + params, scale, shards,
+//! fault model, multiplier.  [`parse_cell_key`] inverts it, and then
+//! *re-renders* the rebuilt cell's key and requires it to be
+//! byte-identical to the input — any float-formatting or grammar drift
+//! is an error here, never a silent wrong-cell replay.  Paired seeds
+//! derive from the key's trace hash, so a re-run at the stored instance
+//! count reproduces the record bit-for-bit (the CI replay-verify smoke
+//! pins this).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::campaign::{self, Cell, CellRecord, Grid};
+use crate::config::{FaultModel, PredModel, PredictorSpec};
+use crate::sim::distribution::Law;
+use crate::strategy::StrategyId;
+use crate::util::split_top_level_on;
+use crate::validate::{self, store::ConformanceRecord, SweepOptions, ValCell};
+
+/// Which store format a JSONL file holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreKind {
+    Campaign,
+    Conformance,
+}
+
+/// Decide a store's kind from its first parseable record: conformance
+/// records carry a `verdict` field, campaign records never do.
+pub fn sniff_store_kind(path: &Path) -> Result<StoreKind> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading store {}", path.display()))?;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Ok(v) = crate::jsonio::parse(line) {
+            return Ok(if v.get("verdict").is_some() {
+                StoreKind::Conformance
+            } else {
+                StoreKind::Campaign
+            });
+        }
+    }
+    bail!("{}: no parseable records — cannot tell campaign from conformance", path.display())
+}
+
+/// Ordered field cursor over a `;`-separated key (top-level split: the
+/// separators inside `mixedwin(i1=…;i2=…)` or `QTrust(q=…)` stay put).
+struct Fields<'a> {
+    fields: Vec<(&'a str, &'a str)>,
+    at: usize,
+}
+
+impl<'a> Fields<'a> {
+    fn parse(key: &'a str) -> Result<Fields<'a>> {
+        let mut fields = Vec::new();
+        for piece in split_top_level_on(key, ';') {
+            let (k, v) = piece
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad key field '{piece}' in '{key}'"))?;
+            fields.push((k, v));
+        }
+        Ok(Fields { fields, at: 0 })
+    }
+
+    /// Consume the next field, which must be named `name`.
+    fn expect(&mut self, name: &str) -> Result<&'a str> {
+        let (k, v) = *self
+            .fields
+            .get(self.at)
+            .ok_or_else(|| anyhow!("key ended early: expected field '{name}'"))?;
+        if k != name {
+            bail!("expected key field '{name}', found '{k}'");
+        }
+        self.at += 1;
+        Ok(v)
+    }
+
+    /// Consume the next field iff it is named `name`.
+    fn accept(&mut self, name: &str) -> Option<&'a str> {
+        match self.fields.get(self.at) {
+            Some(&(k, v)) if k == name => {
+                self.at += 1;
+                Some(v)
+            }
+            _ => None,
+        }
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.at != self.fields.len() {
+            bail!("trailing key fields: '{}…'", self.fields[self.at].0);
+        }
+        Ok(())
+    }
+}
+
+fn num<T: std::str::FromStr>(what: &str, raw: &str) -> Result<T> {
+    raw.trim().parse().map_err(|_| anyhow!("bad {what} '{raw}' in cell key"))
+}
+
+fn parse_law(what: &str, raw: &str) -> Result<Law> {
+    Law::parse(raw).ok_or_else(|| anyhow!("bad {what} '{raw}' in cell key"))
+}
+
+/// Parse the leading (campaign) portion of a key off the cursor.
+fn parse_cell_fields(f: &mut Fields<'_>) -> Result<Cell> {
+    let procs: u64 = num("procs", f.expect("procs")?)?;
+    let cp_ratio: f64 = num("cp ratio", f.expect("cp")?)?;
+    let fault_law = parse_law("fault law", f.expect("law")?)?;
+    let false_pred_law = parse_law("false-prediction law", f.expect("fp")?)?;
+    let scale: f64 = num("scale", f.expect("scale")?)?;
+    let shards: u32 = match f.accept("shards") {
+        Some(v) => num("shard count", v)?,
+        None => 1,
+    };
+    let precision: f64 = num("precision", f.expect("p")?)?;
+    let recall: f64 = num("recall", f.expect("r")?)?;
+    let window: f64 = num("window", f.expect("I")?)?;
+    let model = match f.accept("pm") {
+        Some(v) => PredModel::parse_label(v).map_err(|e| anyhow!(e))?,
+        None => PredModel::Paper,
+    };
+    let strategy = StrategyId::parse(f.expect("strat")?).map_err(|e| anyhow!(e))?;
+    let predictor = PredictorSpec { recall, precision, window, model };
+    Ok(Cell::new(procs, cp_ratio, fault_law, false_pred_law, predictor, strategy, scale)
+        .with_shards(shards))
+}
+
+/// Invert [`Cell::key`].  The rebuilt cell must re-render to the input
+/// byte-for-byte (and therefore hash identically).
+pub fn parse_cell_key(key: &str) -> Result<Cell> {
+    let mut f = Fields::parse(key)?;
+    let cell = parse_cell_fields(&mut f)?;
+    f.finish()?;
+    if cell.key() != key {
+        bail!(
+            "cell key does not round-trip: '{key}' re-renders as '{}' — \
+             refusing to replay a possibly different cell",
+            cell.key()
+        );
+    }
+    Ok(cell)
+}
+
+fn parse_fault_model(raw: &str) -> Result<FaultModel> {
+    if raw == "platform" {
+        return Ok(FaultModel::PlatformRenewal);
+    }
+    if let Some(n) = raw.strip_prefix("perproc") {
+        return Ok(FaultModel::PerProcessor { n: num("fault-model procs", n)? });
+    }
+    if let Some(n) = raw.strip_prefix("stationary") {
+        return Ok(FaultModel::PerProcessorStationary { n: num("fault-model procs", n)? });
+    }
+    bail!("bad fault-model label '{raw}' (platform|perprocN|stationaryN)")
+}
+
+/// Invert [`ValCell::key`] (a cell key plus `;fm=…;m=…`), with the same
+/// byte-for-byte round-trip requirement.
+pub fn parse_val_cell_key(key: &str) -> Result<ValCell> {
+    let mut f = Fields::parse(key)?;
+    let cell = parse_cell_fields(&mut f)?;
+    let fm = parse_fault_model(f.expect("fm")?)?;
+    let multiplier: f64 = num("multiplier", f.expect("m")?)?;
+    f.finish()?;
+    let vc = ValCell::new(cell, multiplier, fm);
+    if vc.key() != key {
+        bail!(
+            "conformance cell key does not round-trip: '{key}' re-renders as '{}'",
+            vc.key()
+        );
+    }
+    Ok(vc)
+}
+
+/// One diverging field between a stored record and its re-run.
+#[derive(Clone, Debug)]
+pub struct FieldDiff {
+    pub field: &'static str,
+    pub stored: String,
+    pub fresh: String,
+}
+
+fn push_f64(out: &mut Vec<FieldDiff>, field: &'static str, stored: f64, fresh: f64) {
+    // Bit-equality, except NaN == NaN (conformance stores null out
+    // non-finite fields; they read back as NaN).
+    if stored.to_bits() != fresh.to_bits() && !(stored.is_nan() && fresh.is_nan()) {
+        out.push(FieldDiff { field, stored: format!("{stored:?}"), fresh: format!("{fresh:?}") });
+    }
+}
+
+fn push_str(out: &mut Vec<FieldDiff>, field: &'static str, stored: &str, fresh: &str) {
+    if stored != fresh {
+        out.push(FieldDiff { field, stored: stored.to_string(), fresh: fresh.to_string() });
+    }
+}
+
+/// Field-for-field diff of two campaign records (empty ⇒ bit-identical
+/// replay).
+pub fn diff_campaign(stored: &CellRecord, fresh: &CellRecord) -> Vec<FieldDiff> {
+    let mut out = Vec::new();
+    push_str(&mut out, "key", &stored.key, &fresh.key);
+    if stored.hash != fresh.hash {
+        out.push(FieldDiff {
+            field: "hash",
+            stored: format!("{:016x}", stored.hash),
+            fresh: format!("{:016x}", fresh.hash),
+        });
+    }
+    if stored.instances != fresh.instances {
+        out.push(FieldDiff {
+            field: "instances",
+            stored: stored.instances.to_string(),
+            fresh: fresh.instances.to_string(),
+        });
+    }
+    push_f64(&mut out, "waste_mean", stored.waste_mean, fresh.waste_mean);
+    push_f64(&mut out, "waste_var", stored.waste_var, fresh.waste_var);
+    push_f64(&mut out, "waste_ci95", stored.waste_ci95, fresh.waste_ci95);
+    push_f64(&mut out, "waste_min", stored.waste_min, fresh.waste_min);
+    push_f64(&mut out, "waste_max", stored.waste_max, fresh.waste_max);
+    push_f64(&mut out, "makespan_mean", stored.makespan_mean, fresh.makespan_mean);
+    push_f64(&mut out, "tr", stored.tr, fresh.tr);
+    out
+}
+
+/// Field-for-field diff of two conformance records.
+pub fn diff_conformance(stored: &ConformanceRecord, fresh: &ConformanceRecord) -> Vec<FieldDiff> {
+    let mut out = Vec::new();
+    push_str(&mut out, "key", &stored.key, &fresh.key);
+    if stored.hash != fresh.hash {
+        out.push(FieldDiff {
+            field: "hash",
+            stored: format!("{:016x}", stored.hash),
+            fresh: format!("{:016x}", fresh.hash),
+        });
+    }
+    push_str(&mut out, "strategy", &stored.strategy, &fresh.strategy);
+    push_str(&mut out, "law", &stored.law, &fresh.law);
+    push_f64(&mut out, "multiplier", stored.multiplier, fresh.multiplier);
+    push_f64(&mut out, "tr", stored.tr, fresh.tr);
+    if stored.instances != fresh.instances {
+        out.push(FieldDiff {
+            field: "instances",
+            stored: stored.instances.to_string(),
+            fresh: fresh.instances.to_string(),
+        });
+    }
+    push_f64(&mut out, "sim_mean", stored.sim_mean, fresh.sim_mean);
+    push_f64(&mut out, "sim_ci95", stored.sim_ci95, fresh.sim_ci95);
+    push_f64(&mut out, "model", stored.model, fresh.model);
+    push_f64(&mut out, "deviation", stored.deviation, fresh.deviation);
+    push_f64(&mut out, "tolerance", stored.tolerance, fresh.tolerance);
+    push_str(&mut out, "verdict", &stored.verdict, &fresh.verdict);
+    push_str(&mut out, "reason", &stored.reason, &fresh.reason);
+    out
+}
+
+/// Re-run a stored campaign cell from its key at its stored instance
+/// count and return the fresh record.
+pub fn replay_campaign(stored: &CellRecord) -> Result<CellRecord> {
+    let cell = parse_cell_key(&stored.key)?;
+    if cell.hash != stored.hash {
+        bail!(
+            "stored hash {:016x} does not match key '{}' (hashes to {:016x}) — corrupt record?",
+            stored.hash,
+            stored.key,
+            cell.hash
+        );
+    }
+    let opt = campaign::CampaignOptions {
+        instances: stored.instances.max(1) as usize,
+        block: 0,
+        threads: 0,
+    };
+    let (outcomes, _skipped) = campaign::run_cells(&[cell], &opt, None)?;
+    outcomes
+        .into_iter()
+        .next()
+        .map(|o| o.record())
+        .ok_or_else(|| anyhow!("replay produced no record for {}", stored.key))
+}
+
+/// Re-run a stored conformance cell from its key at its stored instance
+/// count and return the fresh record.
+pub fn replay_conformance(stored: &ConformanceRecord) -> Result<ConformanceRecord> {
+    let vc = parse_val_cell_key(&stored.key)?;
+    if vc.hash != stored.hash {
+        bail!(
+            "stored hash {:016x} does not match key '{}' (hashes to {:016x}) — corrupt record?",
+            stored.hash,
+            stored.key,
+            vc.hash
+        );
+    }
+    let opt = SweepOptions {
+        instances: stored.instances.max(1) as usize,
+        ..SweepOptions::default()
+    };
+    let (reports, _skipped) = validate::run_sweep(&[vc], &opt, None)?;
+    reports
+        .into_iter()
+        .next()
+        .map(|r| r.record())
+        .ok_or_else(|| anyhow!("replay produced no record for {}", stored.key))
+}
+
+/// Round-trip sanity for the key parsers over a whole grid (used by
+/// tests; cheap — no simulation).
+pub fn check_grid_round_trip(grid: &Grid) -> Result<()> {
+    for cell in grid.expand() {
+        let parsed = parse_cell_key(&cell.key())?;
+        if parsed.hash != cell.hash {
+            bail!("hash drift for '{}'", cell.key());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::registry as predictors;
+    use crate::strategy::registry as strategies;
+
+    fn paper_cell(strategy: &str) -> Cell {
+        Cell::new(
+            1 << 16,
+            1.0,
+            Law::Exponential,
+            Law::Exponential,
+            predictors::get("a").unwrap().spec(600.0),
+            strategies::get(strategy).unwrap(),
+            1.0,
+        )
+    }
+
+    #[test]
+    fn smoke_grid_keys_round_trip() {
+        check_grid_round_trip(&Grid::smoke()).unwrap();
+    }
+
+    #[test]
+    fn exotic_keys_round_trip() {
+        // Non-paper predictor models, params, shards, fault models.
+        let mut grid = Grid::smoke();
+        crate::campaign::overrides::apply_override(
+            &mut grid,
+            "predictors",
+            "a,biased(beta=2),mixedwin,jitter,classed",
+        )
+        .unwrap();
+        crate::campaign::overrides::apply_override(
+            &mut grid,
+            "strategies",
+            "Daly,QTrust(q=0.25),BestPeriod-NoPred(seeds=3)",
+        )
+        .unwrap();
+        crate::campaign::overrides::apply_override(&mut grid, "shards", "1,4").unwrap();
+        check_grid_round_trip(&grid).unwrap();
+        for cell in grid.expand() {
+            for (m, fm) in [
+                (1.0, FaultModel::PlatformRenewal),
+                (0.75, FaultModel::PerProcessor { n: 1 << 16 }),
+                (1.5, FaultModel::PerProcessorStationary { n: 1 << 16 }),
+            ] {
+                let vc = ValCell::new(cell.clone(), m, fm);
+                let parsed = parse_val_cell_key(&vc.key()).unwrap();
+                assert_eq!(parsed.hash, vc.hash, "{}", vc.key());
+                assert_eq!(parsed.pool_hash, vc.pool_hash, "{}", vc.key());
+            }
+        }
+    }
+
+    #[test]
+    fn tampered_keys_are_rejected() {
+        let cell = paper_cell("Daly");
+        let key = cell.key();
+        assert!(parse_cell_key(&key.replace("strat=Daly", "strat=Dailly")).is_err());
+        assert!(parse_cell_key(&key.replace("procs=", "procz=")).is_err());
+        assert!(parse_cell_key(&format!("{key};extra=1")).is_err());
+        assert!(parse_cell_key("procs=10").is_err());
+        // Non-canonical float spelling must not silently re-key.
+        let err = parse_cell_key(&key.replace("cp=1", "cp=1.0")).unwrap_err();
+        assert!(err.to_string().contains("round-trip"), "{err}");
+    }
+
+    #[test]
+    fn pred_model_labels_round_trip() {
+        for model in [
+            PredModel::Paper,
+            PredModel::Biased { beta: 2.0 },
+            PredModel::MixedWindow { i1: 300.0, i2: 1200.0, w: 0.5 },
+            PredModel::Jitter { sigma: 120.0 },
+            PredModel::Classed { p_hi: 0.95, p_lo: 0.6, frac: 0.5 },
+        ] {
+            assert_eq!(PredModel::parse_label(&model.label()).unwrap(), model);
+        }
+        assert!(PredModel::parse_label("nope(beta=1)").is_err());
+        assert!(PredModel::parse_label("biased(beta=x)").is_err());
+    }
+}

@@ -173,8 +173,20 @@ pub fn crc32(data: &[u8]) -> u32 {
 /// split, so `qtrust(q=0.25,…)` or `biased(beta=2,r=0.7)` stay one token.
 /// Shared by the CLI's `--strategies` and `--predictors` list parsers
 /// (`strategy::registry::parse_strategy_list`,
-/// `predictor::registry::parse_predictor_list`).
+/// `predictor::registry::parse_predictor_list`) and the scenario-file
+/// axis lists (`scenario::compile`).
 pub fn split_top_level(raw: &str) -> Vec<&str> {
+    split_top_level_on(raw, ',')
+}
+
+/// Separator-parametric form of [`split_top_level`]: split `raw` on
+/// top-level `sep`, where occurrences inside parentheses never split.
+/// `scenario::replay` uses `sep = ';'` to walk store-key fields, where
+/// predictor-model labels like `mixedwin(i1=300;i2=1200;w=0.5)` embed
+/// the separator inside parens. Invariants (pinned by `tests/prop.rs`):
+/// always returns at least one piece, and the pieces joined back with
+/// `sep` reproduce `raw` byte-for-byte.
+pub fn split_top_level_on(raw: &str, sep: char) -> Vec<&str> {
     let mut out = Vec::new();
     let mut depth = 0usize;
     let mut start = 0usize;
@@ -182,9 +194,9 @@ pub fn split_top_level(raw: &str) -> Vec<&str> {
         match ch {
             '(' => depth += 1,
             ')' => depth = depth.saturating_sub(1),
-            ',' if depth == 0 => {
+            c if c == sep && depth == 0 => {
                 out.push(&raw[start..i]);
-                start = i + 1;
+                start = i + ch.len_utf8();
             }
             _ => {}
         }

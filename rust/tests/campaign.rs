@@ -340,3 +340,29 @@ fn interrupted_campaign_resumes_exactly() {
         );
     }
 }
+
+/// Regression: grid overrides used to silently ignore unknown keys — a
+/// typo like `--strategis daly` ran the full default grid without
+/// complaint.  Unknown keys now error and name the nearest known key.
+#[test]
+fn unknown_override_keys_error_with_nearest_match() {
+    use ckptwin::campaign::overrides;
+
+    let mut g = small_grid();
+    let before = g.expand().len();
+    let err = overrides::apply_override(&mut g, "strategis", "daly").unwrap_err();
+    assert!(err.contains("unknown grid axis 'strategis'"), "{err}");
+    assert!(err.contains("did you mean 'strategies'"), "{err}");
+    // The failed override must not have touched the grid.
+    assert_eq!(g.expand().len(), before);
+
+    // The CLI key check rejects typo'd option names the same way.
+    let err = overrides::check_keys(["procs", "strategis"], &["out"]).unwrap_err();
+    assert!(err.contains("--strategis"), "{err}");
+    assert!(err.contains("did you mean '--strategies'"), "{err}");
+    assert!(overrides::check_keys(["procs", "out", "uniform-fp"], &["out"]).is_ok());
+
+    // Bad registry ids inside a list get a nearest-id suggestion too.
+    let err = overrides::apply_override(&mut g, "strategies", "dailly").unwrap_err();
+    assert!(err.to_ascii_lowercase().contains("did you mean 'daly'"), "{err}");
+}

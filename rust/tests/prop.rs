@@ -488,3 +488,37 @@ fn prop_jsonl_torn_tail_repair_idempotent_and_lossless() {
         let _ = std::fs::remove_file(&path);
     });
 }
+
+/// The key/list grammars lean on paren-aware top-level splitting:
+/// `--strategies qtrust(q=0.25,...)` splits on top-level commas, and
+/// `scenario::replay` walks store-key fields on top-level `;` (predictor
+/// labels like `mixedwin(i1=300;i2=1200;w=0.5)` embed the separator).
+/// Over adversarial nested/unbalanced inputs: never panics, always
+/// yields at least one piece, re-joining with the separator reproduces
+/// the input byte-for-byte, and every piece is itself separator-free at
+/// top level (re-splitting a piece is a fixpoint).
+#[test]
+fn prop_split_top_level_join_identity() {
+    use ckptwin::util::{split_top_level, split_top_level_on};
+    const CHARS: &[char] =
+        &['(', ')', '(', ',', ';', '=', 'a', 'b', '0', '.', ' ', 'µ'];
+    for_cases(53, 400, |case, rng| {
+        let len = rng.below(25);
+        let s: String = (0..len).map(|_| CHARS[rng.below(CHARS.len())]).collect();
+        for sep in [',', ';'] {
+            let sep_str = sep.to_string();
+            let pieces = split_top_level_on(&s, sep);
+            assert!(!pieces.is_empty(), "case {case}: {s:?}");
+            assert_eq!(pieces.join(&sep_str), s, "case {case}: {s:?} on {sep:?}");
+            for p in &pieces {
+                assert_eq!(
+                    split_top_level_on(p, sep).len(),
+                    1,
+                    "case {case}: piece {p:?} of {s:?} re-split"
+                );
+            }
+        }
+        // The legacy comma entry point is exactly the parametric form.
+        assert_eq!(split_top_level(&s), split_top_level_on(&s, ','));
+    });
+}

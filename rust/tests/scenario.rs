@@ -1,0 +1,388 @@
+//! Scenario-language integration tests: the committed `.ckpt` suites
+//! under `scenarios/` compile to pinned cell counts / keys / hashes, a
+//! scenario file expands byte-identically to the equivalent CLI-flag
+//! invocation, `replay` reproduces stored campaign and conformance
+//! records field for field, and `explain` re-derives sweep verdicts
+//! bit-for-bit with the 5 tolerance terms summing to the priced
+//! tolerance.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use ckptwin::campaign::{self, grid::fnv1a64, overrides, CampaignOptions, Grid, Store};
+use ckptwin::harness::figures;
+use ckptwin::model::waste::Inapplicability as M;
+use ckptwin::scenario::ast::ScenarioFile;
+use ckptwin::scenario::compile::{compile_str, SuiteKind};
+use ckptwin::scenario::explain::{explain_cell, guard_sentence};
+use ckptwin::scenario::lint_str;
+use ckptwin::scenario::replay::{
+    diff_campaign, diff_conformance, replay_campaign, replay_conformance,
+    sniff_store_kind, StoreKind,
+};
+use ckptwin::validate::{
+    self, CellReport, ConformanceStore, Inapplicable, SweepOptions, TolerancePolicy,
+    ValCell, Verdict,
+};
+
+fn scenario_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+fn read_suite(name: &str) -> String {
+    let path = scenario_dir().join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()))
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "ckptwin-scenario-{tag}-{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn assert_bits(a: f64, b: f64, what: &str, key: &str) {
+    let same = a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan());
+    assert!(same, "{what} differs at {key}: {a:?} vs {b:?}");
+}
+
+/// Every committed suite compiles; kind, cell count, first-cell key and
+/// scenario hash are pinned as literals so any drift in the key grammar
+/// or grid-expansion order breaks here with a readable diff.
+#[test]
+fn committed_suites_compile_to_pinned_counts_and_keys() {
+    struct Pin {
+        file: &'static str,
+        kind: SuiteKind,
+        cells: usize,
+        first_key: &'static str,
+    }
+    let pins = [
+        Pin {
+            file: "paper.ckpt",
+            kind: SuiteKind::Campaign,
+            cells: 1200,
+            first_key: "procs=65536;cp=1;law=exponential;fp=exponential;scale=1;\
+                        p=0.82;r=0.85;I=300;strat=Daly",
+        },
+        Pin {
+            file: "fig5.ckpt",
+            kind: SuiteKind::Campaign,
+            cells: 300,
+            first_key: "procs=65536;cp=1;law=exponential;fp=exponential;scale=1;\
+                        p=0.4;r=0.7;I=300;strat=Daly",
+        },
+        Pin {
+            file: "fig6.ckpt",
+            kind: SuiteKind::Campaign,
+            cells: 300,
+            first_key: "procs=65536;cp=0.1;law=exponential;fp=exponential;scale=1;\
+                        p=0.4;r=0.7;I=300;strat=Daly",
+        },
+        Pin {
+            file: "smoke.ckpt",
+            kind: SuiteKind::Campaign,
+            cells: 16,
+            first_key: "procs=65536;cp=1;law=exponential;fp=exponential;scale=0.05;\
+                        p=0.82;r=0.85;I=600;strat=RFO",
+        },
+        Pin {
+            file: "census72.ckpt",
+            kind: SuiteKind::Conformance,
+            cells: 72,
+            first_key: "procs=65536;cp=1;law=exponential;fp=exponential;scale=0.2;\
+                        p=0.82;r=0.85;I=600;strat=Daly;fm=platform;m=1",
+        },
+    ];
+    for pin in &pins {
+        let suite = compile_str(&read_suite(pin.file))
+            .unwrap_or_else(|e| panic!("{}: {e}", pin.file));
+        assert_eq!(suite.kind, pin.kind, "{}", pin.file);
+        assert_eq!(suite.cell_count(), pin.cells, "{}", pin.file);
+        let want = pin.first_key.replace(char::is_whitespace, "");
+        match suite.kind {
+            SuiteKind::Campaign => {
+                let cells = suite.cells();
+                assert_eq!(cells.len(), pin.cells, "{}", pin.file);
+                assert_eq!(cells[0].key(), want, "{}", pin.file);
+                assert_eq!(cells[0].hash, fnv1a64(want.as_bytes()), "{}", pin.file);
+            }
+            SuiteKind::Conformance => {
+                let cells = suite.val_cells();
+                assert_eq!(cells.len(), pin.cells, "{}", pin.file);
+                assert_eq!(cells[0].key(), want, "{}", pin.file);
+                assert_eq!(cells[0].hash, fnv1a64(want.as_bytes()), "{}", pin.file);
+            }
+        }
+    }
+}
+
+/// The committed figure suites are *exactly* what the harness emitter
+/// renders for the matching spec — the files are generated artifacts,
+/// re-derivable, never hand-drifted.
+#[test]
+fn fig_suites_match_harness_emitter_byte_for_byte() {
+    for id in [5u8, 6] {
+        let spec = figures::waste_vs_n_specs()
+            .into_iter()
+            .find(|s| s.id == id)
+            .unwrap_or_else(|| panic!("no waste-vs-N spec with id {id}"));
+        let emitted = figures::waste_vs_n_scenario(&spec);
+        let committed = read_suite(&format!("fig{id}.ckpt"));
+        assert_eq!(committed, emitted, "scenarios/fig{id}.ckpt drifted from emitter");
+    }
+}
+
+/// A `.ckpt` file and the equivalent CLI-flag invocation compile to the
+/// same grid: same keys, same scenario hashes, same paired seeds. This
+/// is the language's core contract — a scenario file is never a third
+/// dialect, it funnels through the same `overrides::apply_override`.
+#[test]
+fn scenario_file_and_cli_flags_expand_identically() {
+    // fig5.ckpt == `campaign run --grid paper --cp-ratios 1 --predictors b`.
+    let suite = compile_str(&read_suite("fig5.ckpt")).unwrap();
+    let mut flags = Grid::paper();
+    overrides::apply_override(&mut flags, "cp-ratios", "1").unwrap();
+    overrides::apply_override(&mut flags, "predictors", "b").unwrap();
+    let (a, b) = (suite.cells(), flags.expand());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.key(), y.key());
+        assert_eq!(x.hash, y.hash);
+        assert_eq!(x.instance_seed(7), y.instance_seed(7));
+    }
+
+    // smoke.ckpt spells every axis explicitly yet lands on Grid::smoke().
+    let suite = compile_str(&read_suite("smoke.ckpt")).unwrap();
+    let (a, b) = (suite.cells(), Grid::smoke().expand());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.key(), y.key());
+        assert_eq!(x.hash, y.hash);
+        assert_eq!(x.instance_seed(7), y.instance_seed(7));
+    }
+}
+
+/// parse -> render is a fixpoint on every committed file, and the
+/// generated figure files are already in canonical form (byte-equal to
+/// their own render).
+#[test]
+fn committed_files_render_canonically() {
+    for file in ["paper.ckpt", "fig5.ckpt", "fig6.ckpt", "smoke.ckpt", "census72.ckpt"] {
+        let raw = read_suite(file);
+        let once = ScenarioFile::parse(&raw).unwrap_or_else(|e| panic!("{file}: {e}"));
+        let rendered = once.render();
+        let again = ScenarioFile::parse(&rendered).unwrap().render();
+        assert_eq!(rendered, again, "{file}: render not a fixpoint");
+    }
+    // The emitter writes canonical form directly (no comments), so for
+    // the generated files raw == render exactly.
+    for file in ["fig5.ckpt", "fig6.ckpt"] {
+        let raw = read_suite(file);
+        assert_eq!(raw, ScenarioFile::parse(&raw).unwrap().render(), "{file}");
+    }
+}
+
+/// `ckptwin lint` is clean over every committed suite; the conformance
+/// census additionally warns about its known-classified cells (reported,
+/// never silently dropped).
+#[test]
+fn committed_suites_lint_clean() {
+    for file in ["paper.ckpt", "fig5.ckpt", "fig6.ckpt", "smoke.ckpt", "census72.ckpt"] {
+        let rep = lint_str(&read_suite(file));
+        assert!(
+            rep.errors.is_empty(),
+            "{file}: unexpected lint errors: {:?}",
+            rep.errors
+        );
+        assert!(rep.name.is_some(), "{file}: no suite name");
+    }
+    let census = lint_str(&read_suite("census72.ckpt"));
+    assert_eq!(census.cells, 72);
+    assert!(
+        census.warnings.iter().any(|d| d.msg.contains("no_closed_form")),
+        "census72 should pre-classify its no-closed-form cells: {:?}",
+        census.warnings
+    );
+}
+
+/// Replay a freshly written campaign store: every record re-runs to a
+/// field-for-field identical record (the `replay --verify` contract).
+#[test]
+fn replay_reproduces_campaign_store() {
+    let mut g = Grid::smoke();
+    overrides::apply_override(&mut g, "procs", "65536").unwrap();
+    overrides::apply_override(&mut g, "windows", "600").unwrap();
+    let cells = g.expand();
+    assert_eq!(cells.len(), 4);
+
+    let path = tmp("replay-campaign");
+    let mut store = Store::create(&path).unwrap();
+    let opt = CampaignOptions { instances: 3, ..Default::default() };
+    let (outcomes, _) = campaign::run_cells(&cells, &opt, Some(&mut store)).unwrap();
+    assert_eq!(outcomes.len(), 4);
+    drop(store);
+
+    assert_eq!(sniff_store_kind(&path).unwrap(), StoreKind::Campaign);
+    let store = Store::open(&path).unwrap();
+    assert_eq!(store.len(), 4);
+    for rec in store.records() {
+        let fresh = replay_campaign(rec).unwrap();
+        let diffs = diff_campaign(rec, &fresh);
+        assert!(diffs.is_empty(), "{}: replay diverged: {diffs:?}", rec.key);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Replay a freshly written conformance store — pass and inapplicable
+/// verdicts both reproduce exactly (NaN fields compare NaN-aware).
+#[test]
+fn replay_reproduces_conformance_store() {
+    let cells: Vec<ValCell> = validate::expand_cells(&validate::smoke_grid(), &[1.0])
+        .into_iter()
+        .take(10)
+        .collect();
+    let path = tmp("replay-conformance");
+    let mut store = ConformanceStore::create(&path).unwrap();
+    let opt = SweepOptions { instances: 4, ..Default::default() };
+    let (reports, _) = validate::run_sweep(&cells, &opt, Some(&mut store)).unwrap();
+    assert_eq!(reports.len(), cells.len());
+    drop(store);
+
+    assert_eq!(sniff_store_kind(&path).unwrap(), StoreKind::Conformance);
+    let store = ConformanceStore::open(&path).unwrap();
+    assert_eq!(store.len(), cells.len());
+    let mut verdicts = HashMap::<String, usize>::new();
+    for rec in store.records() {
+        *verdicts.entry(rec.verdict.clone()).or_insert(0) += 1;
+        let fresh = replay_conformance(rec).unwrap();
+        let diffs = diff_conformance(rec, &fresh);
+        assert!(diffs.is_empty(), "{}: replay diverged: {diffs:?}", rec.key);
+    }
+    // The first 10 smoke-grid cells span both verdict families.
+    assert!(verdicts.contains_key("pass"), "{verdicts:?}");
+    assert!(verdicts.contains_key("inapplicable"), "{verdicts:?}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `explain` re-derives exactly what a sweep computes: same verdict,
+/// same statistics bit-for-bit, and the 5 tolerance terms sum — in
+/// order — to the priced tolerance, also bit-for-bit.
+#[test]
+fn explain_matches_sweep_bit_for_bit() {
+    let cells: Vec<ValCell> = validate::expand_cells(&validate::smoke_grid(), &[1.0])
+        .into_iter()
+        .take(12)
+        .collect();
+    let opt = SweepOptions { instances: 6, ..Default::default() };
+    let (reports, _) = validate::run_sweep(&cells, &opt, None).unwrap();
+    let by_hash: HashMap<u64, &CellReport> =
+        reports.iter().map(|r| (r.hash, r)).collect();
+
+    let policy = TolerancePolicy::default();
+    let mut compared = 0usize;
+    for vc in &cells {
+        let ex = explain_cell(vc, 6, &policy);
+        let r = by_hash[&vc.hash];
+        assert_eq!(ex.key, r.key);
+        assert_eq!(ex.verdict.label(), r.verdict.label(), "{}", r.key);
+        assert_eq!(ex.instances, r.instances, "{}", r.key);
+        assert_bits(ex.tr, r.tr, "tr", &r.key);
+        assert_bits(ex.sim_mean, r.sim_mean, "sim_mean", &r.key);
+        assert_bits(ex.sim_ci95, r.sim_ci95, "sim_ci95", &r.key);
+        assert_bits(ex.model, r.model, "model", &r.key);
+        assert_bits(ex.deviation, r.deviation, "deviation", &r.key);
+        assert_bits(ex.tolerance, r.tolerance, "tolerance", &r.key);
+        if matches!(ex.verdict, Verdict::Pass | Verdict::Fail) {
+            assert_eq!(ex.terms.len(), 5, "{}", r.key);
+            let sum = ex.terms.iter().fold(0.0f64, |a, t| a + t.value);
+            assert_bits(sum, ex.tolerance, "terms-sum", &r.key);
+            compared += 1;
+        } else {
+            assert!(ex.terms.is_empty(), "{}", r.key);
+            assert!(ex.guard.is_some(), "{}", r.key);
+        }
+    }
+    assert!(compared >= 2, "too few applicable cells to pin the term sum");
+}
+
+/// Every `Inapplicable` variant renders a guard sentence carrying its
+/// stable label (or, for NoClosedForm, the prose marker) — and the
+/// sentence is deterministic.
+#[test]
+fn guard_sentences_cover_every_variant() {
+    let cells = validate::expand_cells(&validate::smoke_grid(), &[1.0]);
+    let vc = &cells[0];
+    let sc = vc.scenario();
+    let kind = vc.cell.strategy.kind();
+    let policy = TolerancePolicy::default();
+    let variants: [(Inapplicable, &str); 15] = [
+        (Inapplicable::Model(M::PeriodWithinCheckpoint), "period_within_checkpoint"),
+        (Inapplicable::Model(M::MtbfWithinRecovery), "mtbf_within_recovery"),
+        (Inapplicable::Model(M::ZeroPrecision), "zero_precision"),
+        (
+            Inapplicable::Model(M::ProactivePeriodOutsideWindow),
+            "proactive_period_outside_window",
+        ),
+        (Inapplicable::Model(M::WasteOutOfRange), "waste_out_of_range"),
+        (Inapplicable::NoClosedForm, "no closed form"),
+        (Inapplicable::BeyondFirstOrder, "beyond_first_order"),
+        (Inapplicable::JobTooShort, "job_too_short"),
+        (Inapplicable::WindowsOverlap, "windows_overlap"),
+        (Inapplicable::TransientFaultModel, "transient_fault_model"),
+        (Inapplicable::HorizonTooShort, "horizon_too_short"),
+        (Inapplicable::NonUniformWindow, "non_uniform_window"),
+        (Inapplicable::NoisyWindowPlacement, "noisy_window_placement"),
+        (Inapplicable::ConfidenceClasses, "confidence_classes"),
+        (Inapplicable::PlatformRateNonconforming, "platform_rate_nonconforming"),
+    ];
+    for (reason, marker) in variants {
+        let s = guard_sentence(reason, &sc, kind, 1234.5, 300.0, &policy);
+        assert!(s.contains(marker), "{marker}: sentence lacks its label: {s}");
+        assert!(s.len() > 40, "{marker}: sentence too terse: {s}");
+        let again = guard_sentence(reason, &sc, kind, 1234.5, 300.0, &policy);
+        assert_eq!(s, again, "{marker}: non-deterministic sentence");
+    }
+}
+
+/// Transcript structure: a no-closed-form cell gets a guard line and no
+/// simulation section; an applicable cell gets the full tolerance-term
+/// breakdown with all five labels plus the total row.
+#[test]
+fn explain_transcript_structure() {
+    let cells = validate::expand_cells(&validate::smoke_grid(), &[1.0]);
+    let policy = TolerancePolicy::default();
+
+    let ncf = cells
+        .iter()
+        .find(|vc| vc.cell.strategy.to_string() == "ExactPred")
+        .expect("smoke grid carries ExactPred");
+    let ex = explain_cell(ncf, 4, &policy);
+    let out = ex.render();
+    assert!(out.starts_with(&format!("cell      {}\n", ncf.key())), "{out}");
+    assert!(out.contains("verdict   inapplicable"), "{out}");
+    assert!(out.contains("guard: "), "{out}");
+    assert!(out.contains("no closed form"), "{out}");
+    assert!(!out.contains("period T_R"), "NoClosedForm has no period: {out}");
+
+    let daly = cells
+        .iter()
+        .find(|vc| {
+            vc.cell.strategy.to_string() == "Daly"
+                && matches!(explain_cell(vc, 4, &policy).verdict, Verdict::Pass)
+        })
+        .expect("smoke grid carries a passing Daly cell");
+    let ex = explain_cell(daly, 4, &policy);
+    assert!(ex.guard.is_none());
+    let out = ex.render();
+    assert!(out.contains("verdict   pass"), "{out}");
+    assert!(out.contains("tolerance terms:"), "{out}");
+    for label in
+        ["abs_floor", "tail_spread", "curvature", "renewal_excess", "sampling_ci", "total"]
+    {
+        assert!(out.contains(label), "missing term {label} in:\n{out}");
+    }
+}
