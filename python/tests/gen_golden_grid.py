@@ -1,0 +1,164 @@
+"""Seed generator for ``golden_waste_grid.json`` — the f64 golden grid the
+kernel cross-check (``test_golden_grid.py``) compares against.
+
+The *authoritative* producer of this file is the Rust CLI::
+
+    cargo run --release -- export-grid --out python/tests/golden_waste_grid.json
+
+which emits the batched model's f64 clipped surfaces (bit-identical to the
+scalar ``model::waste::waste_clipped``).  This script is the documented
+fallback for environments without a Rust toolchain: it mirrors the Rust
+expressions term-for-term in pure-python IEEE-754 doubles — the same
+operation trees in the same association order — so its output matches the
+Rust export to the last ulp (and the committed file can be refreshed from
+either side).  CI always regenerates from Rust before running the test.
+
+Usage: ``python tests/gen_golden_grid.py [out.json]``
+"""
+
+import sys
+
+# Paper constants (rust/src/util.rs::paper).
+SECONDS_PER_YEAR = 365.0 * 24.0 * 3600.0
+MU_IND_YEARS = 125.0
+C = 600.0
+R = 600.0
+D = 60.0
+
+ABS_TOL = 2e-4  # waste_grid::CROSSCHECK_ABS_TOL
+REL_TOL = 1e-4  # waste_grid::CROSSCHECK_REL_TOL
+
+
+def scenario(procs, cp_ratio, recall, precision, window):
+    """Mirror of Platform::paper / PredictorSpec::paper_{a,b} (f64)."""
+    mu = MU_IND_YEARS * SECONDS_PER_YEAR / float(procs)
+    return {
+        "mu": mu,
+        "c": C,
+        "cp": cp_ratio * C,
+        "d": D,
+        "r": R,
+        "p": precision,
+        "rec": recall,
+        "i": window,
+        "e": window / 2.0,  # PredModel::Paper: E_I^f = I/2
+    }
+
+
+def battery():
+    """The export-grid scenario battery, in its exact loop order."""
+    out = []
+    for procs in (1 << 16, 1 << 18):
+        for cp_ratio in (1.0, 0.1):
+            for window in (300.0, 1200.0):
+                for recall, precision in ((0.85, 0.82), (0.7, 0.4)):
+                    out.append(scenario(procs, cp_ratio, recall, precision, window))
+    return out
+
+
+# -- closed forms, mirroring rust/src/model/waste.rs expression-for-expression
+
+
+def tp_extr(s):
+    """model::optimal::tp_extr — clamp(sqrt(((1-p)I + pE) Cp / p), Cp, max(I, Cp))."""
+    p, i, e, cp = s["p"], s["i"], s["e"], s["cp"]
+    raw = (((1.0 - p) * i + p * e) * cp / p) ** 0.5
+    return min(max(raw, cp), max(i, cp))
+
+
+def q0(s, tr):
+    return 1.0 - (1.0 - s["c"] / tr) * (1.0 - (tr / 2.0 + s["d"] + s["r"]) / s["mu"])
+
+
+def instant(s, tr):
+    p, r = s["p"], s["rec"]
+    inner = (
+        p * (s["d"] + s["r"]) + r * s["cp"] + (1.0 - r) * p * tr / 2.0 + p * r * s["e"]
+    ) / (p * s["mu"])
+    return 1.0 - (1.0 - s["c"] / tr) * (1.0 - inner)
+
+
+def nockpt(s, tr):
+    p, r, i, e = s["p"], s["rec"], s["i"], s["e"]
+    head = (r / (p * s["mu"])) * (1.0 - p) * i
+    inner = (
+        p * (s["d"] + s["r"]) + r * s["cp"] + (1.0 - r) * p * tr / 2.0
+        + r * ((1.0 - p) * i + p * e)
+    ) / (p * s["mu"])
+    return 1.0 - head - (1.0 - s["c"] / tr) * (1.0 - inner)
+
+
+def withckpt(s, tr, tp):
+    p, r, i, e = s["p"], s["rec"], s["i"], s["e"]
+    head = (r / (p * s["mu"])) * (1.0 - s["cp"] / tp) * ((1.0 - p) * i + p * (e - tp))
+    inner = (
+        p * (s["d"] + s["r"]) + r * s["cp"] + (1.0 - r) * p * tr / 2.0
+        + r * ((1.0 - p) * i + p * e)
+    ) / (p * s["mu"])
+    return 1.0 - head - (1.0 - s["c"] / tr) * (1.0 - inner)
+
+
+def clipped_surface(s, grid):
+    """model::waste::waste_clipped over the grid, all four strategies."""
+    tp = tp_extr(s)
+    rows = [[], [], [], []]
+    for tr in grid:
+        if tr <= s["c"]:
+            for row in rows:
+                row.append(1.0)
+            continue
+        for row, raw in zip(
+            rows, (q0(s, tr), instant(s, tr), nockpt(s, tr), withckpt(s, tr, tp))
+        ):
+            row.append(min(max(raw, 0.0), 1.0))
+    return rows
+
+
+# -- serialization matching rust/src/jsonio.rs (sorted keys, compact,
+#    integral floats written without a decimal point)
+
+
+def jnum(x):
+    if float(x) == int(x) and abs(x) < 1e15:
+        return str(int(x))
+    return repr(float(x))
+
+
+def jval(v):
+    if isinstance(v, str):
+        return '"' + v + '"'
+    if isinstance(v, (int, float)):
+        return jnum(v)
+    if isinstance(v, list):
+        return "[" + ",".join(jval(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(
+            jval(k) + ":" + jval(v[k]) for k in sorted(v)
+        ) + "}"
+    raise TypeError(type(v))
+
+
+def main(out_path):
+    grid = [650.0 + 900.0 * k for k in range(48)]
+    scs = battery()
+    doc = {
+        "schema": "ckptwin-golden-grid/1",
+        "strategies": ["q0", "instant", "nockpt", "withckpt"],
+        "tolerance": {"abs": ABS_TOL, "rel": REL_TOL},
+        "tr": grid,
+        "params": [
+            [s["mu"], s["c"], s["cp"], s["d"], s["r"], s["p"], s["rec"],
+             s["i"], s["e"], 0.0]
+            for s in scs
+        ],
+        "surfaces": [clipped_surface(s, grid) for s in scs],
+    }
+    text = jval(doc)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"wrote {out_path} — {len(scs)} scenarios × 4 × {len(grid)} "
+          f"({len(text)} bytes)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "tests/golden_waste_grid.json")

@@ -1,0 +1,72 @@
+"""Kernel cross-check against the Rust-exported golden waste grid.
+
+``golden_waste_grid.json`` holds the Rust batched model's f64 clipped
+surfaces (``ckptwin export-grid``; bit-identical to the scalar
+``model::waste::waste_clipped``).  Both python implementations — the
+pure-jnp oracle and the Pallas kernel — must reproduce every cell within
+the priced f32 tolerance ``abs + rel·|w|`` carried inside the file
+(mirrors ``runtime::waste_grid::CROSSCHECK_{ABS,REL}_TOL``): this is the
+other direction of the Rust-side ``crosscheck_waste_grid`` gate, closing
+the loop between the two backends without a PJRT artifact build.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.waste_grid import waste_grid
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_waste_grid.json")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        doc = json.load(f)
+    assert doc["schema"] == "ckptwin-golden-grid/1"
+    return doc
+
+
+def _check(got, doc):
+    """Element-wise |kernel − golden| ≤ abs + rel·|golden|."""
+    want = np.asarray(doc["surfaces"], np.float64)  # [B, 4, G]
+    got = np.asarray(got, np.float64)
+    assert got.shape == want.shape
+    tol = doc["tolerance"]["abs"] + doc["tolerance"]["rel"] * np.abs(want)
+    err = np.abs(got - want)
+    worst = np.unravel_index(np.argmax(err - tol), err.shape)
+    assert (err <= tol).all(), (
+        f"worst cell {worst}: got {got[worst]}, golden {want[worst]}, "
+        f"|err| {err[worst]:.3e} > tol {tol[worst]:.3e}"
+    )
+
+
+def test_golden_grid_shape(golden):
+    b, g = len(golden["params"]), len(golden["tr"])
+    assert golden["strategies"] == ["q0", "instant", "nockpt", "withckpt"]
+    assert len(golden["surfaces"]) == b
+    assert all(
+        len(s) == 4 and all(len(row) == g for row in s)
+        for s in golden["surfaces"]
+    )
+    # Golden wastes are clipped: all in [0, 1].
+    surf = np.asarray(golden["surfaces"])
+    assert (surf >= 0.0).all() and (surf <= 1.0).all()
+
+
+def test_ref_matches_golden(golden):
+    params = np.asarray(golden["params"], np.float32)
+    tr = np.asarray(golden["tr"], np.float32)
+    got = ref.waste_grid_ref(params, tr)
+    _check(got, golden)
+
+
+def test_pallas_kernel_matches_golden(golden):
+    params = np.asarray(golden["params"], np.float32)
+    tr = np.asarray(golden["tr"], np.float32)
+    got = waste_grid(jnp.asarray(params), jnp.asarray(tr), block_g=8)
+    _check(got, golden)

@@ -15,7 +15,9 @@ use ckptwin::bench_support::{bench_val, report_throughput, update_bench_json};
 use ckptwin::campaign::TracePool;
 use ckptwin::config::{PredictorSpec, Scenario};
 use ckptwin::jsonio::Value;
+use ckptwin::model::batch::{BatchEvaluator, STRATEGIES};
 use ckptwin::model::optimal;
+use ckptwin::model::waste::waste_checked;
 use ckptwin::sim::distribution::Law;
 use ckptwin::sim::engine::{simulate, simulate_from_capped};
 use ckptwin::predictor::registry as registry_predictors;
@@ -274,6 +276,109 @@ fn main() {
     let wheel_speedup = r_heap_1e6.median() / wheel_medians[2];
     println!("trace_gen/perproc wheel-vs-heap speedup at 1e6: {wheel_speedup:.2}x");
     json.push(("wheel_vs_heap_speedup".into(), Value::Num(wheel_speedup)));
+
+    // ---- batched waste-model evaluator (PR 10) -------------------------
+    // Full checked surfaces (4 strategies × G periods) for a block of
+    // scenarios: the scalar per-cell waste_checked loop (what figures and
+    // validate ran pre-change) vs model::batch's coefficient-hoisted rows.
+    // Both sides single-threaded so the ratio prices the evaluator, not
+    // the scheduler.
+    let batch_items: Vec<(Scenario, f64)> = [1u64 << 16, 1 << 18, 1 << 19]
+        .iter()
+        .flat_map(|&n| {
+            [PredictorSpec::paper_a(1200.0), PredictorSpec::paper_b(300.0)]
+                .into_iter()
+                .map(move |pred| {
+                    let s = Scenario::paper(
+                        n,
+                        1.0,
+                        pred,
+                        Law::Exponential,
+                        Law::Exponential,
+                    );
+                    let tp = optimal::tp_extr(&s).max(s.platform.cp * 1.1);
+                    (s, tp)
+                })
+        })
+        .collect();
+    let surf_grid: Vec<f64> =
+        (0..512).map(|k| 650.0 + 90.0 * k as f64).collect();
+    let n_cells =
+        (batch_items.len() * STRATEGIES.len() * surf_grid.len()) as f64;
+    let r_scalar_model = bench_val("waste_model/scalar_surfaces", 200.0, || {
+        let mut acc = 0.0;
+        for (s, tp) in &batch_items {
+            for strat in STRATEGIES {
+                for &tr in &surf_grid {
+                    if let Some(w) = waste_checked(s, strat, tr, *tp).value() {
+                        acc += w;
+                    }
+                }
+            }
+        }
+        acc
+    });
+    report_throughput(&r_scalar_model, n_cells, "cell");
+    let r_batch_model = bench_val("waste_model/batched_surfaces", 200.0, || {
+        let mut ev = BatchEvaluator::new();
+        let mut acc = 0.0;
+        for (s, tp) in &batch_items {
+            let surf = ev.surface(s, *tp, &surf_grid);
+            for strat in STRATEGIES {
+                for cell in surf.row(strat) {
+                    if let Some(w) = cell.value() {
+                        acc += w;
+                    }
+                }
+            }
+        }
+        acc
+    });
+    report_throughput(&r_batch_model, n_cells, "cell");
+    let batch_speedup = r_scalar_model.median() / r_batch_model.median();
+    println!("waste_model batched-vs-scalar speedup: {batch_speedup:.2}x");
+    json.push((
+        "batch_waste_cells_per_s".into(),
+        Value::Num(n_cells / r_batch_model.median()),
+    ));
+    json.push(("batch_vs_scalar_speedup".into(), Value::Num(batch_speedup)));
+
+    // ---- BestPeriod racing: batched model seeding vs no model ----------
+    // Same adaptive race; the batched side prunes the candidate grid with
+    // model::batch before simulating (strategy::best_period::model_seed).
+    use ckptwin::strategy::best_period::ModelSide;
+    let r_bp_off = bench_val("best_period/adaptive_no_model", 800.0, || {
+        let mut caches: Vec<TraceCache> =
+            bp_seeds.iter().map(|&s| TraceCache::new(&sc_bp, s)).collect();
+        search_with(
+            &sc_bp,
+            PolicyKind::WithCkpt,
+            tp,
+            &bp_seeds,
+            &SearchConfig::adaptive(24, 8).with_model(ModelSide::Off),
+            &mut caches,
+        )
+        .tr
+    });
+    let r_bp_batch = bench_val("best_period/adaptive_batch_model", 800.0, || {
+        let mut caches: Vec<TraceCache> =
+            bp_seeds.iter().map(|&s| TraceCache::new(&sc_bp, s)).collect();
+        search_with(
+            &sc_bp,
+            PolicyKind::WithCkpt,
+            tp,
+            &bp_seeds,
+            &SearchConfig::adaptive(24, 8).with_model(ModelSide::Batched),
+            &mut caches,
+        )
+        .tr
+    });
+    let bp_batch_speedup = r_bp_off.median() / r_bp_batch.median();
+    println!("best_period batch-seeded speedup: {bp_batch_speedup:.2}x");
+    json.push((
+        "bestperiod_batch_speedup".into(),
+        Value::Num(bp_batch_speedup),
+    ));
 
     update_bench_json("bench_sim", &json);
 }

@@ -100,23 +100,33 @@ fn push_rows(
     }
 }
 
-/// Convert a campaign cell outcome into the harness's result row shape.
-fn outcome_to_result(o: &CellOutcome) -> HeuristicResult {
-    use crate::model::waste::waste_clipped;
-    let sc = o.cell.scenario();
-    HeuristicResult {
-        name: o.cell.strategy.to_string(),
-        waste: o.waste.mean(),
-        waste_ci: o.waste.ci95(),
-        makespan: o.makespan.mean(),
-        analytic_waste: o
-            .cell
-            .strategy
-            .grid_strategy()
-            .map(|gs| waste_clipped(&sc, gs, o.tr))
-            .unwrap_or(f64::NAN),
-        tr: o.tr,
-    }
+/// Convert one scenario point's cell outcomes into the harness's result
+/// rows.  The analytic column is fetched as one batched clipped surface
+/// over the chunk's periods ([`crate::model::batch`] — bit-identical to
+/// per-cell `waste_clipped`), then each strategy row reads its own
+/// (strategy, period) entry.
+fn outcome_results(chunk: &[CellOutcome]) -> Vec<HeuristicResult> {
+    use crate::model::batch::BatchEvaluator;
+    let sc = chunk[0].cell.scenario();
+    let trs: Vec<f64> = chunk.iter().map(|o| o.tr).collect();
+    let surface = BatchEvaluator::new().clipped_surface(&sc, &trs);
+    chunk
+        .iter()
+        .enumerate()
+        .map(|(i, o)| HeuristicResult {
+            name: o.cell.strategy.to_string(),
+            waste: o.waste.mean(),
+            waste_ci: o.waste.ci95(),
+            makespan: o.makespan.mean(),
+            analytic_waste: o
+                .cell
+                .strategy
+                .grid_strategy()
+                .map(|gs| surface[gs as usize][i])
+                .unwrap_or(f64::NAN),
+            tr: o.tr,
+        })
+        .collect()
 }
 
 /// Execute a figure grid through the campaign engine and format its CSV
@@ -135,8 +145,7 @@ fn waste_rows_via_campaign(
     let mut rows = Vec::new();
     for chunk in outcomes.chunks(per_point) {
         let cell = &chunk[0].cell;
-        let results: Vec<HeuristicResult> =
-            chunk.iter().map(outcome_to_result).collect();
+        let results = outcome_results(chunk);
         push_rows(
             &mut rows,
             fig,
@@ -259,12 +268,13 @@ pub fn run_waste_vs_tr(
     instances: usize,
     grid_points: usize,
 ) -> std::io::Result<Vec<String>> {
-    use crate::model::waste::waste_clipped;
+    use crate::model::batch::BatchEvaluator;
     use crate::strategy::{Policy, PolicyKind};
 
     // The paper's T_R plots use I = 600 s, C_p = C, failure-law FPs.
     let window = 600.0;
     let mut rows = Vec::new();
+    let mut ev = BatchEvaluator::new();
     for law in PAPER_LAWS {
         let sc = Scenario::paper(
             spec.procs,
@@ -284,10 +294,24 @@ pub fn run_waste_vs_tr(
             ("WithCkptI", PolicyKind::WithCkpt),
         ];
         let tp = registry::default_tp(&sc);
-        for k in 0..grid_points {
-            let tr = lo * ratio.powi(k as i32);
-            for (name, kind) in heuristics {
-                let pol = Policy { kind, tr, tp };
+        // The analytic columns: one batched clipped row per heuristic over
+        // the whole T_R grid (bit-identical to per-cell `waste_clipped`).
+        let trs: Vec<f64> =
+            (0..grid_points).map(|k| lo * ratio.powi(k as i32)).collect();
+        let analytic: Vec<Vec<f64>> = heuristics
+            .iter()
+            .map(|(_, kind)| match kind.grid_strategy() {
+                Some(gs) => {
+                    let mut row = Vec::new();
+                    ev.clipped_row(&sc, gs, &trs, &mut row);
+                    row
+                }
+                None => vec![f64::NAN; trs.len()],
+            })
+            .collect();
+        for (k, &tr) in trs.iter().enumerate() {
+            for (h, (name, kind)) in heuristics.iter().enumerate() {
+                let pol = Policy { kind: *kind, tr, tp };
                 // Terrible periods in the sweep are capped (waste saturates
                 // near 1 anyway); see engine::simulate_from_capped.
                 let cap = 50.0 * sc.job_size + 100.0 * sc.platform.mu;
@@ -303,9 +327,7 @@ pub fn run_waste_vs_tr(
                     spec.procs,
                     waste.mean(),
                     waste.ci95(),
-                    kind.grid_strategy()
-                        .map(|gs| waste_clipped(&sc, gs, tr))
-                        .unwrap_or(f64::NAN),
+                    analytic[h][k],
                 ));
             }
         }

@@ -91,8 +91,13 @@ COMMANDS
   analytic     same scenario options; prints Eqs. 3/4/10/14 optima
   figure       --id 2..21 [--instances N] [--best-period-seeds N] [--plot]
   table        --id 4|5 [--instances N]
-  best-period  scenario options; compares closed-form, brute-force and the
-               PJRT waste-grid search [--grid 256]
+  best-period  scenario options; compares closed-form, brute-force (racing
+               with --batch model seeding by default; --scalar for the
+               per-candidate reference, --no-model to disable), the batched
+               f64 grid argmin and the PJRT waste-grid search [--grid 256]
+  export-grid  write the golden waste-grid JSON for the python kernel
+               cross-check [--out python/tests/golden_waste_grid.json]
+               [--grid 48]
   e2e          [--steps 400] [--mtbf 4000] [--strategy withckpt|nockpt|
                instant|rfo] [--ckpt-dir DIR] [--seed 42]
   sweep        [--procs 65536] [--instances 50]  (Table-6 predictors)
@@ -352,10 +357,24 @@ fn cmd_table(args: &Args) -> Result<()> {
 }
 
 fn cmd_best_period(args: &Args) -> Result<()> {
+    use ckptwin::sim::trace::TraceCache;
+    use ckptwin::strategy::best_period::{ModelSide, SearchConfig};
     use ckptwin::strategy::PolicyKind;
     let sc = scenario_from_args(args)?;
     let grid_n: usize = args.get_or("grid", 256);
     let seeds: Vec<u64> = (0..args.get_or("instances", 20u64)).collect();
+
+    // Model side of the racing search: batched closed-form seeding
+    // (default), per-candidate scalar seeding (the reference the batched
+    // path must agree with), or no model pruning at all.
+    let side = match (args.has("batch"), args.has("scalar"), args.has("no-model")) {
+        (true, true, _) | (true, _, true) | (_, true, true) => {
+            return Err(anyhow!("--batch, --scalar and --no-model are mutually exclusive"))
+        }
+        (_, true, _) => ModelSide::Scalar,
+        (_, _, true) => ModelSide::Off,
+        _ => ModelSide::Batched,
+    };
 
     // Closed form.
     println!("closed-form:   RFO={:.0}  Instant={:.0}  window={:.0}",
@@ -363,40 +382,178 @@ fn cmd_best_period(args: &Args) -> Result<()> {
         optimal::tr_extr_instant(&sc),
         optimal::tr_extr_window(&sc));
 
-    // Brute force over simulations.
+    // Brute force over simulations, model-seeded per --batch/--scalar.
     let tp = ckptwin::strategy::registry::default_tp(&sc);
+    let cfg = SearchConfig::adaptive(24, 8).with_model(side);
     for (name, kind) in [
         ("NoPred", PolicyKind::IgnorePredictions),
         ("Instant", PolicyKind::Instant),
         ("NoCkptI", PolicyKind::NoCkpt),
         ("WithCkptI", PolicyKind::WithCkpt),
     ] {
-        let bp = best_period::search(&sc, kind, tp, &seeds, 24, 8);
+        let mut caches: Vec<TraceCache> =
+            seeds.iter().map(|&s| TraceCache::new(&sc, s)).collect();
+        let bp = best_period::search_with(&sc, kind, tp, &seeds, &cfg, &mut caches);
         println!(
-            "brute-force:   {name:<10} T_R*={:.0}  waste={:.4} ({} sims)",
+            "brute-force:   {name:<10} T_R*={:.0}  waste={:.4} ({} sims, {side:?} model)",
             bp.tr, bp.waste, bp.evals
         );
     }
 
-    // PJRT waste-grid artifact (analytic surface argmin).
+    // Batched model surfaces: the f64 grid argmin (bit-identical to the
+    // scalar closed forms) on the same grid the PJRT artifact would use.
+    let lo = 1.05 * sc.platform.c;
+    let hi = 60.0 * optimal::rfo_period(&sc.platform);
+    let grid: Vec<f64> = (0..grid_n)
+        .map(|k| lo * (hi / lo).powf(k as f64 / (grid_n - 1) as f64))
+        .collect();
+    let names = ["Q0", "Instant", "NoCkptI", "WithCkptI"];
+    let batch_best = ckptwin::model::batch::best_periods_clipped(&sc, &grid);
+    for (i, (tr, w)) in batch_best.iter().enumerate() {
+        println!(
+            "model-batch:   {:<10} T_R*={tr:.0}  analytic waste={w:.4}",
+            names[i]
+        );
+    }
+
+    // PJRT waste-grid artifact (f32 kernel argmin on the same grid), plus
+    // the kernel-vs-model cross-check gate.
     match ckptwin::runtime::Runtime::discover() {
         Ok(rt) => {
-            let lo = 1.05 * sc.platform.c;
-            let hi = 60.0 * optimal::rfo_period(&sc.platform);
-            let grid: Vec<f64> = (0..grid_n)
-                .map(|k| lo * (hi / lo).powf(k as f64 / (grid_n - 1) as f64))
-                .collect();
             let best = rt.best_periods(&sc, &grid)?;
-            let names = ["Q0", "Instant", "NoCkptI", "WithCkptI"];
             for (i, (tr, w)) in best.iter().enumerate() {
                 println!(
                     "pjrt-grid:     {:<10} T_R*={tr:.0}  analytic waste={w:.4}",
                     names[i]
                 );
             }
+            let chk = ckptwin::runtime::waste_grid::crosscheck_waste_grid(
+                &rt,
+                std::slice::from_ref(&sc),
+                &grid,
+            )?;
+            println!(
+                "crosscheck:    {} — {} cells, max |kernel−model| = {:.2e}",
+                if chk.passed() { "PASS" } else { "FAIL" },
+                chk.cells,
+                chk.max_abs_err,
+            );
+            if !chk.passed() {
+                return Err(anyhow!(
+                    "{} of {} kernel cells beyond the priced f32 tolerance",
+                    chk.failures,
+                    chk.cells
+                ));
+            }
         }
         Err(e) => println!("pjrt-grid:     skipped ({e})"),
     }
+    Ok(())
+}
+
+/// Emit the golden waste-grid JSON consumed by the python kernel
+/// cross-check (`python/tests/test_golden_grid.py`): f64 clipped surfaces
+/// from the batched model — bit-identical to scalar `waste_clipped` — over
+/// a deterministic scenario battery and linear period grid mirroring
+/// `tests/runtime_roundtrip.rs`.  Parameter rows use the layout documented
+/// in `python/compile/kernels/ref.py`.
+fn cmd_export_grid(args: &Args) -> Result<()> {
+    use ckptwin::jsonio::Value;
+    use ckptwin::obs::report;
+    use ckptwin::runtime::waste_grid::{
+        scenario_row_checked, CROSSCHECK_ABS_TOL, CROSSCHECK_REL_TOL,
+    };
+
+    let grid_n: usize = args.get_or("grid", 48);
+    let out_path = std::path::PathBuf::from(
+        args.get_str("out").unwrap_or("python/tests/golden_waste_grid.json"),
+    );
+
+    let mut scenarios = Vec::new();
+    for procs in [1u64 << 16, 1 << 18] {
+        for cp_ratio in [1.0, 0.1] {
+            for window in [300.0, 1200.0] {
+                for pred in [
+                    PredictorSpec::paper_a(window),
+                    PredictorSpec::paper_b(window),
+                ] {
+                    scenarios.push(Scenario::paper(
+                        procs,
+                        cp_ratio,
+                        pred,
+                        Law::Exponential,
+                        Law::Exponential,
+                    ));
+                }
+            }
+        }
+    }
+    let grid: Vec<f64> = (0..grid_n).map(|k| 650.0 + 900.0 * k as f64).collect();
+    let (surfaces, stats) =
+        ckptwin::model::batch::clipped_surfaces(&scenarios, &grid, 0);
+
+    let mut param_rows = Vec::with_capacity(scenarios.len());
+    for sc in &scenarios {
+        // Exported in f64 (the python side narrows to f32 itself), but
+        // checked representable here so the comparison is meaningful.
+        scenario_row_checked(sc)
+            .map_err(|e| anyhow!("scenario not exportable: {e}"))?;
+        param_rows.push(Value::Arr(vec![
+            Value::Num(sc.platform.mu),
+            Value::Num(sc.platform.c),
+            Value::Num(sc.platform.cp),
+            Value::Num(sc.platform.d),
+            Value::Num(sc.platform.r),
+            Value::Num(sc.predictor.precision),
+            Value::Num(sc.predictor.recall),
+            Value::Num(sc.predictor.window),
+            Value::Num(sc.e_if()),
+            Value::Num(0.0),
+        ]));
+    }
+    let surf_json: Vec<Value> = surfaces
+        .iter()
+        .map(|s| {
+            Value::Arr(
+                s.iter()
+                    .map(|row| {
+                        Value::Arr(row.iter().map(|&w| Value::Num(w)).collect())
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+
+    let doc = json_obj(vec![
+        ("schema", Value::Str("ckptwin-golden-grid/1".into())),
+        (
+            "strategies",
+            Value::Arr(
+                ["q0", "instant", "nockpt", "withckpt"]
+                    .iter()
+                    .map(|s| Value::Str(s.to_string()))
+                    .collect(),
+            ),
+        ),
+        (
+            "tolerance",
+            json_obj(vec![
+                ("abs", Value::Num(CROSSCHECK_ABS_TOL)),
+                ("rel", Value::Num(CROSSCHECK_REL_TOL)),
+            ]),
+        ),
+        ("tr", Value::Arr(grid.iter().map(|&t| Value::Num(t)).collect())),
+        ("params", Value::Arr(param_rows)),
+        ("surfaces", Value::Arr(surf_json)),
+    ]);
+    let bytes = report::write_json(&out_path, &doc)?;
+    println!(
+        "wrote {} — {} scenarios × 4 strategies × {} periods ({} cells, {bytes} bytes)",
+        out_path.display(),
+        scenarios.len(),
+        grid.len(),
+        stats.cells,
+    );
     Ok(())
 }
 
@@ -1262,7 +1419,7 @@ fn json_obj(pairs: Vec<(&str, ckptwin::jsonio::Value)>) -> ckptwin::jsonio::Valu
 
 /// Telemetry snapshot + waste-accounting audit (`ckptwin metrics`).
 ///
-/// Three phases, one artifact:
+/// Four phases, one artifact:
 ///
 /// 1. **campaign** — the grid runs on the metered scheduler; cells/sec,
 ///    events/sec and trace-pool efficacy land in the registry.
@@ -1275,7 +1432,11 @@ fn json_obj(pairs: Vec<(&str, ckptwin::jsonio::Value)>) -> ckptwin::jsonio::Valu
 ///    compared term-by-term (regular ckpt / proactive ckpt / down /
 ///    re-exec) against the model's waste terms at the cell's conformance
 ///    tolerance.
-/// 3. **coordinator** — a short synthetic-workload run samples per-pass
+/// 3. **batch** — the batched closed-form evaluator
+///    ([`ckptwin::model::batch`]) sweeps full waste surfaces over the
+///    grid's unique scenarios; block/cell throughput and the guard-skip
+///    rate land in the registry.
+/// 4. **coordinator** — a short synthetic-workload run samples per-pass
 ///    decision latency into a log2 histogram.
 ///
 /// Everything is assembled into `METRICS.json` (schema
@@ -1513,7 +1674,64 @@ fn cmd_metrics(args: &Args) -> Result<()> {
         ("model_term_failures", Value::Num(term_failures as f64)),
     ]);
 
-    // --- phase 3: coordinator decision latency ---------------------------
+    // --- phase 3: batched closed-form evaluator --------------------------
+    println!("metrics: batch phase — waste surfaces over the grid's scenarios");
+    let batch_section = {
+        use ckptwin::model::batch;
+        let mut items: Vec<(Scenario, f64)> = Vec::new();
+        let mut seen_sc = std::collections::BTreeSet::new();
+        for cell in &cells {
+            if !seen_sc.insert(cell.hash) {
+                continue;
+            }
+            let sc = cell.scenario();
+            let tp = ckptwin::strategy::registry::default_tp(&sc);
+            items.push((sc, tp));
+        }
+        let lo = 1.05
+            * items
+                .iter()
+                .map(|(sc, _)| sc.platform.c)
+                .fold(f64::MIN, f64::max);
+        let hi = 60.0
+            * items
+                .iter()
+                .map(|(sc, _)| optimal::rfo_period(&sc.platform))
+                .fold(f64::MIN, f64::max);
+        let pts = 256usize;
+        let grid: Vec<f64> = (0..pts)
+            .map(|k| lo * (hi / lo).powf(k as f64 / (pts - 1) as f64))
+            .collect();
+        let (_surfaces, bst) = batch::waste_surfaces(&items, &grid, opt.threads);
+        reg.add("model.batch_blocks", bst.blocks);
+        reg.add("model.batch_cells", bst.cells);
+        reg.add("model.batch_guard_skips", bst.guard_skipped);
+        reg.set_gauge("model.batch_cells_per_s", bst.cells_per_sec());
+        reg.set_gauge("model.batch_guard_skip_rate", bst.guard_skip_rate());
+        println!(
+            "  {} scenarios × 4 strategies × {} periods: {} blocks, {} cells \
+             in {:.3}s — {:.3e} cells/s, guard-skip rate {:.3}",
+            items.len(),
+            grid.len(),
+            bst.blocks,
+            bst.cells,
+            bst.elapsed_secs,
+            bst.cells_per_sec(),
+            bst.guard_skip_rate(),
+        );
+        obj(vec![
+            ("scenarios", Value::Num(items.len() as f64)),
+            ("grid_points", Value::Num(grid.len() as f64)),
+            ("blocks", Value::Num(bst.blocks as f64)),
+            ("cells", Value::Num(bst.cells as f64)),
+            ("guard_skipped", Value::Num(bst.guard_skipped as f64)),
+            ("elapsed_secs", Value::Num(bst.elapsed_secs)),
+            ("cells_per_sec", Value::Num(bst.cells_per_sec())),
+            ("guard_skip_rate", Value::Num(bst.guard_skip_rate())),
+        ])
+    };
+
+    // --- phase 4: coordinator decision latency ---------------------------
     println!("metrics: coordinator phase — synthetic workload");
     let coordinator_section = {
         use ckptwin::config::Platform;
@@ -1575,6 +1793,7 @@ fn cmd_metrics(args: &Args) -> Result<()> {
         &[
             ("campaign", campaign_section),
             ("audit", audit_section),
+            ("batch", batch_section),
             ("coordinator", coordinator_section),
         ],
     );
@@ -1738,6 +1957,7 @@ fn main() {
         Some("figure") => cmd_figure(&args),
         Some("table") => cmd_table(&args),
         Some("best-period") => cmd_best_period(&args),
+        Some("export-grid") => cmd_export_grid(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("ablation") => cmd_ablation(&args),

@@ -1,0 +1,642 @@
+//! Batched closed-form evaluator: struct-of-arrays waste surfaces.
+//!
+//! [`waste::waste_checked`] answers one (scenario, strategy, period) cell
+//! per call, re-deriving every domain guard and every scenario-dependent
+//! coefficient each time.  Campaigns, conformance sweeps and figure
+//! presets ask for the *whole* (scenario-batch B × period-grid G) block at
+//! once, so this module evaluates it as one:
+//!
+//! * **Guard hoisting** — the scenario-dependent guards (`μ ≤ D+R`,
+//!   `p = 0` for the prediction-aware formulas, the WithCkpt `T_P` window
+//!   fit) are decided once per row, not once per cell.  A guarded row
+//!   classifies all its cells without touching the formula arithmetic
+//!   (the `guard_skipped` counter).  Only `T_R ≤ C` remains per-cell — it
+//!   depends on the grid point — and it is checked in the classification
+//!   pass, outside the arithmetic loop.
+//! * **Coefficient hoisting** — every `T_R`-independent subexpression of
+//!   Eqs. (3)/(4)/(10)/(14) is computed once per row ([`RowCoeffs`]).
+//!   Hoisting preserves the scalar expression *trees* (only complete
+//!   subtrees are factored out), so each cell's f64 value is **bit
+//!   identical** to the corresponding [`waste::waste_checked`] /
+//!   [`waste::waste_clipped`] call — value *and* `Inapplicability`
+//!   reason.  Pinned by `tests/batch_model.rs` across the full
+//!   strategy × predictor registry cross-product.
+//! * **Tight inner loops** — the raw values land in a reused f64 scratch
+//!   buffer via straight-line, branch-free loops the compiler can
+//!   autovectorize; classification happens in a second pass.
+//! * **Sharding** — [`waste_surfaces`] fans scenario rows out over the
+//!   campaign work-stealing scheduler (one [`BatchEvaluator`] per worker,
+//!   results in input order, thread-count deterministic).
+//!
+//! Two output semantics, matching the two scalar entry points:
+//! checked ([`Applicability`] per cell — the conformance/model side) and
+//! clipped (kernel semantics: `T_R ≤ C ⇒ 1`, clamp to `[0,1]`, WithCkpt
+//! at `T_P^extr` — the figure presets and the PJRT/Pallas cross-check).
+//!
+//! See DESIGN.md §Batched model layer for the block layout and the
+//! 3-step recipe for adding a strategy column.
+
+use crate::config::Scenario;
+use crate::model::waste::{Applicability, GridStrategy, Inapplicability};
+
+/// The four surface rows of a block, in artifact order (= the strategy
+/// index layout of `python/compile/kernels/ref.py`).
+pub const STRATEGIES: [GridStrategy; 4] = [
+    GridStrategy::Q0,
+    GridStrategy::Instant,
+    GridStrategy::NoCkpt,
+    GridStrategy::WithCkpt,
+];
+
+/// Batch-evaluator telemetry (`ckptwin metrics` → `METRICS.json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BatchStats {
+    /// (row × grid) blocks evaluated (one per `eval_row`/`clipped_row`).
+    pub blocks: u64,
+    /// Total cells classified (applicable or not).
+    pub cells: u64,
+    /// Cells classified by a hoisted row guard or the per-cell
+    /// `T_R ≤ C` check — i.e. without evaluating any formula arithmetic.
+    pub guard_skipped: u64,
+    /// Wall-clock of the sharded [`waste_surfaces`] call that produced
+    /// these stats (0 for single-row accumulation).
+    pub elapsed_secs: f64,
+}
+
+impl BatchStats {
+    pub fn merge(&mut self, other: &BatchStats) {
+        self.blocks += other.blocks;
+        self.cells += other.cells;
+        self.guard_skipped += other.guard_skipped;
+        self.elapsed_secs += other.elapsed_secs;
+    }
+
+    /// Classified cells per second of wall-clock.
+    pub fn cells_per_sec(&self) -> f64 {
+        if self.elapsed_secs > 0.0 {
+            self.cells as f64 / self.elapsed_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of cells classified without formula arithmetic.
+    pub fn guard_skip_rate(&self) -> f64 {
+        if self.cells > 0 {
+            self.guard_skipped as f64 / self.cells as f64
+        } else {
+            0.0
+        }
+    }
+
+    fn delta(&self, since: &BatchStats) -> BatchStats {
+        BatchStats {
+            blocks: self.blocks - since.blocks,
+            cells: self.cells - since.cells,
+            guard_skipped: self.guard_skipped - since.guard_skipped,
+            elapsed_secs: 0.0,
+        }
+    }
+}
+
+/// The `T_R`-independent coefficients of one (scenario, strategy, `T_P`)
+/// row.  Every field is a *complete subtree* of the scalar formula's
+/// expression tree ([`waste::q0`]/[`waste::instant`]/[`waste::nockpt`]/
+/// [`waste::withckpt`]), so substituting it back into the per-cell
+/// remainder reproduces the scalar result bit for bit — IEEE f64
+/// arithmetic is deterministic, and only the *schedule* changes, never
+/// the operation tree.
+#[derive(Clone, Copy, Debug)]
+struct RowCoeffs {
+    /// Platform loads shared by every kernel.
+    c: f64,
+    mu: f64,
+    d: f64,
+    r: f64,
+    /// `p·(D+R) + r·C_p` — the `T_R`-free prefix of the aware numerators.
+    a: f64,
+    /// `(1−r)·p` — the coefficient of the `T_R/2` numerator term.
+    k: f64,
+    /// `p·μ` — the aware denominator.
+    denom: f64,
+    /// Instant: the `p·r·E` tail term of Eq. (14)'s numerator.
+    pre: f64,
+    /// NoCkpt/WithCkpt: the `r·((1−p)I + p·E)` tail term (Eqs. 10/4).
+    rw: f64,
+    /// NoCkpt: `1 − head` with `head = (r/(pμ))·(1−p)·I` (Eq. 10).
+    omh_nockpt: f64,
+    /// WithCkpt: `1 − head(T_P)` (Eq. 4).
+    omh_withckpt: f64,
+}
+
+impl RowCoeffs {
+    /// Hoist the row constants.  The bindings mirror the scalar formula
+    /// bodies token for token — do not "simplify" them: any re-association
+    /// breaks the bit-identity contract.
+    fn new(sc: &Scenario, tp: f64) -> RowCoeffs {
+        let pf = &sc.platform;
+        let (p, r) = (sc.predictor.precision, sc.predictor.recall);
+        let (i, e) = (sc.predictor.window, sc.e_if());
+        let head_nockpt = (r / (p * pf.mu)) * (1.0 - p) * i;
+        let head_withckpt = (r / (p * pf.mu))
+            * (1.0 - pf.cp / tp)
+            * ((1.0 - p) * i + p * (e - tp));
+        RowCoeffs {
+            c: pf.c,
+            mu: pf.mu,
+            d: pf.d,
+            r: pf.r,
+            a: p * (pf.d + pf.r) + r * pf.cp,
+            k: (1.0 - r) * p,
+            denom: p * pf.mu,
+            pre: p * r * e,
+            rw: r * ((1.0 - p) * i + p * e),
+            omh_nockpt: 1.0 - head_nockpt,
+            omh_withckpt: 1.0 - head_withckpt,
+        }
+    }
+
+    /// Fill `raw[j]` with the unguarded formula value at `grid[j]`.
+    /// Straight-line loops over the scratch buffer: no branches, no calls —
+    /// the autovectorization surface.
+    fn fill(&self, strat: GridStrategy, grid: &[f64], raw: &mut [f64]) {
+        debug_assert_eq!(grid.len(), raw.len());
+        match strat {
+            // Eq. (3): 1 − (1 − C/T)·(1 − (T/2 + D + R)/μ).
+            GridStrategy::Q0 => {
+                let (c, mu, d, r) = (self.c, self.mu, self.d, self.r);
+                for (w, &tr) in raw.iter_mut().zip(grid) {
+                    *w = 1.0
+                        - (1.0 - c / tr) * (1.0 - (tr / 2.0 + d + r) / mu);
+                }
+            }
+            // Eq. (14): inner = (a + k·T/2 + p·r·E)/(pμ).
+            GridStrategy::Instant => {
+                let (c, a, k, pre, denom) =
+                    (self.c, self.a, self.k, self.pre, self.denom);
+                for (w, &tr) in raw.iter_mut().zip(grid) {
+                    let inner = (a + k * tr / 2.0 + pre) / denom;
+                    *w = 1.0 - (1.0 - c / tr) * (1.0 - inner);
+                }
+            }
+            // Eq. (10): (1 − head) − (1 − C/T)·(1 − (a + k·T/2 + rw)/(pμ)).
+            GridStrategy::NoCkpt => {
+                let (c, a, k, rw, denom, omh) =
+                    (self.c, self.a, self.k, self.rw, self.denom, self.omh_nockpt);
+                for (w, &tr) in raw.iter_mut().zip(grid) {
+                    let inner = (a + k * tr / 2.0 + rw) / denom;
+                    *w = omh - (1.0 - c / tr) * (1.0 - inner);
+                }
+            }
+            // Eq. (4): same inner as Eq. (10), head carries the T_P share.
+            GridStrategy::WithCkpt => {
+                let (c, a, k, rw, denom, omh) = (
+                    self.c,
+                    self.a,
+                    self.k,
+                    self.rw,
+                    self.denom,
+                    self.omh_withckpt,
+                );
+                for (w, &tr) in raw.iter_mut().zip(grid) {
+                    let inner = (a + k * tr / 2.0 + rw) / denom;
+                    *w = omh - (1.0 - c / tr) * (1.0 - inner);
+                }
+            }
+        }
+    }
+}
+
+/// The hoisted row guard: the first [`Inapplicability`] (in
+/// [`waste::waste_checked`]'s guard order, after the per-cell `T_R ≤ C`
+/// check) that holds for *every* cell of the row, or `None`.
+fn row_guard(sc: &Scenario, strat: GridStrategy, tp: f64) -> Option<Inapplicability> {
+    let p = &sc.platform;
+    if !(p.mu > p.d + p.r) {
+        return Some(Inapplicability::MtbfWithinRecovery);
+    }
+    if strat != GridStrategy::Q0 && !(sc.predictor.precision > 0.0) {
+        return Some(Inapplicability::ZeroPrecision);
+    }
+    if strat == GridStrategy::WithCkpt
+        && !(tp >= p.cp && tp <= sc.predictor.window.max(p.cp))
+    {
+        return Some(Inapplicability::ProactivePeriodOutsideWindow);
+    }
+    None
+}
+
+/// One scenario's four checked waste surfaces over a shared period grid:
+/// `rows[strategy_index][grid_point]` (strategy order = [`STRATEGIES`]).
+#[derive(Clone, Debug, Default)]
+pub struct CheckedSurface {
+    pub rows: [Vec<Applicability>; 4],
+}
+
+impl CheckedSurface {
+    /// The row for `strat` (artifact index layout).
+    pub fn row(&self, strat: GridStrategy) -> &[Applicability] {
+        &self.rows[strat as usize]
+    }
+}
+
+/// The reusable evaluator: a scratch buffer plus accumulated stats.
+/// One instance per worker thread; creation is cheap.
+#[derive(Debug, Default)]
+pub struct BatchEvaluator {
+    scratch: Vec<f64>,
+    pub stats: BatchStats,
+}
+
+impl BatchEvaluator {
+    pub fn new() -> BatchEvaluator {
+        BatchEvaluator::default()
+    }
+
+    /// Evaluate one (scenario, strategy, `T_P`) row over `grid`, appending
+    /// one [`Applicability`] per grid point to `out` (cleared first).
+    /// Bit-identical — value and reason — to calling
+    /// [`waste::waste_checked`] per cell.
+    pub fn eval_row(
+        &mut self,
+        sc: &Scenario,
+        strat: GridStrategy,
+        tp: f64,
+        grid: &[f64],
+        out: &mut Vec<Applicability>,
+    ) {
+        out.clear();
+        out.reserve(grid.len());
+        self.stats.blocks += 1;
+        self.stats.cells += grid.len() as u64;
+        let c = sc.platform.c;
+        if let Some(g) = row_guard(sc, strat, tp) {
+            // Guarded row: no arithmetic at all.  The per-cell T_R ≤ C
+            // guard still takes precedence (waste_checked checks it first).
+            self.stats.guard_skipped += grid.len() as u64;
+            out.extend(grid.iter().map(|&tr| {
+                Applicability::Inapplicable(if !(tr > c) {
+                    Inapplicability::PeriodWithinCheckpoint
+                } else {
+                    g
+                })
+            }));
+            return;
+        }
+        let coeffs = RowCoeffs::new(sc, tp);
+        self.scratch.clear();
+        self.scratch.resize(grid.len(), 0.0);
+        coeffs.fill(strat, grid, &mut self.scratch);
+        for (&tr, &raw) in grid.iter().zip(&self.scratch) {
+            out.push(if !(tr > c) {
+                self.stats.guard_skipped += 1;
+                Applicability::Inapplicable(
+                    Inapplicability::PeriodWithinCheckpoint,
+                )
+            } else if raw.is_finite() && raw > 0.0 && raw < 1.0 {
+                Applicability::Applicable(raw)
+            } else {
+                Applicability::Inapplicable(Inapplicability::WasteOutOfRange)
+            });
+        }
+    }
+
+    /// [`Self::eval_row`] for all four strategies of one scenario.
+    /// WithCkpt evaluates Eq. (4) at `tp`; the others ignore it.
+    pub fn surface(
+        &mut self,
+        sc: &Scenario,
+        tp: f64,
+        grid: &[f64],
+    ) -> CheckedSurface {
+        let mut out = CheckedSurface::default();
+        for strat in STRATEGIES {
+            let mut row = Vec::new();
+            self.eval_row(sc, strat, tp, grid, &mut row);
+            out.rows[strat as usize] = row;
+        }
+        out
+    }
+
+    /// Kernel-semantics row: bit-identical to [`waste::waste_clipped`] per
+    /// cell (`T_R ≤ C ⇒ 1`, clamp `[0,1]`, WithCkpt at the row's
+    /// `T_P^extr`).  This is the figure presets' analytic column and the
+    /// f64 side of the PJRT/Pallas cross-check gate.
+    pub fn clipped_row(
+        &mut self,
+        sc: &Scenario,
+        strat: GridStrategy,
+        grid: &[f64],
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        out.reserve(grid.len());
+        self.stats.blocks += 1;
+        self.stats.cells += grid.len() as u64;
+        // waste_clipped evaluates WithCkpt at T_P^extr unconditionally; the
+        // scalar recomputes it per cell, the batch hoists it (pure fn of
+        // the scenario — identical bits either way).
+        let tp = crate::model::optimal::tp_extr(sc);
+        let coeffs = RowCoeffs::new(sc, tp);
+        self.scratch.clear();
+        self.scratch.resize(grid.len(), 0.0);
+        coeffs.fill(strat, grid, &mut self.scratch);
+        let c = sc.platform.c;
+        for (&tr, &raw) in grid.iter().zip(&self.scratch) {
+            out.push(if tr <= c {
+                self.stats.guard_skipped += 1;
+                1.0
+            } else {
+                raw.clamp(0.0, 1.0)
+            });
+        }
+    }
+
+    /// All four clipped rows of one scenario (artifact row order).
+    pub fn clipped_surface(
+        &mut self,
+        sc: &Scenario,
+        grid: &[f64],
+    ) -> [Vec<f64>; 4] {
+        let mut out: [Vec<f64>; 4] = Default::default();
+        for strat in STRATEGIES {
+            let mut row = Vec::new();
+            self.clipped_row(sc, strat, grid, &mut row);
+            out[strat as usize] = row;
+        }
+        out
+    }
+}
+
+/// Evaluate checked surfaces for a whole scenario batch over a shared
+/// grid, sharded across the campaign scheduler (`threads` = 0 ⇒ all
+/// cores).  `items[i] = (scenario, tp)`; results come back in input
+/// order and are thread-count deterministic.  Returns the merged stats
+/// with the call's wall-clock.
+pub fn waste_surfaces(
+    items: &[(Scenario, f64)],
+    grid: &[f64],
+    threads: usize,
+) -> (Vec<CheckedSurface>, BatchStats) {
+    use crate::campaign::scheduler;
+    let timer = crate::obs::SpanTimer::start();
+    struct Worker {
+        ev: BatchEvaluator,
+        seen: BatchStats,
+    }
+    let out = scheduler::run_units_stateful(
+        items.len(),
+        threads,
+        || Worker { ev: BatchEvaluator::new(), seen: BatchStats::default() },
+        |w: &mut Worker, u| {
+            let (sc, tp) = &items[u];
+            let surface = w.ev.surface(sc, *tp, grid);
+            let delta = w.ev.stats.delta(&w.seen);
+            w.seen = w.ev.stats;
+            (surface, delta)
+        },
+    );
+    let mut stats = BatchStats::default();
+    let mut surfaces = Vec::with_capacity(out.len());
+    for (surface, delta) in out {
+        stats.merge(&delta);
+        surfaces.push(surface);
+    }
+    stats.elapsed_secs = timer.elapsed_secs();
+    (surfaces, stats)
+}
+
+/// Clipped surfaces for a scenario batch (kernel semantics), sharded like
+/// [`waste_surfaces`].  The f64 reference side of the waste-grid artifact
+/// cross-check.
+pub fn clipped_surfaces(
+    scenarios: &[Scenario],
+    grid: &[f64],
+    threads: usize,
+) -> (Vec<[Vec<f64>; 4]>, BatchStats) {
+    use crate::campaign::scheduler;
+    let timer = crate::obs::SpanTimer::start();
+    struct Worker {
+        ev: BatchEvaluator,
+        seen: BatchStats,
+    }
+    let out = scheduler::run_units_stateful(
+        scenarios.len(),
+        threads,
+        || Worker { ev: BatchEvaluator::new(), seen: BatchStats::default() },
+        |w: &mut Worker, u| {
+            let surface = w.ev.clipped_surface(&scenarios[u], grid);
+            let delta = w.ev.stats.delta(&w.seen);
+            w.seen = w.ev.stats;
+            (surface, delta)
+        },
+    );
+    let mut stats = BatchStats::default();
+    let mut surfaces = Vec::with_capacity(out.len());
+    for (surface, delta) in out {
+        stats.merge(&delta);
+        surfaces.push(surface);
+    }
+    stats.elapsed_secs = timer.elapsed_secs();
+    (surfaces, stats)
+}
+
+/// Analytic BestPeriod over a clipped surface: `(best_tr, best_waste)`
+/// per strategy (artifact order), first minimum winning ties — the
+/// f64 twin of [`crate::runtime::Runtime::best_periods`].
+pub fn best_periods_clipped(
+    sc: &Scenario,
+    grid: &[f64],
+) -> [(f64, f64); 4] {
+    let mut ev = BatchEvaluator::new();
+    let surface = ev.clipped_surface(sc, grid);
+    let mut best = [(0.0f64, f64::INFINITY); 4];
+    for (si, row) in surface.iter().enumerate() {
+        for (gi, &w) in row.iter().enumerate() {
+            if w < best[si].1 {
+                best[si] = (grid[gi], w);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec, Scenario};
+    use crate::model::waste::{waste_checked, waste_clipped};
+    use crate::sim::distribution::Law;
+
+    fn sc(mu: f64, cp: f64, p: f64, r: f64, i: f64) -> Scenario {
+        Scenario {
+            platform: Platform { mu, c: 600.0, cp, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec::paper(r, p, i),
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 1e7,
+        }
+    }
+
+    fn grid() -> Vec<f64> {
+        vec![100.0, 600.0, 660.0, 2000.0, 6000.0, 20_000.0, 2e5, 2e6]
+    }
+
+    fn assert_bitwise(tag: &str, got: Applicability, want: Applicability) {
+        match (got, want) {
+            (Applicability::Applicable(g), Applicability::Applicable(w)) => {
+                assert_eq!(g.to_bits(), w.to_bits(), "{tag}: {g} vs {w}");
+            }
+            _ => assert_eq!(got, want, "{tag}"),
+        }
+    }
+
+    #[test]
+    fn rows_match_scalar_checked_bitwise() {
+        let scenarios = [
+            sc(60_000.0, 600.0, 0.82, 0.85, 600.0),
+            sc(60_000.0, 60.0, 0.82, 0.85, 3000.0),
+            sc(1000.0, 600.0, 0.82, 0.85, 600.0), // saturated values
+            sc(600.0, 600.0, 0.82, 0.85, 600.0),  // μ ≤ D+R row guard
+            sc(60_000.0, 600.0, 0.0, 0.85, 600.0), // p = 0 row guard
+        ];
+        let g = grid();
+        let mut ev = BatchEvaluator::new();
+        let mut row = Vec::new();
+        for s in &scenarios {
+            let tp = crate::model::optimal::tp_extr(s)
+                .clamp(s.platform.cp, s.predictor.window.max(s.platform.cp));
+            for strat in STRATEGIES {
+                ev.eval_row(s, strat, tp, &g, &mut row);
+                assert_eq!(row.len(), g.len());
+                for (j, &tr) in g.iter().enumerate() {
+                    assert_bitwise(
+                        &format!("{strat:?} tr={tr}"),
+                        row[j],
+                        waste_checked(s, strat, tr, tp),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn withckpt_tp_guard_is_hoisted_but_identical() {
+        let s = sc(60_000.0, 600.0, 0.82, 0.85, 600.0);
+        let mut ev = BatchEvaluator::new();
+        let mut row = Vec::new();
+        // T_P below C_p and above the window: both classify every cell.
+        for tp in [30.0, 4000.0] {
+            ev.eval_row(&s, GridStrategy::WithCkpt, tp, &grid(), &mut row);
+            for (j, &tr) in grid().iter().enumerate() {
+                assert_eq!(row[j], waste_checked(&s, GridStrategy::WithCkpt, tr, tp), "tr={tr}");
+            }
+        }
+    }
+
+    #[test]
+    fn clipped_rows_match_scalar_clipped_bitwise() {
+        let scenarios = [
+            sc(60_000.0, 600.0, 0.82, 0.85, 600.0),
+            sc(60_000.0, 60.0, 0.82, 0.85, 3000.0),
+            sc(1000.0, 600.0, 0.82, 0.85, 600.0),
+        ];
+        let g = grid();
+        let mut ev = BatchEvaluator::new();
+        let mut row = Vec::new();
+        for s in &scenarios {
+            for strat in STRATEGIES {
+                ev.clipped_row(s, strat, &g, &mut row);
+                for (j, &tr) in g.iter().enumerate() {
+                    assert_eq!(
+                        row[j].to_bits(),
+                        waste_clipped(s, strat, tr).to_bits(),
+                        "{strat:?} tr={tr}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stats_count_blocks_cells_and_guard_skips() {
+        let mut ev = BatchEvaluator::new();
+        let mut row = Vec::new();
+        let g = grid();
+        // p = 0 row: every aware cell is guard-skipped.
+        let p0 = sc(60_000.0, 600.0, 0.0, 0.85, 600.0);
+        ev.eval_row(&p0, GridStrategy::Instant, 700.0, &g, &mut row);
+        assert_eq!(ev.stats.blocks, 1);
+        assert_eq!(ev.stats.cells, g.len() as u64);
+        assert_eq!(ev.stats.guard_skipped, g.len() as u64);
+        assert_eq!(ev.stats.guard_skip_rate(), 1.0);
+        // An unguarded Q0 row only skips the two T_R ≤ C cells.
+        ev.eval_row(&p0, GridStrategy::Q0, 700.0, &g, &mut row);
+        assert_eq!(ev.stats.blocks, 2);
+        assert_eq!(ev.stats.guard_skipped, g.len() as u64 + 2);
+        assert!(ev.stats.guard_skip_rate() < 1.0);
+    }
+
+    #[test]
+    fn sharded_surfaces_are_thread_count_deterministic() {
+        let items: Vec<(Scenario, f64)> = [
+            sc(60_000.0, 600.0, 0.82, 0.85, 600.0),
+            sc(60_000.0, 60.0, 0.82, 0.85, 3000.0),
+            sc(200_000.0, 300.0, 0.95, 0.5, 900.0),
+            sc(600.0, 600.0, 0.82, 0.85, 600.0),
+        ]
+        .into_iter()
+        .map(|s| {
+            let tp = crate::model::optimal::tp_extr(&s)
+                .clamp(s.platform.cp, s.predictor.window.max(s.platform.cp));
+            (s, tp)
+        })
+        .collect();
+        let g = grid();
+        let (a, sa) = waste_surfaces(&items, &g, 1);
+        let (b, sb) = waste_surfaces(&items, &g, 4);
+        assert_eq!(a.len(), items.len());
+        for (x, y) in a.iter().zip(&b) {
+            for strat in STRATEGIES {
+                assert_eq!(x.row(strat), y.row(strat));
+            }
+        }
+        // Stats are schedule-independent (wall-clock aside).
+        assert_eq!(sa.blocks, sb.blocks);
+        assert_eq!(sa.cells, sb.cells);
+        assert_eq!(sa.guard_skipped, sb.guard_skipped);
+        assert_eq!(sa.cells, (items.len() * 4 * g.len()) as u64);
+    }
+
+    #[test]
+    fn best_periods_clipped_finds_the_grid_argmin() {
+        let s = sc(60_000.0, 60.0, 0.82, 0.85, 3000.0);
+        let g: Vec<f64> = (0..257)
+            .map(|k| 700.0 * (4e5f64 / 700.0).powf(k as f64 / 256.0))
+            .collect();
+        let best = best_periods_clipped(&s, &g);
+        for (si, strat) in STRATEGIES.iter().enumerate() {
+            let (btr, bw) = best[si];
+            assert!(bw > 0.0 && bw < 1.0, "{strat:?}");
+            // No grid point beats the reported argmin.
+            for &tr in &g {
+                assert!(waste_clipped(&s, *strat, tr) >= bw, "{strat:?} tr={tr}");
+            }
+            assert!(g.contains(&btr));
+        }
+    }
+
+    #[test]
+    fn empty_grid_yields_empty_rows() {
+        let s = sc(60_000.0, 600.0, 0.82, 0.85, 600.0);
+        let mut ev = BatchEvaluator::new();
+        let mut row = Vec::new();
+        ev.eval_row(&s, GridStrategy::Q0, 700.0, &[], &mut row);
+        assert!(row.is_empty());
+        assert_eq!(ev.stats.cells, 0);
+        let (surfaces, stats) = waste_surfaces(&[], &grid(), 2);
+        assert!(surfaces.is_empty());
+        assert_eq!(stats.cells, 0);
+    }
+}

@@ -3,6 +3,9 @@
 //! * [`waste`] — closed-form waste of each strategy as a function of the
 //!   regular period `T_R` (and proactive period `T_P`): Eqs. (3), (4),
 //!   (10), (14).
+//! * [`batch`] — the struct-of-arrays evaluator: whole
+//!   (scenario-batch × period-grid) blocks in one pass, bit-identical to
+//!   the scalar entry points (see DESIGN.md §Batched model layer).
 //! * [`optimal`] — the closed-form optimal periods: Young / Daly / RFO for
 //!   the prediction-ignoring policies, `T_P^extr` and the strategy-specific
 //!   `T_R^extr` (Eq. 6 and the §3.3 / §3.4 variants) for the
@@ -19,5 +22,6 @@
 //! subsystem ([`crate::validate`]) sweeps these formulas against the
 //! simulator and gates the agreement in CI.
 
+pub mod batch;
 pub mod optimal;
 pub mod waste;

@@ -5,7 +5,32 @@
 //! `G = manifest.waste_grid` periods); this wrapper pads/chunks arbitrary
 //! inputs to those shapes.  Padded scenario rows replicate the first row;
 //! padded grid points use a large valid period — both are simply discarded
-//! on the way out.
+//! on the way out ([`pack_rows`]/[`pad_grid`]/[`unpack_chunk`], unit-tested
+//! without an artifact).
+//!
+//! ## Precision contract (f64 → f32)
+//!
+//! The kernel computes in f32; scenario parameters are narrowed on entry.
+//! For any *normal* f32 value the narrowing loses at most 2⁻²⁴ ≈ 6·10⁻⁸
+//! relative — far below the cross-check tolerance.  What the old silent
+//! `as f32` cast hid are the two failure modes outside that promise:
+//! overflow (μ beyond ~3.4·10³⁸ becomes `inf`) and underflow (a precision
+//! like 10⁻⁴⁰ becomes 0 or a denormal, turning the kernel's `p·μ`
+//! denominator into garbage).  [`scenario_row_checked`] enforces the
+//! contract — every parameter must survive the f32 round-trip within
+//! [`NARROWING_REL_TOL`] — and [`Runtime::waste_surfaces`] refuses
+//! unrepresentable scenarios instead of silently producing wrong grids.
+//!
+//! ## Cross-check gate
+//!
+//! [`crosscheck_waste_grid`] is the conformance-style gate unifying this
+//! backend with the Rust model: the kernel's f32 surfaces must agree with
+//! [`crate::model::batch`]'s f64 clipped surfaces (which are bit-identical
+//! to scalar [`crate::model::waste::waste_clipped`]) within a priced
+//! tolerance — [`CROSSCHECK_ABS_TOL`] + [`CROSSCHECK_REL_TOL`]·|w|,
+//! covering the 10 input narrowings (≤ 10·2⁻²⁴), the ~20 f32 kernel ops,
+//! and a safety factor for the `1 − (1−a)(1−b)` cancellation (the same
+//! 2·10⁻⁴ bound `tests/runtime_roundtrip.rs` has pinned since PR 1).
 
 use anyhow::{anyhow, Result};
 
@@ -16,8 +41,63 @@ use crate::runtime::Runtime;
 /// Strategy count of the artifact output (matches `ref.N_STRATEGIES`).
 pub const N_STRATEGIES: usize = 4;
 
+/// Maximum relative error a scenario parameter may lose in the f64 → f32
+/// narrowing before [`scenario_row_checked`] rejects it.  Normal values
+/// lose ≤ 2⁻²⁴ ≈ 6·10⁻⁸; anything above this tolerance means the value
+/// left f32's normal range (overflow/underflow) and the kernel grid would
+/// silently be garbage.
+pub const NARROWING_REL_TOL: f64 = 1e-6;
+
+/// Absolute tolerance of [`crosscheck_waste_grid`] (see module docs).
+pub const CROSSCHECK_ABS_TOL: f64 = 2e-4;
+
+/// Relative tolerance of [`crosscheck_waste_grid`].
+pub const CROSSCHECK_REL_TOL: f64 = 1e-4;
+
+/// Narrow one parameter under the precision contract.
+fn narrow(name: &'static str, v: f64) -> Result<f32> {
+    if !v.is_finite() {
+        return Err(anyhow!("scenario parameter {name} = {v} is not finite"));
+    }
+    let n = v as f32;
+    if !n.is_finite() {
+        return Err(anyhow!("scenario parameter {name} = {v} overflows f32"));
+    }
+    if v != 0.0 {
+        let rel = ((n as f64 - v) / v).abs();
+        if rel > NARROWING_REL_TOL {
+            return Err(anyhow!(
+                "scenario parameter {name} = {v:e} loses {rel:.2e} relative \
+                 precision in f32 (contract: ≤ {NARROWING_REL_TOL:e}); \
+                 the kernel grid would be meaningless"
+            ));
+        }
+    }
+    Ok(n)
+}
+
 /// Pack a scenario into the kernel's parameter-row layout
-/// (see `python/compile/kernels/ref.py`).
+/// (see `python/compile/kernels/ref.py`), enforcing the module's
+/// precision contract: every parameter must survive the f32 narrowing
+/// within [`NARROWING_REL_TOL`] relative.
+pub fn scenario_row_checked(sc: &Scenario) -> Result<[f32; 10]> {
+    Ok([
+        narrow("mu", sc.platform.mu)?,
+        narrow("c", sc.platform.c)?,
+        narrow("cp", sc.platform.cp)?,
+        narrow("d", sc.platform.d)?,
+        narrow("r", sc.platform.r)?,
+        narrow("precision", sc.predictor.precision)?,
+        narrow("recall", sc.predictor.recall)?,
+        narrow("window", sc.predictor.window)?,
+        narrow("e_if", sc.e_if())?,
+        0.0,
+    ])
+}
+
+/// The pre-contract packing: a bare `as f32` per parameter.  Kept for
+/// callers that pack values already known representable (tests, goldens);
+/// batch entry points go through [`scenario_row_checked`].
 pub fn scenario_row(sc: &Scenario) -> [f32; 10] {
     [
         sc.platform.mu as f32,
@@ -33,12 +113,65 @@ pub fn scenario_row(sc: &Scenario) -> [f32; 10] {
     ]
 }
 
+/// Pad the period grid to the artifact's `g` points: real periods first,
+/// then a large valid pad period (twice the maximum plus 10⁴ s — far from
+/// every real point, still finite in f32 for any sane grid).  The pad
+/// columns are discarded by [`unpack_chunk`].
+pub fn pad_grid(tr: &[f64], g: usize) -> Vec<f32> {
+    let pad_tr = tr.iter().copied().fold(f64::MIN, f64::max) * 2.0 + 1e4;
+    let mut tr_f32: Vec<f32> = tr.iter().map(|&t| t as f32).collect();
+    tr_f32.resize(g, pad_tr as f32);
+    tr_f32
+}
+
+/// Pack one scenario chunk into the artifact's `b × 10` parameter block,
+/// replicating the first row into the pad rows (their outputs are
+/// discarded by [`unpack_chunk`]; replication keeps them in-domain so the
+/// kernel never sees uninitialized parameters).
+pub fn pack_rows(chunk: &[Scenario], b: usize) -> Result<Vec<f32>> {
+    assert!(!chunk.is_empty() && chunk.len() <= b);
+    let mut rows = Vec::with_capacity(b * 10);
+    for sc in chunk {
+        rows.extend_from_slice(&scenario_row_checked(sc)?);
+    }
+    let first = scenario_row_checked(&chunk[0])?;
+    for _ in chunk.len()..b {
+        rows.extend_from_slice(&first);
+    }
+    Ok(rows)
+}
+
 /// Waste surfaces for one scenario: `out[strategy][grid_point]`.
 pub type Surface = [Vec<f32>; N_STRATEGIES];
 
+/// Unpack one executed chunk's flat `b × strategies × g` output into
+/// per-scenario [`Surface`]s, discarding the pad rows (beyond
+/// `chunk_len`) and pad grid columns (beyond `keep` periods).
+pub fn unpack_chunk(
+    flat: &[f32],
+    b: usize,
+    g: usize,
+    chunk_len: usize,
+    keep: usize,
+) -> Vec<Surface> {
+    debug_assert_eq!(flat.len(), b * N_STRATEGIES * g);
+    let mut out = Vec::with_capacity(chunk_len);
+    for bi in 0..chunk_len {
+        let mut surface: Surface = Default::default();
+        for (si, row) in surface.iter_mut().enumerate() {
+            let base = bi * N_STRATEGIES * g + si * g;
+            row.extend_from_slice(&flat[base..base + keep]);
+        }
+        out.push(surface);
+    }
+    out
+}
+
 impl Runtime {
     /// Evaluate waste surfaces for all `scenarios` over the shared period
-    /// grid `tr`.  Returns one [`Surface`] per scenario.
+    /// grid `tr`.  Returns one [`Surface`] per scenario.  Errors when the
+    /// grid exceeds the artifact capacity or a scenario violates the f32
+    /// precision contract ([`scenario_row_checked`]).
     pub fn waste_surfaces(
         &self,
         scenarios: &[Scenario],
@@ -56,22 +189,11 @@ impl Runtime {
             ));
         }
 
-        // Pad the period grid with a large valid period.
-        let pad_tr = tr.iter().copied().fold(f64::MIN, f64::max) * 2.0 + 1e4;
-        let mut tr_f32: Vec<f32> = tr.iter().map(|&t| t as f32).collect();
-        tr_f32.resize(g, pad_tr as f32);
-        let tr_lit = xla::Literal::vec1(&tr_f32);
+        let tr_lit = xla::Literal::vec1(&pad_grid(tr, g));
 
         let mut out = Vec::with_capacity(scenarios.len());
         for chunk in scenarios.chunks(b) {
-            let mut rows = Vec::with_capacity(b * 10);
-            for sc in chunk {
-                rows.extend_from_slice(&scenario_row(sc));
-            }
-            // Pad the batch by replicating the first row.
-            for _ in chunk.len()..b {
-                rows.extend_from_slice(&scenario_row(&chunk[0]));
-            }
+            let rows = pack_rows(chunk, b)?;
             let params = xla::Literal::vec1(&rows)
                 .reshape(&[b as i64, 10])
                 .map_err(|e| anyhow!("reshape params: {e:?}"))?;
@@ -79,15 +201,7 @@ impl Runtime {
             let flat: Vec<f32> = outs[0]
                 .to_vec()
                 .map_err(|e| anyhow!("waste output: {e:?}"))?;
-            debug_assert_eq!(flat.len(), b * N_STRATEGIES * g);
-            for (bi, _) in chunk.iter().enumerate() {
-                let mut surface: Surface = Default::default();
-                for (si, row) in surface.iter_mut().enumerate() {
-                    let base = bi * N_STRATEGIES * g + si * g;
-                    row.extend_from_slice(&flat[base..base + tr.len()]);
-                }
-                out.push(surface);
-            }
+            out.extend(unpack_chunk(&flat, b, g, chunk.len(), tr.len()));
         }
         Ok(out)
     }
@@ -117,4 +231,170 @@ impl Runtime {
 /// Map a [`GridStrategy`] to its row index in a [`Surface`].
 pub fn strategy_index(s: GridStrategy) -> usize {
     s as usize
+}
+
+/// Outcome of the kernel-vs-model cross-check gate
+/// ([`crosscheck_waste_grid`]).
+#[derive(Clone, Debug, Default)]
+pub struct CrossCheck {
+    /// Cells compared (scenarios × strategies × grid points).
+    pub cells: u64,
+    /// Cells beyond the priced tolerance.
+    pub failures: u64,
+    /// Largest |kernel − model| observed.
+    pub max_abs_err: f64,
+    /// `(scenario, strategy, grid)` index of the worst cell.
+    pub worst: Option<(usize, usize, usize)>,
+}
+
+impl CrossCheck {
+    /// The gate verdict: every cell within tolerance.
+    pub fn passed(&self) -> bool {
+        self.failures == 0
+    }
+}
+
+/// The backend-unification gate: evaluate `scenarios × tr` through the
+/// PJRT/Pallas kernel AND through [`crate::model::batch`]'s f64 clipped
+/// surfaces, and compare element-wise within the priced f32 tolerance
+/// (see module docs).  The f64 side is bit-identical to scalar
+/// `waste_clipped`, so a pass pins kernel ≡ scalar ≡ batch in one sweep.
+pub fn crosscheck_waste_grid(
+    rt: &Runtime,
+    scenarios: &[Scenario],
+    tr: &[f64],
+) -> Result<CrossCheck> {
+    let kernel = rt.waste_surfaces(scenarios, tr)?;
+    let (model, _) = crate::model::batch::clipped_surfaces(scenarios, tr, 0);
+    let mut chk = CrossCheck::default();
+    for (sci, (ks, ms)) in kernel.iter().zip(&model).enumerate() {
+        for si in 0..N_STRATEGIES {
+            for (gi, (&kw, &mw)) in ks[si].iter().zip(&ms[si]).enumerate() {
+                chk.cells += 1;
+                let err = (kw as f64 - mw).abs();
+                if err > chk.max_abs_err {
+                    chk.max_abs_err = err;
+                    chk.worst = Some((sci, si, gi));
+                }
+                if err > CROSSCHECK_ABS_TOL + CROSSCHECK_REL_TOL * mw.abs() {
+                    chk.failures += 1;
+                }
+            }
+        }
+    }
+    Ok(chk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultModel, Platform, PredictorSpec};
+    use crate::sim::distribution::Law;
+
+    fn sc(mu: f64, precision: f64) -> Scenario {
+        Scenario {
+            platform: Platform { mu, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+            predictor: PredictorSpec::paper(0.85, precision, 600.0),
+            fault_law: Law::Exponential,
+            false_pred_law: Law::Exponential,
+            fault_model: FaultModel::PlatformRenewal,
+            job_size: 1e7,
+        }
+    }
+
+    #[test]
+    fn checked_row_accepts_representable_scenarios() {
+        let row = scenario_row_checked(&sc(60_000.0, 0.82)).unwrap();
+        assert_eq!(row, scenario_row(&sc(60_000.0, 0.82)));
+        assert_eq!(row[0], 60_000.0f32);
+        assert_eq!(row[9], 0.0);
+    }
+
+    #[test]
+    fn checked_row_rejects_f32_overflow_and_underflow() {
+        // Overflow: μ beyond f32::MAX silently became inf before.
+        let err = scenario_row_checked(&sc(1e39, 0.82)).unwrap_err();
+        assert!(err.to_string().contains("overflows f32"), "{err}");
+        // Underflow: a subnormal precision silently became ~0, turning the
+        // kernel's p·μ denominator into garbage.
+        let err = scenario_row_checked(&sc(60_000.0, 1e-40)).unwrap_err();
+        assert!(err.to_string().contains("precision"), "{err}");
+        // Non-finite parameters are rejected outright.
+        let err = scenario_row_checked(&sc(f64::INFINITY, 0.82)).unwrap_err();
+        assert!(err.to_string().contains("not finite"), "{err}");
+        // p = 0 is exactly representable: the contract is about narrowing,
+        // not about domain (the kernel clips its own domain).
+        assert!(scenario_row_checked(&sc(60_000.0, 0.0)).is_ok());
+    }
+
+    #[test]
+    fn pad_grid_appends_out_of_band_periods() {
+        let padded = pad_grid(&[700.0, 6000.0], 5);
+        assert_eq!(padded.len(), 5);
+        assert_eq!(&padded[..2], &[700.0f32, 6000.0]);
+        // Pad periods sit beyond every real grid point (discarded anyway,
+        // but they must stay in the kernel's valid domain: tr > C).
+        for &p in &padded[2..] {
+            assert_eq!(p, (6000.0 * 2.0 + 1e4) as f32);
+            assert!(p > 6000.0);
+        }
+    }
+
+    #[test]
+    fn pack_rows_replicates_first_row_into_padding() {
+        let chunk = [sc(60_000.0, 0.82), sc(30_000.0, 0.4)];
+        let rows = pack_rows(&chunk, 4).unwrap();
+        assert_eq!(rows.len(), 4 * 10);
+        let first = scenario_row(&chunk[0]);
+        let second = scenario_row(&chunk[1]);
+        assert_eq!(&rows[..10], &first);
+        assert_eq!(&rows[10..20], &second);
+        // Pad rows replicate row 0, keeping the kernel in-domain.
+        assert_eq!(&rows[20..30], &first);
+        assert_eq!(&rows[30..40], &first);
+        // A contract violation anywhere in the chunk fails the pack.
+        assert!(pack_rows(&[sc(60_000.0, 0.82), sc(1e39, 0.82)], 4).is_err());
+    }
+
+    #[test]
+    fn unpack_chunk_discards_pad_rows_and_pad_periods() {
+        // b = 3 scenarios × g = 4 periods, but only 2 real scenarios and
+        // 2 real periods: every kept value must come from the real block,
+        // every pad value (tagged 9xx) must be dropped.
+        let (b, g, chunk_len, keep) = (3usize, 4usize, 2usize, 2usize);
+        let mut flat = vec![0.0f32; b * N_STRATEGIES * g];
+        for bi in 0..b {
+            for si in 0..N_STRATEGIES {
+                for gi in 0..g {
+                    let real = bi < chunk_len && gi < keep;
+                    flat[bi * N_STRATEGIES * g + si * g + gi] = if real {
+                        (bi * 100 + si * 10 + gi) as f32
+                    } else {
+                        900.0 + bi as f32
+                    };
+                }
+            }
+        }
+        let out = unpack_chunk(&flat, b, g, chunk_len, keep);
+        assert_eq!(out.len(), chunk_len);
+        for (bi, surface) in out.iter().enumerate() {
+            for (si, row) in surface.iter().enumerate() {
+                assert_eq!(row.len(), keep);
+                for (gi, &w) in row.iter().enumerate() {
+                    assert_eq!(w, (bi * 100 + si * 10 + gi) as f32);
+                    assert!(w < 900.0, "pad value leaked through");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn crosscheck_tolerance_is_priced_not_guessed() {
+        // 10 narrowings × 2⁻²⁴ plus ~20 f32 ops × 2⁻²⁴ plus the
+        // cancellation safety factor must stay below the absolute term.
+        let per_op = 2f64.powi(-24);
+        assert!(30.0 * per_op < CROSSCHECK_ABS_TOL);
+        // And the pinned roundtrip bound from PR 1 is exactly our floor.
+        assert_eq!(CROSSCHECK_ABS_TOL, 2e-4);
+    }
 }

@@ -28,7 +28,24 @@
 //!   (`adaptive_search_within_tolerance_of_exhaustive`) pins the result
 //!   quality to the exhaustive sweep.
 
+//!
+//! Adaptive mode additionally **seeds the race with the closed-form
+//! model** ([`ModelSide`]): each candidate batch is evaluated through
+//! [`crate::model::batch`] first, candidates are reordered by model waste
+//! (so the likely winner leads and elimination bites early), and
+//! candidates whose model waste exceeds the model minimum by more than
+//! [`SearchConfig::prune_margin`] are dropped before the first
+//! simulation.  Candidates the model cannot vouch for (classified
+//! [`crate::model::waste::Inapplicability`]) are never pruned — they run
+//! after the model-ranked ones in their original order.  The batched and
+//! scalar model sides are bit-identical (the `model::batch` contract), so
+//! `--batch` vs `--scalar` produce the same winner and the same
+//! elimination trace ([`RaceLog`]); exhaustive mode never consults the
+//! model ([`ModelSide::Off`]), keeping its eval counts deterministic.
+
 use crate::config::Scenario;
+use crate::model::batch::BatchEvaluator;
+use crate::model::waste::{waste_checked, Applicability};
 use crate::sim::engine::{simulate, simulate_from_capped};
 use crate::sim::trace::TraceCache;
 use crate::strategy::{Policy, PolicyKind};
@@ -46,6 +63,23 @@ pub struct BestPeriod {
     pub evals: u64,
 }
 
+/// Which closed-form implementation seeds the adaptive race's candidate
+/// batches (ordering + pruning).  Batched and Scalar are bit-identical
+/// (the `model::batch` contract, pinned in `tests/batch_model.rs`), so
+/// they yield the same winner and elimination trace; Scalar exists as the
+/// `ckptwin best-period --scalar` escape hatch and as the cross-check's
+/// reference side.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelSide {
+    /// Whole-batch evaluation via [`crate::model::batch`] (the default).
+    Batched,
+    /// Per-candidate [`waste_checked`] calls (escape hatch / reference).
+    Scalar,
+    /// No model seeding at all — candidates race in grid order
+    /// (exhaustive mode, and the pre-batch adaptive behavior).
+    Off,
+}
+
 /// Sweep shape and mode of a [`search_with`] call.
 #[derive(Clone, Copy, Debug)]
 pub struct SearchConfig {
@@ -58,17 +92,49 @@ pub struct SearchConfig {
     /// Adaptive mode's waste tolerance: elimination slack and early-stop
     /// threshold both derive from it (ignored when `exact`).
     pub tolerance: f64,
+    /// Model side seeding the adaptive race (ignored when `exact`).
+    pub model: ModelSide,
+    /// Adaptive pruning margin, in absolute waste: candidates whose model
+    /// waste exceeds the model minimum by more than this are dropped
+    /// before any simulation.  Far above the model-vs-simulation deviation
+    /// of any conforming scenario (conformance tolerances are ~0.02-0.05),
+    /// so the simulated winner is never at risk; inapplicable candidates
+    /// are exempt (the model cannot vouch against them).
+    pub prune_margin: f64,
 }
 
 impl SearchConfig {
-    /// The racing configuration used by default (tolerance 0.01 waste).
+    /// The racing configuration used by default (tolerance 0.01 waste,
+    /// batched model seeding with a 0.25-waste pruning margin).
     pub fn adaptive(coarse: usize, refine: usize) -> Self {
-        SearchConfig { coarse, refine, exact: false, tolerance: 0.01 }
+        SearchConfig {
+            coarse,
+            refine,
+            exact: false,
+            tolerance: 0.01,
+            model: ModelSide::Batched,
+            prune_margin: 0.25,
+        }
     }
 
-    /// The pre-adaptive full sweep.
+    /// The pre-adaptive full sweep (no model seeding: deterministic eval
+    /// counts, grid-order sweep).
     pub fn exhaustive(coarse: usize, refine: usize) -> Self {
-        SearchConfig { coarse, refine, exact: true, tolerance: 0.0 }
+        SearchConfig {
+            coarse,
+            refine,
+            exact: true,
+            tolerance: 0.0,
+            model: ModelSide::Off,
+            prune_margin: 0.0,
+        }
+    }
+
+    /// This config with the given model side (builder-style, for the CLI
+    /// escape hatch and the equivalence tests).
+    pub fn with_model(mut self, model: ModelSide) -> Self {
+        self.model = model;
+        self
     }
 }
 
@@ -148,10 +214,76 @@ fn refine_grid(btr: f64, ratio: f64, lo: f64, hi: f64, refine: usize) -> Vec<f64
     cands
 }
 
+/// The elimination trace of one adaptive search: one entry per race
+/// stage, holding the candidate periods still alive *after* that stage's
+/// elimination, in race order.  The batched-vs-scalar equivalence tests
+/// pin this trace, not just the winner — bit-identical model seeding must
+/// produce bit-identical races.
+pub type RaceLog = Vec<Vec<f64>>;
+
+/// Model-seed a candidate batch: evaluate every candidate's closed-form
+/// waste (batched or scalar — bit-identical), reorder applicable
+/// candidates by ascending model waste (ties by original position), drop
+/// the applicable ones worse than the model minimum by more than
+/// `margin`, and append the inapplicable ones (unpruned, original order).
+/// Returns the candidates untouched when the model side is [`ModelSide::Off`],
+/// the policy has no closed form ([`PolicyKind::grid_strategy`] is
+/// `None`), or no candidate is applicable.
+fn model_seed(
+    sc: &Scenario,
+    kind: PolicyKind,
+    tp: f64,
+    cands: Vec<f64>,
+    side: ModelSide,
+    margin: f64,
+) -> Vec<f64> {
+    let strat = match (side, kind.grid_strategy()) {
+        (ModelSide::Off, _) | (_, None) => return cands,
+        (_, Some(s)) => s,
+    };
+    let model: Vec<Applicability> = match side {
+        ModelSide::Batched => {
+            let mut ev = BatchEvaluator::new();
+            let mut row = Vec::new();
+            ev.eval_row(sc, strat, tp, &cands, &mut row);
+            row
+        }
+        ModelSide::Scalar => cands
+            .iter()
+            .map(|&tr| waste_checked(sc, strat, tr, tp))
+            .collect(),
+        ModelSide::Off => unreachable!(),
+    };
+    let mut ranked: Vec<(f64, usize)> = Vec::with_capacity(cands.len());
+    let mut unranked: Vec<usize> = Vec::new();
+    for (i, a) in model.iter().enumerate() {
+        match a.value() {
+            Some(w) => ranked.push((w, i)),
+            None => unranked.push(i),
+        }
+    }
+    if ranked.is_empty() {
+        return cands;
+    }
+    // Applicable values are finite by construction: total_cmp is a plain
+    // f64 order here, the index tie-break keeps the sort schedule-free.
+    ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let floor = ranked[0].0;
+    let mut out: Vec<f64> = ranked
+        .iter()
+        .filter(|(w, _)| *w <= floor + margin)
+        .map(|&(_, i)| cands[i])
+        .collect();
+    out.extend(unranked.iter().map(|&i| cands[i]));
+    out
+}
+
 /// Race `cands` over `seeds`: evaluate on a doubling seed prefix,
 /// eliminating statistically dominated candidates between stages, stopping
 /// early once every survivor is within `tol` of the leader.  Returns
 /// (winner index, winner mean waste over the seeds it consumed, evals).
+/// When `log` is given, the surviving periods are appended after every
+/// stage (the [`RaceLog`] entry).
 #[allow(clippy::too_many_arguments)]
 fn race(
     sc: &Scenario,
@@ -162,6 +294,7 @@ fn race(
     caches: &mut [TraceCache],
     cap: f64,
     tol: f64,
+    mut log: Option<&mut RaceLog>,
 ) -> (usize, f64, u64) {
     let n = seeds.len();
     let mut wastes: Vec<Vec<f64>> = vec![Vec::with_capacity(n); cands.len()];
@@ -196,6 +329,9 @@ fn race(
             }
         }
         if s == n {
+            if let Some(l) = log.as_deref_mut() {
+                l.push(alive.iter().map(|&ci| cands[ci]).collect());
+            }
             return (leader, mean_of(leader), evals);
         }
         // Paired statistics of candidate ci against the leader over the
@@ -225,6 +361,9 @@ fn race(
             let (mean_d, se) = paired(ci);
             mean_d <= 3.0 * se + 0.1 * tol
         });
+        if let Some(l) = log.as_deref_mut() {
+            l.push(alive.iter().map(|&ci| cands[ci]).collect());
+        }
         // Equivalence stop: no survivor can still beat the leader by more
         // than tol/2 (2 standard errors below its observed deficit), so
         // spending the remaining seed budget cannot change the answer by
@@ -286,6 +425,35 @@ pub fn search_with(
     cfg: &SearchConfig,
     caches: &mut [TraceCache],
 ) -> BestPeriod {
+    search_core(sc, kind, tp, seeds, cfg, caches, None)
+}
+
+/// [`search_with`] that also returns the [`RaceLog`] — the per-stage
+/// survivor sets of both races.  The batched-vs-scalar equivalence tests
+/// compare these traces bitwise; exhaustive mode has no race, so its log
+/// is empty.
+pub fn search_logged(
+    sc: &Scenario,
+    kind: PolicyKind,
+    tp: f64,
+    seeds: &[u64],
+    cfg: &SearchConfig,
+    caches: &mut [TraceCache],
+) -> (BestPeriod, RaceLog) {
+    let mut log = RaceLog::new();
+    let bp = search_core(sc, kind, tp, seeds, cfg, caches, Some(&mut log));
+    (bp, log)
+}
+
+fn search_core(
+    sc: &Scenario,
+    kind: PolicyKind,
+    tp: f64,
+    seeds: &[u64],
+    cfg: &SearchConfig,
+    caches: &mut [TraceCache],
+    mut log: Option<&mut RaceLog>,
+) -> BestPeriod {
     assert!(!seeds.is_empty());
     assert_eq!(seeds.len(), caches.len(), "one trace memo per seed");
     let (cands, ratio, lo, hi) = candidate_grid(sc, cfg.coarse);
@@ -313,13 +481,35 @@ pub fn search_with(
     }
 
     let cap = hopeless_cap(sc);
-    let (wi, _, e1) =
-        race(sc, kind, tp, &cands, seeds, caches, cap, cfg.tolerance);
+    // Model seeding: rank and prune the candidate batch through the
+    // closed forms before any simulation (no-op at ModelSide::Off).
+    let cands = model_seed(sc, kind, tp, cands, cfg.model, cfg.prune_margin);
+    let (wi, _, e1) = race(
+        sc,
+        kind,
+        tp,
+        &cands,
+        seeds,
+        caches,
+        cap,
+        cfg.tolerance,
+        log.as_deref_mut(),
+    );
     // Refine around the coarse winner; the winner itself stays in the race
     // so refinement can only improve on it.
     let rcands = refine_grid(cands[wi], ratio, lo, hi, cfg.refine);
-    let (ri, rw, e2) =
-        race(sc, kind, tp, &rcands, seeds, caches, cap, cfg.tolerance);
+    let rcands = model_seed(sc, kind, tp, rcands, cfg.model, cfg.prune_margin);
+    let (ri, rw, e2) = race(
+        sc,
+        kind,
+        tp,
+        &rcands,
+        seeds,
+        caches,
+        cap,
+        cfg.tolerance,
+        log,
+    );
     BestPeriod { tr: rcands[ri], waste: rw, evals: e1 + e2 }
 }
 
@@ -402,6 +592,57 @@ mod tests {
         let bp = search_exhaustive(&s, PolicyKind::IgnorePredictions, 700.0, &seeds, 10, 4);
         assert_eq!(bp.evals, ((10 + 1 + 4) * 2) as u64);
         assert!(bp.tr > s.platform.c);
+    }
+
+    #[test]
+    fn model_seed_is_identity_when_off_or_no_closed_form() {
+        let s = sc();
+        let cands = vec![5000.0, 700.0, 20_000.0];
+        assert_eq!(
+            model_seed(&s, PolicyKind::NoCkpt, 700.0, cands.clone(), ModelSide::Off, 0.25),
+            cands
+        );
+        // QTrust has no grid column: the model cannot rank it.
+        assert_eq!(
+            model_seed(
+                &s,
+                PolicyKind::QTrust { q: 0.5 },
+                700.0,
+                cands.clone(),
+                ModelSide::Batched,
+                0.25
+            ),
+            cands
+        );
+    }
+
+    #[test]
+    fn model_seed_ranks_prunes_and_keeps_inapplicable() {
+        let s = sc();
+        // 500 is below C (inapplicable), the rest applicable with Q0 waste
+        // increasing away from the optimum; a tight margin prunes the
+        // far-off 40000 candidate (applicable, ~0.69 waste vs ~0.21 at the
+        // best) but must keep the inapplicable 500.
+        let cands = vec![40_000.0, 5000.0, 500.0, 8000.0];
+        let out = model_seed(
+            &s,
+            PolicyKind::IgnorePredictions,
+            700.0,
+            cands,
+            ModelSide::Batched,
+            0.05,
+        );
+        assert_eq!(out, vec![5000.0, 8000.0, 500.0]);
+        // Batched and scalar sides agree exactly (bit-identical model).
+        let again = model_seed(
+            &s,
+            PolicyKind::IgnorePredictions,
+            700.0,
+            vec![40_000.0, 5000.0, 500.0, 8000.0],
+            ModelSide::Scalar,
+            0.05,
+        );
+        assert_eq!(out, again);
     }
 
     #[test]

@@ -253,6 +253,80 @@ pub fn classify(
     Ok(model)
 }
 
+/// Batched [`classify`]: one scenario × one strategy × a whole period
+/// grid, element-wise identical (value and reason) to calling `classify`
+/// per period — pinned by `classify_batch_matches_scalar_elementwise` and
+/// `tests/batch_model.rs`.
+///
+/// The period-independent guards (no closed form, the predictor-model
+/// guards, window overlap, the transient fault model, and — inside
+/// [`crate::model::batch::BatchEvaluator::eval_row`] — `μ ≤ D+R`, `p = 0`
+/// and the `T_P` window fit) are decided once per call; only the genuinely
+/// per-period guards (`T_R ≤ C`, the formula range, `T_R/μ`, job length,
+/// renewal excess) run per cell.  The caller supplies the evaluator so a
+/// sweep worker reuses one scratch buffer across groups.
+pub fn classify_batch(
+    sc: &Scenario,
+    kind: PolicyKind,
+    trs: &[f64],
+    tp: f64,
+    policy: &TolerancePolicy,
+    ev: &mut crate::model::batch::BatchEvaluator,
+) -> Vec<Result<f64, Inapplicable>> {
+    let gs = match kind.grid_strategy() {
+        None => return vec![Err(Inapplicable::NoClosedForm); trs.len()],
+        Some(gs) => gs,
+    };
+    if gs != waste::GridStrategy::Q0 {
+        use crate::config::PredModel;
+        let guard = match sc.predictor.model {
+            PredModel::Paper | PredModel::Biased { .. } => None,
+            PredModel::MixedWindow { .. } => Some(Inapplicable::NonUniformWindow),
+            PredModel::Jitter { .. } => Some(Inapplicable::NoisyWindowPlacement),
+            PredModel::Classed { .. } => Some(Inapplicable::ConfidenceClasses),
+        };
+        if let Some(g) = guard {
+            return vec![Err(g); trs.len()];
+        }
+    }
+    let mut row = Vec::new();
+    ev.eval_row(sc, gs, tp, trs, &mut row);
+    // Regime guards that do not depend on the period, hoisted.
+    let overlap = gs != waste::GridStrategy::Q0 && {
+        let mu_p = sc.predictor.mu_p(sc.platform.mu);
+        (sc.predictor.max_window() + sc.platform.cp) / mu_p > OVERLAP_MAX
+    };
+    let transient = matches!(sc.fault_model, FaultModel::PerProcessor { .. })
+        && matches!(sc.fault_law, Law::Weibull { .. });
+    trs.iter()
+        .zip(row)
+        .map(|(&tr, a)| {
+            let model = match a {
+                Applicability::Applicable(w) => w,
+                Applicability::Inapplicable(r) => {
+                    return Err(Inapplicable::Model(r))
+                }
+            };
+            if tr / sc.platform.mu > FIRST_ORDER_MAX {
+                return Err(Inapplicable::BeyondFirstOrder);
+            }
+            if sc.job_size < MIN_PERIODS * tr {
+                return Err(Inapplicable::JobTooShort);
+            }
+            if overlap {
+                return Err(Inapplicable::WindowsOverlap);
+            }
+            if transient {
+                return Err(Inapplicable::TransientFaultModel);
+            }
+            if renewal_excess_waste(sc, kind, tr) > policy.max_renewal_excess {
+                return Err(Inapplicable::HorizonTooShort);
+            }
+            Ok(model)
+        })
+        .collect()
+}
+
 /// The declared tolerance for a classified-applicable cell, given the
 /// simulated mean's CI half-width (see module docs for the terms).
 pub fn tolerance(
@@ -488,6 +562,59 @@ mod tests {
         ] {
             assert_eq!(v.label(), label);
             assert_eq!(Inapplicable::parse(label), Some(v));
+        }
+    }
+
+    #[test]
+    fn classify_batch_matches_scalar_elementwise() {
+        let pol = TolerancePolicy::default();
+        // Periods crossing every per-cell guard: below C, in-domain,
+        // job-short, beyond first order, plus a duplicate.
+        let trs =
+            vec![100.0, 600.0, 8000.0, 8000.0, 150_000.0, 40_000.0, 2000.0];
+        let scenarios = [
+            sc(Law::Exponential, FaultModel::PlatformRenewal),
+            sc(Law::Weibull { shape: 0.7 }, FaultModel::PlatformRenewal),
+            sc(
+                Law::Weibull { shape: 0.7 },
+                FaultModel::PerProcessor { n: 1 << 16 },
+            ),
+            {
+                let mut p0 = sc(Law::Exponential, FaultModel::PlatformRenewal);
+                p0.predictor.precision = 0.0;
+                p0
+            },
+            {
+                let mut j = sc(Law::Exponential, FaultModel::PlatformRenewal);
+                j.predictor.model = crate::config::PredModel::Jitter { sigma: 120.0 };
+                j
+            },
+        ];
+        let kinds = [
+            PolicyKind::IgnorePredictions,
+            PolicyKind::Instant,
+            PolicyKind::NoCkpt,
+            PolicyKind::WithCkpt,
+            PolicyKind::ExactPred,
+            PolicyKind::QTrust { q: 0.5 },
+        ];
+        let mut ev = crate::model::batch::BatchEvaluator::new();
+        for s in &scenarios {
+            for kind in kinds {
+                let batch = classify_batch(s, kind, &trs, 700.0, &pol, &mut ev);
+                assert_eq!(batch.len(), trs.len());
+                for (j, &tr) in trs.iter().enumerate() {
+                    let scalar = classify(s, kind, tr, 700.0, &pol);
+                    match (&batch[j], &scalar) {
+                        (Ok(b), Ok(w)) => assert_eq!(
+                            b.to_bits(),
+                            w.to_bits(),
+                            "{kind:?} tr={tr}"
+                        ),
+                        _ => assert_eq!(batch[j], scalar, "{kind:?} tr={tr}"),
+                    }
+                }
+            }
         }
     }
 

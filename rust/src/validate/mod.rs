@@ -194,6 +194,13 @@ pub struct SweepOptions {
     pub threads: usize,
     /// The tolerance policy (see [`domain::TolerancePolicy`]).
     pub tolerance: TolerancePolicy,
+    /// Fetch the model side through [`crate::model::batch`]: cells sharing
+    /// a scenario × strategy (the period multipliers) are classified as
+    /// one batched grid, with the policy instantiated once per group
+    /// instead of once per cell.  Byte-identical verdicts either way
+    /// (`classify_batch` ≡ `classify` element-wise — the census pins hold
+    /// on both paths); `false` is the scalar escape hatch.
+    pub batch_model: bool,
 }
 
 impl Default for SweepOptions {
@@ -202,8 +209,75 @@ impl Default for SweepOptions {
             instances: 100,
             threads: 0,
             tolerance: TolerancePolicy::default(),
+            batch_model: true,
         }
     }
+}
+
+/// One cell's precomputed model side (the batched pre-pass): the probed
+/// period, the proactive period, and the classification — exactly what
+/// the scalar path would have derived inside [`evaluate_cell`].
+#[derive(Clone, Copy, Debug)]
+struct ModelPre {
+    tr: f64,
+    tp: f64,
+    model: Result<f64, Inapplicable>,
+}
+
+/// The batched model pre-pass: group the pending cells by campaign cell ×
+/// fault model (the axes that fix scenario and strategy — multipliers of
+/// one cell differ only in period), instantiate each group's policy once,
+/// and classify the whole period batch through [`domain::classify_batch`].
+/// Sharded over the scheduler: BestPeriod-twin groups pay their search
+/// once per *group* here instead of once per multiplier in the workers.
+/// Cells without a closed form get no entry (the scalar early-return in
+/// [`evaluate_cell`] handles them without instantiating a policy).
+fn precompute_models(
+    cells: &[ValCell],
+    pending: &[usize],
+    opt: &SweepOptions,
+) -> Vec<Option<ModelPre>> {
+    use crate::model::batch::BatchEvaluator;
+    let mut groups: std::collections::BTreeMap<(u64, String), Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for (pi, &ci) in pending.iter().enumerate() {
+        let vc = &cells[ci];
+        if vc.cell.strategy.kind().grid_strategy().is_none() {
+            continue;
+        }
+        groups
+            .entry((vc.cell.hash, fault_model_label(vc.fault_model)))
+            .or_default()
+            .push(pi);
+    }
+    let members: Vec<&Vec<usize>> = groups.values().collect();
+    let computed = scheduler::run_units(members.len(), opt.threads, |g| {
+        let group = members[g];
+        let vc0 = &cells[pending[group[0]]];
+        let sc = vc0.scenario();
+        let kind = vc0.cell.strategy.kind();
+        let pol = vc0.cell.strategy.policy(&sc);
+        let trs: Vec<f64> = group
+            .iter()
+            .map(|&pi| pol.tr * cells[pending[pi]].multiplier)
+            .collect();
+        let mut ev = BatchEvaluator::new();
+        let models =
+            domain::classify_batch(&sc, kind, &trs, pol.tp, &opt.tolerance, &mut ev);
+        group
+            .iter()
+            .zip(trs)
+            .zip(models)
+            .map(|((&pi, tr), model)| (pi, ModelPre { tr, tp: pol.tp, model }))
+            .collect::<Vec<_>>()
+    });
+    let mut out: Vec<Option<ModelPre>> = vec![None; pending.len()];
+    for unit in computed {
+        for (pi, mp) in unit {
+            out[pi] = Some(mp);
+        }
+    }
+    out
 }
 
 /// The structured verdict of one conformance cell.
@@ -311,10 +385,14 @@ impl CellReport {
 /// Verdict one cell: classify, then (when applicable) simulate the paired
 /// instances through the worker's trace pool and compare.  Also returns
 /// (instances simulated, trace events consumed) for the sweep telemetry.
+/// `pre` carries the batched pre-pass's model side when the sweep runs
+/// with [`SweepOptions::batch_model`]; `None` falls back to the scalar
+/// per-cell derivation (bit-identical results either way).
 fn evaluate_cell(
     vc: &ValCell,
     opt: &SweepOptions,
     pool: &mut TracePool,
+    pre: Option<&ModelPre>,
 ) -> (CellReport, u64, u64) {
     let sc = vc.scenario();
     let kind = vc.cell.strategy.kind();
@@ -341,9 +419,15 @@ fn evaluate_cell(
     if kind.grid_strategy().is_none() {
         return (base, 0, 0);
     }
-    let pol = vc.cell.strategy.policy(&sc);
-    let tr = pol.tr * vc.multiplier;
-    let model = match domain::classify(&sc, kind, tr, pol.tp, &opt.tolerance) {
+    let (tr, tp, model) = match pre {
+        Some(p) => (p.tr, p.tp, p.model),
+        None => {
+            let pol = vc.cell.strategy.policy(&sc);
+            let tr = pol.tr * vc.multiplier;
+            (tr, pol.tp, domain::classify(&sc, kind, tr, pol.tp, &opt.tolerance))
+        }
+    };
+    let model = match model {
         Err(reason) => {
             return (
                 CellReport { tr, verdict: Verdict::Inapplicable(reason), ..base },
@@ -353,7 +437,7 @@ fn evaluate_cell(
         }
         Ok(m) => m,
     };
-    let pol = crate::strategy::Policy { kind, tr, tp: pol.tp };
+    let pol = crate::strategy::Policy { kind, tr, tp };
     let mut waste = Welford::new();
     let mut events: u64 = 0;
     for i in 0..opt.instances.max(1) {
@@ -427,6 +511,13 @@ pub fn run_sweep_metered(
     if pending.is_empty() {
         return Ok((Vec::new(), skipped, SweepMetrics::default()));
     }
+    // The batched model pre-pass (policy + classification per scenario ×
+    // strategy group); `None` entries take the scalar in-worker path.
+    let pre: Vec<Option<ModelPre>> = if opt.batch_model {
+        precompute_models(cells, &pending, opt)
+    } else {
+        vec![None; pending.len()]
+    };
     let store_mx = store.map(Mutex::new);
     let append_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     /// Worker scratch: the trace pool plus the pool-stat watermarks
@@ -441,7 +532,8 @@ pub fn run_sweep_metered(
         opt.threads,
         || Worker { tp: TracePool::new(), seen: (0, 0, 0) },
         |w: &mut Worker, u| {
-            let (rep, sims, events) = evaluate_cell(&cells[pending[u]], opt, &mut w.tp);
+            let (rep, sims, events) =
+                evaluate_cell(&cells[pending[u]], opt, &mut w.tp, pre[u].as_ref());
             if let Some(mx) = &store_mx {
                 let mut s = mx.lock().expect("conformance store poisoned");
                 if let Err(e) = s.append(&rep.record()) {
@@ -576,6 +668,40 @@ mod tests {
             assert_eq!(x.hash, y.hash);
             assert_eq!(x.sim_mean.to_bits(), y.sim_mean.to_bits(), "{}", x.key);
             assert_eq!(x.verdict, y.verdict);
+        }
+    }
+
+    #[test]
+    fn batched_and_scalar_model_paths_agree_bitwise() {
+        // The tentpole contract at the sweep level: flipping batch_model
+        // changes nothing — period, model value, deviation, verdict and
+        // simulated mean are bit-identical (multipliers exercise whole
+        // per-group batches, ExactPred the no-closed-form path).
+        let mut g = smoke_grid();
+        g.procs = vec![1 << 16];
+        g.cp_ratios = vec![1.0];
+        g.fault_laws = vec![Law::Exponential, Law::Weibull { shape: 0.7 }];
+        g.windows = vec![600.0];
+        g.strategies = vec![
+            registry::get("RFO").unwrap(),
+            registry::get("NoCkptI").unwrap(),
+            registry::get("WithCkptI").unwrap(),
+            registry::get("ExactPred").unwrap(),
+        ];
+        let cells = expand_cells(&g, &DEFAULT_MULTIPLIERS);
+        let batched = SweepOptions { instances: 8, threads: 2, ..Default::default() };
+        let scalar = SweepOptions { batch_model: false, ..batched };
+        assert!(batched.batch_model);
+        let (a, _) = run_sweep(&cells, &batched, None).unwrap();
+        let (b, _) = run_sweep(&cells, &scalar, None).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.hash, y.hash);
+            assert_eq!(x.tr.to_bits(), y.tr.to_bits(), "{}", x.key);
+            assert_eq!(x.model.to_bits(), y.model.to_bits(), "{}", x.key);
+            assert_eq!(x.sim_mean.to_bits(), y.sim_mean.to_bits(), "{}", x.key);
+            assert_eq!(x.deviation.to_bits(), y.deviation.to_bits(), "{}", x.key);
+            assert_eq!(x.verdict, y.verdict, "{}", x.key);
         }
     }
 

@@ -1,0 +1,327 @@
+//! Batched-model equivalence gates (PR 10).
+//!
+//! The `model::batch` evaluator is only allowed to be a *schedule* change:
+//! every cell it emits must be bit-for-bit the scalar result — value AND
+//! inapplicability reason — across the full strategy/predictor registries,
+//! all three laws, and adversarial grids.  On top of that sits the
+//! BestPeriod equivalence: batched model seeding must race to the exact
+//! same winner (and elimination trace) as scalar seeding, and stay within
+//! the paired tolerance of the exhaustive sweep.
+
+use ckptwin::config::{FaultModel, Platform, PredictorSpec, Scenario};
+use ckptwin::model::batch::{BatchEvaluator, STRATEGIES};
+use ckptwin::model::optimal;
+use ckptwin::model::waste::{waste_checked, waste_clipped};
+use ckptwin::sim::distribution::Law;
+use ckptwin::sim::engine::simulate_q;
+use ckptwin::sim::trace::TraceCache;
+use ckptwin::strategy::best_period::{
+    search_exhaustive, search_logged, ModelSide, SearchConfig,
+};
+use ckptwin::strategy::{registry, Policy, PolicyKind};
+use ckptwin::validate::domain;
+use ckptwin::validate::TolerancePolicy;
+
+const LAWS: [Law; 3] = [
+    Law::Exponential,
+    Law::Weibull { shape: 0.7 },
+    Law::LogNormal { sigma: 1.2 },
+];
+
+/// Adversarial period grids: empty, single-point, denormal-adjacent,
+/// descending, duplicated T_R — plus a realistic geometric sweep.
+fn adversarial_grids() -> Vec<Vec<f64>> {
+    let geo: Vec<f64> = (0..33)
+        .map(|k| 650.0 * (200_000.0f64 / 650.0).powf(k as f64 / 32.0))
+        .collect();
+    vec![
+        vec![],
+        vec![700.0],
+        vec![f64::MIN_POSITIVE, 5e-324, 650.0, 1e-300, 4000.0],
+        vec![50_000.0, 8000.0, 700.0, 100.0],
+        vec![700.0, 700.0, 8000.0, 8000.0, 700.0],
+        geo,
+    ]
+}
+
+/// One cell's bitwise identity: value bits AND reason.
+#[track_caller]
+fn assert_cell_identical(
+    got: ckptwin::model::waste::Applicability,
+    want: ckptwin::model::waste::Applicability,
+    ctx: &str,
+) {
+    assert_eq!(
+        got.value().map(f64::to_bits),
+        want.value().map(f64::to_bits),
+        "value bits diverged: {ctx} (batch {got:?} vs scalar {want:?})"
+    );
+    assert_eq!(
+        got.reason(),
+        want.reason(),
+        "reason diverged: {ctx} (batch {got:?} vs scalar {want:?})"
+    );
+}
+
+/// Satellite 3, main property: `eval_row` ≡ scalar `waste_checked`
+/// bit-for-bit over every registry default × law × adversarial grid.
+#[test]
+fn batch_rows_match_scalar_checked_across_registries() {
+    let grids = adversarial_grids();
+    let mut ev = BatchEvaluator::new();
+    let mut covered = std::collections::BTreeSet::new();
+    for law in LAWS {
+        for pid in ckptwin::predictor::registry::all_defaults() {
+            let mut sc = Scenario::paper(1 << 16, 1.0, pid.spec(900.0), law, law);
+            sc.job_size *= 0.05;
+            let tp = registry::default_tp(&sc);
+            for sid in registry::all_defaults() {
+                let Some(gs) = sid.kind().grid_strategy() else {
+                    continue;
+                };
+                covered.insert(gs as usize);
+                for grid in &grids {
+                    let mut row = Vec::new();
+                    ev.eval_row(&sc, gs, tp, grid, &mut row);
+                    assert_eq!(row.len(), grid.len());
+                    for (i, &tr) in grid.iter().enumerate() {
+                        assert_cell_identical(
+                            row[i],
+                            waste_checked(&sc, gs, tr, tp),
+                            &format!(
+                                "{sid} / {pid} / {} / tr={tr}",
+                                law.label()
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // Every closed-form column must have been exercised.
+    assert_eq!(covered.len(), STRATEGIES.len());
+}
+
+/// Row-guard scenarios (μ ≤ D+R, p = 0, T_P outside the window) classify
+/// identically to the scalar guards — the hoisting must not reorder the
+/// observable reason.
+#[test]
+fn batch_row_guards_match_scalar_reasons() {
+    let base = Scenario {
+        platform: Platform { mu: 30_000.0, c: 600.0, cp: 600.0, d: 60.0, r: 600.0 },
+        predictor: PredictorSpec::paper(0.85, 0.82, 600.0),
+        fault_law: Law::Exponential,
+        false_pred_law: Law::Exponential,
+        fault_model: FaultModel::PlatformRenewal,
+        job_size: 1e7,
+    };
+    let mut dead_mu = base;
+    dead_mu.platform.mu = 500.0; // μ ≤ D + R
+    let mut zero_p = base;
+    zero_p.predictor = PredictorSpec::paper(0.85, 0.0, 600.0);
+    let grid = [100.0, 700.0, 5000.0, 60_000.0];
+    let mut ev = BatchEvaluator::new();
+    for sc in [&base, &dead_mu, &zero_p] {
+        // tp = 50.0 additionally violates the WithCkpt window guard.
+        for tp in [registry::default_tp(sc), 50.0] {
+            for strat in STRATEGIES {
+                let mut row = Vec::new();
+                ev.eval_row(sc, strat, tp, &grid, &mut row);
+                for (i, &tr) in grid.iter().enumerate() {
+                    assert_cell_identical(
+                        row[i],
+                        waste_checked(sc, strat, tr, tp),
+                        &format!("{strat:?} tp={tp} tr={tr}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Kernel-semantics rows: `clipped_row` ≡ scalar `waste_clipped` bitwise
+/// over the adversarial grids (the f64 side of the PJRT cross-check).
+#[test]
+fn batch_clipped_rows_match_scalar_clipped() {
+    let mut ev = BatchEvaluator::new();
+    for law in [Law::Exponential, Law::Weibull { shape: 0.7 }] {
+        for pred in [PredictorSpec::paper_a(300.0), PredictorSpec::paper_b(1200.0)] {
+            let sc = Scenario::paper(1 << 18, 0.1, pred, law, law);
+            for grid in &adversarial_grids() {
+                for strat in STRATEGIES {
+                    let mut row = Vec::new();
+                    ev.clipped_row(&sc, strat, grid, &mut row);
+                    assert_eq!(row.len(), grid.len());
+                    for (i, &tr) in grid.iter().enumerate() {
+                        assert_eq!(
+                            row[i].to_bits(),
+                            waste_clipped(&sc, strat, tr).to_bits(),
+                            "{strat:?} tr={tr}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `classify_batch` ≡ scalar `classify` element-wise (value bits and
+/// reason) across the registry defaults — the validate pre-pass contract.
+#[test]
+fn classify_batch_matches_scalar_across_registries() {
+    let pol = TolerancePolicy::default();
+    let trs: Vec<f64> = vec![100.0, 650.0, 700.0, 8000.0, 8000.0, 40_000.0, 150_000.0];
+    let mut ev = BatchEvaluator::new();
+    for law in LAWS {
+        for pid in ckptwin::predictor::registry::all_defaults() {
+            let mut sc = Scenario::paper(1 << 16, 1.0, pid.spec(900.0), law, law);
+            sc.job_size *= 0.05;
+            let tp = registry::default_tp(&sc);
+            for sid in registry::all_defaults() {
+                let kind = sid.kind();
+                let batch = domain::classify_batch(&sc, kind, &trs, tp, &pol, &mut ev);
+                assert_eq!(batch.len(), trs.len());
+                for (i, &tr) in trs.iter().enumerate() {
+                    let scalar = domain::classify(&sc, kind, tr, tp, &pol);
+                    match (batch[i], scalar) {
+                        (Ok(b), Ok(s)) => assert_eq!(
+                            b.to_bits(),
+                            s.to_bits(),
+                            "{sid} / {pid} / {} / tr={tr}",
+                            law.label()
+                        ),
+                        (b, s) => assert_eq!(
+                            b, s,
+                            "{sid} / {pid} / {} / tr={tr}",
+                            law.label()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---- BestPeriod equivalence (satellite 4) ------------------------------
+
+const KINDS: [PolicyKind; 4] = [
+    PolicyKind::IgnorePredictions,
+    PolicyKind::Instant,
+    PolicyKind::NoCkpt,
+    PolicyKind::WithCkpt,
+];
+
+/// The fast-path golden scenario: scaled-down paper run under predictor B
+/// (both false predictions and unpredicted faults present).
+fn golden(law: Law) -> Scenario {
+    let mut sc =
+        Scenario::paper(1 << 16, 1.0, PredictorSpec::paper_b(900.0), law, law);
+    sc.job_size *= 0.05;
+    sc
+}
+
+/// Batched and scalar model seeding produce the same candidate ranking,
+/// hence the same winner AND the same elimination trace, on the golden
+/// scenarios — all four policy kinds, all three laws.
+#[test]
+fn best_period_batched_equals_scalar_seeding() {
+    for law in LAWS {
+        let sc = golden(law);
+        let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+        let seeds: Vec<u64> = (0..6).collect();
+        for kind in KINDS {
+            let run = |side: ModelSide| {
+                let mut caches: Vec<TraceCache> =
+                    seeds.iter().map(|&s| TraceCache::new(&sc, s)).collect();
+                search_logged(
+                    &sc,
+                    kind,
+                    tp,
+                    &seeds,
+                    &SearchConfig::adaptive(16, 6).with_model(side),
+                    &mut caches,
+                )
+            };
+            let (bp_b, log_b) = run(ModelSide::Batched);
+            let (bp_s, log_s) = run(ModelSide::Scalar);
+            let ctx = format!("{kind:?} / {}", law.label());
+            assert_eq!(bp_b.tr.to_bits(), bp_s.tr.to_bits(), "winner: {ctx}");
+            assert_eq!(bp_b.waste.to_bits(), bp_s.waste.to_bits(), "waste: {ctx}");
+            assert_eq!(bp_b.evals, bp_s.evals, "evals: {ctx}");
+            assert_eq!(log_b, log_s, "elimination trace: {ctx}");
+        }
+    }
+}
+
+/// Paired tolerance vs the exhaustive sweep: the batch-seeded adaptive
+/// winner, re-scored on the full seed set, stays within the configured
+/// tolerance of the exhaustive winner (model pruning must never drop the
+/// empirical optimum).
+#[test]
+fn best_period_batched_within_tolerance_of_exhaustive() {
+    for law in [Law::Exponential, Law::Weibull { shape: 0.7 }] {
+        let sc = golden(law);
+        let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+        let seeds: Vec<u64> = (0..6).collect();
+        let tol = SearchConfig::adaptive(16, 6).tolerance;
+        let mean_waste = |kind: PolicyKind, tr: f64| {
+            let pol = Policy { kind, tr, tp };
+            seeds
+                .iter()
+                .map(|&s| simulate_q(&sc, &pol, 1.0, s).waste())
+                .sum::<f64>()
+                / seeds.len() as f64
+        };
+        for kind in [PolicyKind::IgnorePredictions, PolicyKind::WithCkpt] {
+            let exact = search_exhaustive(&sc, kind, tp, &seeds, 16, 6);
+            let mut caches: Vec<TraceCache> =
+                seeds.iter().map(|&s| TraceCache::new(&sc, s)).collect();
+            let (fast, _) = search_logged(
+                &sc,
+                kind,
+                tp,
+                &seeds,
+                &SearchConfig::adaptive(16, 6),
+                &mut caches,
+            );
+            let w_fast = mean_waste(kind, fast.tr);
+            assert!(
+                w_fast <= exact.waste + 2.0 * tol,
+                "{kind:?} / {}: batched adaptive {w_fast} (tr {}) vs \
+                 exhaustive {} (tr {})",
+                law.label(),
+                fast.tr,
+                exact.waste,
+                exact.tr
+            );
+        }
+    }
+}
+
+/// Placeholder-free sanity on the inapplicable path: a kind without a grid
+/// column never lets the model drop candidates (the search must behave as
+/// ModelSide::Off there), pinned end-to-end through search_logged.
+#[test]
+fn best_period_no_closed_form_kind_races_unseeded() {
+    let sc = golden(Law::Exponential);
+    let tp = optimal::tp_extr(&sc).max(sc.platform.cp * 1.1);
+    let seeds: Vec<u64> = (0..4).collect();
+    let kind = PolicyKind::QTrust { q: 0.5 };
+    let run = |side: ModelSide| {
+        let mut caches: Vec<TraceCache> =
+            seeds.iter().map(|&s| TraceCache::new(&sc, s)).collect();
+        search_logged(
+            &sc,
+            kind,
+            tp,
+            &seeds,
+            &SearchConfig::adaptive(12, 4).with_model(side),
+            &mut caches,
+        )
+    };
+    let (bp_batch, log_batch) = run(ModelSide::Batched);
+    let (bp_off, log_off) = run(ModelSide::Off);
+    assert_eq!(bp_batch.tr.to_bits(), bp_off.tr.to_bits());
+    assert_eq!(bp_batch.evals, bp_off.evals);
+    assert_eq!(log_batch, log_off);
+}
